@@ -1,0 +1,85 @@
+//! End-to-end driver (DESIGN.md §6): the full three-layer system on a
+//! realistic streaming workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example adaptive_tracking
+//! ```
+//!
+//! Streams 200k samples of a *rotating* mixture (the non-stationary
+//! setting that motivates adaptive ICA, §I/§III) through the complete
+//! coordinator: producer thread → bounded channel (backpressure) →
+//! chunker → engine → versioned state store → online monitor. The engine
+//! is the **PJRT engine executing the AOT-compiled JAX/Pallas SMBGD
+//! program** when artifacts are present (falling back to the native
+//! engine otherwise, so the example always runs). Logs the Amari
+//! trajectory and throughput; results recorded in EXPERIMENTS.md.
+
+use easi_ica::config::{EngineKind, ExperimentConfig, OptimizerKind};
+use easi_ica::coordinator::{make_engine, run_streaming, ServerOptions, StateStore};
+use easi_ica::ica::{ConvergenceCriterion, Nonlinearity};
+use easi_ica::runtime::{artifacts_available, default_artifacts_dir};
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "adaptive-tracking-e2e".into();
+    cfg.m = 4;
+    cfg.n = 2;
+    cfg.samples = 200_000;
+    cfg.seed = 2024;
+    cfg.optimizer.kind = OptimizerKind::Smbgd;
+    cfg.optimizer.mu = 0.006;
+    cfg.optimizer.gamma = 0.5;
+    cfg.optimizer.beta = 0.9;
+    cfg.optimizer.p = 8;
+    cfg.signal.mixing = "rotating".into();
+    cfg.signal.omega = 1e-5; // ~2 full rotations over the stream
+    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+    cfg.engine = if artifacts_available() {
+        EngineKind::Pjrt
+    } else {
+        eprintln!("note: artifacts missing; run `make artifacts` for the PJRT path");
+        EngineKind::Native
+    };
+
+    let engine = make_engine(&cfg, Nonlinearity::Cube).expect("engine");
+    let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
+    let options = ServerOptions {
+        channel_capacity: 8192,
+        monitor_every: 2000,
+        criterion: ConvergenceCriterion { threshold: 0.1, check_every: 1, patience: 3 },
+        ..Default::default()
+    };
+
+    println!(
+        "streaming {} samples of a rotating mixture (omega={} rad/sample)...",
+        cfg.samples, cfg.signal.omega
+    );
+    let summary = run_streaming(&cfg, engine, options, &state).expect("run");
+
+    println!("engine:      {}", summary.engine);
+    println!("samples:     {} (+{} tail)", summary.samples, summary.tail_dropped);
+    println!("elapsed:     {:.2} s", summary.elapsed_secs);
+    println!("throughput:  {:.0} samples/s", summary.throughput_sps);
+    println!("state store: version {}", state.version());
+
+    println!("\nAmari trajectory while A(t) rotates (adaptive tracking):");
+    for p in summary.amari_history.iter().step_by(8) {
+        let bars = (p.amari * 120.0).min(60.0) as usize;
+        println!("  {:>7} {:>7.4} {}", p.samples, p.amari, "#".repeat(bars));
+    }
+
+    // Steady-state tracking quality (second half of the stream).
+    let half = summary.amari_history.len() / 2;
+    let steady: f64 = summary.amari_history[half..]
+        .iter()
+        .map(|p| p.amari)
+        .sum::<f64>()
+        / (summary.amari_history.len() - half).max(1) as f64;
+    println!("\nsteady-state amari while rotating: {steady:.4}");
+    assert!(
+        steady < 0.25,
+        "adaptive SMBGD should keep tracking the rotating mixture"
+    );
+    assert!(summary.samples + summary.tail_dropped == cfg.samples as u64);
+    println!("OK — full three-layer stack tracked a non-stationary mixture");
+}

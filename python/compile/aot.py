@@ -1,0 +1,116 @@
+"""AOT compile path: lower the Layer-2 programs to HLO text artifacts.
+
+Run as:  cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each variant is written to `<name>.hlo.txt` and described by one line in
+`manifest.txt` with a trivially hand-parseable `key=value` format (the
+Rust side has no serde):
+
+    name=easi_smbgd_m4_n2_p8_k8 file=... kind=smbgd m=4 n=2 p=8 k=8
+
+Artifacts are deterministic functions of this package's sources; the
+Makefile only re-runs this module when the sources change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def variants():
+    """(name, fn, example_args, manifest-extras) for every artifact.
+
+    (m, n) = (4, 2) is the paper's Table I configuration; (8, 4) is the
+    scale-up used by the depth-sweep and coordinator tests.  Chunk sizes
+    are fixed shapes: the Rust coordinator pads the tail of a stream.
+    """
+    out = []
+    for (m, n) in [(4, 2), (8, 4)]:
+        for T in [64, 256]:
+            out.append((
+                f"easi_sgd_m{m}_n{n}_t{T}",
+                model.easi_sgd_chunk,
+                (_spec(n, m), _spec(T, m), _spec()),
+                {"kind": "sgd", "m": m, "n": n, "t": T},
+            ))
+        for (K, P) in [(8, 8), (32, 8), (16, 16)]:
+            out.append((
+                f"easi_smbgd_m{m}_n{n}_p{P}_k{K}",
+                model.easi_smbgd_chunk,
+                (_spec(n, m), _spec(n, n), _spec(K, P, m), _spec(), _spec(), _spec()),
+                {"kind": "smbgd", "m": m, "n": n, "p": P, "k": K},
+            ))
+        out.append((
+            f"separate_m{m}_n{n}_t256",
+            model.separate_chunk,
+            (_spec(n, m), _spec(256, m)),
+            {"kind": "separate", "m": m, "n": n, "t": 256},
+        ))
+        out.append((
+            f"easi_grad_m{m}_n{n}",
+            model.easi_grad,
+            (_spec(n, m), _spec(m)),
+            {"kind": "grad", "m": m, "n": n},
+        ))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory (or a .../model.hlo.txt path, "
+                         "whose parent is used)")
+    args = ap.parse_args()
+    out_dir = args.out
+    if out_dir.endswith(".txt"):
+        out_dir = os.path.dirname(out_dir) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, specs, extra in variants():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        fields = " ".join(f"{k}={v}" for k, v in extra.items())
+        manifest_lines.append(f"name={name} file={fname} {fields}")
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    # Marker consumed by the Makefile's up-to-date check.
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write("# see manifest.txt; individual programs are <name>.hlo.txt\n")
+    print(f"wrote manifest.txt ({len(manifest_lines)} programs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Layer-1 Pallas kernels for EASI / SMBGD.
+
+Hardware adaptation (DESIGN.md SSHardware-Adaptation): the paper's FPGA
+contribution is *break the loop-carried dependency so the datapath can be
+pipelined with initiation interval 1*.  On TPU the same insight becomes
+*batch the mini-batch into one MXU matmul*: because SMBGD evaluates every
+sample in a mini-batch against the same stale separation matrix B, the P
+per-sample mat-vecs `y_p = B x_p` collapse into a single `(P,m)x(m,n)`
+matmul, and the P weighted outer-product accumulations of Eq. 1 collapse
+into three `(n,P)x(P,n)` matmuls with the exponentially-decaying weights
+folded into one operand.  Plain SGD-EASI cannot do this — its scan over
+samples is serialized exactly like the stalled FPGA pipeline.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the executable path and the
+Mosaic path is compile-only (see /opt/xla-example/README.md).  VMEM
+budgeting for a real TPU is documented in DESIGN.md SS7.
+
+Kernels:
+  easi_grad_single   — H for one sample (Fig. 1's gradient block).
+  easi_sgd_step      — one fused SGD update B <- B - mu H B.
+  smbgd_batch_update — one fused SMBGD mini-batch (Fig. 2): batched
+                       gradient + Eq. 1 accumulation + single B update.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Every pallas_call in this module uses interpret mode (see module doc).
+INTERPRET = True
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+def _easi_grad_kernel(b_ref, x_ref, h_ref):
+    """H = y y^T - I + g(y) y^T - y g(y)^T for one sample, in VMEM.
+
+    b_ref: (n, m), x_ref: (1, m), h_ref: (n, n).
+    """
+    B = b_ref[...]
+    x = x_ref[0, :]
+    y = B @ x                      # (n,) mat-vec on the MXU
+    gy = y * y * y                 # cubic nonlinearity: two VPU multiplies
+    n = B.shape[0]
+    yc = y[:, None]
+    gc = gy[:, None]
+    # outer products as (n,1)x(1,n) matmuls
+    h_ref[...] = (
+        yc * y[None, :]
+        - jnp.eye(n, dtype=B.dtype)
+        + gc * y[None, :]
+        - yc * gy[None, :]
+    )
+
+
+def _easi_sgd_step_kernel(b_ref, x_ref, mu_ref, o_ref):
+    """Fused vanilla-EASI update: o = B - mu * H(B, x) B.
+
+    Keeping H in registers/VMEM and fusing the trailing H @ B avoids a
+    round-trip of the (n, n) gradient through HBM.
+    """
+    B = b_ref[...]
+    x = x_ref[0, :]
+    mu = mu_ref[0, 0]
+    y = B @ x
+    gy = y * y * y
+    n = B.shape[0]
+    yc = y[:, None]
+    gc = gy[:, None]
+    H = (
+        yc * y[None, :]
+        - jnp.eye(n, dtype=B.dtype)
+        + gc * y[None, :]
+        - yc * gy[None, :]
+    )
+    o_ref[...] = B - mu * (H @ B)
+
+
+def _smbgd_batch_update_kernel(b_ref, hhat_ref, x_ref, w_ref, carry_ref,
+                               b_out_ref, hhat_out_ref):
+    """Fused SMBGD mini-batch (Fig. 2 / Eq. 1, closed form).
+
+      Y    = X B^T                       (P,n)   one MXU matmul
+      G    = Y**3                        (P,n)   VPU
+      Hhat = carry * Hhat_prev
+           + (w*Y)^T Y - (sum w) I + (w*G)^T Y - Y^T (w*G)
+      B'   = B - Hhat B
+
+    b_ref: (n, m), hhat_ref: (n, n), x_ref: (P, m), w_ref: (1, P)
+    (w_p = mu * beta**(P-1-p)), carry_ref: (1, 1) (= gamma * beta**(P-1)).
+
+    The whole mini-batch stays resident in VMEM: for the paper's scale
+    (m=4, n=2, P<=64) the footprint is a few KB, far under the ~16 MB
+    VMEM budget; for large P the natural extension is a grid over P-tiles
+    accumulating into hhat_out_ref.
+    """
+    B = b_ref[...]
+    Hhat_prev = hhat_ref[...]
+    X = x_ref[...]
+    w = w_ref[0, :]
+    carry = carry_ref[0, 0]
+
+    Y = X @ B.T                    # (P, n): the P mat-vecs as ONE matmul
+    G = Y * Y * Y
+    Yw = Y * w[:, None]            # fold Eq. 1's decaying weights in
+    Gw = G * w[:, None]
+    n = B.shape[0]
+    I = jnp.eye(n, dtype=B.dtype)
+    contrib = Yw.T @ Y - jnp.sum(w) * I + Gw.T @ Y - Y.T @ Gw
+    Hhat = carry * Hhat_prev + contrib
+    hhat_out_ref[...] = Hhat
+    b_out_ref[...] = B - Hhat @ B
+
+
+# ---------------------------------------------------------------------------
+# Public entry points (shape-checked pallas_call wrappers)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=())
+def easi_grad_single(B, x):
+    """H(B, x) for one sample via the Pallas kernel.
+
+    Args: B (n, m) f32; x (m,) f32.  Returns H (n, n) f32.
+    """
+    n, m = B.shape
+    return pl.pallas_call(
+        _easi_grad_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), B.dtype),
+        interpret=INTERPRET,
+    )(B, x.reshape(1, m))
+
+
+@jax.jit
+def easi_sgd_step(B, x, mu):
+    """One fused SGD update via the Pallas kernel.
+
+    Args: B (n, m) f32; x (m,) f32; mu scalar f32.  Returns B' (n, m).
+    """
+    n, m = B.shape
+    mu_arr = jnp.asarray(mu, dtype=B.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _easi_sgd_step_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), B.dtype),
+        interpret=INTERPRET,
+    )(B, x.reshape(1, m), mu_arr)
+
+
+@jax.jit
+def smbgd_batch_update(B, Hhat, Xk, w, carry):
+    """One fused SMBGD mini-batch update via the Pallas kernel.
+
+    Args:
+      B:    (n, m) separation matrix (stale for the whole mini-batch).
+      Hhat: (n, n) accumulator carried from the previous mini-batch.
+      Xk:   (P, m) mini-batch samples.
+      w:    (P,) per-sample weights  mu * beta**(P-1-p).
+      carry: scalar  gamma * beta**(P-1).
+
+    Returns: (B', Hhat') — matching `ref.smbgd_minibatch_step`.
+    """
+    n, m = B.shape
+    P = Xk.shape[0]
+    carry_arr = jnp.asarray(carry, dtype=B.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _smbgd_batch_update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n, m), B.dtype),
+            jax.ShapeDtypeStruct((n, n), B.dtype),
+        ),
+        interpret=INTERPRET,
+    )(B, Hhat, Xk, w.reshape(1, P), carry_arr)

@@ -1,0 +1,172 @@
+"""Pure-jnp reference oracle for the EASI / SMBGD kernels.
+
+This module is the CORE correctness signal for Layer 1: every Pallas kernel
+in `easi.py` and every Layer-2 model function in `model.py` is pinned to
+these definitions by pytest (see python/tests/).  Everything here follows
+the paper's notation:
+
+  y   = B x                      (estimated components, n-vector)
+  g(y)= y**3                     (cubic nonlinearity, paper SS V.B)
+  H   = y y^T - I + g(y) y^T - y g(y)^T     (EASI relative gradient [9])
+  SGD:    B <- B - mu * H B                 (vanilla EASI, Fig. 1)
+  SMBGD:  Eq. 1 of the paper (Fig. 2), see `smbgd_hhat_sequential`.
+
+The reference implementations are deliberately written in the most
+literal/sequential way possible (per-sample loops, explicit Eq. 1
+recurrence) so that the closed-form, batched formulations used by the
+Pallas kernels are tested against something independently simple.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cube(y):
+    """The paper's nonlinearity g(y) = y^3 (elementwise)."""
+    return y * y * y
+
+
+def easi_grad(B, x, g=cube):
+    """EASI relative gradient H for one sample.
+
+    Args:
+      B: (n, m) separation matrix.
+      x: (m,) one input-feature sample.
+      g: elementwise nonlinearity (default: the paper's cubic).
+
+    Returns:
+      H: (n, n) relative gradient  y y^T - I + g(y) y^T - y g(y)^T.
+    """
+    y = B @ x
+    gy = g(y)
+    n = B.shape[0]
+    return (
+        jnp.outer(y, y)
+        - jnp.eye(n, dtype=B.dtype)
+        + jnp.outer(gy, y)
+        - jnp.outer(y, gy)
+    )
+
+
+def easi_sgd_step(B, x, mu, g=cube):
+    """One vanilla-EASI SGD update: B <- B - mu * H(B, x) B."""
+    H = easi_grad(B, x, g)
+    return B - mu * (H @ B)
+
+
+def easi_sgd_chunk(B, X, mu, g=cube):
+    """T sequential SGD updates (python loop — the literal oracle).
+
+    Args:
+      B: (n, m) initial separation matrix.
+      X: (T, m) samples, consumed in order (loop-carried dependency).
+      mu: scalar learning rate.
+
+    Returns:
+      (n, m) updated separation matrix after all T samples.
+    """
+    for t in range(X.shape[0]):
+        B = easi_sgd_step(B, X[t], mu, g)
+    return B
+
+
+def smbgd_weights(P, beta, mu, dtype=jnp.float32):
+    """Closed-form per-sample weights of Eq. 1 within one mini-batch.
+
+    Unrolling Eq. 1 for p = 0..P-1 gives
+
+      Hhat_final = beta**(P-1) * gamma * Hhat_prev
+                 + sum_p  mu * beta**(P-1-p) * H^p
+
+    so sample p carries weight  w_p = mu * beta**(P-1-p)  and the previous
+    mini-batch's accumulator carries  carry = beta**(P-1) * gamma.
+    """
+    p = jnp.arange(P, dtype=dtype)
+    return mu * beta ** (P - 1 - p)
+
+
+def smbgd_hhat_sequential(Hhat_prev, B, Xk, gamma, beta, mu, g=cube):
+    """Eq. 1, computed exactly as written (sequential recurrence).
+
+      p = 0:      Hhat = gamma * Hhat_prev + mu * H^0
+      0 < p < P:  Hhat = beta * Hhat      + mu * H^p
+
+    All H^p are evaluated against the SAME (stale) B — this is the whole
+    point of SMBGD: it breaks the loop-carried dependency on B.
+
+    Args:
+      Hhat_prev: (n, n) final accumulator of the previous mini-batch
+        (zeros for the first mini-batch, i.e. gamma is effectively 0).
+      B: (n, m) separation matrix (constant within the mini-batch).
+      Xk: (P, m) the mini-batch samples.
+
+    Returns:
+      (n, n) Hhat after the last sample of the mini-batch.
+    """
+    P = Xk.shape[0]
+    Hhat = gamma * Hhat_prev + mu * easi_grad(B, Xk[0], g)
+    for p in range(1, P):
+        Hhat = beta * Hhat + mu * easi_grad(B, Xk[p], g)
+    return Hhat
+
+
+def smbgd_batch_contrib(B, Xk, w, g=cube):
+    """Closed-form weighted gradient contribution of one mini-batch.
+
+    sum_p w_p H^p
+      = (w*Y)^T Y - (sum w) I + (w*G)^T Y - Y^T (w*G)     with
+    Y = Xk B^T (P, n), G = g(Y).
+
+    This is the MXU-friendly formulation the Pallas kernel implements:
+    the per-sample outer products collapse into three (n x P)(P x n)
+    matmuls with the weights folded into one operand.
+    """
+    Y = Xk @ B.T            # (P, n)
+    G = g(Y)                # (P, n)
+    Yw = Y * w[:, None]     # weights folded into one operand
+    Gw = G * w[:, None]
+    n = B.shape[0]
+    I = jnp.eye(n, dtype=B.dtype)
+    return Yw.T @ Y - jnp.sum(w) * I + Gw.T @ Y - Y.T @ Gw
+
+
+def smbgd_minibatch_step(B, Hhat_prev, Xk, gamma, beta, mu, g=cube):
+    """One full SMBGD mini-batch: accumulate Eq. 1, then update B once.
+
+    Returns (B_next, Hhat_final):
+      Hhat_final = beta**(P-1) * gamma * Hhat_prev + sum_p w_p H^p
+      B_next     = B - Hhat_final B
+    """
+    P = Xk.shape[0]
+    w = smbgd_weights(P, beta, mu, dtype=B.dtype)
+    carry = beta ** (P - 1) * gamma
+    Hhat = carry * Hhat_prev + smbgd_batch_contrib(B, Xk, w, g)
+    return B - Hhat @ B, Hhat
+
+
+def smbgd_chunk(B, Hhat, X, gamma, beta, mu, g=cube):
+    """K sequential mini-batches (python loop oracle).
+
+    Args:
+      X: (K, P, m) samples grouped into K mini-batches of P.
+
+    Returns:
+      (B, Hhat) after all K mini-batches.
+    """
+    for k in range(X.shape[0]):
+        B, Hhat = smbgd_minibatch_step(B, Hhat, X[k], gamma, beta, mu, g)
+    return B, Hhat
+
+
+def amari_index(C):
+    """Amari performance index of the global matrix C = B A (n x n).
+
+    0 when C is a scaled permutation (perfect separation); used by tests
+    and mirrored by the Rust implementation in `ica::metrics`.
+    """
+    C = jnp.abs(C)
+    n = C.shape[0]
+    row = jnp.sum(C / jnp.max(C, axis=1, keepdims=True), axis=1) - 1.0
+    col = jnp.sum(C / jnp.max(C, axis=0, keepdims=True), axis=0) - 1.0
+    return (jnp.sum(row) + jnp.sum(col)) / (2.0 * n * (n - 1))

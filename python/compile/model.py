@@ -1,0 +1,104 @@
+"""Layer-2 JAX model: chunked EASI training programs built on the L1 kernels.
+
+These are the computations that get AOT-lowered (by `aot.py`) to HLO text
+and executed from the Rust coordinator via PJRT.  Python never runs on the
+request path: each function here is a pure, fixed-shape program.
+
+Two programs, mirroring the paper's two architectures:
+
+  easi_sgd_chunk    — Fig. 1: T sequential per-sample updates.  The
+                      `lax.scan` carry on B *is* the loop-carried
+                      dependency the paper complains about; on TPU it
+                      serializes exactly like the stalled FPGA pipeline.
+  easi_smbgd_chunk  — Fig. 2: K mini-batches of P samples.  Each
+                      mini-batch is ONE fused Pallas kernel call (batched
+                      MXU matmuls); only the K-loop is sequential.
+
+Both are exposed chunked (T or K*P samples per call) so the Rust
+coordinator can interleave streaming, metric computation, and state
+snapshots between calls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import easi as kernels
+from compile.kernels import ref
+
+
+def easi_sgd_chunk(B, X, mu):
+    """T sequential vanilla-EASI updates (Fig. 1 program).
+
+    Args:
+      B:  (n, m) f32 separation matrix.
+      X:  (T, m) f32 samples, consumed in order.
+      mu: () f32 learning rate.
+
+    Returns:
+      (n, m) f32 updated separation matrix.
+    """
+
+    def step(Bc, x):
+        return kernels.easi_sgd_step(Bc, x, mu), None
+
+    Bf, _ = jax.lax.scan(step, B, X)
+    return Bf
+
+
+def easi_smbgd_chunk(B, Hhat, X, gamma, beta, mu):
+    """K sequential SMBGD mini-batch updates (Fig. 2 program).
+
+    Args:
+      B:     (n, m) f32 separation matrix.
+      Hhat:  (n, n) f32 Eq. 1 accumulator (zeros at stream start).
+      X:     (K, P, m) f32 samples grouped into K mini-batches.
+      gamma: () f32 cross-batch momentum coefficient.
+      beta:  () f32 intra-batch decay coefficient.
+      mu:    () f32 learning rate.
+
+    Returns:
+      (B', Hhat'): updated matrix and accumulator, to be carried into the
+      next chunk by the Rust coordinator.
+    """
+    P = X.shape[1]
+    dt = B.dtype
+    # Closed-form Eq. 1 constants (see ref.smbgd_weights).
+    p = jnp.arange(P, dtype=dt)
+    w = mu * beta ** (P - 1 - p)
+    carry = gamma * beta ** (P - 1)
+
+    def step(state, Xk):
+        Bc, Hc = state
+        Bn, Hn = kernels.smbgd_batch_update(Bc, Hc, Xk, w, carry)
+        return (Bn, Hn), None
+
+    (Bf, Hf), _ = jax.lax.scan(step, (B, Hhat), X)
+    return Bf, Hf
+
+
+def easi_grad(B, x):
+    """Single-sample relative gradient H (exported for runtime tests)."""
+    return kernels.easi_grad_single(B, x)
+
+
+def separate_chunk(B, X):
+    """Inference-only program: Y = X B^T for a chunk of samples.
+
+    This is the 'deployment' half of the paper's create/train/deploy
+    hardware: applying the current separation matrix to a block of
+    samples without updating it.
+    """
+    return X @ B.T
+
+
+def ref_sgd_chunk(B, X, mu):
+    """Pure-jnp (no pallas) variant of easi_sgd_chunk, used for parity
+    tests and as the XLA-fusion baseline in the perf pass."""
+
+    def step(Bc, x):
+        return ref.easi_sgd_step(Bc, x, mu), None
+
+    Bf, _ = jax.lax.scan(step, B, X)
+    return Bf

@@ -1,0 +1,198 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This file is the core correctness signal for the compile path: if these
+pass, the HLO artifacts the Rust runtime executes compute exactly the
+reference EASI/SMBGD math.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import easi as kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def rand_problem(seed, n, m, extra=()):
+    r = rng(seed)
+    B = r.normal(size=(n, m)).astype(np.float32) * 0.5
+    xs = [r.normal(size=s).astype(np.float32) for s in extra]
+    return (B, *xs)
+
+
+# ---------------------------------------------------------------------------
+# easi_grad_single
+# ---------------------------------------------------------------------------
+
+class TestEasiGrad:
+    @pytest.mark.parametrize("n,m", [(2, 4), (4, 8), (2, 2), (8, 8), (3, 5)])
+    def test_matches_ref(self, n, m):
+        B, x = rand_problem(0, n, m, extra=[(m,)])
+        got = kernels.easi_grad_single(B, x)
+        want = ref.easi_grad(B, x)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_diag_is_y2_minus_1(self):
+        # H_ii = y_i^2 - 1 (the antisymmetric g-terms vanish on the diagonal).
+        B, x = rand_problem(1, 3, 6, extra=[(6,)])
+        H = np.asarray(kernels.easi_grad_single(B, x))
+        y = B @ x
+        np.testing.assert_allclose(np.diag(H), y * y - 1.0, rtol=1e-5, atol=1e-5)
+
+    def test_zero_input_gives_minus_identity(self):
+        B = np.ones((2, 4), np.float32)
+        x = np.zeros((4,), np.float32)
+        H = np.asarray(kernels.easi_grad_single(B, x))
+        np.testing.assert_allclose(H, -np.eye(2, dtype=np.float32))
+
+    def test_nonlinear_part_antisymmetric(self):
+        # H + H^T = 2(y y^T - I): the g(y)y^T - y g(y)^T part is antisymmetric.
+        B, x = rand_problem(2, 4, 4, extra=[(4,)])
+        H = np.asarray(kernels.easi_grad_single(B, x))
+        y = B @ x
+        sym = H + H.T
+        np.testing.assert_allclose(
+            sym, 2 * (np.outer(y, y) - np.eye(4)), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n=st.integers(1, 8),
+        m=st.integers(1, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, n, m, seed):
+        if n > m:
+            n = m  # ICA requires n <= m
+        B, x = rand_problem(seed, n, m, extra=[(m,)])
+        got = kernels.easi_grad_single(B, x)
+        want = ref.easi_grad(B, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# easi_sgd_step
+# ---------------------------------------------------------------------------
+
+class TestSgdStep:
+    @pytest.mark.parametrize("n,m", [(2, 4), (4, 8), (2, 2)])
+    def test_matches_ref(self, n, m):
+        B, x = rand_problem(3, n, m, extra=[(m,)])
+        got = kernels.easi_sgd_step(B, x, 0.01)
+        want = ref.easi_sgd_step(B, x, 0.01)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_zero_mu_is_identity(self):
+        B, x = rand_problem(4, 2, 4, extra=[(4,)])
+        got = kernels.easi_sgd_step(B, x, 0.0)
+        np.testing.assert_allclose(got, B, rtol=0, atol=0)
+
+    def test_linear_in_mu_direction(self):
+        # B'(mu) = B - mu*H B is affine in mu for fixed (B, x).
+        B, x = rand_problem(5, 2, 4, extra=[(4,)])
+        b1 = np.asarray(kernels.easi_sgd_step(B, x, 0.01))
+        b2 = np.asarray(kernels.easi_sgd_step(B, x, 0.02))
+        np.testing.assert_allclose(b2 - B, 2 * (b1 - B), rtol=1e-4, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 6),
+        m=st.integers(1, 8),
+        mu=st.floats(0.0, 0.1),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, n, m, mu, seed):
+        if n > m:
+            n = m
+        B, x = rand_problem(seed, n, m, extra=[(m,)])
+        got = kernels.easi_sgd_step(B, x, np.float32(mu))
+        want = ref.easi_sgd_step(B, x, np.float32(mu))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# smbgd_batch_update
+# ---------------------------------------------------------------------------
+
+class TestSmbgdBatch:
+    def _args(self, seed, n, m, P, gamma=0.5, beta=0.9, mu=0.01):
+        B, Xk = rand_problem(seed, n, m, extra=[(P, m)])
+        r = rng(seed + 1)
+        Hhat = (r.normal(size=(n, n)) * 0.1).astype(np.float32)
+        w = np.asarray(ref.smbgd_weights(P, np.float32(beta), np.float32(mu)))
+        carry = np.float32(gamma * beta ** (P - 1))
+        return B, Hhat, Xk, w, carry, gamma, beta, mu
+
+    @pytest.mark.parametrize("n,m,P", [(2, 4, 8), (4, 8, 16), (2, 2, 4)])
+    def test_matches_closed_form_ref(self, n, m, P):
+        B, Hhat, Xk, w, carry, gamma, beta, mu = self._args(7, n, m, P)
+        gb, gh = kernels.smbgd_batch_update(B, Hhat, Xk, w, carry)
+        wb, wh = ref.smbgd_minibatch_step(
+            B, Hhat, Xk, np.float32(gamma), np.float32(beta), np.float32(mu)
+        )
+        np.testing.assert_allclose(gh, wh, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gb, wb, rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("P", [1, 2, 4, 8, 32])
+    def test_matches_sequential_eq1(self, P):
+        # The closed form used by the kernel == Eq. 1 run literally.
+        n, m = 2, 4
+        gamma, beta, mu = 0.6, 0.92, 0.02
+        B, Hhat, Xk, w, carry, *_ = self._args(11, n, m, P, gamma, beta, mu)
+        _, gh = kernels.smbgd_batch_update(B, Hhat, Xk, w, carry)
+        wh = ref.smbgd_hhat_sequential(
+            Hhat, B, Xk, np.float32(gamma), np.float32(beta), np.float32(mu)
+        )
+        np.testing.assert_allclose(gh, wh, rtol=1e-4, atol=1e-5)
+
+    def test_stale_B_within_batch(self):
+        # SMBGD's defining property: permuting samples inside a mini-batch
+        # changes Hhat (weights differ) but every H^p uses the same B —
+        # with beta=1 the result is permutation-invariant.
+        n, m, P = 2, 4, 8
+        B, Hhat, Xk, _, _, *_ = self._args(13, n, m, P)
+        w = np.asarray(ref.smbgd_weights(P, np.float32(1.0), np.float32(0.01)))
+        carry = np.float32(0.5)
+        _, h1 = kernels.smbgd_batch_update(B, Hhat, Xk, w, carry)
+        _, h2 = kernels.smbgd_batch_update(B, Hhat, Xk[::-1].copy(), w, carry)
+        np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-5)
+
+    def test_gamma_zero_ignores_prev(self):
+        n, m, P = 2, 4, 8
+        B, Hhat, Xk, w, _, *_ = self._args(17, n, m, P)
+        _, h1 = kernels.smbgd_batch_update(B, Hhat, Xk, w, np.float32(0.0))
+        _, h2 = kernels.smbgd_batch_update(
+            B, np.zeros_like(Hhat), Xk, w, np.float32(0.0)
+        )
+        np.testing.assert_allclose(h1, h2, rtol=0, atol=0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(1, 4),
+        m=st.integers(1, 8),
+        P=st.integers(1, 16),
+        gamma=st.floats(0.0, 1.0),
+        beta=st.floats(0.5, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, n, m, P, gamma, beta, seed):
+        if n > m:
+            n = m
+        mu = 0.01
+        B, Hhat, Xk, w, carry, *_ = self._args(
+            seed, n, m, P, gamma, beta, mu
+        )
+        gb, gh = kernels.smbgd_batch_update(B, Hhat, Xk, w, carry)
+        wb, wh = ref.smbgd_minibatch_step(
+            B, Hhat, Xk, np.float32(gamma), np.float32(beta), np.float32(mu)
+        )
+        np.testing.assert_allclose(gh, wh, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(gb, wb, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,211 @@
+"""L2 correctness: chunked model programs vs sequential oracles, plus
+algorithmic sanity (separation actually happens, SMBGD == SGD limits).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_mixtures(seed, n_src, m, T):
+    """n_src independent sub-Gaussian sources mixed up to m channels.
+
+    Cubic g(y)=y^3 makes EASI stable only for source pairs with negative
+    kurtosis sum (kappa_i = -kurt_i for the cubic), so — like the FPGA/DSP
+    EASI literature the paper builds on — we use sub-Gaussian sources:
+    uniform (kurt -1.2) and Rademacher +-1 (kurt -2).
+    """
+    r = rng(seed)
+    S = np.empty((T, n_src), np.float32)
+    for j in range(n_src):
+        if j % 2 == 0:  # sub-Gaussian: uniform, unit variance
+            S[:, j] = r.uniform(-np.sqrt(3), np.sqrt(3), size=T)
+        else:  # sub-Gaussian: random +-1, unit variance
+            S[:, j] = r.integers(0, 2, size=T) * 2.0 - 1.0
+    A = r.normal(size=(m, n_src)).astype(np.float32)
+    return (S @ A.T).astype(np.float32), A, S
+
+
+class TestSgdChunk:
+    @pytest.mark.parametrize("n,m,T", [(2, 4, 16), (4, 8, 8), (2, 2, 32)])
+    def test_matches_sequential_oracle(self, n, m, T):
+        r = rng(0)
+        B = (r.normal(size=(n, m)) * 0.3).astype(np.float32)
+        X = r.normal(size=(T, m)).astype(np.float32)
+        got = model.easi_sgd_chunk(B, X, np.float32(0.005))
+        want = ref.easi_sgd_chunk(B, X, np.float32(0.005))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_chunking_is_associative(self):
+        # Running one 32-chunk == two 16-chunks (coordinator relies on this).
+        r = rng(1)
+        B = (r.normal(size=(2, 4)) * 0.3).astype(np.float32)
+        X = r.normal(size=(32, 4)).astype(np.float32)
+        mu = np.float32(0.01)
+        whole = model.easi_sgd_chunk(B, X, mu)
+        half = model.easi_sgd_chunk(B, X[:16], mu)
+        split = model.easi_sgd_chunk(np.asarray(half), X[16:], mu)
+        np.testing.assert_allclose(whole, split, rtol=1e-4, atol=1e-5)
+
+    def test_pallas_matches_pure_jnp_path(self):
+        r = rng(2)
+        B = (r.normal(size=(2, 4)) * 0.3).astype(np.float32)
+        X = r.normal(size=(64, 4)).astype(np.float32)
+        mu = np.float32(0.01)
+        a = model.easi_sgd_chunk(B, X, mu)
+        b = model.ref_sgd_chunk(B, X, mu)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+class TestSmbgdChunk:
+    def test_matches_sequential_oracle(self):
+        r = rng(3)
+        n, m, K, P = 2, 4, 4, 8
+        B = (r.normal(size=(n, m)) * 0.3).astype(np.float32)
+        Hh = np.zeros((n, n), np.float32)
+        X = r.normal(size=(K, P, m)).astype(np.float32)
+        g, b_, mu = np.float32(0.5), np.float32(0.9), np.float32(0.01)
+        gb, gh = model.easi_smbgd_chunk(B, Hh, X, g, b_, mu)
+        wb, wh = ref.smbgd_chunk(B, Hh, X, g, b_, mu)
+        np.testing.assert_allclose(gb, wb, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(gh, wh, rtol=1e-3, atol=1e-4)
+
+    def test_chunking_carries_hhat(self):
+        # Two chunks of K=2 == one chunk of K=4 only if Hhat is carried —
+        # this is the contract between coordinator chunks.
+        r = rng(4)
+        n, m, K, P = 2, 4, 4, 8
+        B = (r.normal(size=(n, m)) * 0.3).astype(np.float32)
+        Hh = np.zeros((n, n), np.float32)
+        X = r.normal(size=(K, P, m)).astype(np.float32)
+        g, b_, mu = np.float32(0.7), np.float32(0.95), np.float32(0.005)
+        wb, wh = model.easi_smbgd_chunk(B, Hh, X, g, b_, mu)
+        b1, h1 = model.easi_smbgd_chunk(B, Hh, X[:2], g, b_, mu)
+        b2, h2 = model.easi_smbgd_chunk(
+            np.asarray(b1), np.asarray(h1), X[2:], g, b_, mu
+        )
+        np.testing.assert_allclose(wb, b2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(wh, h2, rtol=1e-4, atol=1e-5)
+
+    def test_p1_beta_anything_equals_sgd_with_momentum_off(self):
+        # P=1, gamma=0: each "mini-batch" is one sample and the update
+        # degenerates to plain SGD.
+        r = rng(5)
+        n, m, T = 2, 4, 16
+        B = (r.normal(size=(n, m)) * 0.3).astype(np.float32)
+        X = r.normal(size=(T, m)).astype(np.float32)
+        mu = np.float32(0.01)
+        gb, _ = model.easi_smbgd_chunk(
+            B,
+            np.zeros((n, n), np.float32),
+            X.reshape(T, 1, m),
+            np.float32(0.0),
+            np.float32(0.9),
+            mu,
+        )
+        want = ref.easi_sgd_chunk(B, X, mu)
+        np.testing.assert_allclose(gb, want, rtol=1e-3, atol=1e-4)
+
+
+class TestSeparation:
+    """End-to-end algorithmic checks: the model programs actually separate."""
+
+    def _amari_after(self, opt, seed, T=6000):
+        n, m = 2, 4
+        X, A, _ = make_mixtures(seed, n, m, T)
+        # scale down mixtures for stability (the coordinator normalizes too)
+        X = X / np.std(X)
+        r = rng(seed + 100)
+        B = (np.eye(n, m) + 0.1 * r.normal(size=(n, m))).astype(np.float32) * 0.5
+        mu = np.float32(0.002)
+        if opt == "sgd":
+            for i in range(0, T, 256):
+                chunk = X[i : i + 256]
+                if len(chunk) < 256:
+                    break
+                B = np.asarray(model.easi_sgd_chunk(B, chunk, mu))
+        else:
+            Hh = np.zeros((n, n), np.float32)
+            P, K = 8, 16
+            step = P * K
+            g, b_ = np.float32(0.5), np.float32(0.9)
+            for i in range(0, T, step):
+                chunk = X[i : i + step]
+                if len(chunk) < step:
+                    break
+                B, Hh = model.easi_smbgd_chunk(
+                    B, Hh, chunk.reshape(K, P, m), g, b_, mu
+                )
+                B, Hh = np.asarray(B), np.asarray(Hh)
+        C = B @ A[:, :n]  # global matrix restricted to true sources
+        return float(ref.amari_index(jnp.asarray(C)))
+
+    def test_sgd_separates(self):
+        assert self._amari_after("sgd", 0) < 0.25
+
+    def test_smbgd_separates(self):
+        assert self._amari_after("smbgd", 0) < 0.25
+
+
+class TestSeparateChunk:
+    def test_projects(self):
+        r = rng(6)
+        B = r.normal(size=(2, 4)).astype(np.float32)
+        X = r.normal(size=(8, 4)).astype(np.float32)
+        Y = model.separate_chunk(B, X)
+        np.testing.assert_allclose(Y, X @ B.T, rtol=1e-6, atol=1e-6)
+
+
+class TestSmbgdChunkHypothesis:
+    """Shape/parameter sweeps of the L2 smbgd chunk program against the
+    sequential oracle (the program the Rust engine executes)."""
+
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        k=st.integers(1, 6),
+        p=st.integers(1, 12),
+        n=st.integers(1, 4),
+        extra_m=st.integers(0, 4),
+        gamma=st.floats(0.0, 1.0),
+        beta=st.floats(0.6, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_chunk_matches_oracle(self, k, p, n, extra_m, gamma, beta, seed):
+        m = n + extra_m
+        r = rng(seed)
+        B = (r.normal(size=(n, m)) * 0.3).astype(np.float32)
+        Hh = (r.normal(size=(n, n)) * 0.05).astype(np.float32)
+        X = r.normal(size=(k, p, m)).astype(np.float32)
+        g, b_, mu = np.float32(gamma), np.float32(beta), np.float32(0.005)
+        gb, gh = model.easi_smbgd_chunk(B, Hh, X, g, b_, mu)
+        wb, wh = ref.smbgd_chunk(B, Hh, X, g, b_, mu)
+        np.testing.assert_allclose(gb, wb, rtol=2e-3, atol=2e-4)
+        np.testing.assert_allclose(gh, wh, rtol=2e-3, atol=2e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        t=st.integers(1, 48),
+        n=st.integers(1, 4),
+        extra_m=st.integers(0, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_sgd_chunk_matches_oracle(self, t, n, extra_m, seed):
+        m = n + extra_m
+        r = rng(seed)
+        B = (r.normal(size=(n, m)) * 0.3).astype(np.float32)
+        X = r.normal(size=(t, m)).astype(np.float32)
+        got = model.easi_sgd_chunk(B, X, np.float32(0.004))
+        want = ref.easi_sgd_chunk(B, X, np.float32(0.004))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4)

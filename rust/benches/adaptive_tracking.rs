@@ -1,0 +1,15 @@
+//! A3 bench: adaptive tracking under a rotating mixing matrix — adaptive
+//! EASI variants vs a frozen FastICA fit (the paper's §I/§III motivation).
+//! Run: cargo bench --bench adaptive_tracking
+
+use easi_ica::experiments::{a3_adaptive_tracking, TrackingParams};
+
+fn main() {
+    println!("=== A3: adaptive tracking vs nonadaptive baseline ===\n");
+    for omega in [1e-5, 3e-5, 1e-4] {
+        let p = TrackingParams { omega, samples: 120_000, ..Default::default() };
+        let r = a3_adaptive_tracking(&p);
+        println!("omega = {omega} rad/sample:");
+        println!("{}", r.render());
+    }
+}

@@ -1,0 +1,157 @@
+//! §Perf harness: micro-benchmarks of every hot path across the stack.
+//!
+//! Run: cargo bench --bench hotpath
+//!
+//! Measures (native) per-sample optimizer steps, the relative-gradient
+//! kernel, PJRT chunk execution (compile-amortized), and the end-to-end
+//! coordinator throughput. Baseline/after numbers are recorded in
+//! EXPERIMENTS.md §Perf.
+
+mod bench_util;
+
+use bench_util::{bench, black_box, report};
+use easi_ica::config::{EngineKind, ExperimentConfig, OptimizerKind};
+use easi_ica::coordinator::{make_engine, run_streaming, ServerOptions, StateStore};
+use easi_ica::ica::{EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
+use easi_ica::linalg::Mat64;
+use easi_ica::runtime::{artifacts_available, default_artifacts_dir, PjrtRuntime};
+use easi_ica::signal::Pcg32;
+
+fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat64 {
+    Mat64::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn native_steps(m: usize, n: usize) {
+    let mut rng = Pcg32::seed(1);
+    let xs = rand_mat(&mut rng, 4096, m);
+
+    let mut sgd = EasiSgd::with_identity_init(n, m, 1e-4, Nonlinearity::Cube);
+    let meas = bench(3, 15, xs.rows() as u64, || {
+        for t in 0..xs.rows() {
+            sgd.step(black_box(xs.row(t)));
+        }
+    });
+    report(&format!("native EASI-SGD step (m={m}, n={n})"), &meas);
+
+    let prm = SmbgdParams { mu: 1e-4, gamma: 0.5, beta: 0.9, p: 8 };
+    let mut smb = Smbgd::with_identity_init(n, m, prm, Nonlinearity::Cube);
+    let meas = bench(3, 15, xs.rows() as u64, || {
+        for t in 0..xs.rows() {
+            smb.step(black_box(xs.row(t)));
+        }
+    });
+    report(&format!("native EASI-SMBGD step (m={m}, n={n})"), &meas);
+
+    // The shared gradient kernel alone.
+    let b = easi_ica::ica::init_b(n, m);
+    let mut y = vec![0.0; n];
+    let mut gy = vec![0.0; n];
+    let mut h = Mat64::zeros(n, n);
+    let meas = bench(3, 15, xs.rows() as u64, || {
+        for t in 0..xs.rows() {
+            EasiSgd::relative_gradient(
+                &b,
+                black_box(xs.row(t)),
+                Nonlinearity::Cube,
+                false,
+                1e-4,
+                &mut y,
+                &mut gy,
+                &mut h,
+            );
+        }
+        black_box(&h);
+    });
+    report(&format!("relative gradient H only (m={m}, n={n})"), &meas);
+}
+
+fn pjrt_chunks() {
+    if !artifacts_available() {
+        println!("pjrt benches skipped: run `make artifacts`");
+        return;
+    }
+    let mut rt = PjrtRuntime::new(default_artifacts_dir()).expect("runtime");
+    let mut rng = Pcg32::seed(2);
+
+    // SMBGD chunk: 64 samples per call (K=8, P=8).
+    let b0 = easi_ica::ica::init_b(2, 4);
+    let hh = Mat64::zeros(2, 2);
+    let xs = rand_mat(&mut rng, 64, 4);
+    // warm compile outside the timing loop
+    rt.run_smbgd_chunk("easi_smbgd_m4_n2_p8_k8", &b0, &hh, &xs, 0.5, 0.9, 1e-4).unwrap();
+    let mut state = (b0.clone(), hh.clone());
+    let meas = bench(3, 20, 64, || {
+        let out = rt
+            .run_smbgd_chunk("easi_smbgd_m4_n2_p8_k8", &state.0, &state.1, &xs, 0.5, 0.9, 1e-4)
+            .unwrap();
+        state = (out.b, out.hhat);
+    });
+    report("pjrt smbgd chunk (64 samples/call, m=4 n=2)", &meas);
+
+    // Bigger chunk: K=16, P=16 => 256 samples per call.
+    let xs = rand_mat(&mut rng, 256, 4);
+    rt.run_smbgd_chunk("easi_smbgd_m4_n2_p16_k16", &b0, &hh, &xs, 0.5, 0.9, 1e-4).unwrap();
+    let mut state = (b0.clone(), hh);
+    let meas = bench(3, 20, 256, || {
+        let out = rt
+            .run_smbgd_chunk("easi_smbgd_m4_n2_p16_k16", &state.0, &state.1, &xs, 0.5, 0.9, 1e-4)
+            .unwrap();
+        state = (out.b, out.hhat);
+    });
+    report("pjrt smbgd chunk (256 samples/call, m=4 n=2)", &meas);
+
+    // SGD chunk (sequential scan inside XLA).
+    let xs = rand_mat(&mut rng, 64, 4);
+    let mut b = b0.clone();
+    rt.run_sgd_chunk("easi_sgd_m4_n2_t64", &b, &xs, 1e-4).unwrap();
+    let meas = bench(3, 20, 64, || {
+        b = rt.run_sgd_chunk("easi_sgd_m4_n2_t64", &b, &xs, 1e-4).unwrap();
+    });
+    report("pjrt sgd chunk (64 samples/call, m=4 n=2)", &meas);
+}
+
+fn coordinator_end_to_end() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.samples = 400_000;
+    cfg.optimizer.kind = OptimizerKind::Smbgd;
+    cfg.optimizer.mu = 1e-4;
+
+    let engine = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+    let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
+    let t0 = std::time::Instant::now();
+    let sum = run_streaming(&cfg, engine, ServerOptions::default(), &state).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<44} {:>12.1} ns/iter {:>16.0} iters/s",
+        "coordinator e2e (native smbgd, m=4 n=2)",
+        dt * 1e9 / sum.samples as f64,
+        sum.samples as f64 / dt
+    );
+
+    if artifacts_available() {
+        cfg.engine = EngineKind::Pjrt;
+        cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+        cfg.samples = 100_000;
+        let engine = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
+        let t0 = std::time::Instant::now();
+        let sum = run_streaming(&cfg, engine, ServerOptions::default(), &state).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<44} {:>12.1} ns/iter {:>16.0} iters/s",
+            "coordinator e2e (pjrt smbgd, m=4 n=2)",
+            dt * 1e9 / sum.samples as f64,
+            sum.samples as f64 / dt
+        );
+    }
+}
+
+fn main() {
+    println!("=== §Perf hot-path micro-benchmarks ===\n");
+    println!("{:<44} {:>20} {:>16}", "benchmark", "time", "throughput");
+    native_steps(4, 2);
+    native_steps(8, 4);
+    native_steps(16, 8);
+    pjrt_chunks();
+    coordinator_end_to_end();
+}

@@ -1,0 +1,15 @@
+//! E2 bench (paper Table I): regenerate the FPGA comparison at m=4, n=2,
+//! plus the two scale-up configurations used elsewhere in the repo.
+//! Run: cargo bench --bench table1
+
+use easi_ica::fpga::{table1, Calib};
+use easi_ica::ica::Nonlinearity;
+
+fn main() {
+    println!("=== E2: Table I — EASI-SGD vs EASI-SMBGD on the Cyclone V model ===\n");
+    let calib = Calib::default();
+    for (m, n) in [(4, 2), (8, 4)] {
+        let t = table1(m, n, Nonlinearity::Cube, &calib);
+        println!("{}", t.render());
+    }
+}

@@ -1,0 +1,183 @@
+//! Minimal CLI argument parser (stand-in for `clap`, unavailable offline).
+//!
+//! Grammar: `easi-ica <command> [--flag value]... [--switch]...`.
+//! Unknown flags are errors; every command documents its flags in
+//! [`usage`].
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: a command name plus `--key value` flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Flags that take no value.
+const SWITCHES: &[&str] = &["help", "verbose", "normalized"];
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut it = raw.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        if command.starts_with("--") {
+            bail!("expected a command before flags; see `easi-ica help`");
+        }
+        let mut args = Args { command, ..Default::default() };
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument '{tok}'");
+            };
+            if name.is_empty() {
+                bail!("empty flag name");
+            }
+            if SWITCHES.contains(&name) {
+                args.switches.push(name.to_string());
+            } else {
+                let value = it
+                    .next()
+                    .with_context(|| format!("flag --{name} requires a value"))?;
+                if args.flags.insert(name.to_string(), value).is_some() {
+                    bail!("duplicate flag --{name}");
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be a number")),
+        }
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Error if any flag not in `allowed` was supplied (catches typos).
+    pub fn expect_only(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!(
+                    "unknown flag --{k} for command '{}' (allowed: {})",
+                    self.command,
+                    allowed.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Top-level usage text.
+pub fn usage() -> &'static str {
+    "easi-ica — adaptive ICA via EASI with SMBGD (paper reproduction)\n\
+     \n\
+     USAGE: easi-ica <command> [flags]\n\
+     \n\
+     COMMANDS\n\
+       run            stream an experiment through the coordinator\n\
+                      --config FILE | [--m N --n N --optimizer sgd|smbgd|mbgd\n\
+                      --engine native|pjrt --samples N --mu F --gamma F --beta F\n\
+                      --p N --mixing static|rotating|switching --seed N]\n\
+       convergence    E1 (paper SSV.A): SGD vs SMBGD iterations-to-convergence\n\
+                      [--runs N --m N --n N --mu F --gamma F --beta F --p N]\n\
+       table1         E2 (paper Table I): FPGA model, both architectures\n\
+                      [--m N --n N --g cube|tanh|signed_square\n\
+                       --format float|fixed16|fixed32]\n\
+       depth-sweep    E3: (m,n) sweep of depth/Fmax/MIPS/resources\n\
+       ablation       A1/A2: --what hyper|nonlinearity [--runs N]\n\
+       tracking       A3: adaptive tracking vs frozen FastICA\n\
+                      [--omega F --samples N]\n\
+       dump-datapath  E4 (Figs. 1-2): print the datapath block structure\n\
+                      [--m N --n N --arch sgd|smbgd]\n\
+       separate       run FastICA on a synthetic dataset and report metrics\n\
+                      [--m N --n N --samples N --seed N]\n\
+       help           this text\n"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse("table1 --m 4 --n 2").unwrap();
+        assert_eq!(a.command, "table1");
+        assert_eq!(a.get_usize("m", 0).unwrap(), 4);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run").unwrap();
+        assert_eq!(a.get_usize("samples", 1000).unwrap(), 1000);
+        assert_eq!(a.get_f64("mu", 0.01).unwrap(), 0.01);
+        assert_eq!(a.get_str("engine", "native"), "native");
+    }
+
+    #[test]
+    fn switches_take_no_value() {
+        let a = parse("run --verbose --m 4").unwrap();
+        assert!(a.switch("verbose"));
+        assert_eq!(a.get_usize("m", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse("run --m").is_err());
+    }
+
+    #[test]
+    fn duplicate_flag_errors() {
+        assert!(parse("run --m 4 --m 8").is_err());
+    }
+
+    #[test]
+    fn expect_only_catches_typos() {
+        let a = parse("table1 --mm 4").unwrap();
+        assert!(a.expect_only(&["m", "n"]).is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(parse("run stray").is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("run --m four").unwrap();
+        assert!(a.get_usize("m", 0).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment configuration: a TOML-subset parser plus typed experiment
+//! configs (stand-in for `serde` + `toml`, unavailable offline).
+//!
+//! Supported syntax — enough for experiment files, intentionally nothing
+//! more: `[section.subsection]` headers, `key = value` with string,
+//! integer, float, boolean and flat arrays, `#` comments.
+
+mod parse;
+mod types;
+
+pub use parse::{parse, ParseError, Value};
+pub use types::{EngineKind, ExperimentConfig, OptimizerConfig, OptimizerKind, SignalConfig};

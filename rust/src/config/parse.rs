@@ -1,0 +1,274 @@
+//! TOML-subset parser. See module docs in `config/mod.rs` for the grammar.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Float accessor; integers widen implicitly (TOML-style `mu = 1`).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err(line: usize, message: impl Into<String>) -> ParseError {
+    ParseError { line, message: message.into() }
+}
+
+/// Parse a TOML-subset document into a flat `section.key -> Value` map.
+///
+/// Keys in the root (before any section header) are stored without a
+/// prefix; keys under `[a.b]` as `a.b.key`.
+pub fn parse(text: &str) -> Result<BTreeMap<String, Value>, ParseError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            if !name.chars().all(|c| c.is_alphanumeric() || c == '.' || c == '_' || c == '-') {
+                return Err(err(lineno, format!("invalid section name '{name}'")));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, format!("expected 'key = value', got '{line}'")))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        if out.insert(full.clone(), value).is_some() {
+            return Err(err(lineno, format!("duplicate key '{full}'")));
+        }
+    }
+    Ok(out)
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Value, ParseError> {
+    if text.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quotes not supported"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.starts_with('[') {
+                return Err(err(lineno, "nested arrays not supported"));
+            }
+            items.push(parse_value(part, lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // Numbers: int first (no '.', 'e'), then float.
+    if !text.contains('.') && !text.contains(['e', 'E']) {
+        if let Ok(v) = text.parse::<i64>() {
+            return Ok(Value::Int(v));
+        }
+    }
+    if let Ok(v) = text.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(err(lineno, format!("cannot parse value '{text}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = r#"
+            name = "exp1"          # a comment
+            iterations = 4166
+            mu = 0.01
+            adaptive = true
+        "#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["name"], Value::Str("exp1".into()));
+        assert_eq!(m["iterations"], Value::Int(4166));
+        assert_eq!(m["mu"], Value::Float(0.01));
+        assert_eq!(m["adaptive"], Value::Bool(true));
+    }
+
+    #[test]
+    fn parses_sections_and_arrays() {
+        let doc = r#"
+            [optimizer.smbgd]
+            gamma = 0.5
+            dims = [4, 2]
+            names = ["a", "b"]
+        "#;
+        let m = parse(doc).unwrap();
+        assert_eq!(m["optimizer.smbgd.gamma"], Value::Float(0.5));
+        assert_eq!(
+            m["optimizer.smbgd.dims"],
+            Value::Array(vec![Value::Int(4), Value::Int(2)])
+        );
+        assert_eq!(
+            m["optimizer.smbgd.names"].as_array().unwrap()[1].as_str(),
+            Some("b")
+        );
+    }
+
+    #[test]
+    fn int_widens_to_float() {
+        let m = parse("mu = 1").unwrap();
+        assert_eq!(m["mu"].as_float(), Some(1.0));
+    }
+
+    #[test]
+    fn scientific_notation() {
+        let m = parse("omega = 1e-3").unwrap();
+        assert_eq!(m["omega"].as_float(), Some(1e-3));
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let m = parse("a = -3\nb = -0.5").unwrap();
+        assert_eq!(m["a"].as_int(), Some(-3));
+        assert_eq!(m["b"].as_float(), Some(-0.5));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let m = parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(m["tag"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn unterminated_string_rejected() {
+        assert!(parse("a = \"oops").is_err());
+    }
+
+    #[test]
+    fn unterminated_section_rejected() {
+        assert!(parse("[sec").is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let m = parse("a = []").unwrap();
+        assert_eq!(m["a"], Value::Array(vec![]));
+    }
+
+    #[test]
+    fn nested_array_rejected() {
+        assert!(parse("a = [[1], [2]]").is_err());
+    }
+}

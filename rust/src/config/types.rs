@@ -1,0 +1,300 @@
+//! Typed experiment configuration, built from the parsed key/value map.
+
+use super::parse::{parse, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Which optimizer drives the separation-matrix updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    /// Vanilla EASI (Fig. 1): per-sample SGD.
+    Sgd,
+    /// The paper's contribution (Fig. 2 / Eq. 1).
+    Smbgd,
+    /// Plain mini-batch GD baseline (§IV discussion).
+    Mbgd,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sgd" => Self::Sgd,
+            "smbgd" => Self::Smbgd,
+            "mbgd" => Self::Mbgd,
+            other => bail!("unknown optimizer '{other}' (expected sgd|smbgd|mbgd)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Sgd => "sgd",
+            Self::Smbgd => "smbgd",
+            Self::Mbgd => "mbgd",
+        }
+    }
+}
+
+/// Which execution engine applies the updates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust hot path (`ica::*`).
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts via PJRT (`runtime::*`).
+    Pjrt,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "native" => Self::Native,
+            "pjrt" => Self::Pjrt,
+            other => bail!("unknown engine '{other}' (expected native|pjrt)"),
+        })
+    }
+}
+
+/// Optimizer hyperparameters (paper §IV notation).
+#[derive(Clone, Copy, Debug)]
+pub struct OptimizerConfig {
+    pub kind: OptimizerKind,
+    /// Learning rate μ.
+    pub mu: f64,
+    /// Cross-batch momentum γ (SMBGD only).
+    pub gamma: f64,
+    /// Intra-batch decay β (SMBGD only).
+    pub beta: f64,
+    /// Mini-batch size P (SMBGD / MBGD).
+    pub p: usize,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        Self { kind: OptimizerKind::Smbgd, mu: 0.002, gamma: 0.5, beta: 0.9, p: 8 }
+    }
+}
+
+/// Signal-generation settings.
+#[derive(Clone, Debug)]
+pub struct SignalConfig {
+    /// Source bank: "sub_gaussian" | "eeg".
+    pub bank: String,
+    /// Mixing model: "static" | "rotating" | "switching".
+    pub mixing: String,
+    /// Rotating-model angular velocity (rad/sample).
+    pub omega: f64,
+    /// Switching-model segment length (samples).
+    pub period: u64,
+    /// Condition-number cap for random mixing draws.
+    pub max_cond: f64,
+}
+
+impl Default for SignalConfig {
+    fn default() -> Self {
+        Self {
+            bank: "sub_gaussian".into(),
+            mixing: "static".into(),
+            omega: 1e-4,
+            period: 50_000,
+            max_cond: 10.0,
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Mixture dimensionality m.
+    pub m: usize,
+    /// Source/output dimensionality n.
+    pub n: usize,
+    pub seed: u64,
+    /// Total training samples to stream.
+    pub samples: usize,
+    /// Amari-index threshold declaring convergence.
+    pub convergence_threshold: f64,
+    pub optimizer: OptimizerConfig,
+    pub signal: SignalConfig,
+    pub engine: EngineKind,
+    /// Directory holding the AOT artifacts (PJRT engine).
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            m: 4,
+            n: 2,
+            seed: 0,
+            samples: 100_000,
+            convergence_threshold: 0.05,
+            optimizer: OptimizerConfig::default(),
+            signal: SignalConfig::default(),
+            engine: EngineKind::Native,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML-subset text; unknown keys are rejected to catch
+    /// typos in experiment files.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let map = parse(text).context("parsing experiment config")?;
+        Self::from_map(&map)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config file {path}"))?;
+        Self::from_toml(&text)
+    }
+
+    fn from_map(map: &BTreeMap<String, Value>) -> Result<Self> {
+        let mut cfg = Self::default();
+        for (key, value) in map {
+            let k = key.as_str();
+            match k {
+                "name" => cfg.name = want_str(k, value)?,
+                "m" => cfg.m = want_usize(k, value)?,
+                "n" => cfg.n = want_usize(k, value)?,
+                "seed" => cfg.seed = want_usize(k, value)? as u64,
+                "samples" => cfg.samples = want_usize(k, value)?,
+                "convergence_threshold" => cfg.convergence_threshold = want_float(k, value)?,
+                "engine" => cfg.engine = EngineKind::parse(&want_str(k, value)?)?,
+                "artifacts_dir" => cfg.artifacts_dir = want_str(k, value)?,
+                "optimizer.kind" => {
+                    cfg.optimizer.kind = OptimizerKind::parse(&want_str(k, value)?)?
+                }
+                "optimizer.mu" => cfg.optimizer.mu = want_float(k, value)?,
+                "optimizer.gamma" => cfg.optimizer.gamma = want_float(k, value)?,
+                "optimizer.beta" => cfg.optimizer.beta = want_float(k, value)?,
+                "optimizer.p" => cfg.optimizer.p = want_usize(k, value)?,
+                "signal.bank" => cfg.signal.bank = want_str(k, value)?,
+                "signal.mixing" => cfg.signal.mixing = want_str(k, value)?,
+                "signal.omega" => cfg.signal.omega = want_float(k, value)?,
+                "signal.period" => cfg.signal.period = want_usize(k, value)? as u64,
+                "signal.max_cond" => cfg.signal.max_cond = want_float(k, value)?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Check cross-field invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.n == 0 || self.m < self.n {
+            bail!("need m >= n >= 1, got m={} n={}", self.m, self.n);
+        }
+        if !(self.optimizer.mu > 0.0 && self.optimizer.mu < 1.0) {
+            bail!("mu must be in (0, 1), got {}", self.optimizer.mu);
+        }
+        if !(0.0..=1.0).contains(&self.optimizer.gamma) {
+            bail!("gamma must be in [0, 1], got {}", self.optimizer.gamma);
+        }
+        if !(0.0..=1.0).contains(&self.optimizer.beta) {
+            bail!("beta must be in (0, 1], got {}", self.optimizer.beta);
+        }
+        if self.optimizer.p == 0 {
+            bail!("mini-batch size p must be >= 1");
+        }
+        match self.signal.bank.as_str() {
+            "sub_gaussian" | "eeg" => {}
+            other => bail!("unknown signal.bank '{other}'"),
+        }
+        match self.signal.mixing.as_str() {
+            "static" | "rotating" | "switching" => {}
+            other => bail!("unknown signal.mixing '{other}'"),
+        }
+        Ok(())
+    }
+}
+
+fn want_str(key: &str, v: &Value) -> Result<String> {
+    v.as_str().map(str::to_string).with_context(|| format!("'{key}' must be a string"))
+}
+
+fn want_float(key: &str, v: &Value) -> Result<f64> {
+    v.as_float().with_context(|| format!("'{key}' must be a number"))
+}
+
+fn want_usize(key: &str, v: &Value) -> Result<usize> {
+    let i = v.as_int().with_context(|| format!("'{key}' must be an integer"))?;
+    if i < 0 {
+        bail!("'{key}' must be non-negative, got {i}");
+    }
+    Ok(i as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn full_round_trip() {
+        let doc = r#"
+            name = "table1"
+            m = 4
+            n = 2
+            seed = 7
+            samples = 50000
+            convergence_threshold = 0.05
+            engine = "native"
+
+            [optimizer]
+            kind = "smbgd"
+            mu = 0.004
+            gamma = 0.6
+            beta = 0.95
+            p = 16
+
+            [signal]
+            bank = "sub_gaussian"
+            mixing = "rotating"
+            omega = 2e-4
+        "#;
+        let cfg = ExperimentConfig::from_toml(doc).unwrap();
+        assert_eq!(cfg.name, "table1");
+        assert_eq!((cfg.m, cfg.n), (4, 2));
+        assert_eq!(cfg.optimizer.kind, OptimizerKind::Smbgd);
+        assert_eq!(cfg.optimizer.p, 16);
+        assert_eq!(cfg.signal.mixing, "rotating");
+        assert_eq!(cfg.signal.omega, 2e-4);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ExperimentConfig::from_toml("typo_key = 1").is_err());
+    }
+
+    #[test]
+    fn m_less_than_n_rejected() {
+        assert!(ExperimentConfig::from_toml("m = 2\nn = 4").is_err());
+    }
+
+    #[test]
+    fn bad_optimizer_rejected() {
+        let doc = "[optimizer]\nkind = \"adam\"";
+        assert!(ExperimentConfig::from_toml(doc).is_err());
+    }
+
+    #[test]
+    fn bad_mu_rejected() {
+        let doc = "[optimizer]\nmu = 1.5";
+        assert!(ExperimentConfig::from_toml(doc).is_err());
+    }
+
+    #[test]
+    fn engine_parse() {
+        assert_eq!(EngineKind::parse("pjrt").unwrap(), EngineKind::Pjrt);
+        assert!(EngineKind::parse("gpu").is_err());
+    }
+}

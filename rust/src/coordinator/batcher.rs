@@ -1,0 +1,120 @@
+//! Chunker: groups per-sample events into fixed-size row-major chunks for
+//! the engines — the software analogue of the paper's "one sample per
+//! clock into the pipeline" ingestion, with the chunk boundary playing the
+//! role of the mini-batch boundary.
+
+use crate::linalg::Mat64;
+
+/// Accumulates samples (rows) until a full `chunk × m` matrix is ready.
+pub struct Chunker {
+    m: usize,
+    chunk: usize,
+    buf: Vec<f64>,
+    rows: usize,
+    total: u64,
+}
+
+impl Chunker {
+    pub fn new(m: usize, chunk: usize) -> Self {
+        assert!(m >= 1 && chunk >= 1);
+        Self { m, chunk, buf: Vec::with_capacity(m * chunk), rows: 0, total: 0 }
+    }
+
+    /// Push one sample; returns a full chunk when ready.
+    pub fn push(&mut self, x: &[f64]) -> Option<Mat64> {
+        assert_eq!(x.len(), self.m, "sample dimensionality mismatch");
+        self.buf.extend_from_slice(x);
+        self.rows += 1;
+        self.total += 1;
+        if self.rows == self.chunk {
+            let mat = Mat64::from_slice(self.chunk, self.m, &self.buf);
+            self.buf.clear();
+            self.rows = 0;
+            Some(mat)
+        } else {
+            None
+        }
+    }
+
+    /// Samples currently buffered (not yet emitted).
+    pub fn pending(&self) -> usize {
+        self.rows
+    }
+
+    /// Total samples pushed over the lifetime.
+    pub fn total_pushed(&self) -> u64 {
+        self.total
+    }
+
+    /// Drain the partial tail (fewer than `chunk` rows), if any.
+    ///
+    /// The PJRT engine cannot run partial chunks (fixed-shape programs);
+    /// the server either drops the tail (recording it in the summary) or
+    /// routes it to a native fallback.
+    pub fn take_partial(&mut self) -> Option<Mat64> {
+        if self.rows == 0 {
+            return None;
+        }
+        let mat = Mat64::from_slice(self.rows, self.m, &self.buf);
+        self.buf.clear();
+        self.rows = 0;
+        Some(mat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emits_every_chunk() {
+        let mut ch = Chunker::new(2, 3);
+        assert!(ch.push(&[1.0, 2.0]).is_none());
+        assert!(ch.push(&[3.0, 4.0]).is_none());
+        let full = ch.push(&[5.0, 6.0]).expect("full chunk");
+        assert_eq!(full.shape(), (3, 2));
+        assert_eq!(full[(2, 1)], 6.0);
+        assert_eq!(ch.pending(), 0);
+    }
+
+    #[test]
+    fn preserves_order() {
+        let mut ch = Chunker::new(1, 4);
+        for i in 0..3 {
+            assert!(ch.push(&[i as f64]).is_none());
+        }
+        let full = ch.push(&[3.0]).unwrap();
+        assert_eq!(full.as_slice(), &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn partial_tail() {
+        let mut ch = Chunker::new(2, 4);
+        ch.push(&[1.0, 2.0]);
+        ch.push(&[3.0, 4.0]);
+        let tail = ch.take_partial().unwrap();
+        assert_eq!(tail.shape(), (2, 2));
+        assert!(ch.take_partial().is_none());
+        assert_eq!(ch.total_pushed(), 2);
+    }
+
+    #[test]
+    fn counts_across_chunks() {
+        let mut ch = Chunker::new(1, 2);
+        let mut chunks = 0;
+        for i in 0..10 {
+            if ch.push(&[i as f64]).is_some() {
+                chunks += 1;
+            }
+        }
+        assert_eq!(chunks, 5);
+        assert_eq!(ch.total_pushed(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "dimensionality")]
+    fn wrong_dim_panics() {
+        let mut ch = Chunker::new(3, 2);
+        ch.push(&[1.0]);
+    }
+}

@@ -1,0 +1,275 @@
+//! Execution engines: the pluggable back-ends that apply separation-matrix
+//! updates for a chunk of samples.
+//!
+//! Two engines implement the same contract and are pinned together by
+//! parity tests (`rust/tests/parity_pjrt.rs`):
+//!
+//! - [`NativeEngine`] — the pure-Rust `ica::Optimizer` hot path (per-sample
+//!   loop, models the FPGA sample-per-clock pipeline).
+//! - [`PjrtEngine`] — executes the AOT-compiled JAX/Pallas chunk programs
+//!   via PJRT (the "TPU deployment" path; no Python at runtime).
+
+use crate::config::{EngineKind, ExperimentConfig, OptimizerKind};
+use crate::ica::{self, Nonlinearity, Optimizer};
+use crate::linalg::Mat64;
+use crate::runtime::{PjrtRuntime, ProgramKind};
+use anyhow::{bail, Context, Result};
+
+/// A chunk-oriented executor of EASI updates.
+pub trait Engine {
+    /// Preferred chunk size in samples. [`NativeEngine`] accepts any
+    /// chunk; [`PjrtEngine`] requires exactly this many rows per submit.
+    fn chunk_size(&self) -> usize;
+    /// Apply updates for a row-major `len × m` chunk of samples.
+    fn submit_chunk(&mut self, xs: &Mat64) -> Result<()>;
+    /// Snapshot of the current separation matrix (n × m).
+    fn b(&self) -> Mat64;
+    /// Samples consumed so far.
+    fn samples_done(&self) -> u64;
+    /// Description for logs/reports.
+    fn describe(&self) -> String;
+    /// Install a fresh separation matrix (divergence recovery).
+    fn reset_b(&mut self, b: Mat64);
+}
+
+/// Pure-Rust engine wrapping any [`ica::Optimizer`].
+pub struct NativeEngine {
+    opt: Box<dyn Optimizer>,
+    chunk: usize,
+}
+
+impl NativeEngine {
+    pub fn new(opt: Box<dyn Optimizer>, chunk: usize) -> Self {
+        assert!(chunk >= 1);
+        Self { opt, chunk }
+    }
+
+    /// Build from an experiment config with the standard warm start.
+    pub fn from_config(cfg: &ExperimentConfig, g: Nonlinearity) -> Self {
+        let opt = ica::make_optimizer(&cfg.optimizer, cfg.n, cfg.m, g);
+        // Chunk aligned with the optimizer's mini-batch so state snapshots
+        // land on batch boundaries.
+        let chunk = match cfg.optimizer.kind {
+            OptimizerKind::Sgd => 64,
+            _ => cfg.optimizer.p.max(1) * 8,
+        };
+        Self::new(opt, chunk)
+    }
+
+    /// Access the wrapped optimizer (tests).
+    pub fn optimizer(&self) -> &dyn Optimizer {
+        self.opt.as_ref()
+    }
+}
+
+impl Engine for NativeEngine {
+    fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+
+    fn submit_chunk(&mut self, xs: &Mat64) -> Result<()> {
+        self.opt.step_batch(xs);
+        Ok(())
+    }
+
+    fn b(&self) -> Mat64 {
+        self.opt.b().clone()
+    }
+
+    fn samples_done(&self) -> u64 {
+        self.opt.samples_seen()
+    }
+
+    fn describe(&self) -> String {
+        format!("native/{}", self.opt.name())
+    }
+
+    fn reset_b(&mut self, b: Mat64) {
+        self.opt.b_mut().copy_from(&b);
+    }
+}
+
+/// PJRT engine: executes AOT chunk programs. Holds (B, Ĥ) as Rust state
+/// and threads it through successive chunk executions.
+pub struct PjrtEngine {
+    rt: PjrtRuntime,
+    program: String,
+    kind: ProgramKind,
+    chunk: usize,
+    b: Mat64,
+    hhat: Mat64,
+    mu: f64,
+    gamma: f64,
+    beta: f64,
+    samples: u64,
+}
+
+impl PjrtEngine {
+    /// Build from an experiment config, selecting the artifact program that
+    /// matches (kind, m, n) — and (P, K) for SMBGD.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Self> {
+        let mut rt = PjrtRuntime::new(&cfg.artifacts_dir)
+            .with_context(|| format!("opening artifacts dir '{}'", cfg.artifacts_dir))?;
+        let (kind, meta) = match cfg.optimizer.kind {
+            OptimizerKind::Sgd => {
+                let meta = rt
+                    .manifest()
+                    .find(ProgramKind::Sgd, cfg.m, cfg.n)
+                    .with_context(|| {
+                        format!("no sgd artifact for m={} n={}", cfg.m, cfg.n)
+                    })?
+                    .clone();
+                (ProgramKind::Sgd, meta)
+            }
+            OptimizerKind::Smbgd => {
+                // Exact P preserves the algorithm's semantics; among those
+                // prefer the largest K (amortizes per-call PJRT dispatch —
+                // EXPERIMENTS.md §Perf iteration 2). Fall back to any
+                // smbgd program with the right dims.
+                let meta = rt
+                    .manifest()
+                    .find_smbgd_largest_k(cfg.m, cfg.n, cfg.optimizer.p)
+                    .or_else(|| rt.manifest().find(ProgramKind::Smbgd, cfg.m, cfg.n))
+                    .with_context(|| {
+                        format!("no smbgd artifact for m={} n={}", cfg.m, cfg.n)
+                    })?
+                    .clone();
+                (ProgramKind::Smbgd, meta)
+            }
+            OptimizerKind::Mbgd => {
+                bail!("MBGD has no AOT artifact (native engine only)")
+            }
+        };
+        let chunk = meta.chunk_samples();
+        let name = meta.name.clone();
+        // Eagerly compile so the first submit is execute-only.
+        rt.warm_all().ok();
+        Ok(Self {
+            rt,
+            program: name,
+            kind,
+            chunk,
+            b: ica::init_b(cfg.n, cfg.m),
+            hhat: Mat64::zeros(cfg.n, cfg.n),
+            mu: cfg.optimizer.mu,
+            gamma: cfg.optimizer.gamma,
+            beta: cfg.optimizer.beta,
+            samples: 0,
+        })
+    }
+
+    /// Install an explicit initial separation matrix.
+    pub fn set_b(&mut self, b: Mat64) {
+        assert_eq!(b.shape(), self.b.shape());
+        self.b = b;
+    }
+
+    /// The artifact program driving this engine.
+    pub fn program_name(&self) -> &str {
+        &self.program
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+
+    fn submit_chunk(&mut self, xs: &Mat64) -> Result<()> {
+        anyhow::ensure!(
+            xs.rows() == self.chunk,
+            "PJRT engine needs exactly {} samples per chunk, got {}",
+            self.chunk,
+            xs.rows()
+        );
+        match self.kind {
+            ProgramKind::Sgd => {
+                self.b = self.rt.run_sgd_chunk(&self.program, &self.b, xs, self.mu)?;
+            }
+            ProgramKind::Smbgd => {
+                let out = self.rt.run_smbgd_chunk(
+                    &self.program,
+                    &self.b,
+                    &self.hhat,
+                    xs,
+                    self.gamma,
+                    self.beta,
+                    self.mu,
+                )?;
+                self.b = out.b;
+                self.hhat = out.hhat;
+            }
+            _ => bail!("engine program must be sgd or smbgd"),
+        }
+        self.samples += xs.rows() as u64;
+        Ok(())
+    }
+
+    fn b(&self) -> Mat64 {
+        self.b.clone()
+    }
+
+    fn samples_done(&self) -> u64 {
+        self.samples
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt/{} ({})", self.program, self.rt.platform())
+    }
+
+    fn reset_b(&mut self, b: Mat64) {
+        assert_eq!(b.shape(), self.b.shape());
+        self.b = b;
+        // The Eq. 1 accumulator is stale after a reset too.
+        self.hhat.fill(0.0);
+    }
+}
+
+/// Build the engine selected by the config.
+pub fn make_engine(cfg: &ExperimentConfig, g: Nonlinearity) -> Result<Box<dyn Engine>> {
+    Ok(match cfg.engine {
+        EngineKind::Native => Box::new(NativeEngine::from_config(cfg, g)),
+        EngineKind::Pjrt => Box::new(PjrtEngine::from_config(cfg)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::Pcg32;
+
+    #[test]
+    fn native_engine_tracks_optimizer() {
+        let cfg = ExperimentConfig::default();
+        let mut eng = NativeEngine::from_config(&cfg, Nonlinearity::Cube);
+        let mut rng = Pcg32::seed(1);
+        let xs = Mat64::from_fn(eng.chunk_size(), cfg.m, |_, _| rng.normal());
+        let b0 = eng.b();
+        eng.submit_chunk(&xs).unwrap();
+        assert_eq!(eng.samples_done(), eng.chunk_size() as u64);
+        assert!(eng.b().max_abs_diff(&b0) > 0.0);
+        assert!(eng.describe().starts_with("native/"));
+    }
+
+    #[test]
+    fn native_engine_chunk_flexible() {
+        let cfg = ExperimentConfig::default();
+        let mut eng = NativeEngine::from_config(&cfg, Nonlinearity::Cube);
+        let xs = Mat64::zeros(3, cfg.m); // any chunk size works
+        eng.submit_chunk(&xs).unwrap();
+        assert_eq!(eng.samples_done(), 3);
+    }
+
+    #[test]
+    fn mbgd_has_no_pjrt_engine() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.optimizer.kind = OptimizerKind::Mbgd;
+        cfg.artifacts_dir = crate::runtime::default_artifacts_dir()
+            .to_string_lossy()
+            .into_owned();
+        if !crate::runtime::artifacts_available() {
+            return; // needs `make artifacts`
+        }
+        assert!(PjrtEngine::from_config(&cfg).is_err());
+    }
+}

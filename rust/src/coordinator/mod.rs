@@ -1,0 +1,22 @@
+//! Layer-3 coordinator: the streaming orchestration of adaptive ICA.
+//!
+//! The paper's deployment model is a single device that *creates, trains,
+//! and serves* the model on a live signal stream (§I). This module is that
+//! system in software: a producer thread ingests the (simulated) signal,
+//! a bounded channel applies backpressure, the [`batcher::Chunker`] groups
+//! samples, an [`engine::Engine`] (native Rust or PJRT-compiled
+//! JAX/Pallas) applies the EASI/SMBGD updates, the [`state::StateStore`]
+//! versions B for concurrent readers, and the [`monitor::Monitor`] tracks
+//! convergence online.
+
+pub mod batcher;
+pub mod engine;
+pub mod monitor;
+pub mod server;
+pub mod state;
+
+pub use batcher::Chunker;
+pub use engine::{make_engine, Engine, NativeEngine, PjrtEngine};
+pub use monitor::{Monitor, MonitorPoint};
+pub use server::{build_stream, run_experiment, run_streaming, RunSummary, ServerOptions};
+pub use state::{Snapshot, StateStore};

@@ -1,0 +1,144 @@
+//! Online convergence monitor: tracks the Amari index of `C = B·A(t)`
+//! against the (simulation-provided) ground-truth mixing matrix, keeps the
+//! trajectory for reports, and detects convergence with the same criterion
+//! as the offline experiment driver (`ica::convergence`).
+
+use crate::ica::metrics::amari_index;
+use crate::ica::ConvergenceCriterion;
+use crate::linalg::Mat64;
+
+/// One monitor observation.
+#[derive(Clone, Copy, Debug)]
+pub struct MonitorPoint {
+    pub samples: u64,
+    pub amari: f64,
+}
+
+/// Online Amari-index tracker with convergence detection.
+pub struct Monitor {
+    criterion: ConvergenceCriterion,
+    history: Vec<MonitorPoint>,
+    streak: usize,
+    converged_at: Option<u64>,
+    streak_start: u64,
+}
+
+impl Monitor {
+    pub fn new(criterion: ConvergenceCriterion) -> Self {
+        Self {
+            criterion,
+            history: Vec::new(),
+            streak: 0,
+            converged_at: None,
+            streak_start: 0,
+        }
+    }
+
+    /// Record an observation of B against the current true mixing `a`.
+    /// Returns the Amari index.
+    pub fn record(&mut self, b: &Mat64, a: &Mat64, samples: u64) -> f64 {
+        let c = b.matmul(a);
+        let amari = amari_index(&c);
+        self.history.push(MonitorPoint { samples, amari });
+        if self.converged_at.is_none() {
+            if amari < self.criterion.threshold {
+                if self.streak == 0 {
+                    self.streak_start = samples;
+                }
+                self.streak += 1;
+                if self.streak >= self.criterion.patience {
+                    self.converged_at = Some(self.streak_start);
+                }
+            } else {
+                self.streak = 0;
+            }
+        }
+        amari
+    }
+
+    /// Reset convergence detection (e.g. after a known mixing switch) but
+    /// keep the history.
+    pub fn rearm(&mut self) {
+        self.streak = 0;
+        self.converged_at = None;
+    }
+
+    /// Sample count at which convergence was first declared.
+    pub fn converged_at(&self) -> Option<u64> {
+        self.converged_at
+    }
+
+    pub fn history(&self) -> &[MonitorPoint] {
+        &self.history
+    }
+
+    /// Latest Amari value, if any observation was recorded.
+    pub fn latest(&self) -> Option<MonitorPoint> {
+        self.history.last().copied()
+    }
+
+    /// Worst (max) Amari over the last `k` observations — used by the
+    /// adaptive-tracking experiment to quantify re-convergence dips.
+    pub fn recent_max(&self, k: usize) -> Option<f64> {
+        if self.history.is_empty() {
+            return None;
+        }
+        let start = self.history.len().saturating_sub(k);
+        self.history[start..]
+            .iter()
+            .map(|p| p.amari)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn crit() -> ConvergenceCriterion {
+        ConvergenceCriterion { threshold: 0.1, check_every: 1, patience: 2 }
+    }
+
+    #[test]
+    fn detects_convergence_streak() {
+        let mut mon = Monitor::new(crit());
+        let a = Mat64::eye(2, 2);
+        // Identity C: amari 0 < 0.1.
+        let b_good = Mat64::eye(2, 2);
+        let b_bad = Mat64::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        mon.record(&b_good, &a, 100);
+        assert!(mon.converged_at().is_none(), "patience 2 needs 2 hits");
+        mon.record(&b_bad, &a, 200); // breaks the streak
+        mon.record(&b_good, &a, 300);
+        mon.record(&b_good, &a, 400);
+        assert_eq!(mon.converged_at(), Some(300));
+    }
+
+    #[test]
+    fn rearm_clears_convergence() {
+        let mut mon = Monitor::new(crit());
+        let a = Mat64::eye(2, 2);
+        let b = Mat64::eye(2, 2);
+        mon.record(&b, &a, 1);
+        mon.record(&b, &a, 2);
+        assert!(mon.converged_at().is_some());
+        mon.rearm();
+        assert!(mon.converged_at().is_none());
+        assert_eq!(mon.history().len(), 2, "history preserved");
+    }
+
+    #[test]
+    fn recent_max_window() {
+        let mut mon = Monitor::new(crit());
+        let a = Mat64::eye(2, 2);
+        let mk = |v: f64| {
+            Mat64::from_rows(&[&[1.0, v], &[v, 1.0]])
+        };
+        for (i, v) in [0.0, 0.9, 0.1, 0.05].iter().enumerate() {
+            mon.record(&mk(*v), &a, i as u64);
+        }
+        let recent = mon.recent_max(2).unwrap();
+        let all = mon.recent_max(100).unwrap();
+        assert!(recent < all, "recent window should exclude the 0.9 spike");
+    }
+}

@@ -1,0 +1,390 @@
+//! Streaming server: the end-to-end orchestration loop.
+//!
+//! Topology (std threads + bounded channels — the channel *is* the
+//! backpressure: a slow engine stalls the producer exactly like a full
+//! input FIFO stalls the FPGA front-end):
+//!
+//! ```text
+//!   producer thread                consumer (caller thread)
+//!   MixedStream ──► SyncSender ──► Chunker ──► Engine ──► StateStore
+//!        │                                        │
+//!        └── periodic Mixing(A) events ──────► Monitor (Amari history)
+//! ```
+
+use super::batcher::Chunker;
+use super::engine::Engine;
+use super::monitor::{Monitor, MonitorPoint};
+use super::state::StateStore;
+use crate::config::ExperimentConfig;
+use crate::ica::{ConvergenceCriterion, Nonlinearity};
+use crate::linalg::Mat64;
+use crate::signal::{
+    MixedStream, Pcg32, RotatingMixing, SourceBank, StaticMixing, SwitchingMixing,
+};
+use anyhow::{bail, Context, Result};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread;
+use std::time::Instant;
+
+/// Events flowing from the producer to the consumer.
+///
+/// Samples travel in row-major *blocks* rather than per-sample `Vec`s:
+/// one allocation and one channel operation per `PRODUCER_BLOCK` samples
+/// (EXPERIMENTS.md §Perf iteration 1 — 3-4× end-to-end throughput).
+enum Event {
+    /// A block of observation samples (rows × m).
+    Batch(Mat64),
+    /// Ground-truth mixing snapshot (sent every `monitor_every` samples) —
+    /// simulation-only side channel for the monitor.
+    Mixing(Mat64),
+    /// Stream exhausted.
+    End,
+}
+
+/// Samples per producer block (amortizes channel + allocation overhead;
+/// bounded so backpressure stays responsive).
+const PRODUCER_BLOCK: usize = 256;
+
+/// Server tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerOptions {
+    /// Bounded-channel capacity (samples) — the backpressure depth.
+    pub channel_capacity: usize,
+    /// Send a mixing snapshot (and record a monitor point) every this
+    /// many samples.
+    pub monitor_every: usize,
+    /// Convergence criterion for the monitor.
+    pub criterion: ConvergenceCriterion,
+    /// Automatic gain control time constant (samples). The front-end
+    /// normalizes input power to ~1 before the separator — exactly what a
+    /// hardware deployment's input scaling does, and what keeps the cubic
+    /// nonlinearity's y⁴ terms bounded when the mixing switches abruptly.
+    /// 0 disables AGC.
+    pub agc_time_constant: usize,
+    /// Divergence guard: if any element of B exceeds this after a chunk,
+    /// the separator is reset to the warm start and the monitor re-armed
+    /// (the divergence-recovery behaviour of classical adaptive filters).
+    /// `f64::INFINITY` disables the guard.
+    pub divergence_bound: f64,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        Self {
+            channel_capacity: 4096,
+            monitor_every: 256,
+            criterion: ConvergenceCriterion::default(),
+            agc_time_constant: 2048,
+            divergence_bound: 1e4,
+        }
+    }
+}
+
+/// Streaming automatic gain control: tracks an EMA of per-channel-average
+/// sample power and scales samples to unit average power.
+pub(crate) struct Agc {
+    ema_power: f64,
+    alpha: f64,
+    primed: bool,
+}
+
+impl Agc {
+    pub(crate) fn new(time_constant: usize) -> Self {
+        Self {
+            ema_power: 1.0,
+            alpha: if time_constant == 0 { 0.0 } else { 1.0 / time_constant as f64 },
+            primed: false,
+        }
+    }
+
+    /// Normalize `x` in place; returns the gain applied.
+    pub(crate) fn apply(&mut self, x: &mut [f64]) -> f64 {
+        if self.alpha == 0.0 {
+            return 1.0;
+        }
+        let p = x.iter().map(|v| v * v).sum::<f64>() / x.len() as f64;
+        if !self.primed {
+            // Prime with the first sample so startup isn't a huge step.
+            self.ema_power = p.max(1e-12);
+            self.primed = true;
+        } else {
+            self.ema_power += self.alpha * (p - self.ema_power);
+        }
+        let gain = 1.0 / self.ema_power.max(1e-12).sqrt();
+        x.iter_mut().for_each(|v| *v *= gain);
+        gain
+    }
+}
+
+/// Outcome of a streaming run.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    /// Samples actually applied to the separator.
+    pub samples: u64,
+    /// Samples dropped as a partial tail chunk (PJRT fixed shapes).
+    pub tail_dropped: u64,
+    pub elapsed_secs: f64,
+    /// Applied samples per second (the software MIPS analogue).
+    pub throughput_sps: f64,
+    pub engine: String,
+    pub final_amari: f64,
+    pub converged_at: Option<u64>,
+    /// Times the divergence guard reset the separator.
+    pub resets: u64,
+    pub amari_history: Vec<MonitorPoint>,
+    /// Final separation matrix.
+    pub b: Mat64,
+}
+
+/// Build the `MixedStream` described by an experiment config.
+pub fn build_stream(cfg: &ExperimentConfig) -> Result<MixedStream> {
+    let mut rng = Pcg32::seed(cfg.seed);
+    let bank = match cfg.signal.bank.as_str() {
+        "sub_gaussian" => SourceBank::sub_gaussian(cfg.n),
+        "eeg" => SourceBank::eeg_like(cfg.n),
+        other => bail!("unknown signal.bank '{other}'"),
+    };
+    let mixing: Box<dyn crate::signal::MixingModel> = match cfg.signal.mixing.as_str() {
+        "static" => Box::new(StaticMixing::random(&mut rng, cfg.m, cfg.n, cfg.signal.max_cond)),
+        "rotating" => Box::new(RotatingMixing::random(
+            &mut rng,
+            cfg.m,
+            cfg.n,
+            cfg.signal.max_cond,
+            cfg.signal.omega,
+        )),
+        "switching" => Box::new(SwitchingMixing::new(
+            cfg.m,
+            cfg.n,
+            cfg.signal.period,
+            cfg.signal.max_cond,
+            cfg.seed ^ 0x5717_C41F,
+        )),
+        other => bail!("unknown signal.mixing '{other}'"),
+    };
+    Ok(MixedStream::new(bank, mixing, rng))
+}
+
+/// Run the full streaming pipeline: produce `cfg.samples` samples, apply
+/// them through `engine`, monitor convergence against the simulation's
+/// ground truth, and publish state into `state`.
+pub fn run_streaming(
+    cfg: &ExperimentConfig,
+    mut engine: Box<dyn Engine>,
+    options: ServerOptions,
+    state: &StateStore,
+) -> Result<RunSummary> {
+    let mut stream = build_stream(cfg)?;
+    let m = stream.m();
+    let total = cfg.samples;
+    let monitor_every = options.monitor_every.max(1);
+
+    // Channel capacity is expressed in samples; convert to blocks.
+    let block_capacity =
+        (options.channel_capacity.max(1)).div_ceil(PRODUCER_BLOCK).max(1);
+    let (tx, rx): (SyncSender<Event>, Receiver<Event>) = sync_channel(block_capacity);
+
+    // ---- producer -------------------------------------------------------
+    let producer = thread::spawn(move || {
+        let mut x = vec![0.0; m];
+        // Initial mixing snapshot so the monitor can evaluate early.
+        if tx.send(Event::Mixing(stream.current_mixing())).is_err() {
+            return;
+        }
+        let mut produced = 0usize;
+        let mut next_monitor = monitor_every;
+        while produced < total {
+            let rows = PRODUCER_BLOCK.min(total - produced);
+            let mut block = Mat64::zeros(rows, m);
+            for r in 0..rows {
+                stream.next_into(&mut x, None);
+                block.row_mut(r).copy_from_slice(&x);
+            }
+            produced += rows;
+            if tx.send(Event::Batch(block)).is_err() {
+                return; // consumer hung up
+            }
+            if produced >= next_monitor {
+                next_monitor += monitor_every;
+                if tx.send(Event::Mixing(stream.current_mixing())).is_err() {
+                    return;
+                }
+            }
+        }
+        let _ = tx.send(Event::End);
+    });
+
+    // ---- consumer -------------------------------------------------------
+    let mut chunker = Chunker::new(m, engine.chunk_size());
+    let mut monitor = Monitor::new(options.criterion);
+    let mut agc = Agc::new(options.agc_time_constant);
+    let mut current_a = Mat64::zeros(m, cfg.n);
+    let mut have_a = false;
+    let warm_start = crate::ica::init_b(cfg.n, cfg.m);
+    let mut resets: u64 = 0;
+    let started = Instant::now();
+
+    loop {
+        match rx.recv().context("producer channel closed unexpectedly")? {
+            Event::Batch(mut block) => {
+                for r in 0..block.rows() {
+                    agc.apply(block.row_mut(r));
+                }
+                for r in 0..block.rows() {
+                    let Some(chunk) = chunker.push(block.row(r)) else {
+                        continue;
+                    };
+                    engine.submit_chunk(&chunk)?;
+                    let b = engine.b();
+                    // Divergence guard: large-mu EASI under abrupt mixing
+                    // switches can blow up; recover like an adaptive filter.
+                    if !b.is_finite() || b.max_abs() > options.divergence_bound {
+                        engine.reset_b(warm_start.clone());
+                        monitor.rearm();
+                        resets += 1;
+                    }
+                    state.publish(engine.b(), engine.samples_done());
+                    if have_a {
+                        monitor.record(&engine.b(), &current_a, engine.samples_done());
+                    }
+                }
+            }
+            Event::Mixing(a) => {
+                current_a = a;
+                have_a = true;
+            }
+            Event::End => break,
+        }
+    }
+    producer.join().ok();
+
+    let tail = chunker.take_partial().map(|t| t.rows() as u64).unwrap_or(0);
+    let elapsed = started.elapsed().as_secs_f64();
+    let samples = engine.samples_done();
+    let final_amari = if have_a {
+        monitor.record(&engine.b(), &current_a, samples)
+    } else {
+        f64::NAN
+    };
+
+    Ok(RunSummary {
+        samples,
+        tail_dropped: tail,
+        elapsed_secs: elapsed,
+        throughput_sps: samples as f64 / elapsed.max(1e-12),
+        engine: engine.describe(),
+        final_amari,
+        converged_at: monitor.converged_at(),
+        resets,
+        amari_history: monitor.history().to_vec(),
+        b: engine.b(),
+    })
+}
+
+/// Convenience: build engine + state and run, returning the summary.
+pub fn run_experiment(cfg: &ExperimentConfig, g: Nonlinearity) -> Result<RunSummary> {
+    let engine = super::engine::make_engine(cfg, g)?;
+    let state = StateStore::new(crate::ica::init_b(cfg.n, cfg.m));
+    run_streaming(cfg, engine, ServerOptions::default(), &state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptimizerKind;
+
+    fn small_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.samples = 20_000;
+        cfg.optimizer.mu = 0.004;
+        cfg
+    }
+
+    #[test]
+    fn native_smbgd_end_to_end_converges() {
+        let cfg = small_cfg();
+        let sum = run_experiment(&cfg, Nonlinearity::Cube).unwrap();
+        assert_eq!(sum.samples + sum.tail_dropped, 20_000);
+        assert!(sum.final_amari < 0.2, "final amari {}", sum.final_amari);
+        assert!(sum.throughput_sps > 1000.0);
+        assert!(!sum.amari_history.is_empty());
+    }
+
+    #[test]
+    fn native_sgd_end_to_end() {
+        let mut cfg = small_cfg();
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        let sum = run_experiment(&cfg, Nonlinearity::Cube).unwrap();
+        assert!(sum.engine.contains("easi-sgd"));
+        assert!(sum.final_amari < 0.3, "final amari {}", sum.final_amari);
+    }
+
+    #[test]
+    fn state_store_sees_updates() {
+        let cfg = small_cfg();
+        let engine = super::super::engine::make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        let state = StateStore::new(crate::ica::init_b(cfg.n, cfg.m));
+        let _ = run_streaming(&cfg, engine, ServerOptions::default(), &state).unwrap();
+        assert!(state.version() > 10, "state should be published repeatedly");
+        assert!(state.snapshot().samples > 0);
+    }
+
+    #[test]
+    fn rotating_mixing_is_tracked() {
+        let mut cfg = small_cfg();
+        cfg.samples = 60_000;
+        cfg.optimizer.mu = 0.008;
+        cfg.signal.mixing = "rotating".into();
+        cfg.signal.omega = 1e-5;
+        let sum = run_experiment(&cfg, Nonlinearity::Cube).unwrap();
+        // adaptive EASI should keep separating while A rotates
+        assert!(sum.final_amari < 0.3, "tracking amari {}", sum.final_amari);
+    }
+
+    #[test]
+    fn agc_normalizes_power() {
+        let mut agc = Agc::new(64);
+        let mut rng = crate::signal::Pcg32::seed(1);
+        let mut mean_p = 0.0;
+        let n_samples = 5000;
+        for _ in 0..n_samples {
+            // raw power ~ 25x unit
+            let mut x = [rng.normal() * 5.0, rng.normal() * 5.0];
+            agc.apply(&mut x);
+            mean_p += (x[0] * x[0] + x[1] * x[1]) / 2.0 / n_samples as f64;
+        }
+        assert!((mean_p - 1.0).abs() < 0.1, "AGC output power {mean_p}");
+    }
+
+    #[test]
+    fn agc_disabled_is_identity() {
+        let mut agc = Agc::new(0);
+        let mut x = [3.0, -4.0];
+        let g = agc.apply(&mut x);
+        assert_eq!(g, 1.0);
+        assert_eq!(x, [3.0, -4.0]);
+    }
+
+    #[test]
+    fn agc_adapts_to_scale_jump() {
+        let mut agc = Agc::new(128);
+        let mut x = [1.0, -1.0];
+        agc.apply(&mut x);
+        // jump input scale 100x; after ~10 time constants gain settles
+        let mut last = [0.0, 0.0];
+        for _ in 0..2000 {
+            let mut x = [100.0, -100.0];
+            agc.apply(&mut x);
+            last = x;
+        }
+        let p = (last[0] * last[0] + last[1] * last[1]) / 2.0;
+        assert!((p - 1.0).abs() < 0.1, "post-jump power {p}");
+    }
+
+    #[test]
+    fn bad_bank_is_rejected() {
+        let mut cfg = small_cfg();
+        cfg.signal.bank = "nope".into();
+        assert!(build_stream(&cfg).is_err());
+    }
+}

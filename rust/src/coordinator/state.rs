@@ -1,0 +1,117 @@
+//! Versioned separation-matrix store: the coordinator's shared state.
+//!
+//! The training loop publishes B snapshots; concurrent readers (the
+//! inference path, metric reporters, state dumps) read the latest version
+//! without blocking the trainer. This mirrors the paper's deployment
+//! story — the same hardware trains and *serves* (§I: "model creation,
+//! training, and deployment in hardware").
+
+use crate::linalg::Mat64;
+use std::sync::{Arc, RwLock};
+
+/// An immutable published snapshot.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Monotonically increasing version (0 = initial).
+    pub version: u64,
+    /// Samples consumed when this snapshot was taken.
+    pub samples: u64,
+    /// The separation matrix.
+    pub b: Mat64,
+}
+
+/// Shared, versioned store of the current separation matrix.
+#[derive(Clone)]
+pub struct StateStore {
+    inner: Arc<RwLock<Snapshot>>,
+}
+
+impl StateStore {
+    pub fn new(b0: Mat64) -> Self {
+        Self { inner: Arc::new(RwLock::new(Snapshot { version: 0, samples: 0, b: b0 })) }
+    }
+
+    /// Publish a new snapshot; returns the new version.
+    pub fn publish(&self, b: Mat64, samples: u64) -> u64 {
+        let mut guard = self.inner.write().expect("state lock poisoned");
+        guard.version += 1;
+        guard.samples = samples;
+        guard.b = b;
+        guard.version
+    }
+
+    /// Latest snapshot (cloned out; readers never hold the lock long).
+    pub fn snapshot(&self) -> Snapshot {
+        self.inner.read().expect("state lock poisoned").clone()
+    }
+
+    /// Latest version number.
+    pub fn version(&self) -> u64 {
+        self.inner.read().expect("state lock poisoned").version
+    }
+
+    /// Apply the current separation matrix: `y = B x`.
+    pub fn separate(&self, x: &[f64]) -> Vec<f64> {
+        let snap = self.snapshot();
+        snap.b.matvec(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn publish_bumps_version() {
+        let st = StateStore::new(Mat64::eye(2, 4));
+        assert_eq!(st.version(), 0);
+        st.publish(Mat64::zeros(2, 4), 10);
+        assert_eq!(st.version(), 1);
+        let snap = st.snapshot();
+        assert_eq!(snap.samples, 10);
+        assert_eq!(snap.b, Mat64::zeros(2, 4));
+    }
+
+    #[test]
+    fn separate_uses_latest() {
+        let st = StateStore::new(Mat64::eye(2, 2));
+        assert_eq!(st.separate(&[3.0, 4.0]), vec![3.0, 4.0]);
+        let mut flip = Mat64::zeros(2, 2);
+        flip[(0, 1)] = 1.0;
+        flip[(1, 0)] = 1.0;
+        st.publish(flip, 1);
+        assert_eq!(st.separate(&[3.0, 4.0]), vec![4.0, 3.0]);
+    }
+
+    #[test]
+    fn concurrent_readers_and_writer() {
+        let st = StateStore::new(Mat64::eye(2, 4));
+        let writer = {
+            let st = st.clone();
+            thread::spawn(move || {
+                for i in 1..=100u64 {
+                    st.publish(Mat64::eye(2, 4), i);
+                }
+            })
+        };
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let st = st.clone();
+                thread::spawn(move || {
+                    let mut last = 0;
+                    for _ in 0..200 {
+                        let v = st.version();
+                        assert!(v >= last, "version went backwards");
+                        last = v;
+                    }
+                })
+            })
+            .collect();
+        writer.join().unwrap();
+        for r in readers {
+            r.join().unwrap();
+        }
+        assert_eq!(st.version(), 100);
+    }
+}

@@ -1,0 +1,194 @@
+//! E1 — the §V.A convergence experiment.
+//!
+//! "We run multiple instances of the same separation problem using
+//! different random initial values for the separation matrix. The number
+//! of iterations required for convergence are then averaged across
+//! different simulations and compared for the two algorithms."
+//! Paper result: SGD ≈ 4166 iterations, SMBGD ≈ 3166 (≈24% improvement).
+//!
+//! Both optimizers see the *identical* mixed stream and the identical
+//! random initial matrices; only the update rule differs.
+//!
+//! ## Comparison protocol
+//!
+//! Default (`rate_matched = false`, the paper's implicit protocol): both
+//! algorithms use the **same per-sample μ**. SMBGD's momentum term then
+//! amplifies the effective step along persistent gradient directions by
+//! `1/(1−γβ^{P−1})` while the β-weighted mini-batch averaging damps the
+//! gradient noise that would destabilize SGD at an equally-amplified
+//! rate — that combination is where the paper's ≈24% comes from.
+//!
+//! Ablation (`rate_matched = true`): SGD's μ is scaled by
+//! [`crate::ica::SmbgdParams::equivalent_sgd_mu`] to equalize the mean
+//! effective per-sample step. The improvement then collapses to ≈0% on a
+//! stationary problem — demonstrating that SMBGD's convergence win *is*
+//! its ability to run a higher effective rate stably (recorded in
+//! EXPERIMENTS.md §E1b).
+
+use crate::ica::{
+    self, run_to_convergence, ConvergenceCriterion, ConvergenceStudy, EasiSgd, Nonlinearity,
+    Smbgd, SmbgdParams,
+};
+use crate::linalg::Mat64;
+use crate::signal::{Dataset, Pcg32};
+
+/// Parameters of the E1 study.
+#[derive(Clone, Copy, Debug)]
+pub struct E1Params {
+    pub m: usize,
+    pub n: usize,
+    /// Number of random-init runs to average.
+    pub runs: usize,
+    /// Sample budget per run.
+    pub max_samples: usize,
+    pub smbgd: SmbgdParams,
+    pub criterion: ConvergenceCriterion,
+    pub seed: u64,
+    /// If true, scale SGD's mu to match SMBGD's mean effective rate
+    /// (the E1b ablation); if false (default, the paper's protocol),
+    /// both use the same per-sample mu.
+    pub rate_matched: bool,
+}
+
+impl Default for E1Params {
+    fn default() -> Self {
+        Self {
+            m: 4,
+            n: 2,
+            runs: 32,
+            max_samples: 40_000,
+            // Tuned so the SGD baseline converges in the paper's ~4k-
+            // iteration regime (the paper does not disclose its
+            // hyperparameters; the *relative* improvement is the claim).
+            smbgd: SmbgdParams { mu: 0.00068, gamma: 0.55, beta: 0.95, p: 8 },
+            criterion: ConvergenceCriterion { threshold: 0.08, check_every: 25, patience: 4 },
+            seed: 0xE1,
+            rate_matched: false,
+        }
+    }
+}
+
+/// Outcome of the E1 study.
+#[derive(Clone, Debug)]
+pub struct E1Result {
+    pub sgd: ConvergenceStudy,
+    pub smbgd: ConvergenceStudy,
+    pub sgd_mu_used: f64,
+}
+
+impl E1Result {
+    /// Relative convergence improvement of SMBGD over SGD, in percent —
+    /// the paper's headline 24%.
+    pub fn improvement_pct(&self) -> f64 {
+        let sgd = self.sgd.mean_iterations();
+        let smb = self.smbgd.mean_iterations();
+        (sgd - smb) / sgd * 100.0
+    }
+
+    /// Render the §V.A comparison.
+    pub fn render(&self) -> String {
+        format!(
+            "E1 (paper SSV.A) — iterations to convergence (mean ± std over runs)\n\
+             {:<16} {:>12} {:>10} {:>12}\n\
+             {:<16} {:>12.0} {:>10.0} {:>11.0}%\n\
+             {:<16} {:>12.0} {:>10.0} {:>11.0}%\n\
+             improvement: {:.1}%  (paper: 24%, from 4166 -> 3166)\n",
+            "optimizer", "mean iters", "std", "converged",
+            "EASI-SGD",
+            self.sgd.mean_iterations(),
+            self.sgd.std_iterations(),
+            self.sgd.convergence_rate() * 100.0,
+            "EASI-SMBGD",
+            self.smbgd.mean_iterations(),
+            self.smbgd.std_iterations(),
+            self.smbgd.convergence_rate() * 100.0,
+            self.improvement_pct(),
+        )
+    }
+}
+
+/// Normalize observations to unit average power (the front-end AGC any
+/// hardware deployment would have; EASI's stationary point assumes
+/// unit-variance inputs reach the separator).
+pub fn normalized_x(ds: &Dataset) -> Mat64 {
+    let s: f64 = ds.x.as_slice().iter().map(|v| v * v).sum();
+    let std = (s / ds.x.as_slice().len() as f64).sqrt();
+    ds.x.map(|v| v / std)
+}
+
+/// Run the full E1 study.
+pub fn e1_convergence(p: &E1Params) -> E1Result {
+    let sgd_mu = if p.rate_matched { p.smbgd.equivalent_sgd_mu() } else { p.smbgd.mu };
+    let mut sgd_runs = Vec::with_capacity(p.runs);
+    let mut smbgd_runs = Vec::with_capacity(p.runs);
+
+    for run in 0..p.runs {
+        // Fresh problem + fresh random init per run; identical for both
+        // optimizers.
+        let seed = p.seed.wrapping_add(run as u64 * 7919);
+        let ds = Dataset::standard(seed, p.m, p.n, p.max_samples);
+        let xs = normalized_x(&ds);
+        let mut rng = Pcg32::seed(seed ^ 0xB0);
+        let b0 = ica::random_init_b(&mut rng, p.n, p.m);
+
+        let mut sgd = EasiSgd::new(b0.clone(), sgd_mu, Nonlinearity::Cube);
+        sgd_runs.push(run_to_convergence(&mut sgd, &xs, &ds.a, p.criterion));
+
+        let mut smbgd = Smbgd::new(b0, p.smbgd, Nonlinearity::Cube);
+        smbgd_runs.push(run_to_convergence(&mut smbgd, &xs, &ds.a, p.criterion));
+    }
+
+    E1Result {
+        sgd: ConvergenceStudy { runs: sgd_runs },
+        smbgd: ConvergenceStudy { runs: smbgd_runs },
+        sgd_mu_used: sgd_mu,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_params() -> E1Params {
+        E1Params { runs: 8, max_samples: 30_000, ..Default::default() }
+    }
+
+    #[test]
+    fn both_optimizers_converge_mostly() {
+        let r = e1_convergence(&quick_params());
+        assert!(r.sgd.convergence_rate() >= 0.75, "sgd rate {}", r.sgd.convergence_rate());
+        assert!(
+            r.smbgd.convergence_rate() >= 0.75,
+            "smbgd rate {}",
+            r.smbgd.convergence_rate()
+        );
+    }
+
+    #[test]
+    fn smbgd_converges_faster_on_average() {
+        // The paper's direction: SMBGD < SGD iterations. With few runs the
+        // margin is noisy; require directional improvement only.
+        let r = e1_convergence(&quick_params());
+        assert!(
+            r.improvement_pct() > 0.0,
+            "SMBGD should converge faster: {}",
+            r.render()
+        );
+    }
+
+    #[test]
+    fn render_mentions_paper_numbers() {
+        let r = e1_convergence(&E1Params { runs: 2, ..quick_params() });
+        let out = r.render();
+        assert!(out.contains("4166"));
+        assert!(out.contains("improvement"));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = e1_convergence(&E1Params { runs: 3, ..quick_params() });
+        let b = e1_convergence(&E1Params { runs: 3, ..quick_params() });
+        assert_eq!(a.sgd.mean_iterations(), b.sgd.mean_iterations());
+        assert_eq!(a.smbgd.mean_iterations(), b.smbgd.mean_iterations());
+    }
+}

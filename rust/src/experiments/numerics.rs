@@ -1,0 +1,203 @@
+//! A4 / A5 — numeric-format and learning-rate-schedule ablations.
+//!
+//! A4 makes the paper's 32-bit-float-vs-prior-16-bit-fixed argument
+//! (§V.B: "our work uses 32-bit floating point variables... previous
+//! work [12] 16-bit fixed") quantitative; A5 does the same for [12]'s
+//! variable learning rate vs the paper's constant-coefficient hardware.
+
+use super::convergence_study::normalized_x;
+use crate::ica::{
+    amari_index, run_to_convergence, ConvergenceCriterion, ConvergenceStudy, EasiSgd,
+    MuSchedule, Nonlinearity, Optimizer, QFormat, QuantizedEasi, ScheduledSgd,
+};
+use crate::linalg::Mat64;
+use crate::signal::{Dataset, MixedStream, Pcg32, RotatingMixing, SourceBank};
+
+/// One row of the A4 numeric-format ablation.
+#[derive(Clone, Debug)]
+pub struct QuantRow {
+    pub label: String,
+    pub word_bits: u32,
+    /// Mean final Amari index over runs.
+    pub final_amari: f64,
+    pub convergence_rate: f64,
+}
+
+/// A4: sweep fixed-point word lengths against the f64 reference.
+pub fn a4_quantization(runs: usize, seed: u64) -> Vec<QuantRow> {
+    let criterion = ConvergenceCriterion { threshold: 0.1, check_every: 50, patience: 4 };
+    let samples = 60_000;
+    let mu = 0.004;
+
+    // (label, Some(QFormat)) — None = native float reference.
+    let formats: Vec<(String, Option<QFormat>)> = vec![
+        ("float (paper)".into(), None),
+        ("Q7.24 (32b)".into(), Some(QFormat::q32())),
+        ("Q3.16 (20b)".into(), Some(QFormat::new(3, 16))),
+        ("Q3.12 (16b)".into(), Some(QFormat::q16())),
+        ("Q3.8 (12b)".into(), Some(QFormat::new(3, 8))),
+        ("Q3.4 (8b)".into(), Some(QFormat::new(3, 4))),
+    ];
+
+    formats
+        .into_iter()
+        .map(|(label, fmt)| {
+            let mut finals = Vec::with_capacity(runs);
+            let mut reports = Vec::with_capacity(runs);
+            for run in 0..runs {
+                let s = seed.wrapping_add(run as u64 * 6151);
+                let ds = Dataset::standard(s, 4, 2, samples);
+                let xs = normalized_x(&ds);
+                let mut opt: Box<dyn Optimizer> = match fmt {
+                    None => Box::new(EasiSgd::with_identity_init(
+                        2,
+                        4,
+                        mu,
+                        Nonlinearity::Cube,
+                    )),
+                    Some(f) => Box::new(QuantizedEasi::with_identity_init(
+                        2,
+                        4,
+                        mu,
+                        Nonlinearity::Cube,
+                        f,
+                    )),
+                };
+                reports.push(run_to_convergence(opt.as_mut(), &xs, &ds.a, criterion));
+                finals.push(amari_index(&opt.b().matmul(&ds.a)));
+            }
+            let study = ConvergenceStudy { runs: reports };
+            QuantRow {
+                word_bits: fmt.map(|f| f.word_bits()).unwrap_or(64),
+                label,
+                final_amari: finals.iter().sum::<f64>() / finals.len() as f64,
+                convergence_rate: study.convergence_rate(),
+            }
+        })
+        .collect()
+}
+
+/// One row of the A5 schedule ablation.
+#[derive(Clone, Debug)]
+pub struct ScheduleRow {
+    pub label: String,
+    /// Steady-state Amari on a stationary mixture.
+    pub stationary_amari: f64,
+    /// Steady-state Amari while the mixing rotates.
+    pub tracking_amari: f64,
+}
+
+/// A5: constant vs decaying learning rates, on stationary *and* rotating
+/// mixtures (the regime split that justifies the paper's constant-μ
+/// hardware).
+pub fn a5_schedules(seed: u64) -> Vec<ScheduleRow> {
+    let schedules: Vec<(String, MuSchedule)> = vec![
+        ("constant".into(), MuSchedule::Constant { mu0: 0.01 }),
+        (
+            "inverse-decay".into(),
+            MuSchedule::InverseDecay { mu0: 0.01, tau: 20_000.0 },
+        ),
+        (
+            "step(0.5/25k)".into(),
+            MuSchedule::Step { mu0: 0.01, factor: 0.5, every: 25_000 },
+        ),
+        (
+            "decay-to-floor".into(),
+            MuSchedule::DecayToFloor { mu0: 0.01, tau: 20_000.0, floor: 0.002 },
+        ),
+    ];
+    let samples = 200_000;
+
+    schedules
+        .into_iter()
+        .map(|(label, schedule)| {
+            let stationary = steady_state(seed, samples, schedule, 0.0);
+            // Fast drift: by stream end the inverse-decay rate has fallen
+            // ~11x, below what this rotation speed needs.
+            let tracking = steady_state(seed ^ 0xFF, samples, schedule, 2e-4);
+            ScheduleRow { label, stationary_amari: stationary, tracking_amari: tracking }
+        })
+        .collect()
+}
+
+/// Steady-state Amari (mean over the last 20% of the stream) for SGD with
+/// the given schedule on a mixture rotating at `omega` (0 = stationary).
+fn steady_state(seed: u64, samples: usize, schedule: MuSchedule, omega: f64) -> f64 {
+    let (m, n) = (4, 2);
+    let mut rng = Pcg32::seed(seed);
+    let mixing = RotatingMixing::random(&mut rng, m, n, 10.0, omega.max(1e-300));
+    let bank = SourceBank::sub_gaussian(n);
+    let mut stream = MixedStream::new(bank, Box::new(mixing), rng);
+
+    let mut opt = ScheduledSgd::new(
+        EasiSgd::with_identity_init(n, m, schedule.mu_at(0), Nonlinearity::Cube),
+        schedule,
+    );
+    let mut x = vec![0.0; m];
+    // Streaming power normalization (same role as the coordinator AGC).
+    let mut ema = 1.0f64;
+    let mut acc = 0.0;
+    let mut count = 0usize;
+    let tail_start = samples * 8 / 10;
+    for t in 0..samples {
+        stream.next_into(&mut x, None);
+        let p = x.iter().map(|v| v * v).sum::<f64>() / m as f64;
+        ema += (p - ema) / 2048.0;
+        let gain = 1.0 / ema.sqrt();
+        x.iter_mut().for_each(|v| *v *= gain);
+        opt.step(&x);
+        if t >= tail_start && t % 500 == 0 {
+            let a: Mat64 = stream.current_mixing();
+            acc += amari_index(&opt.b().matmul(&a));
+            count += 1;
+        }
+    }
+    acc / count.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a4_float_beats_short_words() {
+        let rows = a4_quantization(3, 0x44);
+        let float = rows.iter().find(|r| r.label.contains("float")).unwrap();
+        let q8 = rows.iter().find(|r| r.word_bits == 8).unwrap();
+        assert!(float.final_amari < 0.1, "float reference separates");
+        assert!(
+            q8.final_amari > float.final_amari * 2.0,
+            "8-bit should be much worse: {} vs {}",
+            q8.final_amari,
+            float.final_amari
+        );
+    }
+
+    #[test]
+    fn a4_monotone_down_to_the_cliff() {
+        let rows = a4_quantization(3, 0x45);
+        // 32-bit fixed should be essentially as good as float.
+        let float = rows.iter().find(|r| r.label.contains("float")).unwrap();
+        let q32 = rows.iter().find(|r| r.word_bits == 32).unwrap();
+        assert!((q32.final_amari - float.final_amari).abs() < 0.05);
+    }
+
+    #[test]
+    fn a5_decay_wins_stationary_constant_wins_tracking() {
+        let rows = a5_schedules(0x55);
+        let constant = rows.iter().find(|r| r.label == "constant").unwrap();
+        let decay = rows.iter().find(|r| r.label == "inverse-decay").unwrap();
+        assert!(
+            decay.stationary_amari < constant.stationary_amari,
+            "decay should settle lower on stationary data: {} vs {}",
+            decay.stationary_amari,
+            constant.stationary_amari
+        );
+        assert!(
+            constant.tracking_amari < decay.tracking_amari,
+            "constant mu should track better: {} vs {}",
+            constant.tracking_amari,
+            decay.tracking_amari
+        );
+    }
+}

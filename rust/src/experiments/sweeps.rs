@@ -1,0 +1,259 @@
+//! E3 / A1 / A2 — parameter sweeps over the FPGA model and the optimizer
+//! hyperparameters.
+
+use super::convergence_study::normalized_x;
+use crate::fpga::{table1, Calib, Table1};
+use crate::ica::{
+    run_to_convergence, ConvergenceCriterion, ConvergenceStudy, Nonlinearity, Smbgd,
+    SmbgdParams,
+};
+use crate::signal::{Dataset, Pcg32};
+
+/// One row of the E3 depth sweep (the "figure" implied by §V.B's closing
+/// paragraph: throughput ∝ pipeline depth, Fmax ~constant).
+#[derive(Clone, Debug)]
+pub struct DepthRow {
+    pub m: usize,
+    pub n: usize,
+    pub depth: usize,
+    pub sgd_fmax_mhz: f64,
+    pub smbgd_fmax_mhz: f64,
+    pub sgd_mips: f64,
+    pub smbgd_mips: f64,
+    pub smbgd_alms: usize,
+    pub smbgd_dsps: usize,
+    pub smbgd_reg_bits: usize,
+}
+
+/// E3: sweep problem sizes through the full FPGA model.
+pub fn e3_depth_sweep(configs: &[(usize, usize)], calib: &Calib) -> Vec<DepthRow> {
+    configs
+        .iter()
+        .map(|&(m, n)| {
+            let t: Table1 = table1(m, n, Nonlinearity::Cube, calib);
+            DepthRow {
+                m,
+                n,
+                depth: t.depth,
+                sgd_fmax_mhz: t.sgd.timing.fmax_mhz,
+                smbgd_fmax_mhz: t.smbgd.timing.fmax_mhz,
+                sgd_mips: t.sgd.throughput_mips,
+                smbgd_mips: t.smbgd.throughput_mips,
+                smbgd_alms: t.smbgd.resources.alms,
+                smbgd_dsps: t.smbgd.resources.dsps,
+                smbgd_reg_bits: t.smbgd.resources.register_bits,
+            }
+        })
+        .collect()
+}
+
+/// Render the E3 sweep as an aligned table.
+pub fn render_depth_sweep(rows: &[DepthRow]) -> String {
+    let mut s = String::from(
+        "E3 — pipeline depth sweep (paper: depth = 10 + log2(mn); Fmax ~const; MIPS ∝ depth)\n",
+    );
+    s.push_str(&format!(
+        "{:>3} {:>3} {:>6} {:>14} {:>14} {:>12} {:>12} {:>10} {:>6} {:>10}\n",
+        "m", "n", "depth", "SGD MHz", "SMBGD MHz", "SGD MIPS", "SMBGD MIPS", "ALMs", "DSPs",
+        "reg bits"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:>3} {:>3} {:>6} {:>14.2} {:>14.2} {:>12.2} {:>12.2} {:>10} {:>6} {:>10}\n",
+            r.m,
+            r.n,
+            r.depth,
+            r.sgd_fmax_mhz,
+            r.smbgd_fmax_mhz,
+            r.sgd_mips,
+            r.smbgd_mips,
+            r.smbgd_alms,
+            r.smbgd_dsps,
+            r.smbgd_reg_bits
+        ));
+    }
+    s
+}
+
+/// One row of the A1 hyperparameter ablation.
+#[derive(Clone, Debug)]
+pub struct HyperRow {
+    pub gamma: f64,
+    pub beta: f64,
+    pub p: usize,
+    pub mean_iterations: f64,
+    pub convergence_rate: f64,
+}
+
+/// A1: SMBGD convergence as a function of (γ, β, P) on a fixed problem.
+pub fn a1_hyper_sweep(
+    gammas: &[f64],
+    betas: &[f64],
+    ps: &[usize],
+    runs: usize,
+    seed: u64,
+) -> Vec<HyperRow> {
+    let criterion = ConvergenceCriterion { threshold: 0.1, check_every: 25, patience: 4 };
+    let max_samples = 40_000;
+    let mut rows = Vec::new();
+    for &gamma in gammas {
+        for &beta in betas {
+            for &p in ps {
+                let prm = SmbgdParams { mu: 0.012, gamma, beta, p };
+                let mut results = Vec::with_capacity(runs);
+                for run in 0..runs {
+                    let s = seed.wrapping_add(run as u64 * 7919);
+                    let ds = Dataset::standard(s, 4, 2, max_samples);
+                    let xs = normalized_x(&ds);
+                    let mut rng = Pcg32::seed(s ^ 0xB0);
+                    let b0 = crate::ica::random_init_b(&mut rng, 2, 4);
+                    let mut opt = Smbgd::new(b0, prm, Nonlinearity::Cube);
+                    results.push(run_to_convergence(&mut opt, &xs, &ds.a, criterion));
+                }
+                let study = ConvergenceStudy { runs: results };
+                rows.push(HyperRow {
+                    gamma,
+                    beta,
+                    p,
+                    mean_iterations: study.mean_iterations(),
+                    convergence_rate: study.convergence_rate(),
+                });
+            }
+        }
+    }
+    rows
+}
+
+pub fn render_hyper_sweep(rows: &[HyperRow]) -> String {
+    let mut s = String::from("A1 — SMBGD hyperparameter ablation (m=4, n=2)\n");
+    s.push_str(&format!(
+        "{:>6} {:>6} {:>4} {:>12} {:>10}\n",
+        "gamma", "beta", "P", "mean iters", "conv rate"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:>6.2} {:>6.2} {:>4} {:>12.0} {:>9.0}%\n",
+            r.gamma,
+            r.beta,
+            r.p,
+            r.mean_iterations,
+            r.convergence_rate * 100.0
+        ));
+    }
+    s
+}
+
+/// One row of the A2 nonlinearity ablation.
+#[derive(Clone, Debug)]
+pub struct NonlinRow {
+    pub g: Nonlinearity,
+    pub mean_iterations: f64,
+    pub convergence_rate: f64,
+    pub smbgd_alms: usize,
+    pub smbgd_dsps: usize,
+    pub smbgd_fmax_mhz: f64,
+}
+
+/// A2: nonlinearity choice — convergence on sub-Gaussian sources AND
+/// FPGA cost (paper §V.B: cubic is cheap; tanh is the expensive legacy
+/// choice; the clock of the pipelined circuit is unaffected).
+pub fn a2_nonlinearity(runs: usize, seed: u64, calib: &Calib) -> Vec<NonlinRow> {
+    let criterion = ConvergenceCriterion { threshold: 0.1, check_every: 25, patience: 4 };
+    let max_samples = 60_000;
+    [Nonlinearity::Cube, Nonlinearity::SignedSquare, Nonlinearity::Tanh]
+        .into_iter()
+        .map(|g| {
+            let mut results = Vec::with_capacity(runs);
+            for run in 0..runs {
+                let s = seed.wrapping_add(run as u64 * 104_729);
+                let ds = Dataset::standard(s, 4, 2, max_samples);
+                let xs = normalized_x(&ds);
+                let mut rng = Pcg32::seed(s ^ 0xA2);
+                let b0 = crate::ica::random_init_b(&mut rng, 2, 4);
+                let prm = SmbgdParams { mu: 0.012, gamma: 0.55, beta: 0.9, p: 8 };
+                let mut opt = Smbgd::new(b0, prm, g);
+                results.push(run_to_convergence(&mut opt, &xs, &ds.a, criterion));
+            }
+            let study = ConvergenceStudy { runs: results };
+            let t = table1(4, 2, g, calib);
+            NonlinRow {
+                g,
+                mean_iterations: study.mean_iterations(),
+                convergence_rate: study.convergence_rate(),
+                smbgd_alms: t.smbgd.resources.alms,
+                smbgd_dsps: t.smbgd.resources.dsps,
+                smbgd_fmax_mhz: t.smbgd.timing.fmax_mhz,
+            }
+        })
+        .collect()
+}
+
+pub fn render_nonlinearity(rows: &[NonlinRow]) -> String {
+    let mut s = String::from(
+        "A2 — nonlinearity ablation (sub-Gaussian sources; FPGA cost from the model)\n",
+    );
+    s.push_str(&format!(
+        "{:>14} {:>12} {:>10} {:>10} {:>6} {:>10}\n",
+        "g(y)", "mean iters", "conv rate", "ALMs", "DSPs", "Fmax MHz"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:>14} {:>12.0} {:>9.0}% {:>10} {:>6} {:>10.2}\n",
+            r.g.name(),
+            r.mean_iterations,
+            r.convergence_rate * 100.0,
+            r.smbgd_alms,
+            r.smbgd_dsps,
+            r.smbgd_fmax_mhz
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_sweep_shapes() {
+        let rows = e3_depth_sweep(&[(2, 2), (4, 2), (8, 4)], &Calib::default());
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].depth, 12);
+        assert_eq!(rows[1].depth, 13);
+        assert_eq!(rows[2].depth, 15);
+        // Fmax roughly constant, MIPS grows with depth.
+        let f: Vec<f64> = rows.iter().map(|r| r.smbgd_fmax_mhz).collect();
+        assert!((f[0] - f[2]).abs() / f[0] < 0.2);
+        assert!(rows[2].smbgd_mips > rows[0].smbgd_mips);
+        // Resource growth with problem size.
+        assert!(rows[2].smbgd_alms > rows[1].smbgd_alms);
+    }
+
+    #[test]
+    fn hyper_sweep_runs() {
+        let rows = a1_hyper_sweep(&[0.0, 0.5], &[0.9], &[8], 3, 7);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.convergence_rate > 0.0, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn nonlinearity_cube_cheaper_than_tanh() {
+        let rows = a2_nonlinearity(2, 11, &Calib::default());
+        let cube = &rows[0];
+        let tanh = &rows[2];
+        assert!(cube.smbgd_alms < tanh.smbgd_alms);
+        // Sub-Gaussian sources: cubic converges reliably; tanh (wrong
+        // stability sign) mostly fails to converge.
+        assert!(cube.convergence_rate > 0.5);
+    }
+
+    #[test]
+    fn renders_are_nonempty() {
+        let rows = e3_depth_sweep(&[(4, 2)], &Calib::default());
+        assert!(render_depth_sweep(&rows).contains("depth"));
+        let h = a1_hyper_sweep(&[0.5], &[0.9], &[8], 2, 1);
+        assert!(render_hyper_sweep(&h).contains("gamma"));
+    }
+}

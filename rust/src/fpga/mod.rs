@@ -1,0 +1,34 @@
+//! FPGA datapath model — the substitution for the paper's Cyclone V +
+//! Quartus testbed (DESIGN.md §2).
+//!
+//! The paper's Table I numbers are properties of datapath *structure*:
+//! Fmax is set by the longest register-to-register combinational path
+//! (whole datapath for SGD, one stage for SMBGD), throughput by the
+//! initiation interval, DSP count by the multiplier bank, register count
+//! by the pipeline registers. This module reproduces those mechanisms:
+//!
+//! - [`datapath`] — the Fig. 1 / Fig. 2 architectures as operator DAGs
+//!   built from the paper's Chisel block vocabulary.
+//! - [`calib`]   — Cyclone-V-class per-operator constants (calibration
+//!   protocol documented there).
+//! - [`timing`]  — critical path, balanced re-timing, Fmax.
+//! - [`resources`] — ALM / DSP / register-bit estimation.
+//! - [`pipeline_sim`] — cycle-accurate issue simulation (stall vs II=1).
+//! - [`report`]  — renders Table I side-by-side paper-vs-model.
+
+pub mod calib;
+pub mod datapath;
+pub mod pipeline_sim;
+pub mod report;
+pub mod resources;
+pub mod timing;
+
+pub use calib::Calib;
+pub use datapath::{
+    build_easi_sgd, build_easi_smbgd, build_easi_smbgd_no_momentum, pipeline_depth, Datapath,
+    Op, OpCounts,
+};
+pub use pipeline_sim::{simulate, PipelineConfig, SimResult};
+pub use report::{table1, ArchReport, Table1};
+pub use resources::{estimate, ResourceReport};
+pub use timing::{analyze_pipelined, analyze_unpipelined, TimingReport};

@@ -1,0 +1,230 @@
+//! Cycle-accurate pipeline-issue simulation.
+//!
+//! Demonstrates the paper's §IV scheduling argument *dynamically* (the
+//! static model in `timing` gives the clock; this gives the issue
+//! behaviour):
+//!
+//! - **SGD, unpipelined** (Fig. 1 as built): one sample per (slow) clock —
+//!   the datapath *is* the cycle.
+//! - **SGD, naively pipelined**: the loop-carried dependency on B forces
+//!   a full pipeline flush between samples — initiation interval = D, so
+//!   pipelining buys *nothing* (the paper's point: "a pipelined
+//!   implementation for SGD/MBGD increases resource consumption without
+//!   considerable improvement in throughput").
+//! - **SMBGD, pipelined**: a new sample enters every cycle (II=1); only
+//!   the once-per-P B-update uses the batch boundary, which the Ĥ
+//!   accumulator hides.
+
+use super::timing::TimingReport;
+
+/// Scheduling regime of an architecture.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IssuePolicy {
+    /// One sample per clock; clock = full datapath (Fig. 1 as synthesized).
+    UnpipelinedLoop,
+    /// Pipelined datapath but loop-carried B: next sample may only enter
+    /// once the previous update has written back (II = depth).
+    PipelinedStalled,
+    /// Pipelined, no sample-rate dependency (SMBGD): II = 1.
+    PipelinedFull,
+}
+
+/// Simulation configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    pub policy: IssuePolicy,
+    /// Pipeline depth in stages (1 for unpipelined).
+    pub depth: usize,
+    /// Clock frequency driving the schedule (MHz).
+    pub fmax_mhz: f64,
+}
+
+impl PipelineConfig {
+    /// Derive the natural config for a timing report + policy.
+    pub fn from_timing(policy: IssuePolicy, timing: &TimingReport) -> Self {
+        Self { policy, depth: timing.stages, fmax_mhz: timing.fmax_mhz }
+    }
+}
+
+/// Result of simulating `samples` through the schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct SimResult {
+    pub samples: u64,
+    pub cycles: u64,
+    /// Samples accepted per cycle (the initiation rate).
+    pub issue_rate: f64,
+    /// Mean fraction of pipeline stages busy.
+    pub utilization: f64,
+    /// Wall-clock samples/second at `fmax`.
+    pub samples_per_sec: f64,
+    /// The paper's "MIPS" metric: fmax × ops-in-flight (≡ fmax × issue
+    /// rate × depth) — millions of pipeline-slot operations per second.
+    pub throughput_mips: f64,
+}
+
+/// Run the cycle-accurate issue simulation.
+///
+/// The pipeline is modeled as `depth` stage slots; a sample advances one
+/// stage per cycle. Policies differ only in when the *next* sample may
+/// enter — exactly the paper's distinction.
+pub fn simulate(cfg: &PipelineConfig, samples: u64) -> SimResult {
+    assert!(cfg.depth >= 1 && samples > 0);
+    let depth = cfg.depth;
+    // Stage occupancy: stage[i] = Some(sample id) — small and explicit;
+    // results are closed-form checkable but we *simulate* to catch
+    // off-by-ones in the policies.
+    let mut stages: Vec<Option<u64>> = vec![None; depth];
+    let mut issued: u64 = 0;
+    let mut retired: u64 = 0;
+    let mut cycles: u64 = 0;
+    let mut busy_slots: u64 = 0;
+    // For PipelinedStalled: id of the in-flight sample (if any).
+    let mut in_flight = false;
+
+    while retired < samples {
+        cycles += 1;
+        // Advance the pipe (retire from the last stage).
+        if let Some(_id) = stages[depth - 1].take() {
+            retired += 1;
+            in_flight = false;
+        }
+        for i in (1..depth).rev() {
+            if stages[i].is_none() {
+                stages[i] = stages[i - 1].take();
+            }
+        }
+        // Issue policy.
+        let may_issue = match cfg.policy {
+            IssuePolicy::UnpipelinedLoop => {
+                debug_assert_eq!(depth, 1);
+                stages[0].is_none()
+            }
+            IssuePolicy::PipelinedStalled => !in_flight,
+            IssuePolicy::PipelinedFull => stages[0].is_none(),
+        };
+        if may_issue && issued < samples && stages[0].is_none() {
+            stages[0] = Some(issued);
+            issued += 1;
+            in_flight = true;
+        }
+        busy_slots += stages.iter().filter(|s| s.is_some()).count() as u64;
+    }
+
+    let issue_rate = samples as f64 / cycles as f64;
+    let utilization = busy_slots as f64 / (cycles * depth as u64) as f64;
+    let fhz = cfg.fmax_mhz * 1e6;
+    SimResult {
+        samples,
+        cycles,
+        issue_rate,
+        utilization,
+        samples_per_sec: issue_rate * fhz,
+        throughput_mips: cfg.fmax_mhz * issue_rate * depth as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unpipelined_issues_every_cycle() {
+        let cfg = PipelineConfig {
+            policy: IssuePolicy::UnpipelinedLoop,
+            depth: 1,
+            fmax_mhz: 4.81,
+        };
+        let r = simulate(&cfg, 1000);
+        assert!((r.issue_rate - 1.0).abs() < 0.01, "II=1 at slow clock");
+        assert!((r.throughput_mips - 4.81).abs() < 0.05, "paper: 4.81 MIPS");
+    }
+
+    #[test]
+    fn stalled_pipeline_wastes_depth() {
+        // The paper's argument against pipelining SGD: II = depth.
+        let cfg = PipelineConfig {
+            policy: IssuePolicy::PipelinedStalled,
+            depth: 13,
+            fmax_mhz: 55.17,
+        };
+        let r = simulate(&cfg, 500);
+        assert!(
+            (r.issue_rate - 1.0 / 13.0).abs() < 0.01,
+            "issue rate {} should be 1/13",
+            r.issue_rate
+        );
+        assert!(r.utilization < 0.1, "stalled pipe is nearly empty");
+        // Samples/sec barely beats the unpipelined design.
+        assert!(r.samples_per_sec < 4.81e6 * 1.1);
+    }
+
+    #[test]
+    fn smbgd_pipeline_achieves_ii1() {
+        let cfg = PipelineConfig {
+            policy: IssuePolicy::PipelinedFull,
+            depth: 13,
+            fmax_mhz: 55.17,
+        };
+        let r = simulate(&cfg, 5000);
+        assert!(r.issue_rate > 0.99, "II=1: rate {}", r.issue_rate);
+        assert!(r.utilization > 0.95);
+        // The paper's headline: ≈717 MIPS.
+        assert!(
+            (r.throughput_mips - 717.2).abs() / 717.2 < 0.02,
+            "MIPS {} vs paper 717.21",
+            r.throughput_mips
+        );
+    }
+
+    #[test]
+    fn throughput_ratio_matches_paper() {
+        // Paper: 149.11× throughput improvement.
+        let sgd = simulate(
+            &PipelineConfig {
+                policy: IssuePolicy::UnpipelinedLoop,
+                depth: 1,
+                fmax_mhz: 4.81,
+            },
+            2000,
+        );
+        let smb = simulate(
+            &PipelineConfig {
+                policy: IssuePolicy::PipelinedFull,
+                depth: 13,
+                fmax_mhz: 55.17,
+            },
+            2000,
+        );
+        let ratio = smb.throughput_mips / sgd.throughput_mips;
+        assert!(
+            (ratio - 149.11).abs() / 149.11 < 0.05,
+            "throughput ratio {ratio:.1} vs paper 149.11"
+        );
+    }
+
+    #[test]
+    fn cycles_closed_form() {
+        // Full pipeline: cycles = samples + depth (fill + drain).
+        let cfg = PipelineConfig {
+            policy: IssuePolicy::PipelinedFull,
+            depth: 8,
+            fmax_mhz: 50.0,
+        };
+        let r = simulate(&cfg, 100);
+        assert_eq!(r.cycles, 100 + 8);
+    }
+
+    #[test]
+    fn stalled_cycles_closed_form() {
+        // Stalled: each sample occupies the pipe for `depth` cycles.
+        let cfg = PipelineConfig {
+            policy: IssuePolicy::PipelinedStalled,
+            depth: 5,
+            fmax_mhz: 50.0,
+        };
+        let r = simulate(&cfg, 10);
+        // Retirement happens at cycle start, so the last sample's
+        // write-back lands one cycle past samples x depth.
+        assert_eq!(r.cycles, 10 * 5 + 1);
+    }
+}

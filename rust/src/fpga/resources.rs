@@ -1,0 +1,166 @@
+//! Resource estimation: ALMs, DSP blocks, and register bits.
+//!
+//! - **DSPs**: one per variable FP multiplier (+ a small fixed base) —
+//!   structural, identical for both architectures because they share the
+//!   same multiplier bank (`datapath` tests pin this).
+//! - **ALMs**: weighted operator census × ALMs-per-adder-equivalent, with
+//!   the combinational-IP inflation factor for the unpipelined design
+//!   (calibration protocol in `calib.rs`).
+//! - **Registers**: the unpipelined design carries only control/state
+//!   bits; the pipelined design additionally pays
+//!   `boundary_crossings × word_bits` for pipeline registers plus the Ĥ
+//!   accumulator — the 22.8× register inflation of Table I.
+
+use super::calib::Calib;
+use super::datapath::{Datapath, Op};
+use super::timing::{boundary_crossings, TimingReport};
+
+/// Resource census of one synthesized architecture.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ResourceReport {
+    pub alms: usize,
+    pub dsps: usize,
+    pub register_bits: usize,
+    /// Breakdown: pipeline-register bits included in `register_bits`.
+    pub pipeline_register_bits: usize,
+    /// Breakdown: state (Ĥ) bits included in `register_bits`.
+    pub state_register_bits: usize,
+    /// Words parked in RAM-based shift registers (not counted as
+    /// register bits; reported for completeness).
+    pub ram_shift_words: usize,
+}
+
+/// Estimate resources for a datapath under the given timing (the timing
+/// report carries the stage structure that determines pipeline
+/// registers).
+pub fn estimate(dp: &Datapath, timing: &TimingReport, calib: &Calib) -> ResourceReport {
+    // ---- ALMs ----
+    let mut addeq = 0.0;
+    for node in &dp.nodes {
+        addeq += calib.addeq(&node.op);
+    }
+    let comb = if timing.stages <= 1 { calib.comb_overhead } else { 1.0 };
+    let alms = (addeq * calib.alm_per_addeq * comb).round() as usize;
+
+    // ---- DSPs ----
+    let muls = dp.nodes.iter().filter(|n| matches!(n.op, Op::Mul)).count();
+    let dsps = (muls as f64 * calib.dsp_per_mul).round() as usize + calib.dsp_base;
+
+    // ---- registers ----
+    let (reg_crossings, ram_words) = if timing.stages > 1 {
+        boundary_crossings(dp, timing, calib)
+    } else {
+        (0, 0)
+    };
+    let pipeline_register_bits =
+        ((reg_crossings * calib.word_bits) as f64 * calib.reg_utilization).round() as usize;
+    // State registers: the *persistent* Ĥ accumulator (the momentum
+    // variant's "Hhat" input). The no-momentum variant's transient "Hacc"
+    // register is counted with the pipeline registers by the crossing
+    // model, not as architectural state.
+    let hhat_inputs = dp
+        .nodes
+        .iter()
+        .filter(|n| matches!(&n.op, Op::Input(name) if name.starts_with("Hhat")))
+        .count();
+    let state_register_bits = hhat_inputs * calib.word_bits;
+
+    ResourceReport {
+        alms,
+        dsps,
+        register_bits: calib.control_reg_bits + pipeline_register_bits + state_register_bits,
+        pipeline_register_bits,
+        state_register_bits,
+        ram_shift_words: ram_words,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::datapath::{build_easi_sgd, build_easi_smbgd, pipeline_depth};
+    use crate::fpga::timing::{analyze_pipelined, analyze_unpipelined};
+    use crate::ica::Nonlinearity;
+
+    fn reports() -> (ResourceReport, ResourceReport) {
+        let c = Calib::default();
+        let sgd_dp = build_easi_sgd(4, 2, Nonlinearity::Cube);
+        let smb_dp = build_easi_smbgd(4, 2, Nonlinearity::Cube);
+        let sgd_t = analyze_unpipelined(&sgd_dp, &c);
+        let smb_t = analyze_pipelined(&smb_dp, &c, pipeline_depth(4, 2));
+        (estimate(&sgd_dp, &sgd_t, &c), estimate(&smb_dp, &smb_t, &c))
+    }
+
+    #[test]
+    fn dsps_equal_across_architectures() {
+        // Table I: 42 and 42.
+        let (sgd, smb) = reports();
+        assert_eq!(sgd.dsps, smb.dsps);
+        assert!(
+            (sgd.dsps as f64 - 42.0).abs() / 42.0 < 0.1,
+            "DSPs {} vs paper 42 (±10%)",
+            sgd.dsps
+        );
+    }
+
+    #[test]
+    fn alms_in_table1_range() {
+        // Table I: SGD 12731, SMBGD 10350 — and SMBGD *lower*.
+        let (sgd, smb) = reports();
+        assert!(
+            (sgd.alms as f64 - 12731.0).abs() / 12731.0 < 0.08,
+            "SGD ALMs {} vs paper 12731",
+            sgd.alms
+        );
+        assert!(
+            (smb.alms as f64 - 10350.0).abs() / 10350.0 < 0.08,
+            "SMBGD ALMs {} vs paper 10350",
+            smb.alms
+        );
+        assert!(smb.alms < sgd.alms, "pipelined design uses fewer ALMs");
+    }
+
+    #[test]
+    fn registers_inflate_with_pipelining() {
+        // Table I: 160 vs 3648 bits (22.8×).
+        let (sgd, smb) = reports();
+        assert_eq!(sgd.register_bits, 160, "SGD carries control bits only");
+        let ratio = smb.register_bits as f64 / sgd.register_bits as f64;
+        assert!(
+            (10.0..40.0).contains(&ratio),
+            "register ratio {ratio:.1} should be ≈22.8 (paper)"
+        );
+    }
+
+    #[test]
+    fn sgd_has_no_pipeline_registers() {
+        let (sgd, smb) = reports();
+        assert_eq!(sgd.pipeline_register_bits, 0);
+        assert!(smb.pipeline_register_bits > 0);
+        assert_eq!(smb.state_register_bits, 4 * 32, "Ĥ is n²=4 words");
+    }
+
+    #[test]
+    fn tanh_costs_more_alms_not_more_fmax_impact() {
+        // Paper §V.B: nonlinearity choice affects logic, not the clock of
+        // the pipelined circuit (depth absorbs it).
+        let c = Calib::default();
+        let cube_dp = build_easi_smbgd(4, 2, Nonlinearity::Cube);
+        let tanh_dp = build_easi_smbgd(4, 2, Nonlinearity::Tanh);
+        let d = pipeline_depth(4, 2);
+        let cube_r = estimate(&cube_dp, &analyze_pipelined(&cube_dp, &c, d), &c);
+        let tanh_r = estimate(&tanh_dp, &analyze_pipelined(&tanh_dp, &c, d), &c);
+        assert!(tanh_r.alms > cube_r.alms, "tanh is more expensive in ALMs");
+    }
+
+    #[test]
+    fn resources_scale_with_problem_size() {
+        let c = Calib::default();
+        let small = build_easi_smbgd(4, 2, Nonlinearity::Cube);
+        let large = build_easi_smbgd(8, 4, Nonlinearity::Cube);
+        let rs = estimate(&small, &analyze_pipelined(&small, &c, 13), &c);
+        let rl = estimate(&large, &analyze_pipelined(&large, &c, 15), &c);
+        assert!(rl.alms > 2 * rs.alms);
+        assert!(rl.dsps > 2 * rs.dsps);
+    }
+}

@@ -1,0 +1,267 @@
+//! Timing analysis: critical path, pipelining, and Fmax.
+//!
+//! The model captures exactly the mechanism the paper exploits:
+//!
+//! - **Fig. 1 (SGD)**: `B` is loop-carried *per sample*, so the entire
+//!   datapath is one register-to-register combinational cloud:
+//!   `T_clk = T_crit + T_reg` ⇒ the ~5 MHz clocks of prior work.
+//! - **Fig. 2 (SMBGD)**: no sample-rate loop-carried dependency; the
+//!   datapath is re-timed into `D = 10 + log₂(m·n)` balanced stages:
+//!   `T_clk = T_crit/D + T_reg` ⇒ the ~55 MHz clock of the paper.
+
+use super::calib::Calib;
+use super::datapath::Datapath;
+
+/// Static timing report for one datapath.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// Combinational critical path (ns), register to register.
+    pub critical_path_ns: f64,
+    /// Pipeline depth used (1 = unpipelined).
+    pub stages: usize,
+    /// Achievable clock period (ns) = stage delay + register overhead.
+    pub clock_period_ns: f64,
+    /// Clock frequency in MHz.
+    pub fmax_mhz: f64,
+    /// Per-node arrival times (ns) — reused by the register model.
+    pub arrival_ns: Vec<f64>,
+}
+
+/// Arrival time of every node (longest-path DP over the DAG; nodes are in
+/// topological order by construction of the builder).
+pub fn arrival_times(dp: &Datapath, calib: &Calib) -> Vec<f64> {
+    let mut arrival = vec![0.0f64; dp.nodes.len()];
+    for (i, node) in dp.nodes.iter().enumerate() {
+        let start = node
+            .preds
+            .iter()
+            .map(|&p| {
+                debug_assert!(p < i, "builder must emit nodes topologically");
+                arrival[p]
+            })
+            .fold(0.0f64, f64::max);
+        arrival[i] = start + calib.delay_ns(&node.op);
+    }
+    arrival
+}
+
+/// Critical (longest) combinational path in ns.
+pub fn critical_path_ns(dp: &Datapath, calib: &Calib) -> f64 {
+    arrival_times(dp, calib).iter().copied().fold(0.0, f64::max)
+}
+
+/// Timing for the **unpipelined** (Fig. 1 / SGD) architecture: one
+/// combinational cloud between the B-register read and write.
+pub fn analyze_unpipelined(dp: &Datapath, calib: &Calib) -> TimingReport {
+    let arrival = arrival_times(dp, calib);
+    let crit = arrival.iter().copied().fold(0.0, f64::max);
+    let period = crit + calib.reg_overhead_ns;
+    TimingReport {
+        critical_path_ns: crit,
+        stages: 1,
+        clock_period_ns: period,
+        fmax_mhz: 1000.0 / period,
+        arrival_ns: arrival,
+    }
+}
+
+/// Timing for the **pipelined** (Fig. 2 / SMBGD) architecture with the
+/// given stage count: balanced re-timing cuts the cloud into `stages`
+/// equal-delay segments.
+pub fn analyze_pipelined(dp: &Datapath, calib: &Calib, stages: usize) -> TimingReport {
+    assert!(stages >= 1);
+    let arrival = arrival_times(dp, calib);
+    let crit = arrival.iter().copied().fold(0.0, f64::max);
+    let stage_delay = crit / stages as f64;
+    let period = stage_delay + calib.reg_overhead_ns;
+    TimingReport {
+        critical_path_ns: crit,
+        stages,
+        clock_period_ns: period,
+        fmax_mhz: 1000.0 / period,
+        arrival_ns: arrival,
+    }
+}
+
+/// Count the 32-bit values crossing pipeline-stage boundaries — the
+/// structural pipeline-register estimate (consumed by `resources`).
+///
+/// A value produced at arrival time `a(u)` and consumed by node `v`
+/// (whose inputs are sampled at `a(v) − delay(v)`) must be delayed across
+/// every stage boundary in between. Synthesis maps *short* delay chains
+/// to flip-flops but converts chains longer than
+/// [`Calib::shiftreg_ram_threshold`] stages to RAM-based shift registers
+/// (Quartus ALTSHIFT_TAPS → M10K), which keep only an entry and an exit
+/// register — that is why the paper's register count (3648 bits) is far
+/// below a naive every-edge-every-boundary count.
+///
+/// Returns `(register_crossings, ram_chain_words)`.
+pub fn boundary_crossings(
+    dp: &Datapath,
+    report: &TimingReport,
+    calib: &Calib,
+) -> (usize, usize) {
+    if report.stages <= 1 {
+        return (0, 0);
+    }
+    let crit = report.critical_path_ns.max(1e-9);
+    let stage = crit / report.stages as f64;
+    let boundary_count = |produced: f64, consumed: f64| -> usize {
+        // Boundaries at k·stage for k = 1..stages-1.
+        let lo = (produced / stage).floor() as isize;
+        let hi = ((consumed - 1e-9) / stage).floor() as isize;
+        (hi - lo).max(0) as usize
+    };
+
+    let mut reg = 0usize;
+    let mut ram = 0usize;
+    let mut tally = |c: usize| {
+        if c > calib.shiftreg_ram_threshold {
+            reg += 2; // RAM shifter entry + exit registers
+            ram += c - 2;
+        } else {
+            reg += c;
+        }
+    };
+    for (i, node) in dp.nodes.iter().enumerate() {
+        let consume_at = (report.arrival_ns[i] - calib.delay_ns(&node.op)).max(0.0);
+        for &p in &node.preds {
+            tally(boundary_count(report.arrival_ns[p], consume_at));
+        }
+    }
+    // Outputs must survive to the end of the pipe.
+    for out in &dp.outputs {
+        tally(boundary_count(report.arrival_ns[out.sig], crit));
+    }
+    (reg, ram)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::datapath::{build_easi_sgd, build_easi_smbgd, pipeline_depth, Datapath};
+    use crate::ica::Nonlinearity;
+
+    fn calib() -> Calib {
+        Calib::default()
+    }
+
+    #[test]
+    fn chain_delay_accumulates() {
+        let mut dp = Datapath::new("chain");
+        let a = dp.input("a");
+        let b = dp.input("b");
+        let s = dp.add(a, b);
+        let p = dp.mul(s, b);
+        dp.output("o", p);
+        let c = calib();
+        let crit = critical_path_ns(&dp, &c);
+        assert!((crit - (c.fadd_ns + c.fmul_ns)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_ops_do_not_accumulate() {
+        let mut dp = Datapath::new("par");
+        let a = dp.input("a");
+        let b = dp.input("b");
+        let s1 = dp.add(a, b);
+        let s2 = dp.add(a, b);
+        dp.output("o1", s1);
+        dp.output("o2", s2);
+        let c = calib();
+        assert!((critical_path_ns(&dp, &c) - c.fadd_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sgd_m4n2_fmax_matches_table1() {
+        // The calibration target: paper Table I reports 4.81 MHz.
+        let dp = build_easi_sgd(4, 2, Nonlinearity::Cube);
+        let rep = analyze_unpipelined(&dp, &calib());
+        assert!(
+            (rep.fmax_mhz - 4.81).abs() / 4.81 < 0.05,
+            "SGD Fmax {:.2} MHz vs paper 4.81 (±5%)",
+            rep.fmax_mhz
+        );
+    }
+
+    #[test]
+    fn smbgd_m4n2_fmax_matches_table1() {
+        // PREDICTION (not calibrated): paper reports 55.17 MHz.
+        let dp = build_easi_smbgd(4, 2, Nonlinearity::Cube);
+        let rep = analyze_pipelined(&dp, &calib(), pipeline_depth(4, 2));
+        assert!(
+            (rep.fmax_mhz - 55.17).abs() / 55.17 < 0.10,
+            "SMBGD Fmax {:.2} MHz vs paper 55.17 (±10%)",
+            rep.fmax_mhz
+        );
+    }
+
+    #[test]
+    fn clock_ratio_matches_paper_order() {
+        // Paper: 11.46× clock improvement.
+        let c = calib();
+        let sgd = analyze_unpipelined(&build_easi_sgd(4, 2, Nonlinearity::Cube), &c);
+        let smb = analyze_pipelined(
+            &build_easi_smbgd(4, 2, Nonlinearity::Cube),
+            &c,
+            pipeline_depth(4, 2),
+        );
+        let ratio = smb.fmax_mhz / sgd.fmax_mhz;
+        assert!(
+            (9.0..14.0).contains(&ratio),
+            "clock ratio {ratio:.2} should be ≈11.46"
+        );
+    }
+
+    #[test]
+    fn fmax_constant_in_m_n_for_pipelined() {
+        // Paper §V.B: "the clock frequency will remain the same for
+        // various values of m and n" — deeper pipes absorb the wider
+        // adder trees.
+        let c = calib();
+        let f1 = analyze_pipelined(
+            &build_easi_smbgd(4, 2, Nonlinearity::Cube),
+            &c,
+            pipeline_depth(4, 2),
+        )
+        .fmax_mhz;
+        let f2 = analyze_pipelined(
+            &build_easi_smbgd(16, 8, Nonlinearity::Cube),
+            &c,
+            pipeline_depth(16, 8),
+        )
+        .fmax_mhz;
+        assert!(
+            (f1 - f2).abs() / f1 < 0.15,
+            "pipelined Fmax should be ~constant: {f1:.1} vs {f2:.1}"
+        );
+    }
+
+    #[test]
+    fn more_stages_higher_fmax() {
+        let dp = build_easi_smbgd(4, 2, Nonlinearity::Cube);
+        let c = calib();
+        let f4 = analyze_pipelined(&dp, &c, 4).fmax_mhz;
+        let f13 = analyze_pipelined(&dp, &c, 13).fmax_mhz;
+        assert!(f13 > f4);
+        // Diminishing returns: register overhead caps Fmax.
+        let f100 = analyze_pipelined(&dp, &c, 100).fmax_mhz;
+        assert!(f100 < 1000.0 / c.reg_overhead_ns);
+    }
+
+    #[test]
+    fn boundary_crossings_zero_unpipelined() {
+        let dp = build_easi_sgd(4, 2, Nonlinearity::Cube);
+        let rep = analyze_unpipelined(&dp, &calib());
+        assert_eq!(boundary_crossings(&dp, &rep, &calib()), (0, 0));
+    }
+
+    #[test]
+    fn boundary_crossings_grow_with_stages() {
+        let dp = build_easi_smbgd(4, 2, Nonlinearity::Cube);
+        let c = calib();
+        let r4 = analyze_pipelined(&dp, &c, 4);
+        let r13 = analyze_pipelined(&dp, &c, 13);
+        assert!(boundary_crossings(&dp, &r13, &c).0 > boundary_crossings(&dp, &r4, &c).0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Convergence detection and the §V.A experiment driver.
+//!
+//! The paper's convergence experiment (E1): run the same separation
+//! problem from many random initial separation matrices, count the
+//! iterations (samples) until the separator is "converged", and average.
+//! Convergence here is operationalized as the Amari index of the global
+//! matrix `C = B·A` staying below a threshold for `patience` consecutive
+//! checks (the paper does not state its criterion; this one is standard
+//! and applied identically to both optimizers, which is what the 24%
+//! relative claim needs).
+
+use super::metrics::amari_index;
+use super::Optimizer;
+use crate::linalg::Mat64;
+
+/// When do we declare convergence?
+#[derive(Clone, Copy, Debug)]
+pub struct ConvergenceCriterion {
+    /// Amari-index threshold.
+    pub threshold: f64,
+    /// Evaluate the index every this many samples.
+    pub check_every: usize,
+    /// Require this many consecutive sub-threshold checks.
+    pub patience: usize,
+}
+
+impl Default for ConvergenceCriterion {
+    fn default() -> Self {
+        Self { threshold: 0.08, check_every: 50, patience: 3 }
+    }
+}
+
+/// Outcome of one convergence run.
+#[derive(Clone, Copy, Debug)]
+pub struct ConvergenceReport {
+    /// Did the run converge within the sample budget?
+    pub converged: bool,
+    /// Samples consumed until the *first* check of the converged streak
+    /// (the paper's "number of iterations").
+    pub iterations: u64,
+    /// Amari index at the end of the run.
+    pub final_amari: f64,
+}
+
+/// Drive `opt` over the sample stream `xs` (row-major T × m) until the
+/// criterion fires, measuring the Amari index against the true mixing `a`
+/// (m × n). Returns the iterations-to-convergence report.
+pub fn run_to_convergence(
+    opt: &mut dyn Optimizer,
+    xs: &Mat64,
+    a: &Mat64,
+    criterion: ConvergenceCriterion,
+) -> ConvergenceReport {
+    let t_max = xs.rows();
+    let mut streak = 0usize;
+    let mut streak_start: u64 = 0;
+    let mut last_amari = f64::INFINITY;
+
+    for t in 0..t_max {
+        opt.step(xs.row(t));
+        if (t + 1) % criterion.check_every == 0 {
+            let c = opt.b().matmul(a);
+            last_amari = amari_index(&c);
+            if last_amari < criterion.threshold {
+                if streak == 0 {
+                    streak_start = (t + 1) as u64;
+                }
+                streak += 1;
+                if streak >= criterion.patience {
+                    return ConvergenceReport {
+                        converged: true,
+                        iterations: streak_start,
+                        final_amari: last_amari,
+                    };
+                }
+            } else {
+                streak = 0;
+            }
+        }
+    }
+    ConvergenceReport { converged: false, iterations: t_max as u64, final_amari: last_amari }
+}
+
+/// Aggregate of a multi-seed convergence study (one optimizer).
+#[derive(Clone, Debug)]
+pub struct ConvergenceStudy {
+    pub runs: Vec<ConvergenceReport>,
+}
+
+impl ConvergenceStudy {
+    /// Mean iterations over *converged* runs (the paper's statistic).
+    pub fn mean_iterations(&self) -> f64 {
+        let conv: Vec<_> = self.runs.iter().filter(|r| r.converged).collect();
+        if conv.is_empty() {
+            return f64::NAN;
+        }
+        conv.iter().map(|r| r.iterations as f64).sum::<f64>() / conv.len() as f64
+    }
+
+    /// Fraction of runs that converged within budget.
+    pub fn convergence_rate(&self) -> f64 {
+        if self.runs.is_empty() {
+            return 0.0;
+        }
+        self.runs.iter().filter(|r| r.converged).count() as f64 / self.runs.len() as f64
+    }
+
+    /// Sample standard deviation of iterations over converged runs.
+    pub fn std_iterations(&self) -> f64 {
+        let conv: Vec<f64> = self
+            .runs
+            .iter()
+            .filter(|r| r.converged)
+            .map(|r| r.iterations as f64)
+            .collect();
+        if conv.len() < 2 {
+            return 0.0;
+        }
+        let mean = conv.iter().sum::<f64>() / conv.len() as f64;
+        (conv.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / (conv.len() as f64 - 1.0))
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ica::{EasiSgd, Nonlinearity};
+    use crate::signal::Dataset;
+
+    fn normalized_x(ds: &Dataset) -> Mat64 {
+        let s: f64 = ds.x.as_slice().iter().map(|v| v * v).sum();
+        let std = (s / ds.x.as_slice().len() as f64).sqrt();
+        ds.x.map(|v| v / std)
+    }
+
+    #[test]
+    fn sgd_converges_and_reports_iterations() {
+        let ds = Dataset::standard(31, 4, 2, 80_000);
+        let xs = normalized_x(&ds);
+        let mut opt = EasiSgd::with_identity_init(2, 4, 0.004, Nonlinearity::Cube);
+        let rep = run_to_convergence(
+            &mut opt,
+            &xs,
+            &ds.a,
+            ConvergenceCriterion::default(),
+        );
+        assert!(rep.converged, "should converge: final {}", rep.final_amari);
+        assert!(rep.iterations > 100, "not instant: {}", rep.iterations);
+        assert!(rep.iterations < 80_000);
+    }
+
+    #[test]
+    fn impossible_threshold_never_converges() {
+        let ds = Dataset::standard(32, 4, 2, 2_000);
+        let xs = normalized_x(&ds);
+        let mut opt = EasiSgd::with_identity_init(2, 4, 0.004, Nonlinearity::Cube);
+        let crit = ConvergenceCriterion { threshold: 1e-12, ..Default::default() };
+        let rep = run_to_convergence(&mut opt, &xs, &ds.a, crit);
+        assert!(!rep.converged);
+        assert_eq!(rep.iterations, 2_000);
+    }
+
+    #[test]
+    fn study_statistics() {
+        let study = ConvergenceStudy {
+            runs: vec![
+                ConvergenceReport { converged: true, iterations: 100, final_amari: 0.01 },
+                ConvergenceReport { converged: true, iterations: 300, final_amari: 0.02 },
+                ConvergenceReport { converged: false, iterations: 1000, final_amari: 0.5 },
+            ],
+        };
+        assert_eq!(study.mean_iterations(), 200.0);
+        assert!((study.convergence_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((study.std_iterations() - 141.4213562).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empty_study_is_nan() {
+        let study = ConvergenceStudy { runs: vec![] };
+        assert!(study.mean_iterations().is_nan());
+        assert_eq!(study.convergence_rate(), 0.0);
+    }
+}

@@ -1,0 +1,306 @@
+//! Vanilla EASI with per-sample SGD (paper Fig. 1) — the baseline the
+//! paper's SMBGD improves on, and the native hot path of the coordinator.
+//!
+//! Per sample:
+//! ```text
+//!   y  = B x
+//!   H  = y yᵀ − I + g(y) yᵀ − y g(y)ᵀ          (relative gradient [9])
+//!   B ← B − μ H B                              (SGD step)
+//! ```
+//!
+//! The optional *normalized* form (Cardoso & Laheld eq. 31) divides the
+//! two gradient terms by `1 + μ yᵀy` and `1 + μ |yᵀg(y)|`, bounding the
+//! step size and making large-μ operation safe; the paper's hardware uses
+//! the plain form, so `normalized = false` is the default everywhere
+//! results are compared against the paper.
+
+use super::nonlinearity::Nonlinearity;
+use super::Optimizer;
+use crate::linalg::Mat64;
+
+/// Per-sample EASI SGD state + scratch (allocation-free `step`).
+pub struct EasiSgd {
+    b: Mat64,
+    mu: f64,
+    g: Nonlinearity,
+    normalized: bool,
+    samples: u64,
+    // Scratch reused across steps (hot path: zero allocations).
+    y: Vec<f64>,
+    gy: Vec<f64>,
+    h: Mat64,
+    hb: Mat64,
+}
+
+impl EasiSgd {
+    /// Create with an explicit initial separation matrix `b0` (n × m).
+    pub fn new(b0: Mat64, mu: f64, g: Nonlinearity) -> Self {
+        let (n, _m) = b0.shape();
+        assert!(mu > 0.0, "mu must be positive");
+        Self {
+            mu,
+            g,
+            normalized: false,
+            samples: 0,
+            y: vec![0.0; n],
+            gy: vec![0.0; n],
+            h: Mat64::zeros(n, n),
+            hb: Mat64::zeros(b0.rows(), b0.cols()),
+            b: b0,
+        }
+    }
+
+    /// Default initialization: scaled identity-like `B₀ = c·[I 0]` — the
+    /// standard EASI warm start (any full-rank B₀ works; random inits are
+    /// drawn by the convergence experiments).
+    pub fn with_identity_init(n: usize, m: usize, mu: f64, g: Nonlinearity) -> Self {
+        let mut b0 = Mat64::eye(n, m);
+        b0.scale(0.5);
+        Self::new(b0, mu, g)
+    }
+
+    /// Enable/disable the normalized update (see module docs).
+    pub fn set_normalized(&mut self, on: bool) {
+        self.normalized = on;
+    }
+
+    pub fn mu(&self) -> f64 {
+        self.mu
+    }
+
+    pub fn set_mu(&mut self, mu: f64) {
+        assert!(mu > 0.0);
+        self.mu = mu;
+    }
+
+    pub fn nonlinearity(&self) -> Nonlinearity {
+        self.g
+    }
+
+    /// Compute the relative gradient H(B, x) into `h_out` using the given
+    /// scratch vectors. Shared by [`EasiSgd`], [`super::Smbgd`] and
+    /// [`super::Mbgd`] so all three optimizers use the identical gradient.
+    pub fn relative_gradient(
+        b: &Mat64,
+        x: &[f64],
+        g: Nonlinearity,
+        normalized: bool,
+        mu: f64,
+        y: &mut [f64],
+        gy: &mut [f64],
+        h_out: &mut Mat64,
+    ) {
+        b.matvec_into(x, y);
+        g.apply_slice(y, gy);
+        let n = y.len();
+        // Normalization denominators (1 when disabled).
+        let (d1, d2) = if normalized {
+            let yy: f64 = y.iter().map(|v| v * v).sum();
+            let yg: f64 = y.iter().zip(gy.iter()).map(|(a, b)| a * b).sum();
+            (1.0 + mu * yy, 1.0 + mu * yg.abs())
+        } else {
+            (1.0, 1.0)
+        };
+        // H = (y yᵀ − I)/d1 + (g yᵀ − y gᵀ)/d2
+        for i in 0..n {
+            let yi = y[i];
+            let gi = gy[i];
+            let row = h_out.row_mut(i);
+            for j in 0..n {
+                row[j] = (yi * y[j]) / d1 + (gi * y[j] - yi * gy[j]) / d2;
+            }
+            row[i] -= 1.0 / d1;
+        }
+    }
+
+    /// Estimated components for the current B (inference path).
+    pub fn separate_into(&self, x: &[f64], y_out: &mut [f64]) {
+        self.b.matvec_into(x, y_out);
+    }
+}
+
+impl Optimizer for EasiSgd {
+    fn step(&mut self, x: &[f64]) {
+        Self::relative_gradient(
+            &self.b,
+            x,
+            self.g,
+            self.normalized,
+            self.mu,
+            &mut self.y,
+            &mut self.gy,
+            &mut self.h,
+        );
+        // B ← B − μ H B
+        self.h.matmul_into(&self.b, &mut self.hb);
+        self.b.axpy(-self.mu, &self.hb);
+        self.samples += 1;
+    }
+
+    fn b(&self) -> &Mat64 {
+        &self.b
+    }
+
+    fn b_mut(&mut self) -> &mut Mat64 {
+        &mut self.b
+    }
+
+    fn samples_seen(&self) -> u64 {
+        self.samples
+    }
+
+    fn name(&self) -> &'static str {
+        "easi-sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::{Dataset, Pcg32};
+    use crate::testkit::{check, Config};
+
+    fn unit_rows(t: usize, m: usize, seed: u64) -> Mat64 {
+        let mut rng = Pcg32::seed(seed);
+        Mat64::from_fn(t, m, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn step_matches_manual_computation() {
+        // Hand-check one update at (n,m)=(2,2).
+        let b0 = Mat64::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        let x = [0.5, -1.0];
+        let mu = 0.01;
+        let mut opt = EasiSgd::new(b0.clone(), mu, Nonlinearity::Cube);
+        opt.step(&x);
+
+        // y = x, g = y^3
+        let y = [0.5, -1.0];
+        let gy = [0.125, -1.0];
+        let mut h = Mat64::zeros(2, 2);
+        for i in 0..2 {
+            for j in 0..2 {
+                h[(i, j)] = y[i] * y[j] + gy[i] * y[j] - y[i] * gy[j];
+            }
+            h[(i, i)] -= 1.0;
+        }
+        let mut want = b0.clone();
+        want.axpy(-mu, &h.matmul(&b0));
+        assert!(opt.b().max_abs_diff(&want) < 1e-15);
+    }
+
+    #[test]
+    fn gradient_vanishes_for_independent_unit_output() {
+        // At a separating point with unit-variance independent outputs the
+        // *expected* gradient is ~0: check the empirical mean over many
+        // samples of an identity mixing with B = I.
+        let mut rng = Pcg32::seed(1);
+        let n = 2;
+        let b = Mat64::eye(n, n);
+        let mut acc = Mat64::zeros(n, n);
+        let mut y = vec![0.0; n];
+        let mut gy = vec![0.0; n];
+        let mut h = Mat64::zeros(n, n);
+        let t = 200_000;
+        for _ in 0..t {
+            let x = [rng.uniform_in(-1.7320508, 1.7320508), rng.rademacher()];
+            EasiSgd::relative_gradient(
+                &b, &x, Nonlinearity::Cube, false, 0.01, &mut y, &mut gy, &mut h,
+            );
+            acc.axpy(1.0 / t as f64, &h);
+        }
+        assert!(acc.max_abs() < 0.02, "E[H] should vanish, got {acc:?}");
+    }
+
+    #[test]
+    fn separates_static_mixture() {
+        let ds = Dataset::standard(3, 4, 2, 60_000);
+        let std_x = {
+            let mut s = 0.0;
+            for v in ds.x.as_slice() {
+                s += v * v;
+            }
+            (s / ds.x.as_slice().len() as f64).sqrt()
+        };
+        let mut opt = EasiSgd::with_identity_init(2, 4, 0.003, Nonlinearity::Cube);
+        let mut x = vec![0.0; 4];
+        for t in 0..ds.len() {
+            for (i, v) in ds.sample(t).iter().enumerate() {
+                x[i] = v / std_x;
+            }
+            opt.step(&x);
+        }
+        let c = opt.b().matmul(&ds.a);
+        let amari = super::super::metrics::amari_index(&c);
+        assert!(amari < 0.15, "amari {amari} after 60k samples");
+    }
+
+    #[test]
+    fn normalized_update_is_bounded() {
+        // With a huge outlier sample the plain update explodes while the
+        // normalized one stays finite and small.
+        let x_outlier = vec![100.0, -100.0, 100.0, -100.0];
+        let mut plain = EasiSgd::with_identity_init(2, 4, 0.01, Nonlinearity::Cube);
+        let mut norm = EasiSgd::with_identity_init(2, 4, 0.01, Nonlinearity::Cube);
+        norm.set_normalized(true);
+        plain.step(&x_outlier);
+        norm.step(&x_outlier);
+        assert!(plain.b().max_abs() > norm.b().max_abs());
+        assert!(norm.b().max_abs() < 10.0, "normalized step should be bounded");
+    }
+
+    #[test]
+    fn equivariance_of_convergence() {
+        // EASI's signature property (§III): the global system C = B A
+        // evolves identically for any mixing matrix A, given matched
+        // initial global state. Run two different A's with B₀ = C₀ A⁻¹
+        // and check the C trajectories coincide.
+        let mut rng = Pcg32::seed(5);
+        let n = 2;
+        let a1 = crate::signal::well_conditioned_random(&mut rng, n, n, 8.0);
+        let a2 = crate::signal::well_conditioned_random(&mut rng, n, n, 8.0);
+        let c0 = Mat64::eye(n, n);
+        let b1_0 = c0.matmul(&crate::linalg::inverse(&a1).unwrap());
+        let b2_0 = c0.matmul(&crate::linalg::inverse(&a2).unwrap());
+        let mut o1 = EasiSgd::new(b1_0, 0.005, Nonlinearity::Cube);
+        let mut o2 = EasiSgd::new(b2_0, 0.005, Nonlinearity::Cube);
+        // Identical source stream for both.
+        let mut s = vec![0.0; n];
+        let mut bank = crate::signal::SourceBank::sub_gaussian(n);
+        for _ in 0..2000 {
+            bank.next_into(&mut rng, &mut s);
+            let x1 = a1.matvec(&s);
+            let x2 = a2.matvec(&s);
+            o1.step(&x1);
+            o2.step(&x2);
+        }
+        let c1 = o1.b().matmul(&a1);
+        let c2 = o2.b().matmul(&a2);
+        assert!(
+            c1.max_abs_diff(&c2) < 1e-8,
+            "equivariance violated: {}",
+            c1.max_abs_diff(&c2)
+        );
+    }
+
+    #[test]
+    fn zero_samples_no_state_change() {
+        let opt = EasiSgd::with_identity_init(2, 4, 0.01, Nonlinearity::Cube);
+        assert_eq!(opt.samples_seen(), 0);
+        let mut want = Mat64::eye(2, 4);
+        want.scale(0.5);
+        assert_eq!(opt.b(), &want);
+    }
+
+    #[test]
+    fn b_stays_finite_under_random_stream() {
+        check("B finite under stream", Config::quick(), |rng| {
+            let x_mat = unit_rows(500, 4, rng.next_u64());
+            let mut opt = EasiSgd::with_identity_init(2, 4, 0.002, Nonlinearity::Cube);
+            for t in 0..x_mat.rows() {
+                opt.step(x_mat.row(t));
+            }
+            opt.b().is_finite()
+        });
+    }
+}

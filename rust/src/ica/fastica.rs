@@ -1,0 +1,218 @@
+//! FastICA — the nonadaptive baseline (§II, §III).
+//!
+//! Symmetric (parallel) FastICA with the kurtosis contrast `g(u) = u³`
+//! on explicitly whitened data: fixed-point iteration
+//!
+//! ```text
+//!   W⁺ᵢ = E[z g(wᵢᵀz)] − E[g'(wᵢᵀz)] wᵢ        (one Newton-like step)
+//!   W   = (W⁺ W⁺ᵀ)^{−1/2} W⁺                    (symmetric decorrelation)
+//! ```
+//!
+//! The paper contrasts EASI against FastICA on exactly one axis:
+//! FastICA converges in far fewer *batch* iterations but cannot track
+//! time-varying mixing (it needs the whole batch up front). The
+//! adaptive-tracking bench (A3) demonstrates this.
+
+use super::whiten::Whitener;
+use crate::linalg::{jacobi_eig, Mat64};
+use anyhow::{bail, Context, Result};
+use crate::signal::Pcg32;
+
+/// FastICA result.
+pub struct FastIcaResult {
+    /// Combined separation matrix (n × m): `y = B x` (includes whitening).
+    pub b: Mat64,
+    /// Rotation on whitened data (n × n).
+    pub w: Mat64,
+    /// Fixed-point iterations used.
+    pub iterations: usize,
+    /// Final convergence delta (1 − min |diag(WₖWₖ₋₁ᵀ)|).
+    pub delta: f64,
+}
+
+/// Configuration for [`fastica`].
+#[derive(Clone, Copy, Debug)]
+pub struct FastIcaParams {
+    pub max_iters: usize,
+    /// Convergence tolerance on the rotation delta.
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl Default for FastIcaParams {
+    fn default() -> Self {
+        Self { max_iters: 200, tol: 1e-6, seed: 0xFA57 }
+    }
+}
+
+/// Run symmetric FastICA on observations `x` (T × m), extracting `n`
+/// components.
+pub fn fastica(x: &Mat64, n: usize, params: FastIcaParams) -> Result<FastIcaResult> {
+    let (t, _m) = x.shape();
+    let whitener = Whitener::fit(x, n).context("fastica whitening")?;
+    let z = whitener.transform(x); // T × n
+
+    // Random orthonormal init.
+    let mut rng = Pcg32::seed(params.seed);
+    let mut w = random_orthonormal(&mut rng, n);
+
+    let mut iterations = 0;
+    let mut delta = f64::INFINITY;
+    for it in 0..params.max_iters {
+        iterations = it + 1;
+        let w_old = w.clone();
+
+        // One fixed-point step for all rows in parallel.
+        // u = Z wᵀ (T × n); g(u) = u³; g'(u) = 3u².
+        let mut w_plus = Mat64::zeros(n, n);
+        for comp in 0..n {
+            let wrow = w.row(comp).to_vec();
+            let mut e_zg = vec![0.0; n];
+            let mut e_gp = 0.0;
+            for i in 0..t {
+                let zi = z.row(i);
+                let mut u = 0.0;
+                for j in 0..n {
+                    u += wrow[j] * zi[j];
+                }
+                let gu = u * u * u;
+                e_gp += 3.0 * u * u;
+                for j in 0..n {
+                    e_zg[j] += zi[j] * gu;
+                }
+            }
+            let tf = t as f64;
+            e_gp /= tf;
+            for j in 0..n {
+                w_plus[(comp, j)] = e_zg[j] / tf - e_gp * wrow[j];
+            }
+        }
+
+        // Symmetric decorrelation: W ← (W⁺W⁺ᵀ)^{−1/2} W⁺.
+        w = symmetric_decorrelate(&w_plus)?;
+
+        // Convergence: every component direction stationary up to sign.
+        let overlap = w.matmul(&w_old.transpose());
+        delta = (0..n)
+            .map(|i| 1.0 - overlap[(i, i)].abs())
+            .fold(0.0f64, f64::max);
+        if delta < params.tol {
+            break;
+        }
+    }
+
+    let b = w.matmul(&whitener.w);
+    Ok(FastIcaResult { b, w, iterations, delta })
+}
+
+/// `(M Mᵀ)^{−1/2} M` via Jacobi eigendecomposition of the Gram matrix.
+fn symmetric_decorrelate(m: &Mat64) -> Result<Mat64> {
+    let gram = m.matmul(&m.transpose());
+    let eig = jacobi_eig(&gram)?;
+    for &ev in &eig.values {
+        if ev <= 1e-15 {
+            bail!("symmetric decorrelation: rank-deficient update");
+        }
+    }
+    let n = m.rows();
+    // (E D^{-1/2} Eᵀ) M
+    let mut d = Mat64::zeros(n, n);
+    for i in 0..n {
+        d[(i, i)] = 1.0 / eig.values[i].sqrt();
+    }
+    Ok(eig
+        .vectors
+        .matmul(&d)
+        .matmul(&eig.vectors.transpose())
+        .matmul(m))
+}
+
+/// Random orthonormal n × n matrix (Gram-Schmidt on Gaussian rows).
+fn random_orthonormal(rng: &mut Pcg32, n: usize) -> Mat64 {
+    let mut w = Mat64::zeros(n, n);
+    for i in 0..n {
+        loop {
+            let mut v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            // Project out previous rows.
+            for prev in 0..i {
+                let dot: f64 = (0..n).map(|j| v[j] * w[(prev, j)]).sum();
+                for j in 0..n {
+                    v[j] -= dot * w[(prev, j)];
+                }
+            }
+            let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-6 {
+                for j in 0..n {
+                    w[(i, j)] = v[j] / norm;
+                }
+                break;
+            }
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ica::metrics::amari_index;
+    use crate::signal::Dataset;
+
+    #[test]
+    fn separates_static_mixture() {
+        let ds = Dataset::standard(21, 4, 2, 20_000);
+        let res = fastica(&ds.x, 2, FastIcaParams::default()).unwrap();
+        let c = res.b.matmul(&ds.a);
+        let amari = amari_index(&c);
+        assert!(amari < 0.05, "fastica amari {amari}");
+    }
+
+    #[test]
+    fn converges_in_few_iterations() {
+        // The nonadaptive advantage the paper concedes (§III): FastICA
+        // needs orders of magnitude fewer iterations than adaptive EASI.
+        let ds = Dataset::standard(22, 4, 2, 20_000);
+        let res = fastica(&ds.x, 2, FastIcaParams::default()).unwrap();
+        assert!(
+            res.iterations < 50,
+            "fastica should converge fast, took {}",
+            res.iterations
+        );
+        assert!(res.delta < 1e-6);
+    }
+
+    #[test]
+    fn rotation_is_orthonormal() {
+        let ds = Dataset::standard(23, 4, 2, 10_000);
+        let res = fastica(&ds.x, 2, FastIcaParams::default()).unwrap();
+        let wwt = res.w.matmul(&res.w.transpose());
+        assert!(wwt.max_abs_diff(&Mat64::eye(2, 2)) < 1e-8);
+    }
+
+    #[test]
+    fn full_rank_separation() {
+        let ds = Dataset::standard(24, 4, 4, 40_000);
+        let res = fastica(&ds.x, 4, FastIcaParams::default()).unwrap();
+        let c = res.b.matmul(&ds.a);
+        let amari = amari_index(&c);
+        assert!(amari < 0.1, "4x4 fastica amari {amari}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = Dataset::standard(25, 4, 2, 5_000);
+        let a = fastica(&ds.x, 2, FastIcaParams::default()).unwrap();
+        let b = fastica(&ds.x, 2, FastIcaParams::default()).unwrap();
+        assert!(a.b.max_abs_diff(&b.b) < 1e-15);
+    }
+
+    #[test]
+    fn random_orthonormal_is_orthonormal() {
+        let mut rng = Pcg32::seed(1);
+        for n in 1..6 {
+            let w = random_orthonormal(&mut rng, n);
+            let wwt = w.matmul(&w.transpose());
+            assert!(wwt.max_abs_diff(&Mat64::eye(n, n)) < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Plain mini-batch gradient descent (MBGD) baseline (§IV discussion).
+//!
+//! MBGD averages the relative gradient over P samples (all evaluated at
+//! the same stale B, like SMBGD) and applies `B ← B − μ H̄ B` once per
+//! batch — *without* SMBGD's exponential intra-batch weighting or
+//! cross-batch momentum. The paper argues MBGD suits GPUs (P parallel
+//! replicas of the datapath) while SMBGD suits FPGAs (one pipelined
+//! datapath); the FPGA resource model quantifies that in
+//! `fpga::resources` (MBGD duplicates the datapath P×).
+
+use super::nonlinearity::Nonlinearity;
+use super::{EasiSgd, Optimizer};
+use crate::linalg::Mat64;
+
+/// EASI with plain mini-batch averaging.
+pub struct Mbgd {
+    b: Mat64,
+    mu: f64,
+    p: usize,
+    g: Nonlinearity,
+    samples: u64,
+    p_idx: usize,
+    /// Running sum of H over the current batch.
+    hsum: Mat64,
+    // Scratch
+    y: Vec<f64>,
+    gy: Vec<f64>,
+    h: Mat64,
+    hb: Mat64,
+}
+
+impl Mbgd {
+    pub fn new(b0: Mat64, mu: f64, p: usize, g: Nonlinearity) -> Self {
+        assert!(mu > 0.0 && p >= 1);
+        let (n, m) = b0.shape();
+        Self {
+            mu,
+            p,
+            g,
+            samples: 0,
+            p_idx: 0,
+            hsum: Mat64::zeros(n, n),
+            y: vec![0.0; n],
+            gy: vec![0.0; n],
+            h: Mat64::zeros(n, n),
+            hb: Mat64::zeros(n, m),
+            b: b0,
+        }
+    }
+
+    pub fn with_identity_init(n: usize, m: usize, mu: f64, p: usize, g: Nonlinearity) -> Self {
+        let mut b0 = Mat64::eye(n, m);
+        b0.scale(0.5);
+        Self::new(b0, mu, p, g)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.p
+    }
+}
+
+impl Optimizer for Mbgd {
+    fn step(&mut self, x: &[f64]) {
+        EasiSgd::relative_gradient(
+            &self.b,
+            x,
+            self.g,
+            false,
+            self.mu,
+            &mut self.y,
+            &mut self.gy,
+            &mut self.h,
+        );
+        self.hsum.axpy(1.0, &self.h);
+        self.p_idx += 1;
+        self.samples += 1;
+        if self.p_idx == self.p {
+            // B ← B − μ (ΣH / P) B
+            self.hsum.matmul_into(&self.b, &mut self.hb);
+            self.b.axpy(-self.mu / self.p as f64, &self.hb);
+            self.hsum.fill(0.0);
+            self.p_idx = 0;
+        }
+    }
+
+    fn b(&self) -> &Mat64 {
+        &self.b
+    }
+
+    fn b_mut(&mut self) -> &mut Mat64 {
+        &mut self.b
+    }
+
+    fn samples_seen(&self) -> u64 {
+        self.samples
+    }
+
+    fn name(&self) -> &'static str {
+        "easi-mbgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::{Dataset, Pcg32};
+
+    #[test]
+    fn p1_equals_sgd() {
+        let mut rng = Pcg32::seed(1);
+        let b0 = Mat64::from_fn(2, 4, |_, _| rng.normal() * 0.3);
+        let mut mbgd = Mbgd::new(b0.clone(), 0.004, 1, Nonlinearity::Cube);
+        let mut sgd = EasiSgd::new(b0, 0.004, Nonlinearity::Cube);
+        for _ in 0..100 {
+            let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+            mbgd.step(&x);
+            sgd.step(&x);
+        }
+        assert!(mbgd.b().max_abs_diff(sgd.b()) < 1e-12);
+    }
+
+    #[test]
+    fn update_is_batch_average() {
+        let mut rng = Pcg32::seed(2);
+        let b0 = Mat64::from_fn(2, 4, |_, _| rng.normal() * 0.3);
+        let xs: Vec<Vec<f64>> =
+            (0..4).map(|_| (0..4).map(|_| rng.normal()).collect()).collect();
+        let mu = 0.01;
+        let mut opt = Mbgd::new(b0.clone(), mu, 4, Nonlinearity::Cube);
+        for x in &xs {
+            opt.step(x);
+        }
+        // Oracle: average H at stale B, single update.
+        let n = 2;
+        let mut y = vec![0.0; n];
+        let mut gy = vec![0.0; n];
+        let mut h = Mat64::zeros(n, n);
+        let mut havg = Mat64::zeros(n, n);
+        for x in &xs {
+            EasiSgd::relative_gradient(
+                &b0, x, Nonlinearity::Cube, false, mu, &mut y, &mut gy, &mut h,
+            );
+            havg.axpy(0.25, &h);
+        }
+        let mut want = b0.clone();
+        want.axpy(-mu, &havg.matmul(&b0));
+        assert!(opt.b().max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn b_frozen_within_batch() {
+        let mut rng = Pcg32::seed(3);
+        let mut opt = Mbgd::with_identity_init(2, 4, 0.01, 8, Nonlinearity::Cube);
+        let before = opt.b().clone();
+        for _ in 0..7 {
+            let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+            opt.step(&x);
+        }
+        assert_eq!(opt.b(), &before);
+    }
+
+    #[test]
+    fn separates_static_mixture() {
+        let ds = Dataset::standard(11, 4, 2, 80_000);
+        let std_x = {
+            let s: f64 = ds.x.as_slice().iter().map(|v| v * v).sum();
+            (s / ds.x.as_slice().len() as f64).sqrt()
+        };
+        let mut opt = Mbgd::with_identity_init(2, 4, 0.02, 8, Nonlinearity::Cube);
+        let mut x = vec![0.0; 4];
+        for t in 0..ds.len() {
+            for (i, v) in ds.sample(t).iter().enumerate() {
+                x[i] = v / std_x;
+            }
+            opt.step(&x);
+        }
+        let c = opt.b().matmul(&ds.a);
+        let amari = super::super::metrics::amari_index(&c);
+        assert!(amari < 0.2, "amari {amari}");
+    }
+}

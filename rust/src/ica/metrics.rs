@@ -1,0 +1,253 @@
+//! Separation-quality metrics.
+//!
+//! All metrics operate on the **global matrix** `C = B·A` (n × n): perfect
+//! separation makes C a scaled permutation matrix. The convergence
+//! experiments (E1) and the adaptive-tracking bench (A3) use the Amari
+//! index; SIR is reported by the examples for interpretability.
+
+use crate::linalg::Mat64;
+
+/// Amari performance index of the global matrix `C = B A`.
+///
+/// ```text
+///   PI(C) = 1/(2n(n−1)) · [ Σᵢ ( Σⱼ |cᵢⱼ| / maxⱼ|cᵢⱼ| − 1 )
+///                         + Σⱼ ( Σᵢ |cᵢⱼ| / maxᵢ|cᵢⱼ| − 1 ) ]
+/// ```
+///
+/// 0 for a scaled permutation (perfect separation); O(1) for a random C.
+/// Mirrors `ref.amari_index` in the Python oracle.
+pub fn amari_index(c: &Mat64) -> f64 {
+    let n = c.rows();
+    assert_eq!(c.cols(), n, "amari_index needs square C (global matrix)");
+    assert!(n >= 2, "amari_index undefined for n < 2");
+
+    let mut total = 0.0;
+    // Row term.
+    for i in 0..n {
+        let row = c.row(i);
+        let max = row.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+        if max == 0.0 {
+            return f64::INFINITY; // degenerate: a source is lost entirely
+        }
+        let sum: f64 = row.iter().map(|v| v.abs()).sum();
+        total += sum / max - 1.0;
+    }
+    // Column term.
+    for j in 0..n {
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        for i in 0..n {
+            let v = c[(i, j)].abs();
+            max = max.max(v);
+            sum += v;
+        }
+        if max == 0.0 {
+            return f64::INFINITY;
+        }
+        total += sum / max - 1.0;
+    }
+    total / (2.0 * n as f64 * (n as f64 - 1.0))
+}
+
+/// Inter-symbol-interference index: like Amari but normalizing by the
+/// total power rather than row sums — another standard BSS metric.
+pub fn isi(c: &Mat64) -> f64 {
+    let n = c.rows();
+    assert_eq!(c.cols(), n);
+    let mut total = 0.0;
+    for i in 0..n {
+        let row = c.row(i);
+        let max2 = row.iter().fold(0.0f64, |m, v| m.max(v * v));
+        if max2 == 0.0 {
+            return f64::INFINITY;
+        }
+        let sum2: f64 = row.iter().map(|v| v * v).sum();
+        total += sum2 / max2 - 1.0;
+    }
+    for j in 0..n {
+        let col = c.col(j);
+        let max2 = col.iter().fold(0.0f64, |m, v| m.max(v * v));
+        if max2 == 0.0 {
+            return f64::INFINITY;
+        }
+        let sum2: f64 = col.iter().map(|v| v * v).sum();
+        total += sum2 / max2 - 1.0;
+    }
+    total / (2.0 * n as f64 * (n as f64 - 1.0))
+}
+
+/// Mean signal-to-interference ratio (dB) across recovered components:
+/// for each row of C, the power of the dominant entry over the rest.
+pub fn sir_db(c: &Mat64) -> f64 {
+    let n = c.rows();
+    assert_eq!(c.cols(), n);
+    let mut acc = 0.0;
+    for i in 0..n {
+        let row = c.row(i);
+        let max2 = row.iter().fold(0.0f64, |m, v| m.max(v * v));
+        let sum2: f64 = row.iter().map(|v| v * v).sum();
+        let interference = (sum2 - max2).max(1e-300);
+        acc += 10.0 * (max2 / interference).log10();
+    }
+    acc / n as f64
+}
+
+/// Greedy permutation-and-sign matching between recovered signals `y`
+/// (T × n) and ground truth `s` (T × n): returns mean |corr| over matched
+/// pairs ∈ [0, 1]. Used by the examples to report "how much of each
+/// source was recovered" without access to A.
+pub fn matched_abs_correlation(y: &Mat64, s: &Mat64) -> f64 {
+    assert_eq!(y.rows(), s.rows(), "matched correlation: sample counts differ");
+    let n = y.cols().min(s.cols());
+    let t = y.rows() as f64;
+
+    // Column means/stds.
+    let stats = |m: &Mat64, j: usize| -> (f64, f64) {
+        let mut mean = 0.0;
+        for i in 0..m.rows() {
+            mean += m[(i, j)];
+        }
+        mean /= t;
+        let mut var = 0.0;
+        for i in 0..m.rows() {
+            var += (m[(i, j)] - mean).powi(2);
+        }
+        (mean, (var / t).sqrt().max(1e-300))
+    };
+
+    // |corr| matrix.
+    let mut corr = Mat64::zeros(n, n);
+    for a in 0..n {
+        let (my, sy) = stats(y, a);
+        for b in 0..n {
+            let (ms, ss) = stats(s, b);
+            let mut c = 0.0;
+            for i in 0..y.rows() {
+                c += (y[(i, a)] - my) * (s[(i, b)] - ms);
+            }
+            corr[(a, b)] = (c / t / (sy * ss)).abs();
+        }
+    }
+
+    // Greedy assignment (n ≤ 16: fine vs Hungarian).
+    let mut used_y = vec![false; n];
+    let mut used_s = vec![false; n];
+    let mut total = 0.0;
+    for _ in 0..n {
+        let mut best = (0, 0, -1.0);
+        for a in 0..n {
+            if used_y[a] {
+                continue;
+            }
+            for b in 0..n {
+                if used_s[b] {
+                    continue;
+                }
+                if corr[(a, b)] > best.2 {
+                    best = (a, b, corr[(a, b)]);
+                }
+            }
+        }
+        used_y[best.0] = true;
+        used_s[best.1] = true;
+        total += best.2;
+    }
+    total / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::Pcg32;
+    use crate::testkit::{check, Config};
+
+    #[test]
+    fn amari_zero_for_identity() {
+        assert!(amari_index(&Mat64::eye(3, 3)) < 1e-12);
+    }
+
+    #[test]
+    fn amari_zero_for_scaled_permutation() {
+        // C = scaled permutation with sign flips.
+        let c = Mat64::from_rows(&[
+            &[0.0, -2.5, 0.0],
+            &[0.7, 0.0, 0.0],
+            &[0.0, 0.0, 3.0],
+        ]);
+        assert!(amari_index(&c) < 1e-12);
+        assert!(isi(&c) < 1e-12);
+    }
+
+    #[test]
+    fn amari_positive_for_mixing() {
+        let c = Mat64::from_rows(&[&[1.0, 0.5], &[0.5, 1.0]]);
+        let a = amari_index(&c);
+        assert!(a > 0.4, "amari {a}");
+    }
+
+    #[test]
+    fn amari_invariant_to_permutation_and_sign() {
+        // (General row *scaling* is not an invariance of the index — only
+        // permutations and sign flips are; scaled permutations still map
+        // to exactly 0 because each row/col has a single nonzero.)
+        check("amari perm/sign invariant", Config::quick(), |rng| {
+            let n = 3;
+            let c = Mat64::from_fn(n, n, |_, _| rng.normal());
+            let base = amari_index(&c);
+            let signs = [1.0, -1.0, -1.0];
+            let c2 = Mat64::from_fn(n, n, |i, j| c[((i + 1) % n, j)] * signs[i]);
+            (amari_index(&c2) - base).abs() < 1e-12
+        });
+    }
+
+    #[test]
+    fn amari_worst_case_uniform_matrix() {
+        let n = 4;
+        let c = Mat64::from_fn(n, n, |_, _| 1.0);
+        // Every row sums to n with max 1 ⇒ index = (n−1)·2n/(2n(n−1)) = 1.
+        assert!((amari_index(&c) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn amari_degenerate_row_is_infinite() {
+        let c = Mat64::from_rows(&[&[0.0, 0.0], &[1.0, 1.0]]);
+        assert!(amari_index(&c).is_infinite());
+    }
+
+    #[test]
+    fn sir_large_for_separation() {
+        let c = Mat64::from_rows(&[&[1.0, 1e-4], &[1e-4, -2.0]]);
+        assert!(sir_db(&c) > 60.0);
+        let mixed = Mat64::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        assert!(sir_db(&mixed) < 1.0);
+    }
+
+    #[test]
+    fn matched_correlation_perfect_for_permuted_scaled_copy() {
+        let mut rng = Pcg32::seed(3);
+        let t = 500;
+        let s = Mat64::from_fn(t, 2, |_, _| rng.normal());
+        // y = swapped and scaled copy of s
+        let y = Mat64::from_fn(t, 2, |i, j| if j == 0 { -3.0 * s[(i, 1)] } else { 0.5 * s[(i, 0)] });
+        let c = matched_abs_correlation(&y, &s);
+        assert!(c > 0.999, "corr {c}");
+    }
+
+    #[test]
+    fn matched_correlation_low_for_independent() {
+        let mut rng = Pcg32::seed(4);
+        let t = 2000;
+        let s = Mat64::from_fn(t, 2, |_, _| rng.normal());
+        let y = Mat64::from_fn(t, 2, |_, _| rng.normal());
+        let c = matched_abs_correlation(&y, &s);
+        assert!(c < 0.1, "corr {c}");
+    }
+
+    #[test]
+    fn isi_agrees_with_amari_on_ranking() {
+        let good = Mat64::from_rows(&[&[1.0, 0.1], &[-0.1, 1.0]]);
+        let bad = Mat64::from_rows(&[&[1.0, 0.8], &[0.9, 1.0]]);
+        assert!(amari_index(&good) < amari_index(&bad));
+        assert!(isi(&good) < isi(&bad));
+    }
+}

@@ -1,0 +1,160 @@
+//! ICA algorithm library: EASI (SGD / SMBGD / MBGD), the FastICA
+//! baseline, whitening, nonlinearities, metrics, and convergence drivers.
+//!
+//! This is the native-Rust implementation of the paper's algorithm family
+//! (the PJRT engine in `runtime`/`coordinator` executes the same math from
+//! AOT-compiled JAX/Pallas artifacts; parity tests pin the two together).
+//!
+//! The central abstraction is [`Optimizer`]: a streaming separation-matrix
+//! learner fed one sample at a time — exactly the interface the paper's
+//! hardware exposes (one sample per clock into the pipeline).
+
+pub mod convergence;
+pub mod easi;
+pub mod fastica;
+pub mod mbgd;
+pub mod metrics;
+pub mod nonlinearity;
+pub mod quant;
+pub mod schedule;
+pub mod smbgd;
+pub mod whiten;
+
+pub use convergence::{
+    run_to_convergence, ConvergenceCriterion, ConvergenceReport, ConvergenceStudy,
+};
+pub use easi::EasiSgd;
+pub use fastica::{fastica, FastIcaParams, FastIcaResult};
+pub use mbgd::Mbgd;
+pub use metrics::{amari_index, isi, matched_abs_correlation, sir_db};
+pub use nonlinearity::Nonlinearity;
+pub use quant::{QFormat, QuantizedEasi};
+pub use schedule::{MuSchedule, ScheduledSgd};
+pub use smbgd::{Smbgd, SmbgdParams};
+pub use whiten::Whitener;
+
+use crate::config::{OptimizerConfig, OptimizerKind};
+use crate::linalg::Mat64;
+
+/// A streaming separation-matrix learner (the paper's training datapath).
+///
+/// One `step` consumes one observation sample `x` (length m). The current
+/// estimate is `b()` (n × m); estimated components are `y = B x`.
+pub trait Optimizer: Send {
+    /// Consume one sample, possibly updating the separation matrix.
+    fn step(&mut self, x: &[f64]);
+    /// Current separation matrix (n × m).
+    fn b(&self) -> &Mat64;
+    /// Mutable access (used by the coordinator to install snapshots).
+    fn b_mut(&mut self) -> &mut Mat64;
+    /// Total samples consumed.
+    fn samples_seen(&self) -> u64;
+    /// Optimizer name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Feed a whole row-major batch (default: loop over rows).
+    fn step_batch(&mut self, xs: &Mat64) {
+        for t in 0..xs.rows() {
+            self.step(xs.row(t));
+        }
+    }
+}
+
+/// Build an optimizer from an [`OptimizerConfig`] with an identity-like
+/// warm start (`B₀ = 0.5·[I 0]`).
+pub fn make_optimizer(
+    cfg: &OptimizerConfig,
+    n: usize,
+    m: usize,
+    g: Nonlinearity,
+) -> Box<dyn Optimizer> {
+    make_optimizer_with_init(cfg, init_b(n, m), g)
+}
+
+/// Build an optimizer from a config with an explicit initial matrix.
+pub fn make_optimizer_with_init(
+    cfg: &OptimizerConfig,
+    b0: Mat64,
+    g: Nonlinearity,
+) -> Box<dyn Optimizer> {
+    match cfg.kind {
+        OptimizerKind::Sgd => Box::new(EasiSgd::new(b0, cfg.mu, g)),
+        OptimizerKind::Smbgd => Box::new(Smbgd::new(
+            b0,
+            SmbgdParams { mu: cfg.mu, gamma: cfg.gamma, beta: cfg.beta, p: cfg.p },
+            g,
+        )),
+        OptimizerKind::Mbgd => Box::new(Mbgd::new(b0, cfg.mu, cfg.p, g)),
+    }
+}
+
+/// The standard identity-like warm start `B₀ = 0.5·[I 0]` (n × m).
+pub fn init_b(n: usize, m: usize) -> Mat64 {
+    let mut b = Mat64::eye(n, m);
+    b.scale(0.5);
+    b
+}
+
+/// A randomized full-rank initial matrix for the multi-seed convergence
+/// study (E1): identity-like plus scaled Gaussian perturbation.
+pub fn random_init_b(rng: &mut crate::signal::Pcg32, n: usize, m: usize) -> Mat64 {
+    let mut b = Mat64::from_fn(n, m, |i, j| {
+        let base = if i == j { 0.5 } else { 0.0 };
+        base + 0.2 * rng.normal()
+    });
+    // Reject near-singular draws (full row rank needed for separation).
+    while {
+        let g = b.matmul(&b.transpose());
+        crate::linalg::jacobi_eig(&g)
+            .map(|e| e.values.last().copied().unwrap_or(0.0) < 1e-3)
+            .unwrap_or(true)
+    } {
+        b = Mat64::from_fn(n, m, |i, j| {
+            let base = if i == j { 0.5 } else { 0.0 };
+            base + 0.2 * rng.normal()
+        });
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OptimizerConfig;
+    use crate::signal::Pcg32;
+
+    #[test]
+    fn factory_builds_all_kinds() {
+        for kind in [OptimizerKind::Sgd, OptimizerKind::Smbgd, OptimizerKind::Mbgd] {
+            let cfg = OptimizerConfig { kind, ..Default::default() };
+            let opt = make_optimizer(&cfg, 2, 4, Nonlinearity::Cube);
+            assert_eq!(opt.b().shape(), (2, 4));
+            assert_eq!(opt.samples_seen(), 0);
+        }
+    }
+
+    #[test]
+    fn step_batch_equals_loop() {
+        let cfg = OptimizerConfig::default();
+        let mut rng = Pcg32::seed(1);
+        let xs = Mat64::from_fn(32, 4, |_, _| rng.normal());
+        let mut a = make_optimizer(&cfg, 2, 4, Nonlinearity::Cube);
+        let mut b = make_optimizer(&cfg, 2, 4, Nonlinearity::Cube);
+        a.step_batch(&xs);
+        for t in 0..xs.rows() {
+            b.step(xs.row(t));
+        }
+        assert!(a.b().max_abs_diff(b.b()) < 1e-15);
+    }
+
+    #[test]
+    fn random_init_is_full_rank() {
+        let mut rng = Pcg32::seed(2);
+        for _ in 0..50 {
+            let b = random_init_b(&mut rng, 2, 4);
+            let g = b.matmul(&b.transpose());
+            let e = crate::linalg::jacobi_eig(&g).unwrap();
+            assert!(e.values[1] >= 1e-3);
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Nonlinearities g(·) for the EASI relative gradient.
+//!
+//! The nonlinearity introduces the higher-order statistics (§III): EASI's
+//! stationary points require `E[g(yᵢ)yⱼ] = 0` for i ≠ j, which only
+//! constrains independence when g is nonlinear. Stability of a source pair
+//! (i, j) requires `κᵢ + κⱼ > 0` with `κᵢ = E[g'(sᵢ)] − E[sᵢ g(sᵢ)]`
+//! (Cardoso & Laheld, Thm. 2):
+//!
+//! - **Cube** (`g(y)=y³`, the paper's choice): κ = −kurtosis, so cubic
+//!   EASI separates *sub*-Gaussian source pairs. Hardware cost: 2 multiplies.
+//! - **Tanh** (previous implementations [12][13]): separates
+//!   *super*-Gaussian pairs; expensive on FPGA (the paper's motivation for
+//!   the cubic).
+//! - **SignedSquare** (`g(y)=y·|y|`): a cheaper odd nonlinearity in the
+//!   same family as tanh-like rules (1 multiply + sign logic). The "ReLU-
+//!   class" simplification the paper's §V.B suggests exploring — what a
+//!   ReLU-style unit computes once oddness (required for EASI's
+//!   antisymmetric term) is restored.
+
+/// Elementwise nonlinearity used in the relative-gradient computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Nonlinearity {
+    /// `g(y) = y³` — the paper's pick; separates sub-Gaussian pairs.
+    Cube,
+    /// `g(y) = tanh(y)` — classic; separates super-Gaussian pairs.
+    Tanh,
+    /// `g(y) = y·|y|` — cheap odd square; separates sub-Gaussian pairs
+    /// (same sign convention as Cube, weaker HOS weighting).
+    SignedSquare,
+}
+
+impl Nonlinearity {
+    /// Apply g elementwise.
+    #[inline(always)]
+    pub fn apply(self, y: f64) -> f64 {
+        match self {
+            Self::Cube => y * y * y,
+            Self::Tanh => y.tanh(),
+            Self::SignedSquare => y * y.abs(),
+        }
+    }
+
+    /// Apply g to a slice, writing into `out`.
+    #[inline]
+    pub fn apply_slice(self, y: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(y.len(), out.len());
+        match self {
+            // Monomorphized loops: keeps the hot path free of per-element
+            // match dispatch (measured in EXPERIMENTS.md §Perf).
+            Self::Cube => {
+                for (o, &v) in out.iter_mut().zip(y) {
+                    *o = v * v * v;
+                }
+            }
+            Self::Tanh => {
+                for (o, &v) in out.iter_mut().zip(y) {
+                    *o = v.tanh();
+                }
+            }
+            Self::SignedSquare => {
+                for (o, &v) in out.iter_mut().zip(y) {
+                    *o = v * v.abs();
+                }
+            }
+        }
+    }
+
+    /// κ for a unit-variance source with the given excess kurtosis —
+    /// `κᵢ + κⱼ > 0` is the pairwise stability condition. Exact for Cube;
+    /// a same-sign proxy for the others (used only for diagnostics).
+    pub fn stability_kappa(self, excess_kurtosis: f64) -> f64 {
+        match self {
+            Self::Cube => -excess_kurtosis,
+            // tanh: κ > 0 for super-Gaussian sources.
+            Self::Tanh => excess_kurtosis,
+            Self::SignedSquare => -excess_kurtosis,
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "cube" => Self::Cube,
+            "tanh" => Self::Tanh,
+            "signed_square" => Self::SignedSquare,
+            other => anyhow::bail!("unknown nonlinearity '{other}'"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Cube => "cube",
+            Self::Tanh => "tanh",
+            Self::SignedSquare => "signed_square",
+        }
+    }
+
+    /// FP operation count per element (add, mul, other) — consumed by the
+    /// FPGA resource model (`fpga::resources`) for the nonlinearity
+    /// ablation (paper §V.B: the nonlinearity affects ALMs/DSPs, not Fmax).
+    pub fn op_costs(self) -> (usize, usize, usize) {
+        match self {
+            Self::Cube => (0, 2, 0),
+            // tanh on FPGA: piecewise/CORDIC ≈ 8 add + 8 mul equivalents.
+            Self::Tanh => (8, 8, 1),
+            Self::SignedSquare => (0, 1, 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cube_values() {
+        assert_eq!(Nonlinearity::Cube.apply(2.0), 8.0);
+        assert_eq!(Nonlinearity::Cube.apply(-2.0), -8.0);
+    }
+
+    #[test]
+    fn all_are_odd_functions() {
+        for g in [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare] {
+            for &y in &[0.1, 0.7, 1.3, 2.9] {
+                let pos = g.apply(y);
+                let neg = g.apply(-y);
+                assert!(
+                    (pos + neg).abs() < 1e-12,
+                    "{:?} not odd at {y}",
+                    g
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn apply_slice_matches_scalar() {
+        let y = [0.5, -1.0, 2.0, -0.25];
+        let mut out = [0.0; 4];
+        for g in [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare] {
+            g.apply_slice(&y, &mut out);
+            for i in 0..4 {
+                assert_eq!(out[i], g.apply(y[i]));
+            }
+        }
+    }
+
+    #[test]
+    fn cube_stability_favors_sub_gaussian() {
+        let g = Nonlinearity::Cube;
+        assert!(g.stability_kappa(-1.2) > 0.0, "uniform should be stable");
+        assert!(g.stability_kappa(3.0) < 0.0, "laplace should be unstable");
+    }
+
+    #[test]
+    fn tanh_stability_favors_super_gaussian() {
+        let g = Nonlinearity::Tanh;
+        assert!(g.stability_kappa(3.0) > 0.0);
+        assert!(g.stability_kappa(-1.2) < 0.0);
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        for g in [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare] {
+            assert_eq!(Nonlinearity::parse(g.name()).unwrap(), g);
+        }
+        assert!(Nonlinearity::parse("relu6").is_err());
+    }
+
+    #[test]
+    fn cube_is_cheapest_multiplier_user() {
+        let (_, cube_mul, _) = Nonlinearity::Cube.op_costs();
+        let (_, tanh_mul, _) = Nonlinearity::Tanh.op_costs();
+        assert!(cube_mul < tanh_mul, "paper: cubic is cheaper than tanh");
+    }
+}

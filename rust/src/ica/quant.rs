@@ -1,0 +1,314 @@
+//! Fixed-point arithmetic simulation — the numeric substrate of the
+//! *prior* FPGA implementations the paper compares against.
+//!
+//! Odom [12] implements EASI with 16-bit fixed-point variables; the paper
+//! argues for 32-bit floating point ("a fair comparison of our work with
+//! previous work is hard because our work uses 32-bit floating point...").
+//! This module makes that argument testable: [`QFormat`] models signed
+//! fixed-point with rounding + saturation, and [`QuantizedEasi`] runs the
+//! EASI SGD update with *every* intermediate quantized, simulating the
+//! fixed-point datapath bit-growth behaviour. The A4 ablation
+//! (`cargo bench --bench ablation_quant`) sweeps word length and shows
+//! where separation quality falls off a cliff.
+
+use super::nonlinearity::Nonlinearity;
+use super::Optimizer;
+use crate::linalg::Mat64;
+
+/// Signed fixed-point format Q`int_bits`.`frac_bits` (plus sign bit).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    /// Integer bits (excluding sign).
+    pub int_bits: u32,
+    /// Fractional bits.
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    /// Common shorthand: total word length with `int_bits` integer bits.
+    /// `QFormat::new(3, 12)` is a 16-bit word (1 sign + 3 int + 12 frac).
+    pub const fn new(int_bits: u32, frac_bits: u32) -> Self {
+        Self { int_bits, frac_bits }
+    }
+
+    /// The 16-bit format of Odom [12]-style implementations (Q3.12).
+    pub const fn q16() -> Self {
+        Self::new(3, 12)
+    }
+
+    /// A 32-bit fixed-point format (Q7.24).
+    pub const fn q32() -> Self {
+        Self::new(7, 24)
+    }
+
+    /// Total word length including the sign bit.
+    pub fn word_bits(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Largest representable magnitude.
+    pub fn max_value(&self) -> f64 {
+        let scale = (1u64 << self.frac_bits) as f64;
+        (((1u64 << (self.int_bits + self.frac_bits)) - 1) as f64) / scale
+    }
+
+    /// Resolution (value of one LSB).
+    pub fn lsb(&self) -> f64 {
+        1.0 / (1u64 << self.frac_bits) as f64
+    }
+
+    /// Quantize: round-to-nearest at `frac_bits`, saturate to the range.
+    /// (Saturation, not wraparound — the standard DSP datapath choice.)
+    pub fn quantize(&self, v: f64) -> f64 {
+        if v.is_nan() {
+            return 0.0;
+        }
+        let scale = (1u64 << self.frac_bits) as f64;
+        let max = self.max_value();
+        (v.clamp(-max, max) * scale).round() / scale
+    }
+
+    /// Quantize a slice in place.
+    pub fn quantize_slice(&self, xs: &mut [f64]) {
+        xs.iter_mut().for_each(|v| *v = self.quantize(*v));
+    }
+
+    /// Quantize a matrix in place.
+    pub fn quantize_mat(&self, m: &mut Mat64) {
+        self.quantize_slice(m.as_mut_slice());
+    }
+}
+
+/// EASI SGD with a fully-quantized datapath: inputs, `y`, `g(y)`, every
+/// `H` entry, the `μHB` product and the stored `B` all live in `fmt`.
+///
+/// This mirrors what a fixed-point FPGA implementation computes: each
+/// operator output is rounded/saturated before feeding the next stage.
+pub struct QuantizedEasi {
+    b: Mat64,
+    mu: f64,
+    g: Nonlinearity,
+    fmt: QFormat,
+    samples: u64,
+    // Scratch
+    y: Vec<f64>,
+    gy: Vec<f64>,
+    h: Mat64,
+    hb: Mat64,
+    xq: Vec<f64>,
+}
+
+impl QuantizedEasi {
+    pub fn new(mut b0: Mat64, mu: f64, g: Nonlinearity, fmt: QFormat) -> Self {
+        assert!(mu > 0.0);
+        fmt.quantize_mat(&mut b0);
+        let (n, m) = b0.shape();
+        Self {
+            mu: fmt.quantize(mu).max(fmt.lsb()), // μ below 1 LSB freezes learning
+            g,
+            fmt,
+            samples: 0,
+            y: vec![0.0; n],
+            gy: vec![0.0; n],
+            h: Mat64::zeros(n, n),
+            hb: Mat64::zeros(n, m),
+            xq: vec![0.0; m],
+            b: b0,
+        }
+    }
+
+    pub fn with_identity_init(n: usize, m: usize, mu: f64, g: Nonlinearity, fmt: QFormat) -> Self {
+        let mut b0 = Mat64::eye(n, m);
+        b0.scale(0.5);
+        Self::new(b0, mu, g, fmt)
+    }
+
+    pub fn format(&self) -> QFormat {
+        self.fmt
+    }
+
+    /// The effective learning rate after quantization.
+    pub fn effective_mu(&self) -> f64 {
+        self.mu
+    }
+}
+
+impl Optimizer for QuantizedEasi {
+    fn step(&mut self, x: &[f64]) {
+        let fmt = self.fmt;
+        // Input quantization (ADC).
+        self.xq.copy_from_slice(x);
+        fmt.quantize_slice(&mut self.xq);
+
+        // y = Bx, quantized after the accumulate.
+        self.b.matvec_into(&self.xq, &mut self.y);
+        fmt.quantize_slice(&mut self.y);
+
+        // g(y), quantized.
+        self.g.apply_slice(&self.y, &mut self.gy);
+        fmt.quantize_slice(&mut self.gy);
+
+        // H = yyᵀ − I + gyᵀ − ygᵀ, every entry quantized.
+        let n = self.y.len();
+        for i in 0..n {
+            for j in 0..n {
+                let mut v =
+                    self.y[i] * self.y[j] + self.gy[i] * self.y[j] - self.y[i] * self.gy[j];
+                if i == j {
+                    v -= 1.0;
+                }
+                self.h[(i, j)] = fmt.quantize(v);
+            }
+        }
+
+        // B ← B − μ(HB), products and the update quantized.
+        self.h.matmul_into(&self.b, &mut self.hb);
+        for (b, u) in self.b.as_mut_slice().iter_mut().zip(self.hb.as_slice()) {
+            *b = fmt.quantize(*b - fmt.quantize(self.mu * *u));
+        }
+        self.samples += 1;
+    }
+
+    fn b(&self) -> &Mat64 {
+        &self.b
+    }
+
+    fn b_mut(&mut self) -> &mut Mat64 {
+        &mut self.b
+    }
+
+    fn samples_seen(&self) -> u64 {
+        self.samples
+    }
+
+    fn name(&self) -> &'static str {
+        "easi-sgd-fixed"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ica::{amari_index, EasiSgd};
+    use crate::signal::Dataset;
+
+    #[test]
+    fn quantize_rounds_to_lsb() {
+        let fmt = QFormat::new(3, 4); // LSB = 1/16
+        assert_eq!(fmt.quantize(0.06), 0.0625);
+        assert_eq!(fmt.quantize(0.03), 0.0); // below LSB/2: rounds to zero
+        assert_eq!(fmt.quantize(-0.06), -0.0625);
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        let fmt = QFormat::new(2, 4); // max ≈ 3.9375
+        assert_eq!(fmt.quantize(100.0), fmt.max_value());
+        assert_eq!(fmt.quantize(-100.0), -fmt.max_value());
+    }
+
+    #[test]
+    fn quantize_idempotent() {
+        let fmt = QFormat::q16();
+        for v in [-3.2, -0.001, 0.0, 0.7, 2.9] {
+            let q = fmt.quantize(v);
+            assert_eq!(fmt.quantize(q), q);
+        }
+    }
+
+    #[test]
+    fn word_bits_accounting() {
+        assert_eq!(QFormat::q16().word_bits(), 16);
+        assert_eq!(QFormat::q32().word_bits(), 32);
+    }
+
+    #[test]
+    fn nan_quantizes_to_zero() {
+        assert_eq!(QFormat::q16().quantize(f64::NAN), 0.0);
+    }
+
+    #[test]
+    fn high_precision_matches_float_closely() {
+        // Q7.24 should track the f64 reference tightly over a short run.
+        let ds = Dataset::standard(51, 4, 2, 2_000);
+        let xs = ds.x.map(|v| v / 3.0);
+        let mut float = EasiSgd::with_identity_init(2, 4, 0.005, Nonlinearity::Cube);
+        let mut fixed = QuantizedEasi::with_identity_init(
+            2,
+            4,
+            0.005,
+            Nonlinearity::Cube,
+            QFormat::q32(),
+        );
+        for t in 0..xs.rows() {
+            float.step(xs.row(t));
+            fixed.step(xs.row(t));
+        }
+        assert!(
+            float.b().max_abs_diff(fixed.b()) < 0.01,
+            "Q7.24 drift {}",
+            float.b().max_abs_diff(fixed.b())
+        );
+    }
+
+    #[test]
+    fn q16_still_separates_but_worse() {
+        let ds = Dataset::standard(52, 4, 2, 60_000);
+        let pow: f64 = ds.x.as_slice().iter().map(|v| v * v).sum::<f64>()
+            / ds.x.as_slice().len() as f64;
+        let xs = ds.x.map(|v| v / pow.sqrt());
+        let mut fixed = QuantizedEasi::with_identity_init(
+            2,
+            4,
+            0.004,
+            Nonlinearity::Cube,
+            QFormat::q16(),
+        );
+        let mut float = EasiSgd::with_identity_init(2, 4, 0.004, Nonlinearity::Cube);
+        for t in 0..xs.rows() {
+            fixed.step(xs.row(t));
+            float.step(xs.row(t));
+        }
+        let a_fixed = amari_index(&fixed.b().matmul(&ds.a));
+        let a_float = amari_index(&float.b().matmul(&ds.a));
+        assert!(a_fixed < 0.35, "q16 should still roughly separate: {a_fixed}");
+        assert!(
+            a_float <= a_fixed + 0.02,
+            "float ({a_float}) should be at least as good as q16 ({a_fixed})"
+        );
+    }
+
+    #[test]
+    fn tiny_words_fail_to_separate() {
+        // 8-bit datapath: μ quantizes near/below an LSB and H saturates —
+        // separation collapses. (The cliff the A4 ablation charts.)
+        let ds = Dataset::standard(53, 4, 2, 30_000);
+        let pow: f64 = ds.x.as_slice().iter().map(|v| v * v).sum::<f64>()
+            / ds.x.as_slice().len() as f64;
+        let xs = ds.x.map(|v| v / pow.sqrt());
+        let mut q8 = QuantizedEasi::with_identity_init(
+            2,
+            4,
+            0.004,
+            Nonlinearity::Cube,
+            QFormat::new(3, 4),
+        );
+        for t in 0..xs.rows() {
+            q8.step(xs.row(t));
+        }
+        let a = amari_index(&q8.b().matmul(&ds.a));
+        assert!(a > 0.15, "8-bit EASI should not separate cleanly: {a}");
+    }
+
+    #[test]
+    fn b_stays_in_range() {
+        let fmt = QFormat::q16();
+        let ds = Dataset::standard(54, 4, 2, 5_000);
+        let mut q = QuantizedEasi::with_identity_init(2, 4, 0.01, Nonlinearity::Cube, fmt);
+        for t in 0..ds.len() {
+            q.step(ds.sample(t));
+        }
+        let max = q.b().max_abs();
+        assert!(max <= fmt.max_value() + 1e-12, "saturation must bound B: {max}");
+    }
+}

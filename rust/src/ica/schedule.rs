@@ -1,0 +1,188 @@
+//! Learning-rate schedules — the "variable learning rate" of Odom [12].
+//!
+//! Adaptive ICA with a constant μ trades steady-state accuracy against
+//! tracking speed: large μ converges fast but jitters around the solution;
+//! small μ settles low but converges (and re-tracks) slowly. A decaying
+//! schedule gets both on stationary problems, while constant μ is what a
+//! *tracking* deployment wants (the paper targets non-stationary inputs,
+//! which is why its hardware bakes μ in as a constant-coefficient
+//! multiplier). The A5 ablation (`cargo bench --bench ablation_schedule`)
+//! quantifies the trade-off.
+
+use super::Optimizer;
+use crate::linalg::Mat64;
+
+/// A learning-rate schedule μ(t).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MuSchedule {
+    /// μ(t) = μ₀ — what the paper's hardware implements.
+    Constant { mu0: f64 },
+    /// μ(t) = μ₀ / (1 + t/τ) — the classic Robbins–Monro-style decay.
+    InverseDecay { mu0: f64, tau: f64 },
+    /// μ(t) = μ₀ · factor^⌊t/every⌋ — staircase decay (cheap in hardware:
+    /// a coefficient-bank switch, which is how [12] realizes it).
+    Step { mu0: f64, factor: f64, every: u64 },
+    /// Decay to a floor: max(μ₀/(1+t/τ), floor) — keeps residual
+    /// adaptivity for tracking after settling.
+    DecayToFloor { mu0: f64, tau: f64, floor: f64 },
+}
+
+impl MuSchedule {
+    /// Learning rate at sample index `t`.
+    pub fn mu_at(&self, t: u64) -> f64 {
+        match *self {
+            Self::Constant { mu0 } => mu0,
+            Self::InverseDecay { mu0, tau } => mu0 / (1.0 + t as f64 / tau),
+            Self::Step { mu0, factor, every } => {
+                mu0 * factor.powi((t / every.max(1)) as i32)
+            }
+            Self::DecayToFloor { mu0, tau, floor } => {
+                (mu0 / (1.0 + t as f64 / tau)).max(floor)
+            }
+        }
+    }
+
+    /// Validate parameters (panics on nonsense — schedules are
+    /// compile-time experiment configuration).
+    pub fn validate(&self) {
+        let ok = match *self {
+            Self::Constant { mu0 } => mu0 > 0.0,
+            Self::InverseDecay { mu0, tau } => mu0 > 0.0 && tau > 0.0,
+            Self::Step { mu0, factor, every } => {
+                mu0 > 0.0 && (0.0..=1.0).contains(&factor) && every > 0
+            }
+            Self::DecayToFloor { mu0, tau, floor } => {
+                mu0 > 0.0 && tau > 0.0 && floor > 0.0 && floor <= mu0
+            }
+        };
+        assert!(ok, "invalid schedule {self:?}");
+    }
+}
+
+/// Wrap any μ-settable optimizer with a schedule.
+///
+/// Works with [`super::EasiSgd`] (the only optimizer whose per-sample μ is
+/// well-defined; SMBGD's μ interacts with β/γ so scheduling it is a
+/// different algorithm — see module docs).
+pub struct ScheduledSgd {
+    inner: super::EasiSgd,
+    schedule: MuSchedule,
+}
+
+impl ScheduledSgd {
+    pub fn new(inner: super::EasiSgd, schedule: MuSchedule) -> Self {
+        schedule.validate();
+        Self { inner, schedule }
+    }
+
+    pub fn schedule(&self) -> MuSchedule {
+        self.schedule
+    }
+
+    pub fn current_mu(&self) -> f64 {
+        self.schedule.mu_at(self.inner.samples_seen())
+    }
+}
+
+impl Optimizer for ScheduledSgd {
+    fn step(&mut self, x: &[f64]) {
+        let mu = self.schedule.mu_at(self.inner.samples_seen());
+        self.inner.set_mu(mu);
+        self.inner.step(x);
+    }
+
+    fn b(&self) -> &Mat64 {
+        self.inner.b()
+    }
+
+    fn b_mut(&mut self) -> &mut Mat64 {
+        self.inner.b_mut()
+    }
+
+    fn samples_seen(&self) -> u64 {
+        self.inner.samples_seen()
+    }
+
+    fn name(&self) -> &'static str {
+        "easi-sgd-scheduled"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ica::{amari_index, EasiSgd, Nonlinearity};
+    use crate::signal::Dataset;
+
+    #[test]
+    fn schedules_evaluate() {
+        let c = MuSchedule::Constant { mu0: 0.01 };
+        assert_eq!(c.mu_at(0), 0.01);
+        assert_eq!(c.mu_at(1_000_000), 0.01);
+
+        let d = MuSchedule::InverseDecay { mu0: 0.01, tau: 100.0 };
+        assert_eq!(d.mu_at(0), 0.01);
+        assert!((d.mu_at(100) - 0.005).abs() < 1e-12);
+
+        let s = MuSchedule::Step { mu0: 0.01, factor: 0.5, every: 10 };
+        assert_eq!(s.mu_at(9), 0.01);
+        assert_eq!(s.mu_at(10), 0.005);
+        assert_eq!(s.mu_at(25), 0.0025);
+
+        let f = MuSchedule::DecayToFloor { mu0: 0.01, tau: 10.0, floor: 0.002 };
+        assert!(f.mu_at(1_000_000) >= 0.002);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid schedule")]
+    fn bad_schedule_rejected() {
+        MuSchedule::DecayToFloor { mu0: 0.001, tau: 10.0, floor: 0.01 }.validate();
+    }
+
+    #[test]
+    fn constant_schedule_equals_plain_sgd() {
+        let ds = Dataset::standard(61, 4, 2, 2_000);
+        let mut plain = EasiSgd::with_identity_init(2, 4, 0.005, Nonlinearity::Cube);
+        let mut sched = ScheduledSgd::new(
+            EasiSgd::with_identity_init(2, 4, 0.005, Nonlinearity::Cube),
+            MuSchedule::Constant { mu0: 0.005 },
+        );
+        for t in 0..ds.len() {
+            plain.step(ds.sample(t));
+            sched.step(ds.sample(t));
+        }
+        assert!(plain.b().max_abs_diff(sched.b()) < 1e-15);
+    }
+
+    #[test]
+    fn decay_reaches_lower_floor_than_constant() {
+        // On a stationary problem, decayed-μ SGD settles to a lower
+        // steady-state Amari than constant-μ at the same initial rate.
+        let ds = Dataset::standard(62, 4, 2, 100_000);
+        let pow: f64 = ds.x.as_slice().iter().map(|v| v * v).sum::<f64>()
+            / ds.x.as_slice().len() as f64;
+        let xs = ds.x.map(|v| v / pow.sqrt());
+
+        let mut constant = EasiSgd::with_identity_init(2, 4, 0.01, Nonlinearity::Cube);
+        let mut decayed = ScheduledSgd::new(
+            EasiSgd::with_identity_init(2, 4, 0.01, Nonlinearity::Cube),
+            MuSchedule::InverseDecay { mu0: 0.01, tau: 20_000.0 },
+        );
+        // steady-state = average of the Amari over the last 20%
+        let (mut acc_c, mut acc_d, mut count) = (0.0, 0.0, 0);
+        for t in 0..xs.rows() {
+            constant.step(xs.row(t));
+            decayed.step(xs.row(t));
+            if t >= 80_000 && t % 500 == 0 {
+                acc_c += amari_index(&constant.b().matmul(&ds.a));
+                acc_d += amari_index(&decayed.b().matmul(&ds.a));
+                count += 1;
+            }
+        }
+        let (ss_c, ss_d) = (acc_c / count as f64, acc_d / count as f64);
+        assert!(
+            ss_d < ss_c,
+            "decayed steady-state ({ss_d:.4}) should beat constant ({ss_c:.4})"
+        );
+    }
+}

@@ -1,0 +1,369 @@
+//! SMBGD — the paper's contribution (§IV, Eq. 1, Fig. 2).
+//!
+//! Sequential mini-batch gradient descent accumulates the EASI relative
+//! gradient over a mini-batch with exponentially-decaying intra-batch
+//! weights (β), carries a cross-batch momentum term (γ), and applies the
+//! separation-matrix update **once per mini-batch**:
+//!
+//! ```text
+//!   p = 0:      Ĥ ← γ Ĥ_prev + μ H(B, x₀)
+//!   0 < p < P:  Ĥ ← β Ĥ      + μ H(B, x_p)
+//!   p = P:      B ← B − Ĥ B;  Ĥ_prev ← Ĥ;  p ← 0
+//! ```
+//!
+//! Every `H(B, x_p)` inside a mini-batch uses the *same* (stale) `B` —
+//! this is what breaks the loop-carried dependency and lets the FPGA
+//! pipeline (and, at Layer 1, the TPU MXU batch) run at initiation
+//! interval 1. This struct is the cycle-exact software model of Fig. 2;
+//! the batched closed form lives in the Pallas kernel
+//! (`python/compile/kernels/easi.py`) and both are pinned together by
+//! parity tests (`rust/tests/parity_pjrt.rs`).
+
+use super::nonlinearity::Nonlinearity;
+use super::{EasiSgd, Optimizer};
+use crate::linalg::Mat64;
+
+/// SMBGD hyperparameters (paper §IV notation).
+#[derive(Clone, Copy, Debug)]
+pub struct SmbgdParams {
+    /// Learning rate μ.
+    pub mu: f64,
+    /// Cross-batch momentum coefficient γ ∈ [0, 1].
+    pub gamma: f64,
+    /// Intra-batch decay coefficient β ∈ (0, 1].
+    pub beta: f64,
+    /// Mini-batch size P ≥ 1.
+    pub p: usize,
+}
+
+impl Default for SmbgdParams {
+    fn default() -> Self {
+        Self { mu: 0.002, gamma: 0.5, beta: 0.9, p: 8 }
+    }
+}
+
+impl SmbgdParams {
+    pub fn validate(&self) {
+        assert!(self.mu > 0.0, "mu must be positive");
+        assert!((0.0..=1.0).contains(&self.gamma), "gamma in [0,1]");
+        assert!(self.beta > 0.0 && self.beta <= 1.0, "beta in (0,1]");
+        assert!(self.p >= 1, "P >= 1");
+    }
+
+    /// Learning rate for an SGD run that matches this SMBGD configuration's
+    /// *average per-sample gradient weight* — used by the convergence
+    /// experiment (E1) for a fair comparison: SMBGD applies total weight
+    /// `μ·Σβ^(P−1−p)` per mini-batch of P samples, i.e. an average of
+    /// `μ·(1−β^P)/(P(1−β))` per sample (times the 1/(1−γβ^{P−1})
+    /// steady-state momentum amplification).
+    pub fn equivalent_sgd_mu(&self) -> f64 {
+        let pf = self.p as f64;
+        let batch_weight = if (1.0 - self.beta).abs() < 1e-12 {
+            pf
+        } else {
+            (1.0 - self.beta.powi(self.p as i32)) / (1.0 - self.beta)
+        };
+        let momentum_gain = 1.0 / (1.0 - self.gamma * self.beta.powi(self.p as i32 - 1));
+        self.mu * batch_weight * momentum_gain / pf
+    }
+}
+
+/// EASI with SMBGD (Fig. 2) — sample-sequential model of the pipelined
+/// hardware.
+pub struct Smbgd {
+    b: Mat64,
+    params: SmbgdParams,
+    g: Nonlinearity,
+    samples: u64,
+    /// Position within the current mini-batch (the paper's `p`).
+    p_idx: usize,
+    /// The running accumulator Ĥ (the paper's Ĥₖᵖ).
+    hhat: Mat64,
+    /// Ĥ at the end of the previous mini-batch (the paper's Ĥₖ₋₁ᴾ).
+    hhat_prev: Mat64,
+    // Scratch
+    y: Vec<f64>,
+    gy: Vec<f64>,
+    h: Mat64,
+    hb: Mat64,
+}
+
+impl Smbgd {
+    pub fn new(b0: Mat64, params: SmbgdParams, g: Nonlinearity) -> Self {
+        params.validate();
+        let (n, m) = b0.shape();
+        Self {
+            params,
+            g,
+            samples: 0,
+            p_idx: 0,
+            hhat: Mat64::zeros(n, n),
+            hhat_prev: Mat64::zeros(n, n),
+            y: vec![0.0; n],
+            gy: vec![0.0; n],
+            h: Mat64::zeros(n, n),
+            hb: Mat64::zeros(n, m),
+            b: b0,
+        }
+    }
+
+    /// Identity-like warm start, matching [`EasiSgd::with_identity_init`].
+    pub fn with_identity_init(n: usize, m: usize, params: SmbgdParams, g: Nonlinearity) -> Self {
+        let mut b0 = Mat64::eye(n, m);
+        b0.scale(0.5);
+        Self::new(b0, params, g)
+    }
+
+    pub fn params(&self) -> SmbgdParams {
+        self.params
+    }
+
+    /// Current accumulator (exposed for parity tests with the L1 kernel).
+    pub fn hhat(&self) -> &Mat64 {
+        &self.hhat
+    }
+
+    /// Accumulator carried across mini-batches (Ĥₖ₋₁ᴾ).
+    pub fn hhat_prev(&self) -> &Mat64 {
+        &self.hhat_prev
+    }
+
+    /// Number of completed mini-batches (the paper's `k`).
+    pub fn minibatches_done(&self) -> u64 {
+        self.samples / self.params.p as u64
+    }
+
+    /// True if the next `step` starts a new mini-batch.
+    pub fn at_batch_boundary(&self) -> bool {
+        self.p_idx == 0
+    }
+}
+
+impl Optimizer for Smbgd {
+    /// Feed one sample; applies the B update when the mini-batch fills.
+    ///
+    /// Matches the hardware exactly: one sample enters the pipeline per
+    /// call, the matrix update fires every P-th call.
+    fn step(&mut self, x: &[f64]) {
+        // H(B, x_p) with the STALE B (unchanged within the mini-batch).
+        EasiSgd::relative_gradient(
+            &self.b,
+            x,
+            self.g,
+            false,
+            self.params.mu,
+            &mut self.y,
+            &mut self.gy,
+            &mut self.h,
+        );
+
+        if self.p_idx == 0 {
+            // Ĥ ← γ Ĥ_prev + μ H   (Eq. 1, p = 0; γ is 0 for k = 0 because
+            // hhat_prev starts as the zero matrix.)
+            self.hhat.copy_from(&self.hhat_prev);
+            self.hhat.scale(self.params.gamma);
+            self.hhat.axpy(self.params.mu, &self.h);
+        } else {
+            // Ĥ ← β Ĥ + μ H        (Eq. 1, 0 < p < P)
+            self.hhat.scale(self.params.beta);
+            self.hhat.axpy(self.params.mu, &self.h);
+        }
+
+        self.p_idx += 1;
+        self.samples += 1;
+
+        if self.p_idx == self.params.p {
+            // End of mini-batch: B ← B − Ĥ B, latch Ĥ for momentum, reset.
+            self.hhat.matmul_into(&self.b, &mut self.hb);
+            self.b.axpy(-1.0, &self.hb);
+            self.hhat_prev.copy_from(&self.hhat);
+            self.p_idx = 0;
+        }
+    }
+
+    fn b(&self) -> &Mat64 {
+        &self.b
+    }
+
+    fn b_mut(&mut self) -> &mut Mat64 {
+        &mut self.b
+    }
+
+    fn samples_seen(&self) -> u64 {
+        self.samples
+    }
+
+    fn name(&self) -> &'static str {
+        "easi-smbgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::{Dataset, Pcg32};
+
+    fn params(mu: f64, gamma: f64, beta: f64, p: usize) -> SmbgdParams {
+        SmbgdParams { mu, gamma, beta, p }
+    }
+
+    /// Literal Eq. 1 + batch update, reimplemented independently.
+    fn oracle_run(
+        b0: &Mat64,
+        xs: &[Vec<f64>],
+        prm: SmbgdParams,
+        g: Nonlinearity,
+    ) -> (Mat64, Mat64) {
+        let n = b0.rows();
+        let mut b = b0.clone();
+        let mut hhat = Mat64::zeros(n, n);
+        let mut hhat_prev = Mat64::zeros(n, n);
+        let mut y = vec![0.0; n];
+        let mut gy = vec![0.0; n];
+        let mut h = Mat64::zeros(n, n);
+        for (i, x) in xs.iter().enumerate() {
+            let p = i % prm.p;
+            EasiSgd::relative_gradient(&b, x, g, false, prm.mu, &mut y, &mut gy, &mut h);
+            if p == 0 {
+                hhat = hhat_prev.clone();
+                hhat.scale(prm.gamma);
+            } else {
+                hhat.scale(prm.beta / 1.0);
+            }
+            hhat.axpy(prm.mu, &h);
+            if p == prm.p - 1 {
+                let upd = hhat.matmul(&b);
+                b.axpy(-1.0, &upd);
+                hhat_prev = hhat.clone();
+            }
+        }
+        (b, hhat_prev)
+    }
+
+    #[test]
+    fn matches_independent_oracle() {
+        let mut rng = Pcg32::seed(1);
+        let b0 = Mat64::from_fn(2, 4, |_, _| rng.normal() * 0.3);
+        let xs: Vec<Vec<f64>> =
+            (0..40).map(|_| (0..4).map(|_| rng.normal()).collect()).collect();
+        let prm = params(0.01, 0.6, 0.9, 8);
+        let mut opt = Smbgd::new(b0.clone(), prm, Nonlinearity::Cube);
+        for x in &xs {
+            opt.step(x);
+        }
+        let (want_b, want_hprev) = oracle_run(&b0, &xs, prm, Nonlinearity::Cube);
+        assert!(opt.b().max_abs_diff(&want_b) < 1e-12);
+        assert!(opt.hhat_prev().max_abs_diff(&want_hprev) < 1e-12);
+    }
+
+    #[test]
+    fn b_frozen_within_minibatch() {
+        let mut rng = Pcg32::seed(2);
+        let prm = params(0.01, 0.5, 0.9, 8);
+        let mut opt = Smbgd::with_identity_init(2, 4, prm, Nonlinearity::Cube);
+        let b_before = opt.b().clone();
+        for _ in 0..7 {
+            let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+            opt.step(&x);
+            assert_eq!(opt.b(), &b_before, "B must not move mid-batch");
+        }
+        let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        opt.step(&x); // 8th sample: update fires
+        assert!(opt.b().max_abs_diff(&b_before) > 0.0);
+    }
+
+    #[test]
+    fn p1_gamma0_equals_sgd() {
+        // P=1 and γ=0 degrade SMBGD to exactly per-sample SGD.
+        let mut rng = Pcg32::seed(3);
+        let b0 = Mat64::from_fn(2, 4, |_, _| rng.normal() * 0.3);
+        let prm = params(0.004, 0.0, 0.9, 1);
+        let mut smbgd = Smbgd::new(b0.clone(), prm, Nonlinearity::Cube);
+        let mut sgd = EasiSgd::new(b0, 0.004, Nonlinearity::Cube);
+        for _ in 0..200 {
+            let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+            smbgd.step(&x);
+            sgd.step(&x);
+        }
+        assert!(smbgd.b().max_abs_diff(sgd.b()) < 1e-12);
+    }
+
+    #[test]
+    fn gamma_zero_forgets_previous_batch() {
+        // With γ=0 the accumulator restarts each batch: running batch k's
+        // samples alone (from the same B) gives the same Ĥ.
+        let mut rng = Pcg32::seed(4);
+        let prm = params(0.01, 0.0, 0.85, 4);
+        let b0 = Mat64::from_fn(2, 4, |_, _| rng.normal() * 0.3);
+        let xs1: Vec<Vec<f64>> =
+            (0..4).map(|_| (0..4).map(|_| rng.normal()).collect()).collect();
+        let xs2: Vec<Vec<f64>> =
+            (0..4).map(|_| (0..4).map(|_| rng.normal()).collect()).collect();
+
+        let mut two = Smbgd::new(b0.clone(), prm, Nonlinearity::Cube);
+        for x in xs1.iter().chain(&xs2) {
+            two.step(x);
+        }
+        // B after batch 1 (for the "alone" run we need the same stale B).
+        let mut first = Smbgd::new(b0, prm, Nonlinearity::Cube);
+        for x in &xs1 {
+            first.step(x);
+        }
+        let mut alone = Smbgd::new(first.b().clone(), prm, Nonlinearity::Cube);
+        for x in &xs2 {
+            alone.step(x);
+        }
+        assert!(two.hhat_prev().max_abs_diff(alone.hhat_prev()) < 1e-12);
+    }
+
+    #[test]
+    fn separates_static_mixture() {
+        let ds = Dataset::standard(7, 4, 2, 60_000);
+        let std_x = {
+            let s: f64 = ds.x.as_slice().iter().map(|v| v * v).sum();
+            (s / ds.x.as_slice().len() as f64).sqrt()
+        };
+        let prm = params(0.003, 0.5, 0.9, 8);
+        let mut opt = Smbgd::with_identity_init(2, 4, prm, Nonlinearity::Cube);
+        let mut x = vec![0.0; 4];
+        for t in 0..ds.len() {
+            for (i, v) in ds.sample(t).iter().enumerate() {
+                x[i] = v / std_x;
+            }
+            opt.step(&x);
+        }
+        let c = opt.b().matmul(&ds.a);
+        let amari = super::super::metrics::amari_index(&c);
+        assert!(amari < 0.15, "amari {amari}");
+    }
+
+    #[test]
+    fn minibatch_counters() {
+        let prm = params(0.01, 0.5, 0.9, 4);
+        let mut opt = Smbgd::with_identity_init(2, 4, prm, Nonlinearity::Cube);
+        let x = [0.1, -0.2, 0.3, -0.4];
+        assert!(opt.at_batch_boundary());
+        for i in 1..=10 {
+            opt.step(&x);
+            assert_eq!(opt.samples_seen(), i as u64);
+        }
+        assert_eq!(opt.minibatches_done(), 2);
+        assert!(!opt.at_batch_boundary());
+    }
+
+    #[test]
+    fn equivalent_sgd_mu_sane() {
+        // β=1, γ=0, any P: every sample weighted μ ⇒ equivalent μ is μ.
+        let prm = params(0.01, 0.0, 1.0, 8);
+        assert!((prm.equivalent_sgd_mu() - 0.01).abs() < 1e-12);
+        // Momentum amplifies the effective rate.
+        let with_momentum = params(0.01, 0.5, 1.0, 8);
+        assert!(with_momentum.equivalent_sgd_mu() > 0.015);
+    }
+
+    #[test]
+    #[should_panic(expected = "P >= 1")]
+    fn zero_p_rejected() {
+        let _ = Smbgd::with_identity_init(2, 4, params(0.01, 0.5, 0.9, 0), Nonlinearity::Cube);
+    }
+}

@@ -1,0 +1,180 @@
+//! Whitening (sphering) — the preprocessing substrate FastICA needs.
+//!
+//! EASI famously *merges* whitening into the separation update (§III);
+//! FastICA does not, so the nonadaptive baseline needs an explicit
+//! whitening stage: `z = W x` with `W = D^{−1/2} Eᵀ` from the
+//! eigendecomposition `Cov(x) = E D Eᵀ`, optionally reducing to the top-n
+//! eigendirections (m → n dimensionality reduction).
+
+use crate::linalg::{jacobi_eig, Mat64};
+use anyhow::{bail, Result};
+
+/// Whitening transform fitted on a batch of observations.
+pub struct Whitener {
+    /// `n × m` whitening matrix.
+    pub w: Mat64,
+    /// Per-channel means subtracted before projecting.
+    pub mean: Vec<f64>,
+    /// Retained eigenvalues (descending), for diagnostics.
+    pub eigenvalues: Vec<f64>,
+}
+
+impl Whitener {
+    /// Fit on `x` (T × m), retaining `n ≤ m` components.
+    pub fn fit(x: &Mat64, n: usize) -> Result<Self> {
+        let (t, m) = x.shape();
+        if n == 0 || n > m {
+            bail!("whiten: need 1 <= n <= m, got n={n}, m={m}");
+        }
+        if t < 2 * m {
+            bail!("whiten: too few samples ({t}) for {m} channels");
+        }
+
+        // Channel means.
+        let mut mean = vec![0.0; m];
+        for i in 0..t {
+            for (j, mu) in mean.iter_mut().enumerate() {
+                *mu += x[(i, j)];
+            }
+        }
+        mean.iter_mut().for_each(|v| *v /= t as f64);
+
+        // Covariance (m × m).
+        let mut cov = Mat64::zeros(m, m);
+        for i in 0..t {
+            for a in 0..m {
+                let xa = x[(i, a)] - mean[a];
+                for b in a..m {
+                    let xb = x[(i, b)] - mean[b];
+                    cov[(a, b)] += xa * xb;
+                }
+            }
+        }
+        for a in 0..m {
+            for b in a..m {
+                let v = cov[(a, b)] / (t as f64 - 1.0);
+                cov[(a, b)] = v;
+                cov[(b, a)] = v;
+            }
+        }
+
+        let eig = jacobi_eig(&cov)?;
+        // Guard: retained spectrum must be positive.
+        for &ev in eig.values.iter().take(n) {
+            if ev <= 1e-12 {
+                bail!("whiten: covariance nearly singular (eigenvalue {ev})");
+            }
+        }
+        // W = D^{-1/2} Eᵀ restricted to the top n eigenpairs.
+        let w = Mat64::from_fn(n, m, |i, j| eig.vectors[(j, i)] / eig.values[i].sqrt());
+        Ok(Self { w, mean, eigenvalues: eig.values[..n].to_vec() })
+    }
+
+    /// Apply to a batch: returns `z` (T × n) with identity covariance.
+    pub fn transform(&self, x: &Mat64) -> Mat64 {
+        let (t, m) = x.shape();
+        assert_eq!(m, self.mean.len(), "whiten transform: channel mismatch");
+        let n = self.w.rows();
+        let mut z = Mat64::zeros(t, n);
+        let mut centered = vec![0.0; m];
+        for i in 0..t {
+            for (j, c) in centered.iter_mut().enumerate() {
+                *c = x[(i, j)] - self.mean[j];
+            }
+            let zi = self.w.matvec(&centered);
+            z.row_mut(i).copy_from_slice(&zi);
+        }
+        z
+    }
+}
+
+/// Empirical covariance of `x` (T × m) — shared test helper.
+pub fn covariance(x: &Mat64) -> Mat64 {
+    let (t, m) = x.shape();
+    let mut mean = vec![0.0; m];
+    for i in 0..t {
+        for (j, mu) in mean.iter_mut().enumerate() {
+            *mu += x[(i, j)];
+        }
+    }
+    mean.iter_mut().for_each(|v| *v /= t as f64);
+    let mut cov = Mat64::zeros(m, m);
+    for i in 0..t {
+        for a in 0..m {
+            for b in 0..m {
+                cov[(a, b)] += (x[(i, a)] - mean[a]) * (x[(i, b)] - mean[b]);
+            }
+        }
+    }
+    cov.scale(1.0 / (t as f64 - 1.0));
+    cov
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::Dataset;
+
+    #[test]
+    fn whitened_covariance_is_identity() {
+        let ds = Dataset::standard(1, 4, 2, 20_000);
+        let wh = Whitener::fit(&ds.x, 2).unwrap();
+        let z = wh.transform(&ds.x);
+        let cov = covariance(&z);
+        assert!(
+            cov.max_abs_diff(&Mat64::eye(2, 2)) < 0.05,
+            "cov(z) != I: {cov:?}"
+        );
+    }
+
+    #[test]
+    fn full_rank_whitening() {
+        let ds = Dataset::standard(2, 4, 4, 20_000);
+        let wh = Whitener::fit(&ds.x, 4).unwrap();
+        let z = wh.transform(&ds.x);
+        let cov = covariance(&z);
+        assert!(cov.max_abs_diff(&Mat64::eye(4, 4)) < 0.08);
+    }
+
+    #[test]
+    fn eigenvalues_descending_positive() {
+        let ds = Dataset::standard(3, 4, 2, 10_000);
+        let wh = Whitener::fit(&ds.x, 2).unwrap();
+        assert!(wh.eigenvalues[0] >= wh.eigenvalues[1]);
+        assert!(wh.eigenvalues[1] > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_n() {
+        let ds = Dataset::standard(4, 4, 2, 1000);
+        assert!(Whitener::fit(&ds.x, 0).is_err());
+        assert!(Whitener::fit(&ds.x, 5).is_err());
+    }
+
+    #[test]
+    fn rejects_too_few_samples() {
+        let ds = Dataset::standard(5, 4, 2, 6);
+        assert!(Whitener::fit(&ds.x, 2).is_err());
+    }
+
+    #[test]
+    fn mean_is_removed() {
+        let ds = Dataset::standard(6, 4, 2, 20_000);
+        // Shift channel 0 by +10
+        let mut x = ds.x.clone();
+        for i in 0..x.rows() {
+            x[(i, 0)] += 10.0;
+        }
+        let wh = Whitener::fit(&x, 2).unwrap();
+        let z = wh.transform(&x);
+        // Column means of z ~ 0
+        for j in 0..2 {
+            let mut mu = 0.0;
+            for i in 0..z.rows() {
+                mu += z[(i, j)];
+            }
+            mu /= z.rows() as f64;
+            assert!(mu.abs() < 0.05, "z mean {mu}");
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! # easi-ica
+//!
+//! A three-layer (Rust + JAX + Pallas) reproduction of *High-Performance
+//! FPGA Implementation of Equivariant Adaptive Separation via Independence
+//! Algorithm for Independent Component Analysis* (Nazemi, Nazarian,
+//! Pedram; 2017).
+//!
+//! The paper contributes (1) **SMBGD** — a sequential mini-batch update
+//! rule for EASI that breaks the loop-carried dependency of per-sample SGD
+//! so the datapath can be pipelined with initiation interval 1 — and
+//! (2) a pipelined 32-bit floating-point FPGA implementation. This crate
+//! reproduces both: the algorithm family (`ica`), the streaming
+//! coordinator that runs it (`coordinator`) over either the native Rust
+//! hot path or AOT-compiled JAX/Pallas artifacts (`runtime`), and — since
+//! no FPGA is attached — a calibrated datapath-level FPGA model (`fpga`)
+//! that regenerates the paper's Table I from architectural structure.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod fpga;
+pub mod ica;
+pub mod linalg;
+pub mod runtime;
+pub mod signal;
+pub mod testkit;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

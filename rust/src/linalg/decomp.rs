@@ -1,0 +1,171 @@
+//! Matrix decompositions: Gauss–Jordan inverse/solve and cyclic Jacobi
+//! symmetric eigendecomposition.
+//!
+//! These back the whitening stage of FastICA (`ica::whiten`) and the
+//! condition-number guards in `signal::mixing`. Accuracy matters more than
+//! speed here (these run once per experiment, not per sample), so callers
+//! typically invoke them on `Mat<f64>`.
+
+use super::{Mat, Scalar};
+use anyhow::{bail, Result};
+
+/// Inverse of a square matrix via Gauss–Jordan with partial pivoting.
+///
+/// Errors if the matrix is singular (pivot below `eps`).
+pub fn inverse<T: Scalar>(a: &Mat<T>) -> Result<Mat<T>> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("inverse: matrix must be square, got {}x{}", a.rows(), a.cols());
+    }
+    let eps = T::scalar_from_f64(1e-12);
+    // Augmented [A | I], reduced in place.
+    let mut aug = Mat::<T>::from_fn(n, 2 * n, |i, j| {
+        if j < n {
+            a[(i, j)]
+        } else if j - n == i {
+            T::one()
+        } else {
+            T::zero()
+        }
+    });
+
+    for col in 0..n {
+        // Partial pivot: largest |value| in this column at/below the diagonal.
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if aug[(r, col)].abs() > aug[(piv, col)].abs() {
+                piv = r;
+            }
+        }
+        if aug[(piv, col)].abs() < eps {
+            bail!("inverse: singular matrix (pivot {col})");
+        }
+        if piv != col {
+            for j in 0..2 * n {
+                let t = aug[(col, j)];
+                aug[(col, j)] = aug[(piv, j)];
+                aug[(piv, j)] = t;
+            }
+        }
+        let d = aug[(col, col)];
+        for j in 0..2 * n {
+            aug[(col, j)] /= d;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = aug[(r, col)];
+            if f == T::zero() {
+                continue;
+            }
+            for j in 0..2 * n {
+                let v = aug[(col, j)];
+                aug[(r, j)] -= f * v;
+            }
+        }
+    }
+    Ok(Mat::from_fn(n, n, |i, j| aug[(i, j + n)]))
+}
+
+/// Solve `A x = b` for square `A` (Gauss–Jordan; convenience wrapper).
+pub fn solve<T: Scalar>(a: &Mat<T>, b: &[T]) -> Result<Vec<T>> {
+    let inv = inverse(a)?;
+    Ok(inv.matvec(b))
+}
+
+/// Result of [`jacobi_eig`]: `a = V diag(values) V^T`.
+pub struct JacobiEig<T: Scalar> {
+    /// Eigenvalues, descending.
+    pub values: Vec<T>,
+    /// Eigenvectors as *columns* of `V`, matching `values` order.
+    pub vectors: Mat<T>,
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+///
+/// Rotates away the largest off-diagonal elements until the off-diagonal
+/// Frobenius norm falls below `1e-12 * ||A||`, then sorts eigenpairs in
+/// descending eigenvalue order. For the tiny matrices in this codebase
+/// (covariances up to 32×32) this converges in a handful of sweeps.
+pub fn jacobi_eig<T: Scalar>(a: &Mat<T>) -> Result<JacobiEig<T>> {
+    let n = a.rows();
+    if a.cols() != n {
+        bail!("jacobi_eig: matrix must be square");
+    }
+    // Symmetry check (the algorithm silently assumes it otherwise).
+    let max = a.max_abs().max(T::one());
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if (a[(i, j)] - a[(j, i)]).abs() > T::scalar_from_f64(1e-6) * max {
+                bail!("jacobi_eig: matrix is not symmetric at ({i},{j})");
+            }
+        }
+    }
+
+    let mut m = a.clone();
+    let mut v = Mat::<T>::eye(n, n);
+    let tol = T::scalar_from_f64(1e-12) * max;
+    let max_sweeps = 64;
+
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal magnitude.
+        let mut off = T::zero();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= tol {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Classic Jacobi rotation angle.
+                let theta = (aqq - app) / (T::scalar_from_f64(2.0) * apq);
+                let t = {
+                    let s = if theta >= T::zero() { T::one() } else { -T::one() };
+                    s / (theta.abs() + (theta * theta + T::one()).sqrt())
+                };
+                let c = T::one() / (t * t + T::one()).sqrt();
+                let s = t * c;
+
+                // Apply the rotation to rows/cols p and q of `m`.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Sort eigenpairs descending.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| {
+        m[(j, j)].partial_cmp(&m[(i, i)]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let values: Vec<T> = idx.iter().map(|&i| m[(i, i)]).collect();
+    let vectors = Mat::from_fn(n, n, |r, c| v[(r, idx[c])]);
+    Ok(JacobiEig { values, vectors })
+}

@@ -1,0 +1,330 @@
+//! Row-major dense matrix.
+
+use super::Scalar;
+use std::ops::{Add, Index, IndexMut, Mul, Sub};
+
+/// Row-major dense matrix of [`Scalar`] elements.
+///
+/// Sized for the paper's regime (m, n ≤ 32): all loops are simple and
+/// branch-free so the compiler auto-vectorizes them; the `_into` variants
+/// write into caller-provided storage so the EASI hot loop performs zero
+/// allocations per sample (see `ica::easi` and EXPERIMENTS.md §Perf).
+#[derive(Clone, PartialEq)]
+pub struct Mat<T: Scalar> {
+    rows: usize,
+    cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Mat<T> {
+    /// All-zeros `rows × cols` matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![T::zero(); rows * cols] }
+    }
+
+    /// Identity-like matrix (ones on the main diagonal, rectangular OK).
+    pub fn eye(rows: usize, cols: usize) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows.min(cols) {
+            m[(i, i)] = T::one();
+        }
+        m
+    }
+
+    /// Build from a closure over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Build from a row-major flat slice (`data.len() == rows * cols`).
+    pub fn from_slice(rows: usize, cols: usize, data: &[T]) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_slice: wrong length");
+        Self { rows, cols, data: data.to_vec() }
+    }
+
+    /// Build from nested rows (all rows must have equal length).
+    pub fn from_rows(rows: &[&[T]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "from_rows: ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    #[inline(always)]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Flat row-major view of the storage.
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Mutable flat row-major view of the storage.
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[T] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i` as a slice.
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [T] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<T> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Fill every element with `v`.
+    pub fn fill(&mut self, v: T) {
+        self.data.iter_mut().for_each(|e| *e = v);
+    }
+
+    /// Copy the contents of `src` (same shape) into `self`.
+    pub fn copy_from(&mut self, src: &Self) {
+        assert_eq!(self.shape(), src.shape(), "copy_from: shape mismatch");
+        self.data.copy_from_slice(&src.data);
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Self {
+        Self::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(T) -> T) -> Self {
+        Self {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// `self * b` into caller storage (`out` must be `rows × b.cols`).
+    ///
+    /// The workhorse of the hot path: no allocation, i-k-j loop order for
+    /// row-major locality.
+    pub fn matmul_into(&self, b: &Self, out: &mut Self) {
+        assert_eq!(self.cols, b.rows, "matmul: inner dims");
+        assert_eq!(out.shape(), (self.rows, b.cols), "matmul: out shape");
+        out.fill(T::zero());
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self[(i, k)];
+                if aik == T::zero() {
+                    continue;
+                }
+                let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+                let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
+                for j in 0..b.cols {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+
+    /// Allocating `self * b`.
+    pub fn matmul(&self, b: &Self) -> Self {
+        let mut out = Self::zeros(self.rows, b.cols);
+        self.matmul_into(b, &mut out);
+        out
+    }
+
+    /// `y = self * x` (mat-vec) into caller storage.
+    pub fn matvec_into(&self, x: &[T], y: &mut [T]) {
+        assert_eq!(x.len(), self.cols, "matvec: x len");
+        assert_eq!(y.len(), self.rows, "matvec: y len");
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = T::zero();
+            for j in 0..self.cols {
+                acc += row[j] * x[j];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Allocating mat-vec.
+    pub fn matvec(&self, x: &[T]) -> Vec<T> {
+        let mut y = vec![T::zero(); self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// Rank-1 outer product `a b^T` into caller storage.
+    pub fn outer_into(a: &[T], b: &[T], out: &mut Self) {
+        assert_eq!(out.shape(), (a.len(), b.len()), "outer: out shape");
+        for i in 0..a.len() {
+            let ai = a[i];
+            let row = out.row_mut(i);
+            for j in 0..b.len() {
+                row[j] = ai * b[j];
+            }
+        }
+    }
+
+    /// Allocating outer product `a b^T`.
+    pub fn outer(a: &[T], b: &[T]) -> Self {
+        let mut out = Self::zeros(a.len(), b.len());
+        Self::outer_into(a, b, &mut out);
+        out
+    }
+
+    /// In-place `self += alpha * other` (same shape).
+    pub fn axpy(&mut self, alpha: T, other: &Self) {
+        assert_eq!(self.shape(), other.shape(), "axpy: shape mismatch");
+        for (d, s) in self.data.iter_mut().zip(other.data.iter()) {
+            *d += alpha * *s;
+        }
+    }
+
+    /// In-place `self *= alpha`.
+    pub fn scale(&mut self, alpha: T) {
+        self.data.iter_mut().for_each(|v| *v *= alpha);
+    }
+
+    /// In-place rank-1 update `self += alpha * a b^T`.
+    pub fn rank1_update(&mut self, alpha: T, a: &[T], b: &[T]) {
+        assert_eq!(self.shape(), (a.len(), b.len()), "rank1: shape mismatch");
+        for i in 0..a.len() {
+            let s = alpha * a[i];
+            let row = self.row_mut(i);
+            for j in 0..b.len() {
+                row[j] += s * b[j];
+            }
+        }
+    }
+
+    /// In-place `self -= alpha * I` (subtract from the main diagonal).
+    pub fn sub_scaled_identity(&mut self, alpha: T) {
+        for i in 0..self.rows.min(self.cols) {
+            self[(i, i)] -= alpha;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> T {
+        self.data.iter().map(|&v| v * v).sum::<T>().sqrt()
+    }
+
+    /// Largest absolute element.
+    pub fn max_abs(&self) -> T {
+        self.data.iter().fold(T::zero(), |m, &v| m.max(v.abs()))
+    }
+
+    /// True if every element is finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+
+    /// Max elementwise absolute difference (∞-norm distance).
+    pub fn max_abs_diff(&self, other: &Self) -> T {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .fold(T::zero(), |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// Convert element type (e.g. `f32` ↔ `f64`).
+    pub fn cast<U: Scalar>(&self) -> Mat<U> {
+        Mat::<U> {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|v| U::scalar_from_f64(v.scalar_to_f64())).collect(),
+        }
+    }
+}
+
+impl<T: Scalar> Index<(usize, usize)> for Mat<T> {
+    type Output = T;
+    #[inline(always)]
+    fn index(&self, (i, j): (usize, usize)) -> &T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl<T: Scalar> IndexMut<(usize, usize)> for Mat<T> {
+    #[inline(always)]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut T {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl<T: Scalar> Mul for &Mat<T> {
+    type Output = Mat<T>;
+    fn mul(self, rhs: &Mat<T>) -> Mat<T> {
+        self.matmul(rhs)
+    }
+}
+
+impl<T: Scalar> Add for &Mat<T> {
+    type Output = Mat<T>;
+    fn add(self, rhs: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.shape(), rhs.shape());
+        let mut out = self.clone();
+        out.axpy(T::one(), rhs);
+        out
+    }
+}
+
+impl<T: Scalar> Sub for &Mat<T> {
+    type Output = Mat<T>;
+    fn sub(self, rhs: &Mat<T>) -> Mat<T> {
+        assert_eq!(self.shape(), rhs.shape());
+        let mut out = self.clone();
+        out.axpy(-T::one(), rhs);
+        out
+    }
+}
+
+impl<T: Scalar> std::fmt::Debug for Mat<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows {
+            write!(f, "  [")?;
+            for j in 0..self.cols {
+                if j > 0 {
+                    write!(f, ", ")?;
+                }
+                write!(f, "{:10.5}", self[(i, j)])?;
+            }
+            writeln!(f, "]")?;
+        }
+        write!(f, "]")
+    }
+}

@@ -1,0 +1,28 @@
+//! Small dense linear algebra substrate.
+//!
+//! The paper's workloads are tiny (m, n ≤ 16), so this is a deliberately
+//! simple row-major dense library tuned for *small* matrices on the hot
+//! path: no heap allocation inside the inner update loops (callers reuse
+//! scratch buffers), generic over `f32`/`f64` via [`Scalar`].
+//!
+//! Contents:
+//! - [`Mat`]: row-major dense matrix with the operations EASI needs
+//!   (mat-vec, mat-mat, outer products, AXPY-style in-place updates).
+//! - [`decomp`]: Gauss–Jordan inverse/solve and cyclic Jacobi symmetric
+//!   eigendecomposition (used by whitening and FastICA).
+
+pub mod decomp;
+mod mat;
+mod scalar;
+
+pub use decomp::{inverse, jacobi_eig, solve, JacobiEig};
+pub use mat::Mat;
+pub use scalar::Scalar;
+
+/// `f32` matrix — the type used on the request path (paper uses 32-bit FP).
+pub type Mat32 = Mat<f32>;
+/// `f64` matrix — used inside decompositions and metrics for accuracy.
+pub type Mat64 = Mat<f64>;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,39 @@
+//! Scalar trait bound for the dense linear algebra substrate.
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+
+/// Floating-point scalar usable in [`crate::linalg::Mat`].
+///
+/// A thin alias over `num_traits::Float` plus the std traits the library
+/// needs; implemented by `f32` and `f64`.
+pub trait Scalar:
+    num_traits::Float + num_traits::NumAssign + Sum + Debug + Display + Default + Send + Sync + 'static
+{
+    /// Lossy conversion from `f64` (for literals/constants in generic code).
+    fn scalar_from_f64(v: f64) -> Self;
+    /// Lossless widening to `f64` (for accumulation and metrics).
+    fn scalar_to_f64(self) -> f64;
+}
+
+impl Scalar for f32 {
+    #[inline(always)]
+    fn scalar_from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline(always)]
+    fn scalar_to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Scalar for f64 {
+    #[inline(always)]
+    fn scalar_from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline(always)]
+    fn scalar_to_f64(self) -> f64 {
+        self
+    }
+}

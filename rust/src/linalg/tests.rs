@@ -1,0 +1,169 @@
+//! Unit + property tests for the linalg substrate.
+
+use super::*;
+use crate::signal::rng::Pcg32;
+use crate::testkit::{check, Config};
+
+fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat64 {
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+#[test]
+fn eye_matmul_identity() {
+    let i = Mat64::eye(3, 3);
+    let a = Mat64::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0], &[7.0, 8.0, 10.0]]);
+    assert_eq!(i.matmul(&a), a);
+    assert_eq!(a.matmul(&i), a);
+}
+
+#[test]
+fn matmul_known_values() {
+    let a = Mat64::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+    let b = Mat64::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+    let c = a.matmul(&b);
+    assert_eq!(c.as_slice(), &[19.0, 22.0, 43.0, 50.0]);
+}
+
+#[test]
+fn matvec_matches_matmul() {
+    let mut rng = Pcg32::seed(1);
+    let a = rand_mat(&mut rng, 4, 3);
+    let x: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+    let y = a.matvec(&x);
+    let xm = Mat64::from_fn(3, 1, |i, _| x[i]);
+    let ym = a.matmul(&xm);
+    for i in 0..4 {
+        assert!((y[i] - ym[(i, 0)]).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn transpose_involution() {
+    let mut rng = Pcg32::seed(2);
+    let a = rand_mat(&mut rng, 3, 5);
+    assert_eq!(a.transpose().transpose(), a);
+}
+
+#[test]
+fn outer_rank1() {
+    let a = [1.0, 2.0];
+    let b = [3.0, 4.0, 5.0];
+    let o = Mat64::outer(&a, &b);
+    assert_eq!(o.shape(), (2, 3));
+    assert_eq!(o[(1, 2)], 10.0);
+}
+
+#[test]
+fn rank1_update_matches_outer_axpy() {
+    let mut rng = Pcg32::seed(3);
+    let mut m = rand_mat(&mut rng, 3, 3);
+    let m0 = m.clone();
+    let a: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..3).map(|_| rng.normal()).collect();
+    m.rank1_update(0.7, &a, &b);
+    let mut want = m0;
+    want.axpy(0.7, &Mat64::outer(&a, &b));
+    assert!(m.max_abs_diff(&want) < 1e-12);
+}
+
+#[test]
+fn cast_roundtrip_f32() {
+    let a = Mat64::from_rows(&[&[1.5, -2.25], &[0.125, 4.0]]);
+    let b: Mat<f32> = a.cast();
+    let c: Mat64 = b.cast();
+    assert_eq!(a, c); // all values exactly representable in f32
+}
+
+#[test]
+#[should_panic]
+fn matmul_dim_mismatch_panics() {
+    let a = Mat64::zeros(2, 3);
+    let b = Mat64::zeros(2, 3);
+    let _ = a.matmul(&b);
+}
+
+#[test]
+fn inverse_reconstructs_identity() {
+    check("A * A^-1 = I", Config::default(), |rng| {
+        let n = 1 + (rng.next_u32() % 6) as usize;
+        // Diagonally-dominant => comfortably invertible.
+        let mut a = rand_mat(rng, n, n);
+        for i in 0..n {
+            a[(i, i)] += 5.0;
+        }
+        let inv = inverse(&a).expect("invertible");
+        let prod = a.matmul(&inv);
+        let eye = Mat64::eye(n, n);
+        prod.max_abs_diff(&eye) < 1e-8
+    });
+}
+
+#[test]
+fn inverse_singular_errors() {
+    let a = Mat64::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+    assert!(inverse(&a).is_err());
+}
+
+#[test]
+fn inverse_rejects_nonsquare() {
+    assert!(inverse(&Mat64::zeros(2, 3)).is_err());
+}
+
+#[test]
+fn solve_known_system() {
+    let a = Mat64::from_rows(&[&[2.0, 0.0], &[0.0, 4.0]]);
+    let x = solve(&a, &[2.0, 8.0]).unwrap();
+    assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn jacobi_eig_diagonal() {
+    let a = Mat64::from_rows(&[&[3.0, 0.0], &[0.0, 1.0]]);
+    let e = jacobi_eig(&a).unwrap();
+    assert!((e.values[0] - 3.0).abs() < 1e-12);
+    assert!((e.values[1] - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn jacobi_eig_reconstructs() {
+    check("V diag(w) V^T = A", Config::default(), |rng| {
+        let n = 2 + (rng.next_u32() % 5) as usize;
+        let b = rand_mat(rng, n, n);
+        let a = &b + &b.transpose(); // symmetric
+        let e = jacobi_eig(&a).expect("eig");
+        let d = Mat64::from_fn(n, n, |i, j| if i == j { e.values[i] } else { 0.0 });
+        let rec = e.vectors.matmul(&d).matmul(&e.vectors.transpose());
+        rec.max_abs_diff(&a) < 1e-8
+    });
+}
+
+#[test]
+fn jacobi_eig_orthonormal_vectors() {
+    check("V^T V = I", Config::default(), |rng| {
+        let n = 2 + (rng.next_u32() % 5) as usize;
+        let b = rand_mat(rng, n, n);
+        let a = &b + &b.transpose();
+        let e = jacobi_eig(&a).expect("eig");
+        let vtv = e.vectors.transpose().matmul(&e.vectors);
+        vtv.max_abs_diff(&Mat64::eye(n, n)) < 1e-8
+    });
+}
+
+#[test]
+fn jacobi_eig_values_descending() {
+    let mut rng = Pcg32::seed(9);
+    for _ in 0..20 {
+        let b = rand_mat(&mut rng, 4, 4);
+        let a = &b + &b.transpose();
+        let e = jacobi_eig(&a).unwrap();
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+}
+
+#[test]
+fn jacobi_eig_rejects_asymmetric() {
+    let a = Mat64::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+    assert!(jacobi_eig(&a).is_err());
+}

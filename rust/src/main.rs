@@ -1,0 +1,266 @@
+//! `easi-ica` — leader entrypoint.
+//!
+//! Maps CLI commands to the experiment drivers (DESIGN.md §6) and the
+//! streaming coordinator. Run `easi-ica help` for the command list.
+
+use anyhow::{bail, Result};
+use easi_ica::cli::{usage, Args};
+use easi_ica::config::{EngineKind, ExperimentConfig, OptimizerKind};
+use easi_ica::coordinator::{run_experiment, RunSummary};
+use easi_ica::experiments::{
+    a1_hyper_sweep, a2_nonlinearity, a3_adaptive_tracking, e1_convergence, e3_depth_sweep,
+    E1Params, TrackingParams,
+};
+use easi_ica::fpga::{self, Calib};
+use easi_ica::ica::{fastica, FastIcaParams, Nonlinearity, SmbgdParams};
+use easi_ica::signal::Dataset;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "run" => cmd_run(args),
+        "convergence" => cmd_convergence(args),
+        "table1" => cmd_table1(args),
+        "depth-sweep" => cmd_depth_sweep(args),
+        "ablation" => cmd_ablation(args),
+        "tracking" => cmd_tracking(args),
+        "dump-datapath" => cmd_dump_datapath(args),
+        "separate" => cmd_separate(args),
+        "help" | "" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'; see `easi-ica help`"),
+    }
+}
+
+/// `run` — stream an experiment through the coordinator.
+fn cmd_run(args: &Args) -> Result<()> {
+    args.expect_only(&[
+        "config", "m", "n", "optimizer", "engine", "samples", "mu", "gamma", "beta", "p",
+        "mixing", "omega", "seed", "artifacts",
+    ])?;
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::load(path)?
+    } else {
+        ExperimentConfig::default()
+    };
+    // Flag overrides.
+    cfg.m = args.get_usize("m", cfg.m)?;
+    cfg.n = args.get_usize("n", cfg.n)?;
+    cfg.samples = args.get_usize("samples", cfg.samples)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.optimizer.mu = args.get_f64("mu", cfg.optimizer.mu)?;
+    cfg.optimizer.gamma = args.get_f64("gamma", cfg.optimizer.gamma)?;
+    cfg.optimizer.beta = args.get_f64("beta", cfg.optimizer.beta)?;
+    cfg.optimizer.p = args.get_usize("p", cfg.optimizer.p)?;
+    if let Some(o) = args.get("optimizer") {
+        cfg.optimizer.kind = OptimizerKind::parse(o)?;
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.engine = EngineKind::parse(e)?;
+    }
+    if let Some(mx) = args.get("mixing") {
+        cfg.signal.mixing = mx.to_string();
+    }
+    cfg.signal.omega = args.get_f64("omega", cfg.signal.omega)?;
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    } else if cfg.engine == EngineKind::Pjrt {
+        cfg.artifacts_dir =
+            easi_ica::runtime::default_artifacts_dir().to_string_lossy().into_owned();
+    }
+    cfg.validate()?;
+
+    println!(
+        "running: optimizer {}, m={} n={}, {} samples, mixing {}",
+        cfg.optimizer.kind.name(),
+        cfg.m,
+        cfg.n,
+        cfg.samples,
+        cfg.signal.mixing
+    );
+    let summary = run_experiment(&cfg, Nonlinearity::Cube)?;
+    print_summary(&summary);
+    Ok(())
+}
+
+fn print_summary(s: &RunSummary) {
+    println!("engine:       {}", s.engine);
+    println!("samples:      {} (+{} tail dropped)", s.samples, s.tail_dropped);
+    println!("elapsed:      {:.3} s", s.elapsed_secs);
+    println!("throughput:   {:.0} samples/s", s.throughput_sps);
+    println!("final amari:  {:.4}", s.final_amari);
+    match s.converged_at {
+        Some(at) => println!("converged at: {at} samples"),
+        None => println!("converged at: (not converged)"),
+    }
+    // Compact trajectory snapshot.
+    let hist = &s.amari_history;
+    if hist.len() > 5 {
+        print!("trajectory:   ");
+        for p in hist.iter().step_by((hist.len() / 5).max(1)) {
+            print!("{}:{:.3} ", p.samples, p.amari);
+        }
+        println!();
+    }
+}
+
+/// `convergence` — E1.
+fn cmd_convergence(args: &Args) -> Result<()> {
+    args.expect_only(&[
+        "runs", "m", "n", "mu", "gamma", "beta", "p", "max-samples", "rate-matched",
+    ])?;
+    let defaults = E1Params::default();
+    let params = E1Params {
+        m: args.get_usize("m", defaults.m)?,
+        n: args.get_usize("n", defaults.n)?,
+        runs: args.get_usize("runs", defaults.runs)?,
+        max_samples: args.get_usize("max-samples", defaults.max_samples)?,
+        smbgd: SmbgdParams {
+            mu: args.get_f64("mu", defaults.smbgd.mu)?,
+            gamma: args.get_f64("gamma", defaults.smbgd.gamma)?,
+            beta: args.get_f64("beta", defaults.smbgd.beta)?,
+            p: args.get_usize("p", defaults.smbgd.p)?,
+        },
+        rate_matched: args.get_str("rate-matched", "false") == "true",
+        ..defaults
+    };
+    let result = e1_convergence(&params);
+    println!("sgd mu used: {:.6}", result.sgd_mu_used);
+    println!("{}", result.render());
+    Ok(())
+}
+
+/// `table1` — E2.
+fn cmd_table1(args: &Args) -> Result<()> {
+    args.expect_only(&["m", "n", "g", "format"])?;
+    let m = args.get_usize("m", 4)?;
+    let n = args.get_usize("n", 2)?;
+    let g = Nonlinearity::parse(&args.get_str("g", "cube"))?;
+    let calib = match args.get_str("format", "float").as_str() {
+        "float" => Calib::default(),
+        "fixed16" => Calib::fixed_point(16),
+        "fixed32" => Calib::fixed_point(32),
+        other => bail!("unknown format '{other}' (float|fixed16|fixed32)"),
+    };
+    let t = fpga::table1(m, n, g, &calib);
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// `depth-sweep` — E3.
+fn cmd_depth_sweep(args: &Args) -> Result<()> {
+    args.expect_only(&[])?;
+    let configs = [(2, 2), (4, 2), (4, 4), (8, 4), (8, 8), (16, 8)];
+    let rows = e3_depth_sweep(&configs, &Calib::default());
+    println!("{}", easi_ica::experiments::sweeps::render_depth_sweep(&rows));
+    Ok(())
+}
+
+/// `ablation` — A1 / A2.
+fn cmd_ablation(args: &Args) -> Result<()> {
+    args.expect_only(&["what", "runs", "seed"])?;
+    let runs = args.get_usize("runs", 8)?;
+    let seed = args.get_u64("seed", 0xAB1)?;
+    match args.get_str("what", "hyper").as_str() {
+        "hyper" => {
+            let rows = a1_hyper_sweep(
+                &[0.0, 0.3, 0.55, 0.8],
+                &[0.85, 0.95, 1.0],
+                &[4, 8, 16],
+                runs,
+                seed,
+            );
+            println!("{}", easi_ica::experiments::sweeps::render_hyper_sweep(&rows));
+        }
+        "nonlinearity" => {
+            let rows = a2_nonlinearity(runs, seed, &Calib::default());
+            println!("{}", easi_ica::experiments::sweeps::render_nonlinearity(&rows));
+        }
+        other => bail!("unknown ablation '{other}' (hyper|nonlinearity)"),
+    }
+    Ok(())
+}
+
+/// `tracking` — A3.
+fn cmd_tracking(args: &Args) -> Result<()> {
+    args.expect_only(&["omega", "samples", "m", "n", "seed"])?;
+    let d = TrackingParams::default();
+    let params = TrackingParams {
+        m: args.get_usize("m", d.m)?,
+        n: args.get_usize("n", d.n)?,
+        omega: args.get_f64("omega", d.omega)?,
+        samples: args.get_usize("samples", d.samples)?,
+        seed: args.get_u64("seed", d.seed)?,
+        ..d
+    };
+    let r = a3_adaptive_tracking(&params);
+    println!("{}", r.render());
+    Ok(())
+}
+
+/// `dump-datapath` — E4 (the executable Figs. 1–2).
+fn cmd_dump_datapath(args: &Args) -> Result<()> {
+    args.expect_only(&["m", "n", "arch", "g"])?;
+    let m = args.get_usize("m", 4)?;
+    let n = args.get_usize("n", 2)?;
+    let g = Nonlinearity::parse(&args.get_str("g", "cube"))?;
+    let arch = args.get_str("arch", "smbgd");
+    let dp = match arch.as_str() {
+        "sgd" => fpga::build_easi_sgd(m, n, g),
+        "smbgd" => fpga::build_easi_smbgd(m, n, g),
+        other => bail!("unknown arch '{other}' (sgd|smbgd)"),
+    };
+    println!("{}", dp.summary());
+    let calib = Calib::default();
+    let timing = if arch == "sgd" {
+        fpga::analyze_unpipelined(&dp, &calib)
+    } else {
+        fpga::analyze_pipelined(&dp, &calib, fpga::pipeline_depth(m, n))
+    };
+    println!(
+        "critical path {:.1} ns | {} stage(s) | fmax {:.2} MHz",
+        timing.critical_path_ns, timing.stages, timing.fmax_mhz
+    );
+    let res = fpga::estimate(&dp, &timing, &calib);
+    println!(
+        "ALMs {} | DSPs {} | registers {} bits (pipeline {} + state {} + control {})",
+        res.alms,
+        res.dsps,
+        res.register_bits,
+        res.pipeline_register_bits,
+        res.state_register_bits,
+        res.register_bits - res.pipeline_register_bits - res.state_register_bits
+    );
+    Ok(())
+}
+
+/// `separate` — FastICA baseline on a synthetic dataset.
+fn cmd_separate(args: &Args) -> Result<()> {
+    args.expect_only(&["m", "n", "samples", "seed"])?;
+    let m = args.get_usize("m", 4)?;
+    let n = args.get_usize("n", 2)?;
+    let samples = args.get_usize("samples", 20_000)?;
+    let seed = args.get_u64("seed", 0)?;
+    let ds = Dataset::standard(seed, m, n, samples);
+    let res = fastica(&ds.x, n, FastIcaParams::default())?;
+    let c = res.b.matmul(&ds.a);
+    println!("fastica: {} iterations, delta {:.2e}", res.iterations, res.delta);
+    println!("amari index: {:.4}", easi_ica::ica::amari_index(&c));
+    println!("SIR: {:.1} dB", easi_ica::ica::sir_db(&c));
+    Ok(())
+}

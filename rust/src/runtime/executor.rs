@@ -1,0 +1,193 @@
+//! PJRT executor: loads HLO-text artifacts, compiles them once on the CPU
+//! PJRT client, and runs them from the request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. Text (not
+//! serialized proto) is the interchange format — see `python/compile/aot.py`.
+//!
+//! Compilation is cached per program name: the first call pays the XLA
+//! compile, every later call is execute-only (measured in EXPERIMENTS.md
+//! §Perf).
+
+use super::manifest::{Manifest, ProgramKind, ProgramMeta};
+use super::literal::{literal_to_mat, mat_to_literal, scalar_to_literal};
+use crate::linalg::Mat64;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled, ready-to-execute program.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ProgramMeta,
+}
+
+/// PJRT runtime: client + manifest + executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Compiled>,
+}
+
+/// Result of one SMBGD chunk execution.
+pub struct SmbgdChunkOut {
+    pub b: Mat64,
+    pub hhat: Mat64,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU-PJRT runtime over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) a program by name.
+    fn compiled(&mut self, name: &str) -> Result<&Compiled> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .programs
+                .get(name)
+                .with_context(|| format!("program '{name}' not in manifest"))?
+                .clone();
+            let path = self.manifest.hlo_path(&meta);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of '{name}'"))?;
+            self.cache.insert(name.to_string(), Compiled { exe, meta });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Pre-compile every program in the manifest (warm start for servers).
+    pub fn warm_all(&mut self) -> Result<usize> {
+        let names: Vec<String> = self.manifest.programs.keys().cloned().collect();
+        for name in &names {
+            self.compiled(name)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Number of programs compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute `easi_sgd_chunk`: `B' = program(B, X, mu)`.
+    ///
+    /// `xs` must be exactly `T × m` for the named program's T.
+    pub fn run_sgd_chunk(&mut self, name: &str, b: &Mat64, xs: &Mat64, mu: f64) -> Result<Mat64> {
+        let c = self.compiled(name)?;
+        if c.meta.kind != ProgramKind::Sgd {
+            bail!("program '{name}' is not an sgd chunk");
+        }
+        let (n, m, t) = (c.meta.n, c.meta.m, c.meta.t.unwrap());
+        anyhow::ensure!(b.shape() == (n, m), "B shape {:?} != ({n},{m})", b.shape());
+        anyhow::ensure!(xs.shape() == (t, m), "X shape {:?} != ({t},{m})", xs.shape());
+
+        let lit_b = mat_to_literal(b, &[n as i64, m as i64])?;
+        let lit_x = mat_to_literal(xs, &[t as i64, m as i64])?;
+        let lit_mu = scalar_to_literal(mu)?;
+        let result = c.exe.execute::<xla::Literal>(&[lit_b, lit_x, lit_mu])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: a 1-tuple here.
+        let out = result.to_tuple1().context("unwrapping sgd 1-tuple")?;
+        literal_to_mat(&out, n, m)
+    }
+
+    /// Execute `easi_smbgd_chunk`: `(B', Ĥ') = program(B, Ĥ, X, γ, β, μ)`.
+    ///
+    /// `xs` is flattened `(K·P) × m`, row-major in stream order.
+    pub fn run_smbgd_chunk(
+        &mut self,
+        name: &str,
+        b: &Mat64,
+        hhat: &Mat64,
+        xs: &Mat64,
+        gamma: f64,
+        beta: f64,
+        mu: f64,
+    ) -> Result<SmbgdChunkOut> {
+        let c = self.compiled(name)?;
+        if c.meta.kind != ProgramKind::Smbgd {
+            bail!("program '{name}' is not an smbgd chunk");
+        }
+        let (n, m) = (c.meta.n, c.meta.m);
+        let (p, k) = (c.meta.p.unwrap(), c.meta.k.unwrap());
+        anyhow::ensure!(b.shape() == (n, m), "B shape mismatch");
+        anyhow::ensure!(hhat.shape() == (n, n), "Hhat shape mismatch");
+        anyhow::ensure!(
+            xs.shape() == (k * p, m),
+            "X shape {:?} != ({},{m})",
+            xs.shape(),
+            k * p
+        );
+
+        let lit_b = mat_to_literal(b, &[n as i64, m as i64])?;
+        let lit_h = mat_to_literal(hhat, &[n as i64, n as i64])?;
+        let lit_x = mat_to_literal(xs, &[k as i64, p as i64, m as i64])?;
+        let args = [
+            lit_b,
+            lit_h,
+            lit_x,
+            scalar_to_literal(gamma)?,
+            scalar_to_literal(beta)?,
+            scalar_to_literal(mu)?,
+        ];
+        let result = c.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (out_b, out_h) = result.to_tuple2().context("unwrapping smbgd 2-tuple")?;
+        Ok(SmbgdChunkOut {
+            b: literal_to_mat(&out_b, n, m)?,
+            hhat: literal_to_mat(&out_h, n, n)?,
+        })
+    }
+
+    /// Execute `separate_chunk`: `Y = X Bᵀ` (inference path).
+    pub fn run_separate(&mut self, name: &str, b: &Mat64, xs: &Mat64) -> Result<Mat64> {
+        let c = self.compiled(name)?;
+        if c.meta.kind != ProgramKind::Separate {
+            bail!("program '{name}' is not a separate chunk");
+        }
+        let (n, m, t) = (c.meta.n, c.meta.m, c.meta.t.unwrap());
+        anyhow::ensure!(b.shape() == (n, m) && xs.shape() == (t, m), "shape mismatch");
+        let lit_b = mat_to_literal(b, &[n as i64, m as i64])?;
+        let lit_x = mat_to_literal(xs, &[t as i64, m as i64])?;
+        let result = c.exe.execute::<xla::Literal>(&[lit_b, lit_x])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping separate 1-tuple")?;
+        literal_to_mat(&out, t, n)
+    }
+
+    /// Execute `easi_grad`: `H = H(B, x)` (single sample, test path).
+    pub fn run_grad(&mut self, name: &str, b: &Mat64, x: &[f64]) -> Result<Mat64> {
+        let c = self.compiled(name)?;
+        if c.meta.kind != ProgramKind::Grad {
+            bail!("program '{name}' is not a grad program");
+        }
+        let (n, m) = (c.meta.n, c.meta.m);
+        anyhow::ensure!(b.shape() == (n, m) && x.len() == m, "shape mismatch");
+        let lit_b = mat_to_literal(b, &[n as i64, m as i64])?;
+        let lit_x = super::literal::slice_to_literal(x);
+        let result = c.exe.execute::<xla::Literal>(&[lit_b, lit_x])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping grad 1-tuple")?;
+        literal_to_mat(&out, n, n)
+    }
+}

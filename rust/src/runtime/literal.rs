@@ -1,0 +1,90 @@
+//! Conversions between `linalg::Mat` and `xla::Literal`.
+//!
+//! The artifacts are 32-bit float programs (the paper's hardware is 32-bit
+//! FP), while the native side computes in f64; conversions narrow/widen at
+//! this boundary only.
+
+use crate::linalg::{Mat32, Mat64};
+use anyhow::{Context, Result};
+
+/// Row-major `Mat64` → f32 literal of shape `dims` (product must match).
+pub fn mat_to_literal(m: &Mat64, dims: &[i64]) -> Result<xla::Literal> {
+    let data: Vec<f32> = m.as_slice().iter().map(|&v| v as f32).collect();
+    let numel: i64 = dims.iter().product();
+    anyhow::ensure!(
+        numel as usize == data.len(),
+        "mat_to_literal: {} elements vs dims {:?}",
+        data.len(),
+        dims
+    );
+    xla::Literal::vec1(&data)
+        .reshape(dims)
+        .context("reshaping literal")
+}
+
+/// `&[f64]` → rank-1 f32 literal.
+pub fn slice_to_literal(v: &[f64]) -> xla::Literal {
+    let data: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&data)
+}
+
+/// Scalar f64 → rank-0 f32 literal.
+pub fn scalar_to_literal(v: f64) -> Result<xla::Literal> {
+    xla::Literal::vec1(&[v as f32])
+        .reshape(&[])
+        .context("reshaping scalar literal")
+}
+
+/// f32 literal (any shape) → `Mat64` with the given rows × cols.
+pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat64> {
+    let v: Vec<f32> = lit.to_vec().context("literal to_vec<f32>")?;
+    anyhow::ensure!(
+        v.len() == rows * cols,
+        "literal_to_mat: {} elements vs {}x{}",
+        v.len(),
+        rows,
+        cols
+    );
+    Ok(Mat64::from_fn(rows, cols, |i, j| v[i * cols + j] as f64))
+}
+
+/// f32 literal → `Mat32`.
+pub fn literal_to_mat32(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat32> {
+    let v: Vec<f32> = lit.to_vec().context("literal to_vec<f32>")?;
+    anyhow::ensure!(v.len() == rows * cols, "literal_to_mat32: size mismatch");
+    Ok(Mat32::from_slice(rows, cols, &v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_round_trip() {
+        let m = Mat64::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let lit = mat_to_literal(&m, &[2, 2]).unwrap();
+        let back = literal_to_mat(&lit, 2, 2).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn wrong_dims_rejected() {
+        let m = Mat64::zeros(2, 2);
+        assert!(mat_to_literal(&m, &[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = scalar_to_literal(0.25).unwrap();
+        let v: Vec<f32> = lit.to_vec().unwrap();
+        assert_eq!(v, vec![0.25f32]);
+    }
+
+    #[test]
+    fn narrows_to_f32() {
+        let m = Mat64::from_rows(&[&[1.0 + 1e-12]]);
+        let lit = mat_to_literal(&m, &[1, 1]).unwrap();
+        let back = literal_to_mat(&lit, 1, 1).unwrap();
+        assert_eq!(back[(0, 0)], 1.0); // 1+1e-12 not representable in f32
+    }
+}

@@ -1,0 +1,218 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! One line per compiled program, `key=value` fields separated by spaces
+//! (deliberately trivial to parse — no serde in this environment):
+//!
+//! ```text
+//! name=easi_smbgd_m4_n2_p8_k8 file=easi_smbgd_m4_n2_p8_k8.hlo.txt kind=smbgd m=4 n=2 p=8 k=8
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Program kind, mirroring `aot.py`'s `variants()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProgramKind {
+    /// `(B, X[T,m], mu) -> B`
+    Sgd,
+    /// `(B, Hhat, X[K,P,m], gamma, beta, mu) -> (B, Hhat)`
+    Smbgd,
+    /// `(B, X[T,m]) -> Y[T,n]`
+    Separate,
+    /// `(B, x[m]) -> H[n,n]`
+    Grad,
+}
+
+impl ProgramKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sgd" => Self::Sgd,
+            "smbgd" => Self::Smbgd,
+            "separate" => Self::Separate,
+            "grad" => Self::Grad,
+            other => bail!("unknown program kind '{other}'"),
+        })
+    }
+}
+
+/// Metadata for one AOT-compiled program.
+#[derive(Clone, Debug)]
+pub struct ProgramMeta {
+    pub name: String,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: PathBuf,
+    pub kind: ProgramKind,
+    /// Mixture dimensionality m.
+    pub m: usize,
+    /// Component dimensionality n.
+    pub n: usize,
+    /// Chunk length T (sgd / separate).
+    pub t: Option<usize>,
+    /// Mini-batch size P (smbgd).
+    pub p: Option<usize>,
+    /// Mini-batches per chunk K (smbgd).
+    pub k: Option<usize>,
+}
+
+impl ProgramMeta {
+    /// Samples consumed per invocation of this program.
+    pub fn chunk_samples(&self) -> usize {
+        match self.kind {
+            ProgramKind::Sgd | ProgramKind::Separate => self.t.unwrap_or(1),
+            ProgramKind::Smbgd => self.p.unwrap_or(1) * self.k.unwrap_or(1),
+            ProgramKind::Grad => 1,
+        }
+    }
+}
+
+/// Parsed manifest: programs indexed by name.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub programs: BTreeMap<String, ProgramMeta>,
+    /// Directory the manifest was loaded from (base for `file` paths).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let mut programs = BTreeMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let meta = Self::parse_line(line)
+                .with_context(|| format!("manifest line {}", i + 1))?;
+            if programs.insert(meta.name.clone(), meta).is_some() {
+                bail!("duplicate program name at manifest line {}", i + 1);
+            }
+        }
+        if programs.is_empty() {
+            bail!("manifest {} lists no programs", path.display());
+        }
+        Ok(Self { programs, dir })
+    }
+
+    fn parse_line(line: &str) -> Result<ProgramMeta> {
+        let mut fields = BTreeMap::new();
+        for part in line.split_whitespace() {
+            let (k, v) = part
+                .split_once('=')
+                .with_context(|| format!("field '{part}' is not key=value"))?;
+            fields.insert(k.to_string(), v.to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            fields.get(k).with_context(|| format!("missing field '{k}'"))
+        };
+        let get_usize = |k: &str| -> Result<usize> {
+            get(k)?.parse::<usize>().with_context(|| format!("field '{k}' not an integer"))
+        };
+        let opt_usize = |k: &str| -> Result<Option<usize>> {
+            fields
+                .get(k)
+                .map(|v| v.parse::<usize>().with_context(|| format!("bad '{k}'")))
+                .transpose()
+        };
+        Ok(ProgramMeta {
+            name: get("name")?.clone(),
+            file: PathBuf::from(get("file")?),
+            kind: ProgramKind::parse(get("kind")?)?,
+            m: get_usize("m")?,
+            n: get_usize("n")?,
+            t: opt_usize("t")?,
+            p: opt_usize("p")?,
+            k: opt_usize("k")?,
+        })
+    }
+
+    /// Absolute path of a program's HLO file.
+    pub fn hlo_path(&self, meta: &ProgramMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Find a program by kind and dimensions (first match, name order).
+    pub fn find(&self, kind: ProgramKind, m: usize, n: usize) -> Option<&ProgramMeta> {
+        self.programs
+            .values()
+            .find(|p| p.kind == kind && p.m == m && p.n == n)
+    }
+
+    /// Find an smbgd program with a specific (P, K).
+    pub fn find_smbgd(&self, m: usize, n: usize, p: usize, k: usize) -> Option<&ProgramMeta> {
+        self.programs.values().find(|q| {
+            q.kind == ProgramKind::Smbgd
+                && q.m == m
+                && q.n == n
+                && q.p == Some(p)
+                && q.k == Some(k)
+        })
+    }
+
+    /// Find the smbgd program with exact mini-batch size P and the
+    /// largest chunk (K): same algorithm semantics, best per-call
+    /// dispatch amortization (EXPERIMENTS.md §Perf).
+    pub fn find_smbgd_largest_k(&self, m: usize, n: usize, p: usize) -> Option<&ProgramMeta> {
+        self.programs
+            .values()
+            .filter(|q| q.kind == ProgramKind::Smbgd && q.m == m && q.n == n && q.p == Some(p))
+            .max_by_key(|q| q.k.unwrap_or(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_line_full() {
+        let meta = Manifest::parse_line(
+            "name=easi_smbgd_m4_n2_p8_k8 file=x.hlo.txt kind=smbgd m=4 n=2 p=8 k=8",
+        )
+        .unwrap();
+        assert_eq!(meta.kind, ProgramKind::Smbgd);
+        assert_eq!((meta.m, meta.n), (4, 2));
+        assert_eq!(meta.chunk_samples(), 64);
+    }
+
+    #[test]
+    fn parse_line_sgd() {
+        let meta =
+            Manifest::parse_line("name=s file=s.hlo.txt kind=sgd m=4 n=2 t=64").unwrap();
+        assert_eq!(meta.kind, ProgramKind::Sgd);
+        assert_eq!(meta.chunk_samples(), 64);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(Manifest::parse_line("name=s kind=sgd m=4 n=2").is_err());
+        assert!(Manifest::parse_line("file=f kind=sgd m=4 n=2").is_err());
+    }
+
+    #[test]
+    fn bad_kind_errors() {
+        assert!(Manifest::parse_line("name=s file=f kind=magic m=4 n=2").is_err());
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        // Integration-style: only runs when `make artifacts` has been run.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.txt").exists() {
+            eprintln!("skipping: no artifacts present");
+            return;
+        }
+        let man = Manifest::load(dir).unwrap();
+        assert!(man.find(ProgramKind::Sgd, 4, 2).is_some());
+        assert!(man.find_smbgd(4, 2, 8, 8).is_some());
+        for meta in man.programs.values() {
+            assert!(man.hlo_path(meta).exists(), "missing {}", meta.file.display());
+        }
+    }
+}

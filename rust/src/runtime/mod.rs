@@ -1,0 +1,24 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! Layer-2 programs to HLO text once; this module compiles them on the
+//! CPU PJRT client at startup (or lazily) and executes them from the
+//! coordinator's hot loop.
+
+mod executor;
+pub mod literal;
+pub mod manifest;
+
+pub use executor::{PjrtRuntime, SmbgdChunkOut};
+pub use manifest::{Manifest, ProgramKind, ProgramMeta};
+
+/// Default artifacts directory, resolved relative to the crate root so
+/// tests and benches work from any CWD.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.txt").exists()
+}

@@ -1,0 +1,268 @@
+//! Mixing models: the `x = A(t) s` half of the ICA data model.
+//!
+//! The paper's motivation for *adaptive* ICA is that the mixing matrix may
+//! drift over time (§I, §III: "different linear models may be in effect at
+//! different times"). This module provides:
+//!
+//! - [`StaticMixing`] — fixed random `A` with a condition-number guard
+//!   (an ill-conditioned `A` makes every ICA algorithm look bad for
+//!   reasons unrelated to the optimizer, so experiment configs cap it).
+//! - [`RotatingMixing`] — `A(t) = R(ω t)·A₀`: a smooth drift, the
+//!   workload for the adaptive-tracking experiment (A3).
+//! - [`SwitchingMixing`] — abrupt re-draws every `period` samples: the
+//!   worst case for momentum (large γ hurts, small γ recovers — the γ
+//!   trade-off discussed in §IV).
+
+use super::rng::Pcg32;
+use crate::linalg::{jacobi_eig, Mat64};
+
+/// Time-varying mixing matrix `A(t)` (m × n, m ≥ n).
+pub trait MixingModel: Send {
+    /// Number of mixtures (rows of A).
+    fn m(&self) -> usize;
+    /// Number of sources (cols of A).
+    fn n(&self) -> usize;
+    /// Write `A(t)` into `out` (shape m × n).
+    fn matrix_at(&self, t: u64, out: &mut Mat64);
+
+    /// Convenience allocating accessor.
+    fn at(&self, t: u64) -> Mat64 {
+        let mut a = Mat64::zeros(self.m(), self.n());
+        self.matrix_at(t, &mut a);
+        a
+    }
+}
+
+/// 2-norm condition number of a (possibly rectangular) matrix via the
+/// eigenvalues of `AᵀA`.
+pub fn condition_number(a: &Mat64) -> f64 {
+    let ata = a.transpose().matmul(a);
+    match jacobi_eig(&ata) {
+        Ok(e) => {
+            let max = e.values.first().copied().unwrap_or(0.0).max(0.0);
+            let min = e.values.last().copied().unwrap_or(0.0).max(0.0);
+            if min <= 0.0 {
+                f64::INFINITY
+            } else {
+                (max / min).sqrt()
+            }
+        }
+        Err(_) => f64::INFINITY,
+    }
+}
+
+/// Draw a random `m × n` mixing matrix with condition number ≤ `max_cond`
+/// (rejection sampling; unit-normal entries, then accept/reject).
+pub fn well_conditioned_random(rng: &mut Pcg32, m: usize, n: usize, max_cond: f64) -> Mat64 {
+    assert!(m >= n, "ICA requires m >= n (got m={m}, n={n})");
+    for _ in 0..1000 {
+        let a = Mat64::from_fn(m, n, |_, _| rng.normal());
+        if condition_number(&a) <= max_cond {
+            return a;
+        }
+    }
+    panic!("could not draw a mixing matrix with cond <= {max_cond}");
+}
+
+/// Fixed mixing matrix.
+pub struct StaticMixing {
+    a: Mat64,
+}
+
+impl StaticMixing {
+    pub fn new(a: Mat64) -> Self {
+        assert!(a.rows() >= a.cols(), "ICA requires m >= n");
+        Self { a }
+    }
+
+    /// Random well-conditioned instance (the default experiment setup).
+    pub fn random(rng: &mut Pcg32, m: usize, n: usize, max_cond: f64) -> Self {
+        Self { a: well_conditioned_random(rng, m, n, max_cond) }
+    }
+}
+
+impl MixingModel for StaticMixing {
+    fn m(&self) -> usize {
+        self.a.rows()
+    }
+    fn n(&self) -> usize {
+        self.a.cols()
+    }
+    fn matrix_at(&self, _t: u64, out: &mut Mat64) {
+        out.copy_from(&self.a);
+    }
+}
+
+/// Smoothly rotating mixing: `A(t) = R(ω t) · A₀` where `R` is a Givens
+/// rotation in a fixed random plane of mixture space.
+pub struct RotatingMixing {
+    a0: Mat64,
+    /// Rotation plane (axis pair in mixture space).
+    plane: (usize, usize),
+    /// Angular velocity, radians per sample.
+    pub omega: f64,
+}
+
+impl RotatingMixing {
+    pub fn new(a0: Mat64, plane: (usize, usize), omega: f64) -> Self {
+        let m = a0.rows();
+        assert!(plane.0 < m && plane.1 < m && plane.0 != plane.1);
+        Self { a0, plane, omega }
+    }
+
+    pub fn random(rng: &mut Pcg32, m: usize, n: usize, max_cond: f64, omega: f64) -> Self {
+        let a0 = well_conditioned_random(rng, m, n, max_cond);
+        Self::new(a0, (0, 1.min(m - 1).max(1)), omega)
+    }
+}
+
+impl MixingModel for RotatingMixing {
+    fn m(&self) -> usize {
+        self.a0.rows()
+    }
+    fn n(&self) -> usize {
+        self.a0.cols()
+    }
+    fn matrix_at(&self, t: u64, out: &mut Mat64) {
+        out.copy_from(&self.a0);
+        let theta = self.omega * t as f64;
+        let (c, s) = (theta.cos(), theta.sin());
+        let (p, q) = self.plane;
+        // Rotate rows p and q of A₀ (R(θ) is identity elsewhere, so the
+        // product touches only these two rows).
+        for j in 0..self.a0.cols() {
+            let ap = self.a0[(p, j)];
+            let aq = self.a0[(q, j)];
+            out[(p, j)] = c * ap - s * aq;
+            out[(q, j)] = s * ap + c * aq;
+        }
+    }
+}
+
+/// Abruptly switching mixing: an independent well-conditioned `A` is drawn
+/// for each `period`-sample segment (deterministically from `seed` and the
+/// segment index, so `matrix_at` stays pure).
+pub struct SwitchingMixing {
+    m: usize,
+    n: usize,
+    pub period: u64,
+    max_cond: f64,
+    seed: u64,
+}
+
+impl SwitchingMixing {
+    pub fn new(m: usize, n: usize, period: u64, max_cond: f64, seed: u64) -> Self {
+        assert!(m >= n && period > 0);
+        Self { m, n, period, max_cond, seed }
+    }
+}
+
+impl MixingModel for SwitchingMixing {
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn matrix_at(&self, t: u64, out: &mut Mat64) {
+        let segment = t / self.period;
+        let mut rng = Pcg32::seed(self.seed ^ segment.wrapping_mul(0x9E37_79B9));
+        let a = well_conditioned_random(&mut rng, self.m, self.n, self.max_cond);
+        out.copy_from(&a);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Config};
+
+    #[test]
+    fn condition_number_identity_is_one() {
+        let c = condition_number(&Mat64::eye(3, 3));
+        assert!((c - 1.0).abs() < 1e-9, "cond(I) = {c}");
+    }
+
+    #[test]
+    fn condition_number_scales() {
+        let a = Mat64::from_rows(&[&[10.0, 0.0], &[0.0, 1.0]]);
+        let c = condition_number(&a);
+        assert!((c - 10.0).abs() < 1e-9, "cond = {c}");
+    }
+
+    #[test]
+    fn condition_number_singular_is_inf() {
+        let a = Mat64::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        assert!(condition_number(&a).is_infinite());
+    }
+
+    #[test]
+    fn well_conditioned_random_respects_bound() {
+        check("cond(A) <= bound", Config::quick(), |rng| {
+            let a = well_conditioned_random(rng, 4, 2, 8.0);
+            a.shape() == (4, 2) && condition_number(&a) <= 8.0 + 1e-9
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "m >= n")]
+    fn rejects_m_less_than_n() {
+        let mut rng = Pcg32::seed(1);
+        let _ = well_conditioned_random(&mut rng, 2, 4, 10.0);
+    }
+
+    #[test]
+    fn static_mixing_constant() {
+        let mut rng = Pcg32::seed(2);
+        let mx = StaticMixing::random(&mut rng, 4, 2, 10.0);
+        assert_eq!(mx.at(0), mx.at(10_000));
+    }
+
+    #[test]
+    fn rotating_preserves_singular_values() {
+        // R(θ) is orthogonal, so cond(A(t)) == cond(A₀) for all t.
+        let mut rng = Pcg32::seed(3);
+        let mx = RotatingMixing::random(&mut rng, 4, 2, 10.0, 1e-3);
+        let c0 = condition_number(&mx.at(0));
+        for &t in &[100u64, 5000, 100_000] {
+            let ct = condition_number(&mx.at(t));
+            assert!((ct - c0).abs() < 1e-6, "cond drifted: {c0} -> {ct}");
+        }
+    }
+
+    #[test]
+    fn rotating_actually_moves() {
+        let mut rng = Pcg32::seed(4);
+        let mx = RotatingMixing::random(&mut rng, 4, 2, 10.0, 1e-2);
+        let d = mx.at(0).max_abs_diff(&mx.at(100));
+        assert!(d > 0.05, "rotation too small: {d}");
+    }
+
+    #[test]
+    fn rotating_period_2pi() {
+        let mut rng = Pcg32::seed(5);
+        let omega = 2.0 * std::f64::consts::PI / 1000.0;
+        let mx = RotatingMixing::random(&mut rng, 4, 2, 10.0, omega);
+        assert!(mx.at(0).max_abs_diff(&mx.at(1000)) < 1e-9);
+    }
+
+    #[test]
+    fn switching_constant_within_segment() {
+        let mx = SwitchingMixing::new(4, 2, 500, 10.0, 42);
+        assert_eq!(mx.at(0), mx.at(499));
+        assert_eq!(mx.at(500), mx.at(999));
+    }
+
+    #[test]
+    fn switching_changes_across_segments() {
+        let mx = SwitchingMixing::new(4, 2, 500, 10.0, 42);
+        assert!(mx.at(0).max_abs_diff(&mx.at(500)) > 0.05);
+    }
+
+    #[test]
+    fn switching_is_deterministic() {
+        let a = SwitchingMixing::new(4, 2, 500, 10.0, 7).at(1234);
+        let b = SwitchingMixing::new(4, 2, 500, 10.0, 7).at(1234);
+        assert_eq!(a, b);
+    }
+}

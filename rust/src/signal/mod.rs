@@ -1,0 +1,22 @@
+//! Signal substrate: deterministic PRNG, source banks, mixing models, and
+//! mixed-observation streams.
+//!
+//! This is the synthetic stand-in for the physical signals the paper's
+//! FPGA would ingest (EEG/ECG/communications waveforms — §I). EASI is
+//! equivariant (§III): its convergence behaviour depends only on the
+//! normalized source distributions, not on the mixing matrix, so a
+//! synthetic bank with controlled kurtosis exercises the same algorithmic
+//! regime as the physical testbed (see DESIGN.md §2, substitutions).
+
+pub mod mixing;
+pub mod rng;
+pub mod sources;
+pub mod stream;
+
+pub use mixing::{
+    condition_number, well_conditioned_random, MixingModel, RotatingMixing, StaticMixing,
+    SwitchingMixing,
+};
+pub use rng::Pcg32;
+pub use sources::{Source, SourceBank};
+pub use stream::{Dataset, MixedStream};

@@ -1,0 +1,255 @@
+//! Deterministic pseudo-random number generation (stand-in for the `rand`
+//! crate, unavailable offline).
+//!
+//! [`Pcg32`] is PCG-XSH-RR 64/32 (O'Neill 2014), seeded through SplitMix64
+//! so that small consecutive seeds give decorrelated streams. On top of the
+//! raw generator sit the distributions the ICA experiments need: uniform,
+//! normal (Box–Muller), Laplace (inverse CDF), Rademacher, exponential.
+//!
+//! Everything is reproducible: the same seed yields the same stream on
+//! every platform, which the benches rely on for paper-comparable numbers.
+
+/// SplitMix64 — used to expand user seeds into PCG state/stream pairs.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32: small, fast, statistically solid for simulation use.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// Cached second Box–Muller variate.
+    gauss_spare: Option<f64>,
+}
+
+impl Pcg32 {
+    const MULT: u64 = 6_364_136_223_846_793_005;
+
+    /// Seed via SplitMix64 (any `u64` is a good seed, including 0 and
+    /// consecutive integers).
+    pub fn seed(seed: u64) -> Self {
+        let mut sm = seed;
+        let state = splitmix64(&mut sm);
+        let inc = splitmix64(&mut sm) | 1; // stream must be odd
+        let mut rng = Self { state, inc, gauss_spare: None };
+        rng.next_u32(); // warm up
+        rng
+    }
+
+    /// Derive an independent child generator (for per-worker streams).
+    pub fn split(&mut self) -> Self {
+        Self::seed((self.next_u32() as u64) << 32 | self.next_u32() as u64)
+    }
+
+    /// Next raw 32 bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 32 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4_294_967_296.0)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire-style rejection-free enough
+    /// for simulation purposes).
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        ((self.next_u32() as u64 * bound as u64) >> 32) as u32
+    }
+
+    /// Standard normal via Box–Muller (caches the paired variate).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // u in (0,1] to keep ln() finite.
+        let u = 1.0 - self.uniform();
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with the given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Unit-variance Laplace (scale `b = 1/sqrt(2)`), a super-Gaussian
+    /// (kurtosis +3) source distribution.
+    pub fn laplace_unit(&mut self) -> f64 {
+        let b = std::f64::consts::FRAC_1_SQRT_2;
+        let u = self.uniform() - 0.5;
+        -b * u.signum() * (1.0 - 2.0 * u.abs()).ln()
+    }
+
+    /// Rademacher ±1 (kurtosis −2, strongly sub-Gaussian; unit variance).
+    #[inline]
+    pub fn rademacher(&mut self) -> f64 {
+        if self.next_u32() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Exponential with rate `lambda`.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.uniform()).ln() / lambda
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        out.iter_mut().for_each(|v| *v = self.normal());
+    }
+
+    /// Random orthogonal-ish direction: unit vector uniform on the sphere.
+    pub fn unit_vector(&mut self, dim: usize) -> Vec<f64> {
+        loop {
+            let v: Vec<f64> = (0..dim).map(|_| self.normal()).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                return v.into_iter().map(|x| x / norm).collect();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(vals: &[f64]) -> (f64, f64, f64) {
+        let n = vals.len() as f64;
+        let mean = vals.iter().sum::<f64>() / n;
+        let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+        let kurt =
+            vals.iter().map(|v| (v - mean).powi(4)).sum::<f64>() / n / (var * var) - 3.0;
+        (mean, var, kurt)
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg32::seed(42);
+        let mut b = Pcg32::seed(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::seed(1);
+        let mut b = Pcg32::seed(2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3, "streams should be decorrelated, {same} collisions");
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut rng = Pcg32::seed(3);
+        let vals: Vec<f64> = (0..50_000).map(|_| rng.uniform()).collect();
+        assert!(vals.iter().all(|&v| (0.0..1.0).contains(&v)));
+        let (mean, var, _) = moments(&vals);
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::seed(4);
+        let vals: Vec<f64> = (0..100_000).map(|_| rng.normal()).collect();
+        let (mean, var, kurt) = moments(&vals);
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+        assert!(kurt.abs() < 0.1, "kurt {kurt}");
+    }
+
+    #[test]
+    fn laplace_is_super_gaussian_unit_variance() {
+        let mut rng = Pcg32::seed(5);
+        let vals: Vec<f64> = (0..100_000).map(|_| rng.laplace_unit()).collect();
+        let (mean, var, kurt) = moments(&vals);
+        assert!(mean.abs() < 0.02);
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+        assert!((kurt - 3.0).abs() < 0.5, "kurt {kurt} (Laplace ⇒ +3)");
+    }
+
+    #[test]
+    fn rademacher_is_sub_gaussian() {
+        let mut rng = Pcg32::seed(6);
+        let vals: Vec<f64> = (0..50_000).map(|_| rng.rademacher()).collect();
+        let (mean, var, kurt) = moments(&vals);
+        assert!(mean.abs() < 0.02);
+        assert!((var - 1.0).abs() < 0.02);
+        assert!((kurt + 2.0).abs() < 0.1, "kurt {kurt} (Rademacher ⇒ −2)");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg32::seed(7);
+        let vals: Vec<f64> = (0..50_000).map(|_| rng.exponential(2.0)).collect();
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        assert!(vals.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Pcg32::seed(8);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn unit_vector_is_unit() {
+        let mut rng = Pcg32::seed(9);
+        for dim in 1..8 {
+            let v = rng.unit_vector(dim);
+            let norm: f64 = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn split_gives_decorrelated_stream() {
+        let mut parent = Pcg32::seed(10);
+        let mut child = parent.split();
+        let same = (0..100)
+            .filter(|_| parent.next_u32() == child.next_u32())
+            .count();
+        assert!(same < 3);
+    }
+}

@@ -1,0 +1,514 @@
+//! Source-signal bank: the independent components `s` of the ICA model.
+//!
+//! EASI with the paper's cubic nonlinearity `g(y)=y³` is stable for source
+//! pairs whose kurtosis sum is negative (κᵢ = −kurt for the cubic — see
+//! DESIGN.md §1), so the default experiment banks are **sub-Gaussian**
+//! (sinusoid, square, sawtooth, uniform, Rademacher) — exactly the signal
+//! families used by the FPGA/DSP EASI literature the paper compares
+//! against ([12], [13]). Super-Gaussian (Laplace, ECG-like) and Gaussian
+//! sources are provided for negative tests and the nonlinearity ablation.
+//!
+//! Every source is normalized to (approximately) unit variance — EASI's
+//! stationary point requires `E[y yᵀ] = I`, so unit-variance sources make
+//! the recovered global matrix a plain (signed, permuted) identity.
+
+use super::rng::Pcg32;
+
+/// One independent component: a stream of unit-variance samples.
+pub trait Source: Send {
+    /// Produce the next sample (may consume randomness).
+    fn next(&mut self, rng: &mut Pcg32) -> f64;
+    /// Excess kurtosis of the stationary distribution (analytic, used by
+    /// tests and by stability diagnostics in the coordinator).
+    fn kurtosis(&self) -> f64;
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+    /// Reset any internal phase/state to t=0.
+    fn reset(&mut self);
+}
+
+/// Uniform on `[-√3, √3]`: sub-Gaussian, excess kurtosis −1.2.
+#[derive(Clone, Debug, Default)]
+pub struct UniformSource;
+
+impl Source for UniformSource {
+    fn next(&mut self, rng: &mut Pcg32) -> f64 {
+        rng.uniform_in(-3f64.sqrt(), 3f64.sqrt())
+    }
+    fn kurtosis(&self) -> f64 {
+        -1.2
+    }
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+    fn reset(&mut self) {}
+}
+
+/// Random ±1: the most sub-Gaussian source (excess kurtosis −2).
+#[derive(Clone, Debug, Default)]
+pub struct RademacherSource;
+
+impl Source for RademacherSource {
+    fn next(&mut self, rng: &mut Pcg32) -> f64 {
+        rng.rademacher()
+    }
+    fn kurtosis(&self) -> f64 {
+        -2.0
+    }
+    fn name(&self) -> &'static str {
+        "rademacher"
+    }
+    fn reset(&mut self) {}
+}
+
+/// Unit-variance Laplace: super-Gaussian (excess kurtosis +3). Unstable
+/// under the cubic nonlinearity — used by negative tests and ablations.
+#[derive(Clone, Debug, Default)]
+pub struct LaplaceSource;
+
+impl Source for LaplaceSource {
+    fn next(&mut self, rng: &mut Pcg32) -> f64 {
+        rng.laplace_unit()
+    }
+    fn kurtosis(&self) -> f64 {
+        3.0
+    }
+    fn name(&self) -> &'static str {
+        "laplace"
+    }
+    fn reset(&mut self) {}
+}
+
+/// Standard normal: *not* separable by ICA (kurtosis 0); negative tests.
+#[derive(Clone, Debug, Default)]
+pub struct GaussianSource;
+
+impl Source for GaussianSource {
+    fn next(&mut self, rng: &mut Pcg32) -> f64 {
+        rng.normal()
+    }
+    fn kurtosis(&self) -> f64 {
+        0.0
+    }
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+    fn reset(&mut self) {}
+}
+
+/// `√2 · sin(ω t + φ)`: deterministic sub-Gaussian tone (excess kurtosis
+/// −1.5), the classic blind-source-separation test signal.
+///
+/// Implemented as a rotation recurrence (one complex multiply per sample,
+/// no trig on the hot path — EXPERIMENTS.md §Perf iteration 4), with
+/// periodic renormalization against phase drift.
+#[derive(Clone, Debug)]
+pub struct SineSource {
+    /// Angular frequency in radians/sample.
+    pub omega: f64,
+    /// Initial phase in radians.
+    pub phase: f64,
+    t: u64,
+    // Rotation state: (cos θ_t, sin θ_t) and the per-step rotator.
+    c: f64,
+    s: f64,
+    cw: f64,
+    sw: f64,
+}
+
+impl SineSource {
+    pub fn new(omega: f64, phase: f64) -> Self {
+        Self {
+            omega,
+            phase,
+            t: 0,
+            c: phase.cos(),
+            s: phase.sin(),
+            cw: omega.cos(),
+            sw: omega.sin(),
+        }
+    }
+}
+
+impl Source for SineSource {
+    fn next(&mut self, _rng: &mut Pcg32) -> f64 {
+        let v = 2f64.sqrt() * self.s;
+        // θ ← θ + ω via plane rotation.
+        let (c, s) = (self.c, self.s);
+        self.c = c * self.cw - s * self.sw;
+        self.s = s * self.cw + c * self.sw;
+        self.t += 1;
+        // Exact resync every 4096 samples (kills accumulated drift).
+        if self.t % 4096 == 0 {
+            let theta = self.omega * self.t as f64 + self.phase;
+            self.c = theta.cos();
+            self.s = theta.sin();
+        }
+        v
+    }
+    fn kurtosis(&self) -> f64 {
+        -1.5
+    }
+    fn name(&self) -> &'static str {
+        "sine"
+    }
+    fn reset(&mut self) {
+        self.t = 0;
+        self.c = self.phase.cos();
+        self.s = self.phase.sin();
+    }
+}
+
+/// ±1 square wave (excess kurtosis −2): `sign(sin(ω t + φ))` via a phase
+/// accumulator — no trig on the hot path.
+#[derive(Clone, Debug)]
+pub struct SquareSource {
+    pub omega: f64,
+    pub phase: f64,
+    t: u64,
+    /// Current phase in [0, 2π).
+    theta: f64,
+}
+
+const TWO_PI: f64 = std::f64::consts::TAU;
+
+impl SquareSource {
+    pub fn new(omega: f64, phase: f64) -> Self {
+        Self { omega, phase, t: 0, theta: phase.rem_euclid(TWO_PI) }
+    }
+}
+
+impl Source for SquareSource {
+    fn next(&mut self, _rng: &mut Pcg32) -> f64 {
+        // sin(θ) >= 0  ⇔  θ ∈ [0, π] (θ kept in [0, 2π))
+        let v = if self.theta <= std::f64::consts::PI { 1.0 } else { -1.0 };
+        self.theta += self.omega;
+        if self.theta >= TWO_PI {
+            self.theta -= TWO_PI;
+        }
+        self.t += 1;
+        v
+    }
+    fn kurtosis(&self) -> f64 {
+        -2.0
+    }
+    fn name(&self) -> &'static str {
+        "square"
+    }
+    fn reset(&mut self) {
+        self.t = 0;
+        self.theta = self.phase.rem_euclid(TWO_PI);
+    }
+}
+
+/// Sawtooth with uniform marginal (excess kurtosis −1.2), amplitude √3.
+#[derive(Clone, Debug)]
+pub struct SawtoothSource {
+    /// Period in samples.
+    pub period: u64,
+    t: u64,
+}
+
+impl SawtoothSource {
+    pub fn new(period: u64) -> Self {
+        assert!(period >= 2, "sawtooth period must be >= 2");
+        Self { period, t: 0 }
+    }
+}
+
+impl Source for SawtoothSource {
+    fn next(&mut self, _rng: &mut Pcg32) -> f64 {
+        let frac = (self.t % self.period) as f64 / self.period as f64;
+        self.t += 1;
+        3f64.sqrt() * (2.0 * frac - 1.0)
+    }
+    fn kurtosis(&self) -> f64 {
+        -1.2
+    }
+    fn name(&self) -> &'static str {
+        "sawtooth"
+    }
+    fn reset(&mut self) {
+        self.t = 0;
+    }
+}
+
+/// AR(2) process driven by Laplace innovations, normalized to unit
+/// stationary variance: a temporally-correlated "speech-like" source.
+#[derive(Clone, Debug)]
+pub struct Ar2Source {
+    a1: f64,
+    a2: f64,
+    /// Innovation std that yields unit stationary variance.
+    innov_std: f64,
+    y1: f64,
+    y2: f64,
+}
+
+impl Ar2Source {
+    /// `a1`, `a2` must put the roots inside the unit circle
+    /// (|a2| < 1, a2 ± a1 < 1).
+    pub fn new(a1: f64, a2: f64) -> Self {
+        assert!(a2.abs() < 1.0 && a1 + a2 < 1.0 && a2 - a1 < 1.0, "AR(2) unstable");
+        // Stationary variance of AR(2) with unit innovation variance.
+        let denom = (1.0 + a2) * ((1.0 - a2).powi(2) - a1 * a1);
+        let var_factor = (1.0 - a2) / denom;
+        Self { a1, a2, innov_std: (1.0 / var_factor).sqrt(), y1: 0.0, y2: 0.0 }
+    }
+}
+
+impl Source for Ar2Source {
+    fn next(&mut self, rng: &mut Pcg32) -> f64 {
+        let e = rng.laplace_unit() * self.innov_std;
+        let y = self.a1 * self.y1 + self.a2 * self.y2 + e;
+        self.y2 = self.y1;
+        self.y1 = y;
+        y
+    }
+    fn kurtosis(&self) -> f64 {
+        // Filtering Laplace innovations Gaussianizes somewhat; positive.
+        1.0
+    }
+    fn name(&self) -> &'static str {
+        "ar2"
+    }
+    fn reset(&mut self) {
+        self.y1 = 0.0;
+        self.y2 = 0.0;
+    }
+}
+
+/// ECG-like impulse train: a sharp biphasic spike every `period` samples
+/// plus low-level noise. Strongly super-Gaussian — models the ECG/EEG
+/// artifact workloads from the paper's §I application list.
+#[derive(Clone, Debug)]
+pub struct EcgSource {
+    pub period: u64,
+    t: u64,
+    scale: f64,
+}
+
+impl EcgSource {
+    pub fn new(period: u64) -> Self {
+        assert!(period >= 16, "ECG period must be >= 16");
+        // Empirical unit-variance normalization for the spike template below.
+        let energy: f64 = Self::template().iter().map(|v| v * v).sum::<f64>();
+        let var = energy / period as f64 + 0.01;
+        Self { period, t: 0, scale: 1.0 / var.sqrt() }
+    }
+
+    /// QRS-ish biphasic template (samples around the beat).
+    fn template() -> [f64; 7] {
+        [0.3, -1.0, 5.0, -2.0, 0.5, 0.2, 0.1]
+    }
+}
+
+impl Source for EcgSource {
+    fn next(&mut self, rng: &mut Pcg32) -> f64 {
+        let ph = (self.t % self.period) as usize;
+        self.t += 1;
+        let tmpl = Self::template();
+        let spike = if ph < tmpl.len() { tmpl[ph] } else { 0.0 };
+        (spike + 0.1 * rng.normal()) * self.scale
+    }
+    fn kurtosis(&self) -> f64 {
+        10.0 // sharp impulse train: strongly super-Gaussian
+    }
+    fn name(&self) -> &'static str {
+        "ecg"
+    }
+    fn reset(&mut self) {
+        self.t = 0;
+    }
+}
+
+/// A bank of `n` independent sources — the vector `s` of the ICA model.
+pub struct SourceBank {
+    sources: Vec<Box<dyn Source>>,
+}
+
+impl SourceBank {
+    pub fn new(sources: Vec<Box<dyn Source>>) -> Self {
+        assert!(!sources.is_empty(), "empty source bank");
+        Self { sources }
+    }
+
+    /// The default sub-Gaussian bank for cubic-EASI experiments: cycles
+    /// through sine / square / uniform / sawtooth / Rademacher with
+    /// incommensurate frequencies.
+    pub fn sub_gaussian(n: usize) -> Self {
+        let mut v: Vec<Box<dyn Source>> = Vec::with_capacity(n);
+        for j in 0..n {
+            let s: Box<dyn Source> = match j % 5 {
+                0 => Box::new(SineSource::new(0.3 + 0.17 * j as f64, 0.4 * j as f64)),
+                1 => Box::new(SquareSource::new(0.085 + 0.03 * j as f64, 1.0)),
+                2 => Box::new(UniformSource),
+                3 => Box::new(SawtoothSource::new(23 + 8 * j as u64)),
+                _ => Box::new(RademacherSource),
+            };
+            v.push(s);
+        }
+        Self::new(v)
+    }
+
+    /// Bank used by the EEG/ECG artifact-removal example: slow "brain"
+    /// rhythms plus an ECG artifact.
+    pub fn eeg_like(n: usize) -> Self {
+        let mut v: Vec<Box<dyn Source>> = Vec::with_capacity(n);
+        for j in 0..n {
+            let s: Box<dyn Source> = if j == n - 1 {
+                Box::new(EcgSource::new(180))
+            } else {
+                Box::new(SineSource::new(0.05 + 0.04 * j as f64, 0.9 * j as f64))
+            };
+            v.push(s);
+        }
+        Self::new(v)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sources.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sources.is_empty()
+    }
+
+    /// Analytic kurtoses of the bank (diagnostics / stability checks).
+    pub fn kurtoses(&self) -> Vec<f64> {
+        self.sources.iter().map(|s| s.kurtosis()).collect()
+    }
+
+    /// Sample one source vector into `out` (`out.len() == self.len()`).
+    pub fn next_into(&mut self, rng: &mut Pcg32, out: &mut [f64]) {
+        assert_eq!(out.len(), self.sources.len());
+        for (o, s) in out.iter_mut().zip(self.sources.iter_mut()) {
+            *o = s.next(rng);
+        }
+    }
+
+    /// Reset all sources to t=0.
+    pub fn reset(&mut self) {
+        self.sources.iter_mut().for_each(|s| s.reset());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(src: &mut dyn Source, n: usize, seed: u64) -> (f64, f64, f64) {
+        let mut rng = Pcg32::seed(seed);
+        let vals: Vec<f64> = (0..n).map(|_| src.next(&mut rng)).collect();
+        let n = vals.len() as f64;
+        let mean = vals.iter().sum::<f64>() / n;
+        let var = vals.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+        let kurt =
+            vals.iter().map(|v| (v - mean).powi(4)).sum::<f64>() / n / (var * var) - 3.0;
+        (mean, var, kurt)
+    }
+
+    #[test]
+    fn all_sources_unit_variance() {
+        let sources: Vec<Box<dyn Source>> = vec![
+            Box::new(UniformSource),
+            Box::new(RademacherSource),
+            Box::new(LaplaceSource),
+            Box::new(GaussianSource),
+            Box::new(SineSource::new(0.31, 0.0)),
+            Box::new(SquareSource::new(0.085, 0.0)),
+            Box::new(SawtoothSource::new(23)),
+            Box::new(Ar2Source::new(0.5, -0.2)),
+            Box::new(EcgSource::new(180)),
+        ];
+        for mut s in sources {
+            let (_mean, var, _) = empirical(s.as_mut(), 200_000, 11);
+            assert!(
+                (var - 1.0).abs() < 0.12,
+                "{}: variance {var} not ~1",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn kurtosis_signs_match_analytic() {
+        let sources: Vec<Box<dyn Source>> = vec![
+            Box::new(UniformSource),
+            Box::new(RademacherSource),
+            Box::new(LaplaceSource),
+            Box::new(SineSource::new(0.31, 0.0)),
+            Box::new(SquareSource::new(0.085, 0.0)),
+            Box::new(SawtoothSource::new(23)),
+            Box::new(EcgSource::new(180)),
+        ];
+        for mut s in sources {
+            let analytic = s.kurtosis();
+            let (_, _, emp) = empirical(s.as_mut(), 200_000, 13);
+            assert_eq!(
+                emp.signum(),
+                analytic.signum(),
+                "{}: empirical kurt {emp} vs analytic {analytic}",
+                s.name()
+            );
+        }
+    }
+
+    #[test]
+    fn sine_kurtosis_value() {
+        let mut s = SineSource::new(0.313, 0.0); // incommensurate with 2π
+        let (_, _, kurt) = empirical(&mut s, 200_000, 17);
+        assert!((kurt + 1.5).abs() < 0.05, "sine kurt {kurt} != -1.5");
+    }
+
+    #[test]
+    fn deterministic_sources_ignore_rng() {
+        let mut s1 = SineSource::new(0.3, 0.1);
+        let mut s2 = SineSource::new(0.3, 0.1);
+        let mut r1 = Pcg32::seed(1);
+        let mut r2 = Pcg32::seed(999);
+        for _ in 0..100 {
+            assert_eq!(s1.next(&mut r1), s2.next(&mut r2));
+        }
+    }
+
+    #[test]
+    fn reset_restarts_phase() {
+        let mut rng = Pcg32::seed(1);
+        let mut s = SawtoothSource::new(7);
+        let a: Vec<f64> = (0..20).map(|_| s.next(&mut rng)).collect();
+        s.reset();
+        let b: Vec<f64> = (0..20).map(|_| s.next(&mut rng)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sub_gaussian_bank_is_sub_gaussian() {
+        let bank = SourceBank::sub_gaussian(8);
+        assert_eq!(bank.len(), 8);
+        assert!(bank.kurtoses().iter().all(|&k| k < 0.0));
+    }
+
+    #[test]
+    fn bank_next_into_shapes() {
+        let mut bank = SourceBank::sub_gaussian(4);
+        let mut rng = Pcg32::seed(3);
+        let mut out = [0.0; 4];
+        bank.next_into(&mut rng, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn ar2_rejects_unstable() {
+        let r = std::panic::catch_unwind(|| Ar2Source::new(1.5, 0.6));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn eeg_bank_has_ecg_last() {
+        let bank = SourceBank::eeg_like(4);
+        let k = bank.kurtoses();
+        assert!(k[3] > 5.0, "last source should be the ECG artifact");
+        assert!(k[0] < 0.0);
+    }
+}

@@ -1,0 +1,205 @@
+//! Mixed-signal stream: composes a [`SourceBank`] with a [`MixingModel`]
+//! to produce the observation stream `x(t) = A(t) s(t)` that feeds the
+//! coordinator, plus batch-generation helpers for the offline experiments.
+
+use super::mixing::MixingModel;
+use super::rng::Pcg32;
+use super::sources::SourceBank;
+use crate::linalg::Mat64;
+
+/// A live `x = A(t) s` sample stream with access to the ground truth.
+pub struct MixedStream {
+    bank: SourceBank,
+    mixing: Box<dyn MixingModel>,
+    rng: Pcg32,
+    t: u64,
+    // scratch
+    s_buf: Vec<f64>,
+    a_buf: Mat64,
+}
+
+impl MixedStream {
+    pub fn new(bank: SourceBank, mixing: Box<dyn MixingModel>, rng: Pcg32) -> Self {
+        assert_eq!(
+            bank.len(),
+            mixing.n(),
+            "source bank size must equal mixing columns"
+        );
+        let (m, n) = (mixing.m(), mixing.n());
+        Self { bank, mixing, rng, t: 0, s_buf: vec![0.0; n], a_buf: Mat64::zeros(m, n) }
+    }
+
+    /// Number of observed mixtures (dimensionality of `x`).
+    pub fn m(&self) -> usize {
+        self.a_buf.rows()
+    }
+
+    /// Number of latent sources (dimensionality of `s`).
+    pub fn n(&self) -> usize {
+        self.a_buf.cols()
+    }
+
+    /// Current sample index.
+    pub fn t(&self) -> u64 {
+        self.t
+    }
+
+    /// Ground-truth mixing matrix at the current time.
+    pub fn current_mixing(&self) -> Mat64 {
+        self.mixing.at(self.t)
+    }
+
+    /// Produce the next observation into `x_out` (len m); optionally also
+    /// expose the latent source vector in `s_out`.
+    pub fn next_into(&mut self, x_out: &mut [f64], mut s_out: Option<&mut [f64]>) {
+        assert_eq!(x_out.len(), self.m());
+        self.bank.next_into(&mut self.rng, &mut self.s_buf);
+        self.mixing.matrix_at(self.t, &mut self.a_buf);
+        self.a_buf.matvec_into(&self.s_buf, x_out);
+        if let Some(s) = s_out.as_deref_mut() {
+            s.copy_from_slice(&self.s_buf);
+        }
+        self.t += 1;
+    }
+
+    /// Generate `t_len` samples as row-major matrices `(X: t_len × m,
+    /// S: t_len × n)` — the offline dataset form used by benches/tests.
+    pub fn generate(&mut self, t_len: usize) -> (Mat64, Mat64) {
+        let (m, n) = (self.m(), self.n());
+        let mut x = Mat64::zeros(t_len, m);
+        let mut s = Mat64::zeros(t_len, n);
+        for t in 0..t_len {
+            // Split the borrow: rows of two different matrices.
+            let mut xrow = vec![0.0; m];
+            let mut srow = vec![0.0; n];
+            self.next_into(&mut xrow, Some(&mut srow));
+            x.row_mut(t).copy_from_slice(&xrow);
+            s.row_mut(t).copy_from_slice(&srow);
+        }
+        (x, s)
+    }
+}
+
+/// Offline dataset: mixtures plus ground truth, as produced by
+/// [`MixedStream::generate`] with the mixing matrix snapshot.
+pub struct Dataset {
+    /// Observations, `T × m`.
+    pub x: Mat64,
+    /// Ground-truth sources, `T × n`.
+    pub s: Mat64,
+    /// Mixing matrix at t=0 (exact for static mixing).
+    pub a: Mat64,
+}
+
+impl Dataset {
+    /// Standard experiment dataset: sub-Gaussian bank, static
+    /// well-conditioned random mixing.
+    pub fn standard(seed: u64, m: usize, n: usize, t_len: usize) -> Self {
+        use super::mixing::StaticMixing;
+        let mut rng = Pcg32::seed(seed);
+        let mixing = StaticMixing::random(&mut rng, m, n, 10.0);
+        let a = mixing.at(0);
+        let bank = SourceBank::sub_gaussian(n);
+        let mut stream = MixedStream::new(bank, Box::new(mixing), rng);
+        let (x, s) = stream.generate(t_len);
+        Self { x, s, a }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Row `t` of the observations.
+    pub fn sample(&self, t: usize) -> &[f64] {
+        self.x.row(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::mixing::{RotatingMixing, StaticMixing};
+
+    fn stream(seed: u64, m: usize, n: usize) -> MixedStream {
+        let mut rng = Pcg32::seed(seed);
+        let mixing = StaticMixing::random(&mut rng, m, n, 10.0);
+        MixedStream::new(SourceBank::sub_gaussian(n), Box::new(mixing), rng)
+    }
+
+    #[test]
+    fn x_equals_a_times_s() {
+        let mut st = stream(1, 4, 2);
+        let a = st.current_mixing();
+        let mut x = [0.0; 4];
+        let mut s = [0.0; 2];
+        st.next_into(&mut x, Some(&mut s));
+        let want = a.matvec(&s);
+        for i in 0..4 {
+            assert!((x[i] - want[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn generate_shapes() {
+        let mut st = stream(2, 4, 2);
+        let (x, s) = st.generate(100);
+        assert_eq!(x.shape(), (100, 4));
+        assert_eq!(s.shape(), (100, 2));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x1, _) = stream(7, 4, 2).generate(50);
+        let (x2, _) = stream(7, 4, 2).generate(50);
+        assert_eq!(x1, x2);
+    }
+
+    #[test]
+    fn time_advances() {
+        let mut st = stream(3, 4, 2);
+        assert_eq!(st.t(), 0);
+        let mut x = [0.0; 4];
+        st.next_into(&mut x, None);
+        st.next_into(&mut x, None);
+        assert_eq!(st.t(), 2);
+    }
+
+    #[test]
+    fn rotating_stream_mixing_changes() {
+        let mut rng = Pcg32::seed(4);
+        let mixing = RotatingMixing::random(&mut rng, 4, 2, 10.0, 1e-2);
+        let mut st = MixedStream::new(SourceBank::sub_gaussian(2), Box::new(mixing), rng);
+        let a0 = st.current_mixing();
+        let mut x = [0.0; 4];
+        for _ in 0..500 {
+            st.next_into(&mut x, None);
+        }
+        assert!(st.current_mixing().max_abs_diff(&a0) > 0.05);
+    }
+
+    #[test]
+    fn dataset_standard_consistency() {
+        let d = Dataset::standard(5, 4, 2, 200);
+        assert_eq!(d.len(), 200);
+        // x_t == A s_t for static mixing
+        for t in [0usize, 17, 199] {
+            let want = d.a.matvec(d.s.row(t));
+            for i in 0..4 {
+                assert!((d.sample(t)[i] - want[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "source bank size")]
+    fn bank_mixing_size_mismatch_panics() {
+        let mut rng = Pcg32::seed(6);
+        let mixing = StaticMixing::random(&mut rng, 4, 2, 10.0);
+        let _ = MixedStream::new(SourceBank::sub_gaussian(3), Box::new(mixing), rng);
+    }
+}

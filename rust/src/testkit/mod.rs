@@ -1,0 +1,120 @@
+//! Minimal property-testing kit (stand-in for `proptest`, which is not
+//! available in this offline environment).
+//!
+//! A property is a closure from a seeded [`Pcg32`] to `bool`; [`check`]
+//! runs it across many deterministic seeds and, on failure, reports the
+//! exact failing seed so the case can be replayed as a unit test:
+//!
+//! ```ignore
+//! check("A*A^-1=I", Config::default(), |rng| { ... });
+//! ```
+
+use crate::signal::rng::Pcg32;
+
+/// Property-run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: u64,
+    /// Base seed; case `i` uses seed `base_seed + i` (replayable).
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, base_seed: 0xEA51_1CA0 }
+    }
+}
+
+impl Config {
+    /// A smaller run for expensive properties.
+    pub fn quick() -> Self {
+        Self { cases: 16, ..Self::default() }
+    }
+
+    /// A larger run for cheap, high-value invariants.
+    pub fn thorough() -> Self {
+        Self { cases: 256, ..Self::default() }
+    }
+}
+
+/// Run `prop` for `config.cases` deterministic seeds; panic with the
+/// failing seed on the first counterexample.
+pub fn check(name: &str, config: Config, mut prop: impl FnMut(&mut Pcg32) -> bool) {
+    for i in 0..config.cases {
+        let seed = config.base_seed.wrapping_add(i);
+        let mut rng = Pcg32::seed(seed);
+        if !prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed:#x}); \
+                 replay with Pcg32::seed({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` so the
+/// counterexample can carry a description.
+pub fn check_detailed(
+    name: &str,
+    config: Config,
+    mut prop: impl FnMut(&mut Pcg32) -> Result<(), String>,
+) {
+    for i in 0..config.cases {
+        let seed = config.base_seed.wrapping_add(i);
+        let mut rng = Pcg32::seed(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two floats are within `tol` (absolute); used by tests across
+/// the crate for readable failure messages.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) {
+    assert!(
+        (a - b).abs() <= tol,
+        "{what}: |{a} - {b}| = {} > {tol}",
+        (a - b).abs()
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", Config::quick(), |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum' failed")]
+    fn failing_property_reports_seed() {
+        check("falsum", Config::quick(), |_| false);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut v1 = Vec::new();
+        let mut v2 = Vec::new();
+        check("collect1", Config::quick(), |rng| {
+            v1.push(rng.next_u32());
+            true
+        });
+        check("collect2", Config::quick(), |rng| {
+            v2.push(rng.next_u32());
+            true
+        });
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    #[should_panic(expected = "detailed reason")]
+    fn detailed_failure_carries_message() {
+        check_detailed("detailed", Config::quick(), |_| {
+            Err("detailed reason".to_string())
+        });
+    }
+}

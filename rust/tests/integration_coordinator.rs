@@ -1,0 +1,211 @@
+//! Integration tests over the full coordinator stack: config → stream →
+//! engine → state → monitor, including failure injection and the
+//! PJRT-engine streaming path (self-skipping without artifacts).
+
+use easi_ica::config::{EngineKind, ExperimentConfig, OptimizerKind};
+use easi_ica::coordinator::{
+    make_engine, run_streaming, Chunker, Engine, RunSummary, ServerOptions, StateStore,
+};
+use easi_ica::ica::{ConvergenceCriterion, Nonlinearity};
+use easi_ica::linalg::Mat64;
+use easi_ica::runtime::{artifacts_available, default_artifacts_dir};
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.samples = 30_000;
+    cfg.optimizer.mu = 0.004;
+    cfg
+}
+
+fn run(cfg: &ExperimentConfig) -> (RunSummary, StateStore) {
+    let engine = make_engine(cfg, Nonlinearity::Cube).expect("engine");
+    let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
+    let sum = run_streaming(cfg, engine, ServerOptions::default(), &state).expect("run");
+    (sum, state)
+}
+
+#[test]
+fn full_config_file_round_trip_drives_a_run() {
+    let toml = r#"
+        name = "integration"
+        m = 4
+        n = 2
+        samples = 20000
+        seed = 3
+
+        [optimizer]
+        kind = "smbgd"
+        mu = 0.004
+        gamma = 0.5
+        beta = 0.9
+        p = 8
+
+        [signal]
+        bank = "sub_gaussian"
+        mixing = "static"
+    "#;
+    let cfg = ExperimentConfig::from_toml(toml).unwrap();
+    let (sum, state) = run(&cfg);
+    assert_eq!(sum.samples + sum.tail_dropped, 20_000);
+    assert!(sum.final_amari < 0.3, "amari {}", sum.final_amari);
+    assert!(state.version() > 0);
+}
+
+#[test]
+fn all_native_optimizers_run_and_separate() {
+    for kind in [OptimizerKind::Sgd, OptimizerKind::Smbgd, OptimizerKind::Mbgd] {
+        let mut cfg = base_cfg();
+        cfg.optimizer.kind = kind;
+        if kind == OptimizerKind::Mbgd {
+            cfg.optimizer.mu = 0.02; // MBGD averages: needs a larger step
+        }
+        let (sum, _) = run(&cfg);
+        assert!(
+            sum.final_amari < 0.35,
+            "{:?} failed to separate: {}",
+            kind,
+            sum.final_amari
+        );
+    }
+}
+
+#[test]
+fn monitor_detects_convergence_in_stream() {
+    let mut cfg = base_cfg();
+    cfg.samples = 60_000;
+    cfg.optimizer.mu = 0.006;
+    let engine = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+    let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
+    let opts = ServerOptions {
+        criterion: ConvergenceCriterion { threshold: 0.12, check_every: 1, patience: 3 },
+        monitor_every: 256,
+        ..Default::default()
+    };
+    let sum = run_streaming(&cfg, engine, opts, &state).unwrap();
+    assert!(sum.converged_at.is_some(), "should converge within 60k samples");
+    assert!(sum.converged_at.unwrap() < 60_000);
+}
+
+#[test]
+fn switching_mixing_stream_survives() {
+    // Abrupt mixing switches must not blow up the optimizer state.
+    let mut cfg = base_cfg();
+    cfg.samples = 40_000;
+    cfg.signal.mixing = "switching".into();
+    cfg.signal.period = 10_000;
+    let (sum, _) = run(&cfg);
+    assert!(sum.b.is_finite(), "B must stay finite across switches");
+    assert_eq!(sum.samples + sum.tail_dropped, 40_000);
+}
+
+#[test]
+fn backpressure_small_channel_still_completes() {
+    let cfg = base_cfg();
+    let engine = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+    let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
+    let opts = ServerOptions { channel_capacity: 2, ..Default::default() };
+    let sum = run_streaming(&cfg, engine, opts, &state).unwrap();
+    assert_eq!(sum.samples + sum.tail_dropped, cfg.samples as u64);
+}
+
+#[test]
+fn chunker_tail_accounting_is_exact() {
+    let mut ch = Chunker::new(4, 64);
+    let x = [0.0; 4];
+    for _ in 0..100 {
+        ch.push(&x);
+    }
+    assert_eq!(ch.pending(), 36);
+    let tail = ch.take_partial().unwrap();
+    assert_eq!(tail.rows(), 36);
+}
+
+// ---------------------------------------------------------------------------
+// PJRT engine through the full server (needs artifacts).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pjrt_engine_streams_and_separates() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.engine = EngineKind::Pjrt;
+    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+    cfg.samples = 30_000;
+    cfg.optimizer.mu = 0.004;
+    cfg.optimizer.p = 8;
+    let (sum, state) = run(&cfg);
+    assert!(sum.engine.starts_with("pjrt/"));
+    assert!(sum.final_amari < 0.3, "pjrt run amari {}", sum.final_amari);
+    // Fixed-shape programs: the tail that doesn't fill a chunk is dropped
+    // and reported.
+    assert_eq!(sum.samples + sum.tail_dropped, 30_000);
+    assert!(state.version() > 100, "per-chunk publishing");
+}
+
+#[test]
+fn pjrt_and_native_agree_on_stream() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut native_cfg = base_cfg();
+    native_cfg.samples = 12_800;
+    let mut pjrt_cfg = native_cfg.clone();
+    pjrt_cfg.engine = EngineKind::Pjrt;
+    pjrt_cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+
+    // Same seed => same stream; chunk sizes are 64 for both (smbgd p=8).
+    let (ns, _) = run(&native_cfg);
+    let (ps, _) = run(&pjrt_cfg);
+    // f32 vs f64 accumulate differences over 12.8k samples; compare the
+    // *separation quality*, not bitwise state.
+    assert!(
+        (ns.final_amari - ps.final_amari).abs() < 0.1,
+        "native {} vs pjrt {}",
+        ns.final_amari,
+        ps.final_amari
+    );
+}
+
+#[test]
+fn state_store_serves_inference_during_training() {
+    let cfg = base_cfg();
+    let engine = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+    let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
+
+    // Reader thread continuously separates against the live state until
+    // it has observed published updates (or a generous timeout).
+    let reader_state = state.clone();
+    let reader = std::thread::spawn(move || {
+        let x = [0.3, -0.1, 0.25, 0.9];
+        let mut last_version = 0;
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while last_version < 10 && std::time::Instant::now() < deadline {
+            let snap = reader_state.snapshot();
+            assert!(snap.version >= last_version, "version must be monotone");
+            last_version = snap.version;
+            let y = snap.b.matvec(&x);
+            assert!(y.iter().all(|v| v.is_finite()));
+            std::thread::yield_now();
+        }
+        last_version
+    });
+    let _ = run_streaming(&cfg, engine, ServerOptions::default(), &state).unwrap();
+    let seen = reader.join().unwrap();
+    assert!(seen > 0, "reader should observe published versions");
+}
+
+#[test]
+fn engine_rejects_wrong_chunk_shape() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.engine = EngineKind::Pjrt;
+    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+    let mut engine = easi_ica::coordinator::PjrtEngine::from_config(&cfg).unwrap();
+    let wrong = Mat64::zeros(engine.chunk_size() + 1, cfg.m);
+    assert!(engine.submit_chunk(&wrong).is_err());
+}

@@ -1,0 +1,119 @@
+//! Integration tests over the experiment drivers: the paper's headline
+//! *shapes* must hold end-to-end (who wins, by roughly what factor, where
+//! crossovers fall) — the quantitative bands live in EXPERIMENTS.md.
+
+use easi_ica::experiments::{
+    a2_nonlinearity, a3_adaptive_tracking, e1_convergence, e3_depth_sweep, E1Params,
+    TrackingParams,
+};
+use easi_ica::fpga::{table1, Calib};
+use easi_ica::ica::Nonlinearity;
+
+/// E1 shape: SMBGD converges faster than SGD at the same μ, in the
+/// paper's ~15–35% band (paper: 24%), with both converging reliably.
+#[test]
+fn e1_improvement_in_paper_band() {
+    let params = E1Params { runs: 16, max_samples: 60_000, ..Default::default() };
+    let r = e1_convergence(&params);
+    assert!(r.sgd.convergence_rate() > 0.9, "SGD must converge: {}", r.render());
+    assert!(r.smbgd.convergence_rate() > 0.9, "SMBGD must converge: {}", r.render());
+    let impr = r.improvement_pct();
+    assert!(
+        (10.0..45.0).contains(&impr),
+        "improvement {impr:.1}% outside the paper-shaped band:\n{}",
+        r.render()
+    );
+    // Iteration scale: the paper's regime is thousands, not tens.
+    let sgd_iters = r.sgd.mean_iterations();
+    assert!(
+        (2_000.0..8_000.0).contains(&sgd_iters),
+        "SGD mean {sgd_iters} should be in the paper's ~4k regime"
+    );
+}
+
+/// E2 shape: every Table-I relationship, end to end.
+#[test]
+fn e2_table1_all_relationships() {
+    let t = table1(4, 2, Nonlinearity::Cube, &Calib::default());
+    let clock_ratio = t.smbgd.timing.fmax_mhz / t.sgd.timing.fmax_mhz;
+    let mips_ratio = t.smbgd.throughput_mips / t.sgd.throughput_mips;
+    let reg_ratio =
+        t.smbgd.resources.register_bits as f64 / t.sgd.resources.register_bits as f64;
+
+    // Paper: 11.46×, 149.11×, 22.8×, DSPs equal, ALMs lower for SMBGD.
+    assert!((clock_ratio - 11.46).abs() / 11.46 < 0.15, "clock ratio {clock_ratio:.2}");
+    assert!((mips_ratio - 149.11).abs() / 149.11 < 0.15, "mips ratio {mips_ratio:.2}");
+    assert!((reg_ratio - 22.8).abs() / 22.8 < 0.25, "register ratio {reg_ratio:.1}");
+    assert_eq!(t.sgd.resources.dsps, t.smbgd.resources.dsps);
+    assert!(t.smbgd.resources.alms < t.sgd.resources.alms);
+
+    // Absolute values within 10% of the paper's columns.
+    assert!((t.sgd.timing.fmax_mhz - 4.81).abs() / 4.81 < 0.10);
+    assert!((t.smbgd.timing.fmax_mhz - 55.17).abs() / 55.17 < 0.10);
+    assert!((t.sgd.resources.alms as f64 - 12731.0).abs() / 12731.0 < 0.10);
+    assert!((t.smbgd.resources.alms as f64 - 10350.0).abs() / 10350.0 < 0.10);
+}
+
+/// E3 shape: Fmax ~constant in (m, n); throughput ∝ depth; depth follows
+/// the paper's formula.
+#[test]
+fn e3_scaling_shapes() {
+    let rows = e3_depth_sweep(&[(2, 2), (4, 2), (4, 4), (8, 4), (8, 8)], &Calib::default());
+    for r in &rows {
+        let expected = 10 + (r.m * r.n).next_power_of_two().trailing_zeros() as usize;
+        assert_eq!(r.depth, expected);
+        // SMBGD MIPS ≈ fmax × depth.
+        let pred = r.smbgd_fmax_mhz * r.depth as f64;
+        assert!((r.smbgd_mips - pred).abs() / pred < 0.05);
+    }
+    let fmaxes: Vec<f64> = rows.iter().map(|r| r.smbgd_fmax_mhz).collect();
+    let (lo, hi) = fmaxes
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+    assert!((hi - lo) / hi < 0.2, "pipelined Fmax should be ~flat: {fmaxes:?}");
+    // SGD Fmax, by contrast, degrades with problem size.
+    let sgd_first = rows.first().unwrap().sgd_fmax_mhz;
+    let sgd_last = rows.last().unwrap().sgd_fmax_mhz;
+    assert!(sgd_last < sgd_first, "unpipelined Fmax must fall with m·n");
+}
+
+/// A2 shape: cubic separates sub-Gaussian sources and is the cheapest;
+/// tanh fails on them (wrong stability sign) and costs the most ALMs.
+#[test]
+fn a2_nonlinearity_shapes() {
+    let rows = a2_nonlinearity(6, 0x77, &Calib::default());
+    let cube = rows.iter().find(|r| r.g == Nonlinearity::Cube).unwrap();
+    let tanh = rows.iter().find(|r| r.g == Nonlinearity::Tanh).unwrap();
+    let ss = rows.iter().find(|r| r.g == Nonlinearity::SignedSquare).unwrap();
+    assert!(cube.convergence_rate > 0.8, "cube should separate");
+    assert!(
+        tanh.convergence_rate < cube.convergence_rate,
+        "tanh should do worse on sub-Gaussian sources"
+    );
+    assert!(cube.smbgd_alms < tanh.smbgd_alms, "paper: cubic is cheaper");
+    assert!(ss.smbgd_alms <= cube.smbgd_alms, "signed-square is cheapest");
+}
+
+/// A3 shape: adaptive beats frozen; faster drift hurts everyone but
+/// adaptive stays bounded.
+#[test]
+fn a3_tracking_shapes() {
+    let slow = a3_adaptive_tracking(&TrackingParams {
+        omega: 1e-5,
+        samples: 80_000,
+        ..Default::default()
+    });
+    let fast = a3_adaptive_tracking(&TrackingParams {
+        omega: 1e-4,
+        samples: 80_000,
+        ..Default::default()
+    });
+    let s = |r: &easi_ica::experiments::TrackingResult, n: &str| {
+        r.trace(n).unwrap().steady_state_amari()
+    };
+    // Adaptive beats the frozen baseline in both regimes.
+    assert!(s(&slow, "easi-smbgd") < s(&slow, "fastica-once"));
+    assert!(s(&fast, "easi-smbgd") < s(&fast, "fastica-once"));
+    // Faster drift degrades tracking (monotone in omega).
+    assert!(s(&fast, "easi-smbgd") > s(&slow, "easi-smbgd") * 0.8);
+}

@@ -1,0 +1,181 @@
+//! Cross-layer parity: the native Rust optimizers (L3) must compute the
+//! same math as the AOT-compiled JAX/Pallas programs (L2/L1) executed via
+//! PJRT. This is the test that proves the three layers implement ONE
+//! algorithm.
+//!
+//! Requires `make artifacts`. Tests self-skip when artifacts are missing
+//! so `cargo test` stays green on a fresh checkout.
+
+use easi_ica::ica::{EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
+use easi_ica::linalg::Mat64;
+use easi_ica::runtime::{artifacts_available, default_artifacts_dir, PjrtRuntime};
+use easi_ica::signal::Pcg32;
+
+fn runtime() -> Option<PjrtRuntime> {
+    if !artifacts_available() {
+        eprintln!("skipping PJRT parity test: run `make artifacts` first");
+        return None;
+    }
+    Some(PjrtRuntime::new(default_artifacts_dir()).expect("open runtime"))
+}
+
+/// Quantize a matrix through f32 (the artifacts compute in f32).
+fn as_f32(m: &Mat64) -> Mat64 {
+    m.map(|v| v as f32 as f64)
+}
+
+fn rand_mat(rng: &mut Pcg32, r: usize, c: usize, scale: f64) -> Mat64 {
+    Mat64::from_fn(r, c, |_, _| rng.normal() * scale)
+}
+
+#[test]
+fn grad_program_matches_native_gradient() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Pcg32::seed(1);
+    for (m, n, name) in [(4usize, 2usize, "easi_grad_m4_n2"), (8, 4, "easi_grad_m8_n4")] {
+        let b = as_f32(&rand_mat(&mut rng, n, m, 0.5));
+        let x: Vec<f64> = (0..m).map(|_| (rng.normal() as f32) as f64).collect();
+
+        let got = rt.run_grad(name, &b, &x).expect("run grad");
+
+        // Native gradient (mu irrelevant for the plain form).
+        let mut y = vec![0.0; n];
+        let mut gy = vec![0.0; n];
+        let mut h = Mat64::zeros(n, n);
+        EasiSgd::relative_gradient(
+            &b, &x, Nonlinearity::Cube, false, 0.0, &mut y, &mut gy, &mut h,
+        );
+        assert!(
+            got.max_abs_diff(&h) < 1e-4,
+            "grad mismatch m={m} n={n}: {}",
+            got.max_abs_diff(&h)
+        );
+    }
+}
+
+#[test]
+fn sgd_chunk_matches_native_sgd() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Pcg32::seed(2);
+    let (m, n, t) = (4usize, 2usize, 64usize);
+    let b0 = as_f32(&rand_mat(&mut rng, n, m, 0.3));
+    let xs = as_f32(&rand_mat(&mut rng, t, m, 1.0));
+    let mu = 0.004f32 as f64;
+
+    let got = rt
+        .run_sgd_chunk("easi_sgd_m4_n2_t64", &b0, &xs, mu)
+        .expect("run sgd chunk");
+
+    let mut native = EasiSgd::new(b0, mu, Nonlinearity::Cube);
+    native.step_batch(&xs);
+
+    let diff = got.max_abs_diff(native.b());
+    assert!(diff < 5e-3, "sgd chunk parity: diff {diff}");
+}
+
+#[test]
+fn smbgd_chunk_matches_native_smbgd() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Pcg32::seed(3);
+    let (m, n, p, k) = (4usize, 2usize, 8usize, 8usize);
+    let b0 = as_f32(&rand_mat(&mut rng, n, m, 0.3));
+    let xs = as_f32(&rand_mat(&mut rng, k * p, m, 1.0));
+    let (gamma, beta, mu) = (0.5, 0.9, 0.004);
+
+    let out = rt
+        .run_smbgd_chunk("easi_smbgd_m4_n2_p8_k8", &b0, &Mat64::zeros(n, n), &xs, gamma, beta, mu)
+        .expect("run smbgd chunk");
+
+    let mut native = Smbgd::new(b0, SmbgdParams { mu, gamma, beta, p }, Nonlinearity::Cube);
+    native.step_batch(&xs);
+
+    let bdiff = out.b.max_abs_diff(native.b());
+    let hdiff = out.hhat.max_abs_diff(native.hhat_prev());
+    assert!(bdiff < 5e-3, "smbgd B parity: diff {bdiff}");
+    assert!(hdiff < 5e-3, "smbgd Hhat parity: diff {hdiff}");
+}
+
+#[test]
+fn smbgd_chunking_carries_state_like_native() {
+    // Two chunk invocations must equal one double-length native run:
+    // proves (B, Ĥ) threading through the runtime preserves Eq. 1 state.
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Pcg32::seed(4);
+    let (m, n, p, k) = (4usize, 2usize, 8usize, 8usize);
+    let b0 = as_f32(&rand_mat(&mut rng, n, m, 0.3));
+    let xs = as_f32(&rand_mat(&mut rng, 2 * k * p, m, 1.0));
+    let (gamma, beta, mu) = (0.7, 0.95, 0.002);
+
+    let first = Mat64::from_fn(k * p, m, |i, j| xs[(i, j)]);
+    let second = Mat64::from_fn(k * p, m, |i, j| xs[(i + k * p, j)]);
+
+    let o1 = rt
+        .run_smbgd_chunk("easi_smbgd_m4_n2_p8_k8", &b0, &Mat64::zeros(n, n), &first, gamma, beta, mu)
+        .unwrap();
+    let o2 = rt
+        .run_smbgd_chunk("easi_smbgd_m4_n2_p8_k8", &o1.b, &o1.hhat, &second, gamma, beta, mu)
+        .unwrap();
+
+    let mut native = Smbgd::new(b0, SmbgdParams { mu, gamma, beta, p }, Nonlinearity::Cube);
+    native.step_batch(&xs);
+
+    assert!(o2.b.max_abs_diff(native.b()) < 5e-3);
+    assert!(o2.hhat.max_abs_diff(native.hhat_prev()) < 5e-3);
+}
+
+#[test]
+fn separate_program_projects() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Pcg32::seed(5);
+    let (m, n, t) = (4usize, 2usize, 256usize);
+    let b = as_f32(&rand_mat(&mut rng, n, m, 0.5));
+    let xs = as_f32(&rand_mat(&mut rng, t, m, 1.0));
+    let y = rt.run_separate("separate_m4_n2_t256", &b, &xs).unwrap();
+    let want = xs.matmul(&b.transpose());
+    assert!(y.max_abs_diff(&want) < 1e-4);
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(mut rt) = runtime() else { return };
+    assert_eq!(rt.compiled_count(), 0);
+    let b = Mat64::zeros(2, 4);
+    let x = vec![0.0; 4];
+    rt.run_grad("easi_grad_m4_n2", &b, &x).unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+    rt.run_grad("easi_grad_m4_n2", &b, &x).unwrap();
+    assert_eq!(rt.compiled_count(), 1, "second call must hit the cache");
+}
+
+#[test]
+fn pjrt_engine_matches_native_engine_end_to_end() {
+    use easi_ica::config::{EngineKind, ExperimentConfig};
+    use easi_ica::coordinator::{Engine, NativeEngine, PjrtEngine};
+
+    if !artifacts_available() {
+        return;
+    }
+    let mut cfg = ExperimentConfig::default();
+    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+    cfg.engine = EngineKind::Pjrt;
+    cfg.optimizer.p = 8;
+
+    let mut pjrt = PjrtEngine::from_config(&cfg).expect("pjrt engine");
+    let native_opt = easi_ica::ica::make_optimizer(
+        &cfg.optimizer,
+        cfg.n,
+        cfg.m,
+        Nonlinearity::Cube,
+    );
+    let mut native = NativeEngine::new(native_opt, pjrt.chunk_size());
+
+    let mut rng = Pcg32::seed(6);
+    for _ in 0..5 {
+        let xs = as_f32(&rand_mat(&mut rng, pjrt.chunk_size(), cfg.m, 1.0));
+        pjrt.submit_chunk(&xs).unwrap();
+        native.submit_chunk(&xs).unwrap();
+    }
+    let diff = pjrt.b().max_abs_diff(&native.b());
+    assert!(diff < 1e-2, "engine parity over 5 chunks: diff {diff}");
+    assert_eq!(pjrt.samples_done(), native.samples_done());
+}
