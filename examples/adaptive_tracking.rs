@@ -17,7 +17,7 @@
 use easi_ica::config::{EngineKind, ExperimentConfig, OptimizerKind};
 use easi_ica::coordinator::{make_engine, run_streaming, ServerOptions, StateStore};
 use easi_ica::ica::{ConvergenceCriterion, Nonlinearity};
-use easi_ica::runtime::{artifacts_available, default_artifacts_dir};
+use easi_ica::runtime::{artifacts_available, default_artifacts_dir, pjrt_enabled};
 
 fn main() {
     let mut cfg = ExperimentConfig::default();
@@ -34,10 +34,10 @@ fn main() {
     cfg.signal.mixing = "rotating".into();
     cfg.signal.omega = 1e-5; // ~2 full rotations over the stream
     cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
-    cfg.engine = if artifacts_available() {
+    cfg.engine = if pjrt_enabled() && artifacts_available() {
         EngineKind::Pjrt
     } else {
-        eprintln!("note: artifacts missing; run `make artifacts` for the PJRT path");
+        eprintln!("note: PJRT path needs the `pjrt` feature and `make artifacts`; using native");
         EngineKind::Native
     };
 

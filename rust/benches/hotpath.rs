@@ -14,7 +14,7 @@ use easi_ica::config::{EngineKind, ExperimentConfig, OptimizerKind};
 use easi_ica::coordinator::{make_engine, run_streaming, ServerOptions, StateStore};
 use easi_ica::ica::{EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
 use easi_ica::linalg::Mat64;
-use easi_ica::runtime::{artifacts_available, default_artifacts_dir, PjrtRuntime};
+use easi_ica::runtime::{artifacts_available, default_artifacts_dir, pjrt_enabled, PjrtRuntime};
 use easi_ica::signal::Pcg32;
 
 fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat64 {
@@ -66,8 +66,8 @@ fn native_steps(m: usize, n: usize) {
 }
 
 fn pjrt_chunks() {
-    if !artifacts_available() {
-        println!("pjrt benches skipped: run `make artifacts`");
+    if !pjrt_enabled() || !artifacts_available() {
+        println!("pjrt benches skipped: need the `pjrt` feature and `make artifacts`");
         return;
     }
     let mut rt = PjrtRuntime::new(default_artifacts_dir()).expect("runtime");
@@ -128,7 +128,7 @@ fn coordinator_end_to_end() {
         sum.samples as f64 / dt
     );
 
-    if artifacts_available() {
+    if pjrt_enabled() && artifacts_available() {
         cfg.engine = EngineKind::Pjrt;
         cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
         cfg.samples = 100_000;

@@ -107,6 +107,14 @@ pub fn usage() -> &'static str {
                       --config FILE | [--m N --n N --optimizer sgd|smbgd|mbgd\n\
                       --engine native|pjrt --samples N --mu F --gamma F --beta F\n\
                       --p N --mixing static|rotating|switching --seed N]\n\
+       serve-many     multi-session hub: N concurrent sessions sharded over a\n\
+                      worker pool, with per-shard backpressure and an\n\
+                      aggregate throughput table\n\
+                      [--config FILE | --sessions N --shards N --samples N\n\
+                       --mixing a,b,c --capacity N --seed N --seed-stride N\n\
+                       --mu F --gamma F --beta F --p N --m N --n N\n\
+                       --optimizer sgd|smbgd|mbgd --engine native|pjrt\n\
+                       --artifacts DIR]\n\
        convergence    E1 (paper SSV.A): SGD vs SMBGD iterations-to-convergence\n\
                       [--runs N --m N --n N --mu F --gamma F --beta F --p N]\n\
        table1         E2 (paper Table I): FPGA model, both architectures\n\

@@ -9,4 +9,6 @@ mod parse;
 mod types;
 
 pub use parse::{parse, ParseError, Value};
-pub use types::{EngineKind, ExperimentConfig, OptimizerConfig, OptimizerKind, SignalConfig};
+pub use types::{
+    EngineKind, ExperimentConfig, HubScenario, OptimizerConfig, OptimizerKind, SignalConfig,
+};

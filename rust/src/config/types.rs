@@ -213,6 +213,123 @@ impl ExperimentConfig {
     }
 }
 
+/// A hub scenario: a fleet of separation sessions derived from one base
+/// experiment config, plus the hub topology (session count, shard count,
+/// per-session mixing kinds). Parsed from the same TOML subset; base
+/// experiment keys sit at their usual places and hub keys under `[hub]`:
+///
+/// ```text
+/// samples = 20000                     # base keys apply to every session
+///
+/// [optimizer]
+/// mu = 0.004
+///
+/// [hub]
+/// sessions = 8
+/// shards = 2
+/// channel_capacity = 4096             # per-shard, in samples
+/// mixing = ["static", "rotating", "switching"]  # cycled by session id
+/// seed_stride = 1
+/// ```
+#[derive(Clone, Debug)]
+pub struct HubScenario {
+    /// Number of concurrent sessions.
+    pub sessions: usize,
+    /// Worker shards the sessions are multiplexed onto.
+    pub shards: usize,
+    /// Per-shard ingest channel capacity in samples.
+    pub channel_capacity: usize,
+    /// Mixing kinds cycled across sessions (`static|rotating|switching`);
+    /// empty inherits the base config's mixing for every session.
+    pub mixing: Vec<String>,
+    /// Session `i` streams with seed `base.seed + i * seed_stride`.
+    pub seed_stride: u64,
+    /// Template every session config derives from.
+    pub base: ExperimentConfig,
+}
+
+impl Default for HubScenario {
+    fn default() -> Self {
+        Self {
+            sessions: 8,
+            shards: 2,
+            channel_capacity: 4096,
+            mixing: Vec::new(),
+            seed_stride: 1,
+            base: ExperimentConfig::default(),
+        }
+    }
+}
+
+impl HubScenario {
+    /// Parse from TOML-subset text; unknown keys are rejected.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let map = parse(text).context("parsing hub scenario")?;
+        let mut scenario = Self::default();
+        let mut base_map = BTreeMap::new();
+        for (key, value) in map {
+            match key.as_str() {
+                "hub.sessions" => scenario.sessions = want_usize(&key, &value)?,
+                "hub.shards" => scenario.shards = want_usize(&key, &value)?,
+                "hub.channel_capacity" => {
+                    scenario.channel_capacity = want_usize(&key, &value)?
+                }
+                "hub.seed_stride" => scenario.seed_stride = want_usize(&key, &value)? as u64,
+                "hub.mixing" => scenario.mixing = want_str_list(&key, &value)?,
+                k if k.starts_with("hub.") => bail!("unknown config key '{k}'"),
+                _ => {
+                    base_map.insert(key, value);
+                }
+            }
+        }
+        scenario.base = ExperimentConfig::from_map(&base_map)?;
+        scenario.validate()?;
+        Ok(scenario)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading hub scenario file {path}"))?;
+        Self::from_toml(&text)
+    }
+
+    /// Check hub-level invariants (per-session configs are validated again
+    /// by the hub itself).
+    pub fn validate(&self) -> Result<()> {
+        if self.sessions == 0 {
+            bail!("hub.sessions must be >= 1");
+        }
+        if self.shards == 0 {
+            bail!("hub.shards must be >= 1");
+        }
+        for m in &self.mixing {
+            match m.as_str() {
+                "static" | "rotating" | "switching" => {}
+                other => bail!("unknown hub.mixing kind '{other}'"),
+            }
+        }
+        self.base.validate()
+    }
+
+    /// Materialize session `id`'s config: base + per-session seed, mixing
+    /// kind (cycled), and name suffix.
+    pub fn session_config(&self, id: usize) -> ExperimentConfig {
+        let mut cfg = self.base.clone();
+        cfg.seed = self.base.seed.wrapping_add((id as u64).wrapping_mul(self.seed_stride));
+        if !self.mixing.is_empty() {
+            cfg.signal.mixing = self.mixing[id % self.mixing.len()].clone();
+        }
+        cfg.name = format!("{}-{id}", self.base.name);
+        cfg
+    }
+
+    /// Materialize every session config.
+    pub fn session_configs(&self) -> Vec<ExperimentConfig> {
+        (0..self.sessions).map(|id| self.session_config(id)).collect()
+    }
+}
+
 fn want_str(key: &str, v: &Value) -> Result<String> {
     v.as_str().map(str::to_string).with_context(|| format!("'{key}' must be a string"))
 }
@@ -227,6 +344,22 @@ fn want_usize(key: &str, v: &Value) -> Result<usize> {
         bail!("'{key}' must be non-negative, got {i}");
     }
     Ok(i as usize)
+}
+
+/// Accept either a single string or a flat array of strings.
+fn want_str_list(key: &str, v: &Value) -> Result<Vec<String>> {
+    match v {
+        Value::Str(s) => Ok(vec![s.clone()]),
+        Value::Array(items) => items
+            .iter()
+            .map(|it| {
+                it.as_str()
+                    .map(str::to_string)
+                    .with_context(|| format!("'{key}' must contain strings"))
+            })
+            .collect(),
+        _ => bail!("'{key}' must be a string or an array of strings"),
+    }
 }
 
 #[cfg(test)]
@@ -290,6 +423,61 @@ mod tests {
     fn bad_mu_rejected() {
         let doc = "[optimizer]\nmu = 1.5";
         assert!(ExperimentConfig::from_toml(doc).is_err());
+    }
+
+    #[test]
+    fn hub_scenario_round_trip() {
+        let doc = r#"
+            name = "fleet"
+            samples = 9000
+            seed = 100
+
+            [optimizer]
+            mu = 0.004
+
+            [hub]
+            sessions = 6
+            shards = 3
+            channel_capacity = 1024
+            mixing = ["static", "rotating"]
+            seed_stride = 10
+        "#;
+        let sc = HubScenario::from_toml(doc).unwrap();
+        assert_eq!((sc.sessions, sc.shards, sc.channel_capacity), (6, 3, 1024));
+        assert_eq!(sc.base.samples, 9000);
+        let cfgs = sc.session_configs();
+        assert_eq!(cfgs.len(), 6);
+        assert_eq!(cfgs[0].seed, 100);
+        assert_eq!(cfgs[3].seed, 130);
+        assert_eq!(cfgs[0].signal.mixing, "static");
+        assert_eq!(cfgs[1].signal.mixing, "rotating");
+        assert_eq!(cfgs[2].signal.mixing, "static");
+        assert_eq!(cfgs[5].name, "fleet-5");
+        for c in &cfgs {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn hub_scenario_single_mixing_string() {
+        let sc = HubScenario::from_toml("[hub]\nmixing = \"switching\"").unwrap();
+        assert_eq!(sc.mixing, vec!["switching".to_string()]);
+        assert_eq!(sc.session_config(4).signal.mixing, "switching");
+    }
+
+    #[test]
+    fn hub_scenario_empty_mixing_inherits_base() {
+        let sc = HubScenario::from_toml("[signal]\nmixing = \"rotating\"").unwrap();
+        assert_eq!(sc.session_config(2).signal.mixing, "rotating");
+    }
+
+    #[test]
+    fn hub_scenario_rejects_bad_keys_and_values() {
+        assert!(HubScenario::from_toml("[hub]\nsessions = 0").is_err());
+        assert!(HubScenario::from_toml("[hub]\nshards = 0").is_err());
+        assert!(HubScenario::from_toml("[hub]\nmixing = \"warp\"").is_err());
+        assert!(HubScenario::from_toml("[hub]\ntypo = 1").is_err());
+        assert!(HubScenario::from_toml("typo = 1").is_err(), "base keys still strict");
     }
 
     #[test]

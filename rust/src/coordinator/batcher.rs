@@ -36,6 +36,23 @@ impl Chunker {
         }
     }
 
+    /// Push every row of a block, invoking `on_chunk` for each completed
+    /// chunk. This is the hub/server ingest path: one call per producer
+    /// block instead of one `Option` check per sample at the call site.
+    /// Stops at the first error.
+    pub fn push_block<E>(
+        &mut self,
+        block: &Mat64,
+        mut on_chunk: impl FnMut(&Mat64) -> Result<(), E>,
+    ) -> Result<(), E> {
+        for r in 0..block.rows() {
+            if let Some(chunk) = self.push(block.row(r)) {
+                on_chunk(&chunk)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Samples currently buffered (not yet emitted).
     pub fn pending(&self) -> usize {
         self.rows
@@ -109,6 +126,37 @@ mod tests {
         }
         assert_eq!(chunks, 5);
         assert_eq!(ch.total_pushed(), 10);
+    }
+
+    #[test]
+    fn push_block_emits_chunks_in_order() {
+        let mut ch = Chunker::new(1, 2);
+        let block = Mat64::from_fn(5, 1, |i, _| i as f64);
+        let mut seen = Vec::new();
+        ch.push_block(&block, |chunk| -> Result<(), ()> {
+            seen.extend_from_slice(chunk.as_slice());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(ch.pending(), 1, "5th row stays buffered");
+    }
+
+    #[test]
+    fn push_block_stops_on_error() {
+        let mut ch = Chunker::new(1, 1);
+        let block = Mat64::from_fn(4, 1, |i, _| i as f64);
+        let mut calls = 0;
+        let res = ch.push_block(&block, |_| {
+            calls += 1;
+            if calls == 2 {
+                Err("boom")
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(res, Err("boom"));
+        assert_eq!(calls, 2, "chunks after the error must not be emitted");
     }
 
     #[test]

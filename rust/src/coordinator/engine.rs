@@ -16,7 +16,9 @@ use crate::runtime::{PjrtRuntime, ProgramKind};
 use anyhow::{bail, Context, Result};
 
 /// A chunk-oriented executor of EASI updates.
-pub trait Engine {
+///
+/// `Send` so the hub can move per-session engines onto worker shards.
+pub trait Engine: Send {
     /// Preferred chunk size in samples. [`NativeEngine`] accepts any
     /// chunk; [`PjrtEngine`] requires exactly this many rows per submit.
     fn chunk_size(&self) -> usize;
@@ -267,8 +269,8 @@ mod tests {
         cfg.artifacts_dir = crate::runtime::default_artifacts_dir()
             .to_string_lossy()
             .into_owned();
-        if !crate::runtime::artifacts_available() {
-            return; // needs `make artifacts`
+        if !crate::runtime::pjrt_enabled() || !crate::runtime::artifacts_available() {
+            return; // needs the `pjrt` feature and `make artifacts`
         }
         assert!(PjrtEngine::from_config(&cfg).is_err());
     }

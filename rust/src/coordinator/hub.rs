@@ -1,0 +1,506 @@
+//! Multi-session coordinator hub: many concurrent separation sessions
+//! multiplexed over a fixed pool of worker shards.
+//!
+//! The single-stream server (`server.rs`) models the paper's deployment —
+//! one device, one signal. The ROADMAP's north star is serving *many*
+//! tenants from one process, the way related configurable-ICA accelerators
+//! treat the separator as a shared multiplexed resource. The hub does that
+//! in software:
+//!
+//! ```text
+//!   session 0 producer ──┐                 ┌─► shard 0 worker ──► sessions {0, 2, …}
+//!   session 1 producer ──┼─► per-shard  ───┤      (Engine + StateStore + Monitor each)
+//!   session 2 producer ──┤   bounded       └─► shard 1 worker ──► sessions {1, 3, …}
+//!   …                    ┘   channels
+//! ```
+//!
+//! - **Sharding**: session `id` runs on worker `id % shards`; a session's
+//!   optimizer state never migrates, so there is no cross-thread state
+//!   synchronization on the hot path.
+//! - **Backpressure**: each shard has its own bounded channel. A slow
+//!   shard stalls only the producers of its own tenants; other shards keep
+//!   streaming at full rate.
+//! - **Isolation**: every session owns its [`SessionRunner`] (engine,
+//!   chunker, AGC, divergence guard, monitor, state store). A diverging
+//!   tenant resets itself without perturbing its neighbours, and a session
+//!   run through the hub is bit-identical to the same config run through
+//!   [`run_streaming`] (proved by `rust/tests/integration_hub.rs`).
+//! - **Metrics**: live aggregate ingest counters and per-shard queue
+//!   depths via [`HubMetrics`]; per-session Amari trajectories and an
+//!   aggregate throughput table in the final [`HubSummary`].
+
+use super::engine::make_engine;
+use super::server::{
+    block_capacity, build_stream, drive_stream, RunSummary, ServerOptions, SessionRunner,
+    StreamEvent,
+};
+use super::state::{StateDirectory, StateStore};
+use crate::config::ExperimentConfig;
+use crate::ica::Nonlinearity;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+/// Hub tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct HubOptions {
+    /// Worker shards (threads applying engine updates).
+    pub shards: usize,
+    /// Per-shard ingest channel capacity in samples — the backpressure
+    /// depth each shard grants its tenants collectively.
+    pub channel_capacity: usize,
+    /// Per-session server knobs (monitor cadence, AGC, divergence guard).
+    pub server: ServerOptions,
+}
+
+impl Default for HubOptions {
+    fn default() -> Self {
+        Self { shards: 2, channel_capacity: 4096, server: ServerOptions::default() }
+    }
+}
+
+impl HubOptions {
+    /// Hub options described by a config-layer scenario (per-session
+    /// server knobs keep their defaults). The single mapping point, so
+    /// future scenario knobs cannot silently diverge between callers.
+    pub fn from_scenario(sc: &crate::config::HubScenario) -> Self {
+        Self {
+            shards: sc.shards,
+            channel_capacity: sc.channel_capacity,
+            server: ServerOptions::default(),
+        }
+    }
+}
+
+/// Convenience: run a config-layer [`crate::config::HubScenario`] to
+/// completion (the `serve-many` path).
+pub fn run_scenario(
+    sc: &crate::config::HubScenario,
+    g: Nonlinearity,
+) -> Result<HubSummary> {
+    Hub::new(sc.session_configs(), g, HubOptions::from_scenario(sc))?.run()
+}
+
+/// Live hub metrics, cheaply cloneable and readable from any thread.
+#[derive(Clone)]
+pub struct HubMetrics {
+    ingested: Arc<AtomicU64>,
+    consumed: Arc<AtomicU64>,
+    depths: Vec<Arc<AtomicUsize>>,
+    started: Instant,
+}
+
+impl HubMetrics {
+    fn new(shards: usize) -> Self {
+        Self {
+            ingested: Arc::new(AtomicU64::new(0)),
+            consumed: Arc::new(AtomicU64::new(0)),
+            depths: (0..shards).map(|_| Arc::new(AtomicUsize::new(0))).collect(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Samples enqueued by producers so far (all sessions).
+    pub fn samples_ingested(&self) -> u64 {
+        self.ingested.load(Ordering::Relaxed)
+    }
+
+    /// Samples consumed by shard workers so far (all sessions; includes
+    /// rows still buffered in a session's chunker as a partial chunk).
+    pub fn samples_consumed(&self) -> u64 {
+        self.consumed.load(Ordering::Relaxed)
+    }
+
+    /// Aggregate consumed samples/sec since the hub started.
+    pub fn aggregate_sps(&self) -> f64 {
+        self.samples_consumed() as f64 / self.started.elapsed().as_secs_f64().max(1e-12)
+    }
+
+    /// Current ingest backlog of one shard, in messages: events queued in
+    /// the channel *plus* producers blocked on a full channel (the gauge
+    /// is incremented before the blocking send), so under backpressure it
+    /// can exceed the configured channel capacity — that excess is exactly
+    /// the number of stalled tenants.
+    pub fn queue_depth(&self, shard: usize) -> usize {
+        self.depths[shard].load(Ordering::Relaxed)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.depths.len()
+    }
+}
+
+/// Final per-session outcome.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    pub id: usize,
+    pub shard: usize,
+    /// Session name (from its config).
+    pub name: String,
+    pub summary: RunSummary,
+}
+
+/// Final hub outcome: every session's summary plus aggregates.
+#[derive(Clone, Debug)]
+pub struct HubSummary {
+    /// Reports ordered by session id.
+    pub sessions: Vec<SessionReport>,
+    pub shards: usize,
+    pub elapsed_secs: f64,
+    /// Total samples applied across all sessions.
+    pub total_samples: u64,
+    /// Aggregate applied samples/sec (the hub's MIPS analogue).
+    pub aggregate_sps: f64,
+    /// Deepest ingest backlog any shard observed, in messages — queued
+    /// events plus producers blocked on the full channel, so it can
+    /// exceed the configured capacity (see [`HubMetrics::queue_depth`]).
+    pub max_queue_depth: usize,
+}
+
+impl HubSummary {
+    /// Render the per-session throughput table the `serve-many` command
+    /// and the load-generator example print.
+    ///
+    /// Per-session `sps` is the *multiplexed* service rate — each session's
+    /// samples over its own first-ingest→finish window while sharing a
+    /// shard worker — so rows are expected to be lower than a solo `run`
+    /// of the same config; the `total:` line is the hub's aggregate rate.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "session  shard  engine                     samples      sps    amari  resets\n",
+        );
+        for r in &self.sessions {
+            let s = &r.summary;
+            out.push_str(&format!(
+                "{:>7}  {:>5}  {:<24} {:>9}  {:>7.0}  {:>7.4}  {:>6}\n",
+                r.id, r.shard, s.engine, s.samples, s.throughput_sps, s.final_amari, s.resets
+            ));
+        }
+        out.push_str(&format!(
+            "total: {} samples over {} sessions on {} shard(s) in {:.3} s — {:.0} samples/s \
+             (max queue depth {})\n",
+            self.total_samples,
+            self.sessions.len(),
+            self.shards,
+            self.elapsed_secs,
+            self.aggregate_sps,
+            self.max_queue_depth
+        ));
+        out
+    }
+}
+
+/// Messages flowing from session producers into a shard worker.
+type ShardMsg = (usize, StreamEvent);
+
+/// The multi-session hub. Build with [`Hub::new`], then [`Hub::run`].
+pub struct Hub {
+    cfgs: Vec<ExperimentConfig>,
+    g: Nonlinearity,
+    opts: HubOptions,
+    directory: StateDirectory,
+    metrics: HubMetrics,
+}
+
+impl Hub {
+    /// Validate the session configs and assemble a hub. Nothing is spawned
+    /// until [`Hub::run`].
+    pub fn new(cfgs: Vec<ExperimentConfig>, g: Nonlinearity, opts: HubOptions) -> Result<Self> {
+        if cfgs.is_empty() {
+            bail!("hub needs at least one session config");
+        }
+        if opts.shards == 0 {
+            bail!("hub needs at least one worker shard");
+        }
+        for (id, cfg) in cfgs.iter().enumerate() {
+            cfg.validate().with_context(|| format!("session {id} ('{}')", cfg.name))?;
+        }
+        let metrics = HubMetrics::new(opts.shards);
+        Ok(Self { cfgs, g, opts, directory: StateDirectory::new(), metrics })
+    }
+
+    /// Shard a session id is pinned to.
+    pub fn shard_of(&self, session: usize) -> usize {
+        session % self.opts.shards
+    }
+
+    pub fn sessions(&self) -> usize {
+        self.cfgs.len()
+    }
+
+    /// The session-id → state-store registry (populated by [`Hub::run`];
+    /// clone before `run` to serve reads concurrently with training).
+    pub fn directory(&self) -> StateDirectory {
+        self.directory.clone()
+    }
+
+    /// Live metrics handle (clone before `run` to observe concurrently).
+    pub fn metrics(&self) -> HubMetrics {
+        self.metrics.clone()
+    }
+
+    /// Run every session to completion and return the aggregate summary.
+    ///
+    /// Topology: one producer thread per session, one worker thread per
+    /// shard, per-shard bounded channels in between. Deadlock-free by
+    /// construction — producers only send, workers only receive, and a
+    /// worker that fails drops its receiver, which unblocks that shard's
+    /// producers with a send error.
+    pub fn run(self) -> Result<HubSummary> {
+        let Self { cfgs, g, opts, directory, metrics } = self;
+        let shards = opts.shards;
+        let capacity = block_capacity(opts.channel_capacity);
+        let monitor_every = opts.server.monitor_every.max(1);
+        let started = Instant::now();
+
+        // Per-shard channels and the runners each worker will own.
+        let mut txs: Vec<SyncSender<ShardMsg>> = Vec::with_capacity(shards);
+        let mut rxs: Vec<Option<Receiver<ShardMsg>>> = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = sync_channel::<ShardMsg>(capacity);
+            txs.push(tx);
+            rxs.push(Some(rx));
+        }
+        let mut shard_runners: Vec<BTreeMap<usize, SessionRunner>> =
+            (0..shards).map(|_| BTreeMap::new()).collect();
+
+        // Build every session's engine/state/runner up front so config
+        // errors surface before any thread spawns.
+        let mut streams = Vec::with_capacity(cfgs.len());
+        for (id, cfg) in cfgs.iter().enumerate() {
+            let engine = make_engine(cfg, g)
+                .with_context(|| format!("building engine for session {id}"))?;
+            let state = StateStore::new(crate::ica::init_b(cfg.n, cfg.m));
+            directory.insert(id as u64, state.clone());
+            let runner = SessionRunner::new(cfg, engine, &opts.server, state);
+            shard_runners[id % shards].insert(id, runner);
+            let stream = build_stream(cfg)
+                .with_context(|| format!("building stream for session {id}"))?;
+            streams.push(stream);
+        }
+
+        // ---- shard workers ----------------------------------------------
+        let mut workers = Vec::with_capacity(shards);
+        for (shard, runners) in shard_runners.into_iter().enumerate() {
+            let rx = rxs[shard].take().expect("receiver taken once");
+            let depth = Arc::clone(&metrics.depths[shard]);
+            let consumed = Arc::clone(&metrics.consumed);
+            workers.push(thread::spawn(move || -> Result<(Vec<SessionReport>, usize)> {
+                let mut runners = runners;
+                let mut reports = Vec::with_capacity(runners.len());
+                let mut max_depth = 0usize;
+                while !runners.is_empty() {
+                    let (session, event) = rx
+                        .recv()
+                        .context("hub shard channel closed with sessions still active")?;
+                    // fetch_sub returns the pre-decrement value: the depth
+                    // this message observed at dequeue time.
+                    let d = depth.fetch_sub(1, Ordering::Relaxed);
+                    max_depth = max_depth.max(d);
+                    match event {
+                        StreamEvent::Batch(block) => {
+                            let rows = block.rows() as u64;
+                            runners
+                                .get_mut(&session)
+                                .with_context(|| format!("unknown session {session}"))?
+                                .on_block(block)
+                                .with_context(|| format!("session {session}"))?;
+                            consumed.fetch_add(rows, Ordering::Relaxed);
+                        }
+                        StreamEvent::Mixing(a) => {
+                            runners
+                                .get_mut(&session)
+                                .with_context(|| format!("unknown session {session}"))?
+                                .on_mixing(a);
+                        }
+                        StreamEvent::End => {
+                            let runner = runners
+                                .remove(&session)
+                                .with_context(|| format!("unknown session {session}"))?;
+                            reports.push(SessionReport {
+                                id: session,
+                                shard,
+                                name: String::new(), // filled in by the caller
+                                summary: runner.finish(),
+                            });
+                        }
+                    }
+                }
+                Ok((reports, max_depth))
+            }));
+        }
+
+        // ---- session producers ------------------------------------------
+        let mut producers = Vec::with_capacity(streams.len());
+        for (id, mut stream) in streams.into_iter().enumerate() {
+            let total = cfgs[id].samples;
+            let tx = txs[id % shards].clone();
+            let depth = Arc::clone(&metrics.depths[id % shards]);
+            let ingested = Arc::clone(&metrics.ingested);
+            producers.push(thread::spawn(move || {
+                drive_stream(&mut stream, total, monitor_every, &mut |ev| {
+                    let rows = match &ev {
+                        StreamEvent::Batch(b) => b.rows() as u64,
+                        _ => 0,
+                    };
+                    depth.fetch_add(1, Ordering::Relaxed);
+                    if tx.send((id, ev)).is_ok() {
+                        ingested.fetch_add(rows, Ordering::Relaxed);
+                        true
+                    } else {
+                        // Worker hung up (it failed); stop producing.
+                        depth.fetch_sub(1, Ordering::Relaxed);
+                        false
+                    }
+                });
+            }));
+        }
+        drop(txs);
+
+        for p in producers {
+            p.join().ok();
+        }
+        let mut sessions: Vec<SessionReport> = Vec::with_capacity(cfgs.len());
+        let mut max_queue_depth = 0usize;
+        let mut first_err = None;
+        for w in workers {
+            match w.join() {
+                Ok(Ok((reports, depth))) => {
+                    sessions.extend(reports);
+                    max_queue_depth = max_queue_depth.max(depth);
+                }
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err =
+                        first_err.or_else(|| Some(anyhow::anyhow!("hub worker panicked")))
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        sessions.sort_by_key(|r| r.id);
+        for r in &mut sessions {
+            r.name = cfgs[r.id].name.clone();
+        }
+
+        let elapsed = started.elapsed().as_secs_f64();
+        let total_samples: u64 = sessions.iter().map(|r| r.summary.samples).sum();
+        Ok(HubSummary {
+            shards,
+            elapsed_secs: elapsed,
+            total_samples,
+            aggregate_sps: total_samples as f64 / elapsed.max(1e-12),
+            max_queue_depth,
+            sessions,
+        })
+    }
+}
+
+/// Convenience: run a set of session configs through a hub with default
+/// per-session options.
+pub fn run_hub(
+    cfgs: Vec<ExperimentConfig>,
+    g: Nonlinearity,
+    opts: HubOptions,
+) -> Result<HubSummary> {
+    Hub::new(cfgs, g, opts)?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.samples = 4_000;
+        cfg.seed = seed;
+        cfg.optimizer.mu = 0.004;
+        cfg.name = format!("s{seed}");
+        cfg
+    }
+
+    #[test]
+    fn empty_hub_rejected() {
+        assert!(Hub::new(Vec::new(), Nonlinearity::Cube, HubOptions::default()).is_err());
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        let opts = HubOptions { shards: 0, ..Default::default() };
+        assert!(Hub::new(vec![small_cfg(1)], Nonlinearity::Cube, opts).is_err());
+    }
+
+    #[test]
+    fn invalid_session_config_rejected() {
+        let mut bad = small_cfg(1);
+        bad.optimizer.mu = 2.0;
+        let err = Hub::new(vec![small_cfg(0), bad], Nonlinearity::Cube, HubOptions::default())
+            .err()
+            .expect("must reject");
+        assert!(format!("{err:#}").contains("session 1"), "{err:#}");
+    }
+
+    #[test]
+    fn sessions_shard_round_robin() {
+        let cfgs: Vec<_> = (0..5).map(|i| small_cfg(i as u64)).collect();
+        let opts = HubOptions { shards: 2, ..Default::default() };
+        let hub = Hub::new(cfgs, Nonlinearity::Cube, opts).unwrap();
+        assert_eq!(hub.sessions(), 5);
+        assert_eq!(hub.shard_of(0), 0);
+        assert_eq!(hub.shard_of(1), 1);
+        assert_eq!(hub.shard_of(4), 0);
+    }
+
+    #[test]
+    fn hub_runs_sessions_to_completion() {
+        let cfgs: Vec<_> = (0..4).map(|i| small_cfg(i as u64)).collect();
+        let opts = HubOptions { shards: 2, ..Default::default() };
+        let hub = Hub::new(cfgs, Nonlinearity::Cube, opts).unwrap();
+        let directory = hub.directory();
+        let metrics = hub.metrics();
+        let sum = hub.run().unwrap();
+        assert_eq!(sum.sessions.len(), 4);
+        assert_eq!(sum.shards, 2);
+        for (i, r) in sum.sessions.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert_eq!(r.shard, i % 2);
+            assert_eq!(r.name, format!("s{i}"));
+            assert_eq!(r.summary.samples + r.summary.tail_dropped, 4_000);
+        }
+        assert_eq!(sum.total_samples, sum.sessions.iter().map(|r| r.summary.samples).sum());
+        assert!(sum.aggregate_sps > 0.0);
+        // Directory serves every tenant after the run.
+        assert_eq!(directory.len(), 4);
+        for id in 0..4u64 {
+            assert!(directory.get(id).unwrap().version() > 0);
+        }
+        assert_eq!(metrics.samples_consumed(), 16_000);
+        assert!(metrics.samples_ingested() >= metrics.samples_consumed());
+        assert!(!sum.render_table().is_empty());
+    }
+
+    #[test]
+    fn more_shards_than_sessions_is_fine() {
+        let opts = HubOptions { shards: 4, ..Default::default() };
+        let sum = run_hub(vec![small_cfg(3)], Nonlinearity::Cube, opts).unwrap();
+        assert_eq!(sum.sessions.len(), 1);
+        assert_eq!(sum.sessions[0].shard, 0, "session 0 always lands on shard 0");
+    }
+
+    #[test]
+    fn tiny_channel_capacity_backpressures_without_deadlock() {
+        // Capacity below one producer block forces constant blocking sends.
+        let cfgs: Vec<_> = (0..3).map(|i| small_cfg(i as u64)).collect();
+        let opts = HubOptions { shards: 2, channel_capacity: 1, ..Default::default() };
+        let sum = run_hub(cfgs, Nonlinearity::Cube, opts).unwrap();
+        let ingested: u64 =
+            sum.sessions.iter().map(|r| r.summary.samples + r.summary.tail_dropped).sum();
+        assert_eq!(ingested, 3 * 4_000);
+    }
+}

@@ -8,15 +8,25 @@
 //! JAX/Pallas) applies the EASI/SMBGD updates, the [`state::StateStore`]
 //! versions B for concurrent readers, and the [`monitor::Monitor`] tracks
 //! convergence online.
+//!
+//! Beyond the paper's single-tenant deployment, the [`hub`] multiplexes
+//! many such sessions over a fixed pool of worker shards (per-shard
+//! bounded channels, per-session state) — the single-stream
+//! [`server::run_streaming`] is now a thin one-session wrapper over the
+//! same [`server::SessionRunner`] the hub schedules.
 
 pub mod batcher;
 pub mod engine;
+pub mod hub;
 pub mod monitor;
 pub mod server;
 pub mod state;
 
 pub use batcher::Chunker;
 pub use engine::{make_engine, Engine, NativeEngine, PjrtEngine};
+pub use hub::{run_hub, run_scenario, Hub, HubMetrics, HubOptions, HubSummary, SessionReport};
 pub use monitor::{Monitor, MonitorPoint};
-pub use server::{build_stream, run_experiment, run_streaming, RunSummary, ServerOptions};
-pub use state::{Snapshot, StateStore};
+pub use server::{
+    build_stream, run_experiment, run_streaming, RunSummary, ServerOptions, SessionRunner,
+};
+pub use state::{Snapshot, StateDirectory, StateStore};

@@ -26,12 +26,14 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread;
 use std::time::Instant;
 
-/// Events flowing from the producer to the consumer.
+/// Events flowing from a producer into a session's consumer.
 ///
 /// Samples travel in row-major *blocks* rather than per-sample `Vec`s:
 /// one allocation and one channel operation per `PRODUCER_BLOCK` samples
 /// (EXPERIMENTS.md §Perf iteration 1 — 3-4× end-to-end throughput).
-enum Event {
+/// Shared between the single-stream server and the multi-session hub
+/// (`hub.rs`), which tags each event with a session id.
+pub(crate) enum StreamEvent {
     /// A block of observation samples (rows × m).
     Batch(Mat64),
     /// Ground-truth mixing snapshot (sent every `monitor_every` samples) —
@@ -43,7 +45,53 @@ enum Event {
 
 /// Samples per producer block (amortizes channel + allocation overhead;
 /// bounded so backpressure stays responsive).
-const PRODUCER_BLOCK: usize = 256;
+pub(crate) const PRODUCER_BLOCK: usize = 256;
+
+/// Channel capacity in producer blocks for a capacity expressed in samples.
+pub(crate) fn block_capacity(samples: usize) -> usize {
+    samples.max(1).div_ceil(PRODUCER_BLOCK).max(1)
+}
+
+/// Drain `total` samples out of `stream` as [`StreamEvent`]s: an initial
+/// mixing snapshot, `PRODUCER_BLOCK`-row batches, a mixing snapshot every
+/// `monitor_every` samples, and a final `End`. `emit` returns `false` to
+/// abort (consumer hung up). This is the producer half of both the
+/// single-stream server and every hub session.
+pub(crate) fn drive_stream(
+    stream: &mut MixedStream,
+    total: usize,
+    monitor_every: usize,
+    emit: &mut dyn FnMut(StreamEvent) -> bool,
+) {
+    let m = stream.m();
+    let monitor_every = monitor_every.max(1);
+    let mut x = vec![0.0; m];
+    // Initial mixing snapshot so the monitor can evaluate early.
+    if !emit(StreamEvent::Mixing(stream.current_mixing())) {
+        return;
+    }
+    let mut produced = 0usize;
+    let mut next_monitor = monitor_every;
+    while produced < total {
+        let rows = PRODUCER_BLOCK.min(total - produced);
+        let mut block = Mat64::zeros(rows, m);
+        for r in 0..rows {
+            stream.next_into(&mut x, None);
+            block.row_mut(r).copy_from_slice(&x);
+        }
+        produced += rows;
+        if !emit(StreamEvent::Batch(block)) {
+            return;
+        }
+        if produced >= next_monitor {
+            next_monitor += monitor_every;
+            if !emit(StreamEvent::Mixing(stream.current_mixing())) {
+                return;
+            }
+        }
+    }
+    let _ = emit(StreamEvent::End);
+}
 
 /// Server tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -165,120 +213,173 @@ pub fn build_stream(cfg: &ExperimentConfig) -> Result<MixedStream> {
     Ok(MixedStream::new(bank, mixing, rng))
 }
 
+/// The consumer half of one separation session: engine + chunker + AGC +
+/// divergence guard + monitor + state publication, fed by [`StreamEvent`]s.
+///
+/// Extracted from the single-stream server so the multi-session hub
+/// (`hub.rs`) can run many of these on a pool of worker shards. A session's
+/// evolution depends only on its own event sequence, so a session behaves
+/// bit-identically whether it runs here or multiplexed on a shard.
+pub struct SessionRunner {
+    engine: Box<dyn Engine>,
+    chunker: Chunker,
+    monitor: Monitor,
+    agc: Agc,
+    state: StateStore,
+    current_a: Mat64,
+    have_a: bool,
+    warm_start: Mat64,
+    divergence_bound: f64,
+    resets: u64,
+    /// Latched at the first ingested event so a session's elapsed/sps
+    /// measure its own service window, not hub setup time.
+    started: Option<Instant>,
+}
+
+impl SessionRunner {
+    pub fn new(
+        cfg: &ExperimentConfig,
+        engine: Box<dyn Engine>,
+        options: &ServerOptions,
+        state: StateStore,
+    ) -> Self {
+        let chunker = Chunker::new(cfg.m, engine.chunk_size());
+        Self {
+            chunker,
+            monitor: Monitor::new(options.criterion),
+            agc: Agc::new(options.agc_time_constant),
+            state,
+            current_a: Mat64::zeros(cfg.m, cfg.n),
+            have_a: false,
+            warm_start: crate::ica::init_b(cfg.n, cfg.m),
+            divergence_bound: options.divergence_bound,
+            resets: 0,
+            started: None,
+            engine,
+        }
+    }
+
+    /// Start the service clock on the first ingested event.
+    fn touch(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// Record a ground-truth mixing snapshot for the monitor.
+    pub fn on_mixing(&mut self, a: Mat64) {
+        self.touch();
+        self.current_a = a;
+        self.have_a = true;
+    }
+
+    /// Ingest one producer block: AGC-normalize, chunk, and apply through
+    /// the engine, publishing state and monitoring after every chunk.
+    pub fn on_block(&mut self, mut block: Mat64) -> Result<()> {
+        self.touch();
+        for r in 0..block.rows() {
+            self.agc.apply(block.row_mut(r));
+        }
+        let Self {
+            engine,
+            chunker,
+            monitor,
+            state,
+            current_a,
+            have_a,
+            warm_start,
+            divergence_bound,
+            resets,
+            ..
+        } = self;
+        chunker.push_block(&block, |chunk| -> Result<()> {
+            engine.submit_chunk(chunk)?;
+            let b = engine.b();
+            // Divergence guard: large-mu EASI under abrupt mixing
+            // switches can blow up; recover like an adaptive filter.
+            if !b.is_finite() || b.max_abs() > *divergence_bound {
+                engine.reset_b(warm_start.clone());
+                monitor.rearm();
+                *resets += 1;
+            }
+            state.publish(engine.b(), engine.samples_done());
+            if *have_a {
+                monitor.record(&engine.b(), current_a, engine.samples_done());
+            }
+            Ok(())
+        })
+    }
+
+    /// Samples applied to the separator so far.
+    pub fn samples_done(&self) -> u64 {
+        self.engine.samples_done()
+    }
+
+    /// The state store this session publishes into.
+    pub fn state(&self) -> &StateStore {
+        &self.state
+    }
+
+    /// Finalize: drop the partial tail chunk and assemble the summary.
+    pub fn finish(mut self) -> RunSummary {
+        let tail = self.chunker.take_partial().map(|t| t.rows() as u64).unwrap_or(0);
+        let elapsed = self.started.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let samples = self.engine.samples_done();
+        let final_amari = if self.have_a {
+            self.monitor.record(&self.engine.b(), &self.current_a, samples)
+        } else {
+            f64::NAN
+        };
+        RunSummary {
+            samples,
+            tail_dropped: tail,
+            elapsed_secs: elapsed,
+            throughput_sps: samples as f64 / elapsed.max(1e-12),
+            engine: self.engine.describe(),
+            final_amari,
+            converged_at: self.monitor.converged_at(),
+            resets: self.resets,
+            amari_history: self.monitor.history().to_vec(),
+            b: self.engine.b(),
+        }
+    }
+}
+
 /// Run the full streaming pipeline: produce `cfg.samples` samples, apply
 /// them through `engine`, monitor convergence against the simulation's
 /// ground truth, and publish state into `state`.
+///
+/// Since the hub refactor this is a thin one-session wrapper: one producer
+/// thread driving [`drive_stream`] into a bounded channel, one
+/// [`SessionRunner`] consuming it on the caller's thread.
 pub fn run_streaming(
     cfg: &ExperimentConfig,
-    mut engine: Box<dyn Engine>,
+    engine: Box<dyn Engine>,
     options: ServerOptions,
     state: &StateStore,
 ) -> Result<RunSummary> {
     let mut stream = build_stream(cfg)?;
-    let m = stream.m();
     let total = cfg.samples;
     let monitor_every = options.monitor_every.max(1);
 
     // Channel capacity is expressed in samples; convert to blocks.
-    let block_capacity =
-        (options.channel_capacity.max(1)).div_ceil(PRODUCER_BLOCK).max(1);
-    let (tx, rx): (SyncSender<Event>, Receiver<Event>) = sync_channel(block_capacity);
+    let capacity = block_capacity(options.channel_capacity);
+    let (tx, rx): (SyncSender<StreamEvent>, Receiver<StreamEvent>) = sync_channel(capacity);
 
-    // ---- producer -------------------------------------------------------
     let producer = thread::spawn(move || {
-        let mut x = vec![0.0; m];
-        // Initial mixing snapshot so the monitor can evaluate early.
-        if tx.send(Event::Mixing(stream.current_mixing())).is_err() {
-            return;
-        }
-        let mut produced = 0usize;
-        let mut next_monitor = monitor_every;
-        while produced < total {
-            let rows = PRODUCER_BLOCK.min(total - produced);
-            let mut block = Mat64::zeros(rows, m);
-            for r in 0..rows {
-                stream.next_into(&mut x, None);
-                block.row_mut(r).copy_from_slice(&x);
-            }
-            produced += rows;
-            if tx.send(Event::Batch(block)).is_err() {
-                return; // consumer hung up
-            }
-            if produced >= next_monitor {
-                next_monitor += monitor_every;
-                if tx.send(Event::Mixing(stream.current_mixing())).is_err() {
-                    return;
-                }
-            }
-        }
-        let _ = tx.send(Event::End);
+        drive_stream(&mut stream, total, monitor_every, &mut |ev| tx.send(ev).is_ok());
     });
 
-    // ---- consumer -------------------------------------------------------
-    let mut chunker = Chunker::new(m, engine.chunk_size());
-    let mut monitor = Monitor::new(options.criterion);
-    let mut agc = Agc::new(options.agc_time_constant);
-    let mut current_a = Mat64::zeros(m, cfg.n);
-    let mut have_a = false;
-    let warm_start = crate::ica::init_b(cfg.n, cfg.m);
-    let mut resets: u64 = 0;
-    let started = Instant::now();
-
+    let mut runner = SessionRunner::new(cfg, engine, &options, state.clone());
     loop {
         match rx.recv().context("producer channel closed unexpectedly")? {
-            Event::Batch(mut block) => {
-                for r in 0..block.rows() {
-                    agc.apply(block.row_mut(r));
-                }
-                for r in 0..block.rows() {
-                    let Some(chunk) = chunker.push(block.row(r)) else {
-                        continue;
-                    };
-                    engine.submit_chunk(&chunk)?;
-                    let b = engine.b();
-                    // Divergence guard: large-mu EASI under abrupt mixing
-                    // switches can blow up; recover like an adaptive filter.
-                    if !b.is_finite() || b.max_abs() > options.divergence_bound {
-                        engine.reset_b(warm_start.clone());
-                        monitor.rearm();
-                        resets += 1;
-                    }
-                    state.publish(engine.b(), engine.samples_done());
-                    if have_a {
-                        monitor.record(&engine.b(), &current_a, engine.samples_done());
-                    }
-                }
-            }
-            Event::Mixing(a) => {
-                current_a = a;
-                have_a = true;
-            }
-            Event::End => break,
+            StreamEvent::Batch(block) => runner.on_block(block)?,
+            StreamEvent::Mixing(a) => runner.on_mixing(a),
+            StreamEvent::End => break,
         }
     }
     producer.join().ok();
-
-    let tail = chunker.take_partial().map(|t| t.rows() as u64).unwrap_or(0);
-    let elapsed = started.elapsed().as_secs_f64();
-    let samples = engine.samples_done();
-    let final_amari = if have_a {
-        monitor.record(&engine.b(), &current_a, samples)
-    } else {
-        f64::NAN
-    };
-
-    Ok(RunSummary {
-        samples,
-        tail_dropped: tail,
-        elapsed_secs: elapsed,
-        throughput_sps: samples as f64 / elapsed.max(1e-12),
-        engine: engine.describe(),
-        final_amari,
-        converged_at: monitor.converged_at(),
-        resets,
-        amari_history: monitor.history().to_vec(),
-        b: engine.b(),
-    })
+    Ok(runner.finish())
 }
 
 /// Convenience: build engine + state and run, returning the summary.

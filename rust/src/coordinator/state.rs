@@ -7,6 +7,7 @@
 //! training, and deployment in hardware").
 
 use crate::linalg::Mat64;
+use std::collections::BTreeMap;
 use std::sync::{Arc, RwLock};
 
 /// An immutable published snapshot.
@@ -57,6 +58,50 @@ impl StateStore {
     }
 }
 
+/// Session-id → [`StateStore`] registry for multi-tenant serving.
+///
+/// The hub registers every session's store here so concurrent readers
+/// (inference, dashboards) can resolve any tenant's latest separation
+/// matrix without touching the training path. Cloning shares the map.
+#[derive(Clone, Default)]
+pub struct StateDirectory {
+    inner: Arc<RwLock<BTreeMap<u64, StateStore>>>,
+}
+
+impl StateDirectory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) a session's store.
+    pub fn insert(&self, session: u64, store: StateStore) {
+        self.inner.write().expect("directory lock poisoned").insert(session, store);
+    }
+
+    /// Look up a session's store (cheap clone; stores share state).
+    pub fn get(&self, session: u64) -> Option<StateStore> {
+        self.inner.read().expect("directory lock poisoned").get(&session).cloned()
+    }
+
+    /// Registered session ids, ascending.
+    pub fn sessions(&self) -> Vec<u64> {
+        self.inner.read().expect("directory lock poisoned").keys().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("directory lock poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Apply session `id`'s current separation matrix: `y = B x`.
+    pub fn separate(&self, session: u64, x: &[f64]) -> Option<Vec<f64>> {
+        self.get(session).map(|s| s.separate(x))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,6 +127,26 @@ mod tests {
         flip[(1, 0)] = 1.0;
         st.publish(flip, 1);
         assert_eq!(st.separate(&[3.0, 4.0]), vec![4.0, 3.0]);
+    }
+
+    #[test]
+    fn directory_routes_sessions() {
+        let dir = StateDirectory::new();
+        assert!(dir.is_empty());
+        let a = StateStore::new(Mat64::eye(2, 2));
+        let mut flip = Mat64::zeros(2, 2);
+        flip[(0, 1)] = 1.0;
+        flip[(1, 0)] = 1.0;
+        let b = StateStore::new(flip);
+        dir.insert(0, a.clone());
+        dir.insert(7, b);
+        assert_eq!(dir.sessions(), vec![0, 7]);
+        assert_eq!(dir.separate(0, &[3.0, 4.0]), Some(vec![3.0, 4.0]));
+        assert_eq!(dir.separate(7, &[3.0, 4.0]), Some(vec![4.0, 3.0]));
+        assert_eq!(dir.separate(9, &[3.0, 4.0]), None);
+        // The directory shares state with the trainer's handle.
+        a.publish(Mat64::zeros(2, 2), 5);
+        assert_eq!(dir.get(0).unwrap().version(), 1);
     }
 
     #[test]

@@ -77,6 +77,8 @@ pub struct Smbgd {
     samples: u64,
     /// Position within the current mini-batch (the paper's `p`).
     p_idx: usize,
+    /// Completed (latched) mini-batch updates (the paper's `k`).
+    batches: u64,
     /// The running accumulator Ĥ (the paper's Ĥₖᵖ).
     hhat: Mat64,
     /// Ĥ at the end of the previous mini-batch (the paper's Ĥₖ₋₁ᴾ).
@@ -97,6 +99,7 @@ impl Smbgd {
             g,
             samples: 0,
             p_idx: 0,
+            batches: 0,
             hhat: Mat64::zeros(n, n),
             hhat_prev: Mat64::zeros(n, n),
             y: vec![0.0; n],
@@ -129,8 +132,14 @@ impl Smbgd {
     }
 
     /// Number of completed mini-batches (the paper's `k`).
+    ///
+    /// Derived from the latched update counter, not from
+    /// `samples / P`: the count must mean "B-updates actually applied",
+    /// which an arithmetic derivation only coincidentally matches while
+    /// `p_idx` mirrors `samples % P` — latching keeps it correct under
+    /// any future re-phasing (mid-batch resets, changed batch sizes).
     pub fn minibatches_done(&self) -> u64 {
-        self.samples / self.params.p as u64
+        self.batches
     }
 
     /// True if the next `step` starts a new mini-batch.
@@ -178,6 +187,7 @@ impl Optimizer for Smbgd {
             self.b.axpy(-1.0, &self.hb);
             self.hhat_prev.copy_from(&self.hhat);
             self.p_idx = 0;
+            self.batches += 1;
         }
     }
 
@@ -349,6 +359,35 @@ mod tests {
         }
         assert_eq!(opt.minibatches_done(), 2);
         assert!(!opt.at_batch_boundary());
+    }
+
+    #[test]
+    fn minibatches_done_latches_on_update() {
+        // Regression: the count must track *completed* B-updates exactly,
+        // at boundaries and mid-batch alike — one increment per latch,
+        // never a sample-arithmetic artifact.
+        let prm = params(0.01, 0.5, 0.9, 4);
+        let mut opt = Smbgd::with_identity_init(2, 4, prm, Nonlinearity::Cube);
+        let mut rng = Pcg32::seed(11);
+        let mut b_updates = 0u64;
+        let mut prev_b = opt.b().clone();
+        for i in 1..=13u64 {
+            let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+            opt.step(&x);
+            if opt.b() != &prev_b {
+                b_updates += 1;
+                prev_b = opt.b().clone();
+            }
+            assert_eq!(
+                opt.minibatches_done(),
+                b_updates,
+                "after {i} samples (p_idx {})",
+                if opt.at_batch_boundary() { 0 } else { i as usize % 4 }
+            );
+            assert_eq!(opt.at_batch_boundary(), i % 4 == 0);
+        }
+        assert_eq!(opt.minibatches_done(), 3);
+        assert_eq!(opt.samples_seen(), 13);
     }
 
     #[test]

@@ -328,3 +328,166 @@ impl<T: Scalar> std::fmt::Debug for Mat<T> {
         write!(f, "]")
     }
 }
+
+/// Seeded property-style tests for the hot-path kernels: the
+/// zero-allocation `_into` variants are pinned to their allocating
+/// counterparts and to independent naive oracles across many random
+/// shapes (replayable via the failing seed `testkit::check` reports).
+#[cfg(test)]
+mod proptests {
+    use crate::linalg::Mat64;
+    use crate::signal::rng::Pcg32;
+    use crate::testkit::{check, Config};
+
+    fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat64 {
+        Mat64::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    /// Random dimension in 1..=6 (the paper's regime is tiny matrices).
+    fn dim(rng: &mut Pcg32) -> usize {
+        1 + (rng.next_u32() % 6) as usize
+    }
+
+    /// Textbook triple-loop matmul, written independently of the i-k-j
+    /// kernel in `Mat::matmul_into` (which also skips zero elements).
+    fn naive_matmul(a: &Mat64, b: &Mat64) -> Mat64 {
+        assert_eq!(a.cols(), b.rows());
+        let mut out = Mat64::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0.0;
+                for k in 0..a.cols() {
+                    acc += a[(i, k)] * b[(k, j)];
+                }
+                out[(i, j)] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive_oracle() {
+        check("matmul == naive oracle", Config::default(), |rng| {
+            let (r, k, c) = (dim(rng), dim(rng), dim(rng));
+            let a = rand_mat(rng, r, k);
+            let b = rand_mat(rng, k, c);
+            a.matmul(&b).max_abs_diff(&naive_matmul(&a, &b)) < 1e-12
+        });
+    }
+
+    #[test]
+    fn matmul_is_associative() {
+        check("(AB)C == A(BC)", Config::default(), |rng| {
+            let (r, k1, k2, c) = (dim(rng), dim(rng), dim(rng), dim(rng));
+            let a = rand_mat(rng, r, k1);
+            let b = rand_mat(rng, k1, k2);
+            let cm = rand_mat(rng, k2, c);
+            let left = a.matmul(&b).matmul(&cm);
+            let right = a.matmul(&b.matmul(&cm));
+            left.max_abs_diff(&right) < 1e-9
+        });
+    }
+
+    #[test]
+    fn matmul_into_ignores_stale_out_contents() {
+        check("matmul_into == matmul over dirty out", Config::default(), |rng| {
+            let (r, k, c) = (dim(rng), dim(rng), dim(rng));
+            let a = rand_mat(rng, r, k);
+            let b = rand_mat(rng, k, c);
+            // Garbage in the output buffer must not leak into the result.
+            let mut out = rand_mat(rng, r, c);
+            a.matmul_into(&b, &mut out);
+            out == a.matmul(&b)
+        });
+    }
+
+    #[test]
+    fn matvec_into_matches_allocating() {
+        check("matvec_into == matvec", Config::default(), |rng| {
+            let (r, c) = (dim(rng), dim(rng));
+            let a = rand_mat(rng, r, c);
+            let x: Vec<f64> = (0..c).map(|_| rng.normal()).collect();
+            let mut y = vec![f64::NAN; r];
+            a.matvec_into(&x, &mut y);
+            y == a.matvec(&x)
+        });
+    }
+
+    #[test]
+    fn outer_into_matches_allocating() {
+        check("outer_into == outer", Config::default(), |rng| {
+            let (r, c) = (dim(rng), dim(rng));
+            let a: Vec<f64> = (0..r).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..c).map(|_| rng.normal()).collect();
+            let mut out = rand_mat(rng, r, c);
+            Mat64::outer_into(&a, &b, &mut out);
+            out == Mat64::outer(&a, &b)
+        });
+    }
+
+    #[test]
+    fn axpy_matches_elementwise_oracle() {
+        check("axpy == elementwise a + alpha b", Config::default(), |rng| {
+            let (r, c) = (dim(rng), dim(rng));
+            let a = rand_mat(rng, r, c);
+            let b = rand_mat(rng, r, c);
+            let alpha = rng.normal();
+            let mut got = a.clone();
+            got.axpy(alpha, &b);
+            let want = Mat64::from_fn(r, c, |i, j| a[(i, j)] + alpha * b[(i, j)]);
+            got == want
+        });
+    }
+
+    #[test]
+    fn scale_matches_map() {
+        check("scale == map(* alpha)", Config::default(), |rng| {
+            let (r, c) = (dim(rng), dim(rng));
+            let a = rand_mat(rng, r, c);
+            let alpha = rng.normal();
+            let mut got = a.clone();
+            got.scale(alpha);
+            got == a.map(|v| v * alpha)
+        });
+    }
+
+    #[test]
+    fn rank1_update_matches_outer_axpy() {
+        check("rank1_update == axpy(outer)", Config::default(), |rng| {
+            let (r, c) = (dim(rng), dim(rng));
+            let base = rand_mat(rng, r, c);
+            let a: Vec<f64> = (0..r).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..c).map(|_| rng.normal()).collect();
+            let alpha = rng.normal();
+            let mut got = base.clone();
+            got.rank1_update(alpha, &a, &b);
+            let mut want = base.clone();
+            want.axpy(alpha, &Mat64::outer(&a, &b));
+            // alpha*(a_i) * b_j vs alpha*(a_i b_j): same value up to one
+            // rounding of the reassociated product.
+            got.max_abs_diff(&want) < 1e-12
+        });
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        check("transpose twice is identity", Config::thorough(), |rng| {
+            let (r, c) = (dim(rng), dim(rng));
+            let a = rand_mat(rng, r, c);
+            let t = a.transpose();
+            t.shape() == (c, r) && t.transpose() == a
+        });
+    }
+
+    #[test]
+    fn transpose_reverses_products() {
+        check("(AB)^T == B^T A^T", Config::default(), |rng| {
+            let (r, k, c) = (dim(rng), dim(rng), dim(rng));
+            let a = rand_mat(rng, r, k);
+            let b = rand_mat(rng, k, c);
+            let left = a.matmul(&b).transpose();
+            let right = b.transpose().matmul(&a.transpose());
+            left.max_abs_diff(&right) < 1e-12
+        });
+    }
+}

@@ -5,8 +5,8 @@
 
 use anyhow::{bail, Result};
 use easi_ica::cli::{usage, Args};
-use easi_ica::config::{EngineKind, ExperimentConfig, OptimizerKind};
-use easi_ica::coordinator::{run_experiment, RunSummary};
+use easi_ica::config::{EngineKind, ExperimentConfig, HubScenario, OptimizerKind};
+use easi_ica::coordinator::{run_experiment, run_scenario, RunSummary};
 use easi_ica::experiments::{
     a1_hyper_sweep, a2_nonlinearity, a3_adaptive_tracking, e1_convergence, e3_depth_sweep,
     E1Params, TrackingParams,
@@ -32,6 +32,7 @@ fn main() {
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "run" => cmd_run(args),
+        "serve-many" => cmd_serve_many(args),
         "convergence" => cmd_convergence(args),
         "table1" => cmd_table1(args),
         "depth-sweep" => cmd_depth_sweep(args),
@@ -47,18 +48,9 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-/// `run` — stream an experiment through the coordinator.
-fn cmd_run(args: &Args) -> Result<()> {
-    args.expect_only(&[
-        "config", "m", "n", "optimizer", "engine", "samples", "mu", "gamma", "beta", "p",
-        "mixing", "omega", "seed", "artifacts",
-    ])?;
-    let mut cfg = if let Some(path) = args.get("config") {
-        ExperimentConfig::load(path)?
-    } else {
-        ExperimentConfig::default()
-    };
-    // Flag overrides.
+/// Apply the experiment-config flag overrides shared by `run` and
+/// `serve-many` (`serve-many` applies them to the scenario's base config).
+fn apply_base_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     cfg.m = args.get_usize("m", cfg.m)?;
     cfg.n = args.get_usize("n", cfg.n)?;
     cfg.samples = args.get_usize("samples", cfg.samples)?;
@@ -73,16 +65,40 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(e) = args.get("engine") {
         cfg.engine = EngineKind::parse(e)?;
     }
+    Ok(())
+}
+
+/// Resolve the artifacts directory: an explicit `--artifacts` flag wins;
+/// a PJRT engine still sitting on the cwd-relative default upgrades to the
+/// crate-root artifacts dir. A directory set explicitly in a config file
+/// is respected.
+fn resolve_artifacts(cfg: &mut ExperimentConfig, args: &Args) {
+    let is_default = cfg.artifacts_dir == ExperimentConfig::default().artifacts_dir;
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    } else if cfg.engine == EngineKind::Pjrt && is_default {
+        cfg.artifacts_dir =
+            easi_ica::runtime::default_artifacts_dir().to_string_lossy().into_owned();
+    }
+}
+
+/// `run` — stream an experiment through the coordinator.
+fn cmd_run(args: &Args) -> Result<()> {
+    args.expect_only(&[
+        "config", "m", "n", "optimizer", "engine", "samples", "mu", "gamma", "beta", "p",
+        "mixing", "omega", "seed", "artifacts",
+    ])?;
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::load(path)?
+    } else {
+        ExperimentConfig::default()
+    };
+    apply_base_overrides(&mut cfg, args)?;
     if let Some(mx) = args.get("mixing") {
         cfg.signal.mixing = mx.to_string();
     }
     cfg.signal.omega = args.get_f64("omega", cfg.signal.omega)?;
-    if let Some(dir) = args.get("artifacts") {
-        cfg.artifacts_dir = dir.to_string();
-    } else if cfg.engine == EngineKind::Pjrt {
-        cfg.artifacts_dir =
-            easi_ica::runtime::default_artifacts_dir().to_string_lossy().into_owned();
-    }
+    resolve_artifacts(&mut cfg, args);
     cfg.validate()?;
 
     println!(
@@ -117,6 +133,43 @@ fn print_summary(s: &RunSummary) {
         }
         println!();
     }
+}
+
+/// `serve-many` — stream many concurrent sessions through the hub.
+fn cmd_serve_many(args: &Args) -> Result<()> {
+    args.expect_only(&[
+        "config", "sessions", "shards", "samples", "capacity", "mixing", "mu", "gamma",
+        "beta", "p", "optimizer", "engine", "seed", "seed-stride", "m", "n", "artifacts",
+    ])?;
+    let mut sc = if let Some(path) = args.get("config") {
+        HubScenario::load(path)?
+    } else {
+        HubScenario::default()
+    };
+    // Hub-level flag overrides, then the base-config overrides shared
+    // with `run`.
+    sc.sessions = args.get_usize("sessions", sc.sessions)?;
+    sc.shards = args.get_usize("shards", sc.shards)?;
+    sc.channel_capacity = args.get_usize("capacity", sc.channel_capacity)?;
+    sc.seed_stride = args.get_u64("seed-stride", sc.seed_stride)?;
+    if let Some(mx) = args.get("mixing") {
+        sc.mixing = mx.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    apply_base_overrides(&mut sc.base, args)?;
+    resolve_artifacts(&mut sc.base, args);
+    sc.validate()?;
+
+    println!(
+        "serve-many: {} sessions on {} shard(s), {} samples each, optimizer {}, mixing {:?}",
+        sc.sessions,
+        sc.shards,
+        sc.base.samples,
+        sc.base.optimizer.kind.name(),
+        if sc.mixing.is_empty() { vec![sc.base.signal.mixing.clone()] } else { sc.mixing.clone() },
+    );
+    let summary = run_scenario(&sc, Nonlinearity::Cube)?;
+    print!("{}", summary.render_table());
+    Ok(())
 }
 
 /// `convergence` — E1.

@@ -4,12 +4,23 @@
 //! Layer-2 programs to HLO text once; this module compiles them on the
 //! CPU PJRT client at startup (or lazily) and executes them from the
 //! coordinator's hot loop.
+//!
+//! The executor links against a vendored `xla` crate and is therefore
+//! gated behind the `pjrt` cargo feature; offline builds get a stub with
+//! the same API whose entry points fail with a clear error (`stub.rs`).
 
+#[cfg(feature = "pjrt")]
 mod executor;
+#[cfg(feature = "pjrt")]
 pub mod literal;
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use executor::{PjrtRuntime, SmbgdChunkOut};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtRuntime, SmbgdChunkOut};
 pub use manifest::{Manifest, ProgramKind, ProgramMeta};
 
 /// Default artifacts directory, resolved relative to the crate root so
@@ -21,4 +32,12 @@ pub fn default_artifacts_dir() -> std::path::PathBuf {
 /// True if artifacts have been built (`make artifacts`).
 pub fn artifacts_available() -> bool {
     default_artifacts_dir().join("manifest.txt").exists()
+}
+
+/// True if the crate was built with the real PJRT executor (`pjrt`
+/// feature). PJRT tests and benches gate on this *and*
+/// [`artifacts_available`] so they skip rather than hit the stub's
+/// unconditional error when artifacts exist but the executor is stubbed.
+pub fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
 }

@@ -8,7 +8,7 @@ use easi_ica::coordinator::{
 };
 use easi_ica::ica::{ConvergenceCriterion, Nonlinearity};
 use easi_ica::linalg::Mat64;
-use easi_ica::runtime::{artifacts_available, default_artifacts_dir};
+use easi_ica::runtime::{artifacts_available, default_artifacts_dir, pjrt_enabled};
 
 fn base_cfg() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -126,8 +126,8 @@ fn chunker_tail_accounting_is_exact() {
 
 #[test]
 fn pjrt_engine_streams_and_separates() {
-    if !artifacts_available() {
-        eprintln!("skipping: run `make artifacts`");
+    if !pjrt_enabled() || !artifacts_available() {
+        eprintln!("skipping: needs the `pjrt` feature and `make artifacts`");
         return;
     }
     let mut cfg = base_cfg();
@@ -147,7 +147,7 @@ fn pjrt_engine_streams_and_separates() {
 
 #[test]
 fn pjrt_and_native_agree_on_stream() {
-    if !artifacts_available() {
+    if !pjrt_enabled() || !artifacts_available() {
         return;
     }
     let mut native_cfg = base_cfg();
@@ -199,7 +199,7 @@ fn state_store_serves_inference_during_training() {
 
 #[test]
 fn engine_rejects_wrong_chunk_shape() {
-    if !artifacts_available() {
+    if !pjrt_enabled() || !artifacts_available() {
         return;
     }
     let mut cfg = base_cfg();

@@ -1,0 +1,111 @@
+//! Integration tests for the multi-session coordinator hub.
+//!
+//! Two properties pin the hub to the single-stream server:
+//! - **Determinism**: a session run through the hub with seed S produces a
+//!   bit-identical separation matrix to the same config run through
+//!   `run_streaming` — multiplexing must not change the math.
+//! - **Isolation**: a pathological (diverging) tenant sharing a shard with
+//!   healthy tenants must not perturb their matrices at all.
+
+use easi_ica::config::ExperimentConfig;
+use easi_ica::coordinator::{
+    make_engine, run_hub, run_streaming, HubOptions, ServerOptions, StateStore,
+};
+use easi_ica::ica::Nonlinearity;
+use easi_ica::linalg::Mat64;
+
+fn cfg(seed: u64, mixing: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.samples = 12_000;
+    cfg.seed = seed;
+    cfg.optimizer.mu = 0.004;
+    cfg.signal.mixing = mixing.into();
+    cfg.name = format!("t{seed}-{mixing}");
+    cfg
+}
+
+/// Final B from the single-stream server (the reference path).
+fn solo_b(cfg: &ExperimentConfig) -> Mat64 {
+    let engine = make_engine(cfg, Nonlinearity::Cube).expect("engine");
+    let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
+    run_streaming(cfg, engine, ServerOptions::default(), &state).expect("solo run").b
+}
+
+#[test]
+fn hub_sessions_bit_identical_to_single_stream_server() {
+    let cfgs =
+        vec![cfg(1, "static"), cfg(2, "rotating"), cfg(3, "switching"), cfg(4, "static")];
+    let opts = HubOptions { shards: 2, ..Default::default() };
+    let sum = run_hub(cfgs.clone(), Nonlinearity::Cube, opts).expect("hub run");
+    assert_eq!(sum.sessions.len(), cfgs.len());
+    for (i, report) in sum.sessions.iter().enumerate() {
+        assert_eq!(report.id, i);
+        let want = solo_b(&cfgs[i]);
+        assert_eq!(
+            report.summary.b, want,
+            "session {i} ({}) diverged from the single-stream server",
+            report.name
+        );
+        assert_eq!(
+            report.summary.samples + report.summary.tail_dropped,
+            cfgs[i].samples as u64
+        );
+    }
+}
+
+#[test]
+fn diverging_session_does_not_perturb_neighbours() {
+    // Session 1 is pathological: a near-unity step size under abruptly
+    // switching mixing drives it through the divergence guard. It shares
+    // the single shard (and its bounded channel) with two healthy
+    // tenants, which must still match their solo runs bit-for-bit.
+    let mut rogue = cfg(99, "switching");
+    rogue.optimizer.mu = 0.49;
+    rogue.signal.period = 500;
+    let healthy = [cfg(10, "static"), cfg(11, "rotating")];
+
+    let cfgs = vec![healthy[0].clone(), rogue, healthy[1].clone()];
+    let opts = HubOptions { shards: 1, ..Default::default() };
+    let sum = run_hub(cfgs, Nonlinearity::Cube, opts).expect("hub run");
+
+    assert_eq!(sum.sessions[0].summary.b, solo_b(&healthy[0]), "neighbour 0 perturbed");
+    assert_eq!(sum.sessions[2].summary.b, solo_b(&healthy[1]), "neighbour 1 perturbed");
+    // Isolation is only meaningful if the rogue actually misbehaved.
+    let r = &sum.sessions[1].summary;
+    assert!(
+        r.resets > 0 || r.final_amari > 0.2,
+        "rogue session unexpectedly healthy: resets {} amari {}",
+        r.resets,
+        r.final_amari
+    );
+    // And its matrix stayed finite thanks to the per-session guard.
+    assert!(r.b.is_finite());
+}
+
+#[test]
+fn eight_sessions_two_shards_under_tight_backpressure() {
+    // The acceptance topology: ≥8 concurrent sessions on ≥2 shards with a
+    // deliberately tiny per-shard channel so producers block constantly.
+    // Must drain completely — no deadlock — and report aggregate rates.
+    let cfgs: Vec<_> = (0..8)
+        .map(|i| {
+            let mut c = cfg(20 + i as u64, "static");
+            c.samples = 6_000;
+            c
+        })
+        .collect();
+    let opts = HubOptions { shards: 2, channel_capacity: 256, ..Default::default() };
+    let sum = run_hub(cfgs, Nonlinearity::Cube, opts).expect("hub run");
+    assert_eq!(sum.sessions.len(), 8);
+    assert_eq!(sum.shards, 2);
+    let ingested: u64 =
+        sum.sessions.iter().map(|r| r.summary.samples + r.summary.tail_dropped).sum();
+    assert_eq!(ingested, 8 * 6_000);
+    assert!(sum.aggregate_sps > 0.0);
+    assert!(sum.total_samples > 0);
+    let table = sum.render_table();
+    assert!(table.contains("total:"), "table:\n{table}");
+    for r in &sum.sessions {
+        assert_eq!(r.shard, r.id % 2);
+    }
+}

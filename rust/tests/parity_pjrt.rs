@@ -8,10 +8,14 @@
 
 use easi_ica::ica::{EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
 use easi_ica::linalg::Mat64;
-use easi_ica::runtime::{artifacts_available, default_artifacts_dir, PjrtRuntime};
+use easi_ica::runtime::{artifacts_available, default_artifacts_dir, pjrt_enabled, PjrtRuntime};
 use easi_ica::signal::Pcg32;
 
 fn runtime() -> Option<PjrtRuntime> {
+    if !pjrt_enabled() {
+        eprintln!("skipping PJRT parity test: built without the `pjrt` feature");
+        return None;
+    }
     if !artifacts_available() {
         eprintln!("skipping PJRT parity test: run `make artifacts` first");
         return None;
@@ -152,7 +156,7 @@ fn pjrt_engine_matches_native_engine_end_to_end() {
     use easi_ica::config::{EngineKind, ExperimentConfig};
     use easi_ica::coordinator::{Engine, NativeEngine, PjrtEngine};
 
-    if !artifacts_available() {
+    if !pjrt_enabled() || !artifacts_available() {
         return;
     }
     let mut cfg = ExperimentConfig::default();
