@@ -2,10 +2,14 @@
 //! choices §IV discusses (momentum for smooth drift, decay for adaptivity).
 //! Run: cargo bench --bench ablation_hyper
 
+mod bench_util;
+use bench_util::timed_main;
 use easi_ica::experiments::{a1_hyper_sweep, sweeps::render_hyper_sweep};
 
 fn main() {
-    println!("=== A1: SMBGD hyperparameter ablation ===\n");
-    let rows = a1_hyper_sweep(&[0.0, 0.3, 0.55, 0.8], &[0.85, 0.95, 1.0], &[4, 8, 16], 8, 0xAB1);
-    println!("{}", render_hyper_sweep(&rows));
+    timed_main("ablation_hyper", || {
+        println!("=== A1: SMBGD hyperparameter ablation ===\n");
+        let rows = a1_hyper_sweep(&[0.0, 0.3, 0.55, 0.8], &[0.85, 0.95, 1.0], &[4, 8, 16], 8, 0xAB1);
+        println!("{}", render_hyper_sweep(&rows));
+    });
 }

@@ -2,12 +2,16 @@
 //! and FPGA cost (paper §V.B: cubic beats tanh on cost at equal clock).
 //! Run: cargo bench --bench ablation_nonlinearity
 
+mod bench_util;
+use bench_util::timed_main;
 use easi_ica::experiments::{a2_nonlinearity, sweeps::render_nonlinearity};
 use easi_ica::fpga::Calib;
 
 fn main() {
-    println!("=== A2: nonlinearity ablation ===\n");
-    let rows = a2_nonlinearity(8, 0xAB2, &Calib::default());
-    println!("{}", render_nonlinearity(&rows));
-    println!("(tanh's stability condition has the wrong sign for sub-Gaussian sources,\n so its convergence rate collapses — and it costs more ALMs at the same Fmax.)");
+    timed_main("ablation_nonlinearity", || {
+        println!("=== A2: nonlinearity ablation ===\n");
+        let rows = a2_nonlinearity(8, 0xAB2, &Calib::default());
+        println!("{}", render_nonlinearity(&rows));
+        println!("(tanh's stability condition has the wrong sign for sub-Gaussian sources,\n so its convergence rate collapses — and it costs more ALMs at the same Fmax.)");
+    });
 }

@@ -3,17 +3,21 @@
 //! word length and reports final separation quality + iterations.
 //! Run: cargo bench --bench ablation_quant
 
+mod bench_util;
+use bench_util::timed_main;
 use easi_ica::experiments::a4_quantization;
 
 fn main() {
-    println!("=== A4: numeric format ablation (paper vs fixed-point prior work) ===\n");
-    let rows = a4_quantization(8, 0xAB4);
-    println!("{:>14} {:>10} {:>14} {:>12}", "format", "bits", "final amari", "conv rate");
-    for r in &rows {
-        println!(
-            "{:>14} {:>10} {:>14.4} {:>11.0}%",
-            r.label, r.word_bits, r.final_amari, r.convergence_rate * 100.0
-        );
-    }
-    println!("\n(the paper's move from 16-bit fixed [12] to 32-bit float removes the\n quantization floor; below ~12 fractional bits EASI stops separating.)");
+    timed_main("ablation_quant", || {
+        println!("=== A4: numeric format ablation (paper vs fixed-point prior work) ===\n");
+        let rows = a4_quantization(8, 0xAB4);
+        println!("{:>14} {:>10} {:>14} {:>12}", "format", "bits", "final amari", "conv rate");
+        for r in &rows {
+            println!(
+                "{:>14} {:>10} {:>14.4} {:>11.0}%",
+                r.label, r.word_bits, r.final_amari, r.convergence_rate * 100.0
+            );
+        }
+        println!("\n(the paper's move from 16-bit fixed [12] to 32-bit float removes the\n quantization floor; below ~12 fractional bits EASI stops separating.)");
+    });
 }

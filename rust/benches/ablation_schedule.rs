@@ -2,20 +2,24 @@
 //! constant-coefficient hardware) — tracking vs steady-state trade-off.
 //! Run: cargo bench --bench ablation_schedule
 
+mod bench_util;
+use bench_util::timed_main;
 use easi_ica::experiments::a5_schedules;
 
 fn main() {
-    println!("=== A5: learning-rate schedule ablation ===\n");
-    let rows = a5_schedules(0xAB5);
-    println!(
-        "{:>16} {:>22} {:>22}",
-        "schedule", "stationary steady-state", "rotating steady-state"
-    );
-    for r in &rows {
+    timed_main("ablation_schedule", || {
+        println!("=== A5: learning-rate schedule ablation ===\n");
+        let rows = a5_schedules(0xAB5);
         println!(
-            "{:>16} {:>22.4} {:>22.4}",
-            r.label, r.stationary_amari, r.tracking_amari
+            "{:>16} {:>22} {:>22}",
+            "schedule", "stationary steady-state", "rotating steady-state"
         );
-    }
-    println!("\n(decay wins on stationary data; constant/floored wins under drift —\n the paper's constant-mu hardware targets the tracking regime.)");
+        for r in &rows {
+            println!(
+                "{:>16} {:>22.4} {:>22.4}",
+                r.label, r.stationary_amari, r.tracking_amari
+            );
+        }
+        println!("\n(decay wins on stationary data; constant/floored wins under drift —\n the paper's constant-mu hardware targets the tracking regime.)");
+    });
 }

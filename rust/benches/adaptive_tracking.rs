@@ -2,14 +2,18 @@
 //! EASI variants vs a frozen FastICA fit (the paper's §I/§III motivation).
 //! Run: cargo bench --bench adaptive_tracking
 
+mod bench_util;
+use bench_util::timed_main;
 use easi_ica::experiments::{a3_adaptive_tracking, TrackingParams};
 
 fn main() {
-    println!("=== A3: adaptive tracking vs nonadaptive baseline ===\n");
-    for omega in [1e-5, 3e-5, 1e-4] {
-        let p = TrackingParams { omega, samples: 120_000, ..Default::default() };
-        let r = a3_adaptive_tracking(&p);
-        println!("omega = {omega} rad/sample:");
-        println!("{}", r.render());
-    }
+    timed_main("adaptive_tracking", || {
+        println!("=== A3: adaptive tracking vs nonadaptive baseline ===\n");
+        for omega in [1e-5, 3e-5, 1e-4] {
+            let p = TrackingParams { omega, samples: 120_000, ..Default::default() };
+            let r = a3_adaptive_tracking(&p);
+            println!("omega = {omega} rad/sample:");
+            println!("{}", r.render());
+        }
+    });
 }

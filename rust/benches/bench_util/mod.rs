@@ -1,59 +1,8 @@
-//! Shared micro-bench harness for the `harness = false` bench targets
-//! (criterion is unavailable offline; this provides warmup + repeated
-//! timed runs + median/min reporting with ns resolution).
+//! Shim: the shared micro-bench harness moved into the library
+//! (`easi_ica::perf`) so the `easi-ica bench` subcommand, the CI perf
+//! gate, and the `harness = false` bench targets share one measurement
+//! core and one serialization format. Bench targets keep importing
+//! `bench_util::*`.
 
-use std::time::Instant;
-
-/// Result of one timed measurement series.
-#[derive(Clone, Copy, Debug)]
-pub struct Measurement {
-    pub median_ns: f64,
-    pub min_ns: f64,
-    pub iters_per_run: u64,
-}
-
-impl Measurement {
-    pub fn per_iter_ns(&self) -> f64 {
-        self.median_ns / self.iters_per_run as f64
-    }
-
-    pub fn iters_per_sec(&self) -> f64 {
-        1e9 / self.per_iter_ns()
-    }
-}
-
-/// Time `f` (which should run `iters_per_run` iterations of the operation
-/// under test) across `runs` repetitions after `warmup` unmeasured runs.
-pub fn bench(warmup: usize, runs: usize, iters_per_run: u64, mut f: impl FnMut()) -> Measurement {
-    for _ in 0..warmup {
-        f();
-    }
-    let mut samples: Vec<f64> = Vec::with_capacity(runs);
-    for _ in 0..runs {
-        let t0 = Instant::now();
-        f();
-        samples.push(t0.elapsed().as_nanos() as f64);
-    }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    Measurement {
-        median_ns: samples[samples.len() / 2],
-        min_ns: samples[0],
-        iters_per_run,
-    }
-}
-
-/// Pretty-print a throughput measurement.
-pub fn report(name: &str, m: &Measurement) {
-    println!(
-        "{:<44} {:>12.1} ns/iter {:>16.0} iters/s",
-        name,
-        m.per_iter_ns(),
-        m.iters_per_sec()
-    );
-}
-
-/// Prevent the optimizer from discarding a value.
-#[inline]
-pub fn black_box<T>(x: T) -> T {
-    std::hint::black_box(x)
-}
+#[allow(unused_imports)] // each bench target pulls a different subset
+pub use easi_ica::perf::{bench, black_box, report, timed_main, Measurement};

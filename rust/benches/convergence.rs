@@ -3,21 +3,25 @@
 //! Paper: SGD 4166 iterations, SMBGD 3166 (24% improvement).
 //! Run: cargo bench --bench convergence
 
+mod bench_util;
+use bench_util::timed_main;
 use easi_ica::experiments::{e1_convergence, E1Params};
 
 fn main() {
-    println!("=== E1: iterations-to-convergence, SGD vs SMBGD (paper SSV.A) ===\n");
-    let params = E1Params { runs: 32, max_samples: 60_000, ..Default::default() };
-    println!(
-        "protocol: {} runs, random B0 per run, same-mu comparison (mu={}, gamma={}, beta={}, P={})\n",
-        params.runs, params.smbgd.mu, params.smbgd.gamma, params.smbgd.beta, params.smbgd.p
-    );
-    let r = e1_convergence(&params);
-    println!("{}", r.render());
+    timed_main("convergence", || {
+        println!("=== E1: iterations-to-convergence, SGD vs SMBGD (paper SSV.A) ===\n");
+        let params = E1Params { runs: 32, max_samples: 60_000, ..Default::default() };
+        println!(
+            "protocol: {} runs, random B0 per run, same-mu comparison (mu={}, gamma={}, beta={}, P={})\n",
+            params.runs, params.smbgd.mu, params.smbgd.gamma, params.smbgd.beta, params.smbgd.p
+        );
+        let r = e1_convergence(&params);
+        println!("{}", r.render());
 
-    println!("=== E1b ablation: rate-matched comparison (sgd mu scaled to SMBGD's effective rate) ===\n");
-    let rm = e1_convergence(&E1Params { rate_matched: true, runs: 16, max_samples: 60_000, ..Default::default() });
-    println!("sgd mu used: {:.6}", rm.sgd_mu_used);
-    println!("{}", rm.render());
-    println!("(the ~0% rate-matched improvement shows SMBGD's win is running a higher\n effective rate *stably* — momentum along persistent directions + noise-damped batches)");
+        println!("=== E1b ablation: rate-matched comparison (sgd mu scaled to SMBGD's effective rate) ===\n");
+        let rm = e1_convergence(&E1Params { rate_matched: true, runs: 16, max_samples: 60_000, ..Default::default() });
+        println!("sgd mu used: {:.6}", rm.sgd_mu_used);
+        println!("{}", rm.render());
+        println!("(the ~0% rate-matched improvement shows SMBGD's win is running a higher\n effective rate *stably* — momentum along persistent directions + noise-damped batches)");
+    });
 }

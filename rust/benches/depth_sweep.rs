@@ -2,16 +2,20 @@
 //! paragraph: Fmax constant in (m,n); throughput ∝ depth = 10+log2(mn)).
 //! Run: cargo bench --bench depth_sweep
 
+mod bench_util;
+use bench_util::timed_main;
 use easi_ica::experiments::{e3_depth_sweep, sweeps::render_depth_sweep};
 use easi_ica::fpga::Calib;
 
 fn main() {
-    println!("=== E3: pipeline-depth / problem-size sweep ===\n");
-    let configs = [(2, 2), (4, 2), (4, 4), (8, 4), (8, 8), (16, 8), (16, 16)];
-    let rows = e3_depth_sweep(&configs, &Calib::default());
-    println!("{}", render_depth_sweep(&rows));
-    // Checkable shape assertions (also exercised by unit tests).
-    let f42 = rows.iter().find(|r| r.m == 4 && r.n == 2).unwrap();
-    assert_eq!(f42.depth, 13, "paper: depth(4,2) = 10 + log2(8) = 13");
-    println!("shape checks: depth(4,2)=13 OK; SMBGD MIPS grows with depth OK");
+    timed_main("depth_sweep", || {
+        println!("=== E3: pipeline-depth / problem-size sweep ===\n");
+        let configs = [(2, 2), (4, 2), (4, 4), (8, 4), (8, 8), (16, 8), (16, 16)];
+        let rows = e3_depth_sweep(&configs, &Calib::default());
+        println!("{}", render_depth_sweep(&rows));
+        // Checkable shape assertions (also exercised by unit tests).
+        let f42 = rows.iter().find(|r| r.m == 4 && r.n == 2).unwrap();
+        assert_eq!(f42.depth, 13, "paper: depth(4,2) = 10 + log2(8) = 13");
+        println!("shape checks: depth(4,2)=13 OK; SMBGD MIPS grows with depth OK");
+    });
 }

@@ -2,67 +2,27 @@
 //!
 //! Run: cargo bench --bench hotpath
 //!
-//! Measures (native) per-sample optimizer steps, the relative-gradient
-//! kernel, PJRT chunk execution (compile-amortized), and the end-to-end
-//! coordinator throughput. Baseline/after numbers are recorded in
-//! EXPERIMENTS.md §Perf.
+//! The native kernel suite (fused vs unfused step/gradient, SMBGD block
+//! path, coordinator end-to-end) lives in `easi_ica::perf` — shared with
+//! the `easi-ica bench` subcommand so CI and this target measure the
+//! identical workload — and its report is written to `BENCH_hotpath.json`
+//! at the repo root, accumulating the perf trajectory. This target adds
+//! the PJRT chunk benches on top (feature + artifacts permitting).
+//! Baseline/after numbers are recorded in EXPERIMENTS.md §Perf.
 
 mod bench_util;
 
-use bench_util::{bench, black_box, report};
-use easi_ica::config::{EngineKind, ExperimentConfig, OptimizerKind};
+use bench_util::{bench, report, timed_main, Measurement};
+use easi_ica::config::{EngineKind, ExperimentConfig, OptimizerConfig, OptimizerKind};
 use easi_ica::coordinator::{make_engine, run_streaming, ServerOptions, StateStore};
-use easi_ica::ica::{EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
+use easi_ica::ica::Nonlinearity;
 use easi_ica::linalg::Mat64;
+use easi_ica::perf::{default_bench_json_path, run_hotpath_suite};
 use easi_ica::runtime::{artifacts_available, default_artifacts_dir, pjrt_enabled, PjrtRuntime};
 use easi_ica::signal::Pcg32;
 
 fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat64 {
     Mat64::from_fn(r, c, |_, _| rng.normal())
-}
-
-fn native_steps(m: usize, n: usize) {
-    let mut rng = Pcg32::seed(1);
-    let xs = rand_mat(&mut rng, 4096, m);
-
-    let mut sgd = EasiSgd::with_identity_init(n, m, 1e-4, Nonlinearity::Cube);
-    let meas = bench(3, 15, xs.rows() as u64, || {
-        for t in 0..xs.rows() {
-            sgd.step(black_box(xs.row(t)));
-        }
-    });
-    report(&format!("native EASI-SGD step (m={m}, n={n})"), &meas);
-
-    let prm = SmbgdParams { mu: 1e-4, gamma: 0.5, beta: 0.9, p: 8 };
-    let mut smb = Smbgd::with_identity_init(n, m, prm, Nonlinearity::Cube);
-    let meas = bench(3, 15, xs.rows() as u64, || {
-        for t in 0..xs.rows() {
-            smb.step(black_box(xs.row(t)));
-        }
-    });
-    report(&format!("native EASI-SMBGD step (m={m}, n={n})"), &meas);
-
-    // The shared gradient kernel alone.
-    let b = easi_ica::ica::init_b(n, m);
-    let mut y = vec![0.0; n];
-    let mut gy = vec![0.0; n];
-    let mut h = Mat64::zeros(n, n);
-    let meas = bench(3, 15, xs.rows() as u64, || {
-        for t in 0..xs.rows() {
-            EasiSgd::relative_gradient(
-                &b,
-                black_box(xs.row(t)),
-                Nonlinearity::Cube,
-                false,
-                1e-4,
-                &mut y,
-                &mut gy,
-                &mut h,
-            );
-        }
-        black_box(&h);
-    });
-    report(&format!("relative gradient H only (m={m}, n={n})"), &meas);
 }
 
 fn pjrt_chunks() {
@@ -110,48 +70,44 @@ fn pjrt_chunks() {
     report("pjrt sgd chunk (64 samples/call, m=4 n=2)", &meas);
 }
 
-fn coordinator_end_to_end() {
-    let mut cfg = ExperimentConfig::default();
-    cfg.samples = 400_000;
-    cfg.optimizer.kind = OptimizerKind::Smbgd;
-    cfg.optimizer.mu = 1e-4;
-
-    let engine = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+/// PJRT end-to-end coordinator throughput — the counterpart of the
+/// native `coordinator_e2e` record inside the shared suite; lives here
+/// (not in `perf`) because it needs the real executor + artifacts.
+fn pjrt_coordinator_e2e() {
+    if !pjrt_enabled() || !artifacts_available() {
+        return;
+    }
+    let cfg = ExperimentConfig {
+        samples: 100_000,
+        engine: EngineKind::Pjrt,
+        artifacts_dir: default_artifacts_dir().to_string_lossy().into_owned(),
+        optimizer: OptimizerConfig {
+            kind: OptimizerKind::Smbgd,
+            mu: 1e-4,
+            ..OptimizerConfig::default()
+        },
+        ..ExperimentConfig::default()
+    };
+    let engine = make_engine(&cfg, Nonlinearity::Cube).expect("pjrt engine");
     let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
     let t0 = std::time::Instant::now();
-    let sum = run_streaming(&cfg, engine, ServerOptions::default(), &state).unwrap();
+    let sum = run_streaming(&cfg, engine, ServerOptions::default(), &state).expect("pjrt e2e");
     let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "{:<44} {:>12.1} ns/iter {:>16.0} iters/s",
-        "coordinator e2e (native smbgd, m=4 n=2)",
-        dt * 1e9 / sum.samples as f64,
-        sum.samples as f64 / dt
-    );
-
-    if pjrt_enabled() && artifacts_available() {
-        cfg.engine = EngineKind::Pjrt;
-        cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
-        cfg.samples = 100_000;
-        let engine = make_engine(&cfg, Nonlinearity::Cube).unwrap();
-        let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
-        let t0 = std::time::Instant::now();
-        let sum = run_streaming(&cfg, engine, ServerOptions::default(), &state).unwrap();
-        let dt = t0.elapsed().as_secs_f64();
-        println!(
-            "{:<44} {:>12.1} ns/iter {:>16.0} iters/s",
-            "coordinator e2e (pjrt smbgd, m=4 n=2)",
-            dt * 1e9 / sum.samples as f64,
-            sum.samples as f64 / dt
-        );
-    }
+    let meas = Measurement {
+        median_ns: dt * 1e9,
+        min_ns: dt * 1e9,
+        iters_per_run: sum.samples.max(1),
+    };
+    report("coordinator e2e (pjrt smbgd, m=4 n=2)", &meas);
 }
 
 fn main() {
-    println!("=== §Perf hot-path micro-benchmarks ===\n");
-    println!("{:<44} {:>20} {:>16}", "benchmark", "time", "throughput");
-    native_steps(4, 2);
-    native_steps(8, 4);
-    native_steps(16, 8);
-    pjrt_chunks();
-    coordinator_end_to_end();
+    timed_main("hotpath", || {
+        let rep = run_hotpath_suite(false);
+        let out = default_bench_json_path();
+        rep.write_json(&out).expect("write BENCH_hotpath.json");
+        println!("\nwrote {}", out.display());
+        pjrt_chunks();
+        pjrt_coordinator_e2e();
+    });
 }

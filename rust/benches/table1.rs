@@ -2,14 +2,18 @@
 //! plus the two scale-up configurations used elsewhere in the repo.
 //! Run: cargo bench --bench table1
 
+mod bench_util;
+use bench_util::timed_main;
 use easi_ica::fpga::{table1, Calib};
 use easi_ica::ica::Nonlinearity;
 
 fn main() {
-    println!("=== E2: Table I — EASI-SGD vs EASI-SMBGD on the Cyclone V model ===\n");
-    let calib = Calib::default();
-    for (m, n) in [(4, 2), (8, 4)] {
-        let t = table1(m, n, Nonlinearity::Cube, &calib);
-        println!("{}", t.render());
-    }
+    timed_main("table1", || {
+        println!("=== E2: Table I — EASI-SGD vs EASI-SMBGD on the Cyclone V model ===\n");
+        let calib = Calib::default();
+        for (m, n) in [(4, 2), (8, 4)] {
+            let t = table1(m, n, Nonlinearity::Cube, &calib);
+            println!("{}", t.render());
+        }
+    });
 }

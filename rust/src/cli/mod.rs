@@ -15,8 +15,10 @@ pub struct Args {
     switches: Vec<String>,
 }
 
-/// Flags that take no value.
-const SWITCHES: &[&str] = &["help", "verbose", "normalized"];
+/// Flags that take no value. ("normalized" used to sit here unconsumed —
+/// EasiSgd's normalized mode is a library-level knob no command exposes;
+/// listing it only made `--normalized` parse and then fail validation.)
+const SWITCHES: &[&str] = &["help", "verbose", "quick"];
 
 impl Args {
     /// Parse from an iterator of raw arguments (without argv[0]).
@@ -81,12 +83,26 @@ impl Args {
         self.get(name).unwrap_or(default).to_string()
     }
 
-    /// Error if any flag not in `allowed` was supplied (catches typos).
+    /// Error if any flag or switch not in `allowed` was supplied (catches
+    /// typos, and switches that a command does not actually consume —
+    /// accepting `--quick` on a command that ignores it would break the
+    /// "unknown flags are errors" contract). `--help` and `--verbose`
+    /// are accepted everywhere.
     pub fn expect_only(&self, allowed: &[&str]) -> Result<()> {
+        const GLOBAL_SWITCHES: &[&str] = &["help", "verbose"];
         for k in self.flags.keys() {
             if !allowed.contains(&k.as_str()) {
                 bail!(
                     "unknown flag --{k} for command '{}' (allowed: {})",
+                    self.command,
+                    allowed.join(", ")
+                );
+            }
+        }
+        for s in &self.switches {
+            if !allowed.contains(&s.as_str()) && !GLOBAL_SWITCHES.contains(&s.as_str()) {
+                bail!(
+                    "switch --{s} is not accepted by command '{}' (allowed: {})",
                     self.command,
                     allowed.join(", ")
                 );
@@ -128,6 +144,11 @@ pub fn usage() -> &'static str {
                       [--m N --n N --arch sgd|smbgd]\n\
        separate       run FastICA on a synthetic dataset and report metrics\n\
                       [--m N --n N --samples N --seed N]\n\
+       bench          §Perf hot-path suite → BENCH_hotpath.json (repo root)\n\
+                      [--quick --out PATH --check BASELINE.json\n\
+                       --tolerance F --min-fused-speedup F]\n\
+                      with --check, exits nonzero if any gated kernel's\n\
+                      machine-normalized cost regressed past the tolerance\n\
        help           this text\n"
 }
 
@@ -160,6 +181,27 @@ mod tests {
         let a = parse("run --verbose --m 4").unwrap();
         assert!(a.switch("verbose"));
         assert_eq!(a.get_usize("m", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn bench_flags_parse() {
+        let a = parse("bench --quick --check BENCH_baseline.json --tolerance 0.3").unwrap();
+        assert_eq!(a.command, "bench");
+        assert!(a.switch("quick"));
+        assert_eq!(a.get("check"), Some("BENCH_baseline.json"));
+        assert_eq!(a.get_f64("tolerance", 0.0).unwrap(), 0.3);
+        let allowed = ["quick", "check", "tolerance", "out", "min-fused-speedup"];
+        assert!(a.expect_only(&allowed).is_ok());
+    }
+
+    #[test]
+    fn unconsumed_switch_rejected() {
+        // A switch the command does not consume is an error, not a no-op…
+        let a = parse("table1 --quick").unwrap();
+        assert!(a.expect_only(&["m", "n"]).is_err());
+        // …while the global switches stay accepted everywhere.
+        let a = parse("table1 --verbose").unwrap();
+        assert!(a.expect_only(&["m", "n"]).is_ok());
     }
 
     #[test]

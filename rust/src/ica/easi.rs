@@ -14,9 +14,9 @@
 //! the plain form, so `normalized = false` is the default everywhere
 //! results are compared against the paper.
 
-use super::nonlinearity::Nonlinearity;
+use super::nonlinearity::{with_g, Nonlinearity};
 use super::Optimizer;
-use crate::linalg::Mat64;
+use crate::linalg::{fused, FusedScratch, Mat64};
 
 /// Per-sample EASI SGD state + scratch (allocation-free `step`).
 pub struct EasiSgd {
@@ -26,26 +26,20 @@ pub struct EasiSgd {
     normalized: bool,
     samples: u64,
     // Scratch reused across steps (hot path: zero allocations).
-    y: Vec<f64>,
-    gy: Vec<f64>,
-    h: Mat64,
-    hb: Mat64,
+    scratch: FusedScratch,
 }
 
 impl EasiSgd {
     /// Create with an explicit initial separation matrix `b0` (n × m).
     pub fn new(b0: Mat64, mu: f64, g: Nonlinearity) -> Self {
-        let (n, _m) = b0.shape();
+        let (n, m) = b0.shape();
         assert!(mu > 0.0, "mu must be positive");
         Self {
             mu,
             g,
             normalized: false,
             samples: 0,
-            y: vec![0.0; n],
-            gy: vec![0.0; n],
-            h: Mat64::zeros(n, n),
-            hb: Mat64::zeros(b0.rows(), b0.cols()),
+            scratch: FusedScratch::new(n, m),
             b: b0,
         }
     }
@@ -78,8 +72,15 @@ impl EasiSgd {
     }
 
     /// Compute the relative gradient H(B, x) into `h_out` using the given
-    /// scratch vectors. Shared by [`EasiSgd`], [`super::Smbgd`] and
-    /// [`super::Mbgd`] so all three optimizers use the identical gradient.
+    /// scratch vectors — the **unfused reference** implementation.
+    ///
+    /// The hot paths of [`EasiSgd`], [`super::Smbgd`] and [`super::Mbgd`]
+    /// now run the fused kernels in [`crate::linalg::fused`], which are
+    /// bit-identical to this form for finite data (pinned by
+    /// `tests/fused_hotpath.rs`); this reference remains the oracle for
+    /// those tests, the `unfused_*` baselines in the §Perf bench suite,
+    /// the PJRT parity tests, and the normalized update (whose per-sample
+    /// denominators are real divisions the fused plain-form kernel omits).
     pub fn relative_gradient(
         b: &Mat64,
         x: &[f64],
@@ -121,19 +122,29 @@ impl EasiSgd {
 
 impl Optimizer for EasiSgd {
     fn step(&mut self, x: &[f64]) {
-        Self::relative_gradient(
-            &self.b,
-            x,
-            self.g,
-            self.normalized,
-            self.mu,
-            &mut self.y,
-            &mut self.gy,
-            &mut self.h,
-        );
-        // B ← B − μ H B
-        self.h.matmul_into(&self.b, &mut self.hb);
-        self.b.axpy(-self.mu, &self.hb);
+        if self.normalized {
+            // Normalized form: the per-sample denominators are real work,
+            // so it keeps the unfused reference path.
+            Self::relative_gradient(
+                &self.b,
+                x,
+                self.g,
+                true,
+                self.mu,
+                &mut self.scratch.y,
+                &mut self.scratch.gy,
+                &mut self.scratch.h,
+            );
+            // B ← B − μ H B
+            self.scratch.h.matmul_into(&self.b, &mut self.scratch.hb);
+            self.b.axpy(-self.mu, &self.scratch.hb);
+        } else {
+            // Plain form (the paper's hardware): the fused kernel, one
+            // pass per sample — bit-identical to the sequence above with
+            // `normalized = false` (pinned by tests/fused_hotpath.rs).
+            let (mu, b, s) = (self.mu, &mut self.b, &mut self.scratch);
+            with_g!(self.g, gf => fused::relative_gradient_step_into(b, x, gf, mu, s));
+        }
         self.samples += 1;
     }
 

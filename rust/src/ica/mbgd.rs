@@ -8,9 +8,9 @@
 //! datapath); the FPGA resource model quantifies that in
 //! `fpga::resources` (MBGD duplicates the datapath P×).
 
-use super::nonlinearity::Nonlinearity;
-use super::{EasiSgd, Optimizer};
-use crate::linalg::Mat64;
+use super::nonlinearity::{with_g, Nonlinearity};
+use super::Optimizer;
+use crate::linalg::{fused, FusedScratch, Mat64};
 
 /// EASI with plain mini-batch averaging.
 pub struct Mbgd {
@@ -23,10 +23,7 @@ pub struct Mbgd {
     /// Running sum of H over the current batch.
     hsum: Mat64,
     // Scratch
-    y: Vec<f64>,
-    gy: Vec<f64>,
-    h: Mat64,
-    hb: Mat64,
+    scratch: FusedScratch,
 }
 
 impl Mbgd {
@@ -40,10 +37,7 @@ impl Mbgd {
             samples: 0,
             p_idx: 0,
             hsum: Mat64::zeros(n, n),
-            y: vec![0.0; n],
-            gy: vec![0.0; n],
-            h: Mat64::zeros(n, n),
-            hb: Mat64::zeros(n, m),
+            scratch: FusedScratch::new(n, m),
             b: b0,
         }
     }
@@ -61,25 +55,47 @@ impl Mbgd {
 
 impl Optimizer for Mbgd {
     fn step(&mut self, x: &[f64]) {
-        EasiSgd::relative_gradient(
-            &self.b,
-            x,
-            self.g,
-            false,
-            self.mu,
-            &mut self.y,
-            &mut self.gy,
-            &mut self.h,
-        );
-        self.hsum.axpy(1.0, &self.h);
+        let (b, s) = (&self.b, &mut self.scratch);
+        with_g!(self.g, gf => {
+            fused::relative_gradient_into(b, x, gf, &mut s.y, &mut s.gy, &mut s.h);
+        });
+        self.hsum.axpy(1.0, &self.scratch.h);
         self.p_idx += 1;
         self.samples += 1;
         if self.p_idx == self.p {
             // B ← B − μ (ΣH / P) B
-            self.hsum.matmul_into(&self.b, &mut self.hb);
-            self.b.axpy(-self.mu / self.p as f64, &self.hb);
+            let alpha = -self.mu / self.p as f64;
+            fused::apply_accumulated_update(&mut self.b, &self.hsum, alpha, &mut self.scratch.hb);
             self.hsum.fill(0.0);
             self.p_idx = 0;
+        }
+    }
+
+    /// Batch feed: whole mini-batches accumulate through the fused block
+    /// kernel (unit weight, no decay) with one update application per
+    /// batch; alignment and tail fall back to per-sample steps.
+    /// Bit-identical to looping [`Optimizer::step`] for any chunking.
+    fn step_batch(&mut self, xs: &Mat64) {
+        let rows = xs.rows();
+        let mut t = 0;
+        while t < rows && self.p_idx != 0 {
+            self.step(xs.row(t));
+            t += 1;
+        }
+        while rows - t >= self.p {
+            let (b, hsum, s) = (&self.b, &mut self.hsum, &mut self.scratch);
+            with_g!(self.g, gf => {
+                fused::accumulate_gradient_block(b, xs, t..t + self.p, gf, 1.0, 1.0, hsum, s);
+            });
+            let alpha = -self.mu / self.p as f64;
+            fused::apply_accumulated_update(&mut self.b, &self.hsum, alpha, &mut self.scratch.hb);
+            self.hsum.fill(0.0);
+            self.samples += self.p as u64;
+            t += self.p;
+        }
+        while t < rows {
+            self.step(xs.row(t));
+            t += 1;
         }
     }
 
@@ -103,6 +119,7 @@ impl Optimizer for Mbgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ica::EasiSgd;
     use crate::signal::{Dataset, Pcg32};
 
     #[test]

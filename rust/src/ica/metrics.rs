@@ -64,8 +64,10 @@ pub fn isi(c: &Mat64) -> f64 {
         let sum2: f64 = row.iter().map(|v| v * v).sum();
         total += sum2 / max2 - 1.0;
     }
+    // One column scratch reused across j (Mat::col allocates per call).
+    let mut col = vec![0.0; n];
     for j in 0..n {
-        let col = c.col(j);
+        c.col_into(j, &mut col);
         let max2 = col.iter().fold(0.0f64, |m, v| m.max(v * v));
         if max2 == 0.0 {
             return f64::INFINITY;

@@ -107,6 +107,35 @@ impl Nonlinearity {
     }
 }
 
+/// Dispatch a runtime [`Nonlinearity`] to a *monomorphized* closure bound
+/// as `$gf`, then evaluate `$body` once: the fused `linalg` kernels are
+/// generic over `Fn(f64) -> f64`, so each arm compiles its own branch-free
+/// inner loop and the match happens once per kernel call, not per element
+/// (the same trick `apply_slice` uses, lifted to whole kernels).
+///
+/// ```ignore
+/// with_g!(self.g, gf => fused::relative_gradient_step_into(b, x, gf, mu, s));
+/// ```
+macro_rules! with_g {
+    ($g:expr, $gf:ident => $body:expr) => {
+        match $g {
+            $crate::ica::Nonlinearity::Cube => {
+                let $gf = |v: f64| v * v * v;
+                $body
+            }
+            $crate::ica::Nonlinearity::Tanh => {
+                let $gf = |v: f64| f64::tanh(v);
+                $body
+            }
+            $crate::ica::Nonlinearity::SignedSquare => {
+                let $gf = |v: f64| v * f64::abs(v);
+                $body
+            }
+        }
+    };
+}
+pub(crate) use with_g;
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +157,18 @@ mod tests {
                     "{:?} not odd at {y}",
                     g
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn macro_dispatch_matches_apply_bitwise() {
+        // The with_g! closures feed the fused kernels; they must agree
+        // with apply()/apply_slice() to the bit or the fused path drifts.
+        for g in [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare] {
+            for &y in &[0.3, -1.2, 2.0, -0.0] {
+                let via_macro = with_g!(g, gf => gf(y));
+                assert_eq!(via_macro.to_bits(), g.apply(y).to_bits());
             }
         }
     }

@@ -19,9 +19,9 @@
 //! (`python/compile/kernels/easi.py`) and both are pinned together by
 //! parity tests (`rust/tests/parity_pjrt.rs`).
 
-use super::nonlinearity::Nonlinearity;
-use super::{EasiSgd, Optimizer};
-use crate::linalg::Mat64;
+use super::nonlinearity::{with_g, Nonlinearity};
+use super::Optimizer;
+use crate::linalg::{fused, FusedScratch, Mat64};
 
 /// SMBGD hyperparameters (paper §IV notation).
 #[derive(Clone, Copy, Debug)]
@@ -84,10 +84,7 @@ pub struct Smbgd {
     /// Ĥ at the end of the previous mini-batch (the paper's Ĥₖ₋₁ᴾ).
     hhat_prev: Mat64,
     // Scratch
-    y: Vec<f64>,
-    gy: Vec<f64>,
-    h: Mat64,
-    hb: Mat64,
+    scratch: FusedScratch,
 }
 
 impl Smbgd {
@@ -102,15 +99,12 @@ impl Smbgd {
             batches: 0,
             hhat: Mat64::zeros(n, n),
             hhat_prev: Mat64::zeros(n, n),
-            y: vec![0.0; n],
-            gy: vec![0.0; n],
-            h: Mat64::zeros(n, n),
-            hb: Mat64::zeros(n, m),
+            scratch: FusedScratch::new(n, m),
             b: b0,
         }
     }
 
-    /// Identity-like warm start, matching [`EasiSgd::with_identity_init`].
+    /// Identity-like warm start, matching [`super::EasiSgd::with_identity_init`].
     pub fn with_identity_init(n: usize, m: usize, params: SmbgdParams, g: Nonlinearity) -> Self {
         let mut b0 = Mat64::eye(n, m);
         b0.scale(0.5);
@@ -146,6 +140,31 @@ impl Smbgd {
     pub fn at_batch_boundary(&self) -> bool {
         self.p_idx == 0
     }
+
+    /// Process one whole mini-batch (`xs` rows `start .. start+P`) through
+    /// the fused block kernels. Requires `p_idx == 0`; bit-identical to P
+    /// successive [`Optimizer::step`] calls, but the nonlinearity dispatch
+    /// and loop setup happen once and the `Ĥ·B` matmul is applied by the
+    /// fused update kernel — the software shape of the paper's pipelined
+    /// mini-batch datapath (Fig. 2).
+    fn block_step(&mut self, xs: &Mat64, start: usize) {
+        debug_assert_eq!(self.p_idx, 0, "block_step mid-batch");
+        let prm = self.params;
+        // Ĥ ← γ Ĥ_prev  (Eq. 1, p = 0)
+        self.hhat.copy_from(&self.hhat_prev);
+        self.hhat.scale(prm.gamma);
+        // Ĥ ← β Ĥ + μ H(B, x_p) for each sample, at the stale B (Eq. 1).
+        let (b, hhat, s) = (&self.b, &mut self.hhat, &mut self.scratch);
+        let rows = start..start + prm.p;
+        with_g!(self.g, gf => {
+            fused::accumulate_gradient_block(b, xs, rows, gf, prm.mu, prm.beta, hhat, s);
+        });
+        // End of mini-batch: B ← B − Ĥ B, latch Ĥ for momentum.
+        fused::apply_accumulated_update(&mut self.b, &self.hhat, -1.0, &mut self.scratch.hb);
+        self.hhat_prev.copy_from(&self.hhat);
+        self.samples += prm.p as u64;
+        self.batches += 1;
+    }
 }
 
 impl Optimizer for Smbgd {
@@ -154,28 +173,23 @@ impl Optimizer for Smbgd {
     /// Matches the hardware exactly: one sample enters the pipeline per
     /// call, the matrix update fires every P-th call.
     fn step(&mut self, x: &[f64]) {
-        // H(B, x_p) with the STALE B (unchanged within the mini-batch).
-        EasiSgd::relative_gradient(
-            &self.b,
-            x,
-            self.g,
-            false,
-            self.params.mu,
-            &mut self.y,
-            &mut self.gy,
-            &mut self.h,
-        );
+        // H(B, x_p) with the STALE B (unchanged within the mini-batch),
+        // via the fused triangular gradient kernel.
+        let (b, s) = (&self.b, &mut self.scratch);
+        with_g!(self.g, gf => {
+            fused::relative_gradient_into(b, x, gf, &mut s.y, &mut s.gy, &mut s.h);
+        });
 
         if self.p_idx == 0 {
             // Ĥ ← γ Ĥ_prev + μ H   (Eq. 1, p = 0; γ is 0 for k = 0 because
             // hhat_prev starts as the zero matrix.)
             self.hhat.copy_from(&self.hhat_prev);
             self.hhat.scale(self.params.gamma);
-            self.hhat.axpy(self.params.mu, &self.h);
+            self.hhat.axpy(self.params.mu, &self.scratch.h);
         } else {
             // Ĥ ← β Ĥ + μ H        (Eq. 1, 0 < p < P)
             self.hhat.scale(self.params.beta);
-            self.hhat.axpy(self.params.mu, &self.h);
+            self.hhat.axpy(self.params.mu, &self.scratch.h);
         }
 
         self.p_idx += 1;
@@ -183,11 +197,37 @@ impl Optimizer for Smbgd {
 
         if self.p_idx == self.params.p {
             // End of mini-batch: B ← B − Ĥ B, latch Ĥ for momentum, reset.
-            self.hhat.matmul_into(&self.b, &mut self.hb);
-            self.b.axpy(-1.0, &self.hb);
+            fused::apply_accumulated_update(&mut self.b, &self.hhat, -1.0, &mut self.scratch.hb);
             self.hhat_prev.copy_from(&self.hhat);
             self.p_idx = 0;
             self.batches += 1;
+        }
+    }
+
+    /// Batch feed: whole mini-batches go through the fused block kernel;
+    /// a leading partial batch (if the chunk starts mid-batch) and the
+    /// tail fall back to per-sample steps. Bit-identical to looping
+    /// [`Optimizer::step`] regardless of how the stream is chunked
+    /// (pinned by tests/fused_hotpath.rs), so the coordinator's chunking
+    /// stays algorithmically invisible.
+    fn step_batch(&mut self, xs: &Mat64) {
+        let p = self.params.p;
+        let rows = xs.rows();
+        let mut t = 0;
+        // Align to a mini-batch boundary.
+        while t < rows && self.p_idx != 0 {
+            self.step(xs.row(t));
+            t += 1;
+        }
+        // Whole mini-batches: fused block path.
+        while rows - t >= p {
+            self.block_step(xs, t);
+            t += p;
+        }
+        // Tail (partial mini-batch).
+        while t < rows {
+            self.step(xs.row(t));
+            t += 1;
         }
     }
 
@@ -211,6 +251,7 @@ impl Optimizer for Smbgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ica::EasiSgd;
     use crate::signal::{Dataset, Pcg32};
 
     fn params(mu: f64, gamma: f64, beta: f64, p: usize) -> SmbgdParams {

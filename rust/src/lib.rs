@@ -18,6 +18,14 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
+// Clippy policy (the CI lint job runs `cargo clippy -- -D warnings`):
+// indexed `for i in 0..n` loops and flat argument lists are the deliberate
+// idiom of the tiny-matrix kernels (the paper's regime is m, n ≤ 32, and
+// the loops mirror the FPGA datapath structure documented in DESIGN.md);
+// iterator-chain rewrites obscure that correspondence without changing
+// the generated code.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -25,6 +33,7 @@ pub mod experiments;
 pub mod fpga;
 pub mod ica;
 pub mod linalg;
+pub mod perf;
 pub mod runtime;
 pub mod signal;
 pub mod testkit;

@@ -1,0 +1,353 @@
+//! Fused EASI hot-path kernels.
+//!
+//! The unfused hot path (`ica::easi::EasiSgd::relative_gradient` followed
+//! by `Mat::matmul_into` + `Mat::axpy`) walks the n×n gradient three
+//! times per sample and — in the plain, non-normalized form the paper's
+//! hardware uses — spends two *divisions by 1.0* per gradient element.
+//! These kernels restructure that work the way the paper's pipelined
+//! datapath does (arXiv:1707.01939 Fig. 2):
+//!
+//! - the symmetric (`y yᵀ − I`) and skew-symmetric (`g(y) yᵀ − y g(y)ᵀ`)
+//!   terms of the relative gradient are built in one triangular pass —
+//!   each (i, j) pair is loaded once and produces both `H[i][j]` and
+//!   `H[j][i]`, halving the multiply count and eliminating the divisions;
+//! - the `B ← B − μ H B` application streams `H·B` row-by-row into the
+//!   caller's scratch and folds the AXPY immediately after;
+//! - the block variant amortizes accumulator traffic across a mini-batch
+//!   of P samples evaluated at the same stale `B` (the SMBGD/MBGD case),
+//!   so the nonlinearity dispatch and loop setup happen once per block
+//!   instead of once per sample.
+//!
+//! **Exact equivalence.** For finite inputs every kernel here is
+//! *bit-identical* to the unfused reference path: `x / 1.0 == x`,
+//! `a*b == b*a`, `p − q == −(q − p)`, and `acc + 0.0*v == acc` hold
+//! exactly in IEEE-754 round-to-nearest (the accumulators never reach
+//! `−0.0`, and the squares on the diagonal are never `−0.0`). The only
+//! observable divergence requires non-finite intermediates (`0·∞`,
+//! `∞ − ∞`), i.e. an already-diverged trajectory. The equivalence is
+//! pinned bitwise by `tests/fused_hotpath.rs` over 1k-step trajectories
+//! for every `Nonlinearity` variant.
+//!
+//! The nonlinearity is a generic `Fn(f64) -> f64` so each variant
+//! monomorphizes its own branch-free inner loop; `ica` dispatches via the
+//! `with_g!` macro exactly once per call, not once per element.
+
+use super::Mat64;
+use std::ops::Range;
+
+/// Reusable scratch for the fused kernels: allocated once per optimizer,
+/// zero allocations afterwards (asserted by `tests/fused_hotpath.rs`).
+pub struct FusedScratch {
+    /// Estimated components `y = B x` (length n).
+    pub y: Vec<f64>,
+    /// Nonlinearity outputs `g(y)` (length n).
+    pub gy: Vec<f64>,
+    /// Per-sample relative gradient `H` (n × n).
+    pub h: Mat64,
+    /// Update staging `H·B` (n × m).
+    pub hb: Mat64,
+}
+
+impl FusedScratch {
+    /// Scratch for an `n × m` separation matrix.
+    pub fn new(n: usize, m: usize) -> Self {
+        Self {
+            y: vec![0.0; n],
+            gy: vec![0.0; n],
+            h: Mat64::zeros(n, n),
+            hb: Mat64::zeros(n, m),
+        }
+    }
+
+    /// The output dimensionality n this scratch was sized for.
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+}
+
+/// Fused relative gradient `H = y yᵀ − I + g(y) yᵀ − y g(y)ᵀ` at `y = Bx`.
+///
+/// One triangular pass: the symmetric and skew-symmetric products for the
+/// pair (i, j) are computed once and written to both `h[i][j]` and
+/// `h[j][i]` (the skew term negated — exact in IEEE round-to-nearest).
+/// Plain (non-normalized) form only; the normalized form keeps the
+/// unfused reference path in `ica::easi`.
+pub fn relative_gradient_into<G: Fn(f64) -> f64>(
+    b: &Mat64,
+    x: &[f64],
+    g: G,
+    y: &mut [f64],
+    gy: &mut [f64],
+    h: &mut Mat64,
+) {
+    let n = y.len();
+    debug_assert_eq!(b.rows(), n);
+    debug_assert_eq!(gy.len(), n);
+    debug_assert_eq!(h.shape(), (n, n));
+    b.matvec_into(x, y);
+    for i in 0..n {
+        gy[i] = g(y[i]);
+    }
+    let hd = h.as_mut_slice();
+    for i in 0..n {
+        let yi = y[i];
+        let gi = gy[i];
+        // Diagonal: the skew term cancels exactly (p − p = +0), leaving
+        // y_i² − 1 bit-identical to the reference.
+        hd[i * n + i] = yi * yi - 1.0;
+        for j in (i + 1)..n {
+            let sym = yi * y[j];
+            let skew = gi * y[j] - yi * gy[j];
+            hd[i * n + j] = sym + skew;
+            hd[j * n + i] = sym - skew;
+        }
+    }
+}
+
+/// Apply an accumulated update: `B ← B + alpha · (H · B)`.
+///
+/// Dense i-k-j product into `hb` (no zero-test branch — `H` is dense on
+/// the hot path) followed by the fold into `B`; bit-identical to
+/// `h.matmul_into(b, hb); b.axpy(alpha, hb)` for finite data. `alpha` is
+/// `−μ` for SGD, `−1` for SMBGD (μ is folded into Ĥ), `−μ/P` for MBGD.
+pub fn apply_accumulated_update(b: &mut Mat64, h: &Mat64, alpha: f64, hb: &mut Mat64) {
+    let (n, m) = b.shape();
+    assert_eq!(h.shape(), (n, n), "apply_accumulated_update: H shape");
+    assert_eq!(hb.shape(), (n, m), "apply_accumulated_update: HB shape");
+    hb.fill(0.0);
+    for i in 0..n {
+        let hrow = h.row(i);
+        let orow = hb.row_mut(i);
+        for (k, &hik) in hrow.iter().enumerate() {
+            let brow = b.row(k);
+            for j in 0..m {
+                orow[j] += hik * brow[j];
+            }
+        }
+    }
+    b.axpy(alpha, hb);
+}
+
+/// Fused per-sample EASI step: `y = Bx`, build `H`, `B ← B − μ H B`.
+///
+/// The whole SGD inner loop in one call over caller-owned scratch — this
+/// is the kernel `ica::EasiSgd::step` runs per sample (benchmarked as
+/// `fused_step` in the §Perf suite, vs the `unfused_step` reference).
+pub fn relative_gradient_step_into<G: Fn(f64) -> f64>(
+    b: &mut Mat64,
+    x: &[f64],
+    g: G,
+    mu: f64,
+    s: &mut FusedScratch,
+) {
+    relative_gradient_into(b, x, g, &mut s.y, &mut s.gy, &mut s.h);
+    apply_accumulated_update(b, &s.h, -mu, &mut s.hb);
+}
+
+/// Block-of-P gradient accumulation at a stale `B` (the SMBGD/MBGD case):
+/// for each row `t` of `xs[rows]`, in order,
+///
+/// ```text
+///   acc ← decay · acc        (skipped for the first row, and when decay = 1)
+///   acc ← acc + alpha · H(B, x_t)
+/// ```
+///
+/// `B` is *not* updated — callers apply the accumulated update once per
+/// mini-batch via [`apply_accumulated_update`], which is what amortizes
+/// the `H·B` matmul across the batch the way the paper's pipeline does.
+/// Skipping the `decay = 1` scale is bit-identical to performing it.
+#[allow(clippy::too_many_arguments)] // flat kernel ABI, mirrors the pinned unfused reference
+pub fn accumulate_gradient_block<G: Fn(f64) -> f64>(
+    b: &Mat64,
+    xs: &Mat64,
+    rows: Range<usize>,
+    g: G,
+    alpha: f64,
+    decay: f64,
+    acc: &mut Mat64,
+    s: &mut FusedScratch,
+) {
+    debug_assert!(rows.end <= xs.rows());
+    for (off, t) in rows.enumerate() {
+        relative_gradient_into(b, xs.row(t), &g, &mut s.y, &mut s.gy, &mut s.h);
+        if off > 0 && decay != 1.0 {
+            acc.scale(decay);
+        }
+        acc.axpy(alpha, &s.h);
+    }
+}
+
+/// Seeded property tests pinning every fused kernel bitwise to the
+/// unfused reference ops it replaces (the trajectory-level pin lives in
+/// `tests/fused_hotpath.rs`).
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat64;
+    use crate::signal::rng::Pcg32;
+    use crate::testkit::{check, Config};
+
+    fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat64 {
+        Mat64::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    fn rand_vec(rng: &mut Pcg32, len: usize) -> Vec<f64> {
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    fn dim(rng: &mut Pcg32) -> usize {
+        1 + (rng.next_u32() % 6) as usize
+    }
+
+    fn bits_equal(a: &Mat64, b: &Mat64) -> bool {
+        a.shape() == b.shape()
+            && a.as_slice()
+                .iter()
+                .zip(b.as_slice())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Unfused reference H (the exact expression from
+    /// `EasiSgd::relative_gradient` with d1 = d2 = 1).
+    fn reference_gradient(b: &Mat64, x: &[f64], g: impl Fn(f64) -> f64) -> Mat64 {
+        let n = b.rows();
+        let y = b.matvec(x);
+        let gy: Vec<f64> = y.iter().map(|&v| g(v)).collect();
+        let mut h = Mat64::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                h[(i, j)] = (y[i] * y[j]) / 1.0 + (gy[i] * y[j] - y[i] * gy[j]) / 1.0;
+            }
+            h[(i, i)] -= 1.0 / 1.0;
+        }
+        h
+    }
+
+    #[test]
+    fn fused_gradient_matches_reference_bitwise() {
+        check("fused H == reference H (bitwise)", Config::default(), |rng| {
+            let (n, m) = (dim(rng), dim(rng));
+            let b = rand_mat(rng, n, m);
+            let x = rand_vec(rng, m);
+            let mut y = vec![0.0; n];
+            let mut gy = vec![0.0; n];
+            let mut h = rand_mat(rng, n, n); // dirty scratch must not leak
+            relative_gradient_into(&b, &x, |v| v * v * v, &mut y, &mut gy, &mut h);
+            bits_equal(&h, &reference_gradient(&b, &x, |v| v * v * v))
+        });
+    }
+
+    #[test]
+    fn fused_gradient_skew_structure() {
+        // H + Hᵀ must equal 2(y yᵀ − I): the nonlinear part is exactly
+        // skew-symmetric by construction.
+        check("H + H^T == 2(yy^T - I)", Config::default(), |rng| {
+            let (n, m) = (dim(rng), dim(rng));
+            let b = rand_mat(rng, n, m);
+            let x = rand_vec(rng, m);
+            let mut s = FusedScratch::new(n, m);
+            let mut h = Mat64::zeros(n, n);
+            relative_gradient_into(&b, &x, f64::tanh, &mut s.y, &mut s.gy, &mut h);
+            let sum = &h + &h.transpose();
+            let mut want = Mat64::outer(&s.y, &s.y);
+            want.scale(2.0);
+            want.sub_scaled_identity(2.0);
+            sum.max_abs_diff(&want) < 1e-12
+        });
+    }
+
+    #[test]
+    fn apply_update_matches_matmul_axpy_bitwise() {
+        check("apply == matmul_into + axpy (bitwise)", Config::default(), |rng| {
+            let (n, m) = (dim(rng), dim(rng));
+            let h = rand_mat(rng, n, n);
+            let b0 = rand_mat(rng, n, m);
+            let alpha = rng.normal();
+
+            let mut want = b0.clone();
+            let mut hb_ref = Mat64::zeros(n, m);
+            h.matmul_into(&want, &mut hb_ref);
+            want.axpy(alpha, &hb_ref);
+
+            let mut got = b0.clone();
+            let mut hb = rand_mat(rng, n, m); // dirty scratch
+            apply_accumulated_update(&mut got, &h, alpha, &mut hb);
+            bits_equal(&got, &want)
+        });
+    }
+
+    #[test]
+    fn fused_step_matches_reference_sequence_bitwise() {
+        check("fused step == reference step (bitwise)", Config::default(), |rng| {
+            let (n, m) = (dim(rng), dim(rng));
+            let b0 = rand_mat(rng, n, m);
+            let x = rand_vec(rng, m);
+            let mu = 0.01;
+
+            let mut want = b0.clone();
+            let h = reference_gradient(&want, &x, |v| v * v * v);
+            let mut hb = Mat64::zeros(n, m);
+            h.matmul_into(&want, &mut hb);
+            want.axpy(-mu, &hb);
+
+            let mut got = b0;
+            let mut s = FusedScratch::new(n, m);
+            relative_gradient_step_into(&mut got, &x, |v| v * v * v, mu, &mut s);
+            bits_equal(&got, &want)
+        });
+    }
+
+    #[test]
+    fn block_accumulation_matches_per_sample_bitwise() {
+        check("block acc == per-sample acc (bitwise)", Config::default(), |rng| {
+            let (n, m, p) = (dim(rng), dim(rng), 1 + (rng.next_u32() % 5) as usize);
+            let b = rand_mat(rng, n, m);
+            let xs = rand_mat(rng, p, m);
+            let acc0 = rand_mat(rng, n, n);
+            let (alpha, decay) = (0.01, 0.9);
+
+            // Per-sample reference: decay-then-accumulate for rows > 0.
+            let mut want = acc0.clone();
+            for t in 0..p {
+                let h = reference_gradient(&b, xs.row(t), |v| v * v * v);
+                if t > 0 {
+                    want.scale(decay);
+                }
+                want.axpy(alpha, &h);
+            }
+
+            let mut got = acc0;
+            let mut s = FusedScratch::new(n, m);
+            accumulate_gradient_block(&b, &xs, 0..p, |v| v * v * v, alpha, decay, &mut got, &mut s);
+            bits_equal(&got, &want)
+        });
+    }
+
+    #[test]
+    fn unit_decay_skip_is_exact() {
+        // decay = 1.0 skips the scale pass; must equal scaling by 1.0.
+        let mut rng = Pcg32::seed(42);
+        let b = rand_mat(&mut rng, 3, 4);
+        let xs = rand_mat(&mut rng, 4, 4);
+        let mut s = FusedScratch::new(3, 4);
+
+        let mut skipped = Mat64::zeros(3, 3);
+        accumulate_gradient_block(&b, &xs, 0..4, |v| v * v * v, 0.5, 1.0, &mut skipped, &mut s);
+
+        let mut scaled = Mat64::zeros(3, 3);
+        for t in 0..4 {
+            relative_gradient_into(&b, xs.row(t), |v| v * v * v, &mut s.y, &mut s.gy, &mut s.h);
+            if t > 0 {
+                scaled.scale(1.0);
+            }
+            scaled.axpy(0.5, &s.h);
+        }
+        assert!(
+            skipped
+                .as_slice()
+                .iter()
+                .zip(scaled.as_slice())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+        );
+    }
+}

@@ -102,9 +102,22 @@ impl<T: Scalar> Mat<T> {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// Copy of column `j`.
+    /// Copy of column `j` (allocating; prefer [`Mat::col_into`] anywhere
+    /// warm — this allocates a fresh `Vec` per call).
     pub fn col(&self, j: usize) -> Vec<T> {
-        (0..self.rows).map(|i| self[(i, j)]).collect()
+        let mut out = vec![T::zero(); self.rows];
+        self.col_into(j, &mut out);
+        out
+    }
+
+    /// Copy column `j` into caller storage (`out.len() == rows`); the
+    /// strided column accessor for hot-path callers (`ica::metrics`).
+    pub fn col_into(&self, j: usize, out: &mut [T]) {
+        assert!(j < self.cols, "col_into: column out of range");
+        assert_eq!(out.len(), self.rows, "col_into: out length");
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = self.data[i * self.cols + j];
+        }
     }
 
     /// Fill every element with `v`.
@@ -422,6 +435,18 @@ mod proptests {
             let mut out = rand_mat(rng, r, c);
             Mat64::outer_into(&a, &b, &mut out);
             out == Mat64::outer(&a, &b)
+        });
+    }
+
+    #[test]
+    fn col_into_matches_indexing() {
+        check("col_into == per-element indexing", Config::default(), |rng| {
+            let (r, c) = (dim(rng), dim(rng));
+            let a = rand_mat(rng, r, c);
+            let j = (rng.next_u32() as usize) % c;
+            let mut out = vec![f64::NAN; r];
+            a.col_into(j, &mut out);
+            out == a.col(j) && (0..r).all(|i| out[i] == a[(i, j)])
         });
     }
 

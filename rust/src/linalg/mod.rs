@@ -8,14 +8,19 @@
 //! Contents:
 //! - [`Mat`]: row-major dense matrix with the operations EASI needs
 //!   (mat-vec, mat-mat, outer products, AXPY-style in-place updates).
+//! - [`fused`]: the fused EASI relative-gradient/update kernels the
+//!   optimizers run per sample and per mini-batch (bit-identical to the
+//!   unfused `Mat` op sequence; see module docs).
 //! - [`decomp`]: Gauss–Jordan inverse/solve and cyclic Jacobi symmetric
 //!   eigendecomposition (used by whitening and FastICA).
 
 pub mod decomp;
+pub mod fused;
 mod mat;
 mod scalar;
 
 pub use decomp::{inverse, jacobi_eig, solve, JacobiEig};
+pub use fused::FusedScratch;
 pub use mat::Mat;
 pub use scalar::Scalar;
 

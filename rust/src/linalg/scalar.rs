@@ -2,14 +2,47 @@
 
 use std::fmt::{Debug, Display};
 use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
 
 /// Floating-point scalar usable in [`crate::linalg::Mat`].
 ///
-/// A thin alias over `num_traits::Float` plus the std traits the library
-/// needs; implemented by `f32` and `f64`.
+/// Self-contained (no external numeric-traits crate — this repo builds in
+/// offline environments): the arithmetic comes from the std operator
+/// traits and the handful of float methods the kernels actually use are
+/// declared here directly. Implemented by `f32` and `f64`.
 pub trait Scalar:
-    num_traits::Float + num_traits::NumAssign + Sum + Debug + Display + Default + Send + Sync + 'static
+    Copy
+    + PartialEq
+    + PartialOrd
+    + Default
+    + Debug
+    + Display
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
 {
+    /// Additive identity.
+    fn zero() -> Self;
+    /// Multiplicative identity.
+    fn one() -> Self;
+    /// Absolute value.
+    fn abs(self) -> Self;
+    /// Square root.
+    fn sqrt(self) -> Self;
+    /// IEEE maximum of two values.
+    fn max(self, other: Self) -> Self;
+    /// True for anything that is neither infinite nor NaN.
+    fn is_finite(self) -> bool;
     /// Lossy conversion from `f64` (for literals/constants in generic code).
     fn scalar_from_f64(v: f64) -> Self;
     /// Lossless widening to `f64` (for accumulation and metrics).
@@ -17,6 +50,30 @@ pub trait Scalar:
 }
 
 impl Scalar for f32 {
+    #[inline(always)]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline(always)]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
     #[inline(always)]
     fn scalar_from_f64(v: f64) -> Self {
         v as f32
@@ -28,6 +85,30 @@ impl Scalar for f32 {
 }
 
 impl Scalar for f64 {
+    #[inline(always)]
+    fn zero() -> Self {
+        0.0
+    }
+    #[inline(always)]
+    fn one() -> Self {
+        1.0
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
     #[inline(always)]
     fn scalar_from_f64(v: f64) -> Self {
         v

@@ -40,6 +40,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "tracking" => cmd_tracking(args),
         "dump-datapath" => cmd_dump_datapath(args),
         "separate" => cmd_separate(args),
+        "bench" => cmd_bench(args),
         "help" | "" => {
             println!("{}", usage());
             Ok(())
@@ -299,6 +300,47 @@ fn cmd_dump_datapath(args: &Args) -> Result<()> {
         res.state_register_bits,
         res.register_bits - res.pipeline_register_bits - res.state_register_bits
     );
+    Ok(())
+}
+
+/// `bench` — run the §Perf hot-path suite, write the machine-readable
+/// report, and optionally gate against a checked-in baseline (the CI
+/// `perf-smoke` job runs `bench --quick --check BENCH_baseline.json`).
+fn cmd_bench(args: &Args) -> Result<()> {
+    args.expect_only(&["quick", "out", "check", "tolerance", "min-fused-speedup"])?;
+    let quick = args.switch("quick");
+    let report = easi_ica::perf::run_hotpath_suite(quick);
+
+    let out = args
+        .get("out")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(easi_ica::perf::default_bench_json_path);
+    report.write_json(&out)?;
+    println!("\nwrote {}", out.display());
+
+    if let Some(baseline) = args.get("check") {
+        let tolerance = args.get_f64("tolerance", 0.30)?;
+        let floor = args.get_f64("min-fused-speedup", 0.0)?;
+        let gate = easi_ica::perf::gate_against_file(
+            &report,
+            std::path::Path::new(baseline),
+            tolerance,
+            floor,
+        )?;
+        if gate.failures.is_empty() {
+            println!(
+                "perf gate OK: {} gated kernel(s) within {:.0}% of {}",
+                gate.checked,
+                tolerance * 100.0,
+                baseline
+            );
+        } else {
+            for f in &gate.failures {
+                eprintln!("perf gate FAIL: {f}");
+            }
+            bail!("perf gate failed ({} finding(s))", gate.failures.len());
+        }
+    }
     Ok(())
 }
 

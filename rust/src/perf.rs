@@ -1,0 +1,964 @@
+//! §Perf harness as a library: the micro-bench measurement core (shared
+//! with the `benches/` targets via `benches/bench_util`), the
+//! deterministic hot-path suite behind the `easi-ica bench` subcommand,
+//! machine-readable serialization (`BENCH_hotpath.json`), and the CI
+//! regression gate against a checked-in `BENCH_baseline.json`.
+//!
+//! Design notes:
+//! - **No serde.** The repo builds offline with `anyhow` as its only
+//!   dependency, so the JSON writer and the (subset) reader are
+//!   hand-rolled here; the reader accepts standard JSON objects/arrays/
+//!   strings/numbers, which is all the bench schema uses.
+//! - **Machine-normalized gating.** Absolute nanoseconds are not
+//!   comparable across CI runners, so every report carries a
+//!   `calibration_ns_per_iter` — the measured cost of a fixed 8×8
+//!   `matmul_into` — and the gate compares *normalized* costs
+//!   (`ns_per_iter / calibration`), which are stable ratios of similar
+//!   f64 loop code. Records with `"gated": false` (the threaded
+//!   end-to-end run) are informational only.
+//! - **Determinism.** All inputs are seeded `Pcg32` draws; "deterministic"
+//!   here means the workload, not the wall clock.
+
+use crate::config::{ExperimentConfig, OptimizerConfig, OptimizerKind};
+use crate::coordinator::{make_engine, run_streaming, ServerOptions, StateStore};
+use crate::ica::{self, EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
+use crate::linalg::{fused, FusedScratch, Mat64};
+use crate::signal::Pcg32;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Measurement core (formerly benches/bench_util).
+// ---------------------------------------------------------------------------
+
+/// Result of one timed measurement series.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub iters_per_run: u64,
+}
+
+impl Measurement {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median_ns / self.iters_per_run as f64
+    }
+
+    pub fn min_per_iter_ns(&self) -> f64 {
+        self.min_ns / self.iters_per_run as f64
+    }
+
+    pub fn iters_per_sec(&self) -> f64 {
+        1e9 / self.per_iter_ns()
+    }
+}
+
+/// Time `f` (which should run `iters_per_run` iterations of the operation
+/// under test) across `runs` repetitions after `warmup` unmeasured runs.
+pub fn bench(warmup: usize, runs: usize, iters_per_run: u64, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Measurement {
+        median_ns: samples[samples.len() / 2],
+        min_ns: samples[0],
+        iters_per_run,
+    }
+}
+
+/// Pretty-print a throughput measurement.
+pub fn report(name: &str, m: &Measurement) {
+    println!(
+        "{:<44} {:>12.1} ns/iter {:>16.0} iters/s",
+        name,
+        m.per_iter_ns(),
+        m.iters_per_sec()
+    );
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Wrap a bench `main` body: prints a uniform total-wall-time footer so
+/// every `benches/*.rs` entry point reports comparably.
+pub fn timed_main(name: &str, f: impl FnOnce()) {
+    let t0 = Instant::now();
+    f();
+    println!("\n[bench:{name}] total wall time {:.2} s", t0.elapsed().as_secs_f64());
+}
+
+// ---------------------------------------------------------------------------
+// Machine-readable records.
+// ---------------------------------------------------------------------------
+
+/// One serialized kernel measurement.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Unique display name, the gate's join key (e.g. "fused step (m=8, n=8)").
+    pub name: String,
+    /// Kernel family id (e.g. "fused_step").
+    pub kernel: String,
+    /// Mixture dimensionality m (0 when not shape-specific).
+    pub m: usize,
+    /// Output dimensionality n (0 when not shape-specific).
+    pub n: usize,
+    /// Median ns per iteration (per sample for the step kernels).
+    pub ns_per_iter: f64,
+    /// Best-run ns per iteration (less scheduler noise).
+    pub min_ns_per_iter: f64,
+    /// Median throughput.
+    pub iters_per_sec: f64,
+    /// Timed repetitions.
+    pub runs: usize,
+    /// Iterations folded into each repetition.
+    pub iters_per_run: u64,
+    /// Whether the CI gate compares this record against the baseline.
+    pub gated: bool,
+}
+
+impl BenchRecord {
+    fn from_measurement(
+        name: String,
+        kernel: &str,
+        m: usize,
+        n: usize,
+        runs: usize,
+        meas: &Measurement,
+        gated: bool,
+    ) -> Self {
+        Self {
+            name,
+            kernel: kernel.to_string(),
+            m,
+            n,
+            ns_per_iter: meas.per_iter_ns(),
+            min_ns_per_iter: meas.min_per_iter_ns(),
+            iters_per_sec: meas.iters_per_sec(),
+            runs,
+            iters_per_run: meas.iters_per_run,
+            gated,
+        }
+    }
+}
+
+/// A full suite run: every measurement plus derived ratios.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    /// "quick" (CI smoke) or "full".
+    pub mode: String,
+    /// Measured cost of the fixed calibration kernel (8×8 `matmul_into`);
+    /// the gate divides every record by this to normalize machine speed.
+    pub calibration_ns_per_iter: f64,
+    pub records: Vec<BenchRecord>,
+    /// Named derived quantities (e.g. "fused_step_speedup_m8_n8").
+    pub derived: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    pub fn record(&self, name: &str) -> Option<&BenchRecord> {
+        self.records.iter().find(|r| r.name == name)
+    }
+
+    pub fn derived_value(&self, key: &str) -> Option<f64> {
+        self.derived.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+
+    /// Serialize to the `easi-ica-bench/v1` JSON schema.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\n");
+        out.push_str("  \"schema\": \"easi-ica-bench/v1\",\n");
+        out.push_str(&format!("  \"mode\": {},\n", json_str(&self.mode)));
+        out.push_str(&format!(
+            "  \"calibration_ns_per_iter\": {},\n",
+            json_num(self.calibration_ns_per_iter)
+        ));
+        out.push_str("  \"records\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"name\": {}, ", json_str(&r.name)));
+            out.push_str(&format!("\"kernel\": {}, ", json_str(&r.kernel)));
+            out.push_str(&format!("\"m\": {}, \"n\": {}, ", r.m, r.n));
+            out.push_str(&format!("\"ns_per_iter\": {}, ", json_num(r.ns_per_iter)));
+            out.push_str(&format!("\"min_ns_per_iter\": {}, ", json_num(r.min_ns_per_iter)));
+            out.push_str(&format!("\"iters_per_sec\": {}, ", json_num(r.iters_per_sec)));
+            out.push_str(&format!("\"runs\": {}, ", r.runs));
+            out.push_str(&format!("\"iters_per_run\": {}, ", r.iters_per_run));
+            out.push_str(&format!("\"gated\": {}}}", r.gated));
+            out.push_str(if i + 1 < self.records.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"derived\": {\n");
+        for (i, (k, v)) in self.derived.iter().enumerate() {
+            out.push_str(&format!("    {}: {}", json_str(k), json_num(*v)));
+            out.push_str(if i + 1 < self.derived.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing bench report to {}", path.display()))
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Default output path: `BENCH_hotpath.json` at the repository root
+/// (the crate root's parent — the binary is always built from the tree).
+pub fn default_bench_json_path() -> PathBuf {
+    repo_root().join("BENCH_hotpath.json")
+}
+
+/// Default baseline path: `BENCH_baseline.json` at the repository root.
+pub fn default_baseline_json_path() -> PathBuf {
+    repo_root().join("BENCH_baseline.json")
+}
+
+fn repo_root() -> PathBuf {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).to_path_buf()
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON reader (baseline parsing).
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value (subset: no non-finite numbers, objects keep
+/// insertion order in a flat pair list).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = JsonParser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing data at byte {} of JSON input", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected '{}' at byte {}", b as char, self.pos)
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => self.number(),
+            None => bail!("unexpected end of JSON input"),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            pairs.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(b) = self.peek() else { bail!("unterminated string") };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else { bail!("unterminated escape") };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .context("non-utf8 \\u escape")?;
+                            let code =
+                                u32::from_str_radix(hex, 16).context("bad \\u escape")?;
+                            self.pos += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        other => bail!("unknown escape '\\{}'", other as char),
+                    }
+                }
+                // Plain char; multi-byte UTF-8 continuation bytes ride along.
+                _ => {
+                    let start = self.pos - 1;
+                    while self.pos < self.bytes.len() && self.bytes[self.pos] & 0xC0 == 0x80 {
+                        self.pos += 1;
+                    }
+                    let s = std::str::from_utf8(&self.bytes[start..self.pos])
+                        .context("invalid UTF-8 in string")?;
+                    out.push_str(s);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        if start == self.pos {
+            bail!("expected a number at byte {start}");
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let v: f64 = s.parse().with_context(|| format!("bad number '{s}'"))?;
+        Ok(Json::Num(v))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The hot-path suite.
+// ---------------------------------------------------------------------------
+
+/// Learning rate for the kernel benches (small enough that B stays in a
+/// bounded orbit for the whole measurement).
+const BENCH_MU: f64 = 1e-4;
+
+/// The (m, n) shapes the suite sweeps; (8, 8) is the shape the perf gate
+/// and the fused-speedup acceptance target.
+pub const SUITE_SHAPES: [(usize, usize); 4] = [(4, 2), (8, 4), (8, 8), (16, 8)];
+
+/// Run the deterministic hot-path suite; prints human-readable lines as
+/// it goes and returns the machine-readable report.
+pub fn run_hotpath_suite(quick: bool) -> BenchReport {
+    let (warmup, runs, rows) = if quick { (1, 5, 2048usize) } else { (3, 15, 4096usize) };
+    let mut rep = BenchReport {
+        mode: if quick { "quick" } else { "full" }.to_string(),
+        calibration_ns_per_iter: 0.0,
+        records: Vec::new(),
+        derived: Vec::new(),
+    };
+
+    println!("=== §Perf hot-path micro-benchmarks ({} mode) ===\n", rep.mode);
+    println!("{:<44} {:>20} {:>16}", "benchmark", "time", "throughput");
+
+    // Calibration: fixed-seed 8×8 matmul_into — the machine-speed
+    // reference every gated record is normalized by.
+    let mut rng = Pcg32::seed(0xCA11B);
+    let a = Mat64::from_fn(8, 8, |_, _| rng.normal());
+    let b = Mat64::from_fn(8, 8, |_, _| rng.normal());
+    let mut out = Mat64::zeros(8, 8);
+    let calib = bench(warmup, runs, 2048, || {
+        for _ in 0..2048 {
+            black_box(&a).matmul_into(black_box(&b), &mut out);
+        }
+        black_box(&out);
+    });
+    report("calibration: matmul_into 8x8", &calib);
+    rep.calibration_ns_per_iter = calib.per_iter_ns();
+
+    for (m, n) in SUITE_SHAPES {
+        suite_shape(&mut rep, m, n, warmup, runs, rows);
+    }
+
+    coordinator_e2e(&mut rep, quick);
+
+    println!();
+    for (k, v) in &rep.derived {
+        println!("derived: {k} = {v:.2}");
+    }
+    rep
+}
+
+/// All kernels at one (m, n) shape.
+fn suite_shape(rep: &mut BenchReport, m: usize, n: usize, warmup: usize, runs: usize, rows: usize) {
+    let mut rng = Pcg32::seed(1);
+    let xs = Mat64::from_fn(rows, m, |_, _| rng.normal());
+    let iters = rows as u64;
+
+    // Relative gradient alone: unfused reference vs fused triangular.
+    let b = ica::init_b(n, m);
+    let mut s = FusedScratch::new(n, m);
+    let grad_unfused = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            EasiSgd::relative_gradient(
+                &b,
+                black_box(xs.row(t)),
+                Nonlinearity::Cube,
+                false,
+                BENCH_MU,
+                &mut s.y,
+                &mut s.gy,
+                &mut s.h,
+            );
+        }
+        black_box(&s.h);
+    });
+    push(rep, "unfused gradient", "unfused_grad", m, n, runs, &grad_unfused);
+
+    let grad_fused = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            fused::relative_gradient_into(
+                &b,
+                black_box(xs.row(t)),
+                |v| v * v * v,
+                &mut s.y,
+                &mut s.gy,
+                &mut s.h,
+            );
+        }
+        black_box(&s.h);
+    });
+    push(rep, "fused gradient", "fused_grad", m, n, runs, &grad_fused);
+    rep.derived.push((
+        format!("fused_grad_speedup_m{m}_n{n}"),
+        grad_unfused.per_iter_ns() / grad_fused.per_iter_ns(),
+    ));
+
+    // Full per-sample step: unfused reference sequence vs fused kernel.
+    let mut b_ref = ica::init_b(n, m);
+    let step_unfused = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            EasiSgd::relative_gradient(
+                &b_ref,
+                black_box(xs.row(t)),
+                Nonlinearity::Cube,
+                false,
+                BENCH_MU,
+                &mut s.y,
+                &mut s.gy,
+                &mut s.h,
+            );
+            s.h.matmul_into(&b_ref, &mut s.hb);
+            b_ref.axpy(-BENCH_MU, &s.hb);
+        }
+        black_box(&b_ref);
+    });
+    push(rep, "unfused step", "unfused_step", m, n, runs, &step_unfused);
+
+    let mut b_fused = ica::init_b(n, m);
+    let step_fused = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            fused::relative_gradient_step_into(
+                &mut b_fused,
+                black_box(xs.row(t)),
+                |v| v * v * v,
+                BENCH_MU,
+                &mut s,
+            );
+        }
+        black_box(&b_fused);
+    });
+    push(rep, "fused step", "fused_step", m, n, runs, &step_fused);
+    rep.derived.push((
+        format!("fused_step_speedup_m{m}_n{n}"),
+        step_unfused.per_iter_ns() / step_fused.per_iter_ns(),
+    ));
+
+    // SMBGD through the fused block path (the Optimizer::step_batch the
+    // coordinator drives).
+    let prm = SmbgdParams { mu: BENCH_MU, gamma: 0.5, beta: 0.9, p: 8 };
+    let mut smb = Smbgd::with_identity_init(n, m, prm, Nonlinearity::Cube);
+    let smb_block = bench(warmup, runs, iters, || {
+        smb.step_batch(black_box(&xs));
+    });
+    push(rep, "smbgd step_batch (fused block)", "smbgd_block", m, n, runs, &smb_block);
+}
+
+fn push(
+    rep: &mut BenchReport,
+    what: &str,
+    kernel: &str,
+    m: usize,
+    n: usize,
+    runs: usize,
+    meas: &Measurement,
+) {
+    let name = format!("{what} (m={m}, n={n})");
+    report(&name, meas);
+    rep.records
+        .push(BenchRecord::from_measurement(name, kernel, m, n, runs, meas, true));
+}
+
+/// End-to-end coordinator throughput (native SMBGD). Threaded and
+/// scheduler-sensitive, so recorded with `gated: false`.
+fn coordinator_e2e(rep: &mut BenchReport, quick: bool) {
+    let cfg = ExperimentConfig {
+        samples: if quick { 100_000 } else { 400_000 },
+        optimizer: OptimizerConfig {
+            kind: OptimizerKind::Smbgd,
+            mu: BENCH_MU,
+            ..OptimizerConfig::default()
+        },
+        ..ExperimentConfig::default()
+    };
+    let Ok(engine) = make_engine(&cfg, Nonlinearity::Cube) else { return };
+    let state = StateStore::new(ica::init_b(cfg.n, cfg.m));
+    let t0 = Instant::now();
+    let Ok(sum) = run_streaming(&cfg, engine, ServerOptions::default(), &state) else { return };
+    let dt = t0.elapsed().as_secs_f64();
+    let meas = Measurement {
+        median_ns: dt * 1e9,
+        min_ns: dt * 1e9,
+        iters_per_run: sum.samples.max(1),
+    };
+    let name = format!("coordinator e2e native smbgd (m={}, n={})", cfg.m, cfg.n);
+    report(&name, &meas);
+    rep.records.push(BenchRecord::from_measurement(
+        name,
+        "coordinator_e2e",
+        cfg.m,
+        cfg.n,
+        1,
+        &meas,
+        false,
+    ));
+}
+
+// ---------------------------------------------------------------------------
+// The regression gate.
+// ---------------------------------------------------------------------------
+
+/// Outcome of a gate evaluation: empty `failures` means the gate passes.
+#[derive(Debug)]
+pub struct GateReport {
+    /// Gated kernels compared against the baseline.
+    pub checked: usize,
+    /// Human-readable failure descriptions.
+    pub failures: Vec<String>,
+}
+
+/// Compare `current` against a parsed baseline report.
+///
+/// A gated baseline kernel fails if its normalized cost
+/// (`ns_per_iter / calibration_ns_per_iter`) regressed by more than
+/// `tolerance` (e.g. 0.30 = 30%), or if it vanished from the current
+/// suite. If `min_fused_speedup > 0`, the `fused_step_speedup_m8_n8`
+/// derived value must also meet that floor.
+pub fn check_against_baseline(
+    current: &BenchReport,
+    baseline: &Json,
+    tolerance: f64,
+    min_fused_speedup: f64,
+) -> Result<GateReport> {
+    let base_calib = baseline
+        .get("calibration_ns_per_iter")
+        .and_then(Json::as_f64)
+        .context("baseline missing calibration_ns_per_iter")?;
+    let calib_ok = |v: f64| v.is_finite() && v > 0.0;
+    if !calib_ok(base_calib) || !calib_ok(current.calibration_ns_per_iter) {
+        bail!("non-positive calibration in baseline or current report");
+    }
+    let records = baseline
+        .get("records")
+        .and_then(Json::as_array)
+        .context("baseline missing records[]")?;
+
+    let mut gate = GateReport { checked: 0, failures: Vec::new() };
+    for rec in records {
+        if rec.get("gated").and_then(Json::as_bool) != Some(true) {
+            continue;
+        }
+        let name = rec
+            .get("name")
+            .and_then(Json::as_str)
+            .context("baseline record missing name")?;
+        let base_ns = rec
+            .get("ns_per_iter")
+            .and_then(Json::as_f64)
+            .with_context(|| format!("baseline record '{name}' missing ns_per_iter"))?;
+        gate.checked += 1;
+        let Some(cur) = current.record(name) else {
+            gate.failures.push(format!("kernel '{name}' missing from current suite"));
+            continue;
+        };
+        let base_norm = base_ns / base_calib;
+        let cur_norm = cur.ns_per_iter / current.calibration_ns_per_iter;
+        if cur_norm > base_norm * (1.0 + tolerance) {
+            gate.failures.push(format!(
+                "'{name}' regressed: normalized cost {:.3} vs baseline {:.3} \
+                 (>{:.0}% over)",
+                cur_norm,
+                base_norm,
+                tolerance * 100.0
+            ));
+        }
+    }
+
+    if min_fused_speedup > 0.0 {
+        match current.derived_value("fused_step_speedup_m8_n8") {
+            Some(v) if v >= min_fused_speedup => {}
+            Some(v) => gate.failures.push(format!(
+                "fused_step_speedup_m8_n8 = {v:.2} below required {min_fused_speedup:.2}"
+            )),
+            None => gate
+                .failures
+                .push("fused_step_speedup_m8_n8 missing from current suite".to_string()),
+        }
+    }
+    Ok(gate)
+}
+
+/// Load + parse a baseline JSON file and gate `current` against it.
+pub fn gate_against_file(
+    current: &BenchReport,
+    baseline_path: &Path,
+    tolerance: f64,
+    min_fused_speedup: f64,
+) -> Result<GateReport> {
+    let text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading baseline {}", baseline_path.display()))?;
+    let baseline = Json::parse(&text)
+        .with_context(|| format!("parsing baseline {}", baseline_path.display()))?;
+    check_against_baseline(current, &baseline, tolerance, min_fused_speedup)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_report() -> BenchReport {
+        BenchReport {
+            mode: "quick".to_string(),
+            calibration_ns_per_iter: 100.0,
+            records: vec![
+                BenchRecord {
+                    name: "fused step (m=8, n=8)".to_string(),
+                    kernel: "fused_step".to_string(),
+                    m: 8,
+                    n: 8,
+                    ns_per_iter: 200.0,
+                    min_ns_per_iter: 190.0,
+                    iters_per_sec: 5e6,
+                    runs: 5,
+                    iters_per_run: 2048,
+                    gated: true,
+                },
+                BenchRecord {
+                    name: "coordinator e2e native smbgd (m=4, n=2)".to_string(),
+                    kernel: "coordinator_e2e".to_string(),
+                    m: 4,
+                    n: 2,
+                    ns_per_iter: 500.0,
+                    min_ns_per_iter: 500.0,
+                    iters_per_sec: 2e6,
+                    runs: 1,
+                    iters_per_run: 100_000,
+                    gated: false,
+                },
+            ],
+            derived: vec![("fused_step_speedup_m8_n8".to_string(), 2.0)],
+        }
+    }
+
+    #[test]
+    fn json_round_trips_through_parser() {
+        let rep = tiny_report();
+        let parsed = Json::parse(&rep.to_json()).unwrap();
+        assert_eq!(
+            parsed.get("schema").and_then(Json::as_str),
+            Some("easi-ica-bench/v1")
+        );
+        assert_eq!(
+            parsed.get("calibration_ns_per_iter").and_then(Json::as_f64),
+            Some(100.0)
+        );
+        let records = parsed.get("records").and_then(Json::as_array).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(
+            records[0].get("name").and_then(Json::as_str),
+            Some("fused step (m=8, n=8)")
+        );
+        assert_eq!(records[0].get("gated").and_then(Json::as_bool), Some(true));
+        assert_eq!(records[1].get("gated").and_then(Json::as_bool), Some(false));
+        let derived = parsed.get("derived").unwrap();
+        assert_eq!(
+            derived.get("fused_step_speedup_m8_n8").and_then(Json::as_f64),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn parser_handles_escapes_and_nesting() {
+        let j = Json::parse(r#"{"a": [1, -2.5e1, "x\ny\"z"], "b": {"c": null}}"#).unwrap();
+        let arr = j.get("a").and_then(Json::as_array).unwrap();
+        assert_eq!(arr[1].as_f64(), Some(-25.0));
+        assert_eq!(arr[2].as_str(), Some("x\ny\"z"));
+        assert_eq!(j.get("b").unwrap().get("c"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("12 34").is_err());
+    }
+
+    #[test]
+    fn gate_passes_identical_report() {
+        let rep = tiny_report();
+        let baseline = Json::parse(&rep.to_json()).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 1.5).unwrap();
+        assert_eq!(gate.checked, 1, "only the gated record is compared");
+        assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+    }
+
+    #[test]
+    fn gate_is_machine_speed_invariant() {
+        // A machine 3x slower across the board (same ratios) must pass.
+        let rep = tiny_report();
+        let baseline = Json::parse(&rep.to_json()).unwrap();
+        let mut slower = rep.clone();
+        slower.calibration_ns_per_iter *= 3.0;
+        for r in &mut slower.records {
+            r.ns_per_iter *= 3.0;
+        }
+        let gate = check_against_baseline(&slower, &baseline, 0.30, 0.0).unwrap();
+        assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+    }
+
+    #[test]
+    fn gate_catches_regression_and_missing_kernel() {
+        let rep = tiny_report();
+        let baseline = Json::parse(&rep.to_json()).unwrap();
+
+        let mut regressed = rep.clone();
+        regressed.records[0].ns_per_iter *= 1.5; // 50% > 30% tolerance
+        let gate = check_against_baseline(&regressed, &baseline, 0.30, 0.0).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("regressed"));
+
+        let mut missing = rep.clone();
+        missing.records.remove(0);
+        let gate = check_against_baseline(&missing, &baseline, 0.30, 0.0).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("missing"));
+    }
+
+    #[test]
+    fn gate_enforces_fused_speedup_floor() {
+        let rep = tiny_report();
+        let baseline = Json::parse(&rep.to_json()).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 2.5).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("fused_step_speedup"));
+    }
+
+    #[test]
+    fn ungated_records_are_informational() {
+        // Blowing up the e2e record must not fail the gate.
+        let rep = tiny_report();
+        let baseline = Json::parse(&rep.to_json()).unwrap();
+        let mut noisy = rep.clone();
+        noisy.records[1].ns_per_iter *= 100.0;
+        let gate = check_against_baseline(&noisy, &baseline, 0.30, 0.0).unwrap();
+        assert!(gate.failures.is_empty());
+    }
+
+    #[test]
+    fn checked_in_baseline_parses_and_gates() {
+        // The committed BENCH_baseline.json must stay parseable and
+        // loose enough that a self-consistent current report passes.
+        let path = default_baseline_json_path();
+        let text = std::fs::read_to_string(&path).expect("BENCH_baseline.json at repo root");
+        let baseline = Json::parse(&text).expect("baseline parses");
+        // Build a "current" report echoing the baseline numbers.
+        let base_calib = baseline
+            .get("calibration_ns_per_iter")
+            .and_then(Json::as_f64)
+            .unwrap();
+        let mut current = BenchReport {
+            mode: "quick".to_string(),
+            calibration_ns_per_iter: base_calib,
+            records: Vec::new(),
+            derived: vec![("fused_step_speedup_m8_n8".to_string(), 2.0)],
+        };
+        for rec in baseline.get("records").and_then(Json::as_array).unwrap() {
+            current.records.push(BenchRecord {
+                name: rec.get("name").and_then(Json::as_str).unwrap().to_string(),
+                kernel: rec.get("kernel").and_then(Json::as_str).unwrap().to_string(),
+                m: rec.get("m").and_then(Json::as_f64).unwrap() as usize,
+                n: rec.get("n").and_then(Json::as_f64).unwrap() as usize,
+                ns_per_iter: rec.get("ns_per_iter").and_then(Json::as_f64).unwrap(),
+                min_ns_per_iter: rec.get("min_ns_per_iter").and_then(Json::as_f64).unwrap(),
+                iters_per_sec: 1.0,
+                runs: 1,
+                iters_per_run: 1,
+                gated: rec.get("gated").and_then(Json::as_bool).unwrap(),
+            });
+        }
+        let gate = check_against_baseline(&current, &baseline, 0.30, 1.5).unwrap();
+        assert!(gate.checked > 0);
+        assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+    }
+}

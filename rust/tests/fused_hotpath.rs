@@ -1,0 +1,325 @@
+//! The fused hot path's two contracts, pinned end-to-end:
+//!
+//! 1. **Bit-exactness** — the fused kernels (`linalg::fused`) wired into
+//!    `EasiSgd`/`Smbgd`/`Mbgd` produce *bit-identical* `B` trajectories to
+//!    the unfused reference sequence (`EasiSgd::relative_gradient` +
+//!    `matmul_into` + `axpy`) over 1k-step runs, for every `Nonlinearity`
+//!    variant and for arbitrary `step_batch` chunkings. This is what makes
+//!    the fusion a pure speed change: the coordinator, hub, and every
+//!    experiment inherit it with zero numerical drift.
+//! 2. **Zero steady-state allocation** — once an optimizer is
+//!    constructed, stepping it never touches the heap. Asserted with a
+//!    counting global allocator (per-thread, so parallel test threads
+//!    don't interfere).
+
+use easi_ica::ica::{EasiSgd, Mbgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
+use easi_ica::linalg::Mat64;
+use easi_ica::signal::Pcg32;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+// ---------------------------------------------------------------------------
+// Counting allocator (thread-local counts; the allocator itself must not
+// allocate, hence `const`-initialized TLS and `try_with` for teardown).
+// ---------------------------------------------------------------------------
+
+struct CountingAllocator;
+
+thread_local! {
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAllocator = CountingAllocator;
+
+/// Heap allocations performed by `f` on this thread.
+fn allocations_in(f: impl FnOnce()) -> u64 {
+    let before = ALLOC_COUNT.with(|c| c.get());
+    f();
+    ALLOC_COUNT.with(|c| c.get()) - before
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers.
+// ---------------------------------------------------------------------------
+
+const ALL_G: [Nonlinearity; 3] =
+    [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare];
+
+fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat64 {
+    Mat64::from_fn(r, c, |_, _| rng.normal() * 0.3)
+}
+
+fn assert_bits_equal(a: &Mat64, b: &Mat64, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs bitwise: {x:e} vs {y:e}"
+        );
+    }
+}
+
+/// The unfused reference SGD step (the exact pre-fusion code path).
+fn unfused_sgd_step(
+    b: &mut Mat64,
+    x: &[f64],
+    g: Nonlinearity,
+    mu: f64,
+    y: &mut [f64],
+    gy: &mut [f64],
+    h: &mut Mat64,
+    hb: &mut Mat64,
+) {
+    EasiSgd::relative_gradient(b, x, g, false, mu, y, gy, h);
+    h.matmul_into(b, hb);
+    b.axpy(-mu, hb);
+}
+
+// ---------------------------------------------------------------------------
+// 1k-step bit-identity, all optimizers × all nonlinearities.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sgd_trajectory_bit_identical_1k_steps() {
+    for g in ALL_G {
+        let mut rng = Pcg32::seed(0xF0_5D + g as u64);
+        let (n, m) = (3, 4);
+        let b0 = rand_mat(&mut rng, n, m);
+        let mu = 0.001;
+
+        let mut fused = EasiSgd::new(b0.clone(), mu, g);
+        let mut b_ref = b0;
+        let (mut y, mut gy) = (vec![0.0; n], vec![0.0; n]);
+        let mut h = Mat64::zeros(n, n);
+        let mut hb = Mat64::zeros(n, m);
+
+        for step in 0..1000 {
+            let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            fused.step(&x);
+            unfused_sgd_step(&mut b_ref, &x, g, mu, &mut y, &mut gy, &mut h, &mut hb);
+            assert_bits_equal(fused.b(), &b_ref, &format!("sgd {g:?} step {step}"));
+        }
+        assert!(fused.b().is_finite(), "trajectory must stay finite for the pin to bite");
+    }
+}
+
+/// Unfused per-sample SMBGD reference (Eq. 1 exactly as the pre-fusion
+/// `Smbgd::step` computed it).
+struct SmbgdRef {
+    b: Mat64,
+    hhat: Mat64,
+    hhat_prev: Mat64,
+    p_idx: usize,
+    y: Vec<f64>,
+    gy: Vec<f64>,
+    h: Mat64,
+    hb: Mat64,
+}
+
+impl SmbgdRef {
+    fn new(b0: Mat64, n: usize, m: usize) -> Self {
+        Self {
+            b: b0,
+            hhat: Mat64::zeros(n, n),
+            hhat_prev: Mat64::zeros(n, n),
+            p_idx: 0,
+            y: vec![0.0; n],
+            gy: vec![0.0; n],
+            h: Mat64::zeros(n, n),
+            hb: Mat64::zeros(n, m),
+        }
+    }
+
+    fn step(&mut self, x: &[f64], prm: SmbgdParams, g: Nonlinearity) {
+        EasiSgd::relative_gradient(
+            &self.b, x, g, false, prm.mu, &mut self.y, &mut self.gy, &mut self.h,
+        );
+        if self.p_idx == 0 {
+            self.hhat.copy_from(&self.hhat_prev);
+            self.hhat.scale(prm.gamma);
+        } else {
+            self.hhat.scale(prm.beta);
+        }
+        self.hhat.axpy(prm.mu, &self.h);
+        self.p_idx += 1;
+        if self.p_idx == prm.p {
+            self.hhat.matmul_into(&self.b, &mut self.hb);
+            self.b.axpy(-1.0, &self.hb);
+            self.hhat_prev.copy_from(&self.hhat);
+            self.p_idx = 0;
+        }
+    }
+}
+
+#[test]
+fn smbgd_trajectory_bit_identical_1k_steps_any_chunking() {
+    // Chunk sizes deliberately misaligned with P=8 so step_batch exercises
+    // the align → block → tail path at every phase.
+    for (g, chunk) in [
+        (Nonlinearity::Cube, 13usize),
+        (Nonlinearity::Tanh, 64),
+        (Nonlinearity::SignedSquare, 7),
+        (Nonlinearity::Cube, 1),
+    ] {
+        let mut rng = Pcg32::seed(0x5B6D + chunk as u64);
+        let (n, m) = (2, 4);
+        let prm = SmbgdParams { mu: 0.002, gamma: 0.5, beta: 0.9, p: 8 };
+        let b0 = rand_mat(&mut rng, n, m);
+
+        let mut fused = Smbgd::new(b0.clone(), prm, g);
+        let mut reference = SmbgdRef::new(b0, n, m);
+
+        let total = 1000;
+        let mut fed = 0;
+        while fed < total {
+            let rows = chunk.min(total - fed);
+            let xs = Mat64::from_fn(rows, m, |_, _| rng.normal());
+            fused.step_batch(&xs);
+            for t in 0..rows {
+                reference.step(xs.row(t), prm, g);
+            }
+            fed += rows;
+            assert_bits_equal(
+                fused.b(),
+                &reference.b,
+                &format!("smbgd {g:?} chunk={chunk} after {fed}"),
+            );
+            assert_bits_equal(
+                fused.hhat_prev(),
+                &reference.hhat_prev,
+                &format!("smbgd hhat_prev {g:?} chunk={chunk} after {fed}"),
+            );
+        }
+        assert_eq!(fused.samples_seen(), total as u64);
+        assert_eq!(fused.minibatches_done(), (total / prm.p) as u64);
+        assert!(fused.b().is_finite());
+    }
+}
+
+#[test]
+fn mbgd_trajectory_bit_identical_1k_steps_any_chunking() {
+    for (g, chunk) in [
+        (Nonlinearity::Cube, 13usize),
+        (Nonlinearity::Tanh, 32),
+        (Nonlinearity::SignedSquare, 5),
+    ] {
+        let mut rng = Pcg32::seed(0x6B6D + chunk as u64);
+        let (n, m, p) = (2, 4, 8);
+        let mu = 0.02;
+        let b0 = rand_mat(&mut rng, n, m);
+
+        let mut fused = Mbgd::new(b0.clone(), mu, p, g);
+        // Unfused reference (the pre-fusion Mbgd::step).
+        let mut b_ref = b0;
+        let mut hsum = Mat64::zeros(n, n);
+        let (mut y, mut gy) = (vec![0.0; n], vec![0.0; n]);
+        let mut h = Mat64::zeros(n, n);
+        let mut hb = Mat64::zeros(n, m);
+        let mut p_idx = 0;
+
+        let total = 1000;
+        let mut fed = 0;
+        while fed < total {
+            let rows = chunk.min(total - fed);
+            let xs = Mat64::from_fn(rows, m, |_, _| rng.normal());
+            fused.step_batch(&xs);
+            for t in 0..rows {
+                EasiSgd::relative_gradient(
+                    &b_ref, xs.row(t), g, false, mu, &mut y, &mut gy, &mut h,
+                );
+                hsum.axpy(1.0, &h);
+                p_idx += 1;
+                if p_idx == p {
+                    hsum.matmul_into(&b_ref, &mut hb);
+                    b_ref.axpy(-mu / p as f64, &hb);
+                    hsum.fill(0.0);
+                    p_idx = 0;
+                }
+            }
+            fed += rows;
+            assert_bits_equal(fused.b(), &b_ref, &format!("mbgd {g:?} chunk={chunk} after {fed}"));
+        }
+        assert!(fused.b().is_finite());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero-allocation steady state.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sgd_steady_state_step_does_not_allocate() {
+    let mut rng = Pcg32::seed(1);
+    let xs = Mat64::from_fn(1000, 4, |_, _| rng.normal());
+    let mut opt = EasiSgd::with_identity_init(2, 4, 0.002, Nonlinearity::Cube);
+    // Warm: scratch is allocated at construction, nothing later.
+    for t in 0..8 {
+        opt.step(xs.row(t));
+    }
+    let allocs = allocations_in(|| {
+        for t in 0..xs.rows() {
+            opt.step(xs.row(t));
+        }
+    });
+    assert_eq!(allocs, 0, "EasiSgd::step allocated on the steady-state path");
+}
+
+#[test]
+fn smbgd_steady_state_step_and_block_do_not_allocate() {
+    let mut rng = Pcg32::seed(2);
+    let xs = Mat64::from_fn(1024, 4, |_, _| rng.normal());
+    let prm = SmbgdParams { mu: 0.002, gamma: 0.5, beta: 0.9, p: 8 };
+    let mut opt = Smbgd::with_identity_init(2, 4, prm, Nonlinearity::Cube);
+    for t in 0..16 {
+        opt.step(xs.row(t));
+    }
+    let allocs = allocations_in(|| {
+        // Per-sample path and the fused block path.
+        for t in 0..64 {
+            opt.step(xs.row(t));
+        }
+        opt.step_batch(&xs);
+    });
+    assert_eq!(allocs, 0, "Smbgd steady-state stepping allocated");
+}
+
+#[test]
+fn mbgd_steady_state_step_does_not_allocate() {
+    let mut rng = Pcg32::seed(3);
+    let xs = Mat64::from_fn(1024, 4, |_, _| rng.normal());
+    let mut opt = Mbgd::with_identity_init(2, 4, 0.01, 8, Nonlinearity::Cube);
+    for t in 0..16 {
+        opt.step(xs.row(t));
+    }
+    let allocs = allocations_in(|| {
+        for t in 0..64 {
+            opt.step(xs.row(t));
+        }
+        opt.step_batch(&xs);
+    });
+    assert_eq!(allocs, 0, "Mbgd steady-state stepping allocated");
+}

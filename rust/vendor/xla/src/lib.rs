@@ -1,0 +1,198 @@
+//! API-stub of the `xla` (xla-rs) bindings used by `runtime::executor`.
+//!
+//! Purpose: the parent crate's `pjrt` feature gates real-PJRT execution
+//! behind this dependency. The real bindings link native XLA libraries
+//! that offline environments don't have — but the feature-gated Rust code
+//! still needs to *compile* in CI or it rots. This stub mirrors the exact
+//! API surface `runtime::executor` + `runtime::literal` consume:
+//!
+//! - [`Literal`] is implemented for real (an in-memory f32 buffer with a
+//!   shape), so the conversion layer and its tests work unchanged;
+//! - everything that would require a PJRT client fails at runtime with a
+//!   clear [`Error`], starting at [`PjRtClient::cpu`] — callers already
+//!   treat runtime construction as fallible, so the failure surfaces
+//!   exactly like a missing artifacts directory does.
+//!
+//! Deploying for real: replace this directory with the vendored xla-rs
+//! crate (same package name); no code changes needed in the parent.
+
+use std::fmt;
+
+/// Stub error: carries a message; every fallible entry point returns it.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires the real XLA/PJRT native libraries (this build \
+         vendors the API-stub `xla` crate; see rust/vendor/xla)"
+    )))
+}
+
+/// Sealed element-type bridge for [`Literal::to_vec`] (f32 artifacts only).
+pub trait NativeType: Copy + 'static {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+/// In-memory literal: f32 buffer + shape. Fully functional — the
+/// `runtime::literal` conversions (and their tests) run against it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(data: &[f32]) -> Self {
+        Self { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape (element count must match; `&[]` is a rank-0 scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Self> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements vs dims {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Self { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Element access as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Dimensions of this literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Unwrap a 1-tuple result literal — only produced by real execution,
+    /// which the stub cannot perform.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("tuple literals (program output)")
+    }
+
+    /// Unwrap a 2-tuple result literal — see [`Literal::to_tuple1`].
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        unavailable("tuple literals (program output)")
+    }
+}
+
+/// Parsed HLO module (stub: construction always fails).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO-text artifact file.
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        Err(Error(format!(
+            "HloModuleProto::from_text_file({path}) requires the real \
+             XLA/PJRT native libraries (API-stub build; see rust/vendor/xla)"
+        )))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        // Unreachable in practice: HloModuleProto construction fails first.
+        Self { _private: () }
+    }
+}
+
+/// A device buffer holding one program output.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals; results are
+    /// `[device][output]` buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub: construction always fails, so nothing downstream
+/// can be reached at runtime — but it all type-checks).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        // Rank-0 scalar.
+        let s = Literal::vec1(&[0.5]).reshape(&[]).unwrap();
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn execution_surface_fails_clearly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("xla stub"), "{err}");
+    }
+}
