@@ -121,13 +121,15 @@ pub fn usage() -> &'static str {
      COMMANDS\n\
        run            stream an experiment through the coordinator\n\
                       --config FILE | [--m N --n N --optimizer sgd|smbgd|mbgd\n\
-                      --engine native|pjrt --samples N --mu F --gamma F --beta F\n\
-                      --p N --mixing static|rotating|switching --seed N]\n\
+                      --engine native|pjrt --precision f32|f64 --samples N\n\
+                      --mu F --gamma F --beta F --p N\n\
+                      --mixing static|rotating|switching --seed N]\n\
        serve-many     multi-session hub: N concurrent sessions sharded over a\n\
                       worker pool, with per-shard backpressure and an\n\
                       aggregate throughput table\n\
                       [--config FILE | --sessions N --shards N --samples N\n\
-                       --mixing a,b,c --capacity N --seed N --seed-stride N\n\
+                       --mixing a,b,c --precision f32,f64 (cycled per session)\n\
+                       --capacity N --seed N --seed-stride N\n\
                        --mu F --gamma F --beta F --p N --m N --n N\n\
                        --optimizer sgd|smbgd|mbgd --engine native|pjrt\n\
                        --artifacts DIR]\n\
@@ -144,9 +146,10 @@ pub fn usage() -> &'static str {
                       [--m N --n N --arch sgd|smbgd]\n\
        separate       run FastICA on a synthetic dataset and report metrics\n\
                       [--m N --n N --samples N --seed N]\n\
-       bench          §Perf hot-path suite → BENCH_hotpath.json (repo root)\n\
+       bench          §Perf hot-path suite (f64 + f32 kernels) →\n\
+                      BENCH_hotpath.json (repo root)\n\
                       [--quick --out PATH --check BASELINE.json\n\
-                       --tolerance F --min-fused-speedup F]\n\
+                       --tolerance F --min-fused-speedup F --min-f32-speedup F]\n\
                       with --check, exits nonzero if any gated kernel's\n\
                       machine-normalized cost regressed past the tolerance\n\
        help           this text\n"
@@ -190,7 +193,8 @@ mod tests {
         assert!(a.switch("quick"));
         assert_eq!(a.get("check"), Some("BENCH_baseline.json"));
         assert_eq!(a.get_f64("tolerance", 0.0).unwrap(), 0.3);
-        let allowed = ["quick", "check", "tolerance", "out", "min-fused-speedup"];
+        let allowed =
+            ["quick", "check", "tolerance", "out", "min-fused-speedup", "min-f32-speedup"];
         assert!(a.expect_only(&allowed).is_ok());
     }
 

@@ -10,5 +10,6 @@ mod types;
 
 pub use parse::{parse, ParseError, Value};
 pub use types::{
-    EngineKind, ExperimentConfig, HubScenario, OptimizerConfig, OptimizerKind, SignalConfig,
+    EngineKind, ExperimentConfig, HubScenario, OptimizerConfig, OptimizerKind, Precision,
+    SignalConfig,
 };

@@ -53,6 +53,38 @@ impl EngineKind {
     }
 }
 
+/// Arithmetic precision of a session's request path.
+///
+/// `f64` is the bit-exact reference (trajectory pins, parity oracles);
+/// `f32` is the paper's 32-bit hardware datapath run in software — the
+/// whole update pipeline (gradient, accumulator, B) stays in single
+/// precision, pinned to the f64 reference by tolerance/Amari-parity tests
+/// rather than bitwise. A hub can mix precisions across tenants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Single precision — the paper's FPGA datapath width.
+    F32,
+    /// Double precision — the bit-exact software reference (default).
+    F64,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Self::F32,
+            "f64" => Self::F64,
+            other => bail!("unknown precision '{other}' (expected f32|f64)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::F32 => "f32",
+            Self::F64 => "f64",
+        }
+    }
+}
+
 /// Optimizer hyperparameters (paper §IV notation).
 #[derive(Clone, Copy, Debug)]
 pub struct OptimizerConfig {
@@ -116,6 +148,8 @@ pub struct ExperimentConfig {
     pub optimizer: OptimizerConfig,
     pub signal: SignalConfig,
     pub engine: EngineKind,
+    /// Request-path arithmetic precision (native engine only).
+    pub precision: Precision,
     /// Directory holding the AOT artifacts (PJRT engine).
     pub artifacts_dir: String,
 }
@@ -132,6 +166,7 @@ impl Default for ExperimentConfig {
             optimizer: OptimizerConfig::default(),
             signal: SignalConfig::default(),
             engine: EngineKind::Native,
+            precision: Precision::F64,
             artifacts_dir: "artifacts".into(),
         }
     }
@@ -164,6 +199,7 @@ impl ExperimentConfig {
                 "samples" => cfg.samples = want_usize(k, value)?,
                 "convergence_threshold" => cfg.convergence_threshold = want_float(k, value)?,
                 "engine" => cfg.engine = EngineKind::parse(&want_str(k, value)?)?,
+                "precision" => cfg.precision = Precision::parse(&want_str(k, value)?)?,
                 "artifacts_dir" => cfg.artifacts_dir = want_str(k, value)?,
                 "optimizer.kind" => {
                     cfg.optimizer.kind = OptimizerKind::parse(&want_str(k, value)?)?
@@ -209,6 +245,11 @@ impl ExperimentConfig {
             "static" | "rotating" | "switching" => {}
             other => bail!("unknown signal.mixing '{other}'"),
         }
+        if self.engine == EngineKind::Pjrt && self.precision == Precision::F32 {
+            bail!(
+                "precision = \"f32\" requires the native engine (PJRT artifacts fix their dtype)"
+            );
+        }
         Ok(())
     }
 }
@@ -242,6 +283,10 @@ pub struct HubScenario {
     /// Mixing kinds cycled across sessions (`static|rotating|switching`);
     /// empty inherits the base config's mixing for every session.
     pub mixing: Vec<String>,
+    /// Precisions cycled across sessions (`f32|f64`); empty inherits the
+    /// base config's precision for every session. This is how one
+    /// `serve-many` process runs f32 and f64 tenants side by side.
+    pub precision: Vec<Precision>,
     /// Session `i` streams with seed `base.seed + i * seed_stride`.
     pub seed_stride: u64,
     /// Template every session config derives from.
@@ -255,6 +300,7 @@ impl Default for HubScenario {
             shards: 2,
             channel_capacity: 4096,
             mixing: Vec::new(),
+            precision: Vec::new(),
             seed_stride: 1,
             base: ExperimentConfig::default(),
         }
@@ -276,6 +322,12 @@ impl HubScenario {
                 }
                 "hub.seed_stride" => scenario.seed_stride = want_usize(&key, &value)? as u64,
                 "hub.mixing" => scenario.mixing = want_str_list(&key, &value)?,
+                "hub.precision" => {
+                    scenario.precision = want_str_list(&key, &value)?
+                        .iter()
+                        .map(|s| Precision::parse(s.as_str()))
+                        .collect::<Result<Vec<_>>>()?
+                }
                 k if k.starts_with("hub.") => bail!("unknown config key '{k}'"),
                 _ => {
                     base_map.insert(key, value);
@@ -309,16 +361,25 @@ impl HubScenario {
                 other => bail!("unknown hub.mixing kind '{other}'"),
             }
         }
+        // Same early rejection `ExperimentConfig::validate` gives the
+        // non-cycled form, so serve-many fails at config time rather than
+        // inside session-0 engine construction.
+        if self.base.engine == EngineKind::Pjrt && self.precision.contains(&Precision::F32) {
+            bail!("hub.precision includes \"f32\" but the engine is pjrt (f32 needs native)");
+        }
         self.base.validate()
     }
 
     /// Materialize session `id`'s config: base + per-session seed, mixing
-    /// kind (cycled), and name suffix.
+    /// kind and precision (cycled), and name suffix.
     pub fn session_config(&self, id: usize) -> ExperimentConfig {
         let mut cfg = self.base.clone();
         cfg.seed = self.base.seed.wrapping_add((id as u64).wrapping_mul(self.seed_stride));
         if !self.mixing.is_empty() {
             cfg.signal.mixing = self.mixing[id % self.mixing.len()].clone();
+        }
+        if !self.precision.is_empty() {
+            cfg.precision = self.precision[id % self.precision.len()];
         }
         cfg.name = format!("{}-{id}", self.base.name);
         cfg
@@ -484,5 +545,47 @@ mod tests {
     fn engine_parse() {
         assert_eq!(EngineKind::parse("pjrt").unwrap(), EngineKind::Pjrt);
         assert!(EngineKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn precision_parse_round_trip() {
+        for p in [Precision::F32, Precision::F64] {
+            assert_eq!(Precision::parse(p.name()).unwrap(), p);
+        }
+        assert!(Precision::parse("f16").is_err());
+    }
+
+    #[test]
+    fn precision_config_key() {
+        let cfg = ExperimentConfig::from_toml("precision = \"f32\"").unwrap();
+        assert_eq!(cfg.precision, Precision::F32);
+        assert_eq!(ExperimentConfig::default().precision, Precision::F64);
+        assert!(ExperimentConfig::from_toml("precision = \"f16\"").is_err());
+    }
+
+    #[test]
+    fn f32_requires_native_engine() {
+        let doc = "engine = \"pjrt\"\nprecision = \"f32\"";
+        assert!(ExperimentConfig::from_toml(doc).is_err());
+        let doc = "engine = \"native\"\nprecision = \"f32\"";
+        assert!(ExperimentConfig::from_toml(doc).is_ok());
+    }
+
+    #[test]
+    fn hub_scenario_cycles_precisions() {
+        let sc = HubScenario::from_toml("[hub]\nprecision = [\"f32\", \"f64\"]").unwrap();
+        assert_eq!(sc.session_config(0).precision, Precision::F32);
+        assert_eq!(sc.session_config(1).precision, Precision::F64);
+        assert_eq!(sc.session_config(4).precision, Precision::F32);
+        // Single string form and inheritance.
+        let sc = HubScenario::from_toml("[hub]\nprecision = \"f32\"").unwrap();
+        assert_eq!(sc.session_config(3).precision, Precision::F32);
+        let sc = HubScenario::from_toml("precision = \"f32\"").unwrap();
+        assert_eq!(sc.session_config(2).precision, Precision::F32);
+        assert!(HubScenario::from_toml("[hub]\nprecision = \"f16\"").is_err());
+        // Cycled f32 with a pjrt base engine is rejected at config time,
+        // matching the non-cycled check in ExperimentConfig::validate.
+        let doc = "engine = \"pjrt\"\n[hub]\nprecision = [\"f32\", \"f64\"]";
+        assert!(HubScenario::from_toml(doc).is_err());
     }
 }

@@ -9,9 +9,9 @@
 //! - [`PjrtEngine`] — executes the AOT-compiled JAX/Pallas chunk programs
 //!   via PJRT (the "TPU deployment" path; no Python at runtime).
 
-use crate::config::{EngineKind, ExperimentConfig, OptimizerKind};
+use crate::config::{EngineKind, ExperimentConfig, OptimizerKind, Precision};
 use crate::ica::{self, Nonlinearity, Optimizer};
-use crate::linalg::Mat64;
+use crate::linalg::{Mat, Mat64, Scalar};
 use crate::runtime::{PjrtRuntime, ProgramKind};
 use anyhow::{bail, Context, Result};
 
@@ -34,6 +34,16 @@ pub trait Engine: Send {
     fn reset_b(&mut self, b: Mat64);
 }
 
+/// Chunk size for the native engines, shared across precisions: aligned
+/// with the optimizer's mini-batch so state snapshots land on batch
+/// boundaries.
+fn native_chunk_size(cfg: &ExperimentConfig) -> usize {
+    match cfg.optimizer.kind {
+        OptimizerKind::Sgd => 64,
+        _ => cfg.optimizer.p.max(1) * 8,
+    }
+}
+
 /// Pure-Rust engine wrapping any [`ica::Optimizer`].
 pub struct NativeEngine {
     opt: Box<dyn Optimizer>,
@@ -49,13 +59,7 @@ impl NativeEngine {
     /// Build from an experiment config with the standard warm start.
     pub fn from_config(cfg: &ExperimentConfig, g: Nonlinearity) -> Self {
         let opt = ica::make_optimizer(&cfg.optimizer, cfg.n, cfg.m, g);
-        // Chunk aligned with the optimizer's mini-batch so state snapshots
-        // land on batch boundaries.
-        let chunk = match cfg.optimizer.kind {
-            OptimizerKind::Sgd => 64,
-            _ => cfg.optimizer.p.max(1) * 8,
-        };
-        Self::new(opt, chunk)
+        Self::new(opt, native_chunk_size(cfg))
     }
 
     /// Access the wrapped optimizer (tests).
@@ -88,6 +92,79 @@ impl Engine for NativeEngine {
 
     fn reset_b(&mut self, b: Mat64) {
         self.opt.b_mut().copy_from(&b);
+    }
+}
+
+/// Precision-generic native engine: the whole optimizer state machine —
+/// gradient, accumulator, separation matrix — runs in `T` (the paper's
+/// hardware is `T = f32`), while the coordinator's wire format stays
+/// `f64`: each ingest chunk is narrowed once into a reusable buffer on
+/// submit and `B` is widened on snapshot. The `f64` wire keeps the
+/// producer/AGC/monitor stack precision-agnostic, so one hub can serve
+/// `f32` and `f64` tenants side by side.
+///
+/// `CastNativeEngine<f64>` would be a plain copy of [`NativeEngine`];
+/// that type therefore stays the dedicated f64 path (no narrowing work,
+/// bit-exact by construction) and this one serves every other precision.
+pub struct CastNativeEngine<T: Scalar> {
+    opt: Box<dyn Optimizer<T>>,
+    chunk: usize,
+    /// Reusable narrowed-chunk buffer (chunk_size × m on the steady path;
+    /// reshaped only if a caller submits an odd-sized chunk).
+    xs_t: Mat<T>,
+}
+
+impl<T: Scalar> CastNativeEngine<T> {
+    pub fn new(opt: Box<dyn Optimizer<T>>, chunk: usize) -> Self {
+        assert!(chunk >= 1);
+        let (_, m) = opt.b().shape();
+        Self { xs_t: Mat::zeros(chunk, m), opt, chunk }
+    }
+
+    /// Build from an experiment config with the standard warm start
+    /// (same [`native_chunk_size`] policy as [`NativeEngine::from_config`],
+    /// so f32 and f64 sessions snapshot on identical boundaries).
+    pub fn from_config(cfg: &ExperimentConfig, g: Nonlinearity) -> Self {
+        let opt = ica::make_optimizer_t::<T>(&cfg.optimizer, cfg.n, cfg.m, g);
+        Self::new(opt, native_chunk_size(cfg))
+    }
+
+    /// Access the wrapped optimizer (tests).
+    pub fn optimizer(&self) -> &dyn Optimizer<T> {
+        self.opt.as_ref()
+    }
+}
+
+impl<T: Scalar> Engine for CastNativeEngine<T> {
+    fn chunk_size(&self) -> usize {
+        self.chunk
+    }
+
+    fn submit_chunk(&mut self, xs: &Mat64) -> Result<()> {
+        if self.xs_t.shape() != xs.shape() {
+            // Odd-sized chunk (never on the Chunker's steady path).
+            self.xs_t = Mat::zeros(xs.rows(), xs.cols());
+        }
+        xs.cast_into(&mut self.xs_t);
+        self.opt.step_batch(&self.xs_t);
+        Ok(())
+    }
+
+    fn b(&self) -> Mat64 {
+        self.opt.b().cast()
+    }
+
+    fn samples_done(&self) -> u64 {
+        self.opt.samples_seen()
+    }
+
+    fn describe(&self) -> String {
+        format!("native-{}/{}", T::type_name(), self.opt.name())
+    }
+
+    fn reset_b(&mut self, b: Mat64) {
+        assert_eq!(b.shape(), self.opt.b().shape());
+        self.opt.b_mut().copy_from(&b.cast());
     }
 }
 
@@ -227,11 +304,17 @@ impl Engine for PjrtEngine {
     }
 }
 
-/// Build the engine selected by the config.
+/// Build the engine selected by the config (engine kind × precision).
 pub fn make_engine(cfg: &ExperimentConfig, g: Nonlinearity) -> Result<Box<dyn Engine>> {
-    Ok(match cfg.engine {
-        EngineKind::Native => Box::new(NativeEngine::from_config(cfg, g)),
-        EngineKind::Pjrt => Box::new(PjrtEngine::from_config(cfg)?),
+    Ok(match (cfg.engine, cfg.precision) {
+        (EngineKind::Native, Precision::F64) => Box::new(NativeEngine::from_config(cfg, g)),
+        (EngineKind::Native, Precision::F32) => {
+            Box::new(CastNativeEngine::<f32>::from_config(cfg, g))
+        }
+        (EngineKind::Pjrt, Precision::F64) => Box::new(PjrtEngine::from_config(cfg)?),
+        (EngineKind::Pjrt, Precision::F32) => {
+            bail!("precision = \"f32\" requires the native engine")
+        }
     })
 }
 
@@ -260,6 +343,39 @@ mod tests {
         let xs = Mat64::zeros(3, cfg.m); // any chunk size works
         eng.submit_chunk(&xs).unwrap();
         assert_eq!(eng.samples_done(), 3);
+    }
+
+    #[test]
+    fn f32_engine_tracks_optimizer_and_reports_precision() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.precision = Precision::F32;
+        let mut eng = CastNativeEngine::<f32>::from_config(&cfg, Nonlinearity::Cube);
+        let mut rng = Pcg32::seed(2);
+        let xs = Mat64::from_fn(eng.chunk_size(), cfg.m, |_, _| rng.normal());
+        let b0 = eng.b();
+        eng.submit_chunk(&xs).unwrap();
+        assert_eq!(eng.samples_done(), eng.chunk_size() as u64);
+        assert!(eng.b().max_abs_diff(&b0) > 0.0);
+        assert!(eng.describe().starts_with("native-f32/"), "{}", eng.describe());
+        // Snapshot is the widened image of the f32 state: round-trips
+        // exactly through a narrow-and-widen.
+        let b = eng.b();
+        assert_eq!(b, b.cast::<f32>().cast::<f64>());
+        // reset_b narrows the warm start exactly (0.5 is representable).
+        eng.reset_b(crate::ica::init_b(cfg.n, cfg.m));
+        assert_eq!(eng.b(), crate::ica::init_b(cfg.n, cfg.m));
+    }
+
+    #[test]
+    fn make_engine_selects_precision() {
+        let mut cfg = ExperimentConfig::default();
+        let e64 = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        assert!(e64.describe().starts_with("native/"));
+        cfg.precision = Precision::F32;
+        let e32 = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        assert!(e32.describe().starts_with("native-f32/"));
+        cfg.engine = EngineKind::Pjrt;
+        assert!(make_engine(&cfg, Nonlinearity::Cube).is_err(), "pjrt+f32 must be rejected");
     }
 
     #[test]

@@ -14,6 +14,13 @@
 //! bounded channels, per-session state) — the single-stream
 //! [`server::run_streaming`] is now a thin one-session wrapper over the
 //! same [`server::SessionRunner`] the hub schedules.
+//!
+//! The request path is precision-generic: each session's engine runs the
+//! optimizer pipeline in the precision its config selects
+//! (`precision = "f32"` for the paper's 32-bit datapath,
+//! `"f64"` bit-exact default), while the ingest/monitor wire format stays
+//! `f64` — so one hub mixes f32 and f64 tenants freely (DESIGN.md
+//! §Precision).
 
 pub mod batcher;
 pub mod engine;
@@ -23,7 +30,7 @@ pub mod server;
 pub mod state;
 
 pub use batcher::Chunker;
-pub use engine::{make_engine, Engine, NativeEngine, PjrtEngine};
+pub use engine::{make_engine, CastNativeEngine, Engine, NativeEngine, PjrtEngine};
 pub use hub::{run_hub, run_scenario, Hub, HubMetrics, HubOptions, HubSummary, SessionReport};
 pub use monitor::{Monitor, MonitorPoint};
 pub use server::{

@@ -16,22 +16,27 @@
 
 use super::nonlinearity::{with_g, Nonlinearity};
 use super::Optimizer;
-use crate::linalg::{fused, FusedScratch, Mat64};
+use crate::linalg::{fused, FusedScratch, Mat, Scalar};
 
 /// Per-sample EASI SGD state + scratch (allocation-free `step`).
-pub struct EasiSgd {
-    b: Mat64,
+///
+/// Generic over the [`Scalar`] precision: `EasiSgd<f64>` (the default) is
+/// the bit-exact reference; `EasiSgd<f32>` runs the paper's 32-bit
+/// datapath precision end to end (hyperparameters stay `f64` in the
+/// config space and are narrowed once per step).
+pub struct EasiSgd<T: Scalar = f64> {
+    b: Mat<T>,
     mu: f64,
     g: Nonlinearity,
     normalized: bool,
     samples: u64,
     // Scratch reused across steps (hot path: zero allocations).
-    scratch: FusedScratch,
+    scratch: FusedScratch<T>,
 }
 
-impl EasiSgd {
+impl<T: Scalar> EasiSgd<T> {
     /// Create with an explicit initial separation matrix `b0` (n × m).
-    pub fn new(b0: Mat64, mu: f64, g: Nonlinearity) -> Self {
+    pub fn new(b0: Mat<T>, mu: f64, g: Nonlinearity) -> Self {
         let (n, m) = b0.shape();
         assert!(mu > 0.0, "mu must be positive");
         Self {
@@ -48,8 +53,8 @@ impl EasiSgd {
     /// standard EASI warm start (any full-rank B₀ works; random inits are
     /// drawn by the convergence experiments).
     pub fn with_identity_init(n: usize, m: usize, mu: f64, g: Nonlinearity) -> Self {
-        let mut b0 = Mat64::eye(n, m);
-        b0.scale(0.5);
+        let mut b0 = Mat::<T>::eye(n, m);
+        b0.scale(T::scalar_from_f64(0.5));
         Self::new(b0, mu, g)
     }
 
@@ -82,25 +87,27 @@ impl EasiSgd {
     /// the PJRT parity tests, and the normalized update (whose per-sample
     /// denominators are real divisions the fused plain-form kernel omits).
     pub fn relative_gradient(
-        b: &Mat64,
-        x: &[f64],
+        b: &Mat<T>,
+        x: &[T],
         g: Nonlinearity,
         normalized: bool,
         mu: f64,
-        y: &mut [f64],
-        gy: &mut [f64],
-        h_out: &mut Mat64,
+        y: &mut [T],
+        gy: &mut [T],
+        h_out: &mut Mat<T>,
     ) {
         b.matvec_into(x, y);
         g.apply_slice(y, gy);
         let n = y.len();
+        let one = T::one();
         // Normalization denominators (1 when disabled).
         let (d1, d2) = if normalized {
-            let yy: f64 = y.iter().map(|v| v * v).sum();
-            let yg: f64 = y.iter().zip(gy.iter()).map(|(a, b)| a * b).sum();
-            (1.0 + mu * yy, 1.0 + mu * yg.abs())
+            let mu_t = T::scalar_from_f64(mu);
+            let yy: T = y.iter().map(|&v| v * v).sum();
+            let yg: T = y.iter().zip(gy.iter()).map(|(&a, &b)| a * b).sum();
+            (one + mu_t * yy, one + mu_t * yg.abs())
         } else {
-            (1.0, 1.0)
+            (one, one)
         };
         // H = (y yᵀ − I)/d1 + (g yᵀ − y gᵀ)/d2
         for i in 0..n {
@@ -110,18 +117,19 @@ impl EasiSgd {
             for j in 0..n {
                 row[j] = (yi * y[j]) / d1 + (gi * y[j] - yi * gy[j]) / d2;
             }
-            row[i] -= 1.0 / d1;
+            row[i] -= one / d1;
         }
     }
 
     /// Estimated components for the current B (inference path).
-    pub fn separate_into(&self, x: &[f64], y_out: &mut [f64]) {
+    pub fn separate_into(&self, x: &[T], y_out: &mut [T]) {
         self.b.matvec_into(x, y_out);
     }
 }
 
-impl Optimizer for EasiSgd {
-    fn step(&mut self, x: &[f64]) {
+impl<T: Scalar> Optimizer<T> for EasiSgd<T> {
+    fn step(&mut self, x: &[T]) {
+        let mu_t = T::scalar_from_f64(self.mu);
         if self.normalized {
             // Normalized form: the per-sample denominators are real work,
             // so it keeps the unfused reference path.
@@ -137,22 +145,22 @@ impl Optimizer for EasiSgd {
             );
             // B ← B − μ H B
             self.scratch.h.matmul_into(&self.b, &mut self.scratch.hb);
-            self.b.axpy(-self.mu, &self.scratch.hb);
+            self.b.axpy(-mu_t, &self.scratch.hb);
         } else {
             // Plain form (the paper's hardware): the fused kernel, one
             // pass per sample — bit-identical to the sequence above with
             // `normalized = false` (pinned by tests/fused_hotpath.rs).
-            let (mu, b, s) = (self.mu, &mut self.b, &mut self.scratch);
-            with_g!(self.g, gf => fused::relative_gradient_step_into(b, x, gf, mu, s));
+            let (b, s) = (&mut self.b, &mut self.scratch);
+            with_g!(T, self.g, gf => fused::relative_gradient_step_into(b, x, gf, mu_t, s));
         }
         self.samples += 1;
     }
 
-    fn b(&self) -> &Mat64 {
+    fn b(&self) -> &Mat<T> {
         &self.b
     }
 
-    fn b_mut(&mut self) -> &mut Mat64 {
+    fn b_mut(&mut self) -> &mut Mat<T> {
         &mut self.b
     }
 
@@ -168,6 +176,7 @@ impl Optimizer for EasiSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Mat64;
     use crate::signal::{Dataset, Pcg32};
     use crate::testkit::{check, Config};
 

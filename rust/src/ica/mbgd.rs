@@ -10,24 +10,26 @@
 
 use super::nonlinearity::{with_g, Nonlinearity};
 use super::Optimizer;
-use crate::linalg::{fused, FusedScratch, Mat64};
+use crate::linalg::{fused, FusedScratch, Mat, Scalar};
 
-/// EASI with plain mini-batch averaging.
-pub struct Mbgd {
-    b: Mat64,
+/// EASI with plain mini-batch averaging. Generic over the [`Scalar`]
+/// precision like its siblings (`Mbgd<f32>` is the GPU-style datapath at
+/// the paper's 32-bit width; `Mbgd<f64>` the bit-exact reference).
+pub struct Mbgd<T: Scalar = f64> {
+    b: Mat<T>,
     mu: f64,
     p: usize,
     g: Nonlinearity,
     samples: u64,
     p_idx: usize,
     /// Running sum of H over the current batch.
-    hsum: Mat64,
+    hsum: Mat<T>,
     // Scratch
-    scratch: FusedScratch,
+    scratch: FusedScratch<T>,
 }
 
-impl Mbgd {
-    pub fn new(b0: Mat64, mu: f64, p: usize, g: Nonlinearity) -> Self {
+impl<T: Scalar> Mbgd<T> {
+    pub fn new(b0: Mat<T>, mu: f64, p: usize, g: Nonlinearity) -> Self {
         assert!(mu > 0.0 && p >= 1);
         let (n, m) = b0.shape();
         Self {
@@ -36,37 +38,44 @@ impl Mbgd {
             g,
             samples: 0,
             p_idx: 0,
-            hsum: Mat64::zeros(n, n),
+            hsum: Mat::zeros(n, n),
             scratch: FusedScratch::new(n, m),
             b: b0,
         }
     }
 
     pub fn with_identity_init(n: usize, m: usize, mu: f64, p: usize, g: Nonlinearity) -> Self {
-        let mut b0 = Mat64::eye(n, m);
-        b0.scale(0.5);
+        let mut b0 = Mat::<T>::eye(n, m);
+        b0.scale(T::scalar_from_f64(0.5));
         Self::new(b0, mu, p, g)
     }
 
     pub fn batch_size(&self) -> usize {
         self.p
     }
+
+    /// `−μ/P`, narrowed the same way both update paths need it.
+    fn batch_alpha(&self) -> T {
+        T::scalar_from_f64(-self.mu / self.p as f64)
+    }
 }
 
-impl Optimizer for Mbgd {
-    fn step(&mut self, x: &[f64]) {
+impl<T: Scalar> Optimizer<T> for Mbgd<T> {
+    fn step(&mut self, x: &[T]) {
         let (b, s) = (&self.b, &mut self.scratch);
-        with_g!(self.g, gf => {
+        with_g!(T, self.g, gf => {
             fused::relative_gradient_into(b, x, gf, &mut s.y, &mut s.gy, &mut s.h);
         });
-        self.hsum.axpy(1.0, &self.scratch.h);
+        // Same fold as the block kernel (bit-identical at alpha = 1 under
+        // every feature set), keeping step_batch chunk-invariant.
+        fused::axpy_fold(&mut self.hsum, T::one(), &self.scratch.h);
         self.p_idx += 1;
         self.samples += 1;
         if self.p_idx == self.p {
             // B ← B − μ (ΣH / P) B
-            let alpha = -self.mu / self.p as f64;
+            let alpha = self.batch_alpha();
             fused::apply_accumulated_update(&mut self.b, &self.hsum, alpha, &mut self.scratch.hb);
-            self.hsum.fill(0.0);
+            self.hsum.fill(T::zero());
             self.p_idx = 0;
         }
     }
@@ -75,7 +84,7 @@ impl Optimizer for Mbgd {
     /// kernel (unit weight, no decay) with one update application per
     /// batch; alignment and tail fall back to per-sample steps.
     /// Bit-identical to looping [`Optimizer::step`] for any chunking.
-    fn step_batch(&mut self, xs: &Mat64) {
+    fn step_batch(&mut self, xs: &Mat<T>) {
         let rows = xs.rows();
         let mut t = 0;
         while t < rows && self.p_idx != 0 {
@@ -84,12 +93,14 @@ impl Optimizer for Mbgd {
         }
         while rows - t >= self.p {
             let (b, hsum, s) = (&self.b, &mut self.hsum, &mut self.scratch);
-            with_g!(self.g, gf => {
-                fused::accumulate_gradient_block(b, xs, t..t + self.p, gf, 1.0, 1.0, hsum, s);
+            with_g!(T, self.g, gf => {
+                fused::accumulate_gradient_block(
+                    b, xs, t..t + self.p, gf, T::one(), T::one(), hsum, s,
+                );
             });
-            let alpha = -self.mu / self.p as f64;
+            let alpha = self.batch_alpha();
             fused::apply_accumulated_update(&mut self.b, &self.hsum, alpha, &mut self.scratch.hb);
-            self.hsum.fill(0.0);
+            self.hsum.fill(T::zero());
             self.samples += self.p as u64;
             t += self.p;
         }
@@ -99,11 +110,11 @@ impl Optimizer for Mbgd {
         }
     }
 
-    fn b(&self) -> &Mat64 {
+    fn b(&self) -> &Mat<T> {
         &self.b
     }
 
-    fn b_mut(&mut self) -> &mut Mat64 {
+    fn b_mut(&mut self) -> &mut Mat<T> {
         &mut self.b
     }
 
@@ -120,6 +131,7 @@ impl Optimizer for Mbgd {
 mod tests {
     use super::*;
     use crate::ica::EasiSgd;
+    use crate::linalg::Mat64;
     use crate::signal::{Dataset, Pcg32};
 
     #[test]

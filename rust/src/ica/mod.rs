@@ -34,26 +34,30 @@ pub use smbgd::{Smbgd, SmbgdParams};
 pub use whiten::Whitener;
 
 use crate::config::{OptimizerConfig, OptimizerKind};
-use crate::linalg::Mat64;
+use crate::linalg::{Mat, Mat64, Scalar};
 
-/// A streaming separation-matrix learner (the paper's training datapath).
+/// A streaming separation-matrix learner (the paper's training datapath),
+/// generic over the request path's [`Scalar`] precision.
 ///
 /// One `step` consumes one observation sample `x` (length m). The current
 /// estimate is `b()` (n × m); estimated components are `y = B x`.
-pub trait Optimizer: Send {
+/// `Optimizer` without type arguments means `Optimizer<f64>` — the
+/// bit-exact default every existing caller gets; `Optimizer<f32>` is the
+/// paper's 32-bit datapath precision, built via [`make_optimizer_t`].
+pub trait Optimizer<T: Scalar = f64>: Send {
     /// Consume one sample, possibly updating the separation matrix.
-    fn step(&mut self, x: &[f64]);
+    fn step(&mut self, x: &[T]);
     /// Current separation matrix (n × m).
-    fn b(&self) -> &Mat64;
+    fn b(&self) -> &Mat<T>;
     /// Mutable access (used by the coordinator to install snapshots).
-    fn b_mut(&mut self) -> &mut Mat64;
+    fn b_mut(&mut self) -> &mut Mat<T>;
     /// Total samples consumed.
     fn samples_seen(&self) -> u64;
     /// Optimizer name for reports.
     fn name(&self) -> &'static str;
 
     /// Feed a whole row-major batch (default: loop over rows).
-    fn step_batch(&mut self, xs: &Mat64) {
+    fn step_batch(&mut self, xs: &Mat<T>) {
         for t in 0..xs.rows() {
             self.step(xs.row(t));
         }
@@ -61,7 +65,7 @@ pub trait Optimizer: Send {
 }
 
 /// Build an optimizer from an [`OptimizerConfig`] with an identity-like
-/// warm start (`B₀ = 0.5·[I 0]`).
+/// warm start (`B₀ = 0.5·[I 0]`) — the `f64` request path.
 pub fn make_optimizer(
     cfg: &OptimizerConfig,
     n: usize,
@@ -71,12 +75,34 @@ pub fn make_optimizer(
     make_optimizer_with_init(cfg, init_b(n, m), g)
 }
 
-/// Build an optimizer from a config with an explicit initial matrix.
+/// Build an optimizer from a config with an explicit initial matrix
+/// (`f64` request path).
 pub fn make_optimizer_with_init(
     cfg: &OptimizerConfig,
     b0: Mat64,
     g: Nonlinearity,
 ) -> Box<dyn Optimizer> {
+    make_optimizer_with_init_t::<f64>(cfg, b0, g)
+}
+
+/// Precision-generic factory: build an optimizer running entirely in `T`
+/// with the identity-like warm start. The coordinator uses
+/// `make_optimizer_t::<f32>` for `precision = "f32"` tenants.
+pub fn make_optimizer_t<T: Scalar>(
+    cfg: &OptimizerConfig,
+    n: usize,
+    m: usize,
+    g: Nonlinearity,
+) -> Box<dyn Optimizer<T>> {
+    make_optimizer_with_init_t(cfg, init_b_t::<T>(n, m), g)
+}
+
+/// Precision-generic factory with an explicit initial matrix.
+pub fn make_optimizer_with_init_t<T: Scalar>(
+    cfg: &OptimizerConfig,
+    b0: Mat<T>,
+    g: Nonlinearity,
+) -> Box<dyn Optimizer<T>> {
     match cfg.kind {
         OptimizerKind::Sgd => Box::new(EasiSgd::new(b0, cfg.mu, g)),
         OptimizerKind::Smbgd => Box::new(Smbgd::new(
@@ -90,8 +116,15 @@ pub fn make_optimizer_with_init(
 
 /// The standard identity-like warm start `B₀ = 0.5·[I 0]` (n × m).
 pub fn init_b(n: usize, m: usize) -> Mat64 {
-    let mut b = Mat64::eye(n, m);
-    b.scale(0.5);
+    init_b_t::<f64>(n, m)
+}
+
+/// Precision-generic identity-like warm start. `0.5` is exactly
+/// representable in every binary float, so `init_b_t::<f32>` is the
+/// narrowed image of [`init_b`] bit-for-bit.
+pub fn init_b_t<T: Scalar>(n: usize, m: usize) -> Mat<T> {
+    let mut b = Mat::<T>::eye(n, m);
+    b.scale(T::scalar_from_f64(0.5));
     b
 }
 

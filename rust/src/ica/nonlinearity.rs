@@ -17,6 +17,8 @@
 //!   ReLU-style unit computes once oddness (required for EASI's
 //!   antisymmetric term) is restored.
 
+use crate::linalg::Scalar;
+
 /// Elementwise nonlinearity used in the relative-gradient computation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Nonlinearity {
@@ -30,9 +32,10 @@ pub enum Nonlinearity {
 }
 
 impl Nonlinearity {
-    /// Apply g elementwise.
+    /// Apply g elementwise (generic over the request path's [`Scalar`]
+    /// precision — the paper's hardware evaluates g in 32-bit float).
     #[inline(always)]
-    pub fn apply(self, y: f64) -> f64 {
+    pub fn apply<T: Scalar>(self, y: T) -> T {
         match self {
             Self::Cube => y * y * y,
             Self::Tanh => y.tanh(),
@@ -42,7 +45,7 @@ impl Nonlinearity {
 
     /// Apply g to a slice, writing into `out`.
     #[inline]
-    pub fn apply_slice(self, y: &[f64], out: &mut [f64]) {
+    pub fn apply_slice<T: Scalar>(self, y: &[T], out: &mut [T]) {
         debug_assert_eq!(y.len(), out.len());
         match self {
             // Monomorphized loops: keeps the hot path free of per-element
@@ -108,27 +111,28 @@ impl Nonlinearity {
 }
 
 /// Dispatch a runtime [`Nonlinearity`] to a *monomorphized* closure bound
-/// as `$gf`, then evaluate `$body` once: the fused `linalg` kernels are
-/// generic over `Fn(f64) -> f64`, so each arm compiles its own branch-free
-/// inner loop and the match happens once per kernel call, not per element
-/// (the same trick `apply_slice` uses, lifted to whole kernels).
+/// as `$gf` over scalar type `$t`, then evaluate `$body` once: the fused
+/// `linalg` kernels are generic over `Fn(T) -> T`, so each arm compiles
+/// its own branch-free inner loop per precision and the match happens once
+/// per kernel call, not per element (the same trick `apply_slice` uses,
+/// lifted to whole kernels).
 ///
 /// ```ignore
-/// with_g!(self.g, gf => fused::relative_gradient_step_into(b, x, gf, mu, s));
+/// with_g!(T, self.g, gf => fused::relative_gradient_step_into(b, x, gf, mu, s));
 /// ```
 macro_rules! with_g {
-    ($g:expr, $gf:ident => $body:expr) => {
+    ($t:ty, $g:expr, $gf:ident => $body:expr) => {
         match $g {
             $crate::ica::Nonlinearity::Cube => {
-                let $gf = |v: f64| v * v * v;
+                let $gf = |v: $t| v * v * v;
                 $body
             }
             $crate::ica::Nonlinearity::Tanh => {
-                let $gf = |v: f64| f64::tanh(v);
+                let $gf = |v: $t| <$t as $crate::linalg::Scalar>::tanh(v);
                 $body
             }
             $crate::ica::Nonlinearity::SignedSquare => {
-                let $gf = |v: f64| v * f64::abs(v);
+                let $gf = |v: $t| v * <$t as $crate::linalg::Scalar>::abs(v);
                 $body
             }
         }
@@ -166,8 +170,21 @@ mod tests {
         // The with_g! closures feed the fused kernels; they must agree
         // with apply()/apply_slice() to the bit or the fused path drifts.
         for g in [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare] {
-            for &y in &[0.3, -1.2, 2.0, -0.0] {
-                let via_macro = with_g!(g, gf => gf(y));
+            for &y in &[0.3f64, -1.2, 2.0, -0.0] {
+                let via_macro = with_g!(f64, g, gf => gf(y));
+                assert_eq!(via_macro.to_bits(), g.apply(y).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn f32_macro_dispatch_matches_generic_apply_bitwise() {
+        // The same contract at the paper's 32-bit precision: the f32
+        // closures the optimizers feed the fused kernels must match the
+        // generic apply::<f32>() to the bit.
+        for g in [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare] {
+            for &y in &[0.3f32, -1.2, 2.0, -0.0] {
+                let via_macro = with_g!(f32, g, gf => gf(y));
                 assert_eq!(via_macro.to_bits(), g.apply(y).to_bits());
             }
         }

@@ -10,7 +10,7 @@
 //! quantifies the trade-off.
 
 use super::Optimizer;
-use crate::linalg::Mat64;
+use crate::linalg::{Mat, Scalar};
 
 /// A learning-rate schedule μ(t).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -63,14 +63,16 @@ impl MuSchedule {
 ///
 /// Works with [`super::EasiSgd`] (the only optimizer whose per-sample μ is
 /// well-defined; SMBGD's μ interacts with β/γ so scheduling it is a
-/// different algorithm — see module docs).
-pub struct ScheduledSgd {
-    inner: super::EasiSgd,
+/// different algorithm — see module docs). Generic over the request
+/// path's [`Scalar`] precision like the optimizer it wraps; the schedule
+/// itself always evaluates μ(t) in `f64` (hyperparameter space).
+pub struct ScheduledSgd<T: Scalar = f64> {
+    inner: super::EasiSgd<T>,
     schedule: MuSchedule,
 }
 
-impl ScheduledSgd {
-    pub fn new(inner: super::EasiSgd, schedule: MuSchedule) -> Self {
+impl<T: Scalar> ScheduledSgd<T> {
+    pub fn new(inner: super::EasiSgd<T>, schedule: MuSchedule) -> Self {
         schedule.validate();
         Self { inner, schedule }
     }
@@ -84,18 +86,18 @@ impl ScheduledSgd {
     }
 }
 
-impl Optimizer for ScheduledSgd {
-    fn step(&mut self, x: &[f64]) {
+impl<T: Scalar> Optimizer<T> for ScheduledSgd<T> {
+    fn step(&mut self, x: &[T]) {
         let mu = self.schedule.mu_at(self.inner.samples_seen());
         self.inner.set_mu(mu);
         self.inner.step(x);
     }
 
-    fn b(&self) -> &Mat64 {
+    fn b(&self) -> &Mat<T> {
         self.inner.b()
     }
 
-    fn b_mut(&mut self) -> &mut Mat64 {
+    fn b_mut(&mut self) -> &mut Mat<T> {
         self.inner.b_mut()
     }
 

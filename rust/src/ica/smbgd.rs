@@ -21,7 +21,7 @@
 
 use super::nonlinearity::{with_g, Nonlinearity};
 use super::Optimizer;
-use crate::linalg::{fused, FusedScratch, Mat64};
+use crate::linalg::{fused, FusedScratch, Mat, Scalar};
 
 /// SMBGD hyperparameters (paper §IV notation).
 #[derive(Clone, Copy, Debug)]
@@ -69,9 +69,10 @@ impl SmbgdParams {
 }
 
 /// EASI with SMBGD (Fig. 2) — sample-sequential model of the pipelined
-/// hardware.
-pub struct Smbgd {
-    b: Mat64,
+/// hardware. Generic over the [`Scalar`] precision (`Smbgd<f32>` is the
+/// paper's 32-bit datapath; `Smbgd<f64>` the bit-exact reference).
+pub struct Smbgd<T: Scalar = f64> {
+    b: Mat<T>,
     params: SmbgdParams,
     g: Nonlinearity,
     samples: u64,
@@ -80,15 +81,15 @@ pub struct Smbgd {
     /// Completed (latched) mini-batch updates (the paper's `k`).
     batches: u64,
     /// The running accumulator Ĥ (the paper's Ĥₖᵖ).
-    hhat: Mat64,
+    hhat: Mat<T>,
     /// Ĥ at the end of the previous mini-batch (the paper's Ĥₖ₋₁ᴾ).
-    hhat_prev: Mat64,
+    hhat_prev: Mat<T>,
     // Scratch
-    scratch: FusedScratch,
+    scratch: FusedScratch<T>,
 }
 
-impl Smbgd {
-    pub fn new(b0: Mat64, params: SmbgdParams, g: Nonlinearity) -> Self {
+impl<T: Scalar> Smbgd<T> {
+    pub fn new(b0: Mat<T>, params: SmbgdParams, g: Nonlinearity) -> Self {
         params.validate();
         let (n, m) = b0.shape();
         Self {
@@ -97,8 +98,8 @@ impl Smbgd {
             samples: 0,
             p_idx: 0,
             batches: 0,
-            hhat: Mat64::zeros(n, n),
-            hhat_prev: Mat64::zeros(n, n),
+            hhat: Mat::zeros(n, n),
+            hhat_prev: Mat::zeros(n, n),
             scratch: FusedScratch::new(n, m),
             b: b0,
         }
@@ -106,8 +107,8 @@ impl Smbgd {
 
     /// Identity-like warm start, matching [`super::EasiSgd::with_identity_init`].
     pub fn with_identity_init(n: usize, m: usize, params: SmbgdParams, g: Nonlinearity) -> Self {
-        let mut b0 = Mat64::eye(n, m);
-        b0.scale(0.5);
+        let mut b0 = Mat::<T>::eye(n, m);
+        b0.scale(T::scalar_from_f64(0.5));
         Self::new(b0, params, g)
     }
 
@@ -116,12 +117,12 @@ impl Smbgd {
     }
 
     /// Current accumulator (exposed for parity tests with the L1 kernel).
-    pub fn hhat(&self) -> &Mat64 {
+    pub fn hhat(&self) -> &Mat<T> {
         &self.hhat
     }
 
     /// Accumulator carried across mini-batches (Ĥₖ₋₁ᴾ).
-    pub fn hhat_prev(&self) -> &Mat64 {
+    pub fn hhat_prev(&self) -> &Mat<T> {
         &self.hhat_prev
     }
 
@@ -147,49 +148,59 @@ impl Smbgd {
     /// and loop setup happen once and the `Ĥ·B` matmul is applied by the
     /// fused update kernel — the software shape of the paper's pipelined
     /// mini-batch datapath (Fig. 2).
-    fn block_step(&mut self, xs: &Mat64, start: usize) {
+    fn block_step(&mut self, xs: &Mat<T>, start: usize) {
         debug_assert_eq!(self.p_idx, 0, "block_step mid-batch");
         let prm = self.params;
+        let (mu, gamma, beta) = (
+            T::scalar_from_f64(prm.mu),
+            T::scalar_from_f64(prm.gamma),
+            T::scalar_from_f64(prm.beta),
+        );
         // Ĥ ← γ Ĥ_prev  (Eq. 1, p = 0)
         self.hhat.copy_from(&self.hhat_prev);
-        self.hhat.scale(prm.gamma);
+        self.hhat.scale(gamma);
         // Ĥ ← β Ĥ + μ H(B, x_p) for each sample, at the stale B (Eq. 1).
         let (b, hhat, s) = (&self.b, &mut self.hhat, &mut self.scratch);
         let rows = start..start + prm.p;
-        with_g!(self.g, gf => {
-            fused::accumulate_gradient_block(b, xs, rows, gf, prm.mu, prm.beta, hhat, s);
+        with_g!(T, self.g, gf => {
+            fused::accumulate_gradient_block(b, xs, rows, gf, mu, beta, hhat, s);
         });
         // End of mini-batch: B ← B − Ĥ B, latch Ĥ for momentum.
-        fused::apply_accumulated_update(&mut self.b, &self.hhat, -1.0, &mut self.scratch.hb);
+        fused::apply_accumulated_update(&mut self.b, &self.hhat, -T::one(), &mut self.scratch.hb);
         self.hhat_prev.copy_from(&self.hhat);
         self.samples += prm.p as u64;
         self.batches += 1;
     }
 }
 
-impl Optimizer for Smbgd {
+impl<T: Scalar> Optimizer<T> for Smbgd<T> {
     /// Feed one sample; applies the B update when the mini-batch fills.
     ///
     /// Matches the hardware exactly: one sample enters the pipeline per
     /// call, the matrix update fires every P-th call.
-    fn step(&mut self, x: &[f64]) {
+    fn step(&mut self, x: &[T]) {
         // H(B, x_p) with the STALE B (unchanged within the mini-batch),
         // via the fused triangular gradient kernel.
         let (b, s) = (&self.b, &mut self.scratch);
-        with_g!(self.g, gf => {
+        with_g!(T, self.g, gf => {
             fused::relative_gradient_into(b, x, gf, &mut s.y, &mut s.gy, &mut s.h);
         });
+        let mu = T::scalar_from_f64(self.params.mu);
 
+        // The μ·H folds go through the same fused::axpy_fold the block
+        // kernel uses, so step_batch stays chunk-invariant under `fma`
+        // too (contraction identical on both paths); on the default build
+        // axpy_fold IS Mat::axpy, bit-identically.
         if self.p_idx == 0 {
             // Ĥ ← γ Ĥ_prev + μ H   (Eq. 1, p = 0; γ is 0 for k = 0 because
             // hhat_prev starts as the zero matrix.)
             self.hhat.copy_from(&self.hhat_prev);
-            self.hhat.scale(self.params.gamma);
-            self.hhat.axpy(self.params.mu, &self.scratch.h);
+            self.hhat.scale(T::scalar_from_f64(self.params.gamma));
+            fused::axpy_fold(&mut self.hhat, mu, &self.scratch.h);
         } else {
             // Ĥ ← β Ĥ + μ H        (Eq. 1, 0 < p < P)
-            self.hhat.scale(self.params.beta);
-            self.hhat.axpy(self.params.mu, &self.scratch.h);
+            self.hhat.scale(T::scalar_from_f64(self.params.beta));
+            fused::axpy_fold(&mut self.hhat, mu, &self.scratch.h);
         }
 
         self.p_idx += 1;
@@ -197,7 +208,8 @@ impl Optimizer for Smbgd {
 
         if self.p_idx == self.params.p {
             // End of mini-batch: B ← B − Ĥ B, latch Ĥ for momentum, reset.
-            fused::apply_accumulated_update(&mut self.b, &self.hhat, -1.0, &mut self.scratch.hb);
+            let (b, hb) = (&mut self.b, &mut self.scratch.hb);
+            fused::apply_accumulated_update(b, &self.hhat, -T::one(), hb);
             self.hhat_prev.copy_from(&self.hhat);
             self.p_idx = 0;
             self.batches += 1;
@@ -210,7 +222,7 @@ impl Optimizer for Smbgd {
     /// [`Optimizer::step`] regardless of how the stream is chunked
     /// (pinned by tests/fused_hotpath.rs), so the coordinator's chunking
     /// stays algorithmically invisible.
-    fn step_batch(&mut self, xs: &Mat64) {
+    fn step_batch(&mut self, xs: &Mat<T>) {
         let p = self.params.p;
         let rows = xs.rows();
         let mut t = 0;
@@ -231,11 +243,11 @@ impl Optimizer for Smbgd {
         }
     }
 
-    fn b(&self) -> &Mat64 {
+    fn b(&self) -> &Mat<T> {
         &self.b
     }
 
-    fn b_mut(&mut self) -> &mut Mat64 {
+    fn b_mut(&mut self) -> &mut Mat<T> {
         &mut self.b
     }
 
@@ -252,6 +264,7 @@ impl Optimizer for Smbgd {
 mod tests {
     use super::*;
     use crate::ica::EasiSgd;
+    use crate::linalg::Mat64;
     use crate::signal::{Dataset, Pcg32};
 
     fn params(mu: f64, gamma: f64, beta: f64, p: usize) -> SmbgdParams {
@@ -444,6 +457,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "P >= 1")]
     fn zero_p_rejected() {
-        let _ = Smbgd::with_identity_init(2, 4, params(0.01, 0.5, 0.9, 0), Nonlinearity::Cube);
+        let _ =
+            Smbgd::<f64>::with_identity_init(2, 4, params(0.01, 0.5, 0.9, 0), Nonlinearity::Cube);
     }
 }

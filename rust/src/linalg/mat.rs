@@ -279,6 +279,17 @@ impl<T: Scalar> Mat<T> {
             data: self.data.iter().map(|v| U::scalar_from_f64(v.scalar_to_f64())).collect(),
         }
     }
+
+    /// Convert element type into caller storage (same shape) — the
+    /// allocation-free form used on the mixed-precision request path
+    /// (`coordinator::engine` narrows each f64 ingest chunk once per
+    /// submit).
+    pub fn cast_into<U: Scalar>(&self, out: &mut Mat<U>) {
+        assert_eq!(self.shape(), out.shape(), "cast_into: shape mismatch");
+        for (o, v) in out.data.iter_mut().zip(self.data.iter()) {
+            *o = U::scalar_from_f64(v.scalar_to_f64());
+        }
+    }
 }
 
 impl<T: Scalar> Index<(usize, usize)> for Mat<T> {

@@ -39,6 +39,12 @@ pub trait Scalar:
     fn abs(self) -> Self;
     /// Square root.
     fn sqrt(self) -> Self;
+    /// Hyperbolic tangent (the classic EASI nonlinearity).
+    fn tanh(self) -> Self;
+    /// Fused multiply-add `self * a + b` (one rounding). Only the
+    /// `fma`-feature kernels call this; on targets without a hardware FMA
+    /// unit it lowers to a libm call, so the feature is opt-in.
+    fn mul_add(self, a: Self, b: Self) -> Self;
     /// IEEE maximum of two values.
     fn max(self, other: Self) -> Self;
     /// True for anything that is neither infinite nor NaN.
@@ -47,6 +53,8 @@ pub trait Scalar:
     fn scalar_from_f64(v: f64) -> Self;
     /// Lossless widening to `f64` (for accumulation and metrics).
     fn scalar_to_f64(self) -> f64;
+    /// Short type name for reports/engine descriptions ("f32" / "f64").
+    fn type_name() -> &'static str;
 }
 
 impl Scalar for f32 {
@@ -67,6 +75,14 @@ impl Scalar for f32 {
         f32::sqrt(self)
     }
     #[inline(always)]
+    fn tanh(self) -> Self {
+        f32::tanh(self)
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f32::mul_add(self, a, b)
+    }
+    #[inline(always)]
     fn max(self, other: Self) -> Self {
         f32::max(self, other)
     }
@@ -81,6 +97,10 @@ impl Scalar for f32 {
     #[inline(always)]
     fn scalar_to_f64(self) -> f64 {
         self as f64
+    }
+    #[inline(always)]
+    fn type_name() -> &'static str {
+        "f32"
     }
 }
 
@@ -102,6 +122,14 @@ impl Scalar for f64 {
         f64::sqrt(self)
     }
     #[inline(always)]
+    fn tanh(self) -> Self {
+        f64::tanh(self)
+    }
+    #[inline(always)]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f64::mul_add(self, a, b)
+    }
+    #[inline(always)]
     fn max(self, other: Self) -> Self {
         f64::max(self, other)
     }
@@ -116,5 +144,9 @@ impl Scalar for f64 {
     #[inline(always)]
     fn scalar_to_f64(self) -> f64 {
         self
+    }
+    #[inline(always)]
+    fn type_name() -> &'static str {
+        "f64"
     }
 }

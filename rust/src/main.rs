@@ -5,7 +5,7 @@
 
 use anyhow::{bail, Result};
 use easi_ica::cli::{usage, Args};
-use easi_ica::config::{EngineKind, ExperimentConfig, HubScenario, OptimizerKind};
+use easi_ica::config::{EngineKind, ExperimentConfig, HubScenario, OptimizerKind, Precision};
 use easi_ica::coordinator::{run_experiment, run_scenario, RunSummary};
 use easi_ica::experiments::{
     a1_hyper_sweep, a2_nonlinearity, a3_adaptive_tracking, e1_convergence, e3_depth_sweep,
@@ -86,8 +86,8 @@ fn resolve_artifacts(cfg: &mut ExperimentConfig, args: &Args) {
 /// `run` — stream an experiment through the coordinator.
 fn cmd_run(args: &Args) -> Result<()> {
     args.expect_only(&[
-        "config", "m", "n", "optimizer", "engine", "samples", "mu", "gamma", "beta", "p",
-        "mixing", "omega", "seed", "artifacts",
+        "config", "m", "n", "optimizer", "engine", "precision", "samples", "mu", "gamma",
+        "beta", "p", "mixing", "omega", "seed", "artifacts",
     ])?;
     let mut cfg = if let Some(path) = args.get("config") {
         ExperimentConfig::load(path)?
@@ -95,6 +95,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         ExperimentConfig::default()
     };
     apply_base_overrides(&mut cfg, args)?;
+    if let Some(p) = args.get("precision") {
+        cfg.precision = Precision::parse(p)?;
+    }
     if let Some(mx) = args.get("mixing") {
         cfg.signal.mixing = mx.to_string();
     }
@@ -103,12 +106,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.validate()?;
 
     println!(
-        "running: optimizer {}, m={} n={}, {} samples, mixing {}",
+        "running: optimizer {}, m={} n={}, {} samples, mixing {}, precision {}",
         cfg.optimizer.kind.name(),
         cfg.m,
         cfg.n,
         cfg.samples,
-        cfg.signal.mixing
+        cfg.signal.mixing,
+        cfg.precision.name()
     );
     let summary = run_experiment(&cfg, Nonlinearity::Cube)?;
     print_summary(&summary);
@@ -139,8 +143,9 @@ fn print_summary(s: &RunSummary) {
 /// `serve-many` — stream many concurrent sessions through the hub.
 fn cmd_serve_many(args: &Args) -> Result<()> {
     args.expect_only(&[
-        "config", "sessions", "shards", "samples", "capacity", "mixing", "mu", "gamma",
-        "beta", "p", "optimizer", "engine", "seed", "seed-stride", "m", "n", "artifacts",
+        "config", "sessions", "shards", "samples", "capacity", "mixing", "precision", "mu",
+        "gamma", "beta", "p", "optimizer", "engine", "seed", "seed-stride", "m", "n",
+        "artifacts",
     ])?;
     let mut sc = if let Some(path) = args.get("config") {
         HubScenario::load(path)?
@@ -156,17 +161,31 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
     if let Some(mx) = args.get("mixing") {
         sc.mixing = mx.split(',').map(|s| s.trim().to_string()).collect();
     }
+    if let Some(p) = args.get("precision") {
+        // Comma list cycled across sessions, like --mixing: f32,f64 runs
+        // single- and double-precision tenants side by side.
+        sc.precision = p
+            .split(',')
+            .map(|s| Precision::parse(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
     apply_base_overrides(&mut sc.base, args)?;
     resolve_artifacts(&mut sc.base, args);
     sc.validate()?;
 
     println!(
-        "serve-many: {} sessions on {} shard(s), {} samples each, optimizer {}, mixing {:?}",
+        "serve-many: {} sessions on {} shard(s), {} samples each, optimizer {}, mixing {:?}, \
+         precision {:?}",
         sc.sessions,
         sc.shards,
         sc.base.samples,
         sc.base.optimizer.kind.name(),
         if sc.mixing.is_empty() { vec![sc.base.signal.mixing.clone()] } else { sc.mixing.clone() },
+        if sc.precision.is_empty() {
+            vec![sc.base.precision.name().to_string()]
+        } else {
+            sc.precision.iter().map(|p| p.name().to_string()).collect()
+        },
     );
     let summary = run_scenario(&sc, Nonlinearity::Cube)?;
     print!("{}", summary.render_table());
@@ -307,7 +326,9 @@ fn cmd_dump_datapath(args: &Args) -> Result<()> {
 /// report, and optionally gate against a checked-in baseline (the CI
 /// `perf-smoke` job runs `bench --quick --check BENCH_baseline.json`).
 fn cmd_bench(args: &Args) -> Result<()> {
-    args.expect_only(&["quick", "out", "check", "tolerance", "min-fused-speedup"])?;
+    args.expect_only(&[
+        "quick", "out", "check", "tolerance", "min-fused-speedup", "min-f32-speedup",
+    ])?;
     let quick = args.switch("quick");
     let report = easi_ica::perf::run_hotpath_suite(quick);
 
@@ -321,11 +342,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if let Some(baseline) = args.get("check") {
         let tolerance = args.get_f64("tolerance", 0.30)?;
         let floor = args.get_f64("min-fused-speedup", 0.0)?;
+        let f32_floor = args.get_f64("min-f32-speedup", 0.0)?;
         let gate = easi_ica::perf::gate_against_file(
             &report,
             std::path::Path::new(baseline),
             tolerance,
             floor,
+            f32_floor,
         )?;
         if gate.failures.is_empty() {
             println!(

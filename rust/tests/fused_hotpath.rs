@@ -10,10 +10,16 @@
 //! 2. **Zero steady-state allocation** — once an optimizer is
 //!    constructed, stepping it never touches the heap. Asserted with a
 //!    counting global allocator (per-thread, so parallel test threads
-//!    don't interfere).
+//!    don't interfere), for both the `f64` and `f32` instantiations.
+//!
+//! The bitwise pins are compiled out under `--features fma`, which
+//! contracts roundings on purpose (ROADMAP: trade bit-exactness
+//! deliberately, behind a gate); the zero-allocation contract and the
+//! tolerance/parity oracles (`tests/precision_parity.rs`) hold under
+//! every feature set.
 
 use easi_ica::ica::{EasiSgd, Mbgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
-use easi_ica::linalg::Mat64;
+use easi_ica::linalg::{Mat32, Mat64};
 use easi_ica::signal::Pcg32;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -65,6 +71,7 @@ fn allocations_in(f: impl FnOnce()) -> u64 {
 // Shared helpers.
 // ---------------------------------------------------------------------------
 
+#[cfg(not(feature = "fma"))]
 const ALL_G: [Nonlinearity; 3] =
     [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare];
 
@@ -84,6 +91,7 @@ fn assert_bits_equal(a: &Mat64, b: &Mat64, what: &str) {
 }
 
 /// The unfused reference SGD step (the exact pre-fusion code path).
+#[cfg(not(feature = "fma"))]
 fn unfused_sgd_step(
     b: &mut Mat64,
     x: &[f64],
@@ -103,6 +111,7 @@ fn unfused_sgd_step(
 // 1k-step bit-identity, all optimizers × all nonlinearities.
 // ---------------------------------------------------------------------------
 
+#[cfg(not(feature = "fma"))]
 #[test]
 fn sgd_trajectory_bit_identical_1k_steps() {
     for g in ALL_G {
@@ -129,6 +138,7 @@ fn sgd_trajectory_bit_identical_1k_steps() {
 
 /// Unfused per-sample SMBGD reference (Eq. 1 exactly as the pre-fusion
 /// `Smbgd::step` computed it).
+#[cfg(not(feature = "fma"))]
 struct SmbgdRef {
     b: Mat64,
     hhat: Mat64,
@@ -140,6 +150,7 @@ struct SmbgdRef {
     hb: Mat64,
 }
 
+#[cfg(not(feature = "fma"))]
 impl SmbgdRef {
     fn new(b0: Mat64, n: usize, m: usize) -> Self {
         Self {
@@ -175,6 +186,7 @@ impl SmbgdRef {
     }
 }
 
+#[cfg(not(feature = "fma"))]
 #[test]
 fn smbgd_trajectory_bit_identical_1k_steps_any_chunking() {
     // Chunk sizes deliberately misaligned with P=8 so step_batch exercises
@@ -220,6 +232,7 @@ fn smbgd_trajectory_bit_identical_1k_steps_any_chunking() {
     }
 }
 
+#[cfg(not(feature = "fma"))]
 #[test]
 fn mbgd_trajectory_bit_identical_1k_steps_any_chunking() {
     for (g, chunk) in [
@@ -264,6 +277,104 @@ fn mbgd_trajectory_bit_identical_1k_steps_any_chunking() {
             assert_bits_equal(fused.b(), &b_ref, &format!("mbgd {g:?} chunk={chunk} after {fed}"));
         }
         assert!(fused.b().is_finite());
+    }
+}
+
+
+// ---------------------------------------------------------------------------
+// Chunk invariance, fused-vs-fused — must hold under EVERY feature set.
+// ---------------------------------------------------------------------------
+
+/// `step_batch` must match a per-sample `step` loop of the *same*
+/// optimizer bit-for-bit at any chunk alignment, in `fma` builds too:
+/// the bitwise-vs-unfused pins above are compiled out under `fma`, but
+/// the coordinator's chunking being algorithmically invisible is a
+/// contract of the fused path itself (the per-sample accumulators fold
+/// through the same `fused::axpy_fold` as the block kernel).
+fn assert_chunk_invariant<O: Optimizer>(
+    mut batched: O,
+    mut looped: O,
+    m: usize,
+    seed: u64,
+    chunk: usize,
+) {
+    let mut rng = Pcg32::seed(seed);
+    let total = 400;
+    let mut fed = 0;
+    while fed < total {
+        let rows = chunk.min(total - fed);
+        let xs = Mat64::from_fn(rows, m, |_, _| rng.normal());
+        batched.step_batch(&xs);
+        for t in 0..rows {
+            looped.step(xs.row(t));
+        }
+        fed += rows;
+        assert_bits_equal(
+            batched.b(),
+            looped.b(),
+            &format!("chunk={chunk} after {fed}"),
+        );
+    }
+    assert!(batched.b().is_finite());
+}
+
+#[test]
+fn smbgd_step_batch_chunk_invariant_every_feature_set() {
+    for chunk in [1usize, 5, 13, 64] {
+        let mut rng = Pcg32::seed(0xC4A + chunk as u64);
+        let prm = SmbgdParams { mu: 0.002, gamma: 0.5, beta: 0.9, p: 8 };
+        let b0 = rand_mat(&mut rng, 2, 4);
+        let batched = Smbgd::new(b0.clone(), prm, Nonlinearity::Cube);
+        let looped = Smbgd::new(b0, prm, Nonlinearity::Cube);
+        assert_chunk_invariant(batched, looped, 4, 0xC4B + chunk as u64, chunk);
+    }
+}
+
+#[test]
+fn mbgd_step_batch_chunk_invariant_every_feature_set() {
+    for chunk in [1usize, 5, 13, 64] {
+        let mut rng = Pcg32::seed(0xC4C + chunk as u64);
+        let b0 = rand_mat(&mut rng, 2, 4);
+        let batched = Mbgd::new(b0.clone(), 0.02, 8, Nonlinearity::Cube);
+        let looped = Mbgd::new(b0, 0.02, 8, Nonlinearity::Cube);
+        assert_chunk_invariant(batched, looped, 4, 0xC4D + chunk as u64, chunk);
+    }
+}
+
+#[test]
+fn f32_smbgd_step_batch_chunk_invariant_every_feature_set() {
+    // The same contract at the paper's 32-bit precision.
+    for chunk in [1usize, 7, 13] {
+        let mut rng = Pcg32::seed(0xC4E + chunk as u64);
+        let prm = SmbgdParams { mu: 0.002, gamma: 0.5, beta: 0.9, p: 8 };
+        let b0 = Mat32::from_fn(2, 4, |_, _| rng.normal() as f32 * 0.3);
+        let mut batched = Smbgd::new(b0.clone(), prm, Nonlinearity::Cube);
+        let mut looped = Smbgd::new(b0, prm, Nonlinearity::Cube);
+        let total = 400;
+        let mut fed = 0;
+        while fed < total {
+            let rows = chunk.min(total - fed);
+            let xs = Mat32::from_fn(rows, 4, |_, _| rng.normal() as f32);
+            batched.step_batch(&xs);
+            for t in 0..rows {
+                looped.step(xs.row(t));
+            }
+            fed += rows;
+            for (i, (a, b)) in batched
+                .b()
+                .as_slice()
+                .iter()
+                .zip(looped.b().as_slice())
+                .enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "f32 chunk={chunk} after {fed}: element {i}: {a:e} vs {b:e}"
+                );
+            }
+        }
+        assert!(batched.b().is_finite());
     }
 }
 
@@ -322,4 +433,59 @@ fn mbgd_steady_state_step_does_not_allocate() {
         opt.step_batch(&xs);
     });
     assert_eq!(allocs, 0, "Mbgd steady-state stepping allocated");
+}
+
+// The same contract for the f32 instantiations: the single-precision
+// request path must be exactly as allocation-free as the f64 one.
+
+#[test]
+fn f32_sgd_steady_state_step_does_not_allocate() {
+    let mut rng = Pcg32::seed(4);
+    let xs = Mat32::from_fn(1000, 4, |_, _| rng.normal() as f32);
+    let mut opt = EasiSgd::<f32>::with_identity_init(2, 4, 0.002, Nonlinearity::Cube);
+    for t in 0..8 {
+        opt.step(xs.row(t));
+    }
+    let allocs = allocations_in(|| {
+        for t in 0..xs.rows() {
+            opt.step(xs.row(t));
+        }
+    });
+    assert_eq!(allocs, 0, "EasiSgd::<f32>::step allocated on the steady-state path");
+}
+
+#[test]
+fn f32_smbgd_steady_state_step_and_block_do_not_allocate() {
+    let mut rng = Pcg32::seed(5);
+    let xs = Mat32::from_fn(1024, 4, |_, _| rng.normal() as f32);
+    let prm = SmbgdParams { mu: 0.002, gamma: 0.5, beta: 0.9, p: 8 };
+    let mut opt = Smbgd::<f32>::with_identity_init(2, 4, prm, Nonlinearity::Cube);
+    for t in 0..16 {
+        opt.step(xs.row(t));
+    }
+    let allocs = allocations_in(|| {
+        // Per-sample path and the fused block path.
+        for t in 0..64 {
+            opt.step(xs.row(t));
+        }
+        opt.step_batch(&xs);
+    });
+    assert_eq!(allocs, 0, "Smbgd::<f32> steady-state stepping allocated");
+}
+
+#[test]
+fn f32_mbgd_steady_state_step_does_not_allocate() {
+    let mut rng = Pcg32::seed(6);
+    let xs = Mat32::from_fn(1024, 4, |_, _| rng.normal() as f32);
+    let mut opt = Mbgd::<f32>::with_identity_init(2, 4, 0.01, 8, Nonlinearity::Cube);
+    for t in 0..16 {
+        opt.step(xs.row(t));
+    }
+    let allocs = allocations_in(|| {
+        for t in 0..64 {
+            opt.step(xs.row(t));
+        }
+        opt.step_batch(&xs);
+    });
+    assert_eq!(allocs, 0, "Mbgd::<f32> steady-state stepping allocated");
 }

@@ -7,9 +7,9 @@
 //! - **Isolation**: a pathological (diverging) tenant sharing a shard with
 //!   healthy tenants must not perturb their matrices at all.
 
-use easi_ica::config::ExperimentConfig;
+use easi_ica::config::{ExperimentConfig, HubScenario, Precision};
 use easi_ica::coordinator::{
-    make_engine, run_hub, run_streaming, HubOptions, ServerOptions, StateStore,
+    make_engine, run_hub, run_scenario, run_streaming, HubOptions, ServerOptions, StateStore,
 };
 use easi_ica::ica::Nonlinearity;
 use easi_ica::linalg::Mat64;
@@ -80,6 +80,81 @@ fn diverging_session_does_not_perturb_neighbours() {
     );
     // And its matrix stayed finite thanks to the per-session guard.
     assert!(r.b.is_finite());
+}
+
+#[test]
+fn hub_mixes_f32_and_f64_sessions_in_one_run() {
+    // The precision acceptance topology: one serve-many run hosting
+    // single- and double-precision tenants side by side. Each session
+    // must (a) run on the engine its precision selects, (b) stay
+    // bit-identical to its own solo run (multiplexing never changes the
+    // math, at any precision), and (c) converge.
+    let mut cfgs = Vec::new();
+    for (i, precision) in
+        [Precision::F32, Precision::F64, Precision::F32, Precision::F64].iter().enumerate()
+    {
+        let mut c = cfg(40 + i as u64, "static");
+        c.precision = *precision;
+        c.name = format!("mixed-{}", precision.name());
+        cfgs.push(c);
+    }
+    let opts = HubOptions { shards: 2, ..Default::default() };
+    let sum = run_hub(cfgs.clone(), Nonlinearity::Cube, opts).expect("mixed hub run");
+    assert_eq!(sum.sessions.len(), 4);
+    for (i, report) in sum.sessions.iter().enumerate() {
+        let s = &report.summary;
+        match cfgs[i].precision {
+            Precision::F32 => assert!(
+                s.engine.starts_with("native-f32/"),
+                "session {i}: wrong engine {}",
+                s.engine
+            ),
+            Precision::F64 => assert!(
+                s.engine.starts_with("native/"),
+                "session {i}: wrong engine {}",
+                s.engine
+            ),
+        }
+        assert_eq!(s.b, solo_b(&cfgs[i]), "session {i} diverged from its solo run");
+        assert!(s.final_amari < 0.3, "session {i} amari {}", s.final_amari);
+        // f32 session state is genuinely single precision: the published
+        // f64 snapshot round-trips exactly through a narrow-and-widen.
+        if cfgs[i].precision == Precision::F32 {
+            assert_eq!(s.b, s.b.cast::<f32>().cast::<f64>(), "session {i} not f32-resident");
+        }
+    }
+}
+
+#[test]
+fn hub_scenario_precision_cycling_end_to_end() {
+    // The config-file form of the same thing: hub.precision cycles
+    // per-session through the serve-many path (`run_scenario`).
+    let sc = HubScenario::from_toml(
+        r#"
+        name = "mixed"
+        samples = 3000
+        seed = 5
+
+        [optimizer]
+        mu = 0.004
+
+        [hub]
+        sessions = 4
+        shards = 2
+        precision = ["f32", "f64"]
+    "#,
+    )
+    .expect("scenario parses");
+    let sum = run_scenario(&sc, Nonlinearity::Cube).expect("scenario runs");
+    assert_eq!(sum.sessions.len(), 4);
+    for (i, report) in sum.sessions.iter().enumerate() {
+        let want = if i % 2 == 0 { "native-f32/" } else { "native/" };
+        assert!(
+            report.summary.engine.starts_with(want),
+            "session {i}: engine {} should start with {want}",
+            report.summary.engine
+        );
+    }
 }
 
 #[test]

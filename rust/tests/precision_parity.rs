@@ -1,0 +1,253 @@
+//! Precision-parity oracles for the f32 request path.
+//!
+//! The `f64` instantiation of the fused kernels is the bit-exact
+//! reference (pinned in `tests/fused_hotpath.rs`); the `f32`
+//! instantiation — the paper's 32-bit hardware datapath — is pinned to it
+//! here two ways:
+//!
+//! 1. **Ulp-bounded kernel oracles** — every fused f32 kernel (gradient,
+//!    step, block accumulation), across every `Nonlinearity` variant, on
+//!    f32-representable inputs, must land within `MAX_ULPS` of the f64
+//!    unfused reference rounded to f32 (with a small absolute escape
+//!    hatch where catastrophic cancellation makes ulp distance
+//!    meaningless near zero).
+//! 2. **Amari-index parity** — a seeded convergence run in f32 must
+//!    converge like the f64 run, with a bounded steady-state gap; reduced
+//!    precision is a deployment knob, not an accuracy cliff (cf. the
+//!    hardware-friendly dimensionality-reduction literature).
+
+use easi_ica::ica::{amari_index, EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
+use easi_ica::linalg::{fused, FusedScratch, Mat32, Mat64};
+use easi_ica::signal::{Dataset, Pcg32};
+
+/// Max acceptable ulp distance between an f32 kernel result and the f64
+/// reference rounded to f32. The kernels chain O(m + n) roundings per
+/// entry; 128 ulps is an order of magnitude looser than that and still
+/// ~5 orders of magnitude tighter than "looks similar".
+const MAX_ULPS: i64 = 128;
+
+const ALL_G: [Nonlinearity; 3] =
+    [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare];
+
+/// Monotonic integer key for IEEE-754 f32 total order (sign-magnitude →
+/// two's-complement line; ±0 coincide).
+fn ulp_key(x: f32) -> i64 {
+    let bits = x.to_bits() as i32;
+    let key = if bits < 0 { i32::MIN.wrapping_sub(bits) } else { bits };
+    key as i64
+}
+
+fn ulp_distance(a: f32, b: f32) -> i64 {
+    (ulp_key(a) - ulp_key(b)).abs()
+}
+
+fn assert_ulp_close(got: &Mat32, want64: &Mat64, what: &str) {
+    assert_eq!(got.shape(), want64.shape(), "{what}: shape");
+    let want: Mat32 = want64.cast();
+    // Escape hatch for catastrophic cancellation (sym + skew terms
+    // annihilating): there the error is relative to the *term* magnitudes
+    // feeding the entry — proxied by the matrix max — not the tiny
+    // result, so a pure ulp bound would be meaningless.
+    let floor = 64.0 * f32::EPSILON * want.max_abs().max(1.0);
+    for (i, (&g, &w)) in got.as_slice().iter().zip(want.as_slice()).enumerate() {
+        assert!(g.is_finite() && w.is_finite(), "{what}: non-finite at {i}");
+        let ulps = ulp_distance(g, w);
+        assert!(
+            ulps <= MAX_ULPS || (g - w).abs() <= floor,
+            "{what}: element {i}: {g:e} vs {w:e} ({ulps} ulps, floor {floor:e})"
+        );
+    }
+}
+
+/// An f32-representable random matrix with its exact f64 image, so both
+/// precisions see identical inputs. Scaled to ±~2σ·0.5 so the cubic
+/// nonlinearity keeps term magnitudes moderate (the regime the AGC'd
+/// request path actually runs in).
+fn paired_mat(rng: &mut Pcg32, r: usize, c: usize) -> (Mat32, Mat64) {
+    let m32 = Mat64::from_fn(r, c, |_, _| 0.5 * rng.normal()).cast::<f32>();
+    let m64 = m32.cast::<f64>();
+    (m32, m64)
+}
+
+/// The unfused f64 reference gradient (plain form).
+fn reference_gradient(b: &Mat64, x: &[f64], g: Nonlinearity) -> Mat64 {
+    let n = b.rows();
+    let mut y = vec![0.0; n];
+    let mut gy = vec![0.0; n];
+    let mut h = Mat64::zeros(n, n);
+    EasiSgd::relative_gradient(b, x, g, false, 0.01, &mut y, &mut gy, &mut h);
+    h
+}
+
+fn dims(rng: &mut Pcg32) -> (usize, usize) {
+    let n = 1 + (rng.next_u32() % 6) as usize;
+    let m = n + (rng.next_u32() % 4) as usize;
+    (n, m)
+}
+
+#[test]
+fn f32_fused_gradient_ulp_bounded_vs_f64_reference() {
+    let mut rng = Pcg32::seed(0x32B17);
+    for g in ALL_G {
+        for _ in 0..50 {
+            let (n, m) = dims(&mut rng);
+            let (b32, b64) = paired_mat(&mut rng, n, m);
+            let (x32m, x64m) = paired_mat(&mut rng, 1, m);
+            let (x32, x64) = (x32m.row(0), x64m.row(0));
+
+            let mut s = FusedScratch::<f32>::new(n, m);
+            let mut h32 = Mat32::zeros(n, n);
+            fused::relative_gradient_into(
+                &b32,
+                x32,
+                |v: f32| g.apply(v),
+                &mut s.y,
+                &mut s.gy,
+                &mut h32,
+            );
+            let want = reference_gradient(&b64, x64, g);
+            assert_ulp_close(&h32, &want, &format!("gradient {g:?} (n={n}, m={m})"));
+        }
+    }
+}
+
+#[test]
+fn f32_fused_step_ulp_bounded_vs_f64_reference() {
+    let mut rng = Pcg32::seed(0x32B18);
+    let mu = 0.01;
+    for g in ALL_G {
+        for _ in 0..50 {
+            let (n, m) = dims(&mut rng);
+            let (b32_0, b64_0) = paired_mat(&mut rng, n, m);
+            let (x32m, x64m) = paired_mat(&mut rng, 1, m);
+
+            // f32 fused step.
+            let mut b32 = b32_0;
+            let mut s = FusedScratch::<f32>::new(n, m);
+            fused::relative_gradient_step_into(
+                &mut b32,
+                x32m.row(0),
+                |v: f32| g.apply(v),
+                mu as f32,
+                &mut s,
+            );
+
+            // f64 unfused reference step.
+            let mut b64 = b64_0;
+            let h = reference_gradient(&b64, x64m.row(0), g);
+            let mut hb = Mat64::zeros(n, m);
+            h.matmul_into(&b64, &mut hb);
+            b64.axpy(-mu, &hb);
+
+            assert_ulp_close(&b32, &b64, &format!("step {g:?} (n={n}, m={m})"));
+        }
+    }
+}
+
+#[test]
+fn f32_fused_block_accumulation_ulp_bounded_vs_f64_reference() {
+    let mut rng = Pcg32::seed(0x32B19);
+    let (alpha, decay) = (0.01, 0.9);
+    for g in ALL_G {
+        for _ in 0..30 {
+            let (n, m) = dims(&mut rng);
+            let p = 1 + (rng.next_u32() % 6) as usize;
+            let (b32, b64) = paired_mat(&mut rng, n, m);
+            let (xs32, xs64) = paired_mat(&mut rng, p, m);
+
+            let mut acc32 = Mat32::zeros(n, n);
+            let mut s = FusedScratch::<f32>::new(n, m);
+            fused::accumulate_gradient_block(
+                &b32,
+                &xs32,
+                0..p,
+                |v: f32| g.apply(v),
+                alpha as f32,
+                decay as f32,
+                &mut acc32,
+                &mut s,
+            );
+
+            // Per-sample f64 reference accumulation.
+            let mut want = Mat64::zeros(n, n);
+            for t in 0..p {
+                let h = reference_gradient(&b64, xs64.row(t), g);
+                if t > 0 {
+                    want.scale(decay);
+                }
+                want.axpy(alpha, &h);
+            }
+            assert_ulp_close(&acc32, &want, &format!("block {g:?} (n={n}, m={m}, p={p})"));
+        }
+    }
+}
+
+/// Normalized observation stream shared by both precisions (the f32 side
+/// consumes the narrowed image of the exact same samples).
+fn normalized_stream(ds: &Dataset) -> Vec<Vec<f64>> {
+    let pow: f64 = ds.x.as_slice().iter().map(|v| v * v).sum::<f64>()
+        / ds.x.as_slice().len() as f64;
+    let std_x = pow.sqrt();
+    (0..ds.len()).map(|t| ds.sample(t).iter().map(|v| v / std_x).collect()).collect()
+}
+
+/// Drive both precisions over the identical sample stream and return
+/// their *steady-state* Amari indices (mean over the last 20% of the
+/// run, sampled every 500 steps — instantaneous endpoints of two
+/// independently-rounding stochastic trajectories jitter; the
+/// steady-state band they settle into is the meaningful quantity).
+fn steady_state_amari(
+    o64: &mut dyn Optimizer<f64>,
+    o32: &mut dyn Optimizer<f32>,
+    xs: &[Vec<f64>],
+    a: &Mat64,
+) -> (f64, f64) {
+    let m = xs[0].len();
+    let mut x32 = vec![0.0f32; m];
+    let tail_start = xs.len() * 4 / 5;
+    let (mut acc64, mut acc32, mut count) = (0.0, 0.0, 0u32);
+    for (t, x) in xs.iter().enumerate() {
+        o64.step(x);
+        for (d, &v) in x32.iter_mut().zip(x.iter()) {
+            *d = v as f32;
+        }
+        o32.step(&x32);
+        if t >= tail_start && t % 500 == 0 {
+            acc64 += amari_index(&o64.b().matmul(a));
+            acc32 += amari_index(&o32.b().cast::<f64>().matmul(a));
+            count += 1;
+        }
+    }
+    (acc64 / count as f64, acc32 / count as f64)
+}
+
+#[test]
+fn f32_vs_f64_sgd_amari_parity_on_seeded_convergence() {
+    let ds = Dataset::standard(3, 4, 2, 60_000);
+    let xs = normalized_stream(&ds);
+    let mut o64 = EasiSgd::<f64>::with_identity_init(2, 4, 0.003, Nonlinearity::Cube);
+    let mut o32 = EasiSgd::<f32>::with_identity_init(2, 4, 0.003, Nonlinearity::Cube);
+    let (a64, a32) = steady_state_amari(&mut o64, &mut o32, &xs, &ds.a);
+    assert!(a64 < 0.15, "f64 run failed to converge: amari {a64}");
+    assert!(a32 < 0.15, "f32 run failed to converge: amari {a32}");
+    assert!(
+        (a64 - a32).abs() < 0.05,
+        "precision gap too large: f64 {a64:.4} vs f32 {a32:.4}"
+    );
+}
+
+#[test]
+fn f32_vs_f64_smbgd_amari_parity_on_seeded_convergence() {
+    let ds = Dataset::standard(7, 4, 2, 60_000);
+    let xs = normalized_stream(&ds);
+    let prm = SmbgdParams { mu: 0.003, gamma: 0.5, beta: 0.9, p: 8 };
+    let mut o64 = Smbgd::<f64>::with_identity_init(2, 4, prm, Nonlinearity::Cube);
+    let mut o32 = Smbgd::<f32>::with_identity_init(2, 4, prm, Nonlinearity::Cube);
+    let (a64, a32) = steady_state_amari(&mut o64, &mut o32, &xs, &ds.a);
+    assert!(a64 < 0.15, "f64 smbgd failed to converge: amari {a64}");
+    assert!(a32 < 0.15, "f32 smbgd failed to converge: amari {a32}");
+    assert!(
+        (a64 - a32).abs() < 0.05,
+        "precision gap too large: f64 {a64:.4} vs f32 {a32:.4}"
+    );
+}
