@@ -1,0 +1,304 @@
+//! Drift detector: a self-arming Page–Hinkley (CUSUM) test on the
+//! residual-whiteness statistic from [`super::MomentTracker`].
+//!
+//! The detector classifies the stream into three regimes:
+//!
+//! - **steady state** — armed, no alarm: the statistic fluctuates around
+//!   its post-convergence baseline;
+//! - **abrupt drift** — the smoothed statistic jumps past an absolute
+//!   level (`abrupt_level`) within the tracker's short memory, the
+//!   signature of a mixing-matrix switch;
+//! - **gradual drift** — the Page–Hinkley cumulative excess over the
+//!   running mean crosses `ph_lambda` without the instantaneous level
+//!   tripping, the signature of slow rotation.
+//!
+//! **Arming.** A whiteness residual is only meaningful once the separator
+//! has converged — at stream start B is a warm start and the statistic is
+//! large for entirely non-drift reasons. The detector therefore stays
+//! disarmed until the statistic first falls below `armed_level`, and
+//! re-disarms after every alarm until the separator has re-converged. This
+//! is what makes the false-positive rate on a stationary stream ~zero
+//! (pinned by `tests/integration_adapt.rs`) without any warmup constant.
+
+/// Drift classification reported on an alarm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftClass {
+    /// Step change (mixing-matrix switch): instantaneous level trip.
+    Abrupt,
+    /// Slow accumulation (rotation/drift): Page–Hinkley trip.
+    Gradual,
+}
+
+/// One-sided Page–Hinkley test for an increase of the input's mean.
+///
+/// Textbook form: with running mean `x̄_t` of all inputs since reset,
+/// `m_t = Σ_{i≤t} (x_i − x̄_i − δ)` and `M_t = min_{i≤t} m_i`; alarm when
+/// `m_t − M_t > λ`. `δ` sets the insensitivity band, `λ` the evidence
+/// required.
+#[derive(Clone, Copy, Debug)]
+pub struct PageHinkley {
+    delta: f64,
+    lambda: f64,
+    count: u64,
+    mean: f64,
+    m: f64,
+    m_min: f64,
+}
+
+impl PageHinkley {
+    pub fn new(delta: f64, lambda: f64) -> Self {
+        assert!(delta >= 0.0, "delta must be non-negative");
+        assert!(lambda > 0.0, "lambda must be positive");
+        Self { delta, lambda, count: 0, mean: 0.0, m: 0.0, m_min: 0.0 }
+    }
+
+    /// Fold one observation; true means the test fired (caller resets).
+    pub fn update(&mut self, x: f64) -> bool {
+        self.count += 1;
+        self.mean += (x - self.mean) / self.count as f64;
+        self.m += x - self.mean - self.delta;
+        if self.m < self.m_min {
+            self.m_min = self.m;
+        }
+        self.m - self.m_min > self.lambda
+    }
+
+    /// Clear all accumulated state (post-alarm, or on re-arming).
+    pub fn reset(&mut self) {
+        self.count = 0;
+        self.mean = 0.0;
+        self.m = 0.0;
+        self.m_min = 0.0;
+    }
+
+    /// Running mean of the inputs since the last reset.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+}
+
+/// Detector tuning knobs (a copy of the `adapt.*` config subset it uses).
+#[derive(Clone, Copy, Debug)]
+pub struct DetectorParams {
+    /// Arm (and re-arm) once the statistic falls below this level.
+    pub armed_level: f64,
+    /// Instantaneous statistic at or above this level → [`DriftClass::Abrupt`].
+    pub abrupt_level: f64,
+    /// Page–Hinkley insensitivity band δ.
+    pub ph_delta: f64,
+    /// Page–Hinkley alarm threshold λ.
+    pub ph_lambda: f64,
+}
+
+impl DetectorParams {
+    pub fn validate(&self) {
+        assert!(
+            self.armed_level > 0.0 && self.armed_level < self.abrupt_level,
+            "need 0 < armed_level < abrupt_level, got {} / {}",
+            self.armed_level,
+            self.abrupt_level
+        );
+        assert!(self.ph_delta >= 0.0, "ph_delta must be non-negative");
+        assert!(self.ph_lambda > 0.0, "ph_lambda must be positive");
+    }
+}
+
+/// Self-arming drift detector over the whiteness-residual statistic.
+pub struct DriftDetector {
+    params: DetectorParams,
+    ph: PageHinkley,
+    armed: bool,
+    /// The statistic has been observed at/above `armed_level` at least
+    /// once. Arming requires a high→low excursion, not merely a low
+    /// value: for large channel counts the *unconverged* residual can
+    /// start below `armed_level` (the per-entry RMS scales down with n),
+    /// and arming on that would turn the initial convergence transient
+    /// into a false abrupt alarm. Requiring the excursion makes such
+    /// streams fail safe (never armed → never alarmed) instead. Sticky:
+    /// once seen, disarm/re-arm cycles do not require a new excursion.
+    seen_high: bool,
+    last_stat: f64,
+}
+
+impl DriftDetector {
+    pub fn new(params: DetectorParams) -> Self {
+        params.validate();
+        Self {
+            ph: PageHinkley::new(params.ph_delta, params.ph_lambda),
+            params,
+            armed: false,
+            seen_high: false,
+            last_stat: f64::INFINITY,
+        }
+    }
+
+    /// True once the statistic has dropped into the steady-state band
+    /// (drift can only be declared while armed).
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Most recent statistic value observed.
+    pub fn last_stat(&self) -> f64 {
+        self.last_stat
+    }
+
+    /// Fold one statistic observation; returns the drift class on alarm.
+    /// After an alarm the detector disarms itself and re-arms when the
+    /// statistic next falls below `armed_level` (having been above it at
+    /// least once over the detector's lifetime — see `seen_high`).
+    pub fn update(&mut self, stat: f64) -> Option<DriftClass> {
+        self.last_stat = stat;
+        if !self.armed {
+            if stat >= self.params.armed_level {
+                self.seen_high = true;
+            } else if self.seen_high {
+                self.armed = true;
+                self.ph.reset();
+            }
+            return None;
+        }
+        if stat >= self.params.abrupt_level {
+            self.armed = false;
+            self.ph.reset();
+            return Some(DriftClass::Abrupt);
+        }
+        if self.ph.update(stat) {
+            self.armed = false;
+            self.ph.reset();
+            return Some(DriftClass::Gradual);
+        }
+        None
+    }
+
+    /// Force disarm (used after a rollback: the separator state just
+    /// changed discontinuously, so the statistic must re-settle before
+    /// drift is meaningful again).
+    pub fn disarm(&mut self) {
+        self.armed = false;
+        self.ph.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> DetectorParams {
+        DetectorParams { armed_level: 0.25, abrupt_level: 0.6, ph_delta: 0.04, ph_lambda: 3.0 }
+    }
+
+    #[test]
+    fn stays_disarmed_until_convergence() {
+        let mut d = DriftDetector::new(params());
+        // Pre-convergence: large statistic, no alarms ever.
+        for _ in 0..100 {
+            assert_eq!(d.update(1.5), None);
+        }
+        assert!(!d.armed());
+        assert_eq!(d.update(0.1), None); // arming itself is not an alarm
+        assert!(d.armed());
+    }
+
+    #[test]
+    fn never_arms_without_a_high_excursion() {
+        // Large-n streams whose unconverged residual already sits below
+        // armed_level must fail safe: no arming, hence no false alarms —
+        // even when the statistic later rises past the abrupt level.
+        let mut d = DriftDetector::new(params());
+        for _ in 0..100 {
+            assert_eq!(d.update(0.1), None);
+        }
+        assert!(!d.armed(), "a low start must not arm");
+        assert_eq!(d.update(0.9), None, "unarmed detector never alarms");
+    }
+
+    #[test]
+    fn abrupt_jump_classified_abrupt() {
+        let mut d = DriftDetector::new(params());
+        d.update(1.0); // unconverged start (the high excursion)
+        d.update(0.1); // convergence → arms
+        for _ in 0..200 {
+            assert_eq!(d.update(0.12), None);
+        }
+        assert_eq!(d.update(0.9), Some(DriftClass::Abrupt));
+        // Disarmed while re-converging: the still-high statistic must not
+        // re-alarm.
+        assert_eq!(d.update(0.9), None);
+        assert!(!d.armed());
+        // Re-arms after recovery, and can fire again.
+        d.update(0.1);
+        assert!(d.armed());
+        assert_eq!(d.update(0.9), Some(DriftClass::Abrupt));
+    }
+
+    #[test]
+    fn slow_ramp_classified_gradual() {
+        let mut d = DriftDetector::new(params());
+        d.update(1.0);
+        d.update(0.1);
+        for _ in 0..100 {
+            assert_eq!(d.update(0.1), None);
+        }
+        // Sustained shift to 0.35: below the abrupt level, but PH
+        // accumulates (0.35 − mean − δ) per step and must fire.
+        let mut fired = None;
+        for k in 0..400 {
+            if let Some(c) = d.update(0.35) {
+                fired = Some((k, c));
+                break;
+            }
+        }
+        let (k, class) = fired.expect("gradual drift must alarm");
+        assert_eq!(class, DriftClass::Gradual);
+        assert!(k < 200, "PH took {k} steps");
+    }
+
+    #[test]
+    fn stationary_noise_never_alarms() {
+        let mut d = DriftDetector::new(params());
+        d.update(1.0); // unconverged start, then settle
+        let mut rng = crate::signal::Pcg32::seed(0xD1F7);
+        // 50k observations of noise around 0.12 (the steady-state regime).
+        for _ in 0..50_000 {
+            let stat = (0.12 + 0.04 * rng.normal()).abs();
+            assert_eq!(d.update(stat), None, "false alarm on stationary noise");
+        }
+        assert!(d.armed());
+    }
+
+    #[test]
+    fn page_hinkley_mean_tracks() {
+        let mut ph = PageHinkley::new(0.0, 1e9);
+        for x in [1.0, 2.0, 3.0] {
+            ph.update(x);
+        }
+        assert!((ph.mean() - 2.0).abs() < 1e-12);
+        ph.reset();
+        assert_eq!(ph.mean(), 0.0);
+    }
+
+    #[test]
+    fn disarm_suppresses_and_rearms() {
+        let mut d = DriftDetector::new(params());
+        d.update(1.0);
+        d.update(0.1);
+        assert!(d.armed());
+        d.disarm();
+        assert_eq!(d.update(0.9), None, "disarmed detector must not alarm");
+        // seen_high is sticky: re-arming needs no fresh excursion.
+        d.update(0.1);
+        assert!(d.armed());
+    }
+
+    #[test]
+    #[should_panic(expected = "armed_level")]
+    fn bad_params_rejected() {
+        DriftDetector::new(DetectorParams {
+            armed_level: 0.7,
+            abrupt_level: 0.6,
+            ph_delta: 0.04,
+            ph_lambda: 3.0,
+        });
+    }
+}

@@ -1,0 +1,198 @@
+//! Learning-rate governor: the closed-loop μ(t) law behind
+//! [`crate::ica::MuSchedule::Adaptive`].
+//!
+//! The control law combines three regimes:
+//!
+//! - **anneal** — between drift events μ decays as `μ₀ / (1 + t'/τ)`
+//!   (Robbins–Monro shape, matching `MuSchedule::DecayToFloor`), where
+//!   `t'` restarts at the last boost;
+//! - **boost** — on a detected drift event μ jumps to `boost·μ₀` and the
+//!   anneal clock restarts, buying back tracking speed exactly when the
+//!   mixing moved;
+//! - **moment floor** — the anneal never goes below
+//!   `clamp(floor_c / m̂₄, floor_min, μ₀)`, where `m̂₄` is the tracked
+//!   normalized fourth moment of the outputs. Per Gültekin et al.
+//!   ("Learning Rate Should Scale Inversely with High-Order Data Moments
+//!   in High-Dimensional Online ICA"), the steady-state-optimal rate
+//!   scales inversely with the data's high-order moments: heavy-tailed
+//!   outputs (large m̂₄) push the floor down for stability, maximally
+//!   sub-Gaussian outputs (small m̂₄) let it ride higher for tracking.
+//!
+//! After a rollback (a post-drift step diverged and the coordinator
+//! restored the checkpoint) the boost is cancelled — μ returns to the
+//! from-start anneal, i.e. near the floor — so the recovered state is not
+//! immediately re-destabilized.
+
+/// Hard ceiling on any governed μ; config-level validation requires
+/// μ ∈ (0, 1) and boosted rates must stay well inside the stable region.
+pub const MU_MAX: f64 = 0.2;
+
+/// Governor tuning knobs (a copy of the `adapt.*` config subset it uses).
+#[derive(Clone, Copy, Debug)]
+pub struct GovernorParams {
+    /// Base learning rate μ₀ (the session's configured optimizer μ).
+    pub mu0: f64,
+    /// Multiplier applied to μ₀ on a detected drift event (≥ 1).
+    pub boost: f64,
+    /// Anneal time constant τ, in samples.
+    pub tau: f64,
+    /// Inverse-moment floor constant: floor = `floor_c / m̂₄` (clamped).
+    pub floor_c: f64,
+    /// Lower clamp of the floor.
+    pub floor_min: f64,
+}
+
+impl GovernorParams {
+    pub fn validate(&self) {
+        assert!(self.mu0 > 0.0 && self.mu0 < 1.0, "mu0 in (0,1), got {}", self.mu0);
+        assert!(self.boost >= 1.0, "boost must be >= 1, got {}", self.boost);
+        assert!(self.tau > 0.0, "tau must be positive");
+        assert!(self.floor_c >= 0.0, "floor_c must be non-negative");
+        assert!(
+            self.floor_min > 0.0 && self.floor_min <= MU_MAX,
+            "floor_min in (0, {MU_MAX}], got {}",
+            self.floor_min
+        );
+    }
+}
+
+/// The stateful μ(t) controller.
+#[derive(Clone, Copy, Debug)]
+pub struct Governor {
+    params: GovernorParams,
+    /// Sample index of the last boost (anneal clock restart), if any.
+    boosted_at: Option<u64>,
+    boosts: u64,
+}
+
+impl Governor {
+    pub fn new(params: GovernorParams) -> Self {
+        params.validate();
+        Self { params, boosted_at: None, boosts: 0 }
+    }
+
+    pub fn params(&self) -> GovernorParams {
+        self.params
+    }
+
+    /// The moment-scaled floor for a tracked normalized fourth moment.
+    /// The floor can never exceed μ₀ — a base rate below `floor_min`
+    /// (micro-μ bench configs) caps the floor at μ₀ itself.
+    pub fn floor(&self, m4_norm: f64) -> f64 {
+        let p = &self.params;
+        let hi = p.mu0.min(MU_MAX);
+        let lo = p.floor_min.min(hi);
+        (p.floor_c / m4_norm.max(1e-6)).clamp(lo, hi)
+    }
+
+    /// μ at sample `t` given the tracked normalized fourth moment.
+    pub fn mu(&self, t: u64, m4_norm: f64) -> f64 {
+        let p = &self.params;
+        let (base, elapsed) = match self.boosted_at {
+            Some(t0) => ((p.boost * p.mu0).min(MU_MAX), t.saturating_sub(t0)),
+            None => (p.mu0.min(MU_MAX), t),
+        };
+        (base / (1.0 + elapsed as f64 / p.tau)).max(self.floor(m4_norm))
+    }
+
+    /// A drift event was detected at sample `t`: boost and restart the
+    /// anneal clock.
+    pub fn on_drift(&mut self, t: u64) {
+        self.boosted_at = Some(t);
+        self.boosts += 1;
+    }
+
+    /// A post-drift step diverged and was rolled back: cancel the boost so
+    /// μ returns to the from-start anneal (≈ the floor).
+    pub fn on_rollback(&mut self) {
+        self.boosted_at = None;
+    }
+
+    /// Drift boosts applied over the governor's lifetime.
+    pub fn boosts(&self) -> u64 {
+        self.boosts
+    }
+
+    /// Sample index of the last boost, if one is active.
+    pub fn boosted_at(&self) -> Option<u64> {
+        self.boosted_at
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> GovernorParams {
+        GovernorParams { mu0: 0.01, boost: 2.0, tau: 4000.0, floor_c: 0.003, floor_min: 2e-4 }
+    }
+
+    #[test]
+    fn anneals_from_mu0_to_floor() {
+        let g = Governor::new(params());
+        let m4 = 1.8; // sub-Gaussian bank
+        assert!((g.mu(0, m4) - 0.01).abs() < 1e-12);
+        assert!(g.mu(4000, m4) < 0.0051);
+        // Deep anneal pins at the moment floor.
+        let floor = g.floor(m4);
+        assert!((g.mu(10_000_000, m4) - floor).abs() < 1e-12);
+        assert!((floor - 0.003 / 1.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boost_raises_then_reanneals() {
+        let mut g = Governor::new(params());
+        let m4 = 1.8;
+        let settled = g.mu(100_000, m4);
+        g.on_drift(100_000);
+        let boosted = g.mu(100_000, m4);
+        assert!((boosted - 0.02).abs() < 1e-12, "boosted mu {boosted}");
+        assert!(boosted > 5.0 * settled);
+        // Anneals back down after the event.
+        assert!(g.mu(104_000, m4) < 0.6 * boosted);
+        assert_eq!(g.boosts(), 1);
+        assert_eq!(g.boosted_at(), Some(100_000));
+    }
+
+    #[test]
+    fn floor_scales_inversely_with_fourth_moment() {
+        let g = Governor::new(params());
+        // Heavy-tailed outputs → lower floor; sub-Gaussian → higher.
+        assert!(g.floor(8.0) < g.floor(1.5));
+        assert!((g.floor(3.0) - 0.001).abs() < 1e-12);
+        // Clamps hold at both ends.
+        assert_eq!(g.floor(1e9), params().floor_min);
+        assert_eq!(g.floor(1e-9), params().mu0);
+    }
+
+    #[test]
+    fn rollback_cancels_boost() {
+        let mut g = Governor::new(params());
+        let m4 = 2.0;
+        g.on_drift(50_000);
+        assert!(g.mu(50_000, m4) > 0.015);
+        g.on_rollback();
+        // Back on the from-start anneal: deep in the floor regime.
+        assert!((g.mu(50_000, m4) - g.floor(m4)).abs() < 1e-9);
+        assert_eq!(g.boosted_at(), None);
+    }
+
+    #[test]
+    fn mu_respects_ceiling() {
+        let mut g = Governor::new(GovernorParams {
+            mu0: 0.15,
+            boost: 10.0,
+            tau: 1000.0,
+            floor_c: 0.003,
+            floor_min: 2e-4,
+        });
+        g.on_drift(0);
+        assert!(g.mu(0, 2.0) <= MU_MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "boost")]
+    fn bad_boost_rejected() {
+        Governor::new(GovernorParams { boost: 0.5, ..params() });
+    }
+}

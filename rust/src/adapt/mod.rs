@@ -1,0 +1,414 @@
+//! Adaptive control plane: the per-session closed loop that watches the
+//! separated outputs and governs the learning rate.
+//!
+//! The paper's value proposition over nonadaptive ICA is that EASI
+//! *tracks* changes in the underlying distributions (§I, §III) — but
+//! tracking speed and steady-state error pull against each other through
+//! one knob, μ. This subsystem closes the loop on that knob per session:
+//!
+//! ```text
+//!             ┌──────────────────────────────────────────────┐
+//!             │                SessionRunner                 │
+//!   x ──AGC──►│ Engine (B ← B − μHB) ──► y = Bx (strided)    │
+//!             │        ▲                    │                │
+//!             │        │ set_mu          MomentTracker       │
+//!             │   Governor ◄── DriftDetector ◄── whiteness   │
+//!             │        │             │                       │
+//!             │        └─ boost ◄────┴─► Monitor::rearm      │
+//!             │                          checkpoint/rollback │
+//!             └──────────────────────────────────────────────┘
+//! ```
+//!
+//! - [`MomentTracker`] — EW per-channel variance/fourth moment and the
+//!   `EW[y yᵀ]` matrix (the same `y·yᵀ` terms the EASI gradient builds),
+//!   zero-alloc, [`crate::linalg::Scalar`]-generic.
+//! - [`DriftDetector`] — self-arming Page–Hinkley/CUSUM on the
+//!   residual-whiteness statistic `‖EW[y yᵀ] − I‖_F / n`, classifying
+//!   steady state vs abrupt vs gradual drift.
+//! - [`Governor`] — the [`crate::ica::MuSchedule::Adaptive`] law: boost μ
+//!   on drift, anneal toward a floor scaled inversely with the tracked
+//!   fourth moment (Gültekin et al.), cool after a rollback.
+//! - [`AdaptiveController`] — composes the three per session, owns the
+//!   recovery checkpoint of B, and is what `coordinator::SessionRunner`
+//!   drives per chunk (config `adapt.enabled`, CLI `--adapt`).
+//! - [`AdaptiveSgd`] — an [`Optimizer`] wrapper running the same loop
+//!   per sample, used by the offline drift study
+//!   (`experiments::drift_study`, CLI `track`).
+
+pub mod detector;
+pub mod governor;
+pub mod moments;
+
+pub use detector::{DetectorParams, DriftClass, DriftDetector, PageHinkley};
+pub use governor::{Governor, GovernorParams, MU_MAX};
+pub use moments::MomentTracker;
+
+use crate::config::AdaptConfig;
+use crate::ica::{EasiSgd, Nonlinearity, Optimizer};
+use crate::linalg::{Mat, Mat64};
+
+/// Per-session closed-loop controller: moment tracker + drift detector +
+/// learning-rate governor + recovery checkpoint.
+///
+/// The controller observes in `f64` (the coordinator's wire format — the
+/// engine's `B` snapshots are widened there regardless of the session's
+/// request-path precision) and decimates observations by `stride` to keep
+/// the hot-path overhead bounded (the `adapt_overhead_fraction` record in
+/// the §Perf suite, gated < 10% in CI).
+pub struct AdaptiveController {
+    tracker: MomentTracker<f64>,
+    detector: DriftDetector,
+    governor: Governor,
+    stride: usize,
+    /// Rows offered since the last observation (stride phase).
+    phase: usize,
+    /// Scratch for `y = B x` (length n) — reused, zero-alloc.
+    y: Vec<f64>,
+    /// Last known-good separation matrix (steady-state snapshots).
+    checkpoint: Mat64,
+    checkpoint_valid: bool,
+    rollback_enabled: bool,
+    drift_events: u64,
+    abrupt_events: u64,
+    rollbacks: u64,
+    last_drift_at: Option<u64>,
+}
+
+impl AdaptiveController {
+    /// Build for an `n × m` separation matrix with base learning rate
+    /// `mu0` (the session's configured optimizer μ).
+    pub fn new(cfg: &AdaptConfig, mu0: f64, n: usize, m: usize) -> Self {
+        cfg.validate().expect("adapt config validated upstream");
+        Self {
+            tracker: MomentTracker::new(n, cfg.alpha),
+            detector: DriftDetector::new(DetectorParams {
+                armed_level: cfg.armed_level,
+                abrupt_level: cfg.abrupt_level,
+                ph_delta: cfg.ph_delta,
+                ph_lambda: cfg.ph_lambda,
+            }),
+            governor: Governor::new(GovernorParams {
+                mu0,
+                boost: cfg.boost,
+                tau: cfg.tau,
+                floor_c: cfg.floor_c,
+                floor_min: cfg.floor_min,
+            }),
+            stride: cfg.stride.max(1),
+            phase: 0,
+            y: vec![0.0; n],
+            checkpoint: Mat64::zeros(n, m),
+            checkpoint_valid: false,
+            rollback_enabled: cfg.rollback,
+            drift_events: 0,
+            abrupt_events: 0,
+            rollbacks: 0,
+            last_drift_at: None,
+        }
+    }
+
+    /// Fold one already-separated output sample `y` (no stride — the
+    /// caller decides what to observe). `t` is the global sample index.
+    pub fn observe_y(&mut self, y: &[f64], t: u64) -> Option<DriftClass> {
+        self.tracker.update(y);
+        let stat = self.tracker.whiteness_residual();
+        let event = self.detector.update(stat);
+        if let Some(class) = event {
+            self.governor.on_drift(t);
+            self.drift_events += 1;
+            if class == DriftClass::Abrupt {
+                self.abrupt_events += 1;
+            }
+            self.last_drift_at = Some(t);
+            // The checkpoint pre-dates the drift: keep it — it is exactly
+            // the state to restore if the boosted re-tracking diverges.
+        }
+        event
+    }
+
+    /// Offer one input sample; observed only on stride hits, computing
+    /// `y = B x` into the reusable scratch. `t` is the global sample index.
+    pub fn observe_x(&mut self, b: &Mat64, x: &[f64], t: u64) -> Option<DriftClass> {
+        self.phase += 1;
+        if self.phase < self.stride {
+            return None;
+        }
+        self.phase = 0;
+        let mut y = std::mem::take(&mut self.y);
+        b.matvec_into(x, &mut y);
+        let event = self.observe_y(&y, t);
+        self.y = y;
+        event
+    }
+
+    /// Offer a whole ingested chunk (rows ending at global sample index
+    /// `end_t`), observing stride hits against the post-update `b`.
+    /// Returns the most severe event seen in the chunk (abrupt > gradual).
+    pub fn observe_chunk(&mut self, b: &Mat64, chunk: &Mat64, end_t: u64) -> Option<DriftClass> {
+        let rows = chunk.rows() as u64;
+        let first = end_t.saturating_sub(rows.saturating_sub(1));
+        let mut worst = None;
+        for r in 0..chunk.rows() {
+            if let Some(class) = self.observe_x(b, chunk.row(r), first + r as u64) {
+                worst = Some(match (worst, class) {
+                    (Some(DriftClass::Abrupt), _) | (_, DriftClass::Abrupt) => DriftClass::Abrupt,
+                    _ => DriftClass::Gradual,
+                });
+            }
+        }
+        worst
+    }
+
+    /// The governed learning rate at global sample index `t`.
+    pub fn mu(&self, t: u64) -> f64 {
+        self.governor.mu(t, self.tracker.normalized_fourth_moment())
+    }
+
+    /// Record `b` as the recovery checkpoint if the stream currently looks
+    /// steady (detector armed, no alarm pending). Cheap: one `copy_from`
+    /// of the tiny n × m matrix, no allocation.
+    pub fn checkpoint_if_steady(&mut self, b: &Mat64) {
+        if self.detector.armed() {
+            self.checkpoint.copy_from(b);
+            self.checkpoint_valid = true;
+        }
+    }
+
+    /// The rollback target, if a steady-state checkpoint exists and
+    /// rollback is enabled.
+    pub fn rollback_b(&self) -> Option<&Mat64> {
+        (self.rollback_enabled && self.checkpoint_valid).then_some(&self.checkpoint)
+    }
+
+    /// A divergence was recovered (checkpoint or warm start): cool the
+    /// governor (cancel any boost) and disarm the detector until the
+    /// restored state re-settles — a boosted μ re-applied to a freshly
+    /// reset separator would just blow it up again, and the reset itself
+    /// spikes the whiteness statistic in a way that is not drift.
+    pub fn on_divergence_reset(&mut self) {
+        self.governor.on_rollback();
+        self.detector.disarm();
+    }
+
+    /// A rollback to the steady-state checkpoint was performed: count it
+    /// and cool exactly like any divergence recovery.
+    pub fn on_rollback(&mut self) {
+        self.rollbacks += 1;
+        self.on_divergence_reset();
+    }
+
+    /// Drift events detected over the session (abrupt + gradual).
+    pub fn drift_events(&self) -> u64 {
+        self.drift_events
+    }
+
+    /// Abrupt subset of [`Self::drift_events`].
+    pub fn abrupt_events(&self) -> u64 {
+        self.abrupt_events
+    }
+
+    /// Rollbacks performed over the session.
+    pub fn rollbacks(&self) -> u64 {
+        self.rollbacks
+    }
+
+    /// Global sample index of the most recent drift detection.
+    pub fn last_drift_at(&self) -> Option<u64> {
+        self.last_drift_at
+    }
+
+    /// The moment tracker (read access for reports/tests).
+    pub fn tracker(&self) -> &MomentTracker<f64> {
+        &self.tracker
+    }
+
+    /// Whether the detector is currently armed (steady state reached).
+    pub fn armed(&self) -> bool {
+        self.detector.armed()
+    }
+
+    /// Most recent whiteness-residual statistic.
+    pub fn last_stat(&self) -> f64 {
+        self.detector.last_stat()
+    }
+}
+
+/// Per-sample EASI SGD under the closed-loop governor — the
+/// `MuSchedule::Adaptive` counterpart of [`crate::ica::ScheduledSgd`],
+/// used by the offline drift study (`experiments::drift_study`) and the
+/// `track` CLI command. The streaming path does not use this wrapper: the
+/// coordinator drives an [`AdaptiveController`] at chunk granularity
+/// against any engine instead.
+pub struct AdaptiveSgd {
+    inner: EasiSgd<f64>,
+    ctrl: AdaptiveController,
+    /// Every drift alarm as (sample index, class) — for experiment
+    /// reports; the streaming path reads counters off the controller
+    /// instead.
+    events: Vec<(u64, DriftClass)>,
+}
+
+impl AdaptiveSgd {
+    pub fn new(n: usize, m: usize, mu0: f64, g: Nonlinearity, cfg: &AdaptConfig) -> Self {
+        Self {
+            inner: EasiSgd::with_identity_init(n, m, mu0, g),
+            ctrl: AdaptiveController::new(cfg, mu0, n, m),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn controller(&self) -> &AdaptiveController {
+        &self.ctrl
+    }
+
+    pub fn current_mu(&self) -> f64 {
+        self.ctrl.mu(self.inner.samples_seen())
+    }
+
+    /// Drift alarms fired so far, in order.
+    pub fn events(&self) -> &[(u64, DriftClass)] {
+        &self.events
+    }
+}
+
+impl Optimizer for AdaptiveSgd {
+    fn step(&mut self, x: &[f64]) {
+        let t = self.inner.samples_seen();
+        let mu = self.ctrl.mu(t);
+        self.inner.set_mu(mu);
+        self.inner.step(x);
+        if let Some(class) = self.ctrl.observe_x(self.inner.b(), x, t + 1) {
+            self.events.push((t + 1, class));
+        }
+    }
+
+    fn b(&self) -> &Mat<f64> {
+        self.inner.b()
+    }
+
+    fn b_mut(&mut self) -> &mut Mat<f64> {
+        self.inner.b_mut()
+    }
+
+    fn samples_seen(&self) -> u64 {
+        self.inner.samples_seen()
+    }
+
+    fn name(&self) -> &'static str {
+        "easi-sgd-adaptive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::Pcg32;
+
+    fn cfg() -> AdaptConfig {
+        AdaptConfig { enabled: true, ..AdaptConfig::default() }
+    }
+
+    #[test]
+    fn stride_decimates_observations() {
+        let mut ctrl = AdaptiveController::new(&cfg(), 0.01, 2, 4);
+        let b = crate::ica::init_b(2, 4);
+        let x = [0.1, -0.2, 0.3, 0.0];
+        for t in 0..100u64 {
+            ctrl.observe_x(&b, &x, t);
+        }
+        assert_eq!(ctrl.tracker().observed(), 100 / cfg().stride as u64);
+    }
+
+    #[test]
+    fn observe_chunk_matches_per_sample() {
+        let mut rng = Pcg32::seed(3);
+        let b = crate::ica::init_b(2, 4);
+        let chunk = Mat64::from_fn(64, 4, |_, _| rng.normal());
+        let mut a = AdaptiveController::new(&cfg(), 0.01, 2, 4);
+        let mut s = AdaptiveController::new(&cfg(), 0.01, 2, 4);
+        a.observe_chunk(&b, &chunk, 64);
+        for r in 0..chunk.rows() {
+            s.observe_x(&b, chunk.row(r), 1 + r as u64);
+        }
+        assert_eq!(a.tracker().observed(), s.tracker().observed());
+        assert_eq!(a.last_stat(), s.last_stat());
+    }
+
+    #[test]
+    fn checkpoint_only_when_armed() {
+        let mut ctrl = AdaptiveController::new(&cfg(), 0.01, 2, 2);
+        let b = Mat64::eye(2, 2);
+        ctrl.checkpoint_if_steady(&b);
+        assert!(ctrl.rollback_b().is_none(), "no checkpoint before arming");
+        // A white stream arms the detector (stat ~ 0 < armed_level)…
+        let s = 2f64.sqrt();
+        for t in 0..256u64 {
+            let y = if t % 2 == 0 { [s, 0.0] } else { [0.0, s] };
+            ctrl.observe_y(&y, t);
+        }
+        assert!(ctrl.armed());
+        ctrl.checkpoint_if_steady(&b);
+        let ck = ctrl.rollback_b().expect("checkpoint after arming");
+        assert_eq!(ck, &b);
+    }
+
+    #[test]
+    fn rollback_cools_and_disarms() {
+        let mut ctrl = AdaptiveController::new(&cfg(), 0.01, 2, 2);
+        let s = 2f64.sqrt();
+        for t in 0..256u64 {
+            let y = if t % 2 == 0 { [s, 0.0] } else { [0.0, s] };
+            ctrl.observe_y(&y, t);
+        }
+        ctrl.checkpoint_if_steady(&Mat64::eye(2, 2));
+        // Abrupt drift: correlated large outputs.
+        let mut drifted = false;
+        for t in 256..512u64 {
+            if ctrl.observe_y(&[2.0, 2.0], t).is_some() {
+                drifted = true;
+                break;
+            }
+        }
+        assert!(drifted, "correlated outputs must trip the detector");
+        assert_eq!(ctrl.drift_events(), 1);
+        assert_eq!(ctrl.abrupt_events(), 1);
+        assert!(ctrl.last_drift_at().is_some());
+        let boosted = ctrl.mu(ctrl.last_drift_at().unwrap());
+        ctrl.on_rollback();
+        assert_eq!(ctrl.rollbacks(), 1);
+        assert!(!ctrl.armed());
+        assert!(ctrl.mu(ctrl.last_drift_at().unwrap()) < boosted);
+    }
+
+    #[test]
+    fn rollback_disabled_yields_no_target() {
+        let mut c = cfg();
+        c.rollback = false;
+        let mut ctrl = AdaptiveController::new(&c, 0.01, 2, 2);
+        let s = 2f64.sqrt();
+        for t in 0..256u64 {
+            let y = if t % 2 == 0 { [s, 0.0] } else { [0.0, s] };
+            ctrl.observe_y(&y, t);
+        }
+        ctrl.checkpoint_if_steady(&Mat64::eye(2, 2));
+        assert!(ctrl.rollback_b().is_none());
+    }
+
+    #[test]
+    fn adaptive_sgd_steps_and_reports() {
+        let mut opt = AdaptiveSgd::new(2, 4, 0.01, Nonlinearity::Cube, &cfg());
+        let mut rng = Pcg32::seed(5);
+        for _ in 0..500 {
+            let x = [rng.normal(), rng.normal(), rng.normal(), rng.normal()];
+            opt.step(&x);
+        }
+        assert_eq!(opt.samples_seen(), 500);
+        assert_eq!(opt.name(), "easi-sgd-adaptive");
+        assert!(opt.b().is_finite());
+        assert!(opt.current_mu() > 0.0 && opt.current_mu() < MU_MAX + 1e-12);
+        assert_eq!(
+            opt.controller().tracker().observed(),
+            500 / cfg().stride as u64
+        );
+    }
+}

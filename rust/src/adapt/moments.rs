@@ -1,0 +1,251 @@
+//! Online moment tracker: exponentially-weighted estimates of the
+//! separated outputs' second- and fourth-order statistics.
+//!
+//! Two results motivate tracking these online. Wang & Lu ("The Scaling
+//! Limit of High-Dimensional Online ICA") show the steady-state error and
+//! tracking speed of online ICA are governed by the learning rate relative
+//! to the data's moments; Gültekin et al. ("Learning Rate Should Scale
+//! Inversely with High-Order Data Moments in High-Dimensional Online ICA")
+//! sharpen that to an inverse fourth-moment scaling law. The
+//! [`super::Governor`] closes the loop on exactly that quantity, and the
+//! [`super::DriftDetector`] reads the tracked `E[y yᵀ]` as its
+//! residual-whiteness statistic — the same `y·yᵀ` terms the EASI gradient
+//! already builds (`H = y yᵀ − I + …`), re-estimated here as slow EW
+//! averages instead of per-sample outer products.
+//!
+//! Zero allocations after construction (asserted by the counting-allocator
+//! test in `rust/tests/fused_hotpath.rs`), and generic over the request
+//! path's [`Scalar`] precision like the PR-3 kernels.
+
+use crate::linalg::{Mat, Scalar};
+
+/// EW estimator of per-channel variance/fourth moment and the full
+/// second-moment matrix `Ĉ = EW[y yᵀ]` of the separated outputs.
+pub struct MomentTracker<T: Scalar = f64> {
+    alpha: T,
+    /// Per-channel EW `E[y_i²]`.
+    m2: Vec<T>,
+    /// Per-channel EW `E[y_i⁴]`.
+    m4: Vec<T>,
+    /// EW `E[y yᵀ]` (n × n, symmetric by construction).
+    cross: Mat<T>,
+    observed: u64,
+}
+
+impl<T: Scalar> MomentTracker<T> {
+    /// Tracker for `n` output channels with EW coefficient `alpha`
+    /// (per observation; memory ≈ 1/alpha observations).
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n >= 1, "tracker needs at least one channel");
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha in (0, 1], got {alpha}");
+        Self {
+            alpha: T::scalar_from_f64(alpha),
+            m2: vec![T::zero(); n],
+            m4: vec![T::zero(); n],
+            cross: Mat::zeros(n, n),
+            observed: 0,
+        }
+    }
+
+    /// Output dimensionality n.
+    pub fn n(&self) -> usize {
+        self.m2.len()
+    }
+
+    /// Observations folded in so far.
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    /// Fold one output sample `y` (length n) into the estimates. The first
+    /// observation primes every estimate directly (the AGC idiom) so
+    /// startup is not a huge transient from zero.
+    pub fn update(&mut self, y: &[T]) {
+        let n = self.m2.len();
+        assert_eq!(y.len(), n, "moment tracker dimensionality mismatch");
+        let prime = self.observed == 0;
+        let a = self.alpha;
+        let one_minus = T::one() - a;
+        for i in 0..n {
+            let yi = y[i];
+            let y2 = yi * yi;
+            let y4 = y2 * y2;
+            if prime {
+                self.m2[i] = y2;
+                self.m4[i] = y4;
+            } else {
+                self.m2[i] = one_minus * self.m2[i] + a * y2;
+                self.m4[i] = one_minus * self.m4[i] + a * y4;
+            }
+            // Upper triangle + mirror: each (i, j) product computed once.
+            for j in i..n {
+                let prod = yi * y[j];
+                let c = if prime {
+                    prod
+                } else {
+                    one_minus * self.cross[(i, j)] + a * prod
+                };
+                self.cross[(i, j)] = c;
+                if j != i {
+                    self.cross[(j, i)] = c;
+                }
+            }
+        }
+        self.observed += 1;
+    }
+
+    /// EW `E[y_i²]`.
+    pub fn variance(&self, i: usize) -> T {
+        self.m2[i]
+    }
+
+    /// EW `E[y_i⁴]`.
+    pub fn fourth_moment(&self, i: usize) -> T {
+        self.m4[i]
+    }
+
+    /// The tracked second-moment matrix `Ĉ = EW[y yᵀ]`.
+    pub fn cross(&self) -> &Mat<T> {
+        &self.cross
+    }
+
+    /// Normalized fourth moment, averaged over channels:
+    /// `mean_i(E[y_i⁴] / E[y_i²]²)` — scale-invariant, equals `kurtosis+3`
+    /// for unit-variance channels. This is the "high-order data moment"
+    /// the governor's learning-rate floor scales inversely with.
+    pub fn normalized_fourth_moment(&self) -> f64 {
+        if self.observed == 0 {
+            return 3.0; // Gaussian prior until data arrives.
+        }
+        let n = self.m2.len();
+        let mut acc = 0.0;
+        for i in 0..n {
+            let v = self.m2[i].scalar_to_f64().max(1e-12);
+            acc += self.m4[i].scalar_to_f64() / (v * v);
+        }
+        acc / n as f64
+    }
+
+    /// Excess kurtosis of channel `i`: `E[y_i⁴]/E[y_i²]² − 3`.
+    pub fn kurtosis_excess(&self, i: usize) -> f64 {
+        let v = self.m2[i].scalar_to_f64().max(1e-12);
+        self.m4[i].scalar_to_f64() / (v * v) - 3.0
+    }
+
+    /// Residual-whiteness statistic: `‖Ĉ − I‖_F / n` — the RMS deviation
+    /// of the tracked second-moment matrix from the identity. At a
+    /// separating point with unit-variance outputs this fluctuates near
+    /// zero; under mixing drift the outputs decorrelate from the identity
+    /// and the statistic rises. This is the [`super::DriftDetector`]'s
+    /// input.
+    pub fn whiteness_residual(&self) -> f64 {
+        let n = self.m2.len();
+        let mut acc = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let target = if i == j { 1.0 } else { 0.0 };
+                let d = self.cross[(i, j)].scalar_to_f64() - target;
+                acc += d * d;
+            }
+        }
+        (acc / (n * n) as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_input_converges_to_exact_moments() {
+        let mut tr = MomentTracker::<f64>::new(2, 0.05);
+        for _ in 0..2000 {
+            tr.update(&[1.0, -1.0]);
+        }
+        assert!((tr.variance(0) - 1.0).abs() < 1e-9);
+        assert!((tr.fourth_moment(1) - 1.0).abs() < 1e-9);
+        assert!((tr.cross()[(0, 1)] + 1.0).abs() < 1e-9);
+        assert!((tr.cross()[(1, 0)] + 1.0).abs() < 1e-9);
+        // C = [[1,-1],[-1,1]] → C − I = [[0,-1],[-1,0]] → RMS = sqrt(2/4).
+        assert!((tr.whiteness_residual() - (0.5f64).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn first_observation_primes() {
+        let mut tr = MomentTracker::<f64>::new(2, 0.01);
+        tr.update(&[2.0, 0.5]);
+        assert_eq!(tr.observed(), 1);
+        assert_eq!(tr.variance(0), 4.0);
+        assert_eq!(tr.fourth_moment(0), 16.0);
+        assert_eq!(tr.cross()[(0, 1)], 1.0);
+    }
+
+    #[test]
+    fn alternating_white_pair_has_small_residual() {
+        // y alternating between (√2, 0) and (0, √2): time-average of y yᵀ
+        // is the identity, so the smoothed residual settles low.
+        let s = 2f64.sqrt();
+        let mut tr = MomentTracker::<f64>::new(2, 0.01);
+        for t in 0..20_000 {
+            if t % 2 == 0 {
+                tr.update(&[s, 0.0]);
+            } else {
+                tr.update(&[0.0, s]);
+            }
+        }
+        assert!(
+            tr.whiteness_residual() < 0.02,
+            "residual {} for a white stream",
+            tr.whiteness_residual()
+        );
+    }
+
+    #[test]
+    fn normalized_fourth_moment_is_scale_invariant() {
+        let mut a = MomentTracker::<f64>::new(1, 0.05);
+        let mut b = MomentTracker::<f64>::new(1, 0.05);
+        for t in 0..5000 {
+            let v = if t % 2 == 0 { 1.0 } else { -0.5 };
+            a.update(&[v]);
+            b.update(&[10.0 * v]);
+        }
+        assert!((a.normalized_fourth_moment() - b.normalized_fourth_moment()).abs() < 1e-6);
+        // Rademacher-like ±1 stream: m4/m2² = 1 (maximally sub-Gaussian).
+        let mut r = MomentTracker::<f64>::new(1, 0.05);
+        for t in 0..5000 {
+            r.update(&[if t % 2 == 0 { 1.0 } else { -1.0 }]);
+        }
+        assert!((r.normalized_fourth_moment() - 1.0).abs() < 1e-9);
+        assert!((r.kurtosis_excess(0) + 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_tracker_reports_gaussian_prior() {
+        let tr = MomentTracker::<f64>::new(3, 0.1);
+        assert_eq!(tr.normalized_fourth_moment(), 3.0);
+        assert_eq!(tr.observed(), 0);
+    }
+
+    #[test]
+    fn f32_instantiation_tracks_like_f64() {
+        let mut t64 = MomentTracker::<f64>::new(2, 0.02);
+        let mut t32 = MomentTracker::<f32>::new(2, 0.02);
+        let mut rng = crate::signal::Pcg32::seed(9);
+        for _ in 0..3000 {
+            let y = [rng.normal(), rng.normal()];
+            t64.update(&y);
+            t32.update(&[y[0] as f32, y[1] as f32]);
+        }
+        assert!((t64.whiteness_residual() - t32.whiteness_residual()).abs() < 1e-3);
+        assert!(
+            (t64.normalized_fourth_moment() - t32.normalized_fourth_moment()).abs() < 1e-2
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "dimensionality")]
+    fn wrong_dim_panics() {
+        let mut tr = MomentTracker::<f64>::new(2, 0.1);
+        tr.update(&[1.0]);
+    }
+}

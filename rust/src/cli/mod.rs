@@ -122,14 +122,16 @@ pub fn usage() -> &'static str {
        run            stream an experiment through the coordinator\n\
                       --config FILE | [--m N --n N --optimizer sgd|smbgd|mbgd\n\
                       --engine native|pjrt --precision f32|f64 --samples N\n\
-                      --mu F --gamma F --beta F --p N\n\
-                      --mixing static|rotating|switching --seed N]\n\
+                      --mu F --gamma F --beta F --p N --adapt on|off\n\
+                      --mixing static|rotating|switching|switch_once|drift_onset\n\
+                      --switch-at N --seed N]\n\
        serve-many     multi-session hub: N concurrent sessions sharded over a\n\
                       worker pool, with per-shard backpressure and an\n\
                       aggregate throughput table\n\
                       [--config FILE | --sessions N --shards N --samples N\n\
-                       --mixing a,b,c --precision f32,f64 (cycled per session)\n\
-                       --capacity N --seed N --seed-stride N\n\
+                       --mixing a,b,c --precision f32,f64 --adapt on,off\n\
+                       (cycled per session) --capacity N --seed N\n\
+                       --seed-stride N --switch-at N\n\
                        --mu F --gamma F --beta F --p N --m N --n N\n\
                        --optimizer sgd|smbgd|mbgd --engine native|pjrt\n\
                        --artifacts DIR]\n\
@@ -142,14 +144,21 @@ pub fn usage() -> &'static str {
        ablation       A1/A2: --what hyper|nonlinearity [--runs N]\n\
        tracking       A3: adaptive tracking vs frozen FastICA\n\
                       [--omega F --samples N]\n\
+       track          adaptive control plane drift study: detection latency\n\
+                      and re-convergence of the closed loop (adapt subsystem)\n\
+                      vs the best fixed DecayToFloor schedules under one\n\
+                      abrupt mixing switch\n\
+                      [--samples N --switch-at N --m N --n N --seed N\n\
+                       --mu F --tau F --threshold F]\n\
        dump-datapath  E4 (Figs. 1-2): print the datapath block structure\n\
                       [--m N --n N --arch sgd|smbgd]\n\
        separate       run FastICA on a synthetic dataset and report metrics\n\
                       [--m N --n N --samples N --seed N]\n\
-       bench          §Perf hot-path suite (f64 + f32 kernels) →\n\
+       bench          §Perf hot-path suite (f64 + f32 + adapt kernels) →\n\
                       BENCH_hotpath.json (repo root)\n\
                       [--quick --out PATH --check BASELINE.json\n\
-                       --tolerance F --min-fused-speedup F --min-f32-speedup F]\n\
+                       --tolerance F --min-fused-speedup F --min-f32-speedup F\n\
+                       --max-adapt-overhead F]\n\
                       with --check, exits nonzero if any gated kernel's\n\
                       machine-normalized cost regressed past the tolerance\n\
        help           this text\n"

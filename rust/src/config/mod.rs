@@ -10,6 +10,6 @@ mod types;
 
 pub use parse::{parse, ParseError, Value};
 pub use types::{
-    EngineKind, ExperimentConfig, HubScenario, OptimizerConfig, OptimizerKind, Precision,
-    SignalConfig,
+    AdaptConfig, EngineKind, ExperimentConfig, HubScenario, OptimizerConfig, OptimizerKind,
+    Precision, SignalConfig,
 };

@@ -110,12 +110,15 @@ impl Default for OptimizerConfig {
 pub struct SignalConfig {
     /// Source bank: "sub_gaussian" | "eeg".
     pub bank: String,
-    /// Mixing model: "static" | "rotating" | "switching".
+    /// Mixing model: "static" | "rotating" | "switching" | "switch_once"
+    /// | "drift_onset".
     pub mixing: String,
-    /// Rotating-model angular velocity (rad/sample).
+    /// Rotating/drift-onset angular velocity (rad/sample).
     pub omega: f64,
     /// Switching-model segment length (samples).
     pub period: u64,
+    /// Switch-once / drift-onset event sample index.
+    pub switch_at: u64,
     /// Condition-number cap for random mixing draws.
     pub max_cond: f64,
 }
@@ -127,7 +130,113 @@ impl Default for SignalConfig {
             mixing: "static".into(),
             omega: 1e-4,
             period: 50_000,
+            switch_at: 50_000,
             max_cond: 10.0,
+        }
+    }
+}
+
+/// Adaptive control plane settings (`rust/src/adapt`): the per-session
+/// closed loop of moment tracker → drift detector → learning-rate
+/// governor. Off by default — a disabled session is bit-identical to the
+/// PR-3 coordinator.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptConfig {
+    /// Enable the closed loop for this session.
+    pub enabled: bool,
+    /// Observe every `stride`-th sample (decimation bounds the hot-path
+    /// overhead; the §Perf suite gates it).
+    pub stride: usize,
+    /// EW coefficient of the moment tracker (per observation).
+    pub alpha: f64,
+    /// Detector arms once the whiteness residual falls below this.
+    pub armed_level: f64,
+    /// Instantaneous residual at/above this → abrupt drift.
+    pub abrupt_level: f64,
+    /// Page–Hinkley insensitivity band δ.
+    pub ph_delta: f64,
+    /// Page–Hinkley alarm threshold λ.
+    pub ph_lambda: f64,
+    /// μ multiplier applied on a detected drift (≥ 1).
+    pub boost: f64,
+    /// Anneal time constant τ (samples).
+    pub tau: f64,
+    /// Inverse-moment floor constant: μ_floor = floor_c / m̂₄ (clamped).
+    pub floor_c: f64,
+    /// Lower clamp of the μ floor.
+    pub floor_min: f64,
+    /// Restore the last steady-state checkpoint (instead of the warm
+    /// start) when a post-drift step diverges.
+    pub rollback: bool,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            stride: 4,
+            alpha: 0.02,
+            armed_level: 0.25,
+            abrupt_level: 0.6,
+            ph_delta: 0.04,
+            ph_lambda: 3.0,
+            boost: 2.0,
+            tau: 4000.0,
+            floor_c: 0.003,
+            floor_min: 2e-4,
+            rollback: true,
+        }
+    }
+}
+
+impl AdaptConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.stride == 0 {
+            bail!("adapt.stride must be >= 1");
+        }
+        if !(self.alpha > 0.0 && self.alpha <= 1.0) {
+            bail!("adapt.alpha must be in (0, 1], got {}", self.alpha);
+        }
+        if !(self.armed_level > 0.0 && self.armed_level < self.abrupt_level) {
+            bail!(
+                "need 0 < adapt.armed_level < adapt.abrupt_level, got {} / {}",
+                self.armed_level,
+                self.abrupt_level
+            );
+        }
+        if self.ph_delta < 0.0 {
+            bail!("adapt.ph_delta must be non-negative");
+        }
+        if self.ph_lambda <= 0.0 {
+            bail!("adapt.ph_lambda must be positive");
+        }
+        if self.boost < 1.0 {
+            bail!("adapt.boost must be >= 1, got {}", self.boost);
+        }
+        if self.tau <= 0.0 {
+            bail!("adapt.tau must be positive");
+        }
+        if self.floor_c < 0.0 {
+            bail!("adapt.floor_c must be non-negative");
+        }
+        let mu_max = crate::adapt::MU_MAX;
+        if !(self.floor_min > 0.0 && self.floor_min <= mu_max) {
+            bail!("adapt.floor_min must be in (0, {mu_max}], got {}", self.floor_min);
+        }
+        Ok(())
+    }
+
+    /// The schedule-space description of this configuration's governor law
+    /// (the open-loop envelope; see `ica::MuSchedule::Adaptive`). The
+    /// floor is capped at μ₀ exactly like `adapt::Governor::floor`, so
+    /// micro-μ configurations (μ₀ below `floor_min`) describe a valid
+    /// schedule instead of panicking its `validate`.
+    pub fn schedule(&self, mu0: f64) -> crate::ica::MuSchedule {
+        crate::ica::MuSchedule::Adaptive {
+            mu0,
+            boost: self.boost,
+            tau: self.tau,
+            floor_min: self.floor_min.min(mu0),
         }
     }
 }
@@ -147,6 +256,8 @@ pub struct ExperimentConfig {
     pub convergence_threshold: f64,
     pub optimizer: OptimizerConfig,
     pub signal: SignalConfig,
+    /// Adaptive control plane (drift detection + μ governor).
+    pub adapt: AdaptConfig,
     pub engine: EngineKind,
     /// Request-path arithmetic precision (native engine only).
     pub precision: Precision,
@@ -165,6 +276,7 @@ impl Default for ExperimentConfig {
             convergence_threshold: 0.05,
             optimizer: OptimizerConfig::default(),
             signal: SignalConfig::default(),
+            adapt: AdaptConfig::default(),
             engine: EngineKind::Native,
             precision: Precision::F64,
             artifacts_dir: "artifacts".into(),
@@ -212,7 +324,20 @@ impl ExperimentConfig {
                 "signal.mixing" => cfg.signal.mixing = want_str(k, value)?,
                 "signal.omega" => cfg.signal.omega = want_float(k, value)?,
                 "signal.period" => cfg.signal.period = want_usize(k, value)? as u64,
+                "signal.switch_at" => cfg.signal.switch_at = want_usize(k, value)? as u64,
                 "signal.max_cond" => cfg.signal.max_cond = want_float(k, value)?,
+                "adapt.enabled" => cfg.adapt.enabled = want_bool(k, value)?,
+                "adapt.stride" => cfg.adapt.stride = want_usize(k, value)?,
+                "adapt.alpha" => cfg.adapt.alpha = want_float(k, value)?,
+                "adapt.armed_level" => cfg.adapt.armed_level = want_float(k, value)?,
+                "adapt.abrupt_level" => cfg.adapt.abrupt_level = want_float(k, value)?,
+                "adapt.ph_delta" => cfg.adapt.ph_delta = want_float(k, value)?,
+                "adapt.ph_lambda" => cfg.adapt.ph_lambda = want_float(k, value)?,
+                "adapt.boost" => cfg.adapt.boost = want_float(k, value)?,
+                "adapt.tau" => cfg.adapt.tau = want_float(k, value)?,
+                "adapt.floor_c" => cfg.adapt.floor_c = want_float(k, value)?,
+                "adapt.floor_min" => cfg.adapt.floor_min = want_float(k, value)?,
+                "adapt.rollback" => cfg.adapt.rollback = want_bool(k, value)?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -242,9 +367,10 @@ impl ExperimentConfig {
             other => bail!("unknown signal.bank '{other}'"),
         }
         match self.signal.mixing.as_str() {
-            "static" | "rotating" | "switching" => {}
+            "static" | "rotating" | "switching" | "switch_once" | "drift_onset" => {}
             other => bail!("unknown signal.mixing '{other}'"),
         }
+        self.adapt.validate()?;
         if self.engine == EngineKind::Pjrt && self.precision == Precision::F32 {
             bail!(
                 "precision = \"f32\" requires the native engine (PJRT artifacts fix their dtype)"
@@ -287,6 +413,11 @@ pub struct HubScenario {
     /// base config's precision for every session. This is how one
     /// `serve-many` process runs f32 and f64 tenants side by side.
     pub precision: Vec<Precision>,
+    /// Adaptive-control enablement cycled across sessions (booleans);
+    /// empty inherits the base config's `adapt.enabled` for every
+    /// session. `hub.adapt = [true, false]` runs governed and fixed-μ
+    /// tenants side by side.
+    pub adapt: Vec<bool>,
     /// Session `i` streams with seed `base.seed + i * seed_stride`.
     pub seed_stride: u64,
     /// Template every session config derives from.
@@ -301,6 +432,7 @@ impl Default for HubScenario {
             channel_capacity: 4096,
             mixing: Vec::new(),
             precision: Vec::new(),
+            adapt: Vec::new(),
             seed_stride: 1,
             base: ExperimentConfig::default(),
         }
@@ -328,6 +460,7 @@ impl HubScenario {
                         .map(|s| Precision::parse(s.as_str()))
                         .collect::<Result<Vec<_>>>()?
                 }
+                "hub.adapt" => scenario.adapt = want_bool_list(&key, &value)?,
                 k if k.starts_with("hub.") => bail!("unknown config key '{k}'"),
                 _ => {
                     base_map.insert(key, value);
@@ -357,7 +490,7 @@ impl HubScenario {
         }
         for m in &self.mixing {
             match m.as_str() {
-                "static" | "rotating" | "switching" => {}
+                "static" | "rotating" | "switching" | "switch_once" | "drift_onset" => {}
                 other => bail!("unknown hub.mixing kind '{other}'"),
             }
         }
@@ -380,6 +513,9 @@ impl HubScenario {
         }
         if !self.precision.is_empty() {
             cfg.precision = self.precision[id % self.precision.len()];
+        }
+        if !self.adapt.is_empty() {
+            cfg.adapt.enabled = self.adapt[id % self.adapt.len()];
         }
         cfg.name = format!("{}-{id}", self.base.name);
         cfg
@@ -405,6 +541,22 @@ fn want_usize(key: &str, v: &Value) -> Result<usize> {
         bail!("'{key}' must be non-negative, got {i}");
     }
     Ok(i as usize)
+}
+
+fn want_bool(key: &str, v: &Value) -> Result<bool> {
+    v.as_bool().with_context(|| format!("'{key}' must be a boolean"))
+}
+
+/// Accept either a single boolean or a flat array of booleans.
+fn want_bool_list(key: &str, v: &Value) -> Result<Vec<bool>> {
+    match v {
+        Value::Bool(b) => Ok(vec![*b]),
+        Value::Array(items) => items
+            .iter()
+            .map(|it| it.as_bool().with_context(|| format!("'{key}' must contain booleans")))
+            .collect(),
+        _ => bail!("'{key}' must be a boolean or an array of booleans"),
+    }
 }
 
 /// Accept either a single string or a flat array of strings.
@@ -569,6 +721,83 @@ mod tests {
         assert!(ExperimentConfig::from_toml(doc).is_err());
         let doc = "engine = \"native\"\nprecision = \"f32\"";
         assert!(ExperimentConfig::from_toml(doc).is_ok());
+    }
+
+    #[test]
+    fn adapt_config_keys_round_trip() {
+        let doc = r#"
+            [adapt]
+            enabled = true
+            stride = 2
+            alpha = 0.05
+            boost = 3.0
+            tau = 2000
+            floor_c = 0.002
+            floor_min = 0.0005
+            rollback = false
+        "#;
+        let cfg = ExperimentConfig::from_toml(doc).unwrap();
+        assert!(cfg.adapt.enabled);
+        assert_eq!(cfg.adapt.stride, 2);
+        assert_eq!(cfg.adapt.alpha, 0.05);
+        assert_eq!(cfg.adapt.boost, 3.0);
+        assert_eq!(cfg.adapt.tau, 2000.0);
+        assert_eq!(cfg.adapt.floor_c, 0.002);
+        assert_eq!(cfg.adapt.floor_min, 0.0005);
+        assert!(!cfg.adapt.rollback);
+        // Defaults: disabled, valid.
+        let d = ExperimentConfig::default();
+        assert!(!d.adapt.enabled);
+        d.adapt.validate().unwrap();
+    }
+
+    #[test]
+    fn adapt_config_rejects_nonsense() {
+        assert!(ExperimentConfig::from_toml("[adapt]\nstride = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[adapt]\nboost = 0.5").is_err());
+        assert!(ExperimentConfig::from_toml("[adapt]\nalpha = 2.0").is_err());
+        assert!(ExperimentConfig::from_toml("[adapt]\narmed_level = 0.9").is_err());
+        assert!(ExperimentConfig::from_toml("[adapt]\nenabled = \"yes\"").is_err());
+        assert!(ExperimentConfig::from_toml("[adapt]\ntypo = 1").is_err());
+    }
+
+    #[test]
+    fn adapt_schedule_mapping() {
+        let cfg = AdaptConfig::default();
+        let s = cfg.schedule(0.01);
+        s.validate();
+        assert!(matches!(
+            s,
+            crate::ica::MuSchedule::Adaptive { mu0, boost, .. }
+                if mu0 == 0.01 && boost == cfg.boost
+        ));
+        // Micro-μ configs stay valid: the floor caps at μ₀ like the
+        // governor's.
+        cfg.schedule(1e-4).validate();
+    }
+
+    #[test]
+    fn drift_mixing_kinds_accepted() {
+        let doc = "[signal]\nmixing = \"switch_once\"\nswitch_at = 12000";
+        let cfg = ExperimentConfig::from_toml(doc).unwrap();
+        assert_eq!(cfg.signal.mixing, "switch_once");
+        assert_eq!(cfg.signal.switch_at, 12_000);
+        assert!(ExperimentConfig::from_toml("[signal]\nmixing = \"drift_onset\"").is_ok());
+        assert_eq!(ExperimentConfig::default().signal.switch_at, 50_000);
+    }
+
+    #[test]
+    fn hub_scenario_cycles_adapt() {
+        let sc = HubScenario::from_toml("[hub]\nadapt = [true, false]").unwrap();
+        assert!(sc.session_config(0).adapt.enabled);
+        assert!(!sc.session_config(1).adapt.enabled);
+        assert!(sc.session_config(2).adapt.enabled);
+        // Single boolean form and inheritance.
+        let sc = HubScenario::from_toml("[hub]\nadapt = true").unwrap();
+        assert!(sc.session_config(3).adapt.enabled);
+        let sc = HubScenario::from_toml("[adapt]\nenabled = true").unwrap();
+        assert!(sc.session_config(2).adapt.enabled);
+        assert!(HubScenario::from_toml("[hub]\nadapt = [1, 0]").is_err());
     }
 
     #[test]

@@ -165,4 +165,80 @@ mod tests {
         let mut ch = Chunker::new(3, 2);
         ch.push(&[1.0]);
     }
+
+    #[test]
+    fn partial_flush_at_stream_end_via_push_block() {
+        // The server's end-of-stream path: a block leaves a partial chunk
+        // buffered; take_partial drains exactly those rows, in order, and
+        // the chunker is reusable afterwards.
+        let mut ch = Chunker::new(2, 4);
+        let block = Mat64::from_fn(6, 2, |i, j| (2 * i + j) as f64);
+        let mut chunks = 0;
+        ch.push_block(&block, |c| -> Result<(), ()> {
+            assert_eq!(c.shape(), (4, 2));
+            chunks += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(chunks, 1);
+        assert_eq!(ch.pending(), 2);
+        let tail = ch.take_partial().expect("partial tail");
+        assert_eq!(tail.shape(), (2, 2));
+        assert_eq!(tail.as_slice(), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(ch.pending(), 0);
+        assert!(ch.take_partial().is_none(), "double drain must be empty");
+        // Reusable: the next pushes start a fresh chunk.
+        assert!(ch.push(&[0.0, 0.0]).is_none());
+        assert_eq!(ch.pending(), 1);
+        assert_eq!(ch.total_pushed(), 7);
+    }
+
+    #[test]
+    fn chunk_size_one_emits_every_sample() {
+        let mut ch = Chunker::new(3, 1);
+        for i in 0..5 {
+            let x = [i as f64, 0.0, 0.0];
+            let chunk = ch.push(&x).expect("chunk size 1 emits per push");
+            assert_eq!(chunk.shape(), (1, 3));
+            assert_eq!(chunk[(0, 0)], i as f64);
+            assert_eq!(ch.pending(), 0);
+        }
+        assert!(ch.take_partial().is_none(), "size-1 chunker never buffers");
+        // And the block path emits one chunk per row.
+        let block = Mat64::from_fn(4, 3, |i, _| i as f64);
+        let mut emitted = 0;
+        ch.push_block(&block, |_| -> Result<(), ()> {
+            emitted += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(emitted, 4);
+        assert_eq!(ch.total_pushed(), 9);
+    }
+
+    #[test]
+    fn blocks_straddling_chunk_boundaries_preserve_order() {
+        // Block size 3 against chunk size 5: every chunk boundary lands
+        // mid-block; the emitted stream must still be the identity
+        // sequence with correct chunk shapes.
+        let mut ch = Chunker::new(1, 5);
+        let mut seen = Vec::new();
+        let mut next = 0.0;
+        for _ in 0..4 {
+            let block = Mat64::from_fn(3, 1, |_, _| {
+                let v = next;
+                next += 1.0;
+                v
+            });
+            ch.push_block(&block, |chunk| -> Result<(), ()> {
+                assert_eq!(chunk.shape(), (5, 1));
+                seen.extend_from_slice(chunk.as_slice());
+                Ok(())
+            })
+            .unwrap();
+        }
+        assert_eq!(seen, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(ch.pending(), 2, "12 pushed, 10 emitted");
+        assert_eq!(ch.take_partial().unwrap().as_slice(), &[10.0, 11.0]);
+    }
 }

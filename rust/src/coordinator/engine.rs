@@ -32,6 +32,9 @@ pub trait Engine: Send {
     fn describe(&self) -> String;
     /// Install a fresh separation matrix (divergence recovery).
     fn reset_b(&mut self, b: Mat64);
+    /// Install a new learning rate μ (the adaptive control plane's
+    /// actuator; takes effect from the next submitted chunk).
+    fn set_mu(&mut self, mu: f64);
 }
 
 /// Chunk size for the native engines, shared across precisions: aligned
@@ -92,6 +95,10 @@ impl Engine for NativeEngine {
 
     fn reset_b(&mut self, b: Mat64) {
         self.opt.b_mut().copy_from(&b);
+    }
+
+    fn set_mu(&mut self, mu: f64) {
+        self.opt.set_mu(mu);
     }
 }
 
@@ -165,6 +172,12 @@ impl<T: Scalar> Engine for CastNativeEngine<T> {
     fn reset_b(&mut self, b: Mat64) {
         assert_eq!(b.shape(), self.opt.b().shape());
         self.opt.b_mut().copy_from(&b.cast());
+    }
+
+    fn set_mu(&mut self, mu: f64) {
+        // μ lives in f64 hyperparameter space for every precision; the
+        // optimizer narrows it per step/batch.
+        self.opt.set_mu(mu);
     }
 }
 
@@ -302,6 +315,11 @@ impl Engine for PjrtEngine {
         // The Eq. 1 accumulator is stale after a reset too.
         self.hhat.fill(0.0);
     }
+
+    fn set_mu(&mut self, mu: f64) {
+        assert!(mu > 0.0);
+        self.mu = mu;
+    }
 }
 
 /// Build the engine selected by the config (engine kind × precision).
@@ -376,6 +394,32 @@ mod tests {
         assert!(e32.describe().starts_with("native-f32/"));
         cfg.engine = EngineKind::Pjrt;
         assert!(make_engine(&cfg, Nonlinearity::Cube).is_err(), "pjrt+f32 must be rejected");
+    }
+
+    #[test]
+    fn set_mu_governs_update_magnitude() {
+        // The adaptive control plane's actuator: same chunk, smaller μ,
+        // smaller step — across both native engine flavours.
+        let mut cfg = ExperimentConfig::default();
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        let mut rng = Pcg32::seed(3);
+        let xs = Mat64::from_fn(64, cfg.m, |_, _| rng.normal());
+        let b0 = crate::ica::init_b(cfg.n, cfg.m);
+
+        for precision in [Precision::F64, Precision::F32] {
+            cfg.precision = precision;
+            let mut fast = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+            let mut slow = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+            slow.set_mu(1e-6);
+            fast.submit_chunk(&xs).unwrap();
+            slow.submit_chunk(&xs).unwrap();
+            let moved_fast = fast.b().max_abs_diff(&b0);
+            let moved_slow = slow.b().max_abs_diff(&b0);
+            assert!(
+                moved_slow < moved_fast / 10.0,
+                "{precision:?}: slow {moved_slow} vs fast {moved_fast}"
+            );
+        }
     }
 
     #[test]

@@ -31,8 +31,8 @@
 
 use super::engine::make_engine;
 use super::server::{
-    block_capacity, build_stream, drive_stream, RunSummary, ServerOptions, SessionRunner,
-    StreamEvent,
+    block_capacity, build_stream, drive_stream, safe_rate, RunSummary, ServerOptions,
+    SessionRunner, StreamEvent,
 };
 use super::state::{StateDirectory, StateStore};
 use crate::config::ExperimentConfig;
@@ -115,9 +115,12 @@ impl HubMetrics {
         self.consumed.load(Ordering::Relaxed)
     }
 
-    /// Aggregate consumed samples/sec since the hub started.
+    /// Aggregate consumed samples/sec since the hub started. Returns 0
+    /// for a window shorter than one timer tick (a tiny scenario can
+    /// finish before the clock advances — the rate is unknowable then,
+    /// not astronomical).
     pub fn aggregate_sps(&self) -> f64 {
-        self.samples_consumed() as f64 / self.started.elapsed().as_secs_f64().max(1e-12)
+        safe_rate(self.samples_consumed(), self.started.elapsed().as_secs_f64())
     }
 
     /// Current ingest backlog of one shard, in messages: events queued in
@@ -172,13 +175,21 @@ impl HubSummary {
     pub fn render_table(&self) -> String {
         let mut out = String::new();
         out.push_str(
-            "session  shard  engine                     samples      sps    amari  resets\n",
+            "session  shard  engine                     samples      sps    amari  resets  \
+             drifts\n",
         );
         for r in &self.sessions {
             let s = &r.summary;
             out.push_str(&format!(
-                "{:>7}  {:>5}  {:<24} {:>9}  {:>7.0}  {:>7.4}  {:>6}\n",
-                r.id, r.shard, s.engine, s.samples, s.throughput_sps, s.final_amari, s.resets
+                "{:>7}  {:>5}  {:<24} {:>9}  {:>7.0}  {:>7.4}  {:>6}  {:>6}\n",
+                r.id,
+                r.shard,
+                s.engine,
+                s.samples,
+                s.throughput_sps,
+                s.final_amari,
+                s.resets,
+                s.drift_events
             ));
         }
         out.push_str(&format!(
@@ -395,7 +406,7 @@ impl Hub {
             shards,
             elapsed_secs: elapsed,
             total_samples,
-            aggregate_sps: total_samples as f64 / elapsed.max(1e-12),
+            aggregate_sps: safe_rate(total_samples, elapsed),
             max_queue_depth,
             sessions,
         })
@@ -491,6 +502,71 @@ mod tests {
         let sum = run_hub(vec![small_cfg(3)], Nonlinearity::Cube, opts).unwrap();
         assert_eq!(sum.sessions.len(), 1);
         assert_eq!(sum.sessions[0].shard, 0, "session 0 always lands on shard 0");
+    }
+
+    #[test]
+    fn zero_duration_summary_renders_finite_rates() {
+        // A scenario finishing inside one timer tick must render 0 rates,
+        // not inf/NaN (satellite bugfix: zero-duration rate math).
+        let summary = HubSummary {
+            sessions: vec![SessionReport {
+                id: 0,
+                shard: 0,
+                name: "s0".into(),
+                summary: RunSummary {
+                    samples: 128,
+                    tail_dropped: 0,
+                    elapsed_secs: 0.0,
+                    throughput_sps: safe_rate(128, 0.0),
+                    engine: "native/easi-smbgd".into(),
+                    final_amari: 0.1,
+                    converged_at: None,
+                    resets: 0,
+                    drift_events: 0,
+                    rollbacks: 0,
+                    amari_history: Vec::new(),
+                    b: crate::linalg::Mat64::eye(2, 4),
+                },
+            }],
+            shards: 1,
+            elapsed_secs: 0.0,
+            total_samples: 128,
+            aggregate_sps: safe_rate(128, 0.0),
+            max_queue_depth: 0,
+        };
+        assert_eq!(summary.aggregate_sps, 0.0);
+        let table = summary.render_table();
+        assert!(!table.contains("inf") && !table.contains("NaN"), "{table}");
+        // And the live-metrics gauge on a fresh (zero-elapsed) hub is
+        // finite too.
+        let metrics = HubMetrics::new(1);
+        assert!(metrics.aggregate_sps().is_finite());
+    }
+
+    #[test]
+    fn hub_cycles_adaptive_sessions() {
+        // hub.adapt cycled per session: even ids governed, odd ids fixed.
+        let sc = crate::config::HubScenario::from_toml(
+            r#"
+            samples = 3000
+            [optimizer]
+            mu = 0.004
+            [hub]
+            sessions = 4
+            shards = 2
+            adapt = [true, false]
+            "#,
+        )
+        .unwrap();
+        let cfgs = sc.session_configs();
+        assert!(cfgs[0].adapt.enabled && cfgs[2].adapt.enabled);
+        assert!(!cfgs[1].adapt.enabled && !cfgs[3].adapt.enabled);
+        let sum = run_hub(cfgs, Nonlinearity::Cube, HubOptions::from_scenario(&sc)).unwrap();
+        assert_eq!(sum.sessions.len(), 4);
+        // Fixed-μ sessions report a quiescent control plane.
+        assert_eq!(sum.sessions[1].summary.drift_events, 0);
+        assert_eq!(sum.sessions[3].summary.rollbacks, 0);
+        assert!(sum.render_table().contains("drifts"));
     }
 
     #[test]

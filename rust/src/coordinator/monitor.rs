@@ -128,6 +128,31 @@ mod tests {
     }
 
     #[test]
+    fn rearm_reports_second_convergence_after_switch() {
+        // The re-convergence contract the adaptive control plane relies
+        // on: after an abrupt mixing switch (simulated by bad records) and
+        // a rearm, the monitor must latch a *second* converged_at rather
+        // than staying on the pre-switch one.
+        let mut mon = Monitor::new(crit());
+        let a = Mat64::eye(2, 2);
+        let b_good = Mat64::eye(2, 2);
+        let b_bad = Mat64::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        mon.record(&b_good, &a, 100);
+        mon.record(&b_good, &a, 200);
+        assert_eq!(mon.converged_at(), Some(100), "first convergence");
+        // Mixing switch: the control plane rearms; the separator is bad
+        // for a while, then re-converges.
+        mon.rearm();
+        mon.record(&b_bad, &a, 300);
+        mon.record(&b_bad, &a, 400);
+        assert_eq!(mon.converged_at(), None, "must not stay latched");
+        mon.record(&b_good, &a, 500);
+        mon.record(&b_good, &a, 600);
+        assert_eq!(mon.converged_at(), Some(500), "second convergence reported");
+        assert_eq!(mon.history().len(), 6, "history spans both regimes");
+    }
+
+    #[test]
     fn recent_max_window() {
         let mut mon = Monitor::new(crit());
         let a = Mat64::eye(2, 2);

@@ -15,11 +15,13 @@ use super::batcher::Chunker;
 use super::engine::Engine;
 use super::monitor::{Monitor, MonitorPoint};
 use super::state::StateStore;
+use crate::adapt::AdaptiveController;
 use crate::config::ExperimentConfig;
 use crate::ica::{ConvergenceCriterion, Nonlinearity};
 use crate::linalg::Mat64;
 use crate::signal::{
-    MixedStream, Pcg32, RotatingMixing, SourceBank, StaticMixing, SwitchingMixing,
+    DriftOnsetMixing, MixedStream, Pcg32, RotatingMixing, SourceBank, StaticMixing,
+    SwitchOnceMixing, SwitchingMixing,
 };
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -50,6 +52,17 @@ pub(crate) const PRODUCER_BLOCK: usize = 256;
 /// Channel capacity in producer blocks for a capacity expressed in samples.
 pub(crate) fn block_capacity(samples: usize) -> usize {
     samples.max(1).div_ceil(PRODUCER_BLOCK).max(1)
+}
+
+/// Samples/sec that is safe against zero-duration windows: a run that
+/// finishes inside one timer tick reports 0 rather than an inf/NaN (or
+/// absurd 10¹²-scale) rate in the rendered tables.
+pub(crate) fn safe_rate(count: u64, secs: f64) -> f64 {
+    if secs.is_finite() && secs > 0.0 {
+        count as f64 / secs
+    } else {
+        0.0
+    }
 }
 
 /// Drain `total` samples out of `stream` as [`StreamEvent`]s: an initial
@@ -179,6 +192,12 @@ pub struct RunSummary {
     pub converged_at: Option<u64>,
     /// Times the divergence guard reset the separator.
     pub resets: u64,
+    /// Drift events the adaptive control plane detected (0 with
+    /// `adapt.enabled = false`).
+    pub drift_events: u64,
+    /// Divergence recoveries served from the adaptive checkpoint instead
+    /// of the warm start (subset of `resets`).
+    pub rollbacks: u64,
     pub amari_history: Vec<MonitorPoint>,
     /// Final separation matrix.
     pub b: Mat64,
@@ -208,6 +227,21 @@ pub fn build_stream(cfg: &ExperimentConfig) -> Result<MixedStream> {
             cfg.signal.max_cond,
             cfg.seed ^ 0x5717_C41F,
         )),
+        "switch_once" => Box::new(SwitchOnceMixing::random(
+            &mut rng,
+            cfg.m,
+            cfg.n,
+            cfg.signal.max_cond,
+            cfg.signal.switch_at,
+        )),
+        "drift_onset" => Box::new(DriftOnsetMixing::random(
+            &mut rng,
+            cfg.m,
+            cfg.n,
+            cfg.signal.max_cond,
+            cfg.signal.omega,
+            cfg.signal.switch_at,
+        )),
         other => bail!("unknown signal.mixing '{other}'"),
     };
     Ok(MixedStream::new(bank, mixing, rng))
@@ -231,6 +265,11 @@ pub struct SessionRunner {
     warm_start: Mat64,
     divergence_bound: f64,
     resets: u64,
+    /// The adaptive control plane (per session, `adapt.enabled`): drift
+    /// detection on the separated outputs + μ governor + rollback
+    /// checkpoint. `None` leaves the session bit-identical to the
+    /// fixed-μ coordinator.
+    adapt: Option<AdaptiveController>,
     /// Latched at the first ingested event so a session's elapsed/sps
     /// measure its own service window, not hub setup time.
     started: Option<Instant>,
@@ -244,6 +283,10 @@ impl SessionRunner {
         state: StateStore,
     ) -> Self {
         let chunker = Chunker::new(cfg.m, engine.chunk_size());
+        let adapt = cfg
+            .adapt
+            .enabled
+            .then(|| AdaptiveController::new(&cfg.adapt, cfg.optimizer.mu, cfg.n, cfg.m));
         Self {
             chunker,
             monitor: Monitor::new(options.criterion),
@@ -254,6 +297,7 @@ impl SessionRunner {
             warm_start: crate::ica::init_b(cfg.n, cfg.m),
             divergence_bound: options.divergence_bound,
             resets: 0,
+            adapt,
             started: None,
             engine,
         }
@@ -290,6 +334,7 @@ impl SessionRunner {
             warm_start,
             divergence_bound,
             resets,
+            adapt,
             ..
         } = self;
         chunker.push_block(&block, |chunk| -> Result<()> {
@@ -298,9 +343,46 @@ impl SessionRunner {
             // Divergence guard: large-mu EASI under abrupt mixing
             // switches can blow up; recover like an adaptive filter.
             if !b.is_finite() || b.max_abs() > *divergence_bound {
-                engine.reset_b(warm_start.clone());
+                // Rollback protocol: with the control plane active and a
+                // steady-state checkpoint on hand, restore that (the last
+                // known-good separator) instead of the cold warm start.
+                // Either way the governor cools and the detector disarms —
+                // re-applying a boosted μ to a freshly reset separator
+                // would just diverge again, and the reset's whiteness
+                // spike is not drift.
+                let mut recovered = false;
+                if let Some(ctrl) = adapt.as_mut() {
+                    if let Some(ck) = ctrl.rollback_b() {
+                        let ck = ck.clone();
+                        engine.reset_b(ck);
+                        recovered = true;
+                    }
+                    if recovered {
+                        ctrl.on_rollback();
+                    } else {
+                        ctrl.on_divergence_reset();
+                    }
+                    engine.set_mu(ctrl.mu(engine.samples_done()));
+                }
+                if !recovered {
+                    engine.reset_b(warm_start.clone());
+                }
                 monitor.rearm();
                 *resets += 1;
+            } else if let Some(ctrl) = adapt.as_mut() {
+                // Closed loop: observe the separated outputs of this
+                // chunk (strided), detect drift, govern μ, and keep the
+                // recovery checkpoint fresh while steady.
+                let done = engine.samples_done();
+                if ctrl.observe_chunk(&b, chunk, done).is_some() {
+                    // Re-arm convergence detection so the monitor reports
+                    // a post-drift `converged_at` instead of staying
+                    // latched on the pre-drift one.
+                    monitor.rearm();
+                } else {
+                    ctrl.checkpoint_if_steady(&b);
+                }
+                engine.set_mu(ctrl.mu(done));
             }
             state.publish(engine.b(), engine.samples_done());
             if *have_a {
@@ -320,6 +402,11 @@ impl SessionRunner {
         &self.state
     }
 
+    /// The adaptive controller, if this session runs the control plane.
+    pub fn controller(&self) -> Option<&AdaptiveController> {
+        self.adapt.as_ref()
+    }
+
     /// Finalize: drop the partial tail chunk and assemble the summary.
     pub fn finish(mut self) -> RunSummary {
         let tail = self.chunker.take_partial().map(|t| t.rows() as u64).unwrap_or(0);
@@ -334,11 +421,13 @@ impl SessionRunner {
             samples,
             tail_dropped: tail,
             elapsed_secs: elapsed,
-            throughput_sps: samples as f64 / elapsed.max(1e-12),
+            throughput_sps: safe_rate(samples, elapsed),
             engine: self.engine.describe(),
             final_amari,
             converged_at: self.monitor.converged_at(),
             resets: self.resets,
+            drift_events: self.adapt.as_ref().map_or(0, |c| c.drift_events()),
+            rollbacks: self.adapt.as_ref().map_or(0, |c| c.rollbacks()),
             amari_history: self.monitor.history().to_vec(),
             b: self.engine.b(),
         }
@@ -487,5 +576,77 @@ mod tests {
         let mut cfg = small_cfg();
         cfg.signal.bank = "nope".into();
         assert!(build_stream(&cfg).is_err());
+    }
+
+    #[test]
+    fn safe_rate_guards_zero_duration() {
+        assert_eq!(safe_rate(1000, 2.0), 500.0);
+        assert_eq!(safe_rate(1000, 0.0), 0.0, "zero-duration run must not blow up");
+        assert_eq!(safe_rate(1000, -1.0), 0.0);
+        assert_eq!(safe_rate(1000, f64::NAN), 0.0);
+        assert_eq!(safe_rate(0, 0.0), 0.0);
+        assert!(safe_rate(u64::MAX, 1.0).is_finite());
+    }
+
+    #[test]
+    fn switch_once_stream_builds_and_switches() {
+        let mut cfg = small_cfg();
+        cfg.signal.mixing = "switch_once".into();
+        cfg.signal.switch_at = 100;
+        let mut stream = build_stream(&cfg).unwrap();
+        let a0 = stream.current_mixing();
+        let mut x = vec![0.0; cfg.m];
+        for _ in 0..150 {
+            stream.next_into(&mut x, None);
+        }
+        assert!(stream.current_mixing().max_abs_diff(&a0) > 0.05);
+        cfg.signal.mixing = "drift_onset".into();
+        assert!(build_stream(&cfg).is_ok());
+    }
+
+    #[test]
+    fn adaptive_session_detects_switch_and_reconverges() {
+        // The closed loop end to end through the streaming coordinator:
+        // a mixing switch mid-stream must be detected (drift_events ≥ 1)
+        // and the monitor — re-armed by the control plane — must latch a
+        // *post-switch* convergence.
+        let mut cfg = ExperimentConfig::default();
+        cfg.samples = 60_000;
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        cfg.optimizer.mu = 0.01;
+        cfg.signal.mixing = "switch_once".into();
+        cfg.signal.switch_at = 25_000;
+        cfg.adapt.enabled = true;
+        let sum = run_experiment(&cfg, Nonlinearity::Cube).unwrap();
+        assert!(sum.drift_events >= 1, "switch not detected");
+        assert!(sum.final_amari < 0.35, "post-switch amari {}", sum.final_amari);
+        let conv = sum.converged_at.expect("monitor should re-latch after re-arm");
+        assert!(
+            conv > 25_000,
+            "converged_at {conv} should postdate the switch (monitor re-armed)"
+        );
+    }
+
+    #[test]
+    fn disabled_adapt_knobs_do_not_touch_the_pipeline() {
+        // With adapt.enabled = false no controller is built, so the
+        // adapt.* tuning knobs must have exactly zero effect on the run —
+        // wildly different knob values, bit-identical B. (This is the
+        // observable form of "a disabled session is the PR-3 fixed-μ
+        // coordinator": any control-plane code leaking onto the disabled
+        // path would move B.)
+        let cfg = small_cfg();
+        let mut tuned = cfg.clone();
+        tuned.adapt.stride = 1;
+        tuned.adapt.alpha = 0.5;
+        tuned.adapt.boost = 9.0;
+        tuned.adapt.tau = 10.0;
+        tuned.adapt.rollback = false;
+        assert!(!tuned.adapt.enabled, "small_cfg must leave adapt off");
+        let a = run_experiment(&cfg, Nonlinearity::Cube).unwrap();
+        let b = run_experiment(&tuned, Nonlinearity::Cube).unwrap();
+        assert_eq!(a.b, b.b);
+        assert_eq!(a.drift_events, 0);
+        assert_eq!(a.rollbacks, 0);
     }
 }

@@ -3,11 +3,13 @@
 //! harness (`cargo bench`). DESIGN.md §6 maps experiment ids to these.
 
 pub mod convergence_study;
+pub mod drift;
 pub mod numerics;
 pub mod sweeps;
 pub mod tracking;
 
 pub use convergence_study::{e1_convergence, E1Params, E1Result};
+pub use drift::{drift_study, DriftReport, DriftStudyParams, DriftTrace};
 pub use numerics::{a4_quantization, a5_schedules, QuantRow, ScheduleRow};
 pub use sweeps::{a1_hyper_sweep, a2_nonlinearity, e3_depth_sweep, DepthRow, HyperRow, NonlinRow};
 pub use tracking::{a3_adaptive_tracking, TrackingParams, TrackingResult};

@@ -171,6 +171,12 @@ impl<T: Scalar> Optimizer<T> for EasiSgd<T> {
     fn name(&self) -> &'static str {
         "easi-sgd"
     }
+
+    fn set_mu(&mut self, mu: f64) {
+        // Delegate to the inherent setter so the μ invariant lives in
+        // exactly one place.
+        EasiSgd::set_mu(self, mu);
+    }
 }
 
 #[cfg(test)]

@@ -125,6 +125,13 @@ impl<T: Scalar> Optimizer<T> for Mbgd<T> {
     fn name(&self) -> &'static str {
         "easi-mbgd"
     }
+
+    /// New μ takes effect at the next batch-update application (`−μ/P`
+    /// is evaluated when the batch completes).
+    fn set_mu(&mut self, mu: f64) {
+        assert!(mu > 0.0);
+        self.mu = mu;
+    }
 }
 
 #[cfg(test)]

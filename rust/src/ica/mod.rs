@@ -56,6 +56,12 @@ pub trait Optimizer<T: Scalar = f64>: Send {
     /// Optimizer name for reports.
     fn name(&self) -> &'static str;
 
+    /// Install a new learning rate μ (the adaptive control plane's knob —
+    /// `coordinator::Engine::set_mu` forwards here). Default: no-op, for
+    /// optimizers whose rate is not externally governable (e.g.
+    /// [`ScheduledSgd`], whose schedule owns μ).
+    fn set_mu(&mut self, _mu: f64) {}
+
     /// Feed a whole row-major batch (default: loop over rows).
     fn step_batch(&mut self, xs: &Mat<T>) {
         for t in 0..xs.rows() {

@@ -25,6 +25,16 @@ pub enum MuSchedule {
     /// Decay to a floor: max(μ₀/(1+t/τ), floor) — keeps residual
     /// adaptivity for tracking after settling.
     DecayToFloor { mu0: f64, tau: f64, floor: f64 },
+    /// Closed-loop schedule (PR 4 — the adaptive control plane): anneal
+    /// like `DecayToFloor`, but **boost** μ to `boost·μ₀` when the drift
+    /// detector fires (restarting the anneal clock) and scale the floor
+    /// inversely with the tracked fourth moment of the outputs (Gültekin
+    /// et al.). `mu_at` evaluates only the *open-loop envelope*
+    /// `max(μ₀/(1+t/τ), floor_min)` — the boost and moment floor need
+    /// runtime state, which lives in [`crate::adapt::Governor`]; drive it
+    /// through [`crate::adapt::AdaptiveSgd`] or the coordinator's
+    /// `adapt.enabled` config, not [`ScheduledSgd`].
+    Adaptive { mu0: f64, boost: f64, tau: f64, floor_min: f64 },
 }
 
 impl MuSchedule {
@@ -38,6 +48,10 @@ impl MuSchedule {
             }
             Self::DecayToFloor { mu0, tau, floor } => {
                 (mu0 / (1.0 + t as f64 / tau)).max(floor)
+            }
+            // Open-loop envelope only; see the variant docs.
+            Self::Adaptive { mu0, tau, floor_min, .. } => {
+                (mu0 / (1.0 + t as f64 / tau)).max(floor_min)
             }
         }
     }
@@ -53,6 +67,9 @@ impl MuSchedule {
             }
             Self::DecayToFloor { mu0, tau, floor } => {
                 mu0 > 0.0 && tau > 0.0 && floor > 0.0 && floor <= mu0
+            }
+            Self::Adaptive { mu0, boost, tau, floor_min } => {
+                mu0 > 0.0 && boost >= 1.0 && tau > 0.0 && floor_min > 0.0 && floor_min <= mu0
             }
         };
         assert!(ok, "invalid schedule {self:?}");
@@ -74,6 +91,11 @@ pub struct ScheduledSgd<T: Scalar = f64> {
 impl<T: Scalar> ScheduledSgd<T> {
     pub fn new(inner: super::EasiSgd<T>, schedule: MuSchedule) -> Self {
         schedule.validate();
+        assert!(
+            !matches!(schedule, MuSchedule::Adaptive { .. }),
+            "MuSchedule::Adaptive is closed-loop; drive it through adapt::AdaptiveSgd \
+             or the coordinator's adapt.enabled config"
+        );
         Self { inner, schedule }
     }
 
@@ -139,6 +161,33 @@ mod tests {
     #[should_panic(expected = "invalid schedule")]
     fn bad_schedule_rejected() {
         MuSchedule::DecayToFloor { mu0: 0.001, tau: 10.0, floor: 0.01 }.validate();
+    }
+
+    #[test]
+    fn adaptive_envelope_is_decay_to_floor() {
+        // Open-loop, mu_at of Adaptive equals DecayToFloor at floor_min
+        // (the boost/moment terms are runtime state in adapt::Governor).
+        let a = MuSchedule::Adaptive { mu0: 0.01, boost: 2.0, tau: 100.0, floor_min: 0.002 };
+        a.validate();
+        let d = MuSchedule::DecayToFloor { mu0: 0.01, tau: 100.0, floor: 0.002 };
+        for t in [0u64, 50, 100, 10_000, 1_000_000] {
+            assert_eq!(a.mu_at(t), d.mu_at(t));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid schedule")]
+    fn adaptive_bad_boost_rejected() {
+        MuSchedule::Adaptive { mu0: 0.01, boost: 0.5, tau: 100.0, floor_min: 0.002 }.validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "closed-loop")]
+    fn scheduled_sgd_rejects_adaptive() {
+        let _ = ScheduledSgd::new(
+            EasiSgd::with_identity_init(2, 4, 0.01, Nonlinearity::Cube),
+            MuSchedule::Adaptive { mu0: 0.01, boost: 2.0, tau: 100.0, floor_min: 0.002 },
+        );
     }
 
     #[test]

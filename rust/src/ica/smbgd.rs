@@ -258,6 +258,15 @@ impl<T: Scalar> Optimizer<T> for Smbgd<T> {
     fn name(&self) -> &'static str {
         "easi-smbgd"
     }
+
+    /// New μ takes effect from the next gradient accumulation; the Ĥ terms
+    /// already accumulated keep the μ they were weighted with (matching
+    /// the hardware, where μ is a coefficient-bank constant swapped
+    /// between batches).
+    fn set_mu(&mut self, mu: f64) {
+        assert!(mu > 0.0);
+        self.params.mu = mu;
+    }
 }
 
 #[cfg(test)]

@@ -26,6 +26,7 @@
 // the generated code.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
 
+pub mod adapt;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -8,8 +8,8 @@ use easi_ica::cli::{usage, Args};
 use easi_ica::config::{EngineKind, ExperimentConfig, HubScenario, OptimizerKind, Precision};
 use easi_ica::coordinator::{run_experiment, run_scenario, RunSummary};
 use easi_ica::experiments::{
-    a1_hyper_sweep, a2_nonlinearity, a3_adaptive_tracking, e1_convergence, e3_depth_sweep,
-    E1Params, TrackingParams,
+    a1_hyper_sweep, a2_nonlinearity, a3_adaptive_tracking, drift_study, e1_convergence,
+    e3_depth_sweep, DriftStudyParams, E1Params, TrackingParams,
 };
 use easi_ica::fpga::{self, Calib};
 use easi_ica::ica::{fastica, FastIcaParams, Nonlinearity, SmbgdParams};
@@ -38,6 +38,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "depth-sweep" => cmd_depth_sweep(args),
         "ablation" => cmd_ablation(args),
         "tracking" => cmd_tracking(args),
+        "track" => cmd_track(args),
         "dump-datapath" => cmd_dump_datapath(args),
         "separate" => cmd_separate(args),
         "bench" => cmd_bench(args),
@@ -66,7 +67,17 @@ fn apply_base_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if let Some(e) = args.get("engine") {
         cfg.engine = EngineKind::parse(e)?;
     }
+    cfg.signal.switch_at = args.get_u64("switch-at", cfg.signal.switch_at)?;
     Ok(())
+}
+
+/// Parse an on/off flag value (`--adapt on`, `--adapt off`).
+fn parse_on_off(name: &str, v: &str) -> Result<bool> {
+    match v {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => bail!("--{name} must be on|off, got '{other}'"),
+    }
 }
 
 /// Resolve the artifacts directory: an explicit `--artifacts` flag wins;
@@ -87,7 +98,7 @@ fn resolve_artifacts(cfg: &mut ExperimentConfig, args: &Args) {
 fn cmd_run(args: &Args) -> Result<()> {
     args.expect_only(&[
         "config", "m", "n", "optimizer", "engine", "precision", "samples", "mu", "gamma",
-        "beta", "p", "mixing", "omega", "seed", "artifacts",
+        "beta", "p", "mixing", "omega", "seed", "artifacts", "adapt", "switch-at",
     ])?;
     let mut cfg = if let Some(path) = args.get("config") {
         ExperimentConfig::load(path)?
@@ -101,19 +112,27 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(mx) = args.get("mixing") {
         cfg.signal.mixing = mx.to_string();
     }
+    if let Some(a) = args.get("adapt") {
+        cfg.adapt.enabled = parse_on_off("adapt", a)?;
+    }
     cfg.signal.omega = args.get_f64("omega", cfg.signal.omega)?;
     resolve_artifacts(&mut cfg, args);
     cfg.validate()?;
 
     println!(
-        "running: optimizer {}, m={} n={}, {} samples, mixing {}, precision {}",
+        "running: optimizer {}, m={} n={}, {} samples, mixing {}, precision {}, adapt {}",
         cfg.optimizer.kind.name(),
         cfg.m,
         cfg.n,
         cfg.samples,
         cfg.signal.mixing,
-        cfg.precision.name()
+        cfg.precision.name(),
+        if cfg.adapt.enabled { "on" } else { "off" }
     );
+    if cfg.adapt.enabled {
+        // The governor law this session will run, in schedule space.
+        println!("adapt law:    {:?}", cfg.adapt.schedule(cfg.optimizer.mu));
+    }
     let summary = run_experiment(&cfg, Nonlinearity::Cube)?;
     print_summary(&summary);
     Ok(())
@@ -128,6 +147,9 @@ fn print_summary(s: &RunSummary) {
     match s.converged_at {
         Some(at) => println!("converged at: {at} samples"),
         None => println!("converged at: (not converged)"),
+    }
+    if s.drift_events > 0 || s.rollbacks > 0 {
+        println!("drift events: {} ({} rollback(s))", s.drift_events, s.rollbacks);
     }
     // Compact trajectory snapshot.
     let hist = &s.amari_history;
@@ -145,7 +167,7 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
     args.expect_only(&[
         "config", "sessions", "shards", "samples", "capacity", "mixing", "precision", "mu",
         "gamma", "beta", "p", "optimizer", "engine", "seed", "seed-stride", "m", "n",
-        "artifacts",
+        "artifacts", "adapt", "switch-at",
     ])?;
     let mut sc = if let Some(path) = args.get("config") {
         HubScenario::load(path)?
@@ -167,6 +189,14 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
         sc.precision = p
             .split(',')
             .map(|s| Precision::parse(s.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(a) = args.get("adapt") {
+        // Comma list cycled across sessions: on,off runs governed and
+        // fixed-μ tenants side by side.
+        sc.adapt = a
+            .split(',')
+            .map(|s| parse_on_off("adapt", s.trim()))
             .collect::<Result<Vec<_>>>()?;
     }
     apply_base_overrides(&mut sc.base, args)?;
@@ -286,6 +316,42 @@ fn cmd_tracking(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `track` — the adaptive-control-plane drift study: detection latency
+/// and re-convergence of the closed loop vs the best fixed schedules
+/// under one abrupt mixing switch.
+fn cmd_track(args: &Args) -> Result<()> {
+    args.expect_only(&["m", "n", "samples", "switch-at", "seed", "mu", "tau", "threshold"])?;
+    let d = DriftStudyParams::default();
+    let params = DriftStudyParams {
+        m: args.get_usize("m", d.m)?,
+        n: args.get_usize("n", d.n)?,
+        samples: args.get_usize("samples", d.samples)?,
+        switch_at: args.get_usize("switch-at", d.switch_at)?,
+        seed: args.get_u64("seed", d.seed)?,
+        mu0: args.get_f64("mu", d.mu0)?,
+        tau: args.get_f64("tau", d.tau)?,
+        threshold: args.get_f64("threshold", d.threshold)?,
+        ..d
+    };
+    let report = drift_study(&params);
+    print!("{}", report.render());
+    // The recovery-speedup line only means something when a switch
+    // happened (--switch-at 0 is the stationary, false-positive probe).
+    if params.switch_at > 0 {
+        let best_fixed = report.best_fixed_reconvergence();
+        if let Some(t) = report.trace("adaptive") {
+            if let Some(re) = t.reconvergence_samples(report.switch_at) {
+                println!(
+                    "\nadaptive re-converged in {re} samples vs best fixed {best_fixed} \
+                     ({:.1}x faster)",
+                    best_fixed as f64 / re.max(1) as f64
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 /// `dump-datapath` — E4 (the executable Figs. 1–2).
 fn cmd_dump_datapath(args: &Args) -> Result<()> {
     args.expect_only(&["m", "n", "arch", "g"])?;
@@ -328,6 +394,7 @@ fn cmd_dump_datapath(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     args.expect_only(&[
         "quick", "out", "check", "tolerance", "min-fused-speedup", "min-f32-speedup",
+        "max-adapt-overhead",
     ])?;
     let quick = args.switch("quick");
     let report = easi_ica::perf::run_hotpath_suite(quick);
@@ -343,12 +410,14 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let tolerance = args.get_f64("tolerance", 0.30)?;
         let floor = args.get_f64("min-fused-speedup", 0.0)?;
         let f32_floor = args.get_f64("min-f32-speedup", 0.0)?;
+        let adapt_ceiling = args.get_f64("max-adapt-overhead", 0.0)?;
         let gate = easi_ica::perf::gate_against_file(
             &report,
             std::path::Path::new(baseline),
             tolerance,
             floor,
             f32_floor,
+            adapt_ceiling,
         )?;
         if gate.failures.is_empty() {
             println!(

@@ -21,7 +21,8 @@
 //! - **Determinism.** All inputs are seeded `Pcg32` draws; "deterministic"
 //!   here means the workload, not the wall clock.
 
-use crate::config::{ExperimentConfig, OptimizerConfig, OptimizerKind};
+use crate::adapt::AdaptiveController;
+use crate::config::{AdaptConfig, ExperimentConfig, OptimizerConfig, OptimizerKind};
 use crate::coordinator::{make_engine, run_streaming, ServerOptions, StateStore};
 use crate::ica::{self, EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
 use crate::linalg::{fused, FusedScratch, Mat32, Mat64};
@@ -532,6 +533,8 @@ pub fn run_hotpath_suite(quick: bool) -> BenchReport {
         suite_shape(&mut rep, m, n, warmup, runs, rows);
     }
 
+    adapt_overhead(&mut rep, warmup, runs, rows);
+
     coordinator_e2e(&mut rep, quick);
 
     println!();
@@ -699,6 +702,79 @@ fn suite_shape(rep: &mut BenchReport, m: usize, n: usize, warmup: usize, runs: u
     );
 }
 
+/// The adaptive control plane's hot-path cost at the canonical gate shape
+/// (m=16, n=8): the per-observation tracker+detector kernel alone, and
+/// the closed-loop "fused step + strided observation + governor" workload
+/// vs the bare fused step. The derived `adapt_overhead_fraction` is what
+/// the CI `--max-adapt-overhead` flag gates (< 10%): the control plane
+/// must cost near-zero on the fused hot path.
+fn adapt_overhead(rep: &mut BenchReport, warmup: usize, runs: usize, rows: usize) {
+    let (m, n) = (16, 8);
+    let mut rng = Pcg32::seed(0xADA);
+    let xs = Mat64::from_fn(rows, m, |_, _| rng.normal());
+    let iters = rows as u64;
+    let mut s = FusedScratch::new(n, m);
+
+    // Reference: the bare fused step on the identical workload (measured
+    // here rather than reusing the suite_shape record so the ratio is a
+    // same-section, same-inputs comparison).
+    let mut b_ref = ica::init_b(n, m);
+    let step = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            fused::relative_gradient_step_into(
+                &mut b_ref,
+                black_box(xs.row(t)),
+                |v| v * v * v,
+                BENCH_MU,
+                &mut s,
+            );
+        }
+        black_box(&b_ref);
+    });
+    push(rep, "fused step (adapt reference)", "adapt_step_ref", m, n, runs, &step);
+
+    // The observation kernel alone, every sample (stride 1): y = Bx,
+    // moment EW update, whiteness statistic, detector.
+    let every = AdaptConfig { stride: 1, ..AdaptConfig::default() };
+    let mut ctrl = AdaptiveController::new(&every, BENCH_MU, n, m);
+    let b = ica::init_b(n, m);
+    let obs = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            ctrl.observe_x(&b, black_box(xs.row(t)), t as u64);
+        }
+        black_box(ctrl.drift_events());
+    });
+    push(rep, "adapt observe (stride 1)", "adapt_observe", m, n, runs, &obs);
+
+    // The closed loop exactly as the coordinator runs it: fused step every
+    // sample, observation at the default stride, one governor read + μ
+    // install per engine chunk (64 samples on the native SGD path).
+    let deflt = AdaptConfig::default();
+    let mut ctrl2 = AdaptiveController::new(&deflt, BENCH_MU, n, m);
+    let mut b2 = ica::init_b(n, m);
+    let mut opt_mu = BENCH_MU;
+    let governed = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            fused::relative_gradient_step_into(
+                &mut b2,
+                black_box(xs.row(t)),
+                |v| v * v * v,
+                opt_mu,
+                &mut s,
+            );
+            ctrl2.observe_x(&b2, black_box(xs.row(t)), t as u64);
+            if t % 64 == 63 {
+                opt_mu = ctrl2.mu(t as u64);
+            }
+        }
+        black_box(&b2);
+    });
+    push(rep, "fused step + adapt (stride 4)", "adapt_step", m, n, runs, &governed);
+
+    let overhead = ((governed.per_iter_ns() - step.per_iter_ns()) / step.per_iter_ns()).max(0.0);
+    rep.derived.push(("adapt_overhead_fraction".to_string(), overhead));
+}
+
 fn push(
     rep: &mut BenchReport,
     what: &str,
@@ -770,12 +846,16 @@ pub struct GateReport {
 /// suite. If `min_fused_speedup > 0`, the `fused_step_speedup_m8_n8`
 /// derived value must also meet that floor; if `min_f32_speedup > 0`,
 /// `f32_over_f64_step_speedup` (the m=16, n=8 canonical shape) must too.
+/// If `max_adapt_overhead > 0`, the derived `adapt_overhead_fraction`
+/// (the control plane's cost on the fused step, machine-invariant like
+/// the speedup ratios) must stay at or below that ceiling.
 pub fn check_against_baseline(
     current: &BenchReport,
     baseline: &Json,
     tolerance: f64,
     min_fused_speedup: f64,
     min_f32_speedup: f64,
+    max_adapt_overhead: f64,
 ) -> Result<GateReport> {
     let base_calib = baseline
         .get("calibration_ns_per_iter")
@@ -833,6 +913,17 @@ pub fn check_against_baseline(
     };
     floor("fused_step_speedup_m8_n8", min_fused_speedup);
     floor("f32_over_f64_step_speedup", min_f32_speedup);
+    if max_adapt_overhead > 0.0 {
+        match current.derived_value("adapt_overhead_fraction") {
+            Some(v) if v <= max_adapt_overhead => {}
+            Some(v) => gate.failures.push(format!(
+                "adapt_overhead_fraction = {v:.3} above allowed {max_adapt_overhead:.3}"
+            )),
+            None => gate
+                .failures
+                .push("adapt_overhead_fraction missing from current suite".to_string()),
+        }
+    }
     Ok(gate)
 }
 
@@ -843,12 +934,20 @@ pub fn gate_against_file(
     tolerance: f64,
     min_fused_speedup: f64,
     min_f32_speedup: f64,
+    max_adapt_overhead: f64,
 ) -> Result<GateReport> {
     let text = std::fs::read_to_string(baseline_path)
         .with_context(|| format!("reading baseline {}", baseline_path.display()))?;
     let baseline = Json::parse(&text)
         .with_context(|| format!("parsing baseline {}", baseline_path.display()))?;
-    check_against_baseline(current, &baseline, tolerance, min_fused_speedup, min_f32_speedup)
+    check_against_baseline(
+        current,
+        &baseline,
+        tolerance,
+        min_fused_speedup,
+        min_f32_speedup,
+        max_adapt_overhead,
+    )
 }
 
 #[cfg(test)]
@@ -888,6 +987,7 @@ mod tests {
             derived: vec![
                 ("fused_step_speedup_m8_n8".to_string(), 2.0),
                 ("f32_over_f64_step_speedup".to_string(), 1.6),
+                ("adapt_overhead_fraction".to_string(), 0.05),
             ],
         }
     }
@@ -940,7 +1040,7 @@ mod tests {
     fn gate_passes_identical_report() {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 1.5, 1.5).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 1.5, 1.5, 0.10).unwrap();
         assert_eq!(gate.checked, 1, "only the gated record is compared");
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
@@ -955,7 +1055,7 @@ mod tests {
         for r in &mut slower.records {
             r.ns_per_iter *= 3.0;
         }
-        let gate = check_against_baseline(&slower, &baseline, 0.30, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&slower, &baseline, 0.30, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 
@@ -966,13 +1066,13 @@ mod tests {
 
         let mut regressed = rep.clone();
         regressed.records[0].ns_per_iter *= 1.5; // 50% > 30% tolerance
-        let gate = check_against_baseline(&regressed, &baseline, 0.30, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&regressed, &baseline, 0.30, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("regressed"));
 
         let mut missing = rep.clone();
         missing.records.remove(0);
-        let gate = check_against_baseline(&missing, &baseline, 0.30, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&missing, &baseline, 0.30, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -981,9 +1081,30 @@ mod tests {
     fn gate_enforces_fused_speedup_floor() {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 2.5, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 2.5, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("fused_step_speedup"));
+    }
+
+    #[test]
+    fn gate_enforces_adapt_overhead_ceiling() {
+        // tiny_report carries adapt_overhead_fraction = 0.05: a 10% ceiling
+        // passes, a 1% ceiling fails, 0 disables the check, and a report
+        // missing the derived value fails when the ceiling is requested.
+        let rep = tiny_report();
+        let baseline = Json::parse(&rep.to_json()).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.10).unwrap();
+        assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.01).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("adapt_overhead_fraction"));
+        let mut bare = rep.clone();
+        bare.derived.retain(|(k, _)| k != "adapt_overhead_fraction");
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0).unwrap();
+        assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.10).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("missing"));
     }
 
     #[test]
@@ -993,7 +1114,7 @@ mod tests {
         let baseline = Json::parse(&rep.to_json()).unwrap();
         let mut noisy = rep.clone();
         noisy.records[1].ns_per_iter *= 100.0;
-        let gate = check_against_baseline(&noisy, &baseline, 0.30, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&noisy, &baseline, 0.30, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty());
     }
 
@@ -1016,9 +1137,11 @@ mod tests {
             derived: vec![
                 ("fused_step_speedup_m8_n8".to_string(), 2.0),
                 ("f32_over_f64_step_speedup".to_string(), 1.6),
+                ("adapt_overhead_fraction".to_string(), 0.05),
             ],
         };
         let mut f32_gated = 0usize;
+        let mut adapt_gated = 0usize;
         for rec in baseline.get("records").and_then(Json::as_array).unwrap() {
             let gated = rec.get("gated").and_then(Json::as_bool).unwrap();
             let kernel = rec.get("kernel").and_then(Json::as_str).unwrap().to_string();
@@ -1039,6 +1162,9 @@ mod tests {
             if gated && kernel.ends_with("_f32") {
                 f32_gated += 1;
             }
+            if gated && kernel.starts_with("adapt_") {
+                adapt_gated += 1;
+            }
             current.records.push(BenchRecord {
                 name: rec.get("name").and_then(Json::as_str).unwrap().to_string(),
                 kernel,
@@ -1055,7 +1181,10 @@ mod tests {
         // The perf-smoke gate covers the single-precision kernels too:
         // every suite shape contributes gated f32 grad/step/block records.
         assert!(f32_gated >= 3 * SUITE_SHAPES.len(), "only {f32_gated} gated f32 records");
-        let gate = check_against_baseline(&current, &baseline, 0.30, 1.5, 1.2).unwrap();
+        // …and the adaptive control plane's tracker+detector records
+        // (reference step, observation kernel, governed step).
+        assert!(adapt_gated >= 3, "only {adapt_gated} gated adapt records");
+        let gate = check_against_baseline(&current, &baseline, 0.30, 1.5, 1.2, 0.10).unwrap();
         assert!(gate.checked > 0);
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
@@ -1065,10 +1194,10 @@ mod tests {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
         // tiny_report carries f32_over_f64_step_speedup = 1.6.
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 2.5).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 2.5, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("f32_over_f64_step_speedup"));
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 1.2).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 1.2, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 }

@@ -12,6 +12,12 @@
 //! - [`SwitchingMixing`] — abrupt re-draws every `period` samples: the
 //!   worst case for momentum (large γ hurts, small γ recovers — the γ
 //!   trade-off discussed in §IV).
+//! - [`SwitchOnceMixing`] — one abrupt switch between two independent
+//!   draws at a known sample index: the controlled drift event the
+//!   adaptive control plane's detection-latency and re-convergence
+//!   measurements need (`experiments::drift_study`, `easi-ica track`).
+//! - [`DriftOnsetMixing`] — static until a known sample index, then
+//!   slow rotation: the controlled *gradual*-drift onset.
 
 use super::rng::Pcg32;
 use crate::linalg::{jacobi_eig, Mat64};
@@ -172,6 +178,73 @@ impl MixingModel for SwitchingMixing {
     }
 }
 
+/// One abrupt switch: an independent well-conditioned mixing before and
+/// after sample `at`. Unlike [`SwitchingMixing`]'s periodic re-draws, the
+/// event time is a single known constant — which is what lets the drift
+/// experiments measure detection latency and re-convergence exactly.
+pub struct SwitchOnceMixing {
+    before: Mat64,
+    after: Mat64,
+    pub at: u64,
+}
+
+impl SwitchOnceMixing {
+    pub fn new(before: Mat64, after: Mat64, at: u64) -> Self {
+        assert_eq!(before.shape(), after.shape(), "switch must preserve shape");
+        assert!(before.rows() >= before.cols(), "ICA requires m >= n");
+        Self { before, after, at }
+    }
+
+    /// Two independent well-conditioned draws from `rng`.
+    pub fn random(rng: &mut Pcg32, m: usize, n: usize, max_cond: f64, at: u64) -> Self {
+        let before = well_conditioned_random(rng, m, n, max_cond);
+        let after = well_conditioned_random(rng, m, n, max_cond);
+        Self::new(before, after, at)
+    }
+}
+
+impl MixingModel for SwitchOnceMixing {
+    fn m(&self) -> usize {
+        self.before.rows()
+    }
+    fn n(&self) -> usize {
+        self.before.cols()
+    }
+    fn matrix_at(&self, t: u64, out: &mut Mat64) {
+        out.copy_from(if t < self.at { &self.before } else { &self.after });
+    }
+}
+
+/// Gradual-drift onset: static `A₀` until sample `at`, then the slow
+/// rotation `A(t) = R(ω·(t − at))·A₀` — [`RotatingMixing`]'s drift with a
+/// known start time, so gradual-drift detection latency is measurable.
+pub struct DriftOnsetMixing {
+    rotating: RotatingMixing,
+    pub at: u64,
+}
+
+impl DriftOnsetMixing {
+    pub fn new(rotating: RotatingMixing, at: u64) -> Self {
+        Self { rotating, at }
+    }
+
+    pub fn random(rng: &mut Pcg32, m: usize, n: usize, max_cond: f64, omega: f64, at: u64) -> Self {
+        Self::new(RotatingMixing::random(rng, m, n, max_cond, omega), at)
+    }
+}
+
+impl MixingModel for DriftOnsetMixing {
+    fn m(&self) -> usize {
+        self.rotating.m()
+    }
+    fn n(&self) -> usize {
+        self.rotating.n()
+    }
+    fn matrix_at(&self, t: u64, out: &mut Mat64) {
+        self.rotating.matrix_at(t.saturating_sub(self.at), out);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,5 +337,27 @@ mod tests {
         let a = SwitchingMixing::new(4, 2, 500, 10.0, 7).at(1234);
         let b = SwitchingMixing::new(4, 2, 500, 10.0, 7).at(1234);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn switch_once_flips_exactly_at_t() {
+        let mut rng = Pcg32::seed(8);
+        let mx = SwitchOnceMixing::random(&mut rng, 4, 2, 10.0, 1000);
+        assert_eq!(mx.at(0), mx.at(999));
+        assert_eq!(mx.at(1000), mx.at(1_000_000));
+        assert!(mx.at(999).max_abs_diff(&mx.at(1000)) > 0.05, "switch must move A");
+    }
+
+    #[test]
+    fn drift_onset_static_then_rotates() {
+        let mut rng = Pcg32::seed(9);
+        let mx = DriftOnsetMixing::random(&mut rng, 4, 2, 10.0, 1e-3, 500);
+        assert_eq!(mx.at(0), mx.at(499), "static before onset");
+        assert_eq!(mx.at(0), mx.at(500), "onset starts from A0 (continuous)");
+        assert!(mx.at(500).max_abs_diff(&mx.at(2000)) > 0.01, "drifts after onset");
+        // Onset drift matches the plain rotating model shifted by `at`.
+        let mut rng2 = Pcg32::seed(9);
+        let plain = RotatingMixing::random(&mut rng2, 4, 2, 10.0, 1e-3);
+        assert_eq!(mx.at(500 + 777), plain.at(777));
     }
 }

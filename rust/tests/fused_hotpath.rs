@@ -474,6 +474,32 @@ fn f32_smbgd_steady_state_step_and_block_do_not_allocate() {
 }
 
 #[test]
+fn adapt_controller_observation_does_not_allocate() {
+    // The adaptive control plane rides the hot path (PR 4): after
+    // construction, observing samples — moment EW updates, whiteness
+    // statistic, Page–Hinkley detector, governor read, checkpoint refresh
+    // — must never touch the heap.
+    use easi_ica::adapt::AdaptiveController;
+    use easi_ica::config::AdaptConfig;
+    let cfg = AdaptConfig { stride: 1, enabled: true, ..AdaptConfig::default() };
+    let mut ctrl = AdaptiveController::new(&cfg, 0.01, 2, 4);
+    let b = easi_ica::ica::init_b(2, 4);
+    let mut rng = Pcg32::seed(7);
+    let xs = Mat64::from_fn(1024, 4, |_, _| rng.normal());
+    for t in 0..16 {
+        ctrl.observe_x(&b, xs.row(t), t as u64);
+    }
+    let allocs = allocations_in(|| {
+        for t in 16..xs.rows() {
+            ctrl.observe_x(&b, xs.row(t), t as u64);
+            std::hint::black_box(ctrl.mu(t as u64));
+            ctrl.checkpoint_if_steady(&b);
+        }
+    });
+    assert_eq!(allocs, 0, "AdaptiveController observation allocated on the hot path");
+}
+
+#[test]
 fn f32_mbgd_steady_state_step_does_not_allocate() {
     let mut rng = Pcg32::seed(6);
     let xs = Mat32::from_fn(1024, 4, |_, _| rng.normal() as f32);
