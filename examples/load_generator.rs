@@ -1,33 +1,46 @@
 //! Load generator: drive many concurrent separation sessions through the
-//! multi-session coordinator hub and print an aggregate throughput table.
+//! elastic serving plane and print aggregate throughput + live health
+//! tables.
 //!
 //! ```bash
 //! cargo run --release --example load_generator
 //! ```
 //!
-//! Demonstrates the multi-tenant serving path:
-//! 1. `config::HubScenario` — one base experiment fanned out into N
-//!    sessions with per-session seeds and mixing kinds,
-//! 2. `coordinator::Hub` — sessions sharded over a fixed worker pool with
-//!    per-shard bounded-channel backpressure,
-//! 3. `HubMetrics` / `StateDirectory` — live progress and per-tenant
-//!    separation matrices observed *while* training runs,
-//! 4. the **drifting-mixture scenario**: a third of the tenants stream a
-//!    `switch_once` mixture (abrupt mixing switch mid-stream) and every
-//!    other session runs the adaptive control plane (`hub.adapt` cycled),
-//!    so the summary table shows governed tenants detecting drift and
-//!    re-converging while fixed-μ neighbours ride it out.
+//! Two phases:
+//!
+//! 1. **Scenario fleet** — `config::HubScenario` fans one base experiment
+//!    into 12 sessions (static, rotating and abruptly-switching mixtures
+//!    interleaved; every other session runs the adaptive control plane)
+//!    and `ElasticHub::serve` streams them through the lifecycle runtime
+//!    with least-loaded placement, staggered arrivals and early
+//!    departures (`hub.arrive_stride` / `hub.depart_at`), while an
+//!    observer thread samples `HubMetrics` and the `StateDirectory`
+//!    health plane live.
+//! 2. **Poisson-ish churn** — the `ElasticHub` command plane driven
+//!    directly: seeded exponential inter-event gaps choose between
+//!    attaching a new tenant, detaching a streaming one, re-attaching a
+//!    parked one (least-loaded placement picks its new shard), and
+//!    pausing/resuming — the serving plane's attach/detach API under a
+//!    random (but reproducible) schedule.
 
-use easi_ica::config::HubScenario;
-use easi_ica::coordinator::{Hub, HubOptions};
+use easi_ica::config::{ExperimentConfig, HubScenario};
+use easi_ica::coordinator::{ElasticHub, HubOptions, SessionPhase};
 use easi_ica::ica::Nonlinearity;
+use easi_ica::signal::Pcg32;
 use std::thread;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
+    scenario_fleet()?;
+    poisson_churn()
+}
+
+/// Phase 1: the scenario-driven fleet (config-file surface).
+fn scenario_fleet() -> anyhow::Result<()> {
     // 12 sessions on 3 shards: static, rotating and abruptly-switching
     // (drifting-mixture) tenants interleaved, each with its own seed;
-    // every other session runs the adaptive control plane.
+    // every other session runs the adaptive control plane. Sessions
+    // arrive staggered and a third depart early — the churn schedule.
     let scenario = HubScenario::from_toml(
         r#"
         name = "loadgen"
@@ -52,24 +65,34 @@ fn main() -> anyhow::Result<()> {
         channel_capacity = 2048
         mixing = ["static", "rotating", "switch_once"]
         adapt = [true, false]       # governed and fixed-mu tenants side by side
+        placement = "least_loaded"
+        arrive_stride = 30000       # staggered joins while shards stream
+        depart_at = [0, 0, 80000]   # every third tenant leaves early
         seed_stride = 1
     "#,
     )?;
 
-    let opts = HubOptions::from_scenario(&scenario);
-    let total_expected: u64 =
-        (scenario.sessions * scenario.base.samples) as u64;
-
+    let total_expected: u64 = scenario
+        .session_specs()
+        .iter()
+        .map(|s| s.effective_samples() as u64)
+        .sum();
     println!(
-        "load generator: {} sessions × {} samples on {} shard(s)",
-        scenario.sessions, scenario.base.samples, scenario.shards
+        "load generator: {} sessions on {} shard(s) ({} placement, arrive_stride {}, \
+         depart_at {:?})",
+        scenario.sessions,
+        scenario.shards,
+        scenario.placement.name(),
+        scenario.arrive_stride,
+        scenario.depart_at
     );
 
-    let hub = Hub::new(scenario.session_configs(), Nonlinearity::Cube, opts)?;
+    let hub = ElasticHub::start(Nonlinearity::Cube, HubOptions::from_scenario(&scenario))?;
     let metrics = hub.metrics();
     let directory = hub.directory();
 
-    // Observer thread: sample live hub metrics while the fleet trains.
+    // Observer thread: sample live hub metrics + the health plane while
+    // the fleet trains.
     let watcher = {
         let metrics = metrics.clone();
         let directory = directory.clone();
@@ -77,13 +100,19 @@ fn main() -> anyhow::Result<()> {
             let consumed = metrics.samples_consumed();
             let depths: Vec<usize> =
                 (0..metrics.shards()).map(|s| metrics.queue_depth(s)).collect();
+            let streaming = directory
+                .statuses()
+                .iter()
+                .filter(|s| s.phase == SessionPhase::Streaming)
+                .count();
             println!(
                 "  [live] consumed {:>9}/{} samples | {:>9.0} samples/s | \
-                 tenants registered {:>2} | queue depths {:?}",
+                 tenants {:>2} ({} streaming) | queue depths {:?}",
                 consumed,
                 total_expected,
                 metrics.aggregate_sps(),
                 directory.len(),
+                streaming,
                 depths
             );
             if consumed >= total_expected {
@@ -93,7 +122,7 @@ fn main() -> anyhow::Result<()> {
         })
     };
 
-    let summary = hub.run()?;
+    let summary = hub.serve(scenario.session_specs())?;
     watcher.join().ok();
 
     println!();
@@ -112,5 +141,113 @@ fn main() -> anyhow::Result<()> {
         let y = directory.separate(id, &x).expect("registered tenant");
         println!("  session {id}: y = [{:+.4}, {:+.4}]", y[0], y[1]);
     }
+    Ok(())
+}
+
+/// Phase 2: Poisson-ish churn through the command plane.
+fn poisson_churn() -> anyhow::Result<()> {
+    println!("\n=== churn phase: seeded Poisson-ish attach/detach schedule ===");
+    let mut rng = Pcg32::seed(0xC0FFEE);
+    let opts = HubOptions { shards: 3, ..Default::default() };
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts)?;
+    let directory = hub.directory();
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = 4;
+    cfg.n = 2;
+    cfg.samples = 60_000;
+    cfg.optimizer.mu = 0.004;
+
+    let mut handles = Vec::new();
+    let mut next_seed = 100u64;
+    let mut attach = |hub: &mut ElasticHub, rng: &mut Pcg32| -> anyhow::Result<()> {
+        let mut c = cfg.clone();
+        c.seed = next_seed;
+        c.name = format!("churn-{next_seed}");
+        next_seed += 1;
+        c.signal.mixing =
+            ["static", "rotating"][rng.below(2) as usize].to_string();
+        handles.push(hub.attach(c)?);
+        Ok(())
+    };
+
+    // Seed the plane with three tenants, then run a random-but-seeded
+    // event schedule: exponential inter-event gaps, event mix weighted
+    // toward arrivals early and departures late.
+    for _ in 0..3 {
+        attach(&mut hub, &mut rng)?;
+    }
+    for event in 0..24 {
+        // Exponential-ish gap with mean 60 ms (Poisson arrivals).
+        let gap = (-(rng.uniform().max(1e-9)).ln() * 60.0) as u64;
+        thread::sleep(Duration::from_millis(gap.clamp(1, 300)));
+
+        let statuses = directory.statuses();
+        let streaming: Vec<u64> = statuses
+            .iter()
+            .filter(|s| s.phase == SessionPhase::Streaming)
+            .map(|s| s.id)
+            .collect();
+        let parked: Vec<u64> = statuses
+            .iter()
+            .filter(|s| s.phase == SessionPhase::Detached)
+            .map(|s| s.id)
+            .collect();
+
+        match rng.below(4) {
+            0 => {
+                attach(&mut hub, &mut rng)?;
+                println!("  [churn {event:>2}] attach  -> {} tenants", directory.len());
+            }
+            1 if !streaming.is_empty() => {
+                let id = streaming[rng.below(streaming.len() as u32) as usize];
+                // A tenant that drains concurrently is fine — skip it.
+                if hub.detach(id).is_ok() {
+                    println!("  [churn {event:>2}] detach  session {id}");
+                }
+            }
+            2 if !parked.is_empty() => {
+                let id = parked[rng.below(parked.len() as u32) as usize];
+                if let Ok(shard) = hub.reattach(id) {
+                    println!("  [churn {event:>2}] reattach session {id} -> shard {shard}");
+                }
+            }
+            _ if !streaming.is_empty() => {
+                let id = streaming[rng.below(streaming.len() as u32) as usize];
+                if hub.pause(id).is_ok() {
+                    thread::sleep(Duration::from_millis(5));
+                    hub.resume(id).ok();
+                    println!("  [churn {event:>2}] pause/resume session {id}");
+                }
+            }
+            _ => {}
+        }
+    }
+
+    println!("\nlive health plane at drain time:");
+    print!("{}", directory.render_status_table());
+    let summary = hub.finish()?;
+    println!();
+    print!("{}", summary.render_table());
+
+    // The SessionHandle observation surface outlives the hub: each handle
+    // still reads its tenant's final checkpoint and health record.
+    println!("\nper-tenant checkpoints via SessionHandle:");
+    for h in &handles {
+        let snap = h.checkpoint();
+        println!(
+            "  {}: {} after {} samples (checkpoint v{})",
+            h.name(),
+            h.status().phase.name(),
+            snap.samples,
+            snap.version
+        );
+    }
+    println!(
+        "\nchurn phase served {} tenants over {} shard(s); every attach/detach left \
+         the survivors' math untouched (pinned by rust/tests/integration_hub.rs)",
+        summary.sessions.len(),
+        summary.shards
+    );
     Ok(())
 }

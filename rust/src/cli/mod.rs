@@ -125,13 +125,21 @@ pub fn usage() -> &'static str {
                       --mu F --gamma F --beta F --p N --adapt on|off\n\
                       --mixing static|rotating|switching|switch_once|drift_onset\n\
                       --switch-at N --seed N]\n\
-       serve-many     multi-session hub: N concurrent sessions sharded over a\n\
-                      worker pool, with per-shard backpressure and an\n\
+       serve-many     elastic serving plane: N concurrent sessions admitted\n\
+                      onto a worker-shard pool (least-loaded or modulo\n\
+                      placement), with per-shard backpressure, optional\n\
+                      session churn, a live per-tenant health table, and an\n\
                       aggregate throughput table\n\
                       [--config FILE | --sessions N --shards N --samples N\n\
                        --mixing a,b,c --precision f32,f64 --adapt on,off\n\
                        (cycled per session) --capacity N --seed N\n\
                        --seed-stride N --switch-at N\n\
+                       --placement least_loaded|modulo\n\
+                       --churn S[,D] (stagger arrivals by S aggregate\n\
+                       samples; with D every other tenant departs after D\n\
+                       of its own samples)\n\
+                       --status-every MS (print the live StateDirectory\n\
+                       health table every MS milliseconds)\n\
                        --mu F --gamma F --beta F --p N --m N --n N\n\
                        --optimizer sgd|smbgd|mbgd --engine native|pjrt\n\
                        --artifacts DIR]\n\
@@ -158,7 +166,7 @@ pub fn usage() -> &'static str {
                       BENCH_hotpath.json (repo root)\n\
                       [--quick --out PATH --check BASELINE.json\n\
                        --tolerance F --min-fused-speedup F --min-f32-speedup F\n\
-                       --max-adapt-overhead F]\n\
+                       --max-adapt-overhead F --max-status-overhead F]\n\
                       with --check, exits nonzero if any gated kernel's\n\
                       machine-normalized cost regressed past the tolerance\n\
        help           this text\n"

@@ -11,5 +11,5 @@ mod types;
 pub use parse::{parse, ParseError, Value};
 pub use types::{
     AdaptConfig, EngineKind, ExperimentConfig, HubScenario, OptimizerConfig, OptimizerKind,
-    Precision, SignalConfig,
+    PlacementKind, Precision, SessionSpec, SignalConfig,
 };

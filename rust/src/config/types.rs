@@ -85,6 +85,40 @@ impl Precision {
     }
 }
 
+/// Admission-time shard placement policy for the elastic serving plane.
+///
+/// `LeastLoaded` is the serving default: a new tenant lands on the shard
+/// with the fewest active sessions (ties break toward the lowest shard
+/// index), so capacity freed by departures is reused. `Modulo` keeps the
+/// deterministic `id % shards` pinning of the batch hub — placement never
+/// changes a session's *math* (every runner is self-contained), but
+/// modulo keeps shard assignments byte-for-byte reproducible, which is
+/// what the bit-exactness pins against the batch hub run under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Fewest active sessions wins; ties go to the lowest shard index.
+    LeastLoaded,
+    /// Deterministic `session_id % shards` (the batch hub's rule).
+    Modulo,
+}
+
+impl PlacementKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "least_loaded" => Self::LeastLoaded,
+            "modulo" => Self::Modulo,
+            other => bail!("unknown placement '{other}' (expected least_loaded|modulo)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::LeastLoaded => "least_loaded",
+            Self::Modulo => "modulo",
+        }
+    }
+}
+
 /// Optimizer hyperparameters (paper §IV notation).
 #[derive(Clone, Copy, Debug)]
 pub struct OptimizerConfig {
@@ -420,6 +454,17 @@ pub struct HubScenario {
     pub adapt: Vec<bool>,
     /// Session `i` streams with seed `base.seed + i * seed_stride`.
     pub seed_stride: u64,
+    /// Admission-time shard placement (elastic serving plane).
+    pub placement: PlacementKind,
+    /// Churn schedule, arrivals: session `i` is admitted once the hub has
+    /// ingested `i * arrive_stride` samples in aggregate (0 = everyone
+    /// arrives up front — the static scenario).
+    pub arrive_stride: u64,
+    /// Churn schedule, departures: per-session early-departure points in
+    /// the session's *own* sample count, cycled by session id like
+    /// `mixing` (0 = stream to completion). `depart_at = [0, 20000]`
+    /// makes every other tenant leave after 20k samples.
+    pub depart_at: Vec<u64>,
     /// Template every session config derives from.
     pub base: ExperimentConfig,
 }
@@ -434,7 +479,36 @@ impl Default for HubScenario {
             precision: Vec::new(),
             adapt: Vec::new(),
             seed_stride: 1,
+            placement: PlacementKind::LeastLoaded,
+            arrive_stride: 0,
+            depart_at: Vec::new(),
             base: ExperimentConfig::default(),
+        }
+    }
+}
+
+/// One session's lifecycle plan inside a hub scenario: its experiment
+/// config plus when it joins and (optionally) leaves the serving plane.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    /// The session's materialized experiment config.
+    pub cfg: ExperimentConfig,
+    /// Admission threshold: attach once the hub's aggregate ingested
+    /// sample count reaches this (0 = at start).
+    pub arrive_at: u64,
+    /// Early departure after this many of the session's own samples
+    /// (0 = stream the full `cfg.samples`). Departure is a clean drain:
+    /// the tenant's trajectory is exactly a run with this sample count.
+    pub depart_at: u64,
+}
+
+impl SessionSpec {
+    /// Samples this session will actually stream.
+    pub fn effective_samples(&self) -> usize {
+        if self.depart_at == 0 {
+            self.cfg.samples
+        } else {
+            self.cfg.samples.min(self.depart_at as usize)
         }
     }
 }
@@ -461,6 +535,13 @@ impl HubScenario {
                         .collect::<Result<Vec<_>>>()?
                 }
                 "hub.adapt" => scenario.adapt = want_bool_list(&key, &value)?,
+                "hub.placement" => {
+                    scenario.placement = PlacementKind::parse(&want_str(&key, &value)?)?
+                }
+                "hub.arrive_stride" => {
+                    scenario.arrive_stride = want_usize(&key, &value)? as u64
+                }
+                "hub.depart_at" => scenario.depart_at = want_usize_list(&key, &value)?,
                 k if k.starts_with("hub.") => bail!("unknown config key '{k}'"),
                 _ => {
                     base_map.insert(key, value);
@@ -525,6 +606,33 @@ impl HubScenario {
     pub fn session_configs(&self) -> Vec<ExperimentConfig> {
         (0..self.sessions).map(|id| self.session_config(id)).collect()
     }
+
+    /// Materialize session `id`'s lifecycle plan: config plus churn
+    /// schedule (arrival threshold from `arrive_stride`, early departure
+    /// from the cycled `depart_at` list).
+    pub fn session_spec(&self, id: usize) -> SessionSpec {
+        let depart_at = if self.depart_at.is_empty() {
+            0
+        } else {
+            self.depart_at[id % self.depart_at.len()]
+        };
+        SessionSpec {
+            cfg: self.session_config(id),
+            arrive_at: (id as u64).wrapping_mul(self.arrive_stride),
+            depart_at,
+        }
+    }
+
+    /// Materialize every session's lifecycle plan.
+    pub fn session_specs(&self) -> Vec<SessionSpec> {
+        (0..self.sessions).map(|id| self.session_spec(id)).collect()
+    }
+
+    /// Whether any session arrives late or departs early — i.e. whether
+    /// running this scenario exercises the lifecycle churn path.
+    pub fn has_churn(&self) -> bool {
+        self.arrive_stride > 0 || self.depart_at.iter().any(|&d| d > 0)
+    }
 }
 
 fn want_str(key: &str, v: &Value) -> Result<String> {
@@ -556,6 +664,23 @@ fn want_bool_list(key: &str, v: &Value) -> Result<Vec<bool>> {
             .map(|it| it.as_bool().with_context(|| format!("'{key}' must contain booleans")))
             .collect(),
         _ => bail!("'{key}' must be a boolean or an array of booleans"),
+    }
+}
+
+/// Accept either a single non-negative integer or a flat array of them.
+fn want_usize_list(key: &str, v: &Value) -> Result<Vec<u64>> {
+    let one = |it: &Value| -> Result<u64> {
+        let i = it
+            .as_int()
+            .with_context(|| format!("'{key}' must contain integers"))?;
+        if i < 0 {
+            bail!("'{key}' entries must be non-negative, got {i}");
+        }
+        Ok(i as u64)
+    };
+    match v {
+        Value::Array(items) => items.iter().map(one).collect(),
+        other => Ok(vec![one(other)?]),
     }
 }
 
@@ -798,6 +923,52 @@ mod tests {
         let sc = HubScenario::from_toml("[adapt]\nenabled = true").unwrap();
         assert!(sc.session_config(2).adapt.enabled);
         assert!(HubScenario::from_toml("[hub]\nadapt = [1, 0]").is_err());
+    }
+
+    #[test]
+    fn hub_scenario_parses_lifecycle_keys() {
+        let doc = r#"
+            samples = 9000
+
+            [hub]
+            sessions = 4
+            shards = 2
+            placement = "modulo"
+            arrive_stride = 2500
+            depart_at = [0, 4000]
+        "#;
+        let sc = HubScenario::from_toml(doc).unwrap();
+        assert_eq!(sc.placement, PlacementKind::Modulo);
+        assert!(sc.has_churn());
+        let specs = sc.session_specs();
+        assert_eq!(specs.len(), 4);
+        assert_eq!(specs[0].arrive_at, 0);
+        assert_eq!(specs[3].arrive_at, 7500);
+        assert_eq!(specs[0].depart_at, 0);
+        assert_eq!(specs[1].depart_at, 4000);
+        assert_eq!(specs[0].effective_samples(), 9000);
+        assert_eq!(specs[1].effective_samples(), 4000);
+        // depart_at beyond the stream length is a full run.
+        let mut long = sc.clone();
+        long.depart_at = vec![20_000];
+        assert_eq!(long.session_spec(0).effective_samples(), 9000);
+        // Defaults: least-loaded, no churn.
+        let d = HubScenario::default();
+        assert_eq!(d.placement, PlacementKind::LeastLoaded);
+        assert!(!d.has_churn());
+        assert_eq!(d.session_spec(5).arrive_at, 0);
+        // Rejects.
+        assert!(HubScenario::from_toml("[hub]\nplacement = \"hash\"").is_err());
+        assert!(HubScenario::from_toml("[hub]\ndepart_at = [-1]").is_err());
+        assert!(HubScenario::from_toml("[hub]\ndepart_at = [\"x\"]").is_err());
+    }
+
+    #[test]
+    fn placement_parse_round_trip() {
+        for p in [PlacementKind::LeastLoaded, PlacementKind::Modulo] {
+            assert_eq!(PlacementKind::parse(p.name()).unwrap(), p);
+        }
+        assert!(PlacementKind::parse("random").is_err());
     }
 
     #[test]

@@ -28,14 +28,22 @@
 //! - **Metrics**: live aggregate ingest counters and per-shard queue
 //!   depths via [`HubMetrics`]; per-session Amari trajectories and an
 //!   aggregate throughput table in the final [`HubSummary`].
+//!
+//! Since the lifecycle refactor this batch hub is the **deterministic
+//! reference mode**: a fixed session set, modulo placement, run to
+//! completion. The serving path (`serve-many`, `run_scenario`) now goes
+//! through the elastic runtime in [`super::lifecycle`], which multiplexes
+//! the same [`SessionRunner`]s but admits, parks, migrates, and drains
+//! tenants at runtime — and is pinned bit-identical to this mode for
+//! static workloads by `rust/tests/integration_hub.rs`.
 
 use super::engine::make_engine;
 use super::server::{
     block_capacity, build_stream, drive_stream, safe_rate, RunSummary, ServerOptions,
     SessionRunner, StreamEvent,
 };
-use super::state::{StateDirectory, StateStore};
-use crate::config::ExperimentConfig;
+use super::state::{SessionPhase, StateDirectory, StateStore, StatusCell};
+use crate::config::{ExperimentConfig, PlacementKind};
 use crate::ica::Nonlinearity;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -45,7 +53,8 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
-/// Hub tuning knobs.
+/// Hub tuning knobs (shared by the batch [`Hub`] and the elastic
+/// [`super::lifecycle::ElasticHub`]).
 #[derive(Clone, Copy, Debug)]
 pub struct HubOptions {
     /// Worker shards (threads applying engine updates).
@@ -53,13 +62,21 @@ pub struct HubOptions {
     /// Per-shard ingest channel capacity in samples — the backpressure
     /// depth each shard grants its tenants collectively.
     pub channel_capacity: usize,
+    /// Admission-time shard placement policy (elastic runtime; the batch
+    /// hub is pinned to modulo placement by construction).
+    pub placement: PlacementKind,
     /// Per-session server knobs (monitor cadence, AGC, divergence guard).
     pub server: ServerOptions,
 }
 
 impl Default for HubOptions {
     fn default() -> Self {
-        Self { shards: 2, channel_capacity: 4096, server: ServerOptions::default() }
+        Self {
+            shards: 2,
+            channel_capacity: 4096,
+            placement: PlacementKind::LeastLoaded,
+            server: ServerOptions::default(),
+        }
     }
 }
 
@@ -71,31 +88,40 @@ impl HubOptions {
         Self {
             shards: sc.shards,
             channel_capacity: sc.channel_capacity,
+            placement: sc.placement,
             server: ServerOptions::default(),
         }
     }
-}
 
-/// Convenience: run a config-layer [`crate::config::HubScenario`] to
-/// completion (the `serve-many` path).
-pub fn run_scenario(
-    sc: &crate::config::HubScenario,
-    g: Nonlinearity,
-) -> Result<HubSummary> {
-    Hub::new(sc.session_configs(), g, HubOptions::from_scenario(sc))?.run()
+    /// Reject topologies that would hang or panic downstream: a hub with
+    /// zero shards has nowhere to run sessions, and a zero-capacity
+    /// ingest channel would block every producer's first send forever.
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            bail!("hub needs at least one worker shard (shards = 0)");
+        }
+        if self.channel_capacity == 0 {
+            bail!(
+                "hub channel_capacity must be >= 1 sample (got 0); a zero-capacity ingest \
+                 channel would stall every producer's first send"
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Live hub metrics, cheaply cloneable and readable from any thread.
+/// Shared between the batch hub and the elastic lifecycle runtime.
 #[derive(Clone)]
 pub struct HubMetrics {
-    ingested: Arc<AtomicU64>,
-    consumed: Arc<AtomicU64>,
-    depths: Vec<Arc<AtomicUsize>>,
+    pub(crate) ingested: Arc<AtomicU64>,
+    pub(crate) consumed: Arc<AtomicU64>,
+    pub(crate) depths: Vec<Arc<AtomicUsize>>,
     started: Instant,
 }
 
 impl HubMetrics {
-    fn new(shards: usize) -> Self {
+    pub(crate) fn new(shards: usize) -> Self {
         Self {
             ingested: Arc::new(AtomicU64::new(0)),
             consumed: Arc::new(AtomicU64::new(0)),
@@ -225,9 +251,7 @@ impl Hub {
         if cfgs.is_empty() {
             bail!("hub needs at least one session config");
         }
-        if opts.shards == 0 {
-            bail!("hub needs at least one worker shard");
-        }
+        opts.validate()?;
         for (id, cfg) in cfgs.iter().enumerate() {
             cfg.validate().with_context(|| format!("session {id} ('{}')", cfg.name))?;
         }
@@ -287,8 +311,12 @@ impl Hub {
             let engine = make_engine(cfg, g)
                 .with_context(|| format!("building engine for session {id}"))?;
             let state = StateStore::new(crate::ica::init_b(cfg.n, cfg.m));
-            directory.insert(id as u64, state.clone());
-            let runner = SessionRunner::new(cfg, engine, &opts.server, state);
+            let status = StatusCell::new(id as u64, &cfg.name);
+            status.set_shard(id % shards);
+            status.set_phase(SessionPhase::Streaming);
+            directory.register(id as u64, state.clone(), status.clone());
+            let mut runner = SessionRunner::new(cfg, engine, &opts.server, state);
+            runner.set_status_cell(status);
             shard_runners[id % shards].insert(id, runner);
             let stream = build_stream(cfg)
                 .with_context(|| format!("building stream for session {id}"))?;
@@ -316,9 +344,11 @@ impl Hub {
                     match event {
                         StreamEvent::Batch(block) => {
                             let rows = block.rows() as u64;
-                            runners
+                            let runner = runners
                                 .get_mut(&session)
-                                .with_context(|| format!("unknown session {session}"))?
+                                .with_context(|| format!("unknown session {session}"))?;
+                            runner.note_queue_depth(d);
+                            runner
                                 .on_block(block)
                                 .with_context(|| format!("session {session}"))?;
                             consumed.fetch_add(rows, Ordering::Relaxed);
@@ -444,7 +474,25 @@ mod tests {
     #[test]
     fn zero_shards_rejected() {
         let opts = HubOptions { shards: 0, ..Default::default() };
-        assert!(Hub::new(vec![small_cfg(1)], Nonlinearity::Cube, opts).is_err());
+        let err = Hub::new(vec![small_cfg(1)], Nonlinearity::Cube, opts)
+            .err()
+            .expect("zero shards must be rejected at construction");
+        assert!(format!("{err:#}").contains("shard"), "{err:#}");
+    }
+
+    #[test]
+    fn zero_channel_capacity_rejected() {
+        // Previously a zero capacity was silently clamped by
+        // block_capacity; the options now reject it up front with a
+        // descriptive error instead of relying on downstream guards.
+        let opts = HubOptions { channel_capacity: 0, ..Default::default() };
+        let err = Hub::new(vec![small_cfg(1)], Nonlinearity::Cube, opts)
+            .err()
+            .expect("zero channel capacity must be rejected at construction");
+        assert!(format!("{err:#}").contains("channel_capacity"), "{err:#}");
+        // The same validation guards the elastic runtime.
+        assert!(opts.validate().is_err());
+        assert!(HubOptions::default().validate().is_ok());
     }
 
     #[test]

@@ -1,0 +1,1124 @@
+//! Elastic session-lifecycle runtime: the hub as a long-running serving
+//! plane instead of a batch job.
+//!
+//! The batch [`super::hub::Hub`] runs a *fixed* session set to completion
+//! — the shape of the paper's always-on separator. This module is the
+//! ROADMAP's serving story: shard workers run indefinitely, and a command
+//! plane lets tenants **attach, detach, pause/resume, checkpoint and
+//! restore** while the shards keep streaming:
+//!
+//! ```text
+//!             control lane (unbounded, per shard)
+//!   ElasticHub ───────────────────────────────┐
+//!     │  attach/park/restore commands         ▼
+//!     │                                ┌─► shard 0 worker ─► runners {…}
+//!   producers ──► per-shard bounded ───┤
+//!     (gated)     data channels        └─► shard 1 worker ─► runners {…}
+//! ```
+//!
+//! - **Two lanes per shard.** Data rides the same bounded channels as the
+//!   batch hub (backpressure unchanged); lifecycle commands ride a
+//!   separate unbounded lane drained by the worker between data messages,
+//!   so an attach or park never queues behind a full data channel.
+//! - **Admission-time placement.** A new tenant is placed by a pluggable
+//!   [`Placement`] policy — least-loaded by default, so capacity freed by
+//!   departures is reused; `modulo` reproduces the batch hub's
+//!   deterministic `id % shards` pinning.
+//! - **Ordered park.** Detach quiesces the session's producer gate, reads
+//!   the last enqueued sequence number, and asks the shard to park the
+//!   runner once it has consumed exactly that much — the runner migrates
+//!   wholesale (optimizer state, chunker partial, AGC, monitor, adaptive
+//!   controller), which is what makes a re-attach on *any* shard continue
+//!   bit-identically (pinned by `rust/tests/integration_hub.rs`).
+//! - **Live health plane.** Every session's [`StatusCell`] is registered
+//!   in the [`StateDirectory`], so drift events, rollbacks, phase and
+//!   queue depth are observable while the hub runs (ROADMAP item from the
+//!   adaptive-control PR).
+
+use super::engine::make_engine;
+use super::hub::{HubMetrics, HubOptions, HubSummary, SessionReport};
+use super::server::{
+    block_capacity, build_stream, drive_stream, safe_rate, SessionRunner, StreamEvent,
+};
+use super::state::{SessionPhase, SessionStatus, Snapshot, StateDirectory, StateStore, StatusCell};
+use crate::config::{ExperimentConfig, HubScenario, PlacementKind, SessionSpec};
+use crate::ica::Nonlinearity;
+use crate::linalg::Mat64;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Shard worker poll interval while tenants are installed but the data
+/// lane is momentarily idle (the cadence at which control-lane commands
+/// are served on a quiet shard).
+const IDLE_POLL: Duration = Duration::from_millis(2);
+
+/// Poll interval for a shard with no tenants at all: a long-running plane
+/// parks its workers at a low duty cycle instead of busy-spinning. A data
+/// message still wakes the worker instantly (`recv_timeout` returns on
+/// arrival), and the control drain between recv and handle keeps the
+/// attach-before-first-block guarantee, so only control-only commands on
+/// an empty shard see this latency.
+const QUIET_POLL: Duration = Duration::from_millis(25);
+
+// ---------------------------------------------------------------------------
+// Placement.
+// ---------------------------------------------------------------------------
+
+/// Admission-time shard selection policy.
+///
+/// Placement never changes a session's *math* — every runner is fully
+/// self-contained — only which worker hosts it, so policies are free to
+/// optimize for balance. Implementations must return an index below
+/// `loads.len()`.
+pub trait Placement: Send {
+    /// Policy name for logs and tables.
+    fn name(&self) -> &'static str;
+    /// Choose a shard for `session` given per-shard active session counts.
+    fn place(&mut self, session: u64, loads: &[usize]) -> usize;
+}
+
+/// The batch hub's deterministic rule: `session_id % shards`.
+pub struct ModuloPlacement;
+
+impl Placement for ModuloPlacement {
+    fn name(&self) -> &'static str {
+        "modulo"
+    }
+
+    fn place(&mut self, session: u64, loads: &[usize]) -> usize {
+        (session % loads.len().max(1) as u64) as usize
+    }
+}
+
+/// Serving default: fewest active sessions wins, ties break toward the
+/// lowest shard index (so a static fleet admitted in id order lands
+/// exactly where modulo would put it).
+pub struct LeastLoadedPlacement;
+
+impl Placement for LeastLoadedPlacement {
+    fn name(&self) -> &'static str {
+        "least_loaded"
+    }
+
+    fn place(&mut self, _session: u64, loads: &[usize]) -> usize {
+        loads
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &load)| (load, i))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Build the policy named by a config-layer [`PlacementKind`].
+pub fn build_placement(kind: PlacementKind) -> Box<dyn Placement> {
+    match kind {
+        PlacementKind::LeastLoaded => Box::new(LeastLoadedPlacement),
+        PlacementKind::Modulo => Box::new(ModuloPlacement),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Channel protocol.
+// ---------------------------------------------------------------------------
+
+/// One message on a shard's bounded data lane. `seq` increments per
+/// message within a session (across shard migrations), which is what lets
+/// a park command name an exact cut point in the session's event stream.
+struct DataMsg {
+    session: u64,
+    seq: u64,
+    event: StreamEvent,
+}
+
+/// Commands on a shard's unbounded control lane.
+enum ControlMsg {
+    /// Install a runner (fresh admission or re-attach of a parked one).
+    /// `consumed_upto` seeds the worker's consumed-sequence bookkeeping:
+    /// 0 for a fresh session, the park cut point for a migrant.
+    Attach {
+        session: u64,
+        runner: Box<SessionRunner>,
+        consumed_upto: u64,
+    },
+    /// Remove the session's runner once every data message up to
+    /// `upto_seq` has been applied, and hand it back on `reply`.
+    Park {
+        session: u64,
+        upto_seq: u64,
+        reply: Sender<ParkOutcome>,
+    },
+    /// Install a checkpointed separation matrix into a live session.
+    /// Acks `true` when applied, `false` when the session already drained.
+    Restore {
+        session: u64,
+        b: Mat64,
+        ack: Sender<bool>,
+    },
+}
+
+/// Reply to a park command.
+enum ParkOutcome {
+    /// The runner, removed from the shard with its full state.
+    Parked(Box<SessionRunner>),
+    /// The session's stream had already ended; nothing to park.
+    Gone,
+}
+
+// ---------------------------------------------------------------------------
+// Producer routing (the per-session gate).
+// ---------------------------------------------------------------------------
+
+/// Producer-side gate phase. Distinct from [`SessionPhase`]: this is the
+/// minimal state the emit hot path inspects.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum GatePhase {
+    Streaming,
+    Paused,
+    Aborted,
+}
+
+/// Where (and whether) a session's producer currently sends. The control
+/// plane re-targets `tx`/`depth` on re-attach, pauses via `phase`, and
+/// quiesces by waiting on `in_flight` — so the producer itself never
+/// needs to know it migrated.
+struct RouteState {
+    phase: GatePhase,
+    tx: Option<SyncSender<DataMsg>>,
+    depth: Arc<AtomicUsize>,
+    /// Last sequence number enqueued (monotonic across migrations).
+    seq: u64,
+    /// A send is in progress outside the lock.
+    in_flight: bool,
+}
+
+struct Route {
+    state: Mutex<RouteState>,
+    cv: Condvar,
+}
+
+impl Route {
+    fn new(tx: SyncSender<DataMsg>, depth: Arc<AtomicUsize>) -> Self {
+        Self {
+            state: Mutex::new(RouteState {
+                phase: GatePhase::Streaming,
+                tx: Some(tx),
+                depth,
+                seq: 0,
+                in_flight: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard worker.
+// ---------------------------------------------------------------------------
+
+/// Everything one shard worker owns.
+struct ShardState {
+    shard: usize,
+    runners: BTreeMap<u64, SessionRunner>,
+    /// Last applied data-lane sequence number per session.
+    consumed_seq: BTreeMap<u64, u64>,
+    /// Park requests waiting for their cut point.
+    pending_park: BTreeMap<u64, (u64, Sender<ParkOutcome>)>,
+    reports: Vec<SessionReport>,
+    active: Arc<Vec<AtomicUsize>>,
+    consumed: Arc<AtomicU64>,
+}
+
+impl ShardState {
+    fn handle_control(&mut self, msg: ControlMsg) {
+        match msg {
+            ControlMsg::Attach { session, runner, consumed_upto } => {
+                let status = runner.status_cell();
+                status.set_shard(self.shard);
+                // Conditional promotion: a pause() that raced ahead of
+                // this install must not be flipped back to Streaming.
+                status.promote_to_streaming();
+                self.consumed_seq.insert(session, consumed_upto);
+                self.runners.insert(session, *runner);
+            }
+            ControlMsg::Park { session, upto_seq, reply } => {
+                if !self.runners.contains_key(&session) {
+                    let _ = reply.send(ParkOutcome::Gone);
+                } else if self.consumed_seq.get(&session).copied().unwrap_or(0) >= upto_seq {
+                    self.park_now(session, &reply);
+                } else {
+                    self.pending_park.insert(session, (upto_seq, reply));
+                }
+            }
+            ControlMsg::Restore { session, b, ack } => match self.runners.get_mut(&session) {
+                Some(runner) => {
+                    runner.install_b(b);
+                    let _ = ack.send(true);
+                }
+                None => {
+                    let _ = ack.send(false);
+                }
+            },
+        }
+    }
+
+    fn park_now(&mut self, session: u64, reply: &Sender<ParkOutcome>) {
+        let runner = self.runners.remove(&session).expect("park of installed session");
+        runner.status_cell().set_phase(SessionPhase::Detached);
+        self.consumed_seq.remove(&session);
+        self.active[self.shard].fetch_sub(1, Ordering::Relaxed);
+        let _ = reply.send(ParkOutcome::Parked(Box::new(runner)));
+    }
+
+    fn handle_data(&mut self, msg: DataMsg, dequeue_depth: usize) -> Result<()> {
+        let DataMsg { session, seq, event } = msg;
+        match event {
+            StreamEvent::Batch(block) => {
+                let rows = block.rows() as u64;
+                let runner = self.runners.get_mut(&session).with_context(|| {
+                    format!("shard {}: data for unknown session {session}", self.shard)
+                })?;
+                runner.note_queue_depth(dequeue_depth);
+                runner.on_block(block).with_context(|| format!("session {session}"))?;
+                self.consumed.fetch_add(rows, Ordering::Relaxed);
+            }
+            StreamEvent::Mixing(a) => {
+                self.runners
+                    .get_mut(&session)
+                    .with_context(|| {
+                        format!("shard {}: mixing for unknown session {session}", self.shard)
+                    })?
+                    .on_mixing(a);
+            }
+            StreamEvent::End => {
+                let runner = self.runners.remove(&session).with_context(|| {
+                    format!("shard {}: end for unknown session {session}", self.shard)
+                })?;
+                self.consumed_seq.remove(&session);
+                // A park that raced the stream end resolves as Gone.
+                if let Some((_, reply)) = self.pending_park.remove(&session) {
+                    let _ = reply.send(ParkOutcome::Gone);
+                }
+                self.active[self.shard].fetch_sub(1, Ordering::Relaxed);
+                self.reports.push(SessionReport {
+                    id: session as usize,
+                    shard: self.shard,
+                    name: String::new(), // filled in by the hub
+                    summary: runner.finish(),
+                });
+                return Ok(());
+            }
+        }
+        self.consumed_seq.insert(session, seq);
+        if let Some(&(upto, _)) = self.pending_park.get(&session) {
+            if seq >= upto {
+                let (_, reply) = self.pending_park.remove(&session).expect("checked");
+                self.park_now(session, &reply);
+            }
+        }
+        Ok(())
+    }
+
+    fn drain_control(&mut self, ctrl_rx: &Receiver<ControlMsg>) {
+        while let Ok(msg) = ctrl_rx.try_recv() {
+            self.handle_control(msg);
+        }
+    }
+}
+
+/// The long-running shard worker: serve control commands between data
+/// messages until every data sender is gone, then drain leftovers.
+fn shard_worker(
+    mut state: ShardState,
+    data_rx: Receiver<DataMsg>,
+    ctrl_rx: Receiver<ControlMsg>,
+    depth: Arc<AtomicUsize>,
+) -> Result<(Vec<SessionReport>, usize)> {
+    let mut max_depth = 0usize;
+    loop {
+        state.drain_control(&ctrl_rx);
+        let poll = if state.runners.is_empty() { QUIET_POLL } else { IDLE_POLL };
+        match data_rx.recv_timeout(poll) {
+            Ok(msg) => {
+                // fetch_sub returns the pre-decrement value: the backlog
+                // this message observed at dequeue time.
+                let d = depth.fetch_sub(1, Ordering::Relaxed);
+                max_depth = max_depth.max(d);
+                // The Attach for a session is enqueued on the control
+                // lane before its producer exists, so draining here
+                // guarantees the runner is installed before its first
+                // data message is applied.
+                state.drain_control(&ctrl_rx);
+                state.handle_data(msg, d)?;
+            }
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => {
+                state.drain_control(&ctrl_rx);
+                break;
+            }
+        }
+    }
+    // Hub shut down with runners still installed (producers aborted
+    // mid-stream): drain them so every admitted session is accounted for.
+    let shard = state.shard;
+    for (session, runner) in std::mem::take(&mut state.runners) {
+        state.active[shard].fetch_sub(1, Ordering::Relaxed);
+        state.reports.push(SessionReport {
+            id: session as usize,
+            shard,
+            name: String::new(),
+            summary: runner.finish(),
+        });
+    }
+    Ok((state.reports, max_depth))
+}
+
+// ---------------------------------------------------------------------------
+// The elastic hub.
+// ---------------------------------------------------------------------------
+
+/// Cheap, cloneable observation handle for one attached session: identity
+/// plus read access to its state store and health record. Mutating
+/// lifecycle ops (pause/detach/…) go through [`ElasticHub`] by id.
+#[derive(Clone)]
+pub struct SessionHandle {
+    id: u64,
+    name: String,
+    state: StateStore,
+    status: StatusCell,
+}
+
+impl SessionHandle {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Current health record.
+    pub fn status(&self) -> SessionStatus {
+        self.status.snapshot()
+    }
+
+    /// Checkpoint the session: its latest published [`Snapshot`]
+    /// (version, sample count, separation matrix). Non-blocking — reads
+    /// the state store the runner publishes into after every chunk.
+    pub fn checkpoint(&self) -> Snapshot {
+        self.state.snapshot()
+    }
+
+    /// The session's state store (inference path).
+    pub fn store(&self) -> StateStore {
+        self.state.clone()
+    }
+}
+
+/// A parked session held by the control plane between detach and
+/// re-attach.
+struct ParkedSession {
+    runner: Box<SessionRunner>,
+    consumed_upto: u64,
+}
+
+/// Per-session control-plane bookkeeping.
+struct Entry {
+    name: String,
+    shard: usize,
+    route: Arc<Route>,
+    producer: Option<thread::JoinHandle<()>>,
+    status: StatusCell,
+    parked: Option<ParkedSession>,
+}
+
+/// What a shard worker thread returns: its session reports and the
+/// deepest backlog it observed.
+type WorkerHandle = thread::JoinHandle<Result<(Vec<SessionReport>, usize)>>;
+
+/// The elastic serving plane. Start it, attach tenants as they arrive,
+/// drive lifecycle commands while shards stream, and [`ElasticHub::finish`]
+/// to drain everything into a [`HubSummary`].
+pub struct ElasticHub {
+    g: Nonlinearity,
+    opts: HubOptions,
+    placement: Box<dyn Placement>,
+    data_txs: Vec<SyncSender<DataMsg>>,
+    ctrl_txs: Vec<Sender<ControlMsg>>,
+    workers: Vec<WorkerHandle>,
+    entries: BTreeMap<u64, Entry>,
+    /// Per-shard active (installed or in-flight-attach) session counts —
+    /// the load signal placement reads.
+    active: Arc<Vec<AtomicUsize>>,
+    directory: StateDirectory,
+    metrics: HubMetrics,
+    next_id: u64,
+    started: Instant,
+}
+
+impl ElasticHub {
+    /// Spawn the shard workers (no sessions yet).
+    pub fn start(g: Nonlinearity, opts: HubOptions) -> Result<Self> {
+        opts.validate()?;
+        let shards = opts.shards;
+        let capacity = block_capacity(opts.channel_capacity);
+        let metrics = HubMetrics::new(shards);
+        let active: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..shards).map(|_| AtomicUsize::new(0)).collect());
+
+        let mut data_txs = Vec::with_capacity(shards);
+        let mut ctrl_txs = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (data_tx, data_rx) = sync_channel::<DataMsg>(capacity);
+            let (ctrl_tx, ctrl_rx) = channel::<ControlMsg>();
+            data_txs.push(data_tx);
+            ctrl_txs.push(ctrl_tx);
+            let state = ShardState {
+                shard,
+                runners: BTreeMap::new(),
+                consumed_seq: BTreeMap::new(),
+                pending_park: BTreeMap::new(),
+                reports: Vec::new(),
+                active: Arc::clone(&active),
+                consumed: Arc::clone(&metrics.consumed),
+            };
+            let depth = Arc::clone(&metrics.depths[shard]);
+            workers.push(thread::spawn(move || shard_worker(state, data_rx, ctrl_rx, depth)));
+        }
+        Ok(Self {
+            g,
+            placement: build_placement(opts.placement),
+            opts,
+            data_txs,
+            ctrl_txs,
+            workers,
+            entries: BTreeMap::new(),
+            active,
+            directory: StateDirectory::new(),
+            metrics,
+            next_id: 0,
+            started: Instant::now(),
+        })
+    }
+
+    /// Replace the placement policy (custom policies, tests).
+    pub fn set_placement(&mut self, placement: Box<dyn Placement>) {
+        self.placement = placement;
+    }
+
+    pub fn shards(&self) -> usize {
+        self.opts.shards
+    }
+
+    /// Sessions attached so far (including drained and parked ones).
+    pub fn sessions_attached(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// The tenant registry / live health plane (clone freely; shares
+    /// state with the runners).
+    pub fn directory(&self) -> StateDirectory {
+        self.directory.clone()
+    }
+
+    /// Live metrics handle.
+    pub fn metrics(&self) -> HubMetrics {
+        self.metrics.clone()
+    }
+
+    /// Admit a session that streams its full `cfg.samples`.
+    pub fn attach(&mut self, cfg: ExperimentConfig) -> Result<SessionHandle> {
+        self.attach_spec(SessionSpec { cfg, arrive_at: 0, depart_at: 0 })
+    }
+
+    /// Admit a session with a lifecycle plan (early departure honored;
+    /// the `arrive_at` field is the *caller's* schedule — admission
+    /// happens now).
+    pub fn attach_spec(&mut self, spec: SessionSpec) -> Result<SessionHandle> {
+        let cfg = &spec.cfg;
+        cfg.validate().with_context(|| format!("attaching session '{}'", cfg.name))?;
+        let id = self.next_id;
+        let loads: Vec<usize> = self.active.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let shard = self.placement.place(id, &loads);
+        if shard >= self.opts.shards {
+            bail!(
+                "placement '{}' returned shard {shard} for session {id}, but the hub has {} \
+                 shard(s)",
+                self.placement.name(),
+                self.opts.shards
+            );
+        }
+
+        // Build everything fallible before touching shared state.
+        let engine = make_engine(cfg, self.g)
+            .with_context(|| format!("building engine for session {id} ('{}')", cfg.name))?;
+        let mut stream = build_stream(cfg)
+            .with_context(|| format!("building stream for session {id} ('{}')", cfg.name))?;
+
+        let state = StateStore::new(crate::ica::init_b(cfg.n, cfg.m));
+        let status = StatusCell::new(id, &cfg.name);
+        status.set_shard(shard);
+        let mut runner = SessionRunner::new(cfg, engine, &self.opts.server, state.clone());
+        runner.set_status_cell(status.clone());
+
+        // Install the runner before the producer exists: the worker
+        // drains its control lane ahead of every data message, so the
+        // session's first block can never outrun its Attach.
+        self.active[shard].fetch_add(1, Ordering::Relaxed);
+        let attach =
+            ControlMsg::Attach { session: id, runner: Box::new(runner), consumed_upto: 0 };
+        if self.ctrl_txs[shard].send(attach).is_err() {
+            self.active[shard].fetch_sub(1, Ordering::Relaxed);
+            bail!("shard {shard} worker is gone");
+        }
+        // Only a successfully admitted tenant reaches the health plane —
+        // a failed send above must not leave a ghost registration.
+        self.directory.register(id, state.clone(), status.clone());
+
+        let route = Arc::new(Route::new(
+            self.data_txs[shard].clone(),
+            Arc::clone(&self.metrics.depths[shard]),
+        ));
+        let total = spec.effective_samples();
+        let monitor_every = self.opts.server.monitor_every.max(1);
+        let producer = {
+            let route = Arc::clone(&route);
+            let ingested = Arc::clone(&self.metrics.ingested);
+            thread::spawn(move || {
+                drive_stream(&mut stream, total, monitor_every, &mut |ev| {
+                    emit_routed(&route, id, ev, &ingested)
+                });
+            })
+        };
+
+        self.next_id += 1;
+        let handle =
+            SessionHandle { id, name: cfg.name.clone(), state, status: status.clone() };
+        self.entries.insert(
+            id,
+            Entry {
+                name: cfg.name.clone(),
+                shard,
+                route,
+                producer: Some(producer),
+                status,
+                parked: None,
+            },
+        );
+        Ok(handle)
+    }
+
+    /// Pause a streaming session: its producer gates before the next
+    /// event; samples already queued still drain. Idempotent.
+    pub fn pause(&mut self, id: u64) -> Result<()> {
+        let entry = self.entry(id)?;
+        if entry.parked.is_some() {
+            bail!("session {id} is detached; reattach it instead of pausing");
+        }
+        if entry.status.snapshot().phase == SessionPhase::Drained {
+            bail!("session {id} already drained; nothing to pause");
+        }
+        let mut st = entry.route.state.lock().expect("route lock poisoned");
+        match st.phase {
+            GatePhase::Aborted => bail!("session {id} is shutting down"),
+            _ => st.phase = GatePhase::Paused,
+        }
+        drop(st);
+        entry.status.set_phase(SessionPhase::Paused);
+        Ok(())
+    }
+
+    /// Resume a paused session. Idempotent for streaming sessions.
+    pub fn resume(&mut self, id: u64) -> Result<()> {
+        let entry = self.entry(id)?;
+        if entry.parked.is_some() {
+            bail!("session {id} is detached; reattach it instead of resuming");
+        }
+        if entry.status.snapshot().phase == SessionPhase::Drained {
+            bail!("session {id} already drained; nothing to resume");
+        }
+        let mut st = entry.route.state.lock().expect("route lock poisoned");
+        match st.phase {
+            GatePhase::Aborted => bail!("session {id} is shutting down"),
+            _ => st.phase = GatePhase::Streaming,
+        }
+        drop(st);
+        entry.route.cv.notify_all();
+        entry.status.set_phase(SessionPhase::Streaming);
+        Ok(())
+    }
+
+    /// Detach a session: pause its producer, let the shard apply every
+    /// sample produced so far, then park the runner (full state) with the
+    /// control plane. The tenant keeps its directory registration —
+    /// inference against its last published B still works — and can
+    /// [`ElasticHub::reattach`] later, on any shard, bit-identically.
+    pub fn detach(&mut self, id: u64) -> Result<()> {
+        let entry = self.entry(id)?;
+        if entry.parked.is_some() {
+            bail!("session {id} is already detached");
+        }
+        if entry.status.snapshot().phase == SessionPhase::Drained {
+            bail!("session {id} already drained; nothing to detach");
+        }
+        // Quiesce the producer: gate it, wait out any in-flight send, and
+        // read the cut point. After this no new data can enter the lane.
+        let upto = {
+            let mut st = entry.route.state.lock().expect("route lock poisoned");
+            if st.phase == GatePhase::Aborted {
+                bail!("session {id} is shutting down");
+            }
+            st.phase = GatePhase::Paused;
+            while st.in_flight {
+                st = entry.route.cv.wait(st).expect("route lock poisoned");
+            }
+            st.seq
+        };
+        entry.status.set_phase(SessionPhase::Paused);
+        let (reply_tx, reply_rx) = channel();
+        let shard = entry.shard;
+        self.ctrl_txs[shard]
+            .send(ControlMsg::Park { session: id, upto_seq: upto, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("shard {shard} worker is gone"))?;
+        match reply_rx.recv() {
+            Ok(ParkOutcome::Parked(runner)) => {
+                let entry = self.entries.get_mut(&id).expect("entry checked above");
+                entry.parked = Some(ParkedSession { runner, consumed_upto: upto });
+                Ok(())
+            }
+            Ok(ParkOutcome::Gone) => {
+                bail!("session {id} already drained; nothing to detach")
+            }
+            // The reply sender was dropped: the worker died (another
+            // tenant's failure) before resolving the park — a very
+            // different situation from a clean drain.
+            Err(_) => bail!("shard {shard} worker failed while parking session {id}"),
+        }
+    }
+
+    /// Re-attach a detached session on the shard placement chooses.
+    /// Returns the shard.
+    pub fn reattach(&mut self, id: u64) -> Result<usize> {
+        let loads: Vec<usize> = self.active.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let shard = self.placement.place(id, &loads);
+        self.reattach_to(id, shard)?;
+        Ok(shard)
+    }
+
+    /// Re-attach a detached session on an explicit shard (tests, manual
+    /// rebalancing). The parked runner — optimizer state, chunker
+    /// partial, AGC, monitor, adaptive controller — moves wholesale, so
+    /// the continued trajectory is bit-identical to an uninterrupted run.
+    pub fn reattach_to(&mut self, id: u64, shard: usize) -> Result<()> {
+        if shard >= self.opts.shards {
+            bail!("shard {shard} out of range (hub has {})", self.opts.shards);
+        }
+        let parked = {
+            let entry =
+                self.entries.get_mut(&id).with_context(|| format!("unknown session {id}"))?;
+            entry.parked.take().with_context(|| format!("session {id} is not detached"))?
+        };
+        self.active[shard].fetch_add(1, Ordering::Relaxed);
+        let attach = ControlMsg::Attach {
+            session: id,
+            runner: parked.runner,
+            consumed_upto: parked.consumed_upto,
+        };
+        if let Err(std::sync::mpsc::SendError(msg)) = self.ctrl_txs[shard].send(attach) {
+            // Worker gone: undo the load count and re-park the runner so
+            // the session stays recoverable.
+            self.active[shard].fetch_sub(1, Ordering::Relaxed);
+            if let ControlMsg::Attach { runner, consumed_upto, .. } = msg {
+                let entry = self.entries.get_mut(&id).expect("entry checked above");
+                entry.parked = Some(ParkedSession { runner, consumed_upto });
+            }
+            bail!("shard {shard} worker is gone");
+        }
+        // Only now re-open the producer gate, targeted at the new shard:
+        // the Attach above is already in the control lane, so the first
+        // routed message cannot outrun it.
+        let entry = self.entries.get_mut(&id).expect("entry checked above");
+        {
+            let mut st = entry.route.state.lock().expect("route lock poisoned");
+            st.tx = Some(self.data_txs[shard].clone());
+            st.depth = Arc::clone(&self.metrics.depths[shard]);
+            st.phase = GatePhase::Streaming;
+        }
+        entry.route.cv.notify_all();
+        entry.shard = shard;
+        entry.status.set_shard(shard);
+        entry.status.set_phase(SessionPhase::Streaming);
+        Ok(())
+    }
+
+    /// Restore a checkpointed separation matrix into a session (live on
+    /// its shard, or parked). Counters and the sample clock continue; the
+    /// monitor re-arms — the restored separator starts a fresh
+    /// convergence story.
+    pub fn restore(&mut self, id: u64, snapshot: &Snapshot) -> Result<()> {
+        let entry = self.entry_mut(id)?;
+        if let Some(parked) = entry.parked.as_mut() {
+            parked.runner.install_b(snapshot.b.clone());
+            return Ok(());
+        }
+        let shard = entry.shard;
+        let (ack_tx, ack_rx) = channel();
+        self.ctrl_txs[shard]
+            .send(ControlMsg::Restore { session: id, b: snapshot.b.clone(), ack: ack_tx })
+            .map_err(|_| anyhow::anyhow!("shard {shard} worker is gone"))?;
+        match ack_rx.recv() {
+            Ok(true) => Ok(()),
+            Ok(false) => bail!("session {id} already drained; cannot restore"),
+            Err(_) => bail!("shard {shard} worker failed while restoring session {id}"),
+        }
+    }
+
+    fn entry(&self, id: u64) -> Result<&Entry> {
+        self.entries.get(&id).with_context(|| format!("unknown session {id}"))
+    }
+
+    fn entry_mut(&mut self, id: u64) -> Result<&mut Entry> {
+        self.entries.get_mut(&id).with_context(|| format!("unknown session {id}"))
+    }
+
+    /// Drive a scenario's lifecycle plan to completion: admit each spec
+    /// once the hub's aggregate ingest crosses its `arrive_at` threshold
+    /// (immediately if every earlier session already drained), then
+    /// drain. This is the `serve-many` path.
+    pub fn serve(mut self, specs: Vec<SessionSpec>) -> Result<HubSummary> {
+        let mut ordered = specs;
+        ordered.sort_by_key(|s| s.arrive_at); // stable: equal thresholds keep order
+        for spec in ordered {
+            while self.metrics.samples_ingested() < spec.arrive_at
+                && self.any_producer_ingesting()
+            {
+                thread::sleep(Duration::from_millis(1));
+            }
+            self.attach_spec(spec)?;
+        }
+        self.finish()
+    }
+
+    /// A producer that is alive *and* gate-open: only those can advance
+    /// `samples_ingested`, so only they justify waiting on an arrival
+    /// threshold (a fleet of paused/parked tenants must not stall
+    /// [`ElasticHub::serve`] forever).
+    fn any_producer_ingesting(&self) -> bool {
+        self.entries.values().any(|e| {
+            e.producer.as_ref().is_some_and(|h| !h.is_finished())
+                && e.route
+                    .state
+                    .lock()
+                    .map(|st| st.phase == GatePhase::Streaming)
+                    .unwrap_or(false)
+        })
+    }
+
+    /// Drain the plane: wait for streaming sessions to complete, abort
+    /// paused/parked producers, stop the shard workers, and assemble the
+    /// aggregate summary (parked runners are drained into reports too).
+    pub fn finish(mut self) -> Result<HubSummary> {
+        // Paused or parked producers would gate forever: abort them so
+        // their threads exit. Streaming producers run to completion.
+        for entry in self.entries.values_mut() {
+            let mut st = entry.route.state.lock().expect("route lock poisoned");
+            if st.phase == GatePhase::Paused {
+                st.phase = GatePhase::Aborted;
+            }
+            drop(st);
+            entry.route.cv.notify_all();
+        }
+        for entry in self.entries.values_mut() {
+            if let Some(p) = entry.producer.take() {
+                p.join().ok();
+            }
+        }
+        // Disconnect the data lanes: clear every route's sender, then
+        // drop the hub's own. Workers exit once their lane disconnects.
+        for entry in self.entries.values_mut() {
+            entry.route.state.lock().expect("route lock poisoned").tx = None;
+        }
+        self.data_txs.clear();
+
+        let mut sessions: Vec<SessionReport> = Vec::new();
+        let mut max_queue_depth = 0usize;
+        let mut first_err = None;
+        for w in self.workers.drain(..) {
+            match w.join() {
+                Ok(Ok((reports, depth))) => {
+                    sessions.extend(reports);
+                    max_queue_depth = max_queue_depth.max(depth);
+                }
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err =
+                        first_err.or_else(|| Some(anyhow::anyhow!("elastic hub worker panicked")))
+                }
+            }
+        }
+        // Parked runners never reached a worker's drain: finish them here.
+        for (&id, entry) in self.entries.iter_mut() {
+            if let Some(parked) = entry.parked.take() {
+                sessions.push(SessionReport {
+                    id: id as usize,
+                    shard: entry.shard,
+                    name: String::new(),
+                    summary: parked.runner.finish(),
+                });
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        sessions.sort_by_key(|r| r.id);
+        for r in &mut sessions {
+            if let Some(entry) = self.entries.get(&(r.id as u64)) {
+                r.name = entry.name.clone();
+            }
+        }
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let total_samples: u64 = sessions.iter().map(|r| r.summary.samples).sum();
+        Ok(HubSummary {
+            shards: self.opts.shards,
+            elapsed_secs: elapsed,
+            total_samples,
+            aggregate_sps: safe_rate(total_samples, elapsed),
+            max_queue_depth,
+            sessions,
+        })
+    }
+}
+
+impl Drop for ElasticHub {
+    /// Best-effort teardown for a hub dropped without [`ElasticHub::finish`]
+    /// (e.g. an error path): abort every producer gate and disconnect the
+    /// data lanes so producer and worker threads exit promptly instead of
+    /// leaking for the life of the process. Threads are not joined here —
+    /// they unwind on their own once their channels disconnect. After a
+    /// normal `finish()` this has nothing left to do.
+    fn drop(&mut self) {
+        for entry in self.entries.values_mut() {
+            if let Ok(mut st) = entry.route.state.lock() {
+                st.phase = GatePhase::Aborted;
+                st.tx = None;
+            }
+            entry.route.cv.notify_all();
+        }
+        self.data_txs.clear();
+    }
+}
+
+/// The routed producer emit: gate on the session's route, then send to
+/// whichever shard the control plane currently targets. Returns `false`
+/// (stop producing) on abort or when the target worker is gone.
+fn emit_routed(route: &Route, session: u64, event: StreamEvent, ingested: &AtomicU64) -> bool {
+    let rows = match &event {
+        StreamEvent::Batch(b) => b.rows() as u64,
+        _ => 0,
+    };
+    let mut st = route.state.lock().expect("route lock poisoned");
+    loop {
+        match st.phase {
+            GatePhase::Streaming => break,
+            GatePhase::Paused => st = route.cv.wait(st).expect("route lock poisoned"),
+            GatePhase::Aborted => return false,
+        }
+    }
+    let Some(tx) = st.tx.clone() else {
+        return false;
+    };
+    let depth = Arc::clone(&st.depth);
+    st.seq += 1;
+    let seq = st.seq;
+    st.in_flight = true;
+    drop(st);
+
+    // The gauge is incremented before the (possibly blocking) send, so
+    // under backpressure it counts stalled producers too — same
+    // semantics as the batch hub.
+    depth.fetch_add(1, Ordering::Relaxed);
+    let ok = tx.send(DataMsg { session, seq, event }).is_ok();
+    if ok {
+        ingested.fetch_add(rows, Ordering::Relaxed);
+    } else {
+        depth.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    let mut st = route.state.lock().expect("route lock poisoned");
+    st.in_flight = false;
+    drop(st);
+    route.cv.notify_all();
+    ok
+}
+
+/// Run a config-layer [`HubScenario`] through the elastic lifecycle
+/// runtime (the `serve-many` path): placement from `hub.placement`,
+/// arrivals staggered by `hub.arrive_stride`, early departures from
+/// `hub.depart_at`.
+pub fn run_scenario(sc: &HubScenario, g: Nonlinearity) -> Result<HubSummary> {
+    sc.validate()?;
+    let hub = ElasticHub::start(g, HubOptions::from_scenario(sc))?;
+    hub.serve(sc.session_specs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.samples = 4_000;
+        cfg.seed = seed;
+        cfg.optimizer.mu = 0.004;
+        cfg.name = format!("e{seed}");
+        cfg
+    }
+
+    #[test]
+    fn modulo_placement_matches_batch_rule() {
+        let mut p = ModuloPlacement;
+        assert_eq!(p.name(), "modulo");
+        let loads = [5, 0, 0];
+        assert_eq!(p.place(0, &loads), 0);
+        assert_eq!(p.place(4, &loads), 1);
+        assert_eq!(p.place(5, &loads), 2);
+    }
+
+    #[test]
+    fn least_loaded_placement_balances_and_reuses_freed_capacity() {
+        let mut p = LeastLoadedPlacement;
+        assert_eq!(p.name(), "least_loaded");
+        // Ties break toward the lowest shard: a static fleet admitted in
+        // id order round-robins exactly like modulo.
+        assert_eq!(p.place(0, &[0, 0]), 0);
+        assert_eq!(p.place(1, &[1, 0]), 1);
+        assert_eq!(p.place(2, &[1, 1]), 0);
+        // A departure freed shard 0: the next arrival reuses it even
+        // though modulo would have pinned session 3 to shard 1.
+        assert_eq!(p.place(3, &[0, 2]), 0);
+    }
+
+    #[test]
+    fn elastic_hub_validates_options() {
+        let opts = HubOptions { shards: 0, ..Default::default() };
+        assert!(ElasticHub::start(Nonlinearity::Cube, opts).is_err());
+        let opts = HubOptions { channel_capacity: 0, ..Default::default() };
+        assert!(ElasticHub::start(Nonlinearity::Cube, opts).is_err());
+    }
+
+    #[test]
+    fn attach_stream_drain_reports_every_session() {
+        let opts = HubOptions { shards: 2, ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let directory = hub.directory();
+        let h0 = hub.attach(small_cfg(1)).unwrap();
+        let h1 = hub.attach(small_cfg(2)).unwrap();
+        assert_eq!((h0.id(), h1.id()), (0, 1));
+        assert_eq!(hub.sessions_attached(), 2);
+        let sum = hub.finish().unwrap();
+        assert_eq!(sum.sessions.len(), 2);
+        for (i, r) in sum.sessions.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert_eq!(r.name, format!("e{}", i + 1));
+            assert_eq!(r.summary.samples + r.summary.tail_dropped, 4_000);
+        }
+        // The first tenant always lands on shard 0 (least-loaded ties
+        // break low); the second lands wherever the load signal said at
+        // admission time — round-robin unless tenant 0 already drained.
+        assert_eq!(sum.sessions[0].shard, 0);
+        assert!(sum.sessions[1].shard < 2);
+        // Health plane: both tenants drained, observable post-run too.
+        for id in 0..2u64 {
+            let st = directory.status(id).unwrap();
+            assert_eq!(st.phase, SessionPhase::Drained);
+            assert!(st.samples > 0);
+        }
+    }
+
+    #[test]
+    fn pause_resume_round_trip_completes() {
+        let opts = HubOptions { shards: 1, ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let mut cfg = small_cfg(3);
+        cfg.samples = 60_000; // long enough that pause lands mid-stream
+        let h = hub.attach(cfg).unwrap();
+        hub.pause(h.id()).unwrap();
+        assert_eq!(h.status().phase, SessionPhase::Paused);
+        hub.pause(h.id()).unwrap(); // idempotent
+        hub.resume(h.id()).unwrap();
+        assert_eq!(h.status().phase, SessionPhase::Streaming);
+        let sum = hub.finish().unwrap();
+        let s = &sum.sessions[0].summary;
+        assert_eq!(s.samples + s.tail_dropped, 60_000);
+    }
+
+    #[test]
+    fn finish_drains_a_parked_session() {
+        // A session detached and never re-attached still yields a report
+        // (phase Drained) instead of leaking its thread or state.
+        let opts = HubOptions { shards: 1, ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let mut cfg = small_cfg(4);
+        cfg.samples = 200_000; // long enough that detach lands mid-stream
+        let h = hub.attach(cfg).unwrap();
+        // Wait for some progress so the park is a genuine mid-stream cut.
+        while h.checkpoint().samples == 0 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        hub.detach(h.id()).unwrap();
+        assert_eq!(h.status().phase, SessionPhase::Detached);
+        assert!(hub.detach(h.id()).is_err(), "double detach must fail");
+        assert!(hub.pause(h.id()).is_err(), "pausing a detached session must fail");
+        let sum = hub.finish().unwrap();
+        assert_eq!(sum.sessions.len(), 1);
+        let s = &sum.sessions[0].summary;
+        assert!(s.samples > 0 && s.samples < 200_000, "parked mid-stream: {}", s.samples);
+        assert_eq!(h.status().phase, SessionPhase::Drained);
+    }
+
+    #[test]
+    fn unknown_session_ops_fail_cleanly() {
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, HubOptions::default()).unwrap();
+        assert!(hub.pause(7).is_err());
+        assert!(hub.resume(7).is_err());
+        assert!(hub.detach(7).is_err());
+        assert!(hub.reattach(7).is_err());
+        let h = hub.attach(small_cfg(5)).unwrap();
+        assert!(hub.reattach_to(h.id(), 9).is_err(), "shard out of range");
+        assert!(hub.reattach(h.id()).is_err(), "not detached");
+        hub.finish().unwrap();
+    }
+
+    #[test]
+    fn serve_runs_a_churn_schedule() {
+        let sc = crate::config::HubScenario::from_toml(
+            r#"
+            samples = 6000
+            [optimizer]
+            mu = 0.004
+            [hub]
+            sessions = 4
+            shards = 2
+            arrive_stride = 2000
+            depart_at = [0, 3000]
+            "#,
+        )
+        .unwrap();
+        assert!(sc.has_churn());
+        let sum = run_scenario(&sc, Nonlinearity::Cube).unwrap();
+        assert_eq!(sum.sessions.len(), 4);
+        // Departing tenants (odd ids) streamed exactly their truncated
+        // sample count; stayers their full count.
+        for r in &sum.sessions {
+            let want = if r.id % 2 == 1 { 3_000 } else { 6_000 };
+            assert_eq!(r.summary.samples + r.summary.tail_dropped, want, "session {}", r.id);
+        }
+        assert!(sum.total_samples > 0);
+    }
+}

@@ -13,7 +13,14 @@
 //! many such sessions over a fixed pool of worker shards (per-shard
 //! bounded channels, per-session state) — the single-stream
 //! [`server::run_streaming`] is now a thin one-session wrapper over the
-//! same [`server::SessionRunner`] the hub schedules.
+//! same [`server::SessionRunner`] the hub schedules. The [`lifecycle`]
+//! module turns that hub into an **elastic serving plane**: tenants
+//! attach, detach, pause/resume, checkpoint and restore at runtime
+//! (pluggable admission-time [`lifecycle::Placement`], a per-shard
+//! control lane beside the data channels), and every tenant's live
+//! health — phase, last Amari, drift events, rollbacks, queue depth —
+//! is observable through the [`state::StateDirectory`] while shards
+//! stream.
 //!
 //! The request path is precision-generic: each session's engine runs the
 //! optimizer pipeline in the precision its config selects
@@ -25,15 +32,20 @@
 pub mod batcher;
 pub mod engine;
 pub mod hub;
+pub mod lifecycle;
 pub mod monitor;
 pub mod server;
 pub mod state;
 
 pub use batcher::Chunker;
 pub use engine::{make_engine, CastNativeEngine, Engine, NativeEngine, PjrtEngine};
-pub use hub::{run_hub, run_scenario, Hub, HubMetrics, HubOptions, HubSummary, SessionReport};
+pub use hub::{run_hub, Hub, HubMetrics, HubOptions, HubSummary, SessionReport};
+pub use lifecycle::{
+    build_placement, run_scenario, ElasticHub, LeastLoadedPlacement, ModuloPlacement, Placement,
+    SessionHandle,
+};
 pub use monitor::{Monitor, MonitorPoint};
 pub use server::{
     build_stream, run_experiment, run_streaming, RunSummary, ServerOptions, SessionRunner,
 };
-pub use state::{Snapshot, StateDirectory, StateStore};
+pub use state::{SessionPhase, SessionStatus, Snapshot, StateDirectory, StateStore, StatusCell};

@@ -8,7 +8,7 @@ use crate::ica::ConvergenceCriterion;
 use crate::linalg::Mat64;
 
 /// One monitor observation.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MonitorPoint {
     pub samples: u64,
     pub amari: f64,

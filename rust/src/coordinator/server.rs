@@ -14,7 +14,7 @@
 use super::batcher::Chunker;
 use super::engine::Engine;
 use super::monitor::{Monitor, MonitorPoint};
-use super::state::StateStore;
+use super::state::{SessionPhase, StateStore, StatusCell};
 use crate::adapt::AdaptiveController;
 use crate::config::ExperimentConfig;
 use crate::ica::{ConvergenceCriterion, Nonlinearity};
@@ -270,6 +270,19 @@ pub struct SessionRunner {
     /// checkpoint. `None` leaves the session bit-identical to the
     /// fixed-μ coordinator.
     adapt: Option<AdaptiveController>,
+    /// Live health record this runner publishes into once per engine
+    /// chunk — 64 samples at the defaults, i.e. at least as often as the
+    /// monitor records — carrying phase, samples, last Amari,
+    /// drift/rollback/reset counters and queue depth. The serving plane
+    /// registers the same cell in the
+    /// [`super::state::StateDirectory`]; a solo run publishes into a
+    /// private, unregistered cell. Observational only — never read on
+    /// the update path, so it cannot perturb the math.
+    status: StatusCell,
+    /// Shard ingest backlog observed when this session's latest block was
+    /// dequeued (set by the hub worker, folded into the next status
+    /// publish).
+    observed_depth: usize,
     /// Latched at the first ingested event so a session's elapsed/sps
     /// measure its own service window, not hub setup time.
     started: Option<Instant>,
@@ -298,9 +311,37 @@ impl SessionRunner {
             divergence_bound: options.divergence_bound,
             resets: 0,
             adapt,
+            status: StatusCell::new(0, &cfg.name),
+            observed_depth: 0,
             started: None,
             engine,
         }
+    }
+
+    /// Publish health into `cell` instead of the private default (the
+    /// serving plane passes the directory-registered cell).
+    pub fn set_status_cell(&mut self, cell: StatusCell) {
+        self.status = cell;
+    }
+
+    /// The health cell this runner publishes into.
+    pub fn status_cell(&self) -> StatusCell {
+        self.status.clone()
+    }
+
+    /// Record the shard backlog seen when this session's latest block was
+    /// dequeued; folded into the next status publish.
+    pub(crate) fn note_queue_depth(&mut self, depth: usize) {
+        self.observed_depth = depth;
+    }
+
+    /// Install a checkpointed separation matrix (the command plane's
+    /// `restore` op) and publish it, re-arming convergence detection —
+    /// the restored separator starts a fresh convergence story.
+    pub fn install_b(&mut self, b: Mat64) {
+        self.engine.reset_b(b);
+        self.monitor.rearm();
+        self.state.publish(self.engine.b(), self.engine.samples_done());
     }
 
     /// Start the service clock on the first ingested event.
@@ -335,6 +376,8 @@ impl SessionRunner {
             divergence_bound,
             resets,
             adapt,
+            status,
+            observed_depth,
             ..
         } = self;
         chunker.push_block(&block, |chunk| -> Result<()> {
@@ -385,9 +428,22 @@ impl SessionRunner {
                 engine.set_mu(ctrl.mu(done));
             }
             state.publish(engine.b(), engine.samples_done());
-            if *have_a {
-                monitor.record(&engine.b(), current_a, engine.samples_done());
-            }
+            let amari = if *have_a {
+                monitor.record(&engine.b(), current_a, engine.samples_done())
+            } else {
+                f64::NAN
+            };
+            // Live health plane: one coherent record per engine chunk.
+            // Pure observation — nothing on the update path reads it
+            // back, so trajectories stay bit-identical.
+            status.publish_progress(
+                engine.samples_done(),
+                amari,
+                *resets,
+                adapt.as_ref().map_or(0, |c| c.drift_events()),
+                adapt.as_ref().map_or(0, |c| c.rollbacks()),
+                *observed_depth,
+            );
             Ok(())
         })
     }
@@ -417,6 +473,15 @@ impl SessionRunner {
         } else {
             f64::NAN
         };
+        self.status.publish_progress(
+            samples,
+            final_amari,
+            self.resets,
+            self.adapt.as_ref().map_or(0, |c| c.drift_events()),
+            self.adapt.as_ref().map_or(0, |c| c.rollbacks()),
+            self.observed_depth,
+        );
+        self.status.set_phase(SessionPhase::Drained);
         RunSummary {
             samples,
             tail_dropped: tail,

@@ -1,10 +1,20 @@
-//! Versioned separation-matrix store: the coordinator's shared state.
+//! Versioned separation-matrix store and the live tenant health plane:
+//! the coordinator's shared state.
 //!
 //! The training loop publishes B snapshots; concurrent readers (the
 //! inference path, metric reporters, state dumps) read the latest version
 //! without blocking the trainer. This mirrors the paper's deployment
 //! story — the same hardware trains and *serves* (§I: "model creation,
 //! training, and deployment in hardware").
+//!
+//! Beyond the separation matrix, every tenant publishes a
+//! [`SessionStatus`] record (lifecycle phase, last Amari, drift events,
+//! rollbacks, queue depth) into its [`StatusCell`] once per engine chunk
+//! (the same points at which B snapshots are published), so
+//! dashboards and the `serve-many --status-every` observer can watch a
+//! fleet's health **while the hub is still running** — the live form of
+//! the per-run counters that previously only appeared in the final
+//! summary table.
 
 use crate::linalg::Mat64;
 use std::collections::BTreeMap;
@@ -58,14 +68,169 @@ impl StateStore {
     }
 }
 
-/// Session-id → [`StateStore`] registry for multi-tenant serving.
+/// Lifecycle phase of a serving-plane session (DESIGN.md §Session
+/// lifecycle state machine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionPhase {
+    /// Admitted by placement; the shard has not installed the runner yet.
+    Admitted,
+    /// Streaming: the shard worker is applying this tenant's samples.
+    Streaming,
+    /// Producer gated; already-queued samples still drain, nothing new
+    /// is ingested until resume.
+    Paused,
+    /// Parked: the runner was removed from its shard and is held by the
+    /// control plane, ready to re-attach (on any shard) bit-identically.
+    Detached,
+    /// Terminal: the session's stream ended (or the hub drained it).
+    Drained,
+}
+
+impl SessionPhase {
+    /// Short lowercase label for status tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Admitted => "admitted",
+            Self::Streaming => "streaming",
+            Self::Paused => "paused",
+            Self::Detached => "detached",
+            Self::Drained => "drained",
+        }
+    }
+}
+
+/// One tenant's live health record, published by the session runner once
+/// per engine chunk and readable through [`StateDirectory::status`] while
+/// training runs.
+#[derive(Clone, Debug)]
+pub struct SessionStatus {
+    /// Session id (the directory key).
+    pub id: u64,
+    /// Session name (from its config).
+    pub name: String,
+    /// Shard currently hosting the runner (last shard when detached).
+    pub shard: usize,
+    /// Lifecycle phase.
+    pub phase: SessionPhase,
+    /// Samples applied to the separator so far.
+    pub samples: u64,
+    /// Most recent monitored Amari index (NaN before the first record).
+    pub last_amari: f64,
+    /// Divergence-guard resets so far.
+    pub resets: u64,
+    /// Drift events the adaptive control plane has raised so far.
+    pub drift_events: u64,
+    /// Checkpoint rollbacks served so far (subset of `resets`).
+    pub rollbacks: u64,
+    /// Shard ingest backlog observed when this tenant's last block was
+    /// dequeued (messages; see `HubMetrics::queue_depth` semantics).
+    pub queue_depth: usize,
+}
+
+impl SessionStatus {
+    fn new(id: u64, name: &str) -> Self {
+        Self {
+            id,
+            name: name.to_string(),
+            shard: 0,
+            phase: SessionPhase::Admitted,
+            samples: 0,
+            last_amari: f64::NAN,
+            resets: 0,
+            drift_events: 0,
+            rollbacks: 0,
+            queue_depth: 0,
+        }
+    }
+}
+
+/// Shared, cloneable handle to one tenant's [`SessionStatus`] record.
 ///
-/// The hub registers every session's store here so concurrent readers
-/// (inference, dashboards) can resolve any tenant's latest separation
-/// matrix without touching the training path. Cloning shares the map.
+/// Every write replaces the full set of progress fields under one write
+/// lock, so concurrent readers can never observe a torn record (e.g. a
+/// drift count from one chunk paired with a sample count from another) —
+/// pinned by the seeded stress test in this module.
+#[derive(Clone)]
+pub struct StatusCell {
+    inner: Arc<RwLock<SessionStatus>>,
+}
+
+impl StatusCell {
+    pub fn new(id: u64, name: &str) -> Self {
+        Self { inner: Arc::new(RwLock::new(SessionStatus::new(id, name))) }
+    }
+
+    /// Current record (cloned out; readers never hold the lock long).
+    pub fn snapshot(&self) -> SessionStatus {
+        self.inner.read().expect("status lock poisoned").clone()
+    }
+
+    /// Set the lifecycle phase (control-plane transitions). `Drained` is
+    /// terminal: once a session's stream ended, a racing pause/detach on
+    /// the control plane cannot flip the published phase back to a live
+    /// state.
+    pub fn set_phase(&self, phase: SessionPhase) {
+        let mut s = self.inner.write().expect("status lock poisoned");
+        if s.phase != SessionPhase::Drained {
+            s.phase = phase;
+        }
+    }
+
+    /// Record the shard currently hosting the runner.
+    pub fn set_shard(&self, shard: usize) {
+        self.inner.write().expect("status lock poisoned").shard = shard;
+    }
+
+    /// Promote to `Streaming` only from a fresh (`Admitted`) or parked
+    /// (`Detached`) phase — the shard worker's install-time transition.
+    /// Check-and-set under one write lock, so it can never clobber a
+    /// concurrent control-plane `Paused` (or a terminal `Drained`).
+    pub fn promote_to_streaming(&self) {
+        let mut s = self.inner.write().expect("status lock poisoned");
+        if matches!(s.phase, SessionPhase::Admitted | SessionPhase::Detached) {
+            s.phase = SessionPhase::Streaming;
+        }
+    }
+
+    /// Publish one coherent progress record (the runner's per-chunk
+    /// write): all fields land under a single lock.
+    pub fn publish_progress(
+        &self,
+        samples: u64,
+        last_amari: f64,
+        resets: u64,
+        drift_events: u64,
+        rollbacks: u64,
+        queue_depth: usize,
+    ) {
+        let mut s = self.inner.write().expect("status lock poisoned");
+        s.samples = samples;
+        if last_amari.is_finite() {
+            s.last_amari = last_amari;
+        }
+        s.resets = resets;
+        s.drift_events = drift_events;
+        s.rollbacks = rollbacks;
+        s.queue_depth = queue_depth;
+    }
+}
+
+/// One registered tenant: separation matrix plus health record.
+#[derive(Clone)]
+struct Tenant {
+    store: StateStore,
+    status: StatusCell,
+}
+
+/// Session-id → per-tenant state registry for multi-tenant serving.
+///
+/// The hub registers every session's [`StateStore`] **and**
+/// [`StatusCell`] here so concurrent readers (inference, dashboards) can
+/// resolve any tenant's latest separation matrix and live health without
+/// touching the training path. Cloning shares the map.
 #[derive(Clone, Default)]
 pub struct StateDirectory {
-    inner: Arc<RwLock<BTreeMap<u64, StateStore>>>,
+    inner: Arc<RwLock<BTreeMap<u64, Tenant>>>,
 }
 
 impl StateDirectory {
@@ -73,14 +238,70 @@ impl StateDirectory {
         Self::default()
     }
 
-    /// Register (or replace) a session's store.
+    /// Register (or replace) a session's store with a fresh, anonymous
+    /// status cell. Prefer [`StateDirectory::register`] on the serving
+    /// path so the health plane carries the session's real identity.
     pub fn insert(&self, session: u64, store: StateStore) {
-        self.inner.write().expect("directory lock poisoned").insert(session, store);
+        self.register(session, store, StatusCell::new(session, ""));
+    }
+
+    /// Register (or replace) a session's store and status cell.
+    pub fn register(&self, session: u64, store: StateStore, status: StatusCell) {
+        self.inner
+            .write()
+            .expect("directory lock poisoned")
+            .insert(session, Tenant { store, status });
     }
 
     /// Look up a session's store (cheap clone; stores share state).
     pub fn get(&self, session: u64) -> Option<StateStore> {
-        self.inner.read().expect("directory lock poisoned").get(&session).cloned()
+        self.inner
+            .read()
+            .expect("directory lock poisoned")
+            .get(&session)
+            .map(|t| t.store.clone())
+    }
+
+    /// Look up a session's live health record.
+    pub fn status(&self, session: u64) -> Option<SessionStatus> {
+        self.inner
+            .read()
+            .expect("directory lock poisoned")
+            .get(&session)
+            .map(|t| t.status.snapshot())
+    }
+
+    /// Every tenant's current health record, ascending by id.
+    pub fn statuses(&self) -> Vec<SessionStatus> {
+        self.inner
+            .read()
+            .expect("directory lock poisoned")
+            .values()
+            .map(|t| t.status.snapshot())
+            .collect()
+    }
+
+    /// Render the live fleet-health table (`serve-many --status-every`).
+    pub fn render_status_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "session  phase      shard    samples    amari  resets  drifts  rollbk  depth\n",
+        );
+        for s in self.statuses() {
+            out.push_str(&format!(
+                "{:>7}  {:<9}  {:>5}  {:>9}  {:>7.4}  {:>6}  {:>6}  {:>6}  {:>5}\n",
+                s.id,
+                s.phase.name(),
+                s.shard,
+                s.samples,
+                s.last_amari,
+                s.resets,
+                s.drift_events,
+                s.rollbacks,
+                s.queue_depth
+            ));
+        }
+        out
     }
 
     /// Registered session ids, ascending.
@@ -147,6 +368,156 @@ mod tests {
         // The directory shares state with the trainer's handle.
         a.publish(Mat64::zeros(2, 2), 5);
         assert_eq!(dir.get(0).unwrap().version(), 1);
+    }
+
+    #[test]
+    fn status_cell_publishes_coherent_records() {
+        let cell = StatusCell::new(3, "tenant");
+        let s = cell.snapshot();
+        assert_eq!((s.id, s.name.as_str()), (3, "tenant"));
+        assert_eq!(s.phase, SessionPhase::Admitted);
+        assert!(s.last_amari.is_nan(), "no amari before the first record");
+        cell.set_phase(SessionPhase::Streaming);
+        cell.set_shard(1);
+        cell.publish_progress(512, 0.25, 1, 2, 1, 7);
+        let s = cell.snapshot();
+        assert_eq!(s.phase, SessionPhase::Streaming);
+        assert_eq!((s.shard, s.samples, s.queue_depth), (1, 512, 7));
+        assert_eq!((s.resets, s.drift_events, s.rollbacks), (1, 2, 1));
+        assert_eq!(s.last_amari, 0.25);
+        // A NaN amari (no ground truth yet) keeps the previous value.
+        cell.publish_progress(1024, f64::NAN, 1, 2, 1, 0);
+        assert_eq!(cell.snapshot().last_amari, 0.25);
+        assert_eq!(cell.snapshot().samples, 1024);
+        // Drained is terminal: a racing control-plane transition can
+        // never resurrect a finished session's published phase.
+        cell.set_phase(SessionPhase::Drained);
+        cell.set_phase(SessionPhase::Paused);
+        assert_eq!(cell.snapshot().phase, SessionPhase::Drained);
+    }
+
+    #[test]
+    fn promote_to_streaming_is_conditional() {
+        // The worker's install-time transition only fires from Admitted
+        // or Detached: a pause that raced ahead of the install (or a
+        // terminal drain) is never clobbered.
+        let cell = StatusCell::new(0, "t");
+        cell.promote_to_streaming();
+        assert_eq!(cell.snapshot().phase, SessionPhase::Streaming, "Admitted promotes");
+        cell.set_phase(SessionPhase::Detached);
+        cell.promote_to_streaming();
+        assert_eq!(cell.snapshot().phase, SessionPhase::Streaming, "Detached promotes");
+        cell.set_phase(SessionPhase::Paused);
+        cell.promote_to_streaming();
+        assert_eq!(cell.snapshot().phase, SessionPhase::Paused, "Paused survives");
+        cell.set_phase(SessionPhase::Drained);
+        cell.promote_to_streaming();
+        assert_eq!(cell.snapshot().phase, SessionPhase::Drained, "Drained survives");
+    }
+
+    #[test]
+    fn directory_serves_statuses() {
+        let dir = StateDirectory::new();
+        let store = StateStore::new(Mat64::eye(2, 2));
+        let cell = StatusCell::new(5, "t5");
+        dir.register(5, store, cell.clone());
+        cell.set_phase(SessionPhase::Streaming);
+        cell.publish_progress(100, 0.5, 0, 0, 0, 0);
+        let s = dir.status(5).expect("registered");
+        assert_eq!(s.name, "t5");
+        assert_eq!(s.samples, 100);
+        assert!(dir.status(6).is_none());
+        assert_eq!(dir.statuses().len(), 1);
+        let table = dir.render_status_table();
+        assert!(table.contains("streaming"), "{table}");
+        // `insert` still registers an (anonymous) health record.
+        dir.insert(6, StateStore::new(Mat64::eye(2, 2)));
+        assert_eq!(dir.status(6).unwrap().phase, SessionPhase::Admitted);
+    }
+
+    #[test]
+    fn status_and_state_reads_are_never_torn() {
+        // Satellite stress test: shard-side writers publish *correlated*
+        // records — every StateStore publish writes B ≡ k with samples = k,
+        // every StatusCell publish writes samples = drifts = rollbacks = k
+        // — while readers hop between tenants on a seeded schedule. Any
+        // torn (partially updated) record breaks the correlation.
+        use crate::signal::Pcg32;
+        const TENANTS: u64 = 4;
+        const WRITES: u64 = 2_000;
+        let dir = StateDirectory::new();
+        let mut cells = Vec::new();
+        let mut stores = Vec::new();
+        for id in 0..TENANTS {
+            let store = StateStore::new(Mat64::zeros(2, 2));
+            let cell = StatusCell::new(id, &format!("t{id}"));
+            dir.register(id, store.clone(), cell.clone());
+            stores.push(store);
+            cells.push(cell);
+        }
+
+        let writers: Vec<_> = (0..TENANTS)
+            .map(|id| {
+                let store = stores[id as usize].clone();
+                let cell = cells[id as usize].clone();
+                thread::spawn(move || {
+                    for k in 1..=WRITES {
+                        let b = Mat64::from_fn(2, 2, |_, _| k as f64);
+                        store.publish(b, k);
+                        cell.publish_progress(k, 0.1, k, k, k, k as usize);
+                    }
+                })
+            })
+            .collect();
+
+        let readers: Vec<_> = (0..4u64)
+            .map(|seed| {
+                let dir = dir.clone();
+                thread::spawn(move || {
+                    let mut rng = Pcg32::seed(0x7EA2 ^ seed);
+                    let mut last_version = vec![0u64; TENANTS as usize];
+                    for _ in 0..4_000 {
+                        let id = rng.below(TENANTS as u32) as u64;
+                        let snap = dir.get(id).unwrap().snapshot();
+                        // B and samples were written together: all four
+                        // elements equal the sample count (or the initial
+                        // zero state).
+                        for r in 0..2 {
+                            for c in 0..2 {
+                                assert_eq!(
+                                    snap.b[(r, c)],
+                                    snap.samples as f64,
+                                    "torn StateStore snapshot for tenant {id}"
+                                );
+                            }
+                        }
+                        assert!(
+                            snap.version >= last_version[id as usize],
+                            "version went backwards"
+                        );
+                        last_version[id as usize] = snap.version;
+                        let st = dir.status(id).unwrap();
+                        assert_eq!(
+                            (st.samples, st.samples),
+                            (st.drift_events, st.rollbacks),
+                            "torn SessionStatus record for tenant {id}"
+                        );
+                        assert_eq!(st.resets, st.samples);
+                    }
+                })
+            })
+            .collect();
+
+        for w in writers {
+            w.join().unwrap();
+        }
+        for r in readers {
+            r.join().unwrap();
+        }
+        for id in 0..TENANTS {
+            assert_eq!(dir.get(id).unwrap().snapshot().samples, WRITES);
+            assert_eq!(dir.status(id).unwrap().samples, WRITES);
+        }
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! Maps CLI commands to the experiment drivers (DESIGN.md §6) and the
 //! streaming coordinator. Run `easi-ica help` for the command list.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use easi_ica::cli::{usage, Args};
-use easi_ica::config::{EngineKind, ExperimentConfig, HubScenario, OptimizerKind, Precision};
-use easi_ica::coordinator::{run_experiment, run_scenario, RunSummary};
+use easi_ica::config::{
+    EngineKind, ExperimentConfig, HubScenario, OptimizerKind, PlacementKind, Precision,
+};
+use easi_ica::coordinator::{run_experiment, ElasticHub, HubOptions, RunSummary};
 use easi_ica::experiments::{
     a1_hyper_sweep, a2_nonlinearity, a3_adaptive_tracking, drift_study, e1_convergence,
     e3_depth_sweep, DriftStudyParams, E1Params, TrackingParams,
@@ -162,12 +164,14 @@ fn print_summary(s: &RunSummary) {
     }
 }
 
-/// `serve-many` — stream many concurrent sessions through the hub.
+/// `serve-many` — stream many concurrent sessions through the elastic
+/// session-lifecycle runtime (admission-time placement, optional churn,
+/// live health table).
 fn cmd_serve_many(args: &Args) -> Result<()> {
     args.expect_only(&[
         "config", "sessions", "shards", "samples", "capacity", "mixing", "precision", "mu",
         "gamma", "beta", "p", "optimizer", "engine", "seed", "seed-stride", "m", "n",
-        "artifacts", "adapt", "switch-at",
+        "artifacts", "adapt", "switch-at", "placement", "churn", "status-every",
     ])?;
     let mut sc = if let Some(path) = args.get("config") {
         HubScenario::load(path)?
@@ -199,15 +203,41 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
             .map(|s| parse_on_off("adapt", s.trim()))
             .collect::<Result<Vec<_>>>()?;
     }
+    if let Some(p) = args.get("placement") {
+        sc.placement = PlacementKind::parse(p)?;
+    }
+    if let Some(churn) = args.get("churn") {
+        // `--churn S` staggers arrivals by S aggregate-ingested samples;
+        // `--churn S,D` additionally makes every other tenant depart
+        // after D of its own samples.
+        let mut parts = churn.split(',');
+        let stride: u64 = parts
+            .next()
+            .unwrap_or_default()
+            .trim()
+            .parse()
+            .context("--churn must be STRIDE or STRIDE,DEPART (integers)")?;
+        sc.arrive_stride = stride;
+        if let Some(d) = parts.next() {
+            let depart: u64 =
+                d.trim().parse().context("--churn depart value must be an integer")?;
+            sc.depart_at = vec![0, depart];
+        }
+        if parts.next().is_some() {
+            bail!("--churn takes at most two comma-separated values");
+        }
+    }
+    let status_every = args.get_u64("status-every", 0)?;
     apply_base_overrides(&mut sc.base, args)?;
     resolve_artifacts(&mut sc.base, args);
     sc.validate()?;
 
     println!(
-        "serve-many: {} sessions on {} shard(s), {} samples each, optimizer {}, mixing {:?}, \
-         precision {:?}",
+        "serve-many: {} sessions on {} shard(s) ({} placement), {} samples each, optimizer {}, \
+         mixing {:?}, precision {:?}{}",
         sc.sessions,
         sc.shards,
+        sc.placement.name(),
         sc.base.samples,
         sc.base.optimizer.kind.name(),
         if sc.mixing.is_empty() { vec![sc.base.signal.mixing.clone()] } else { sc.mixing.clone() },
@@ -216,9 +246,41 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
         } else {
             sc.precision.iter().map(|p| p.name().to_string()).collect()
         },
+        if sc.has_churn() {
+            format!(", churn: arrive_stride {} depart_at {:?}", sc.arrive_stride, sc.depart_at)
+        } else {
+            String::new()
+        },
     );
-    let summary = run_scenario(&sc, Nonlinearity::Cube)?;
-    print!("{}", summary.render_table());
+
+    let hub = ElasticHub::start(Nonlinearity::Cube, HubOptions::from_scenario(&sc))?;
+    // Live health observer: print the StateDirectory status table on a
+    // fixed cadence while the fleet trains (`--status-every` millis).
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let observer = (status_every > 0).then(|| {
+        let directory = hub.directory();
+        let stop = std::sync::Arc::clone(&stop);
+        std::thread::spawn(move || {
+            // Sleep in short slices so the command exits promptly when the
+            // run drains, instead of stalling up to a full interval.
+            let tick = std::time::Duration::from_millis(status_every.clamp(1, 50));
+            let mut slept = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(tick);
+                slept += tick.as_millis() as u64;
+                if slept >= status_every {
+                    slept = 0;
+                    println!("{}", directory.render_status_table());
+                }
+            }
+        })
+    });
+    let result = hub.serve(sc.session_specs());
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(o) = observer {
+        o.join().ok();
+    }
+    print!("{}", result?.render_table());
     Ok(())
 }
 
@@ -394,7 +456,7 @@ fn cmd_dump_datapath(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     args.expect_only(&[
         "quick", "out", "check", "tolerance", "min-fused-speedup", "min-f32-speedup",
-        "max-adapt-overhead",
+        "max-adapt-overhead", "max-status-overhead",
     ])?;
     let quick = args.switch("quick");
     let report = easi_ica::perf::run_hotpath_suite(quick);
@@ -411,6 +473,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let floor = args.get_f64("min-fused-speedup", 0.0)?;
         let f32_floor = args.get_f64("min-f32-speedup", 0.0)?;
         let adapt_ceiling = args.get_f64("max-adapt-overhead", 0.0)?;
+        let status_ceiling = args.get_f64("max-status-overhead", 0.0)?;
         let gate = easi_ica::perf::gate_against_file(
             &report,
             std::path::Path::new(baseline),
@@ -418,6 +481,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             floor,
             f32_floor,
             adapt_ceiling,
+            status_ceiling,
         )?;
         if gate.failures.is_empty() {
             println!(

@@ -23,7 +23,10 @@
 
 use crate::adapt::AdaptiveController;
 use crate::config::{AdaptConfig, ExperimentConfig, OptimizerConfig, OptimizerKind};
-use crate::coordinator::{make_engine, run_streaming, ServerOptions, StateStore};
+use crate::coordinator::{
+    make_engine, run_streaming, ServerOptions, SessionRunner, StateDirectory, StateStore,
+    StatusCell,
+};
 use crate::ica::{self, EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
 use crate::linalg::{fused, FusedScratch, Mat32, Mat64};
 use crate::signal::Pcg32;
@@ -535,6 +538,8 @@ pub fn run_hotpath_suite(quick: bool) -> BenchReport {
 
     adapt_overhead(&mut rep, warmup, runs, rows);
 
+    lifecycle_overhead(&mut rep, warmup, runs, rows);
+
     coordinator_e2e(&mut rep, quick);
 
     println!();
@@ -775,6 +780,93 @@ fn adapt_overhead(rep: &mut BenchReport, warmup: usize, runs: usize, rows: usize
     rep.derived.push(("adapt_overhead_fraction".to_string(), overhead));
 }
 
+/// The serving plane's control-path costs at the canonical gate shape
+/// (m=16, n=8): the session-admission kernel (everything
+/// `ElasticHub::attach` does besides spawning the producer thread, which
+/// is scheduler noise), the status-publish kernel alone, and the fused
+/// step with the runner's per-chunk status publish vs the bare fused
+/// step. The derived `status_overhead_fraction` is what CI's
+/// `--max-status-overhead` flag gates (≤ 5%): live observability must
+/// cost ~nothing on the hot path.
+fn lifecycle_overhead(rep: &mut BenchReport, warmup: usize, runs: usize, rows: usize) {
+    let (m, n) = (16, 8);
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = m;
+    cfg.n = n;
+    let opts = ServerOptions::default();
+    let directory = StateDirectory::new();
+    let attaches = 64u64;
+    let attach = bench(warmup, runs, attaches, || {
+        for id in 0..attaches {
+            let engine = make_engine(&cfg, Nonlinearity::Cube).expect("native engine");
+            let stream = crate::coordinator::build_stream(&cfg).expect("stream");
+            let state = StateStore::new(ica::init_b(n, m));
+            let status = StatusCell::new(id, &cfg.name);
+            directory.register(id, state.clone(), status.clone());
+            let mut runner = SessionRunner::new(&cfg, engine, &opts, state);
+            runner.set_status_cell(status);
+            black_box(&runner);
+            black_box(&stream);
+        }
+    });
+    push(rep, "hub attach (admission path)", "hub_attach", m, n, runs, &attach);
+
+    // The health-plane write alone (one coherent record per call).
+    let cell = StatusCell::new(0, "bench");
+    let publish = bench(warmup, runs, rows as u64, || {
+        for t in 0..rows {
+            cell.publish_progress(t as u64, 0.1, 0, 0, 0, 3);
+        }
+        black_box(cell.snapshot().samples);
+    });
+    push(rep, "status publish", "hub_status_publish", m, n, runs, &publish);
+
+    // Fused step + one status publish per 64-sample chunk — exactly the
+    // runner's monitor-cadence write — vs the bare fused step on the
+    // identical workload (same-section reference, like adapt_overhead).
+    let mut rng = Pcg32::seed(0x57A7);
+    let xs = Mat64::from_fn(rows, m, |_, _| rng.normal());
+    let iters = rows as u64;
+    let mut s = FusedScratch::new(n, m);
+    let mut b_ref = ica::init_b(n, m);
+    let step = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            fused::relative_gradient_step_into(
+                &mut b_ref,
+                black_box(xs.row(t)),
+                |v| v * v * v,
+                BENCH_MU,
+                &mut s,
+            );
+        }
+        black_box(&b_ref);
+    });
+    push(rep, "fused step (status reference)", "hub_status_step_ref", m, n, runs, &step);
+
+    let watched = StatusCell::new(1, "bench");
+    let mut b2 = ica::init_b(n, m);
+    let observed = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            fused::relative_gradient_step_into(
+                &mut b2,
+                black_box(xs.row(t)),
+                |v| v * v * v,
+                BENCH_MU,
+                &mut s,
+            );
+            if t % 64 == 63 {
+                watched.publish_progress(t as u64, 0.1, 0, 0, 0, 2);
+            }
+        }
+        black_box(&b2);
+    });
+    push(rep, "fused step + status publish", "hub_status_step", m, n, runs, &observed);
+
+    let overhead =
+        ((observed.per_iter_ns() - step.per_iter_ns()) / step.per_iter_ns()).max(0.0);
+    rep.derived.push(("status_overhead_fraction".to_string(), overhead));
+}
+
 fn push(
     rep: &mut BenchReport,
     what: &str,
@@ -848,7 +940,9 @@ pub struct GateReport {
 /// `f32_over_f64_step_speedup` (the m=16, n=8 canonical shape) must too.
 /// If `max_adapt_overhead > 0`, the derived `adapt_overhead_fraction`
 /// (the control plane's cost on the fused step, machine-invariant like
-/// the speedup ratios) must stay at or below that ceiling.
+/// the speedup ratios) must stay at or below that ceiling; likewise
+/// `max_status_overhead > 0` caps `status_overhead_fraction` (the live
+/// health plane's cost on the fused step).
 pub fn check_against_baseline(
     current: &BenchReport,
     baseline: &Json,
@@ -856,6 +950,7 @@ pub fn check_against_baseline(
     min_fused_speedup: f64,
     min_f32_speedup: f64,
     max_adapt_overhead: f64,
+    max_status_overhead: f64,
 ) -> Result<GateReport> {
     let base_calib = baseline
         .get("calibration_ns_per_iter")
@@ -913,17 +1008,18 @@ pub fn check_against_baseline(
     };
     floor("fused_step_speedup_m8_n8", min_fused_speedup);
     floor("f32_over_f64_step_speedup", min_f32_speedup);
-    if max_adapt_overhead > 0.0 {
-        match current.derived_value("adapt_overhead_fraction") {
-            Some(v) if v <= max_adapt_overhead => {}
-            Some(v) => gate.failures.push(format!(
-                "adapt_overhead_fraction = {v:.3} above allowed {max_adapt_overhead:.3}"
-            )),
-            None => gate
-                .failures
-                .push("adapt_overhead_fraction missing from current suite".to_string()),
+    let mut ceiling = |key: &str, max: f64| {
+        if max <= 0.0 {
+            return;
         }
-    }
+        match current.derived_value(key) {
+            Some(v) if v <= max => {}
+            Some(v) => gate.failures.push(format!("{key} = {v:.3} above allowed {max:.3}")),
+            None => gate.failures.push(format!("{key} missing from current suite")),
+        }
+    };
+    ceiling("adapt_overhead_fraction", max_adapt_overhead);
+    ceiling("status_overhead_fraction", max_status_overhead);
     Ok(gate)
 }
 
@@ -935,6 +1031,7 @@ pub fn gate_against_file(
     min_fused_speedup: f64,
     min_f32_speedup: f64,
     max_adapt_overhead: f64,
+    max_status_overhead: f64,
 ) -> Result<GateReport> {
     let text = std::fs::read_to_string(baseline_path)
         .with_context(|| format!("reading baseline {}", baseline_path.display()))?;
@@ -947,6 +1044,7 @@ pub fn gate_against_file(
         min_fused_speedup,
         min_f32_speedup,
         max_adapt_overhead,
+        max_status_overhead,
     )
 }
 
@@ -988,6 +1086,7 @@ mod tests {
                 ("fused_step_speedup_m8_n8".to_string(), 2.0),
                 ("f32_over_f64_step_speedup".to_string(), 1.6),
                 ("adapt_overhead_fraction".to_string(), 0.05),
+                ("status_overhead_fraction".to_string(), 0.01),
             ],
         }
     }
@@ -1040,7 +1139,7 @@ mod tests {
     fn gate_passes_identical_report() {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 1.5, 1.5, 0.10).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 1.5, 1.5, 0.10, 0.05).unwrap();
         assert_eq!(gate.checked, 1, "only the gated record is compared");
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
@@ -1055,7 +1154,7 @@ mod tests {
         for r in &mut slower.records {
             r.ns_per_iter *= 3.0;
         }
-        let gate = check_against_baseline(&slower, &baseline, 0.30, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&slower, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 
@@ -1066,13 +1165,13 @@ mod tests {
 
         let mut regressed = rep.clone();
         regressed.records[0].ns_per_iter *= 1.5; // 50% > 30% tolerance
-        let gate = check_against_baseline(&regressed, &baseline, 0.30, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&regressed, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("regressed"));
 
         let mut missing = rep.clone();
         missing.records.remove(0);
-        let gate = check_against_baseline(&missing, &baseline, 0.30, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&missing, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1081,7 +1180,7 @@ mod tests {
     fn gate_enforces_fused_speedup_floor() {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 2.5, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 2.5, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("fused_step_speedup"));
     }
@@ -1093,16 +1192,38 @@ mod tests {
         // missing the derived value fails when the ceiling is requested.
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.10).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.10, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.01).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.01, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("adapt_overhead_fraction"));
         let mut bare = rep.clone();
         bare.derived.retain(|(k, _)| k != "adapt_overhead_fraction");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.10).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.10, 0.0).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("missing"));
+    }
+
+    #[test]
+    fn gate_enforces_status_overhead_ceiling() {
+        // tiny_report carries status_overhead_fraction = 0.01: a 5%
+        // ceiling passes, a 0.1% ceiling fails, 0 disables the check, and
+        // a report missing the derived value fails when requested.
+        let rep = tiny_report();
+        let baseline = Json::parse(&rep.to_json()).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.05).unwrap();
+        assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+        let gate =
+            check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.001).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("status_overhead_fraction"));
+        let mut bare = rep.clone();
+        bare.derived.retain(|(k, _)| k != "status_overhead_fraction");
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
+        assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.05).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1114,7 +1235,7 @@ mod tests {
         let baseline = Json::parse(&rep.to_json()).unwrap();
         let mut noisy = rep.clone();
         noisy.records[1].ns_per_iter *= 100.0;
-        let gate = check_against_baseline(&noisy, &baseline, 0.30, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&noisy, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty());
     }
 
@@ -1138,10 +1259,12 @@ mod tests {
                 ("fused_step_speedup_m8_n8".to_string(), 2.0),
                 ("f32_over_f64_step_speedup".to_string(), 1.6),
                 ("adapt_overhead_fraction".to_string(), 0.05),
+                ("status_overhead_fraction".to_string(), 0.01),
             ],
         };
         let mut f32_gated = 0usize;
         let mut adapt_gated = 0usize;
+        let mut lifecycle_gated = 0usize;
         for rec in baseline.get("records").and_then(Json::as_array).unwrap() {
             let gated = rec.get("gated").and_then(Json::as_bool).unwrap();
             let kernel = rec.get("kernel").and_then(Json::as_str).unwrap().to_string();
@@ -1165,6 +1288,9 @@ mod tests {
             if gated && kernel.starts_with("adapt_") {
                 adapt_gated += 1;
             }
+            if gated && kernel.starts_with("hub_") {
+                lifecycle_gated += 1;
+            }
             current.records.push(BenchRecord {
                 name: rec.get("name").and_then(Json::as_str).unwrap().to_string(),
                 kernel,
@@ -1184,7 +1310,10 @@ mod tests {
         // …and the adaptive control plane's tracker+detector records
         // (reference step, observation kernel, governed step).
         assert!(adapt_gated >= 3, "only {adapt_gated} gated adapt records");
-        let gate = check_against_baseline(&current, &baseline, 0.30, 1.5, 1.2, 0.10).unwrap();
+        // …and the serving plane's lifecycle records (admission path,
+        // status-publish kernel, reference + observed fused step).
+        assert!(lifecycle_gated >= 4, "only {lifecycle_gated} gated lifecycle records");
+        let gate = check_against_baseline(&current, &baseline, 0.30, 1.5, 1.2, 0.10, 0.05).unwrap();
         assert!(gate.checked > 0);
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
@@ -1194,10 +1323,10 @@ mod tests {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
         // tiny_report carries f32_over_f64_step_speedup = 1.6.
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 2.5, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 2.5, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("f32_over_f64_step_speedup"));
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 1.2, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 1.2, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 }

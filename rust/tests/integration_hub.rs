@@ -1,18 +1,27 @@
-//! Integration tests for the multi-session coordinator hub.
+//! Integration tests for the multi-session coordinator hub and the
+//! elastic session-lifecycle runtime layered on top of it.
 //!
-//! Two properties pin the hub to the single-stream server:
+//! Properties pinned here:
 //! - **Determinism**: a session run through the hub with seed S produces a
 //!   bit-identical separation matrix to the same config run through
 //!   `run_streaming` — multiplexing must not change the math.
 //! - **Isolation**: a pathological (diverging) tenant sharing a shard with
 //!   healthy tenants must not perturb their matrices at all.
+//! - **Lifecycle transparency**: a static scenario run through the elastic
+//!   runtime (modulo placement) is byte-identical to the batch hub;
+//!   mid-run churn (attach/detach) leaves survivors' trajectories
+//!   bit-identical; a detach → re-attach to a *different* shard continues
+//!   the migrated tenant bit-identically; and drift events are observable
+//!   through the `StateDirectory` health plane while the hub runs.
 
-use easi_ica::config::{ExperimentConfig, HubScenario, Precision};
+use easi_ica::config::{ExperimentConfig, HubScenario, PlacementKind, Precision};
 use easi_ica::coordinator::{
-    make_engine, run_hub, run_scenario, run_streaming, HubOptions, ServerOptions, StateStore,
+    make_engine, run_hub, run_scenario, run_streaming, ElasticHub, HubOptions, RunSummary,
+    ServerOptions, SessionPhase, StateStore,
 };
 use easi_ica::ica::Nonlinearity;
 use easi_ica::linalg::Mat64;
+use std::time::{Duration, Instant};
 
 fn cfg(seed: u64, mixing: &str) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -24,11 +33,37 @@ fn cfg(seed: u64, mixing: &str) -> ExperimentConfig {
     cfg
 }
 
-/// Final B from the single-stream server (the reference path).
-fn solo_b(cfg: &ExperimentConfig) -> Mat64 {
+/// Full summary from the single-stream server (the reference path).
+fn solo_summary(cfg: &ExperimentConfig) -> RunSummary {
     let engine = make_engine(cfg, Nonlinearity::Cube).expect("engine");
     let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
-    run_streaming(cfg, engine, ServerOptions::default(), &state).expect("solo run").b
+    run_streaming(cfg, engine, ServerOptions::default(), &state).expect("solo run")
+}
+
+/// Final B from the single-stream server.
+fn solo_b(cfg: &ExperimentConfig) -> Mat64 {
+    solo_summary(cfg).b
+}
+
+/// Assert every deterministic `RunSummary` field matches (everything but
+/// the wall-clock timing fields, which can never be byte-identical).
+fn assert_summaries_identical(a: &RunSummary, b: &RunSummary, ctx: &str) {
+    assert_eq!(a.b, b.b, "{ctx}: separation matrix");
+    assert_eq!(a.samples, b.samples, "{ctx}: samples");
+    assert_eq!(a.tail_dropped, b.tail_dropped, "{ctx}: tail_dropped");
+    assert_eq!(a.engine, b.engine, "{ctx}: engine");
+    assert_eq!(
+        a.final_amari.to_bits(),
+        b.final_amari.to_bits(),
+        "{ctx}: final_amari {} vs {}",
+        a.final_amari,
+        b.final_amari
+    );
+    assert_eq!(a.converged_at, b.converged_at, "{ctx}: converged_at");
+    assert_eq!(a.resets, b.resets, "{ctx}: resets");
+    assert_eq!(a.drift_events, b.drift_events, "{ctx}: drift_events");
+    assert_eq!(a.rollbacks, b.rollbacks, "{ctx}: rollbacks");
+    assert_eq!(a.amari_history, b.amari_history, "{ctx}: amari trajectory");
 }
 
 #[test]
@@ -155,6 +190,198 @@ fn hub_scenario_precision_cycling_end_to_end() {
             report.summary.engine
         );
     }
+}
+
+#[test]
+fn static_scenario_through_lifecycle_is_byte_identical_to_batch_hub() {
+    // The bit-exactness pin of the lifecycle refactor: a static scenario
+    // (no churn) run through the elastic runtime in modulo-placement mode
+    // must reproduce the pre-refactor batch hub byte for byte — every
+    // deterministic RunSummary field, every B matrix, every Amari
+    // trajectory point, and the shard assignment itself.
+    let sc = HubScenario::from_toml(
+        r#"
+        name = "pin"
+        samples = 9000
+        seed = 11
+
+        [optimizer]
+        mu = 0.004
+
+        [hub]
+        sessions = 5
+        shards = 2
+        placement = "modulo"
+        mixing = ["static", "rotating", "switching"]
+        adapt = [false, true]
+        "#,
+    )
+    .expect("scenario parses");
+    assert_eq!(sc.placement, PlacementKind::Modulo);
+    assert!(!sc.has_churn());
+
+    let batch_opts = HubOptions::from_scenario(&sc);
+    let batch =
+        run_hub(sc.session_configs(), Nonlinearity::Cube, batch_opts).expect("batch hub run");
+    let elastic = run_scenario(&sc, Nonlinearity::Cube).expect("lifecycle run");
+
+    assert_eq!(batch.sessions.len(), elastic.sessions.len());
+    assert_eq!(batch.shards, elastic.shards);
+    for (b, e) in batch.sessions.iter().zip(&elastic.sessions) {
+        assert_eq!(b.id, e.id);
+        assert_eq!(b.name, e.name);
+        assert_eq!(b.shard, e.shard, "session {}: modulo placement must agree", b.id);
+        assert_summaries_identical(&b.summary, &e.summary, &format!("session {}", b.id));
+    }
+    assert_eq!(batch.total_samples, elastic.total_samples);
+}
+
+#[test]
+fn mid_run_churn_does_not_perturb_survivors() {
+    // Two survivors stream to completion while a third tenant joins
+    // mid-run and departs early (truncated stream). The survivors'
+    // trajectories — B, Amari history, every deterministic field — must
+    // be bit-identical to their solo runs, i.e. identical to a run where
+    // the churn never happened; and the churner itself must match a solo
+    // run of its truncated length.
+    let survivors = [cfg(60, "static"), cfg(61, "rotating")];
+    let mut churner = cfg(62, "static");
+    churner.samples = 3_000;
+
+    let opts = HubOptions { shards: 2, ..Default::default() };
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).expect("hub starts");
+    let metrics = hub.metrics();
+    let h0 = hub.attach(survivors[0].clone()).expect("attach survivor 0");
+    let h1 = hub.attach(survivors[1].clone()).expect("attach survivor 1");
+    // Join mid-run: wait until the survivors have made real progress.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while metrics.samples_ingested() < 4_000 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let h2 = hub.attach(churner.clone()).expect("attach churner");
+    assert_eq!((h0.id(), h1.id(), h2.id()), (0, 1, 2));
+    let sum = hub.finish().expect("drain");
+
+    assert_eq!(sum.sessions.len(), 3);
+    for (i, want_cfg) in survivors.iter().enumerate() {
+        assert_summaries_identical(
+            &sum.sessions[i].summary,
+            &solo_summary(want_cfg),
+            &format!("survivor {i}"),
+        );
+    }
+    assert_summaries_identical(&sum.sessions[2].summary, &solo_summary(&churner), "churner");
+}
+
+#[test]
+fn detach_and_reattach_to_a_different_shard_continues_bit_identically() {
+    // The migration pin: park a tenant mid-stream, re-attach it on the
+    // *other* shard, and the completed trajectory must be bit-identical
+    // to an uninterrupted solo run — the runner (optimizer state, chunker
+    // partial, AGC, monitor, control plane) migrates wholesale.
+    let mut cfg0 = cfg(70, "rotating");
+    cfg0.samples = 40_000;
+    let opts = HubOptions { shards: 2, ..Default::default() };
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).expect("hub starts");
+    let h = hub.attach(cfg0.clone()).expect("attach");
+    assert_eq!(h.status().shard, 0, "least-loaded puts the first tenant on shard 0");
+
+    // Let it make genuine progress, then park.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while h.checkpoint().samples < 5_000 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    hub.detach(h.id()).expect("detach");
+    let parked_at = h.checkpoint().samples;
+    assert!(parked_at > 0, "parked before any progress");
+    assert_eq!(h.status().phase, SessionPhase::Detached);
+
+    // While parked the tenant still serves inference from its last
+    // published separator.
+    let snap = h.checkpoint();
+    assert_eq!(snap.b, h.store().snapshot().b);
+
+    hub.reattach_to(h.id(), 1).expect("reattach on the other shard");
+    assert_eq!(h.status().shard, 1);
+    let sum = hub.finish().expect("drain");
+    assert_eq!(sum.sessions.len(), 1);
+    assert_eq!(sum.sessions[0].shard, 1, "report carries the migrated shard");
+    assert_summaries_identical(&sum.sessions[0].summary, &solo_summary(&cfg0), "migrant");
+    assert!(
+        sum.sessions[0].summary.samples > parked_at,
+        "must have continued past the park point"
+    );
+}
+
+#[test]
+fn checkpoint_restore_round_trip_through_the_command_plane() {
+    // checkpoint() is a plain Snapshot read; restore() pushes a snapshot
+    // back through the control lane into the live runner. Restoring is a
+    // *state intervention* (not bit-exactness-preserving by design), so
+    // the pin here is semantic: the restore lands, bumps the published
+    // version, and the session keeps streaming to completion.
+    let mut cfg0 = cfg(80, "static");
+    cfg0.samples = 60_000;
+    let opts = HubOptions { shards: 1, ..Default::default() };
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).expect("hub starts");
+    let h = hub.attach(cfg0).expect("attach");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while h.checkpoint().samples < 2_000 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let early = h.checkpoint();
+    assert!(early.version > 0 && early.samples > 0);
+    hub.restore(h.id(), &early).expect("restore into live session");
+    let sum = hub.finish().expect("drain");
+    let s = &sum.sessions[0].summary;
+    assert_eq!(s.samples + s.tail_dropped, 60_000, "restored session still drains fully");
+    assert!(s.b.is_finite());
+}
+
+#[test]
+fn drift_events_are_observable_live_through_the_directory() {
+    // The PR-4 ROADMAP item closed: the adaptive controller's drift
+    // events surface through StateDirectory per-tenant status records
+    // *while the hub is still running* — not just in the final summary.
+    let mut cfg0 = ExperimentConfig::default();
+    cfg0.samples = 120_000;
+    cfg0.optimizer.kind = easi_ica::config::OptimizerKind::Sgd;
+    cfg0.optimizer.mu = 0.01;
+    cfg0.signal.mixing = "switch_once".into();
+    cfg0.signal.switch_at = 25_000;
+    cfg0.adapt.enabled = true;
+    cfg0.name = "driftwatch".into();
+
+    let opts = HubOptions { shards: 1, ..Default::default() };
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).expect("hub starts");
+    let directory = hub.directory();
+    let h = hub.attach(cfg0).expect("attach");
+
+    // Poll the health plane while the session streams.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut seen_live = None;
+    while Instant::now() < deadline {
+        let st = directory.status(h.id()).expect("registered tenant");
+        if st.drift_events >= 1 && st.phase == SessionPhase::Streaming {
+            seen_live = Some(st);
+            break;
+        }
+        if st.phase == SessionPhase::Drained {
+            break;
+        }
+        // Fine-grained poll: the post-switch window is tens of ms.
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let live = seen_live.expect("drift event must be visible before the run ends");
+    assert_eq!(live.phase, SessionPhase::Streaming, "observed while streaming");
+    assert!(live.samples >= 25_000, "drift postdates the switch");
+    assert!(live.last_amari.is_finite());
+
+    let sum = hub.finish().expect("drain");
+    assert!(sum.sessions[0].summary.drift_events >= 1);
+    let final_status = directory.status(h.id()).unwrap();
+    assert_eq!(final_status.phase, SessionPhase::Drained);
+    assert!(final_status.drift_events >= 1);
 }
 
 #[test]
