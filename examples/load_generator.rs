@@ -23,7 +23,7 @@
 //!    pausing/resuming — the serving plane's attach/detach API under a
 //!    random (but reproducible) schedule.
 
-use easi_ica::config::{ExperimentConfig, HubScenario};
+use easi_ica::config::{ExperimentConfig, HubScenario, OptimizerKind};
 use easi_ica::coordinator::{ElasticHub, HubOptions, SessionPhase};
 use easi_ica::ica::Nonlinearity;
 use easi_ica::signal::Pcg32;
@@ -66,6 +66,7 @@ fn scenario_fleet() -> anyhow::Result<()> {
         mixing = ["static", "rotating", "switch_once"]
         adapt = [true, false]       # governed and fixed-mu tenants side by side
         placement = "least_loaded"
+        cohort = true               # same-shape SGD tenants step tenant-major
         arrive_stride = 30000       # staggered joins while shards stream
         depart_at = [0, 0, 80000]   # every third tenant leaves early
         seed_stride = 1
@@ -78,11 +79,12 @@ fn scenario_fleet() -> anyhow::Result<()> {
         .map(|s| s.effective_samples() as u64)
         .sum();
     println!(
-        "load generator: {} sessions on {} shard(s) ({} placement, arrive_stride {}, \
-         depart_at {:?})",
+        "load generator: {} sessions on {} shard(s) ({} placement, cohort {}, \
+         arrive_stride {}, depart_at {:?})",
         scenario.sessions,
         scenario.shards,
         scenario.placement.name(),
+        if scenario.cohort { "on" } else { "off" },
         scenario.arrive_stride,
         scenario.depart_at
     );
@@ -156,6 +158,10 @@ fn poisson_churn() -> anyhow::Result<()> {
     cfg.m = 4;
     cfg.n = 2;
     cfg.samples = 60_000;
+    // Plain SGD tenants are cohort-eligible: same-shape sessions sharing
+    // a shard step tenant-major through one fused kernel, and the churn
+    // below exercises the pool join/extract seams live.
+    cfg.optimizer.kind = OptimizerKind::Sgd;
     cfg.optimizer.mu = 0.004;
 
     let mut handles = Vec::new();

@@ -135,6 +135,9 @@ pub fn usage() -> &'static str {
                        (cycled per session) --capacity N --seed N\n\
                        --seed-stride N --switch-at N\n\
                        --placement least_loaded|modulo\n\
+                       --cohort on|off (tenant-major cohort stepping of\n\
+                       same-shape sessions; on by default, bit-identical\n\
+                       to the per-session path)\n\
                        --churn S[,D] (stagger arrivals by S aggregate\n\
                        samples; with D every other tenant departs after D\n\
                        of its own samples)\n\
@@ -162,11 +165,12 @@ pub fn usage() -> &'static str {
                       [--m N --n N --arch sgd|smbgd]\n\
        separate       run FastICA on a synthetic dataset and report metrics\n\
                       [--m N --n N --samples N --seed N]\n\
-       bench          §Perf hot-path suite (f64 + f32 + adapt kernels) →\n\
-                      BENCH_hotpath.json (repo root)\n\
+       bench          §Perf hot-path suite (f64 + f32 + adapt + cohort\n\
+                      kernels) → BENCH_hotpath.json (repo root)\n\
                       [--quick --out PATH --check BASELINE.json\n\
                        --tolerance F --min-fused-speedup F --min-f32-speedup F\n\
-                       --max-adapt-overhead F --max-status-overhead F]\n\
+                       --min-cohort-speedup F --max-adapt-overhead F\n\
+                       --max-status-overhead F]\n\
                       with --check, exits nonzero if any gated kernel's\n\
                       machine-normalized cost regressed past the tolerance\n\
        help           this text\n"

@@ -456,6 +456,10 @@ pub struct HubScenario {
     pub seed_stride: u64,
     /// Admission-time shard placement (elastic serving plane).
     pub placement: PlacementKind,
+    /// Step same-shape tenants together through tenant-major cohort
+    /// kernels on the worker hot loop (bit-identical to per-session
+    /// stepping; `false` forces the per-session path).
+    pub cohort: bool,
     /// Churn schedule, arrivals: session `i` is admitted once the hub has
     /// ingested `i * arrive_stride` samples in aggregate (0 = everyone
     /// arrives up front — the static scenario).
@@ -480,6 +484,7 @@ impl Default for HubScenario {
             adapt: Vec::new(),
             seed_stride: 1,
             placement: PlacementKind::LeastLoaded,
+            cohort: true,
             arrive_stride: 0,
             depart_at: Vec::new(),
             base: ExperimentConfig::default(),
@@ -538,6 +543,7 @@ impl HubScenario {
                 "hub.placement" => {
                     scenario.placement = PlacementKind::parse(&want_str(&key, &value)?)?
                 }
+                "hub.cohort" => scenario.cohort = want_bool(&key, &value)?,
                 "hub.arrive_stride" => {
                     scenario.arrive_stride = want_usize(&key, &value)? as u64
                 }
@@ -794,6 +800,18 @@ mod tests {
         for c in &cfgs {
             c.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn hub_scenario_cohort_key() {
+        // Cohort stepping defaults on; `hub.cohort = false` opts a
+        // scenario back onto the per-session path; non-boolean rejected.
+        assert!(HubScenario::default().cohort);
+        let sc = HubScenario::from_toml("[hub]\ncohort = false").unwrap();
+        assert!(!sc.cohort);
+        let sc = HubScenario::from_toml("[hub]\ncohort = true").unwrap();
+        assert!(sc.cohort);
+        assert!(HubScenario::from_toml("[hub]\ncohort = 1").is_err());
     }
 
     #[test]

@@ -5,6 +5,19 @@
 
 use crate::linalg::Mat64;
 
+/// Error from [`Chunker::push_block`]: the `on_chunk` error plus exactly
+/// how many rows of the submitted block the chunker consumed before it
+/// fired, so callers can resume without double-ingesting (see the method
+/// docs for the full contract).
+#[derive(Debug, PartialEq, Eq)]
+pub struct BlockError<E> {
+    /// Rows of the failing block consumed (`0..consumed` must not be
+    /// resubmitted; `consumed..` were untouched).
+    pub consumed: usize,
+    /// The underlying `on_chunk` error.
+    pub error: E,
+}
+
 /// Accumulates samples (rows) until a full `chunk × m` matrix is ready.
 pub struct Chunker {
     m: usize,
@@ -40,14 +53,31 @@ impl Chunker {
     /// chunk. This is the hub/server ingest path: one call per producer
     /// block instead of one `Option` check per sample at the call site.
     /// Stops at the first error.
+    ///
+    /// **Error contract** (the ingest path's re-entrancy seam): on
+    /// `Err(BlockError { consumed, error })`,
+    ///
+    /// - rows `0..consumed` of *this block* have been consumed by the
+    ///   chunker — counted in [`total_pushed`](Self::total_pushed) and
+    ///   either emitted inside a chunk or still buffered as a partial.
+    ///   Re-pushing any of them double-ingests samples.
+    /// - the last emitted chunk is the one `on_chunk` failed on; it was
+    ///   delivered exactly once (its final row is `block[consumed - 1]`).
+    ///   Whether its samples reached the sink is the caller's contract
+    ///   with `on_chunk` — a transactional sink may retry the delivery
+    ///   with the chunk it already holds, never through the chunker.
+    /// - rows `consumed..` were not touched; resume by pushing exactly
+    ///   those (see `push_block_error_is_resumable` below).
     pub fn push_block<E>(
         &mut self,
         block: &Mat64,
         mut on_chunk: impl FnMut(&Mat64) -> Result<(), E>,
-    ) -> Result<(), E> {
+    ) -> Result<(), BlockError<E>> {
         for r in 0..block.rows() {
             if let Some(chunk) = self.push(block.row(r)) {
-                on_chunk(&chunk)?;
+                if let Err(error) = on_chunk(&chunk) {
+                    return Err(BlockError { consumed: r + 1, error });
+                }
             }
         }
         Ok(())
@@ -155,8 +185,71 @@ mod tests {
                 Ok(())
             }
         });
-        assert_eq!(res, Err("boom"));
+        assert_eq!(res, Err(BlockError { consumed: 2, error: "boom" }));
         assert_eq!(calls, 2, "chunks after the error must not be emitted");
+        assert_eq!(ch.total_pushed(), 2, "rows after the error must not be consumed");
+        assert_eq!(ch.pending(), 0);
+    }
+
+    #[test]
+    fn push_block_error_reports_consumed_through_failing_chunk() {
+        // chunk = 2 against a 7-row block, failing on the second chunk
+        // (block rows 2..4): consumed must cover the failing chunk's last
+        // row, rows 4.. must stay untouched, and a partial from *before*
+        // the block must be accounted inside `consumed`'s row arithmetic.
+        let mut ch = Chunker::new(1, 2);
+        ch.push(&[-1.0]); // pre-existing partial: first chunk is [-1, 0]
+        let block = Mat64::from_fn(7, 1, |i, _| i as f64);
+        let mut chunks = 0;
+        let err = ch
+            .push_block(&block, |_| {
+                chunks += 1;
+                if chunks == 2 {
+                    Err("sink full")
+                } else {
+                    Ok(())
+                }
+            })
+            .unwrap_err();
+        // Chunk 1 completed at block row 0, chunk 2 at block row 2.
+        assert_eq!(err, BlockError { consumed: 3, error: "sink full" });
+        assert_eq!(ch.total_pushed(), 4, "1 pre-existing + 3 block rows");
+        assert_eq!(ch.pending(), 0, "failing chunk drained the buffer");
+    }
+
+    #[test]
+    fn push_block_error_is_resumable() {
+        // The regression the contract exists for: after a transient sink
+        // error, a caller that resumes from `consumed` (retrying the
+        // failed delivery with the chunk it already holds) ingests every
+        // sample exactly once — no loss, no double ingestion.
+        let mut ch = Chunker::new(1, 2);
+        let block = Mat64::from_fn(6, 1, |i, _| i as f64);
+        let mut sink = Vec::new();
+        let mut failed = None;
+        let err = ch
+            .push_block(&block, |c| {
+                if sink.len() == 2 && failed.is_none() {
+                    // Transactional sink: reject the chunk untouched.
+                    failed = Some(c.clone());
+                    return Err("transient");
+                }
+                sink.extend_from_slice(c.as_slice());
+                Ok(())
+            })
+            .unwrap_err();
+        assert_eq!(err.consumed, 4);
+        // Caller-side recovery: redeliver the rejected chunk, then push
+        // only the untouched remainder through the chunker.
+        sink.extend_from_slice(failed.unwrap().as_slice());
+        for r in err.consumed..block.rows() {
+            if let Some(c) = ch.push(block.row(r)) {
+                sink.extend_from_slice(c.as_slice());
+            }
+        }
+        assert_eq!(sink, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(ch.total_pushed(), 6);
+        assert_eq!(ch.pending(), 0);
     }
 
     #[test]

@@ -1,0 +1,543 @@
+//! Cohort executor: tenant-major batching for the worker hot loop.
+//!
+//! Both hub flavours used to step one session's chunk at a time — for the
+//! millions-of-small-tenants regime that wastes the worker on per-session
+//! loop setup and dispatch instead of flops. The [`CohortExecutor`] sits
+//! between a shard's event loop and its [`SessionRunner`]s and regroups
+//! the work *tenant-major*: sessions with the same shape key
+//! (`n`, `m`, chunk size, nonlinearity, precision) form a *pool*, and one
+//! pool step advances every ready member through a single
+//! [`CohortState`] kernel whose inner loops run across the tenants.
+//!
+//! ## Ordering and bit-identity
+//!
+//! Cohort execution is a pure re-scheduling: each session's event
+//! sequence (chunk applied → bookkeeping → mixing snapshot → …) is
+//! exactly the per-session order — only *when* a chunk runs relative to
+//! other sessions' chunks changes, and sessions are independent. Combined
+//! with the per-lane bit-identity of the [`CohortState`] kernels, a
+//! session's trajectory (B bits, Amari history, reset/drift counters) is
+//! identical with the executor on or off, under every build. Pinned by
+//! `tests/integration_cohort.rs`.
+//!
+//! Each pool step reloads every lane's `(B, μ)` from its engine, so
+//! divergence-guard resets and the adaptive governor's μ retunes feed
+//! back into the very next step, exactly as on the per-session path.
+//!
+//! ## Membership lifecycle
+//!
+//! - `register` at admission: eligible sessions (plain fused EASI-SGD
+//!   native engines — [`SessionRunner::cohort_lane`]) join the pool for
+//!   their shape key; everything else stays on the per-session path.
+//! - A member without peers (pool of one) is routed straight through
+//!   `SessionRunner::on_block` — the fall-back the issue requires — and
+//!   its queue is kept empty so there is nothing to extract.
+//! - `finish_session` (End, park, detach) drains the member's queued
+//!   items in order through the ordinary per-session path and removes it:
+//!   the runner is self-contained again, so the PR-5 park/reattach
+//!   bit-identity pins hold unchanged. If the pool drops to one member,
+//!   the survivor's queue is drained too (it reverts to the direct path).
+//! - `flush_session` (checkpoint/restore) drains without removing, so a
+//!   `Restore`'s `install_b` lands on a fully caught-up runner.
+//!
+//! ## Batching policy
+//!
+//! Chunks queue per lane; a pool steps when every member has a chunk
+//! ready (full-width step) or when any member's backlog reaches
+//! [`MAX_LAG`] items (then the ready subset steps, bounding latency and
+//! memory when producers run at different speeds or a member idles).
+
+use super::server::SessionRunner;
+use crate::config::Precision;
+use crate::ica::nonlinearity::{with_g, Nonlinearity};
+use crate::linalg::{CohortState, Mat64, Scalar};
+use anyhow::Result;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Backlog bound (queued items per lane) that forces a partial-width pool
+/// step. One producer block is four chunks at the default chunk size, so
+/// 8 keeps at most two blocks buffered per lane.
+const MAX_LAG: usize = 8;
+
+/// Shape key pooling compatible tenants: lanes must agree on the matrix
+/// shape (one SoA block), the chunk size (lockstep rows), the
+/// nonlinearity (one monomorphized kernel) and the precision (one scalar
+/// type).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct CohortKey {
+    n: usize,
+    m: usize,
+    chunk: usize,
+    g: Nonlinearity,
+    precision: Precision,
+}
+
+/// One queued per-lane event, preserving the session's event order: a
+/// mixing snapshot queued behind a chunk is applied only after that
+/// chunk's bookkeeping, exactly as on the per-session path.
+enum LaneItem {
+    Chunk(Mat64),
+    Mixing(Mat64),
+}
+
+/// The pool's kernel state, monomorphized per precision.
+enum PoolState {
+    F64(CohortState<f64>),
+    F32(CohortState<f32>),
+}
+
+/// One shape-key pool: member queues plus reusable step scratch.
+struct Pool<K: Ord + Copy> {
+    key: CohortKey,
+    state: PoolState,
+    /// Per-member FIFO, keyed by session id — `BTreeMap` so lane order
+    /// within a step is deterministic (ascending id).
+    pending: BTreeMap<K, VecDeque<LaneItem>>,
+    /// Scratch: ids stepping this round (reused across steps).
+    ready: Vec<K>,
+    /// Scratch: the chunks popped for this step, lane-ordered.
+    chunks: Vec<Mat64>,
+    /// Scratch: completed chunks from one block ingest.
+    ingested: Vec<Mat64>,
+    /// Scratch: per-lane B staging for store/sync (grown once).
+    bs: Vec<Mat64>,
+}
+
+impl<K: Ord + Copy> Pool<K> {
+    fn new(key: CohortKey) -> Self {
+        let state = match key.precision {
+            Precision::F64 => PoolState::F64(CohortState::new(key.n, key.m)),
+            Precision::F32 => PoolState::F32(CohortState::new(key.n, key.m)),
+        };
+        Self {
+            key,
+            state,
+            pending: BTreeMap::new(),
+            ready: Vec::new(),
+            chunks: Vec::new(),
+            ingested: Vec::new(),
+            bs: Vec::new(),
+        }
+    }
+}
+
+/// Dispatch the nonlinearity once per pool step (the same `with_g!` seam
+/// the per-session optimizer uses, so the monomorphized closures match).
+fn step_pool_state<T: Scalar>(st: &mut CohortState<T>, g: Nonlinearity, chunks: &[Mat64]) {
+    with_g!(T, g, gf => st.step_chunks(gf, chunks));
+}
+
+/// Drain one lane's queue in order through the per-session path.
+fn drain_lane(q: &mut VecDeque<LaneItem>, runner: &mut SessionRunner) -> Result<()> {
+    while let Some(item) = q.pop_front() {
+        match item {
+            LaneItem::Chunk(c) => runner.apply_chunk(&c)?,
+            LaneItem::Mixing(a) => runner.on_mixing(a),
+        }
+    }
+    Ok(())
+}
+
+/// Run pool steps until the batching policy says wait: apply front-of-
+/// queue mixing snapshots, then step every ready lane through the fused
+/// cohort kernel and feed the results back into the runners.
+fn pump<K: Ord + Copy>(
+    pool: &mut Pool<K>,
+    runners: &mut BTreeMap<K, SessionRunner>,
+) -> Result<()> {
+    loop {
+        // Front-of-queue mixing snapshots are ready to apply: everything
+        // ordered before them has been stepped and noted.
+        for (id, q) in pool.pending.iter_mut() {
+            while matches!(q.front(), Some(LaneItem::Mixing(_))) {
+                if let Some(LaneItem::Mixing(a)) = q.pop_front() {
+                    if let Some(r) = runners.get_mut(id) {
+                        r.on_mixing(a);
+                    }
+                }
+            }
+        }
+        pool.ready.clear();
+        let mut max_backlog = 0;
+        for (id, q) in pool.pending.iter() {
+            if matches!(q.front(), Some(LaneItem::Chunk(_))) {
+                pool.ready.push(*id);
+            }
+            max_backlog = max_backlog.max(q.len());
+        }
+        if pool.ready.is_empty() {
+            return Ok(());
+        }
+        // Prefer full-width steps; break lockstep only when a lane's
+        // backlog says waiting costs latency/memory.
+        if pool.ready.len() < pool.pending.len() && max_backlog < MAX_LAG {
+            return Ok(());
+        }
+
+        let lanes = pool.ready.len();
+        pool.chunks.clear();
+        for id in pool.ready.iter() {
+            match pool.pending.get_mut(id).and_then(VecDeque::pop_front) {
+                Some(LaneItem::Chunk(c)) => pool.chunks.push(c),
+                _ => unreachable!("ready lane must front a chunk"),
+            }
+        }
+        while pool.bs.len() < lanes {
+            pool.bs.push(Mat64::zeros(pool.key.n, pool.key.m));
+        }
+        match &mut pool.state {
+            PoolState::F64(st) => {
+                step_loaded(st, pool.key.g, &pool.ready, &pool.chunks, &mut pool.bs, runners)?;
+            }
+            PoolState::F32(st) => {
+                step_loaded(st, pool.key.g, &pool.ready, &pool.chunks, &mut pool.bs, runners)?;
+            }
+        }
+    }
+}
+
+/// One pool step at a fixed precision: load every ready lane's `(B, μ)`
+/// fresh from its engine, run the fused cohort kernel, then store each
+/// lane back and run its per-chunk bookkeeping — the exact
+/// `submit_chunk` → bookkeeping sequence of the per-session path, per
+/// lane, in ascending session-id order.
+fn step_loaded<T: Scalar, K: Ord + Copy>(
+    st: &mut CohortState<T>,
+    g: Nonlinearity,
+    ready: &[K],
+    chunks: &[Mat64],
+    bs: &mut [Mat64],
+    runners: &mut BTreeMap<K, SessionRunner>,
+) -> Result<()> {
+    st.begin(ready.len());
+    for (l, id) in ready.iter().enumerate() {
+        let r = runners.get(id).expect("cohort member has a runner");
+        let lane = r.cohort_lane().expect("cohort member kept its lane");
+        st.load_lane(l, &r.cohort_b(), lane.mu);
+    }
+    step_pool_state(st, g, chunks);
+    for (l, id) in ready.iter().enumerate() {
+        st.store_lane(l, &mut bs[l]);
+        let r = runners.get_mut(id).expect("cohort member has a runner");
+        r.cohort_sync(&bs[l], chunks[l].rows() as u64);
+        r.note_cohort_chunk(&chunks[l]);
+    }
+    Ok(())
+}
+
+/// Per-shard cohort scheduler: owns the pools and routes each session
+/// event either through a cohort pool or straight to the session's
+/// runner. Generic over the shard's session-id key (`usize` in the batch
+/// hub, `u64` in the elastic hub).
+pub(crate) struct CohortExecutor<K: Ord + Copy = u64> {
+    enabled: bool,
+    pools: Vec<Pool<K>>,
+    /// Members only: session id → pool index.
+    index: BTreeMap<K, usize>,
+}
+
+impl<K: Ord + Copy> CohortExecutor<K> {
+    pub(crate) fn new(enabled: bool) -> Self {
+        Self { enabled, pools: Vec::new(), index: BTreeMap::new() }
+    }
+
+    /// Admit a session: eligible runners (cohort-capable engines) join
+    /// the pool for their shape key; the rest stay on the per-session
+    /// path. Idempotent per id.
+    pub(crate) fn register(&mut self, id: K, runner: &SessionRunner) {
+        if !self.enabled || self.index.contains_key(&id) {
+            return;
+        }
+        let Some(lane) = runner.cohort_lane() else { return };
+        let (n, m) = runner.shape();
+        let key = CohortKey {
+            n,
+            m,
+            chunk: runner.chunk_size(),
+            g: lane.g,
+            precision: lane.precision,
+        };
+        let pi = match self.pools.iter().position(|p| p.key == key) {
+            Some(pi) => pi,
+            None => {
+                self.pools.push(Pool::new(key));
+                self.pools.len() - 1
+            }
+        };
+        self.pools[pi].pending.insert(id, VecDeque::new());
+        self.index.insert(id, pi);
+    }
+
+    /// Whether a session currently runs as a cohort lane (tests).
+    #[cfg(test)]
+    pub(crate) fn is_member(&self, id: K) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    /// Route one producer block: members with peers ingest (AGC + chunk)
+    /// into their lane queue and the pool pumps; everyone else takes the
+    /// unchanged per-session path.
+    pub(crate) fn on_block(
+        &mut self,
+        id: K,
+        block: Mat64,
+        runners: &mut BTreeMap<K, SessionRunner>,
+    ) -> Result<()> {
+        if let Some(&pi) = self.index.get(&id) {
+            let pool = &mut self.pools[pi];
+            if pool.pending.len() >= 2 {
+                let runner = runners.get_mut(&id).expect("cohort member has a runner");
+                pool.ingested.clear();
+                runner.ingest_block_into(block, &mut pool.ingested);
+                let q = pool.pending.get_mut(&id).expect("member has a lane queue");
+                for c in pool.ingested.drain(..) {
+                    q.push_back(LaneItem::Chunk(c));
+                }
+                return pump(pool, runners);
+            }
+            // Member without shape peers: per-session path, unchanged
+            // (its queue is empty by the membership invariants).
+        }
+        runners.get_mut(&id).expect("session has a runner").on_block(block)
+    }
+
+    /// Route one mixing snapshot: queued behind any pending chunks so the
+    /// lane's event order is preserved; applied directly when nothing is
+    /// queued (which is exactly the per-session timing).
+    pub(crate) fn on_mixing(
+        &mut self,
+        id: K,
+        a: Mat64,
+        runners: &mut BTreeMap<K, SessionRunner>,
+    ) {
+        if let Some(&pi) = self.index.get(&id) {
+            let pool = &mut self.pools[pi];
+            if pool.pending.len() >= 2 {
+                let q = pool.pending.get_mut(&id).expect("member has a lane queue");
+                if !q.is_empty() {
+                    q.push_back(LaneItem::Mixing(a));
+                    return;
+                }
+            }
+        }
+        if let Some(r) = runners.get_mut(&id) {
+            r.on_mixing(a);
+        }
+    }
+
+    /// Catch a member's runner up with everything queued for it (in
+    /// order, through the per-session path) without changing membership —
+    /// the checkpoint/restore hook: after this, the runner is exactly the
+    /// session's per-session state.
+    pub(crate) fn flush_session(
+        &mut self,
+        id: K,
+        runners: &mut BTreeMap<K, SessionRunner>,
+    ) -> Result<()> {
+        if let Some(&pi) = self.index.get(&id) {
+            if let Some(q) = self.pools[pi].pending.get_mut(&id) {
+                if let Some(runner) = runners.get_mut(&id) {
+                    drain_lane(q, runner)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract a session from its pool (End / park / detach): drain its
+    /// queue so the runner is self-contained, then drop membership. A
+    /// pool left with a single member has that survivor drained too — it
+    /// reverts to the per-session path.
+    pub(crate) fn finish_session(
+        &mut self,
+        id: K,
+        runners: &mut BTreeMap<K, SessionRunner>,
+    ) -> Result<()> {
+        let Some(&pi) = self.index.get(&id) else { return Ok(()) };
+        self.flush_session(id, runners)?;
+        self.index.remove(&id);
+        let pool = &mut self.pools[pi];
+        pool.pending.remove(&id);
+        if pool.pending.len() == 1 {
+            let (&sid, q) = pool.pending.iter_mut().next().expect("len checked");
+            if let Some(r) = runners.get_mut(&sid) {
+                drain_lane(q, r)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain every queue (shutdown / producer-disconnect path) so the
+    /// shard's leftover runners can be finished per-session.
+    pub(crate) fn flush_all(&mut self, runners: &mut BTreeMap<K, SessionRunner>) -> Result<()> {
+        for pool in self.pools.iter_mut() {
+            for (id, q) in pool.pending.iter_mut() {
+                if let Some(r) = runners.get_mut(id) {
+                    drain_lane(q, r)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, OptimizerKind};
+    use crate::coordinator::engine::make_engine;
+    use crate::coordinator::server::{ServerOptions, SessionRunner};
+    use crate::coordinator::state::StateStore;
+    use crate::signal::Pcg32;
+
+    fn sgd_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        cfg.optimizer.mu = 0.004;
+        cfg
+    }
+
+    fn runner(cfg: &ExperimentConfig) -> SessionRunner {
+        let engine = make_engine(cfg, Nonlinearity::Cube).unwrap();
+        let state = StateStore::new(crate::ica::init_b(cfg.n, cfg.m));
+        SessionRunner::new(cfg, engine, &ServerOptions::default(), state)
+    }
+
+    fn blocks(seed: u64, count: usize, m: usize) -> Vec<Mat64> {
+        let mut rng = Pcg32::seed(seed);
+        (0..count).map(|_| Mat64::from_fn(256, m, |_, _| rng.normal())).collect()
+    }
+
+    #[test]
+    fn cohort_routing_matches_solo_runners_bitwise() {
+        let cfg = sgd_cfg();
+        let a = Mat64::eye(cfg.m, cfg.n);
+        // Three same-shape sessions through the executor…
+        let mut runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
+        let mut exec = CohortExecutor::<u64>::new(true);
+        for id in 0..3u64 {
+            let r = runner(&cfg);
+            exec.register(id, &r);
+            runners.insert(id, r);
+        }
+        assert!(exec.is_member(0) && exec.is_member(2));
+        for id in 0..3u64 {
+            exec.on_mixing(id, a.clone(), &mut runners);
+        }
+        for round in 0..4 {
+            for id in 0..3u64 {
+                let b = blocks(100 + id * 10 + round, 1, cfg.m).pop().unwrap();
+                exec.on_block(id, b, &mut runners).unwrap();
+                exec.on_mixing(id, a.clone(), &mut runners);
+            }
+        }
+        let mut cohort_bs = Vec::new();
+        for id in 0..3u64 {
+            exec.finish_session(id, &mut runners).unwrap();
+            cohort_bs.push(runners.remove(&id).unwrap().finish());
+        }
+        // …against the same sessions run solo.
+        for (id, got) in cohort_bs.into_iter().enumerate() {
+            let mut solo = runner(&cfg);
+            solo.on_mixing(a.clone());
+            for round in 0..4 {
+                let b = blocks(100 + id as u64 * 10 + round, 1, cfg.m).pop().unwrap();
+                solo.on_block(b).unwrap();
+                solo.on_mixing(a.clone());
+            }
+            let want = solo.finish();
+            assert_eq!(want.samples, got.samples, "session {id}");
+            assert_eq!(want.tail_dropped, got.tail_dropped, "session {id}");
+            assert!(
+                want.b
+                    .as_slice()
+                    .iter()
+                    .zip(got.b.as_slice())
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "session {id}: cohort B diverged from solo B"
+            );
+            assert_eq!(want.amari_history.len(), got.amari_history.len());
+        }
+    }
+
+    #[test]
+    fn lone_member_and_ineligible_sessions_take_the_solo_path() {
+        let cfg = sgd_cfg();
+        let mut smbgd_cfg = cfg.clone();
+        smbgd_cfg.optimizer.kind = OptimizerKind::Smbgd;
+
+        let mut runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
+        let mut exec = CohortExecutor::<u64>::new(true);
+        let r0 = runner(&cfg);
+        let r1 = runner(&smbgd_cfg);
+        exec.register(0, &r0);
+        exec.register(1, &r1);
+        runners.insert(0, r0);
+        runners.insert(1, r1);
+        assert!(exec.is_member(0), "plain SGD is cohort-capable");
+        assert!(!exec.is_member(1), "SMBGD must stay per-session");
+
+        // A member without shape peers routes straight through; its
+        // samples land immediately (nothing queued).
+        let b = blocks(7, 1, cfg.m).pop().unwrap();
+        exec.on_block(0, b, &mut runners).unwrap();
+        assert_eq!(runners.get(&0).unwrap().samples_done(), 256);
+        let b = blocks(8, 1, cfg.m).pop().unwrap();
+        exec.on_block(1, b, &mut runners).unwrap();
+        assert!(runners.get(&1).unwrap().samples_done() > 0);
+    }
+
+    #[test]
+    fn disabled_executor_registers_nobody() {
+        let cfg = sgd_cfg();
+        let mut exec = CohortExecutor::<u64>::new(false);
+        let r = runner(&cfg);
+        exec.register(0, &r);
+        assert!(!exec.is_member(0));
+    }
+
+    #[test]
+    fn finish_session_flushes_the_surviving_peer() {
+        let cfg = sgd_cfg();
+        let mut runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
+        let mut exec = CohortExecutor::<u64>::new(true);
+        for id in 0..2u64 {
+            let r = runner(&cfg);
+            exec.register(id, &r);
+            runners.insert(id, r);
+        }
+        // Only session 0 receives a block: its four chunks queue waiting
+        // for session 1 (full-width policy, backlog under MAX_LAG).
+        let b = blocks(42, 1, cfg.m).pop().unwrap();
+        exec.on_block(0, b, &mut runners).unwrap();
+        assert_eq!(runners.get(&0).unwrap().samples_done(), 0, "chunks queued, not applied");
+        // Session 1 departs: the survivor must be drained so it reverts
+        // to the per-session path fully caught up.
+        exec.finish_session(1, &mut runners).unwrap();
+        assert_eq!(runners.get(&0).unwrap().samples_done(), 256);
+        assert!(exec.is_member(0), "survivor keeps membership for future peers");
+    }
+
+    #[test]
+    fn backlog_forces_partial_width_steps() {
+        let cfg = sgd_cfg();
+        let mut runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
+        let mut exec = CohortExecutor::<u64>::new(true);
+        for id in 0..2u64 {
+            let r = runner(&cfg);
+            exec.register(id, &r);
+            runners.insert(id, r);
+        }
+        // Starve lane 1 while lane 0 keeps producing: once lane 0's
+        // backlog hits MAX_LAG its chunks must step without the peer.
+        for round in 0..3u64 {
+            let b = blocks(900 + round, 1, cfg.m).pop().unwrap();
+            exec.on_block(0, b, &mut runners).unwrap();
+        }
+        assert!(
+            runners.get(&0).unwrap().samples_done() > 0,
+            "MAX_LAG must bound a starved pool's latency"
+        );
+        assert_eq!(runners.get(&1).unwrap().samples_done(), 0);
+    }
+}

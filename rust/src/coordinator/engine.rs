@@ -15,6 +15,23 @@ use crate::linalg::{Mat, Mat64, Scalar};
 use crate::runtime::{PjrtRuntime, ProgramKind};
 use anyhow::{bail, Context, Result};
 
+/// Per-tenant lane descriptor for cohort execution: what a
+/// cohort-capable engine's chunk submission actually computes, exposed so
+/// the executor can key same-shape tenants together and reload each
+/// lane's `(B, μ)` fresh every pool step (the adaptive governor may have
+/// retuned μ between steps).
+#[derive(Clone, Copy, Debug)]
+pub struct CohortLane {
+    /// Current learning rate (f64 hyperparameter space; lanes narrow it
+    /// exactly like the per-session step does).
+    pub mu: f64,
+    /// The nonlinearity the lane's fused kernel must apply.
+    pub g: Nonlinearity,
+    /// Arithmetic precision of the lane (part of the cohort shape key —
+    /// mixing precisions in one SoA block is impossible).
+    pub precision: Precision,
+}
+
 /// A chunk-oriented executor of EASI updates.
 ///
 /// `Send` so the hub can move per-session engines onto worker shards.
@@ -35,6 +52,24 @@ pub trait Engine: Send {
     /// Install a new learning rate μ (the adaptive control plane's
     /// actuator; takes effect from the next submitted chunk).
     fn set_mu(&mut self, mu: f64);
+
+    /// Cohort-execution probe: `Some` iff one `submit_chunk` on this
+    /// engine is *exactly* the plain fused EASI-SGD per-sample loop at
+    /// the reported precision, so a [`crate::linalg::CohortState`] lane
+    /// loaded from `b()`/`mu` reproduces it bit-for-bit. PJRT and the
+    /// mini-batch/normalized optimizers return `None` (the default) and
+    /// stay on the per-session path.
+    fn cohort_lane(&self) -> Option<CohortLane> {
+        None
+    }
+
+    /// Install the cohort-stepped separation matrix and account the
+    /// `rows` samples the cohort kernel consumed on this engine's behalf.
+    /// Only ever called on engines that returned `Some` from
+    /// [`cohort_lane`](Self::cohort_lane).
+    fn cohort_sync(&mut self, _b: &Mat64, _rows: u64) {
+        unreachable!("cohort_sync on an engine that did not offer a cohort lane");
+    }
 }
 
 /// Chunk size for the native engines, shared across precisions: aligned
@@ -99,6 +134,17 @@ impl Engine for NativeEngine {
 
     fn set_mu(&mut self, mu: f64) {
         self.opt.set_mu(mu);
+    }
+
+    fn cohort_lane(&self) -> Option<CohortLane> {
+        self.opt
+            .cohort_plain()
+            .map(|(mu, g)| CohortLane { mu, g, precision: Precision::F64 })
+    }
+
+    fn cohort_sync(&mut self, b: &Mat64, rows: u64) {
+        self.opt.b_mut().copy_from(b);
+        self.opt.note_cohort_rows(rows);
     }
 }
 
@@ -178,6 +224,21 @@ impl<T: Scalar> Engine for CastNativeEngine<T> {
         // μ lives in f64 hyperparameter space for every precision; the
         // optimizer narrows it per step/batch.
         self.opt.set_mu(mu);
+    }
+
+    fn cohort_lane(&self) -> Option<CohortLane> {
+        let precision = match T::type_name() {
+            "f32" => Precision::F32,
+            _ => Precision::F64,
+        };
+        self.opt.cohort_plain().map(|(mu, g)| CohortLane { mu, g, precision })
+    }
+
+    fn cohort_sync(&mut self, b: &Mat64, rows: u64) {
+        // `b` is the widened image of the lane's `T` state (the cohort
+        // lane ran in `T`), so narrowing back is lossless.
+        self.opt.b_mut().copy_from(&b.cast());
+        self.opt.note_cohort_rows(rows);
     }
 }
 
@@ -419,6 +480,44 @@ mod tests {
                 moved_slow < moved_fast / 10.0,
                 "{precision:?}: slow {moved_slow} vs fast {moved_fast}"
             );
+        }
+    }
+
+    #[test]
+    fn cohort_lane_offered_only_by_plain_sgd_natives() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        let e64 = make_engine(&cfg, Nonlinearity::Tanh).unwrap();
+        let lane = e64.cohort_lane().expect("plain SGD f64 native is cohort-capable");
+        assert_eq!(lane.g, Nonlinearity::Tanh);
+        assert_eq!(lane.precision, Precision::F64);
+        assert_eq!(lane.mu, cfg.optimizer.mu);
+
+        cfg.precision = Precision::F32;
+        let e32 = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        assert_eq!(e32.cohort_lane().unwrap().precision, Precision::F32);
+
+        cfg.precision = Precision::F64;
+        cfg.optimizer.kind = OptimizerKind::Smbgd;
+        let smbgd = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        assert!(smbgd.cohort_lane().is_none(), "mini-batch optimizers stay per-session");
+    }
+
+    #[test]
+    fn cohort_sync_installs_b_and_accounts_rows() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        for precision in [Precision::F64, Precision::F32] {
+            cfg.precision = precision;
+            let mut eng = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+            let mut b = eng.b();
+            b.scale(0.25); // exactly representable in both precisions
+            eng.cohort_sync(&b, 192);
+            assert_eq!(eng.b(), b, "{precision:?}: installed B must round-trip");
+            assert_eq!(eng.samples_done(), 192);
+            // μ reported by the lane tracks the governor's actuator.
+            eng.set_mu(0.5 * cfg.optimizer.mu);
+            assert_eq!(eng.cohort_lane().unwrap().mu, 0.5 * cfg.optimizer.mu);
         }
     }
 

@@ -37,6 +37,7 @@
 //! tenants at runtime — and is pinned bit-identical to this mode for
 //! static workloads by `rust/tests/integration_hub.rs`.
 
+use super::cohort::CohortExecutor;
 use super::engine::make_engine;
 use super::server::{
     block_capacity, build_stream, drive_stream, safe_rate, RunSummary, ServerOptions,
@@ -65,6 +66,10 @@ pub struct HubOptions {
     /// Admission-time shard placement policy (elastic runtime; the batch
     /// hub is pinned to modulo placement by construction).
     pub placement: PlacementKind,
+    /// Step same-shape tenants together through tenant-major
+    /// [`crate::linalg::CohortState`] pools (bit-identical to per-session
+    /// stepping; `false` forces the per-session path everywhere).
+    pub cohort: bool,
     /// Per-session server knobs (monitor cadence, AGC, divergence guard).
     pub server: ServerOptions,
 }
@@ -75,6 +80,7 @@ impl Default for HubOptions {
             shards: 2,
             channel_capacity: 4096,
             placement: PlacementKind::LeastLoaded,
+            cohort: true,
             server: ServerOptions::default(),
         }
     }
@@ -89,6 +95,7 @@ impl HubOptions {
             shards: sc.shards,
             channel_capacity: sc.channel_capacity,
             placement: sc.placement,
+            cohort: sc.cohort,
             server: ServerOptions::default(),
         }
     }
@@ -324,6 +331,7 @@ impl Hub {
         }
 
         // ---- shard workers ----------------------------------------------
+        let cohort_enabled = opts.cohort;
         let mut workers = Vec::with_capacity(shards);
         for (shard, runners) in shard_runners.into_iter().enumerate() {
             let rx = rxs[shard].take().expect("receiver taken once");
@@ -331,6 +339,13 @@ impl Hub {
             let consumed = Arc::clone(&metrics.consumed);
             workers.push(thread::spawn(move || -> Result<(Vec<SessionReport>, usize)> {
                 let mut runners = runners;
+                // Group same-shape tenants into cohort pools: the batch
+                // hub's session set is fixed, so membership is decided
+                // once, up front.
+                let mut exec = CohortExecutor::<usize>::new(cohort_enabled);
+                for (id, runner) in runners.iter() {
+                    exec.register(*id, runner);
+                }
                 let mut reports = Vec::with_capacity(runners.len());
                 let mut max_depth = 0usize;
                 while !runners.is_empty() {
@@ -344,22 +359,20 @@ impl Hub {
                     match event {
                         StreamEvent::Batch(block) => {
                             let rows = block.rows() as u64;
-                            let runner = runners
+                            runners
                                 .get_mut(&session)
-                                .with_context(|| format!("unknown session {session}"))?;
-                            runner.note_queue_depth(d);
-                            runner
-                                .on_block(block)
+                                .with_context(|| format!("unknown session {session}"))?
+                                .note_queue_depth(d);
+                            exec.on_block(session, block, &mut runners)
                                 .with_context(|| format!("session {session}"))?;
                             consumed.fetch_add(rows, Ordering::Relaxed);
                         }
                         StreamEvent::Mixing(a) => {
-                            runners
-                                .get_mut(&session)
-                                .with_context(|| format!("unknown session {session}"))?
-                                .on_mixing(a);
+                            exec.on_mixing(session, a, &mut runners);
                         }
                         StreamEvent::End => {
+                            exec.finish_session(session, &mut runners)
+                                .with_context(|| format!("session {session}"))?;
                             let runner = runners
                                 .remove(&session)
                                 .with_context(|| format!("unknown session {session}"))?;

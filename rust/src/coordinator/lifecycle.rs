@@ -35,6 +35,7 @@
 //!   queue depth are observable while the hub runs (ROADMAP item from the
 //!   adaptive-control PR).
 
+use super::cohort::CohortExecutor;
 use super::engine::make_engine;
 use super::hub::{HubMetrics, HubOptions, HubSummary, SessionReport};
 use super::server::{
@@ -47,7 +48,9 @@ use crate::linalg::Mat64;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -58,11 +61,13 @@ use std::time::{Duration, Instant};
 const IDLE_POLL: Duration = Duration::from_millis(2);
 
 /// Poll interval for a shard with no tenants at all: a long-running plane
-/// parks its workers at a low duty cycle instead of busy-spinning. A data
-/// message still wakes the worker instantly (`recv_timeout` returns on
-/// arrival), and the control drain between recv and handle keeps the
-/// attach-before-first-block guarantee, so only control-only commands on
-/// an empty shard see this latency.
+/// parks its workers at a low duty cycle instead of busy-spinning. An
+/// empty shard parks on the *control* lane — commands (attach, restore)
+/// are served the moment they arrive, not after a poll interval — and
+/// touches the data lane only as a liveness backstop. Data cannot be
+/// delayed by that backstop: a session's first block is always preceded
+/// by its Attach on the control lane, which wakes the worker instantly
+/// and re-enters the tenants-installed fast path.
 const QUIET_POLL: Duration = Duration::from_millis(25);
 
 // ---------------------------------------------------------------------------
@@ -78,7 +83,12 @@ const QUIET_POLL: Duration = Duration::from_millis(25);
 pub trait Placement: Send {
     /// Policy name for logs and tables.
     fn name(&self) -> &'static str;
-    /// Choose a shard for `session` given per-shard active session counts.
+    /// Choose a shard for `session` given per-shard load in placement
+    /// cost units. A tenant's cost scales with its per-chunk work
+    /// (≈ `n × m × chunk_size`, see `SessionRunner::placement_cost`), so
+    /// one wide tenant outweighs several narrow ones; an equal-shape
+    /// fleet reduces to session counts times a constant, reproducing the
+    /// pre-cost behaviour exactly.
     fn place(&mut self, session: u64, loads: &[usize]) -> usize;
 }
 
@@ -95,9 +105,9 @@ impl Placement for ModuloPlacement {
     }
 }
 
-/// Serving default: fewest active sessions wins, ties break toward the
-/// lowest shard index (so a static fleet admitted in id order lands
-/// exactly where modulo would put it).
+/// Serving default: lowest load (cost units) wins, ties break toward the
+/// lowest shard index (so a static equal-shape fleet admitted in id order
+/// lands exactly where modulo would put it).
 pub struct LeastLoadedPlacement;
 
 impl Placement for LeastLoadedPlacement {
@@ -232,47 +242,65 @@ struct ShardState {
     reports: Vec<SessionReport>,
     active: Arc<Vec<AtomicUsize>>,
     consumed: Arc<AtomicU64>,
+    /// Tenant-major batching of same-shape runners (see `super::cohort`).
+    exec: CohortExecutor,
 }
 
 impl ShardState {
-    fn handle_control(&mut self, msg: ControlMsg) {
+    fn handle_control(&mut self, msg: ControlMsg) -> Result<()> {
         match msg {
             ControlMsg::Attach { session, runner, consumed_upto } => {
+                let runner = *runner;
                 let status = runner.status_cell();
                 status.set_shard(self.shard);
                 // Conditional promotion: a pause() that raced ahead of
                 // this install must not be flipped back to Streaming.
                 status.promote_to_streaming();
                 self.consumed_seq.insert(session, consumed_upto);
-                self.runners.insert(session, *runner);
+                // An eligible arrival (fresh or migrant) joins the cohort
+                // for its shape key right away.
+                self.exec.register(session, &runner);
+                self.runners.insert(session, runner);
             }
             ControlMsg::Park { session, upto_seq, reply } => {
                 if !self.runners.contains_key(&session) {
                     let _ = reply.send(ParkOutcome::Gone);
                 } else if self.consumed_seq.get(&session).copied().unwrap_or(0) >= upto_seq {
-                    self.park_now(session, &reply);
+                    self.park_now(session, &reply)?;
                 } else {
                     self.pending_park.insert(session, (upto_seq, reply));
                 }
             }
-            ControlMsg::Restore { session, b, ack } => match self.runners.get_mut(&session) {
-                Some(runner) => {
-                    runner.install_b(b);
-                    let _ = ack.send(true);
+            ControlMsg::Restore { session, b, ack } => {
+                // Catch the runner up with any cohort-queued work first:
+                // the restored B must not be overwritten by a chunk that
+                // was produced (and queued) before the restore.
+                self.exec.flush_session(session, &mut self.runners)?;
+                match self.runners.get_mut(&session) {
+                    Some(runner) => {
+                        runner.install_b(b);
+                        let _ = ack.send(true);
+                    }
+                    None => {
+                        let _ = ack.send(false);
+                    }
                 }
-                None => {
-                    let _ = ack.send(false);
-                }
-            },
+            }
         }
+        Ok(())
     }
 
-    fn park_now(&mut self, session: u64, reply: &Sender<ParkOutcome>) {
+    fn park_now(&mut self, session: u64, reply: &Sender<ParkOutcome>) -> Result<()> {
+        // Extract the session from its cohort first (drains its queued
+        // work in order): the parked runner must be fully self-contained
+        // so a re-attach on any shard continues bit-identically.
+        self.exec.finish_session(session, &mut self.runners)?;
         let runner = self.runners.remove(&session).expect("park of installed session");
         runner.status_cell().set_phase(SessionPhase::Detached);
         self.consumed_seq.remove(&session);
-        self.active[self.shard].fetch_sub(1, Ordering::Relaxed);
+        self.active[self.shard].fetch_sub(runner.placement_cost(), Ordering::Relaxed);
         let _ = reply.send(ParkOutcome::Parked(Box::new(runner)));
+        Ok(())
     }
 
     fn handle_data(&mut self, msg: DataMsg, dequeue_depth: usize) -> Result<()> {
@@ -280,22 +308,30 @@ impl ShardState {
         match event {
             StreamEvent::Batch(block) => {
                 let rows = block.rows() as u64;
-                let runner = self.runners.get_mut(&session).with_context(|| {
-                    format!("shard {}: data for unknown session {session}", self.shard)
-                })?;
-                runner.note_queue_depth(dequeue_depth);
-                runner.on_block(block).with_context(|| format!("session {session}"))?;
-                self.consumed.fetch_add(rows, Ordering::Relaxed);
-            }
-            StreamEvent::Mixing(a) => {
                 self.runners
                     .get_mut(&session)
                     .with_context(|| {
-                        format!("shard {}: mixing for unknown session {session}", self.shard)
+                        format!("shard {}: data for unknown session {session}", self.shard)
                     })?
-                    .on_mixing(a);
+                    .note_queue_depth(dequeue_depth);
+                self.exec
+                    .on_block(session, block, &mut self.runners)
+                    .with_context(|| format!("session {session}"))?;
+                self.consumed.fetch_add(rows, Ordering::Relaxed);
+            }
+            StreamEvent::Mixing(a) => {
+                if !self.runners.contains_key(&session) {
+                    bail!("shard {}: mixing for unknown session {session}", self.shard);
+                }
+                self.exec.on_mixing(session, a, &mut self.runners);
             }
             StreamEvent::End => {
+                // Extract from the cohort (draining queued items in
+                // order) before finishing, so the summary accounts for
+                // every sample the stream delivered.
+                self.exec
+                    .finish_session(session, &mut self.runners)
+                    .with_context(|| format!("session {session}"))?;
                 let runner = self.runners.remove(&session).with_context(|| {
                     format!("shard {}: end for unknown session {session}", self.shard)
                 })?;
@@ -304,7 +340,7 @@ impl ShardState {
                 if let Some((_, reply)) = self.pending_park.remove(&session) {
                     let _ = reply.send(ParkOutcome::Gone);
                 }
-                self.active[self.shard].fetch_sub(1, Ordering::Relaxed);
+                self.active[self.shard].fetch_sub(runner.placement_cost(), Ordering::Relaxed);
                 self.reports.push(SessionReport {
                     id: session as usize,
                     shard: self.shard,
@@ -318,16 +354,17 @@ impl ShardState {
         if let Some(&(upto, _)) = self.pending_park.get(&session) {
             if seq >= upto {
                 let (_, reply) = self.pending_park.remove(&session).expect("checked");
-                self.park_now(session, &reply);
+                self.park_now(session, &reply)?;
             }
         }
         Ok(())
     }
 
-    fn drain_control(&mut self, ctrl_rx: &Receiver<ControlMsg>) {
+    fn drain_control(&mut self, ctrl_rx: &Receiver<ControlMsg>) -> Result<()> {
         while let Ok(msg) = ctrl_rx.try_recv() {
-            self.handle_control(msg);
+            self.handle_control(msg)?;
         }
+        Ok(())
     }
 }
 
@@ -341,33 +378,68 @@ fn shard_worker(
 ) -> Result<(Vec<SessionReport>, usize)> {
     let mut max_depth = 0usize;
     loop {
-        state.drain_control(&ctrl_rx);
-        let poll = if state.runners.is_empty() { QUIET_POLL } else { IDLE_POLL };
-        match data_rx.recv_timeout(poll) {
-            Ok(msg) => {
-                // fetch_sub returns the pre-decrement value: the backlog
-                // this message observed at dequeue time.
-                let d = depth.fetch_sub(1, Ordering::Relaxed);
-                max_depth = max_depth.max(d);
-                // The Attach for a session is enqueued on the control
-                // lane before its producer exists, so draining here
-                // guarantees the runner is installed before its first
-                // data message is applied.
-                state.drain_control(&ctrl_rx);
-                state.handle_data(msg, d)?;
+        state.drain_control(&ctrl_rx)?;
+        let msg = if state.runners.is_empty() {
+            // Empty shard: park on the *control* lane so a control-only
+            // command is served the moment it arrives instead of waiting
+            // out a data-lane poll interval. Data cannot be starved by
+            // this: a session's first block is always preceded by its
+            // Attach, which wakes this wait instantly and flips the loop
+            // back to the tenants-installed path below.
+            match data_rx.try_recv() {
+                Ok(msg) => Some(msg),
+                Err(TryRecvError::Empty) => match ctrl_rx.recv_timeout(QUIET_POLL) {
+                    Ok(cmsg) => {
+                        state.handle_control(cmsg)?;
+                        None
+                    }
+                    Err(RecvTimeoutError::Timeout) => None,
+                    // Control plane gone (hub dropped): fall back to the
+                    // data lane at the quiet cadence until it disconnects
+                    // too.
+                    Err(RecvTimeoutError::Disconnected) => {
+                        match data_rx.recv_timeout(QUIET_POLL) {
+                            Ok(msg) => Some(msg),
+                            Err(RecvTimeoutError::Timeout) => None,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                },
+                Err(TryRecvError::Disconnected) => {
+                    state.drain_control(&ctrl_rx)?;
+                    break;
+                }
             }
-            Err(RecvTimeoutError::Timeout) => continue,
-            Err(RecvTimeoutError::Disconnected) => {
-                state.drain_control(&ctrl_rx);
-                break;
+        } else {
+            match data_rx.recv_timeout(IDLE_POLL) {
+                Ok(msg) => Some(msg),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    state.drain_control(&ctrl_rx)?;
+                    break;
+                }
             }
+        };
+        if let Some(msg) = msg {
+            // fetch_sub returns the pre-decrement value: the backlog
+            // this message observed at dequeue time.
+            let d = depth.fetch_sub(1, Ordering::Relaxed);
+            max_depth = max_depth.max(d);
+            // The Attach for a session is enqueued on the control
+            // lane before its producer exists, so draining here
+            // guarantees the runner is installed before its first
+            // data message is applied.
+            state.drain_control(&ctrl_rx)?;
+            state.handle_data(msg, d)?;
         }
     }
     // Hub shut down with runners still installed (producers aborted
-    // mid-stream): drain them so every admitted session is accounted for.
+    // mid-stream): flush cohort queues, then drain the runners so every
+    // admitted session is accounted for.
+    state.exec.flush_all(&mut state.runners)?;
     let shard = state.shard;
     for (session, runner) in std::mem::take(&mut state.runners) {
-        state.active[shard].fetch_sub(1, Ordering::Relaxed);
+        state.active[shard].fetch_sub(runner.placement_cost(), Ordering::Relaxed);
         state.reports.push(SessionReport {
             id: session as usize,
             shard,
@@ -452,8 +524,9 @@ pub struct ElasticHub {
     ctrl_txs: Vec<Sender<ControlMsg>>,
     workers: Vec<WorkerHandle>,
     entries: BTreeMap<u64, Entry>,
-    /// Per-shard active (installed or in-flight-attach) session counts —
-    /// the load signal placement reads.
+    /// Per-shard active (installed or in-flight-attach) load in placement
+    /// cost units (each session weighs ≈ `n × m × chunk_size`) — the load
+    /// signal placement reads.
     active: Arc<Vec<AtomicUsize>>,
     directory: StateDirectory,
     metrics: HubMetrics,
@@ -487,6 +560,7 @@ impl ElasticHub {
                 reports: Vec::new(),
                 active: Arc::clone(&active),
                 consumed: Arc::clone(&metrics.consumed),
+                exec: CohortExecutor::new(opts.cohort),
             };
             let depth = Arc::clone(&metrics.depths[shard]);
             workers.push(thread::spawn(move || shard_worker(state, data_rx, ctrl_rx, depth)));
@@ -570,11 +644,12 @@ impl ElasticHub {
         // Install the runner before the producer exists: the worker
         // drains its control lane ahead of every data message, so the
         // session's first block can never outrun its Attach.
-        self.active[shard].fetch_add(1, Ordering::Relaxed);
+        let cost = runner.placement_cost();
+        self.active[shard].fetch_add(cost, Ordering::Relaxed);
         let attach =
             ControlMsg::Attach { session: id, runner: Box::new(runner), consumed_upto: 0 };
         if self.ctrl_txs[shard].send(attach).is_err() {
-            self.active[shard].fetch_sub(1, Ordering::Relaxed);
+            self.active[shard].fetch_sub(cost, Ordering::Relaxed);
             bail!("shard {shard} worker is gone");
         }
         // Only a successfully admitted tenant reaches the health plane —
@@ -724,7 +799,8 @@ impl ElasticHub {
                 self.entries.get_mut(&id).with_context(|| format!("unknown session {id}"))?;
             entry.parked.take().with_context(|| format!("session {id} is not detached"))?
         };
-        self.active[shard].fetch_add(1, Ordering::Relaxed);
+        let cost = parked.runner.placement_cost();
+        self.active[shard].fetch_add(cost, Ordering::Relaxed);
         let attach = ControlMsg::Attach {
             session: id,
             runner: parked.runner,
@@ -733,7 +809,7 @@ impl ElasticHub {
         if let Err(std::sync::mpsc::SendError(msg)) = self.ctrl_txs[shard].send(attach) {
             // Worker gone: undo the load count and re-park the runner so
             // the session stays recoverable.
-            self.active[shard].fetch_sub(1, Ordering::Relaxed);
+            self.active[shard].fetch_sub(cost, Ordering::Relaxed);
             if let ControlMsg::Attach { runner, consumed_upto, .. } = msg {
                 let entry = self.entries.get_mut(&id).expect("entry checked above");
                 entry.parked = Some(ParkedSession { runner, consumed_upto });
@@ -1093,6 +1169,86 @@ mod tests {
         assert!(hub.reattach_to(h.id(), 9).is_err(), "shard out of range");
         assert!(hub.reattach(h.id()).is_err(), "not detached");
         hub.finish().unwrap();
+    }
+
+    #[test]
+    fn least_loaded_weighs_tenants_by_cost_not_count() {
+        // A wide tenant (m=8, n=4) costs 8× a narrow one (m=2, n=2) at
+        // the same chunk size; count-based balancing would alternate the
+        // narrow arrivals across shards, leaving the big tenant's shard
+        // overloaded. Cost-weighted loads pack them opposite it.
+        let opts = HubOptions { shards: 2, ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let mut big = small_cfg(10);
+        big.samples = 200_000; // nothing drains during the attach sequence
+        big.n = 4;
+        big.m = 8;
+        big.optimizer.kind = crate::config::OptimizerKind::Sgd;
+        let hb = hub.attach(big).unwrap();
+        assert_eq!(hb.status().shard, 0, "first arrival ties break low");
+        let mut smalls = Vec::new();
+        for i in 0..4u64 {
+            let mut c = small_cfg(20 + i);
+            c.samples = 200_000;
+            c.n = 2;
+            c.m = 2;
+            c.optimizer.kind = crate::config::OptimizerKind::Sgd;
+            smalls.push(hub.attach(c).unwrap());
+        }
+        for (i, h) in smalls.iter().enumerate() {
+            assert_eq!(
+                h.status().shard,
+                1,
+                "narrow arrival {i} must land opposite the wide tenant (count-based \
+                 placement would have alternated)"
+            );
+        }
+        for h in smalls.iter().chain(std::iter::once(&hb)) {
+            hub.pause(h.id()).unwrap();
+        }
+        hub.finish().unwrap();
+    }
+
+    #[test]
+    fn control_commands_on_an_empty_shard_are_served_promptly() {
+        // Satellite bugfix: an empty shard used to park on the *data*
+        // lane, so a control-only command (restore, park probe) could
+        // wait out a full QUIET_POLL (25 ms) before being seen. The
+        // worker now parks on the control lane — many round trips must
+        // complete in well under one-per-poll-interval time.
+        let state = ShardState {
+            shard: 0,
+            runners: BTreeMap::new(),
+            consumed_seq: BTreeMap::new(),
+            pending_park: BTreeMap::new(),
+            reports: Vec::new(),
+            active: Arc::new((0..1).map(|_| AtomicUsize::new(0)).collect()),
+            consumed: Arc::new(AtomicU64::new(0)),
+            exec: CohortExecutor::new(true),
+        };
+        let (data_tx, data_rx) = sync_channel::<DataMsg>(16);
+        let (ctrl_tx, ctrl_rx) = channel::<ControlMsg>();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let worker = thread::spawn(move || shard_worker(state, data_rx, ctrl_rx, depth));
+        let rounds = 24;
+        let started = Instant::now();
+        for _ in 0..rounds {
+            let (ack_tx, ack_rx) = channel();
+            ctrl_tx
+                .send(ControlMsg::Restore { session: 99, b: Mat64::eye(2, 4), ack: ack_tx })
+                .unwrap();
+            assert!(!ack_rx.recv().unwrap(), "no session 99 is installed");
+        }
+        let elapsed = started.elapsed();
+        drop(ctrl_tx);
+        drop(data_tx);
+        worker.join().unwrap().unwrap();
+        // Old path: ~24 × up-to-25ms ≈ 600 ms. New path: microseconds per
+        // round trip; 150 ms leaves huge slack for a loaded CI box.
+        assert!(
+            elapsed < Duration::from_millis(150),
+            "{rounds} control round trips on an empty shard took {elapsed:?}"
+        );
     }
 
     #[test]

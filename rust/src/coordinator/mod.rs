@@ -28,8 +28,15 @@
 //! `"f64"` bit-exact default), while the ingest/monitor wire format stays
 //! `f64` — so one hub mixes f32 and f64 tenants freely (DESIGN.md
 //! §Precision).
+//!
+//! On the worker hot loop, same-shape tenants are stepped together: the
+//! [`cohort`] module groups sessions whose `(n, m, chunk, g, precision)`
+//! shape key matches into tenant-major [`crate::linalg::CohortState`]
+//! pools, amortizing loop overhead across lanes while staying
+//! bit-identical to per-session stepping (DESIGN.md §Cohort execution).
 
 pub mod batcher;
+pub(crate) mod cohort;
 pub mod engine;
 pub mod hub;
 pub mod lifecycle;

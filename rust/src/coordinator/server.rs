@@ -12,7 +12,7 @@
 //! ```
 
 use super::batcher::Chunker;
-use super::engine::Engine;
+use super::engine::{CohortLane, Engine};
 use super::monitor::{Monitor, MonitorPoint};
 use super::state::{SessionPhase, StateStore, StatusCell};
 use crate::adapt::AdaptiveController;
@@ -380,72 +380,162 @@ impl SessionRunner {
             observed_depth,
             ..
         } = self;
-        chunker.push_block(&block, |chunk| -> Result<()> {
-            engine.submit_chunk(chunk)?;
-            let b = engine.b();
-            // Divergence guard: large-mu EASI under abrupt mixing
-            // switches can blow up; recover like an adaptive filter.
-            if !b.is_finite() || b.max_abs() > *divergence_bound {
-                // Rollback protocol: with the control plane active and a
-                // steady-state checkpoint on hand, restore that (the last
-                // known-good separator) instead of the cold warm start.
-                // Either way the governor cools and the detector disarms —
-                // re-applying a boosted μ to a freshly reset separator
-                // would just diverge again, and the reset's whiteness
-                // spike is not drift.
-                let mut recovered = false;
-                if let Some(ctrl) = adapt.as_mut() {
-                    if let Some(ck) = ctrl.rollback_b() {
-                        let ck = ck.clone();
-                        engine.reset_b(ck);
-                        recovered = true;
-                    }
-                    if recovered {
-                        ctrl.on_rollback();
-                    } else {
-                        ctrl.on_divergence_reset();
-                    }
-                    engine.set_mu(ctrl.mu(engine.samples_done()));
-                }
-                if !recovered {
-                    engine.reset_b(warm_start.clone());
-                }
-                monitor.rearm();
-                *resets += 1;
-            } else if let Some(ctrl) = adapt.as_mut() {
-                // Closed loop: observe the separated outputs of this
-                // chunk (strided), detect drift, govern μ, and keep the
-                // recovery checkpoint fresh while steady.
-                let done = engine.samples_done();
-                if ctrl.observe_chunk(&b, chunk, done).is_some() {
-                    // Re-arm convergence detection so the monitor reports
-                    // a post-drift `converged_at` instead of staying
-                    // latched on the pre-drift one.
-                    monitor.rearm();
-                } else {
-                    ctrl.checkpoint_if_steady(&b);
-                }
-                engine.set_mu(ctrl.mu(done));
+        chunker
+            .push_block(&block, |chunk| -> Result<()> {
+                engine.submit_chunk(chunk)?;
+                chunk_bookkeeping(
+                    engine.as_mut(),
+                    chunk,
+                    monitor,
+                    state,
+                    current_a,
+                    *have_a,
+                    warm_start,
+                    *divergence_bound,
+                    resets,
+                    adapt,
+                    status,
+                    *observed_depth,
+                );
+                Ok(())
+            })
+            .map_err(|e| {
+                // Surface the Chunker's re-entrancy contract in the error:
+                // rows `0..consumed` of this block are ingested, the rest
+                // never reached the chunker (see Chunker::push_block).
+                e.error
+                    .context(format!("block ingest failed with {} rows consumed", e.consumed))
+            })
+    }
+
+    /// Cohort ingest, phase 1 (AGC + chunking only): normalize the block
+    /// in place exactly like [`on_block`](Self::on_block), push its rows
+    /// through the chunker, and append each completed chunk to `out`; a
+    /// partial tail stays buffered, as on the per-session path. The
+    /// engine is *not* touched — the cohort executor steps it later and
+    /// then reports each chunk via
+    /// [`note_cohort_chunk`](Self::note_cohort_chunk).
+    pub(crate) fn ingest_block_into(&mut self, mut block: Mat64, out: &mut Vec<Mat64>) {
+        self.touch();
+        for r in 0..block.rows() {
+            self.agc.apply(block.row_mut(r));
+        }
+        for r in 0..block.rows() {
+            if let Some(chunk) = self.chunker.push(block.row(r)) {
+                out.push(chunk);
             }
-            state.publish(engine.b(), engine.samples_done());
-            let amari = if *have_a {
-                monitor.record(&engine.b(), current_a, engine.samples_done())
-            } else {
-                f64::NAN
-            };
-            // Live health plane: one coherent record per engine chunk.
-            // Pure observation — nothing on the update path reads it
-            // back, so trajectories stay bit-identical.
-            status.publish_progress(
-                engine.samples_done(),
-                amari,
-                *resets,
-                adapt.as_ref().map_or(0, |c| c.drift_events()),
-                adapt.as_ref().map_or(0, |c| c.rollbacks()),
-                *observed_depth,
-            );
-            Ok(())
-        })
+        }
+    }
+
+    /// Cohort ingest, phase 3: per-chunk bookkeeping after a cohort
+    /// kernel advanced this session's engine (via
+    /// [`cohort_sync`](Self::cohort_sync)) through exactly `chunk`.
+    /// Runs the identical divergence-guard / control-plane / publication
+    /// sequence the per-session path runs after `submit_chunk`, so the
+    /// session's observable trajectory is the same either way.
+    pub(crate) fn note_cohort_chunk(&mut self, chunk: &Mat64) {
+        let Self {
+            engine,
+            monitor,
+            state,
+            current_a,
+            have_a,
+            warm_start,
+            divergence_bound,
+            resets,
+            adapt,
+            status,
+            observed_depth,
+            ..
+        } = self;
+        chunk_bookkeeping(
+            engine.as_mut(),
+            chunk,
+            monitor,
+            state,
+            current_a,
+            *have_a,
+            warm_start,
+            *divergence_bound,
+            resets,
+            adapt,
+            status,
+            *observed_depth,
+        );
+    }
+
+    /// Apply one already-AGC'd, already-cut chunk through the engine with
+    /// full bookkeeping — the cohort executor's flush path for chunks
+    /// still queued when a lane leaves its pool (park, detach, End,
+    /// cohort dissolving to a single member). Bit-identical to the same
+    /// chunk's delivery inside [`on_block`](Self::on_block).
+    pub(crate) fn apply_chunk(&mut self, chunk: &Mat64) -> Result<()> {
+        let Self {
+            engine,
+            monitor,
+            state,
+            current_a,
+            have_a,
+            warm_start,
+            divergence_bound,
+            resets,
+            adapt,
+            status,
+            observed_depth,
+            ..
+        } = self;
+        engine.submit_chunk(chunk)?;
+        chunk_bookkeeping(
+            engine.as_mut(),
+            chunk,
+            monitor,
+            state,
+            current_a,
+            *have_a,
+            warm_start,
+            *divergence_bound,
+            resets,
+            adapt,
+            status,
+            *observed_depth,
+        );
+        Ok(())
+    }
+
+    /// Cohort-execution probe, forwarded from the engine: `Some` iff this
+    /// session can run as a cohort lane (plain fused EASI-SGD native
+    /// engine), with its *current* μ.
+    pub(crate) fn cohort_lane(&self) -> Option<CohortLane> {
+        self.engine.cohort_lane()
+    }
+
+    /// Wire-format snapshot of the separation matrix for cohort loading.
+    pub(crate) fn cohort_b(&self) -> Mat64 {
+        self.engine.b()
+    }
+
+    /// Install the cohort-stepped B and account its consumed rows.
+    pub(crate) fn cohort_sync(&mut self, b: &Mat64, rows: u64) {
+        self.engine.cohort_sync(b, rows);
+    }
+
+    /// Engine chunk size (part of the cohort shape key: lanes must cut
+    /// chunks on identical boundaries to step in lockstep).
+    pub(crate) fn chunk_size(&self) -> usize {
+        self.engine.chunk_size()
+    }
+
+    /// Session shape `(n, m)`.
+    pub(crate) fn shape(&self) -> (usize, usize) {
+        self.warm_start.shape()
+    }
+
+    /// Cost-weighted placement load of this session, ≈ flops per engine
+    /// chunk (`n × m × chunk`): the unit `LeastLoadedPlacement` balances,
+    /// so a 64×64 tenant no longer weighs the same as a 2×2 one.
+    pub fn placement_cost(&self) -> usize {
+        let (n, m) = self.shape();
+        (n * m * self.engine.chunk_size()).max(1)
     }
 
     /// Samples applied to the separator so far.
@@ -497,6 +587,92 @@ impl SessionRunner {
             b: self.engine.b(),
         }
     }
+}
+
+/// Per-chunk tail of the ingest path, shared verbatim by the per-session
+/// route (`on_block`/`apply_chunk`, right after `submit_chunk`) and the
+/// cohort route (`note_cohort_chunk`, right after `cohort_sync`):
+/// divergence guard, adaptive control plane, state publication,
+/// monitoring, health publishing. A free function over the destructured
+/// runner fields because `on_block` calls it while `push_block` holds the
+/// chunker borrow.
+#[allow(clippy::too_many_arguments)] // flat seam over SessionRunner's fields, see above
+fn chunk_bookkeeping(
+    engine: &mut dyn Engine,
+    chunk: &Mat64,
+    monitor: &mut Monitor,
+    state: &mut StateStore,
+    current_a: &Mat64,
+    have_a: bool,
+    warm_start: &Mat64,
+    divergence_bound: f64,
+    resets: &mut u64,
+    adapt: &mut Option<AdaptiveController>,
+    status: &mut StatusCell,
+    observed_depth: usize,
+) {
+    let b = engine.b();
+    // Divergence guard: large-mu EASI under abrupt mixing
+    // switches can blow up; recover like an adaptive filter.
+    if !b.is_finite() || b.max_abs() > divergence_bound {
+        // Rollback protocol: with the control plane active and a
+        // steady-state checkpoint on hand, restore that (the last
+        // known-good separator) instead of the cold warm start.
+        // Either way the governor cools and the detector disarms —
+        // re-applying a boosted μ to a freshly reset separator
+        // would just diverge again, and the reset's whiteness
+        // spike is not drift.
+        let mut recovered = false;
+        if let Some(ctrl) = adapt.as_mut() {
+            if let Some(ck) = ctrl.rollback_b() {
+                let ck = ck.clone();
+                engine.reset_b(ck);
+                recovered = true;
+            }
+            if recovered {
+                ctrl.on_rollback();
+            } else {
+                ctrl.on_divergence_reset();
+            }
+            engine.set_mu(ctrl.mu(engine.samples_done()));
+        }
+        if !recovered {
+            engine.reset_b(warm_start.clone());
+        }
+        monitor.rearm();
+        *resets += 1;
+    } else if let Some(ctrl) = adapt.as_mut() {
+        // Closed loop: observe the separated outputs of this
+        // chunk (strided), detect drift, govern μ, and keep the
+        // recovery checkpoint fresh while steady.
+        let done = engine.samples_done();
+        if ctrl.observe_chunk(&b, chunk, done).is_some() {
+            // Re-arm convergence detection so the monitor reports
+            // a post-drift `converged_at` instead of staying
+            // latched on the pre-drift one.
+            monitor.rearm();
+        } else {
+            ctrl.checkpoint_if_steady(&b);
+        }
+        engine.set_mu(ctrl.mu(done));
+    }
+    state.publish(engine.b(), engine.samples_done());
+    let amari = if have_a {
+        monitor.record(&engine.b(), current_a, engine.samples_done())
+    } else {
+        f64::NAN
+    };
+    // Live health plane: one coherent record per engine chunk.
+    // Pure observation — nothing on the update path reads it
+    // back, so trajectories stay bit-identical.
+    status.publish_progress(
+        engine.samples_done(),
+        amari,
+        *resets,
+        adapt.as_ref().map_or(0, |c| c.drift_events()),
+        adapt.as_ref().map_or(0, |c| c.rollbacks()),
+        observed_depth,
+    );
 }
 
 /// Run the full streaming pipeline: produce `cfg.samples` samples, apply

@@ -177,6 +177,20 @@ impl<T: Scalar> Optimizer<T> for EasiSgd<T> {
         // exactly one place.
         EasiSgd::set_mu(self, mu);
     }
+
+    fn cohort_plain(&self) -> Option<(f64, Nonlinearity)> {
+        // Only the plain form is the fused kernel a cohort lane runs; the
+        // normalized update has per-sample denominators the lane omits.
+        if self.normalized {
+            None
+        } else {
+            Some((self.mu, self.g))
+        }
+    }
+
+    fn note_cohort_rows(&mut self, rows: u64) {
+        self.samples += rows;
+    }
 }
 
 #[cfg(test)]

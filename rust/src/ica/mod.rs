@@ -68,6 +68,22 @@ pub trait Optimizer<T: Scalar = f64>: Send {
             self.step(xs.row(t));
         }
     }
+
+    /// Cohort-execution probe: `Some((μ, g))` iff this optimizer's `step`
+    /// is *exactly* the plain (non-normalized) fused EASI-SGD kernel, so
+    /// a tenant-major [`crate::linalg::CohortState`] lane loaded with
+    /// `(b(), μ)` reproduces it bit-for-bit. Everything else (normalized
+    /// EASI, the mini-batch family, schedules) returns `None` and keeps
+    /// the per-session path. Default: `None`.
+    fn cohort_plain(&self) -> Option<(f64, Nonlinearity)> {
+        None
+    }
+
+    /// Bookkeeping after a cohort kernel advanced this optimizer's `B`
+    /// externally (via `b_mut`): account the `rows` samples it consumed.
+    /// Only called on optimizers that returned `Some` from
+    /// [`cohort_plain`](Self::cohort_plain); default is a no-op.
+    fn note_cohort_rows(&mut self, _rows: u64) {}
 }
 
 /// Build an optimizer from an [`OptimizerConfig`] with an identity-like

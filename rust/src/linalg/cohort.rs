@@ -1,0 +1,578 @@
+//! Tenant-major (struct-of-arrays) EASI cohort kernels.
+//!
+//! The paper's throughput comes from a deep pipeline that never stalls:
+//! one sample enters the datapath per clock. The software analogue for
+//! the many-small-tenants serving plane is *cohort execution*: instead of
+//! stepping one session's tiny `n × m` matrices at a time — where loop
+//! setup, nonlinearity dispatch and pointer chasing dominate the handful
+//! of flops — a worker steps a whole cohort of same-shape tenants through
+//! one fused kernel whose innermost loop runs across the *lanes* (one
+//! lane = one tenant).
+//!
+//! [`CohortState`] is the scratch for that kernel: every operand
+//! (`B`, `x`, `y`, `g(y)`, `H`, `H·B`, `μ`) is stored lane-minor, so
+//! `b[(i·m + j)·L + l]` holds tenant `l`'s `B[i][j]` and the inner loops
+//! are unit-stride across tenants — cache-blocked by construction (a
+//! 64-lane f64 cohort row is exactly eight cache lines) and shaped for
+//! the autovectorizer.
+//!
+//! **Bit-identity contract.** For every lane, the arithmetic sequence is
+//! *exactly* the per-session fused kernel's at the same precision — the
+//! same accumulation order in `y = Bx`, the same triangular `H` pass, the
+//! same ascending-`k` accumulation in `H·B`, the same AXPY fold — on the
+//! default build *and* under `--features fma` (where this module
+//! replicates `linalg::fused`'s contraction pattern per lane: the
+//! four-accumulator pairwise-combined dot, `mul_add` in the gradient and
+//! the fold). Cohort execution therefore changes *which tenant's chunk
+//! runs when*, never any tenant's trajectory: parking a lane back into a
+//! self-contained `SessionRunner` reproduces the solo run to the bit.
+//! Pinned by the module tests below and by `tests/cohort_hotpath.rs` /
+//! `tests/integration_cohort.rs`.
+//!
+//! **Allocation.** Buffers grow monotonically in `begin`; a steady-state
+//! cohort (constant lane count) performs zero allocations per step
+//! (asserted by the counting-allocator pin in `tests/cohort_hotpath.rs`).
+//!
+//! The chunk wire format stays `f64` ([`Mat64`]): `load_lane` and the
+//! per-sample gather narrow through `Scalar::scalar_from_f64`, exactly
+//! like the per-session `CastNativeEngine` narrows its chunks, so an
+//! `f32` cohort lane sees bit-for-bit the inputs its solo engine would.
+
+use super::{Mat64, Scalar};
+
+/// Struct-of-arrays workspace stepping `L` same-shape EASI-SGD tenants
+/// (plain, non-normalized form) through one fused kernel per sample.
+///
+/// Usage per cohort step: [`begin`](Self::begin) with the lane count,
+/// [`load_lane`](Self::load_lane) each tenant's `(B, μ)`,
+/// [`step_chunks`](Self::step_chunks) one equal-length chunk per lane,
+/// then [`store_lane`](Self::store_lane) each tenant's `B` back out.
+pub struct CohortState<T: Scalar = f64> {
+    n: usize,
+    m: usize,
+    /// Active lane count for the current step (also the SoA stride).
+    lanes: usize,
+    /// Tenant separation matrices, `b[(i*m + j)*lanes + l]`.
+    b: Vec<T>,
+    /// Per-lane `−μ`, pre-negated so the update loop is a pure fold
+    /// (`−μ` is exact in IEEE, matching the per-session `−mu` argument).
+    neg_mu: Vec<T>,
+    /// Gathered sample, `x[j*lanes + l]`.
+    x: Vec<T>,
+    /// `y = Bx`, `y[i*lanes + l]`.
+    y: Vec<T>,
+    /// `g(y)`, same layout as `y`.
+    gy: Vec<T>,
+    /// Relative gradient `H`, `h[(i*n + j)*lanes + l]`.
+    h: Vec<T>,
+    /// Update staging `H·B`, same layout as `b`.
+    hb: Vec<T>,
+}
+
+impl<T: Scalar> CohortState<T> {
+    /// Workspace for cohorts of `n × m` tenants (no lanes yet — buffers
+    /// grow on first [`begin`](Self::begin)).
+    pub fn new(n: usize, m: usize) -> Self {
+        assert!(n >= 1 && m >= 1, "CohortState: degenerate shape {n}x{m}");
+        Self {
+            n,
+            m,
+            lanes: 0,
+            b: Vec::new(),
+            neg_mu: Vec::new(),
+            x: Vec::new(),
+            y: Vec::new(),
+            gy: Vec::new(),
+            h: Vec::new(),
+            hb: Vec::new(),
+        }
+    }
+
+    /// Output dimensionality n (rows of each lane's B).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Mixture dimensionality m (cols of each lane's B).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Lane count of the step in progress (0 before the first `begin`).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Start a step over `lanes` tenants: sets the SoA stride and grows
+    /// the buffers if this is the widest cohort seen so far (shrinking
+    /// reuses the prefix — no allocation either way at steady state).
+    pub fn begin(&mut self, lanes: usize) {
+        assert!(lanes >= 1, "CohortState::begin: empty cohort");
+        self.lanes = lanes;
+        let (n, m) = (self.n, self.m);
+        grow(&mut self.b, n * m * lanes);
+        grow(&mut self.neg_mu, lanes);
+        grow(&mut self.x, m * lanes);
+        grow(&mut self.y, n * lanes);
+        grow(&mut self.gy, n * lanes);
+        grow(&mut self.h, n * n * lanes);
+        grow(&mut self.hb, n * m * lanes);
+    }
+
+    /// Scatter one tenant's separation matrix and learning rate into lane
+    /// `lane`. `b` is the engine's `f64` wire-format snapshot; narrowing
+    /// to `T` here matches the per-session cast path element-for-element
+    /// (an f32 engine's widened B narrows back losslessly).
+    pub fn load_lane(&mut self, lane: usize, b: &Mat64, mu: f64) {
+        let (n, m, lanes) = (self.n, self.m, self.lanes);
+        assert!(lane < lanes, "load_lane: lane {lane} out of {lanes}");
+        assert_eq!(b.shape(), (n, m), "load_lane: B shape");
+        for i in 0..n {
+            let row = b.row(i);
+            for j in 0..m {
+                self.b[(i * m + j) * lanes + lane] = T::scalar_from_f64(row[j]);
+            }
+        }
+        // Same construction as the per-session step: μ is narrowed from
+        // hyperparameter (f64) space once, then negated — both exact.
+        self.neg_mu[lane] = -T::scalar_from_f64(mu);
+    }
+
+    /// Gather lane `lane`'s separation matrix back out (widening to the
+    /// `f64` wire format, lossless for both instantiations).
+    pub fn store_lane(&self, lane: usize, out: &mut Mat64) {
+        let (n, m, lanes) = (self.n, self.m, self.lanes);
+        assert!(lane < lanes, "store_lane: lane {lane} out of {lanes}");
+        assert_eq!(out.shape(), (n, m), "store_lane: out shape");
+        for i in 0..n {
+            let row = out.row_mut(i);
+            for j in 0..m {
+                row[j] = self.b[(i * m + j) * lanes + lane].scalar_to_f64();
+            }
+        }
+    }
+
+    /// Step every lane through its chunk: `chunks[l]` is lane `l`'s
+    /// equal-length sample block (rows × m, `f64` wire format). For each
+    /// row, every lane runs the full fused EASI step
+    /// (`y = Bx`, triangular `H`, `B ← B − μHB`) with the inner loops
+    /// lane-minor.
+    pub fn step_chunks<G: Fn(T) -> T>(&mut self, g: G, chunks: &[Mat64]) {
+        let rows = self.check_chunks(chunks);
+        for s in 0..rows {
+            self.gather(chunks, s);
+            self.gradient(&g);
+            self.apply_update();
+        }
+    }
+
+    /// Gradient-only variant (no `B` update): the `cohort_grad` perf
+    /// record measures this against the per-session fused gradient.
+    pub fn gradient_chunks<G: Fn(T) -> T>(&mut self, g: G, chunks: &[Mat64]) {
+        let rows = self.check_chunks(chunks);
+        for s in 0..rows {
+            self.gather(chunks, s);
+            self.gradient(&g);
+        }
+    }
+
+    fn check_chunks(&self, chunks: &[Mat64]) -> usize {
+        assert_eq!(chunks.len(), self.lanes, "step_chunks: one chunk per lane");
+        let rows = chunks[0].rows();
+        for c in chunks {
+            assert_eq!(c.rows(), rows, "step_chunks: ragged chunk rows");
+            assert_eq!(c.cols(), self.m, "step_chunks: chunk width");
+        }
+        rows
+    }
+
+    /// Transpose row `s` of every lane's chunk into the lane-minor `x`
+    /// buffer, narrowing from the `f64` wire format exactly like the
+    /// per-session cast path does per element.
+    fn gather(&mut self, chunks: &[Mat64], s: usize) {
+        let (m, lanes) = (self.m, self.lanes);
+        for (l, c) in chunks.iter().enumerate() {
+            let row = c.row(s);
+            for j in 0..m {
+                self.x[j * lanes + l] = T::scalar_from_f64(row[j]);
+            }
+        }
+    }
+
+    /// `y = Bx`, `gy = g(y)`, triangular `H` — per lane bit-identical to
+    /// `fused::relative_gradient_into` on both builds.
+    fn gradient<G: Fn(T) -> T>(&mut self, g: &G) {
+        let (n, m, lanes) = (self.n, self.m, self.lanes);
+        // y = Bx.
+        if cfg!(feature = "fma") {
+            // Per-lane replica of fused::dot's contraction: four
+            // independent mul_add accumulators over quads of j, combined
+            // pairwise, remainder folded serially — same bits per lane as
+            // the per-session fma dot (scalar j-loop per lane; the lane
+            // loop is outer here because the accumulators are per-lane).
+            for i in 0..n {
+                for l in 0..lanes {
+                    let quads = m / 4;
+                    let (mut a0, mut a1, mut a2, mut a3) =
+                        (T::zero(), T::zero(), T::zero(), T::zero());
+                    for q in 0..quads {
+                        let j = 4 * q;
+                        a0 = self.b[(i * m + j) * lanes + l].mul_add(self.x[j * lanes + l], a0);
+                        a1 = self.b[(i * m + j + 1) * lanes + l]
+                            .mul_add(self.x[(j + 1) * lanes + l], a1);
+                        a2 = self.b[(i * m + j + 2) * lanes + l]
+                            .mul_add(self.x[(j + 2) * lanes + l], a2);
+                        a3 = self.b[(i * m + j + 3) * lanes + l]
+                            .mul_add(self.x[(j + 3) * lanes + l], a3);
+                    }
+                    let mut acc = (a0 + a2) + (a1 + a3);
+                    for j in 4 * quads..m {
+                        acc = self.b[(i * m + j) * lanes + l].mul_add(self.x[j * lanes + l], acc);
+                    }
+                    self.y[i * lanes + l] = acc;
+                }
+            }
+        } else {
+            // Sequential accumulation in ascending j per lane — identical
+            // order to fused::dot, lane-minor so the l-loop vectorizes.
+            for i in 0..n {
+                let yrow = &mut self.y[i * lanes..(i + 1) * lanes];
+                yrow.fill(T::zero());
+                for j in 0..m {
+                    let bbase = (i * m + j) * lanes;
+                    let xbase = j * lanes;
+                    for l in 0..lanes {
+                        yrow[l] += self.b[bbase + l] * self.x[xbase + l];
+                    }
+                }
+            }
+        }
+        // gy = g(y): one monomorphized pass, matching apply order.
+        for idx in 0..n * lanes {
+            self.gy[idx] = g(self.y[idx]);
+        }
+        // Triangular H pass: diagonal y_i² − 1, off-diagonal sym ± skew —
+        // the same expressions per lane as the per-session kernel on both
+        // builds.
+        for i in 0..n {
+            let ybase = i * lanes;
+            let dbase = (i * self.n + i) * lanes;
+            for l in 0..lanes {
+                let yi = self.y[ybase + l];
+                self.h[dbase + l] = if cfg!(feature = "fma") {
+                    yi.mul_add(yi, -T::one())
+                } else {
+                    yi * yi - T::one()
+                };
+            }
+            for j in (i + 1)..n {
+                let jbase = j * lanes;
+                let ij = (i * self.n + j) * lanes;
+                let ji = (j * self.n + i) * lanes;
+                for l in 0..lanes {
+                    let yi = self.y[ybase + l];
+                    let gi = self.gy[ybase + l];
+                    let yj = self.y[jbase + l];
+                    let gj = self.gy[jbase + l];
+                    let (sym, skew) = if cfg!(feature = "fma") {
+                        (yi * yj, gi.mul_add(yj, -(yi * gj)))
+                    } else {
+                        (yi * yj, gi * yj - yi * gj)
+                    };
+                    self.h[ij + l] = sym + skew;
+                    self.h[ji + l] = sym - skew;
+                }
+            }
+        }
+    }
+
+    /// `B ← B − μ·(H·B)` — per lane bit-identical to
+    /// `fused::apply_accumulated_update(b, h, -mu, hb)` on both builds:
+    /// `H·B` accumulates in ascending k per output element, then the fold
+    /// applies one multiply-add (contracted under `fma`) per element.
+    fn apply_update(&mut self) {
+        let (n, m, lanes) = (self.n, self.m, self.lanes);
+        self.hb[..n * m * lanes].fill(T::zero());
+        for i in 0..n {
+            for k in 0..n {
+                let hbase = (i * n + k) * lanes;
+                for j in 0..m {
+                    let obase = (i * m + j) * lanes;
+                    let bbase = (k * m + j) * lanes;
+                    for l in 0..lanes {
+                        let hik = self.h[hbase + l];
+                        let bkj = self.b[bbase + l];
+                        self.hb[obase + l] = if cfg!(feature = "fma") {
+                            hik.mul_add(bkj, self.hb[obase + l])
+                        } else {
+                            self.hb[obase + l] + hik * bkj
+                        };
+                    }
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..m {
+                let base = (i * m + j) * lanes;
+                for l in 0..lanes {
+                    let alpha = self.neg_mu[l];
+                    self.b[base + l] = if cfg!(feature = "fma") {
+                        alpha.mul_add(self.hb[base + l], self.b[base + l])
+                    } else {
+                        self.b[base + l] + alpha * self.hb[base + l]
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// Grow-only resize: never shrinks, so steady-state cohorts of a fixed
+/// width allocate exactly once.
+fn grow<T: Scalar>(v: &mut Vec<T>, len: usize) {
+    if v.len() < len {
+        v.resize(len, T::zero());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{fused, FusedScratch, Mat32};
+    use crate::signal::rng::Pcg32;
+    use crate::testkit::{check, Config};
+
+    fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat64 {
+        Mat64::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[cfg(not(feature = "fma"))]
+    fn bits_equal(a: &Mat64, b: &Mat64) -> bool {
+        a.shape() == b.shape()
+            && a.as_slice()
+                .iter()
+                .zip(b.as_slice())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Per-lane reference: each tenant stepped solo through the fused
+    /// per-session kernel over its own chunk, per-lane μ.
+    fn solo_trajectories(
+        bs: &[Mat64],
+        mus: &[f64],
+        chunks: &[Mat64],
+        g: impl Fn(f64) -> f64 + Copy,
+    ) -> Vec<Mat64> {
+        let (n, m) = bs[0].shape();
+        let mut s = FusedScratch::new(n, m);
+        bs.iter()
+            .zip(mus)
+            .zip(chunks)
+            .map(|((b0, &mu), chunk)| {
+                let mut b = b0.clone();
+                for t in 0..chunk.rows() {
+                    fused::relative_gradient_step_into(&mut b, chunk.row(t), g, mu, &mut s);
+                }
+                b
+            })
+            .collect()
+    }
+
+    fn cohort_trajectories(
+        bs: &[Mat64],
+        mus: &[f64],
+        chunks: &[Mat64],
+        g: impl Fn(f64) -> f64,
+    ) -> Vec<Mat64> {
+        let (n, m) = bs[0].shape();
+        let mut c = CohortState::<f64>::new(n, m);
+        c.begin(bs.len());
+        for (l, (b, &mu)) in bs.iter().zip(mus).enumerate() {
+            c.load_lane(l, b, mu);
+        }
+        c.step_chunks(g, chunks);
+        bs.iter()
+            .enumerate()
+            .map(|(l, b0)| {
+                let mut out = Mat64::zeros(b0.rows(), b0.cols());
+                c.store_lane(l, &mut out);
+                out
+            })
+            .collect()
+    }
+
+    fn case(rng: &mut Pcg32) -> (Vec<Mat64>, Vec<f64>, Vec<Mat64>) {
+        let n = 1 + (rng.next_u32() % 4) as usize;
+        let m = n + (rng.next_u32() % 4) as usize;
+        let lanes = 1 + (rng.next_u32() % 6) as usize;
+        let rows = 1 + (rng.next_u32() % 8) as usize;
+        let bs: Vec<Mat64> = (0..lanes).map(|_| rand_mat(rng, n, m)).collect();
+        // Distinct per-lane learning rates: lane separation must hold even
+        // when μ differs (the adaptive governor retunes lanes independently).
+        let mus: Vec<f64> = (0..lanes).map(|l| 0.002 + 0.001 * l as f64).collect();
+        let chunks: Vec<Mat64> = (0..lanes).map(|_| rand_mat(rng, rows, m)).collect();
+        (bs, mus, chunks)
+    }
+
+    #[cfg(not(feature = "fma"))]
+    #[test]
+    fn cohort_matches_solo_fused_steps_bitwise() {
+        check("cohort lanes == solo fused (bitwise)", Config::default(), |rng| {
+            let (bs, mus, chunks) = case(rng);
+            let want = solo_trajectories(&bs, &mus, &chunks, |v| v * v * v);
+            let got = cohort_trajectories(&bs, &mus, &chunks, |v| v * v * v);
+            want.iter().zip(&got).all(|(w, g)| bits_equal(w, g))
+        });
+    }
+
+    #[test]
+    fn cohort_matches_solo_fused_steps_to_tolerance() {
+        // Runs under every feature set; under `fma` the cohort kernel
+        // replicates the per-session contraction pattern per lane, so
+        // this is belt-and-braces for the bitwise pin above.
+        check("cohort lanes ~= solo fused", Config::default(), |rng| {
+            let (bs, mus, chunks) = case(rng);
+            let want = solo_trajectories(&bs, &mus, &chunks, |v| v * v * v);
+            let got = cohort_trajectories(&bs, &mus, &chunks, |v| v * v * v);
+            want.iter().zip(&got).all(|(w, g)| w.max_abs_diff(g) < 1e-10)
+        });
+    }
+
+    #[test]
+    fn fma_contraction_parity_is_exact() {
+        // The per-lane y = Bx contraction must equal fused::dot for the
+        // active build — under `fma` that is the 4-accumulator pairwise
+        // pattern, default build the serial sum. Checked through the full
+        // step so all three kernel stages are covered.
+        check("cohort step == solo step (active build)", Config::default(), |rng| {
+            let (bs, mus, chunks) = case(rng);
+            let want = solo_trajectories(&bs, &mus, &chunks, |v| v * v * v);
+            let got = cohort_trajectories(&bs, &mus, &chunks, |v| v * v * v);
+            want.iter().zip(&got).all(|(w, g)| {
+                w.as_slice()
+                    .iter()
+                    .zip(g.as_slice())
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+            })
+        });
+    }
+
+    #[test]
+    fn f32_cohort_matches_f32_solo_bitwise() {
+        // The f32 instantiation against the f32 per-session fused path on
+        // the same narrowed inputs: the gather narrows per element exactly
+        // like CastNativeEngine's cast_into, so the bits must agree under
+        // the active build's contraction (both sides share it).
+        let mut rng = Pcg32::seed(0xC0F32);
+        let (n, m, lanes, rows) = (3, 5, 4, 6);
+        let bs: Vec<Mat64> = (0..lanes)
+            .map(|_| rand_mat(&mut rng, n, m).cast::<f32>().cast::<f64>())
+            .collect();
+        let mus: Vec<f64> = (0..lanes).map(|l| 0.004 + 0.001 * l as f64).collect();
+        let chunks: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, rows, m)).collect();
+
+        // Solo f32 reference: narrow B and each row exactly once.
+        let mut s32 = FusedScratch::<f32>::new(n, m);
+        let want: Vec<Mat32> = bs
+            .iter()
+            .zip(&mus)
+            .zip(&chunks)
+            .map(|((b0, &mu), chunk)| {
+                let mut b: Mat32 = b0.cast();
+                let c32: Mat32 = chunk.cast();
+                for t in 0..c32.rows() {
+                    fused::relative_gradient_step_into(
+                        &mut b,
+                        c32.row(t),
+                        |v: f32| v * v * v,
+                        mu as f32,
+                        &mut s32,
+                    );
+                }
+                b
+            })
+            .collect();
+
+        let mut c = CohortState::<f32>::new(n, m);
+        c.begin(lanes);
+        for (l, (b, &mu)) in bs.iter().zip(&mus).enumerate() {
+            c.load_lane(l, b, mu);
+        }
+        c.step_chunks(|v: f32| v * v * v, &chunks);
+        for (l, w) in want.iter().enumerate() {
+            let mut got64 = Mat64::zeros(n, m);
+            c.store_lane(l, &mut got64);
+            let got: Mat32 = got64.cast();
+            assert!(
+                w.as_slice()
+                    .iter()
+                    .zip(got.as_slice())
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "f32 lane {l} diverged from solo f32 path"
+            );
+        }
+    }
+
+    #[test]
+    fn single_lane_cohort_is_the_solo_kernel() {
+        let mut rng = Pcg32::seed(7);
+        let (bs, mus, chunks) =
+            (vec![rand_mat(&mut rng, 2, 3)], vec![0.01], vec![rand_mat(&mut rng, 5, 3)]);
+        let want = solo_trajectories(&bs, &mus, &chunks, f64::tanh);
+        let got = cohort_trajectories(&bs, &mus, &chunks, f64::tanh);
+        assert!(want[0]
+            .as_slice()
+            .iter()
+            .zip(got[0].as_slice())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn lane_width_changes_reuse_buffers() {
+        // Shrink then regrow: values must stay lane-correct across width
+        // changes (the stride is the active lane count, not capacity).
+        let mut rng = Pcg32::seed(9);
+        let (n, m) = (2, 4);
+        let mut c = CohortState::<f64>::new(n, m);
+        for lanes in [5usize, 2, 7, 3] {
+            let bs: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, n, m)).collect();
+            let mus: Vec<f64> = (0..lanes).map(|l| 0.003 + 0.002 * l as f64).collect();
+            let chunks: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, 3, m)).collect();
+            c.begin(lanes);
+            for (l, (b, &mu)) in bs.iter().zip(&mus).enumerate() {
+                c.load_lane(l, b, mu);
+            }
+            c.step_chunks(|v| v * v * v, &chunks);
+            let want = solo_trajectories(&bs, &mus, &chunks, |v| v * v * v);
+            for (l, w) in want.iter().enumerate() {
+                let mut got = Mat64::zeros(n, m);
+                c.store_lane(l, &mut got);
+                assert!(
+                    w.as_slice()
+                        .iter()
+                        .zip(got.as_slice())
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "lane {l} of width {lanes} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_chunks_leaves_b_untouched() {
+        let mut rng = Pcg32::seed(11);
+        let b0 = rand_mat(&mut rng, 3, 3);
+        let chunk = rand_mat(&mut rng, 4, 3);
+        let mut c = CohortState::<f64>::new(3, 3);
+        c.begin(1);
+        c.load_lane(0, &b0, 0.01);
+        c.gradient_chunks(|v| v * v * v, std::slice::from_ref(&chunk));
+        let mut out = Mat64::zeros(3, 3);
+        c.store_lane(0, &mut out);
+        assert!(b0
+            .as_slice()
+            .iter()
+            .zip(out.as_slice())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+}

@@ -11,14 +11,20 @@
 //! - [`fused`]: the fused EASI relative-gradient/update kernels the
 //!   optimizers run per sample and per mini-batch (bit-identical to the
 //!   unfused `Mat` op sequence; see module docs).
+//! - [`cohort`]: tenant-major (struct-of-arrays) generalization of the
+//!   fused kernels — one step advances a whole cohort of same-shape
+//!   sessions with lane-minor inner loops, bit-identical per lane to the
+//!   per-session path on every build.
 //! - [`decomp`]: Gauss–Jordan inverse/solve and cyclic Jacobi symmetric
 //!   eigendecomposition (used by whitening and FastICA).
 
+pub mod cohort;
 pub mod decomp;
 pub mod fused;
 mod mat;
 mod scalar;
 
+pub use cohort::CohortState;
 pub use decomp::{inverse, jacobi_eig, solve, JacobiEig};
 pub use fused::FusedScratch;
 pub use mat::Mat;

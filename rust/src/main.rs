@@ -171,7 +171,7 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
     args.expect_only(&[
         "config", "sessions", "shards", "samples", "capacity", "mixing", "precision", "mu",
         "gamma", "beta", "p", "optimizer", "engine", "seed", "seed-stride", "m", "n",
-        "artifacts", "adapt", "switch-at", "placement", "churn", "status-every",
+        "artifacts", "adapt", "switch-at", "placement", "churn", "status-every", "cohort",
     ])?;
     let mut sc = if let Some(path) = args.get("config") {
         HubScenario::load(path)?
@@ -206,6 +206,9 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
     if let Some(p) = args.get("placement") {
         sc.placement = PlacementKind::parse(p)?;
     }
+    if let Some(c) = args.get("cohort") {
+        sc.cohort = parse_on_off("cohort", c)?;
+    }
     if let Some(churn) = args.get("churn") {
         // `--churn S` staggers arrivals by S aggregate-ingested samples;
         // `--churn S,D` additionally makes every other tenant depart
@@ -233,11 +236,12 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
     sc.validate()?;
 
     println!(
-        "serve-many: {} sessions on {} shard(s) ({} placement), {} samples each, optimizer {}, \
-         mixing {:?}, precision {:?}{}",
+        "serve-many: {} sessions on {} shard(s) ({} placement, cohort {}), {} samples each, \
+         optimizer {}, mixing {:?}, precision {:?}{}",
         sc.sessions,
         sc.shards,
         sc.placement.name(),
+        if sc.cohort { "on" } else { "off" },
         sc.base.samples,
         sc.base.optimizer.kind.name(),
         if sc.mixing.is_empty() { vec![sc.base.signal.mixing.clone()] } else { sc.mixing.clone() },
@@ -456,7 +460,7 @@ fn cmd_dump_datapath(args: &Args) -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     args.expect_only(&[
         "quick", "out", "check", "tolerance", "min-fused-speedup", "min-f32-speedup",
-        "max-adapt-overhead", "max-status-overhead",
+        "min-cohort-speedup", "max-adapt-overhead", "max-status-overhead",
     ])?;
     let quick = args.switch("quick");
     let report = easi_ica::perf::run_hotpath_suite(quick);
@@ -472,6 +476,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let tolerance = args.get_f64("tolerance", 0.30)?;
         let floor = args.get_f64("min-fused-speedup", 0.0)?;
         let f32_floor = args.get_f64("min-f32-speedup", 0.0)?;
+        let cohort_floor = args.get_f64("min-cohort-speedup", 0.0)?;
         let adapt_ceiling = args.get_f64("max-adapt-overhead", 0.0)?;
         let status_ceiling = args.get_f64("max-status-overhead", 0.0)?;
         let gate = easi_ica::perf::gate_against_file(
@@ -480,6 +485,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             tolerance,
             floor,
             f32_floor,
+            cohort_floor,
             adapt_ceiling,
             status_ceiling,
         )?;

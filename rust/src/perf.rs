@@ -28,7 +28,7 @@ use crate::coordinator::{
     StatusCell,
 };
 use crate::ica::{self, EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
-use crate::linalg::{fused, FusedScratch, Mat32, Mat64};
+use crate::linalg::{fused, CohortState, FusedScratch, Mat32, Mat64};
 use crate::signal::Pcg32;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -540,6 +540,8 @@ pub fn run_hotpath_suite(quick: bool) -> BenchReport {
 
     lifecycle_overhead(&mut rep, warmup, runs, rows);
 
+    cohort_suite(&mut rep, warmup, runs);
+
     coordinator_e2e(&mut rep, quick);
 
     println!();
@@ -867,6 +869,82 @@ fn lifecycle_overhead(rep: &mut BenchReport, warmup: usize, runs: usize, rows: u
     rep.derived.push(("status_overhead_fraction".to_string(), overhead));
 }
 
+/// Tenant-major cohort kernels at the serving fleet's canonical small
+/// shape (64 lanes of m=8, n=4, one 64-row chunk per lane per step —
+/// exactly one pool pump in the worker loop): the gather+gradient alone,
+/// the full cohort step including the per-step `load_lane`/`store_lane`
+/// round trip the executor pays, and the identical work run as 64
+/// independent per-session fused steps (same-section reference, like
+/// `adapt_overhead`). The derived `cohort_over_solo_speedup` is what
+/// CI's `--min-cohort-speedup` flag floors (≥ 1.2): batching same-shape
+/// tenants must beat stepping them one at a time.
+fn cohort_suite(rep: &mut BenchReport, warmup: usize, runs: usize) {
+    let (m, n) = (8usize, 4usize);
+    let lanes = 64usize;
+    let chunk = 64usize;
+    let mut rng = Pcg32::seed(0xC0407);
+    let chunks: Vec<Mat64> =
+        (0..lanes).map(|_| Mat64::from_fn(chunk, m, |_, _| rng.normal())).collect();
+    // Distinct per-tenant (B, μ), as in a live fleet.
+    let bs: Vec<Mat64> = (0..lanes).map(|_| ica::init_b(n, m)).collect();
+    let mus: Vec<f64> =
+        (0..lanes).map(|l| BENCH_MU * (1.0 + l as f64 / lanes as f64)).collect();
+    // Per sample-lane, so the numbers are comparable with the per-session
+    // step records above.
+    let iters = (lanes * chunk) as u64;
+
+    let mut st = CohortState::<f64>::new(n, m);
+    let grad = bench(warmup, runs, iters, || {
+        st.begin(lanes);
+        for l in 0..lanes {
+            st.load_lane(l, &bs[l], mus[l]);
+        }
+        st.gradient_chunks(|v| v * v * v, black_box(&chunks));
+        black_box(st.lanes());
+    });
+    push(rep, "cohort grad", "cohort_grad", m, n, runs, &grad);
+
+    let mut out = Mat64::zeros(n, m);
+    let step = bench(warmup, runs, iters, || {
+        st.begin(lanes);
+        for l in 0..lanes {
+            st.load_lane(l, &bs[l], mus[l]);
+        }
+        st.step_chunks(|v| v * v * v, black_box(&chunks));
+        for l in 0..lanes {
+            st.store_lane(l, &mut out);
+        }
+        black_box(&out);
+    });
+    push(rep, "cohort step", "cohort_step", m, n, runs, &step);
+
+    // Reference: the same 64 tenants stepped one at a time through the
+    // per-session fused kernel (what `--cohort off` runs).
+    let mut solo_bs: Vec<Mat64> = bs.clone();
+    let mut s = FusedScratch::new(n, m);
+    let solo = bench(warmup, runs, iters, || {
+        for l in 0..lanes {
+            solo_bs[l].copy_from(&bs[l]);
+            for t in 0..chunk {
+                fused::relative_gradient_step_into(
+                    &mut solo_bs[l],
+                    black_box(chunks[l].row(t)),
+                    |v| v * v * v,
+                    mus[l],
+                    &mut s,
+                );
+            }
+        }
+        black_box(&solo_bs);
+    });
+    push(rep, "cohort step solo", "cohort_step_solo", m, n, runs, &solo);
+
+    rep.derived.push((
+        "cohort_over_solo_speedup".to_string(),
+        solo.per_iter_ns() / step.per_iter_ns(),
+    ));
+}
+
 fn push(
     rep: &mut BenchReport,
     what: &str,
@@ -937,7 +1015,10 @@ pub struct GateReport {
 /// `tolerance` (e.g. 0.30 = 30%), or if it vanished from the current
 /// suite. If `min_fused_speedup > 0`, the `fused_step_speedup_m8_n8`
 /// derived value must also meet that floor; if `min_f32_speedup > 0`,
-/// `f32_over_f64_step_speedup` (the m=16, n=8 canonical shape) must too.
+/// `f32_over_f64_step_speedup` (the m=16, n=8 canonical shape) must too;
+/// if `min_cohort_speedup > 0`, `cohort_over_solo_speedup` (tenant-major
+/// cohort step vs the same work as independent per-session fused steps,
+/// 64 lanes at m=8, n=4) must too.
 /// If `max_adapt_overhead > 0`, the derived `adapt_overhead_fraction`
 /// (the control plane's cost on the fused step, machine-invariant like
 /// the speedup ratios) must stay at or below that ceiling; likewise
@@ -949,6 +1030,7 @@ pub fn check_against_baseline(
     tolerance: f64,
     min_fused_speedup: f64,
     min_f32_speedup: f64,
+    min_cohort_speedup: f64,
     max_adapt_overhead: f64,
     max_status_overhead: f64,
 ) -> Result<GateReport> {
@@ -1008,6 +1090,7 @@ pub fn check_against_baseline(
     };
     floor("fused_step_speedup_m8_n8", min_fused_speedup);
     floor("f32_over_f64_step_speedup", min_f32_speedup);
+    floor("cohort_over_solo_speedup", min_cohort_speedup);
     let mut ceiling = |key: &str, max: f64| {
         if max <= 0.0 {
             return;
@@ -1030,6 +1113,7 @@ pub fn gate_against_file(
     tolerance: f64,
     min_fused_speedup: f64,
     min_f32_speedup: f64,
+    min_cohort_speedup: f64,
     max_adapt_overhead: f64,
     max_status_overhead: f64,
 ) -> Result<GateReport> {
@@ -1043,6 +1127,7 @@ pub fn gate_against_file(
         tolerance,
         min_fused_speedup,
         min_f32_speedup,
+        min_cohort_speedup,
         max_adapt_overhead,
         max_status_overhead,
     )
@@ -1085,6 +1170,7 @@ mod tests {
             derived: vec![
                 ("fused_step_speedup_m8_n8".to_string(), 2.0),
                 ("f32_over_f64_step_speedup".to_string(), 1.6),
+                ("cohort_over_solo_speedup".to_string(), 1.8),
                 ("adapt_overhead_fraction".to_string(), 0.05),
                 ("status_overhead_fraction".to_string(), 0.01),
             ],
@@ -1139,7 +1225,7 @@ mod tests {
     fn gate_passes_identical_report() {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 1.5, 1.5, 0.10, 0.05).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 1.5, 1.5, 1.5, 0.10, 0.05).unwrap();
         assert_eq!(gate.checked, 1, "only the gated record is compared");
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
@@ -1154,7 +1240,7 @@ mod tests {
         for r in &mut slower.records {
             r.ns_per_iter *= 3.0;
         }
-        let gate = check_against_baseline(&slower, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&slower, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 
@@ -1165,13 +1251,13 @@ mod tests {
 
         let mut regressed = rep.clone();
         regressed.records[0].ns_per_iter *= 1.5; // 50% > 30% tolerance
-        let gate = check_against_baseline(&regressed, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&regressed, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("regressed"));
 
         let mut missing = rep.clone();
         missing.records.remove(0);
-        let gate = check_against_baseline(&missing, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&missing, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1180,7 +1266,7 @@ mod tests {
     fn gate_enforces_fused_speedup_floor() {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 2.5, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 2.5, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("fused_step_speedup"));
     }
@@ -1192,16 +1278,16 @@ mod tests {
         // missing the derived value fails when the ceiling is requested.
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.10, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.10, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.01, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.01, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("adapt_overhead_fraction"));
         let mut bare = rep.clone();
         bare.derived.retain(|(k, _)| k != "adapt_overhead_fraction");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.10, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.10, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1213,17 +1299,17 @@ mod tests {
         // a report missing the derived value fails when requested.
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.05).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.05).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
         let gate =
-            check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.001).unwrap();
+            check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.001).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("status_overhead_fraction"));
         let mut bare = rep.clone();
         bare.derived.retain(|(k, _)| k != "status_overhead_fraction");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.05).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.05).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1235,7 +1321,7 @@ mod tests {
         let baseline = Json::parse(&rep.to_json()).unwrap();
         let mut noisy = rep.clone();
         noisy.records[1].ns_per_iter *= 100.0;
-        let gate = check_against_baseline(&noisy, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&noisy, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty());
     }
 
@@ -1258,6 +1344,7 @@ mod tests {
             derived: vec![
                 ("fused_step_speedup_m8_n8".to_string(), 2.0),
                 ("f32_over_f64_step_speedup".to_string(), 1.6),
+                ("cohort_over_solo_speedup".to_string(), 1.8),
                 ("adapt_overhead_fraction".to_string(), 0.05),
                 ("status_overhead_fraction".to_string(), 0.01),
             ],
@@ -1265,6 +1352,7 @@ mod tests {
         let mut f32_gated = 0usize;
         let mut adapt_gated = 0usize;
         let mut lifecycle_gated = 0usize;
+        let mut cohort_gated = 0usize;
         for rec in baseline.get("records").and_then(Json::as_array).unwrap() {
             let gated = rec.get("gated").and_then(Json::as_bool).unwrap();
             let kernel = rec.get("kernel").and_then(Json::as_str).unwrap().to_string();
@@ -1291,6 +1379,9 @@ mod tests {
             if gated && kernel.starts_with("hub_") {
                 lifecycle_gated += 1;
             }
+            if gated && kernel.starts_with("cohort_") {
+                cohort_gated += 1;
+            }
             current.records.push(BenchRecord {
                 name: rec.get("name").and_then(Json::as_str).unwrap().to_string(),
                 kernel,
@@ -1313,8 +1404,23 @@ mod tests {
         // …and the serving plane's lifecycle records (admission path,
         // status-publish kernel, reference + observed fused step).
         assert!(lifecycle_gated >= 4, "only {lifecycle_gated} gated lifecycle records");
-        let gate = check_against_baseline(&current, &baseline, 0.30, 1.5, 1.2, 0.10, 0.05).unwrap();
+        // …and the tenant-major cohort records (gradient, full step,
+        // per-session solo reference).
+        assert!(cohort_gated >= 3, "only {cohort_gated} gated cohort records");
+        let gate = check_against_baseline(&current, &baseline, 0.30, 1.5, 1.2, 1.2, 0.10, 0.05).unwrap();
         assert!(gate.checked > 0);
+        assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+    }
+
+    #[test]
+    fn gate_enforces_cohort_speedup_floor() {
+        let rep = tiny_report();
+        let baseline = Json::parse(&rep.to_json()).unwrap();
+        // tiny_report carries cohort_over_solo_speedup = 1.8.
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 2.5, 0.0, 0.0).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("cohort_over_solo_speedup"));
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 1.2, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 
@@ -1323,10 +1429,10 @@ mod tests {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
         // tiny_report carries f32_over_f64_step_speedup = 1.6.
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 2.5, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 2.5, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("f32_over_f64_step_speedup"));
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 1.2, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 1.2, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 }

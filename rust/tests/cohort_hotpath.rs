@@ -1,0 +1,245 @@
+//! The tenant-major cohort kernel's two contracts, pinned from outside
+//! the crate:
+//!
+//! 1. **Bit-exactness** — a `CohortState` stepping K same-shape lanes is
+//!    bit-identical, per lane, to K independent `EasiSgd` optimizers over
+//!    1k-step runs, for every `Nonlinearity` and at both precisions. The
+//!    state round-trips through the `f64` wire format (`load_lane` /
+//!    `store_lane`) every pump, exactly as the worker's cohort executor
+//!    does, so the pin covers the production reload path, not just the
+//!    kernel. This holds on the default build *and* under
+//!    `--features fma` (the cohort kernel replicates the per-session
+//!    contraction pattern per lane), so no `cfg` gating here.
+//! 2. **Zero steady-state allocation** — once the workspace has seen its
+//!    widest cohort, begin/load/step/store cycles never touch the heap.
+//!
+//! Together these make cohort execution a pure scheduling change: which
+//! tenant's chunk runs when, never any tenant's trajectory.
+
+use easi_ica::ica::{EasiSgd, Nonlinearity, Optimizer};
+use easi_ica::linalg::{CohortState, Mat32, Mat64};
+use easi_ica::signal::Pcg32;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+// ---------------------------------------------------------------------------
+// Counting allocator (thread-local counts; the allocator itself must not
+// allocate, hence `const`-initialized TLS and `try_with` for teardown).
+// ---------------------------------------------------------------------------
+
+struct CountingAllocator;
+
+thread_local! {
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+fn bump() {
+    let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAllocator = CountingAllocator;
+
+/// Heap allocations performed by `f` on this thread.
+fn allocations_in(f: impl FnOnce()) -> u64 {
+    let before = ALLOC_COUNT.with(|c| c.get());
+    f();
+    ALLOC_COUNT.with(|c| c.get()) - before
+}
+
+// ---------------------------------------------------------------------------
+// Shared helpers.
+// ---------------------------------------------------------------------------
+
+const ALL_G: [Nonlinearity; 3] =
+    [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare];
+
+fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat64 {
+    Mat64::from_fn(r, c, |_, _| rng.normal() * 0.3)
+}
+
+/// Dispatch `g` to the exact closures the crate's `with_g!` macro binds —
+/// the nonlinearity must be the same *function*, not just the same math,
+/// for the bitwise pins to mean anything.
+fn step_chunks_with(c: &mut CohortState<f64>, g: Nonlinearity, chunks: &[Mat64]) {
+    match g {
+        Nonlinearity::Cube => c.step_chunks(|v: f64| v * v * v, chunks),
+        Nonlinearity::Tanh => c.step_chunks(|v: f64| v.tanh(), chunks),
+        Nonlinearity::SignedSquare => c.step_chunks(|v: f64| v * v.abs(), chunks),
+    }
+}
+
+fn assert_bits_equal(a: &Mat64, b: &Mat64, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs bitwise: {x:e} vs {y:e}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1k-step bit-identity vs independent per-session optimizers.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cohort_bit_identical_to_independent_sgd_1k_steps_every_nonlinearity() {
+    for g in ALL_G {
+        let mut rng = Pcg32::seed(0xC0_1D + g as u64);
+        let (n, m, lanes) = (2usize, 4usize, 5usize);
+        let b0s: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, n, m)).collect();
+        // Distinct per-lane learning rates, like a fleet under the
+        // adaptive governor.
+        let mus: Vec<f64> = (0..lanes).map(|l| 0.001 + 0.0005 * l as f64).collect();
+
+        let mut solos: Vec<EasiSgd> = b0s
+            .iter()
+            .zip(&mus)
+            .map(|(b0, &mu)| EasiSgd::new(b0.clone(), mu, g))
+            .collect();
+        let mut bs = b0s;
+        let mut cohort = CohortState::<f64>::new(n, m);
+        let mut out = Mat64::zeros(n, m);
+
+        // 125 pumps × 8 rows = 1000 steps per lane, with a full
+        // load/store wire round trip every pump (the executor's reload).
+        for pump in 0..125 {
+            let chunks: Vec<Mat64> =
+                (0..lanes).map(|_| rand_mat(&mut rng, 8, m)).collect();
+            cohort.begin(lanes);
+            for (l, (b, &mu)) in bs.iter().zip(&mus).enumerate() {
+                cohort.load_lane(l, b, mu);
+            }
+            step_chunks_with(&mut cohort, g, &chunks);
+            for (l, b) in bs.iter_mut().enumerate() {
+                cohort.store_lane(l, &mut out);
+                b.copy_from(&out);
+            }
+            for (l, solo) in solos.iter_mut().enumerate() {
+                for t in 0..chunks[l].rows() {
+                    solo.step(chunks[l].row(t));
+                }
+                assert_bits_equal(
+                    solo.b(),
+                    &bs[l],
+                    &format!("{g:?} lane {l} pump {pump}"),
+                );
+            }
+        }
+        for (l, solo) in solos.iter().enumerate() {
+            assert!(solo.b().is_finite(), "{g:?} lane {l}: trajectory must stay finite");
+        }
+    }
+}
+
+#[test]
+fn f32_cohort_bit_identical_to_independent_f32_sgd() {
+    // The single-precision instantiation against K independent
+    // `EasiSgd::<f32>` optimizers on the same narrowed inputs: the cohort
+    // gather narrows the f64 wire chunks per element exactly like the
+    // per-session cast path, so the bits must agree on the active build.
+    let mut rng = Pcg32::seed(0xF32C);
+    let (n, m, lanes) = (3usize, 5usize, 4usize);
+    // f32-representable starting points so the wire round trip is exact.
+    let b0s: Vec<Mat64> =
+        (0..lanes).map(|_| rand_mat(&mut rng, n, m).cast::<f32>().cast::<f64>()).collect();
+    let mus: Vec<f64> = (0..lanes).map(|l| 0.002 + 0.001 * l as f64).collect();
+
+    let mut solos: Vec<EasiSgd<f32>> = b0s
+        .iter()
+        .zip(&mus)
+        .map(|(b0, &mu)| EasiSgd::<f32>::new(b0.cast(), mu, Nonlinearity::Cube))
+        .collect();
+    let mut bs = b0s;
+    let mut cohort = CohortState::<f32>::new(n, m);
+    let mut out = Mat64::zeros(n, m);
+
+    for pump in 0..50 {
+        let chunks: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, 8, m)).collect();
+        cohort.begin(lanes);
+        for (l, (b, &mu)) in bs.iter().zip(&mus).enumerate() {
+            cohort.load_lane(l, b, mu);
+        }
+        cohort.step_chunks(|v: f32| v * v * v, &chunks);
+        for (l, b) in bs.iter_mut().enumerate() {
+            cohort.store_lane(l, &mut out);
+            b.copy_from(&out);
+        }
+        for (l, solo) in solos.iter_mut().enumerate() {
+            let c32: Mat32 = chunks[l].cast();
+            for t in 0..c32.rows() {
+                solo.step(c32.row(t));
+            }
+            let got: Mat32 = bs[l].cast();
+            for (i, (a, b)) in
+                solo.b().as_slice().iter().zip(got.as_slice()).enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "f32 lane {l} pump {pump} element {i}: {a:e} vs {b:e}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero-allocation steady state.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cohort_steady_state_pump_does_not_allocate() {
+    let mut rng = Pcg32::seed(0xA110C);
+    let (n, m, lanes) = (4usize, 8usize, 16usize);
+    let bs: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, n, m)).collect();
+    let mus: Vec<f64> = (0..lanes).map(|l| 0.001 + 0.0001 * l as f64).collect();
+    let chunks: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, 64, m)).collect();
+    let mut out = Mat64::zeros(n, m);
+
+    let mut cohort = CohortState::<f64>::new(n, m);
+    // Warm: one pump at the full width grows every buffer.
+    cohort.begin(lanes);
+    for (l, (b, &mu)) in bs.iter().zip(&mus).enumerate() {
+        cohort.load_lane(l, b, mu);
+    }
+    cohort.step_chunks(|v: f64| v * v * v, &chunks);
+
+    let allocs = allocations_in(|| {
+        // Steady state: repeated full pumps, including a narrower cohort
+        // (lane departure) and the regrowth back to full width — all
+        // within the warmed capacity.
+        for width in [lanes, lanes, lanes - 3, lanes, lanes] {
+            cohort.begin(width);
+            for l in 0..width {
+                cohort.load_lane(l, &bs[l], mus[l]);
+            }
+            cohort.step_chunks(|v: f64| v * v * v, &chunks[..width]);
+            for l in 0..width {
+                cohort.store_lane(l, &mut out);
+            }
+        }
+        std::hint::black_box(&out);
+    });
+    assert_eq!(allocs, 0, "cohort steady-state pump allocated on the hot path");
+}

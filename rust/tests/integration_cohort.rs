@@ -1,0 +1,232 @@
+//! Integration pins for tenant-major cohort execution on the worker hot
+//! loop (batch hub and elastic runtime), plus the ingest-accounting seam
+//! it sits on.
+//!
+//! Properties pinned here:
+//! - **Transparency**: a static same-shape fleet run with `cohort: true`
+//!   is identical — every deterministic `RunSummary` field — to the same
+//!   fleet with `cohort: false`, and both match the single-stream server.
+//!   Cohort stepping changes *which tenant's chunk runs when*, never any
+//!   tenant's trajectory.
+//! - **Churn-safety**: a tenant attaching into a live cohort mid-stream,
+//!   and a tenant parked out of a cohort and re-attached on the *other*
+//!   shard, both finish bit-identical to their solo runs — and so do the
+//!   cohort peers they joined or left.
+//! - **Accounting**: an early departure truncating its stream mid-chunk
+//!   loses no samples to the seam — the chunker's pending residue is
+//!   counted as `tail_dropped`, so `samples + tail_dropped` equals the
+//!   departure point exactly.
+
+use easi_ica::config::{ExperimentConfig, HubScenario, OptimizerKind};
+use easi_ica::coordinator::{
+    make_engine, run_hub, run_scenario, run_streaming, ElasticHub, HubOptions, RunSummary,
+    ServerOptions, StateStore,
+};
+use easi_ica::ica::Nonlinearity;
+use std::time::{Duration, Instant};
+
+/// A cohort-eligible session config: plain (non-normalized) EASI-SGD is
+/// the form the tenant-major kernel implements, so the optimizer kind is
+/// pinned to `Sgd` here (SMBGD tenants fall back to the per-session path).
+fn cfg(seed: u64, mixing: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.samples = 12_000;
+    cfg.seed = seed;
+    cfg.optimizer.kind = OptimizerKind::Sgd;
+    cfg.optimizer.mu = 0.004;
+    cfg.signal.mixing = mixing.into();
+    cfg.name = format!("co{seed}-{mixing}");
+    cfg
+}
+
+/// Full summary from the single-stream server (the reference path).
+fn solo_summary(cfg: &ExperimentConfig) -> RunSummary {
+    let engine = make_engine(cfg, Nonlinearity::Cube).expect("engine");
+    let state = StateStore::new(easi_ica::ica::init_b(cfg.n, cfg.m));
+    run_streaming(cfg, engine, ServerOptions::default(), &state).expect("solo run")
+}
+
+/// Assert every deterministic `RunSummary` field matches (everything but
+/// the wall-clock timing fields, which can never be byte-identical).
+fn assert_summaries_identical(a: &RunSummary, b: &RunSummary, ctx: &str) {
+    assert_eq!(a.b, b.b, "{ctx}: separation matrix");
+    assert_eq!(a.samples, b.samples, "{ctx}: samples");
+    assert_eq!(a.tail_dropped, b.tail_dropped, "{ctx}: tail_dropped");
+    assert_eq!(a.engine, b.engine, "{ctx}: engine");
+    assert_eq!(
+        a.final_amari.to_bits(),
+        b.final_amari.to_bits(),
+        "{ctx}: final_amari {} vs {}",
+        a.final_amari,
+        b.final_amari
+    );
+    assert_eq!(a.converged_at, b.converged_at, "{ctx}: converged_at");
+    assert_eq!(a.resets, b.resets, "{ctx}: resets");
+    assert_eq!(a.drift_events, b.drift_events, "{ctx}: drift_events");
+    assert_eq!(a.rollbacks, b.rollbacks, "{ctx}: rollbacks");
+    assert_eq!(a.amari_history, b.amari_history, "{ctx}: amari trajectory");
+}
+
+#[test]
+fn cohort_on_and_off_are_identical_for_a_static_same_shape_fleet() {
+    // Six same-shape tenants on two shards: three f64 per shard would
+    // cohort as one pool each; two of the six run single-precision and
+    // form their own pool (the shape key includes the precision). Both
+    // hub runs must agree with each other and with the solo server on
+    // every deterministic field.
+    let mut cfgs = vec![
+        cfg(30, "static"),
+        cfg(31, "rotating"),
+        cfg(32, "switching"),
+        cfg(33, "static"),
+        cfg(34, "rotating"),
+        cfg(35, "static"),
+    ];
+    cfgs[4].precision = easi_ica::config::Precision::F32;
+    cfgs[5].precision = easi_ica::config::Precision::F32;
+
+    let on = run_hub(
+        cfgs.clone(),
+        Nonlinearity::Cube,
+        HubOptions { shards: 2, cohort: true, ..Default::default() },
+    )
+    .expect("cohort hub run");
+    let off = run_hub(
+        cfgs.clone(),
+        Nonlinearity::Cube,
+        HubOptions { shards: 2, cohort: false, ..Default::default() },
+    )
+    .expect("per-session hub run");
+
+    assert_eq!(on.sessions.len(), cfgs.len());
+    assert_eq!(off.sessions.len(), cfgs.len());
+    for (i, (a, b)) in on.sessions.iter().zip(&off.sessions).enumerate() {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.shard, b.shard, "session {i}: cohort must not change placement");
+        assert_summaries_identical(&a.summary, &b.summary, &format!("session {i} on-vs-off"));
+        assert_summaries_identical(
+            &a.summary,
+            &solo_summary(&cfgs[i]),
+            &format!("session {i} vs solo"),
+        );
+    }
+}
+
+#[test]
+fn attaching_into_a_live_cohort_mid_stream_stays_bit_identical() {
+    // Two same-shape tenants stream as a 2-lane cohort on one shard; a
+    // third same-shape tenant joins mid-stream and widens the pool to 3.
+    // All three must finish bit-identical to their solo runs.
+    let early = [cfg(40, "static"), cfg(41, "rotating")];
+    let late = cfg(42, "switching");
+
+    let opts = HubOptions { shards: 1, ..Default::default() };
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).expect("hub starts");
+    let metrics = hub.metrics();
+    let h0 = hub.attach(early[0].clone()).expect("attach 0");
+    let h1 = hub.attach(early[1].clone()).expect("attach 1");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while metrics.samples_ingested() < 4_000 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let h2 = hub.attach(late.clone()).expect("attach mid-stream");
+    assert_eq!((h0.id(), h1.id(), h2.id()), (0, 1, 2));
+    let sum = hub.finish().expect("drain");
+
+    assert_eq!(sum.sessions.len(), 3);
+    for (i, want_cfg) in early.iter().enumerate() {
+        assert_summaries_identical(
+            &sum.sessions[i].summary,
+            &solo_summary(want_cfg),
+            &format!("cohort peer {i}"),
+        );
+    }
+    assert_summaries_identical(&sum.sessions[2].summary, &solo_summary(&late), "late joiner");
+}
+
+#[test]
+fn parking_out_of_a_cohort_and_reattaching_elsewhere_stays_bit_identical() {
+    // Four same-shape tenants across two shards (cohorts of two). One is
+    // parked mid-stream — extracted from its pool back into the
+    // self-contained runner — and re-attached on the *other* shard, where
+    // it joins (or forms) a cohort again. The migrant and every peer it
+    // left or joined must match their solo runs bit-for-bit.
+    let mut cfgs =
+        [cfg(50, "static"), cfg(51, "rotating"), cfg(52, "switching"), cfg(53, "static")];
+    cfgs[2].samples = 30_000; // the migrant: long enough to park mid-stream
+
+    let opts = HubOptions { shards: 2, ..Default::default() };
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).expect("hub starts");
+    let handles: Vec<_> =
+        cfgs.iter().map(|c| hub.attach(c.clone()).expect("attach")).collect();
+
+    let migrant = &handles[2];
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while migrant.checkpoint().samples < 3_000 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let from = migrant.status().shard;
+    hub.detach(migrant.id()).expect("park out of the cohort");
+    let parked_at = migrant.checkpoint().samples;
+    assert!(parked_at > 0, "parked before any progress");
+    hub.reattach_to(migrant.id(), 1 - from).expect("reattach on the other shard");
+    assert_eq!(migrant.status().shard, 1 - from);
+
+    let sum = hub.finish().expect("drain");
+    assert_eq!(sum.sessions.len(), 4);
+    for (i, c) in cfgs.iter().enumerate() {
+        assert_summaries_identical(
+            &sum.sessions[i].summary,
+            &solo_summary(c),
+            &format!("session {i}"),
+        );
+    }
+    assert!(
+        sum.sessions[2].summary.samples > parked_at,
+        "migrant must have continued past the park point"
+    );
+}
+
+#[test]
+fn mid_chunk_departure_accounts_for_every_ingested_sample() {
+    // The ingest-accounting seam under cohort execution: departures at
+    // 3_037 samples truncate mid-chunk (not a multiple of the engine
+    // chunk), so the chunker is left holding a partial residue at stream
+    // end. That residue must surface as `tail_dropped` — the books
+    // balance to the departure point exactly, for departing tenants and
+    // stayers alike.
+    let sc = HubScenario::from_toml(
+        r#"
+        samples = 6000
+        [optimizer]
+        kind = "sgd"
+        mu = 0.004
+        [hub]
+        sessions = 4
+        shards = 2
+        depart_at = [0, 3037]
+        "#,
+    )
+    .expect("scenario parses");
+    assert!(sc.has_churn());
+    let sum = run_scenario(&sc, Nonlinearity::Cube).expect("churn run");
+    assert_eq!(sum.sessions.len(), 4);
+    for r in &sum.sessions {
+        let s = &r.summary;
+        if r.id % 2 == 1 {
+            assert_eq!(
+                s.samples + s.tail_dropped,
+                3_037,
+                "departing session {}: every truncated sample accounted",
+                r.id
+            );
+            assert!(
+                s.tail_dropped > 0,
+                "session {}: a mid-chunk departure must leave chunker residue",
+                r.id
+            );
+        } else {
+            assert_eq!(s.samples + s.tail_dropped, 6_000, "stayer {}", r.id);
+        }
+    }
+}
