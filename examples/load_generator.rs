@@ -22,17 +22,70 @@
 //!    parked one (least-loaded placement picks its new shard), and
 //!    pausing/resuming — the serving plane's attach/detach API under a
 //!    random (but reproducible) schedule.
+//! 3. **Restart drill** — the network service under fire: a `serve-many
+//!    --listen` server process is spawned, thousands of short tenants
+//!    churn through its framed-TCP command plane while long-lived
+//!    survivors stream, the survivors are detached **to disk**, the
+//!    server process is killed outright, a fresh server on the same state
+//!    directory restores them, and their final separators are compared
+//!    bit-for-bit against uninterrupted local runs. Nonzero exit on any
+//!    divergence — CI's serve-smoke job runs this phase scaled down.
+//!
+//! Environment knobs: `LOADGEN_PHASES` selects phases (default "123"),
+//! `LOADGEN_TENANTS` the restart drill's churn count (default 10000),
+//! `LOADGEN_SURVIVORS` its survivor count (default 24), `EASI_SERVE_BIN`
+//! an `easi-ica` binary to serve with (default: this example re-execs
+//! itself as the server).
 
 use easi_ica::config::{ExperimentConfig, HubScenario, OptimizerKind};
-use easi_ica::coordinator::{ElasticHub, HubOptions, SessionPhase};
+use easi_ica::coordinator::{
+    serve_hub, AutoscaleOptions, ElasticHub, HubOptions, NetClient, SessionPhase,
+};
 use easi_ica::ica::Nonlinearity;
 use easi_ica::signal::Pcg32;
 use std::thread;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
-    scenario_fleet()?;
-    poisson_churn()
+    // Server mode: phase 3 re-execs this example as the hub process when
+    // no EASI_SERVE_BIN is provided.
+    let mut argv = std::env::args().skip(1);
+    if argv.next().as_deref() == Some("serve-child") {
+        let dir = argv.next().expect("serve-child needs a state directory");
+        return serve_child(&dir);
+    }
+    let phases = std::env::var("LOADGEN_PHASES").unwrap_or_else(|_| "123".to_string());
+    if phases.contains('1') {
+        scenario_fleet()?;
+    }
+    if phases.contains('2') {
+        poisson_churn()?;
+    }
+    if phases.contains('3') {
+        restart_drill()?;
+    }
+    Ok(())
+}
+
+fn env_num(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The hub server the restart drill talks to (in-process stand-in for
+/// `easi-ica serve-many --listen`): two shards, queue-pressure
+/// autoscaling up to four, durability under `dir`.
+fn serve_child(dir: &str) -> anyhow::Result<()> {
+    let opts = HubOptions {
+        shards: 2,
+        state_dir: Some(std::path::PathBuf::from(dir)),
+        autoscale: AutoscaleOptions { enabled: true, max_shards: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let hub = ElasticHub::start(Nonlinearity::Cube, opts)?;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let summary = serve_hub(hub, listener)?;
+    print!("{}", summary.render_table());
+    Ok(())
 }
 
 /// Phase 1: the scenario-driven fleet (config-file surface).
@@ -254,6 +307,187 @@ fn poisson_churn() -> anyhow::Result<()> {
          the survivors' math untouched (pinned by rust/tests/integration_hub.rs)",
         summary.sessions.len(),
         summary.shards
+    );
+    Ok(())
+}
+
+/// Phase 3: the kill/restart durability drill over the framed-TCP front.
+fn restart_drill() -> anyhow::Result<()> {
+    use std::io::BufRead;
+    use std::process::{Child, Command, Stdio};
+
+    let survivors = env_num("LOADGEN_SURVIVORS", 24);
+    let tenants = env_num("LOADGEN_TENANTS", 10_000);
+    println!(
+        "\n=== restart drill: {tenants} churn tenants + {survivors} survivors \
+         across a process kill/restart ==="
+    );
+
+    let state_dir = std::env::temp_dir().join(format!("easi-loadgen-{}", std::process::id()));
+    std::fs::create_dir_all(&state_dir)?;
+
+    // Spawn a hub server process and parse its `LISTENING <addr>` line.
+    // `EASI_SERVE_BIN` points at an `easi-ica` binary (CI passes the
+    // release build to exercise the real CLI); without it this example
+    // re-execs itself in `serve-child` mode.
+    let spawn_server = |dir: &std::path::Path| -> anyhow::Result<(Child, String)> {
+        let mut child = match std::env::var("EASI_SERVE_BIN") {
+            Ok(bin) => Command::new(bin)
+                .args([
+                    "serve-many",
+                    "--listen",
+                    "127.0.0.1:0",
+                    "--sessions",
+                    "0",
+                    "--shards",
+                    "2",
+                    "--autoscale-max",
+                    "4",
+                    "--state-dir",
+                ])
+                .arg(dir)
+                .stdout(Stdio::piped())
+                .spawn()?,
+            Err(_) => Command::new(std::env::current_exe()?)
+                .arg("serve-child")
+                .arg(dir)
+                .stdout(Stdio::piped())
+                .spawn()?,
+        };
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut lines = std::io::BufReader::new(stdout);
+        let addr = loop {
+            let mut line = String::new();
+            if lines.read_line(&mut line)? == 0 {
+                anyhow::bail!("hub server exited before printing LISTENING");
+            }
+            if let Some(a) = line.trim().strip_prefix("LISTENING ") {
+                break a.to_string();
+            }
+        };
+        // Keep draining the child's stdout so its shutdown summary can
+        // never fill the pipe and wedge the process.
+        let mut rest = lines.into_inner();
+        thread::spawn(move || {
+            std::io::copy(&mut rest, &mut std::io::sink()).ok();
+        });
+        Ok((child, addr))
+    };
+
+    let (mut server_a, addr) = spawn_server(&state_dir)?;
+    let mut c = NetClient::connect(&addr)?;
+
+    // Long-lived survivors: the tenants that will cross the process
+    // boundary mid-stream. Half run the adaptive control plane; sample
+    // counts divide the mini-batch so the final checkpoint lands exactly
+    // on the stream end.
+    let mut survivor_cfgs = Vec::new();
+    let mut survivor_ids = Vec::new();
+    for i in 0..survivors {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("survivor-{i}");
+        cfg.m = 4;
+        cfg.n = 2;
+        cfg.samples = 40_000;
+        cfg.seed = 9_000 + i as u64;
+        cfg.optimizer.mu = 0.004;
+        cfg.optimizer.p = 8;
+        cfg.adapt.enabled = i % 2 == 0;
+        cfg.signal.mixing = ["static", "rotating"][i % 2].to_string();
+        survivor_ids.push(c.attach(&cfg)?);
+        survivor_cfgs.push(cfg);
+    }
+
+    // Churn: thousands of short cohort-eligible tenants through the wire
+    // while the survivors stream. Pacing on the ingest/consume gap keeps
+    // the backlog (and the producer-thread population) bounded.
+    let mut churn_cfg = ExperimentConfig::default();
+    churn_cfg.m = 4;
+    churn_cfg.n = 2;
+    churn_cfg.samples = 400;
+    churn_cfg.optimizer.kind = OptimizerKind::Sgd;
+    churn_cfg.optimizer.mu = 0.004;
+    churn_cfg.optimizer.p = 8;
+    for i in 0..tenants {
+        let mut cfg = churn_cfg.clone();
+        cfg.name = format!("churn3-{i}");
+        cfg.seed = 50_000 + i as u64;
+        c.attach(&cfg)?;
+        if i % 128 == 127 {
+            loop {
+                let st = c.stats()?;
+                if st.samples_ingested.saturating_sub(st.samples_consumed) < 200_000 {
+                    break;
+                }
+                thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+    let st = c.stats()?;
+    println!(
+        "  server A: {} tenants admitted, {} samples ingested, {} live shard(s) \
+         (autoscale +{}/-{})",
+        st.tenants, st.samples_ingested, st.live_shards, st.spawns, st.retires
+    );
+
+    // Detach every survivor to disk, then kill the process outright — the
+    // snapshots are all that survives.
+    let mut paths = Vec::new();
+    for &id in &survivor_ids {
+        paths.push(c.detach_to_disk(id)?);
+    }
+    drop(c);
+    server_a.kill().ok();
+    server_a.wait().ok();
+    println!("  server A killed; {} snapshots under {}", paths.len(), state_dir.display());
+
+    // A fresh server on the same state directory restores the survivors
+    // and drains them to completion.
+    let (mut server_b, addr) = spawn_server(&state_dir)?;
+    let mut c = NetClient::connect(&addr)?;
+    for (i, path) in paths.iter().enumerate() {
+        let id = c.restore_from_disk(path)?;
+        anyhow::ensure!(
+            id == survivor_ids[i],
+            "restore returned id {id} for survivor {} (expected {})",
+            i,
+            survivor_ids[i]
+        );
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(600);
+    for (i, &id) in survivor_ids.iter().enumerate() {
+        while c.checkpoint(id)?.samples < survivor_cfgs[i].samples as u64 {
+            anyhow::ensure!(
+                std::time::Instant::now() < deadline,
+                "survivor {id} did not drain before the deadline"
+            );
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    // The verdict: each survivor's final separator must be bit-identical
+    // to an uninterrupted local run of the same config.
+    let mut diverged = 0;
+    for (i, &id) in survivor_ids.iter().enumerate() {
+        let over_the_wire = c.checkpoint(id)?;
+        let mut local = ElasticHub::start(
+            Nonlinearity::Cube,
+            HubOptions { shards: 1, ..Default::default() },
+        )?;
+        local.attach(survivor_cfgs[i].clone())?;
+        let want = local.finish()?;
+        if want.sessions[0].summary.b.as_slice() != over_the_wire.b.as_slice() {
+            eprintln!("  DIVERGED: {} (session {id})", survivor_cfgs[i].name);
+            diverged += 1;
+        }
+    }
+    c.shutdown()?;
+    server_b.wait().ok();
+    std::fs::remove_dir_all(&state_dir).ok();
+    anyhow::ensure!(diverged == 0, "{diverged} survivor(s) diverged across the restart");
+    println!(
+        "  all {survivors} survivors bit-identical across the kill/restart; \
+         restart drill passed"
     );
     Ok(())
 }

@@ -178,6 +178,31 @@ impl DriftDetector {
         self.armed = false;
         self.ph.reset();
     }
+
+    /// Serialize the detection state (detach-to-disk; the params and the
+    /// δ/λ thresholds inside the Page–Hinkley test are config-derived at
+    /// rebuild time).
+    pub fn save_state(&self, w: &mut crate::snapshot::SnapWriter) {
+        w.put_u64(self.ph.count);
+        w.put_f64(self.ph.mean);
+        w.put_f64(self.ph.m);
+        w.put_f64(self.ph.m_min);
+        w.put_bool(self.armed);
+        w.put_bool(self.seen_high);
+        w.put_f64(self.last_stat);
+    }
+
+    /// Rehydrate the state written by [`save_state`](Self::save_state).
+    pub fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> anyhow::Result<()> {
+        self.ph.count = r.get_u64()?;
+        self.ph.mean = r.get_f64()?;
+        self.ph.m = r.get_f64()?;
+        self.ph.m_min = r.get_f64()?;
+        self.armed = r.get_bool()?;
+        self.seen_high = r.get_bool()?;
+        self.last_stat = r.get_f64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -117,6 +117,20 @@ impl Governor {
     pub fn boosted_at(&self) -> Option<u64> {
         self.boosted_at
     }
+
+    /// Serialize the control state (detach-to-disk; the params are
+    /// config-derived at rebuild time).
+    pub fn save_state(&self, w: &mut crate::snapshot::SnapWriter) {
+        w.put_opt_u64(self.boosted_at);
+        w.put_u64(self.boosts);
+    }
+
+    /// Rehydrate the state written by [`save_state`](Self::save_state).
+    pub fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> anyhow::Result<()> {
+        self.boosted_at = r.get_opt_u64()?;
+        self.boosts = r.get_u64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

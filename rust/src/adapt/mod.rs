@@ -231,6 +231,52 @@ impl AdaptiveController {
     pub fn last_stat(&self) -> f64 {
         self.detector.last_stat()
     }
+
+    /// Serialize the full closed-loop state (detach-to-disk): tracker,
+    /// detector, governor, stride phase, recovery checkpoint, and event
+    /// counters. The `y` scratch is transient and is not persisted; the
+    /// config-derived knobs (stride, alpha, thresholds, governor params)
+    /// come back from the session config at rebuild time.
+    pub fn save_state(&self, w: &mut crate::snapshot::SnapWriter) {
+        self.tracker.save_state(w);
+        self.detector.save_state(w);
+        self.governor.save_state(w);
+        w.put_usize(self.phase);
+        w.put_mat64(&self.checkpoint);
+        w.put_bool(self.checkpoint_valid);
+        w.put_u64(self.drift_events);
+        w.put_u64(self.abrupt_events);
+        w.put_u64(self.rollbacks);
+        w.put_opt_u64(self.last_drift_at);
+    }
+
+    /// Rehydrate the state written by [`save_state`](Self::save_state).
+    pub fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> anyhow::Result<()> {
+        self.tracker.load_state(r)?;
+        self.detector.load_state(r)?;
+        self.governor.load_state(r)?;
+        self.phase = r.get_usize()?;
+        anyhow::ensure!(
+            self.phase < self.stride,
+            "snapshot stride phase {} is outside stride {}",
+            self.phase,
+            self.stride
+        );
+        let checkpoint: Mat64 = r.get_mat64()?;
+        anyhow::ensure!(
+            checkpoint.shape() == self.checkpoint.shape(),
+            "snapshot checkpoint is {:?}, session expects {:?}",
+            checkpoint.shape(),
+            self.checkpoint.shape()
+        );
+        self.checkpoint = checkpoint;
+        self.checkpoint_valid = r.get_bool()?;
+        self.drift_events = r.get_u64()?;
+        self.abrupt_events = r.get_u64()?;
+        self.rollbacks = r.get_u64()?;
+        self.last_drift_at = r.get_opt_u64()?;
+        Ok(())
+    }
 }
 
 /// Per-sample EASI SGD under the closed-loop governor — the

@@ -94,6 +94,40 @@ impl<T: Scalar> MomentTracker<T> {
         self.observed += 1;
     }
 
+    /// Serialize the tracked estimates (detach-to-disk; `n` and `alpha`
+    /// are config-derived at rebuild time). State widens to f64 bits,
+    /// losslessly for both shipped precisions.
+    pub fn save_state(&self, w: &mut crate::snapshot::SnapWriter) {
+        let widen = |v: &Vec<T>| v.iter().map(|x| x.scalar_to_f64()).collect::<Vec<f64>>();
+        w.put_f64_slice(&widen(&self.m2));
+        w.put_f64_slice(&widen(&self.m4));
+        w.put_mat(&self.cross);
+        w.put_u64(self.observed);
+    }
+
+    /// Rehydrate the state written by [`save_state`](Self::save_state).
+    pub fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> anyhow::Result<()> {
+        let narrow = |v: Vec<f64>| v.into_iter().map(T::scalar_from_f64).collect::<Vec<T>>();
+        let m2 = narrow(r.get_f64_vec()?);
+        let m4 = narrow(r.get_f64_vec()?);
+        let cross: Mat<T> = r.get_mat()?;
+        anyhow::ensure!(
+            m2.len() == self.m2.len() && m4.len() == self.m4.len(),
+            "snapshot moment tracker has {} channel(s), session expects {}",
+            m2.len(),
+            self.m2.len()
+        );
+        anyhow::ensure!(
+            cross.shape() == self.cross.shape(),
+            "snapshot cross-moment matrix shape mismatch"
+        );
+        self.m2 = m2;
+        self.m4 = m4;
+        self.cross = cross;
+        self.observed = r.get_u64()?;
+        Ok(())
+    }
+
     /// EW `E[y_i²]`.
     pub fn variance(&self, i: usize) -> T {
         self.m2[i]

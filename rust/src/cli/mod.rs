@@ -130,6 +130,18 @@ pub fn usage() -> &'static str {
                       placement), with per-shard backpressure, optional\n\
                       session churn, a live per-tenant health table, and an\n\
                       aggregate throughput table\n\
+                      [--listen HOST:PORT (serve the hub command plane over\n\
+                       framed TCP — attach/detach/pause/resume/checkpoint/\n\
+                       restore/infer — until a client sends SHUTDOWN;\n\
+                       prints `LISTENING <addr>` once bound, --sessions 0\n\
+                       starts an empty fleet)\n\
+                       --state-dir DIR (durability root: detach-to-disk\n\
+                       snapshots land here and restore bit-identically\n\
+                       after a restart)\n\
+                       --autoscale-max N (enable queue-pressure shard\n\
+                       autoscaling, growing/shrinking the worker pool\n\
+                       within [min, N]; decisions appear in the status\n\
+                       table's press column and footer)]\n\
                       [--config FILE | --sessions N --shards N --samples N\n\
                        --mixing a,b,c --precision f32,f64 --adapt on,off\n\
                        (cycled per session) --capacity N --seed N\n\

@@ -51,6 +51,13 @@ impl EngineKind {
             other => bail!("unknown engine '{other}' (expected native|pjrt)"),
         })
     }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Native => "native",
+            Self::Pjrt => "pjrt",
+        }
+    }
 }
 
 /// Arithmetic precision of a session's request path.
@@ -469,6 +476,28 @@ pub struct HubScenario {
     /// `mixing` (0 = stream to completion). `depart_at = [0, 20000]`
     /// makes every other tenant leave after 20k samples.
     pub depart_at: Vec<u64>,
+    /// TCP listen address for the framed command/data plane
+    /// (`hub.listen = "127.0.0.1:7700"`; port 0 picks an ephemeral
+    /// port). `None` serves in-process only.
+    pub listen: Option<String>,
+    /// Durability root for detach-to-disk session snapshots
+    /// (`hub.state_dir = "state/"`). `None` disables implicit-path
+    /// durability.
+    pub state_dir: Option<String>,
+    /// Enable queue-pressure shard autoscaling
+    /// (`hub.autoscale.enabled = true`).
+    pub autoscale_enabled: bool,
+    /// Autoscaler shard-count floor (`hub.autoscale.min_shards`).
+    pub autoscale_min: usize,
+    /// Autoscaler shard-count ceiling (`hub.autoscale.max_shards`).
+    pub autoscale_max: usize,
+    /// Mean-pressure spawn threshold (`hub.autoscale.high`).
+    pub autoscale_high: f64,
+    /// Mean-pressure retire threshold (`hub.autoscale.low`).
+    pub autoscale_low: f64,
+    /// Consecutive ticks a threshold must hold before the autoscaler
+    /// acts (`hub.autoscale.sustain`).
+    pub autoscale_sustain: usize,
     /// Template every session config derives from.
     pub base: ExperimentConfig,
 }
@@ -487,6 +516,14 @@ impl Default for HubScenario {
             cohort: true,
             arrive_stride: 0,
             depart_at: Vec::new(),
+            listen: None,
+            state_dir: None,
+            autoscale_enabled: false,
+            autoscale_min: 1,
+            autoscale_max: 8,
+            autoscale_high: 0.75,
+            autoscale_low: 0.10,
+            autoscale_sustain: 3,
             base: ExperimentConfig::default(),
         }
     }
@@ -548,6 +585,22 @@ impl HubScenario {
                     scenario.arrive_stride = want_usize(&key, &value)? as u64
                 }
                 "hub.depart_at" => scenario.depart_at = want_usize_list(&key, &value)?,
+                "hub.listen" => scenario.listen = Some(want_str(&key, &value)?),
+                "hub.state_dir" => scenario.state_dir = Some(want_str(&key, &value)?),
+                "hub.autoscale.enabled" => {
+                    scenario.autoscale_enabled = want_bool(&key, &value)?
+                }
+                "hub.autoscale.min_shards" => {
+                    scenario.autoscale_min = want_usize(&key, &value)?
+                }
+                "hub.autoscale.max_shards" => {
+                    scenario.autoscale_max = want_usize(&key, &value)?
+                }
+                "hub.autoscale.high" => scenario.autoscale_high = want_float(&key, &value)?,
+                "hub.autoscale.low" => scenario.autoscale_low = want_float(&key, &value)?,
+                "hub.autoscale.sustain" => {
+                    scenario.autoscale_sustain = want_usize(&key, &value)?
+                }
                 k if k.starts_with("hub.") => bail!("unknown config key '{k}'"),
                 _ => {
                     base_map.insert(key, value);
@@ -569,7 +622,9 @@ impl HubScenario {
     /// Check hub-level invariants (per-session configs are validated again
     /// by the hub itself).
     pub fn validate(&self) -> Result<()> {
-        if self.sessions == 0 {
+        if self.sessions == 0 && self.listen.is_none() {
+            // A network server may start with an empty fleet — its tenants
+            // arrive over the socket. A batch scenario may not.
             bail!("hub.sessions must be >= 1");
         }
         if self.shards == 0 {
@@ -586,6 +641,48 @@ impl HubScenario {
         // inside session-0 engine construction.
         if self.base.engine == EngineKind::Pjrt && self.precision.contains(&Precision::F32) {
             bail!("hub.precision includes \"f32\" but the engine is pjrt (f32 needs native)");
+        }
+        if let Some(listen) = &self.listen {
+            if listen.is_empty() || !listen.contains(':') {
+                bail!("hub.listen must be a host:port address, got '{listen}'");
+            }
+        }
+        if let Some(dir) = &self.state_dir {
+            if dir.is_empty() {
+                bail!("hub.state_dir must be a non-empty path");
+            }
+        }
+        if self.autoscale_enabled {
+            if self.autoscale_min == 0 {
+                bail!("hub.autoscale.min_shards must be >= 1");
+            }
+            if self.autoscale_min > self.autoscale_max {
+                bail!(
+                    "hub.autoscale.min_shards ({}) must not exceed max_shards ({})",
+                    self.autoscale_min,
+                    self.autoscale_max
+                );
+            }
+            if !(self.autoscale_low >= 0.0
+                && self.autoscale_high > self.autoscale_low
+                && self.autoscale_high.is_finite())
+            {
+                bail!(
+                    "hub.autoscale needs 0 <= low < high, got low = {} high = {}",
+                    self.autoscale_low,
+                    self.autoscale_high
+                );
+            }
+            if self.autoscale_sustain == 0 {
+                bail!("hub.autoscale.sustain must be >= 1");
+            }
+            if self.shards > self.autoscale_max {
+                bail!(
+                    "hub.shards ({}) exceeds hub.autoscale.max_shards ({})",
+                    self.shards,
+                    self.autoscale_max
+                );
+            }
         }
         self.base.validate()
     }
@@ -834,6 +931,68 @@ mod tests {
         assert!(HubScenario::from_toml("[hub]\nmixing = \"warp\"").is_err());
         assert!(HubScenario::from_toml("[hub]\ntypo = 1").is_err());
         assert!(HubScenario::from_toml("typo = 1").is_err(), "base keys still strict");
+    }
+
+    #[test]
+    fn hub_scenario_service_keys() {
+        let doc = r#"
+            [hub]
+            listen = "127.0.0.1:0"
+            state_dir = "state"
+
+            [hub.autoscale]
+            enabled = true
+            min_shards = 1
+            max_shards = 6
+            high = 0.8
+            low = 0.05
+            sustain = 4
+        "#;
+        let sc = HubScenario::from_toml(doc).unwrap();
+        assert_eq!(sc.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(sc.state_dir.as_deref(), Some("state"));
+        assert!(sc.autoscale_enabled);
+        assert_eq!((sc.autoscale_min, sc.autoscale_max, sc.autoscale_sustain), (1, 6, 4));
+        assert!((sc.autoscale_high - 0.8).abs() < 1e-12);
+        assert!((sc.autoscale_low - 0.05).abs() < 1e-12);
+        // Defaults leave the service surface off.
+        let plain = HubScenario::default();
+        assert!(plain.listen.is_none() && plain.state_dir.is_none());
+        assert!(!plain.autoscale_enabled);
+    }
+
+    #[test]
+    fn hub_scenario_service_keys_validated() {
+        assert!(
+            HubScenario::from_toml("[hub]\nlisten = \"nocolon\"").is_err(),
+            "listen must be host:port"
+        );
+        assert!(HubScenario::from_toml("[hub]\nstate_dir = \"\"").is_err());
+        assert!(HubScenario::from_toml("[hub.autoscale]\nenabled = true\nmin_shards = 0").is_err());
+        assert!(
+            HubScenario::from_toml(
+                "[hub.autoscale]\nenabled = true\nmin_shards = 5\nmax_shards = 2"
+            )
+            .is_err()
+        );
+        assert!(
+            HubScenario::from_toml("[hub.autoscale]\nenabled = true\nhigh = 0.1\nlow = 0.5")
+                .is_err()
+        );
+        assert!(HubScenario::from_toml("[hub.autoscale]\nenabled = true\nsustain = 0").is_err());
+        assert!(
+            HubScenario::from_toml("[hub]\nshards = 9\n[hub.autoscale]\nenabled = true").is_err(),
+            "initial shards must fit the autoscale envelope"
+        );
+        // Disabled autoscaler tolerates nonsense knobs (inert).
+        assert!(HubScenario::from_toml("[hub.autoscale]\nsustain = 0").is_ok());
+        assert!(HubScenario::from_toml("[hub.autoscale]\ntypo = 1").is_err());
+        // An empty fleet is only legal for a network server (tenants
+        // arrive over the socket).
+        assert!(HubScenario::from_toml("[hub]\nsessions = 0").is_err());
+        assert!(
+            HubScenario::from_toml("[hub]\nsessions = 0\nlisten = \"127.0.0.1:0\"").is_ok()
+        );
     }
 
     #[test]

@@ -107,6 +107,35 @@ impl Chunker {
         self.rows = 0;
         Some(mat)
     }
+
+    /// Serialize the lifetime counter and the buffered partial chunk
+    /// (detach-to-disk; `m`/`chunk` are config-derived at rebuild time).
+    pub fn save_state(&self, w: &mut crate::snapshot::SnapWriter) {
+        w.put_u64(self.total);
+        w.put_f64_slice(&self.buf);
+    }
+
+    /// Rehydrate the state written by [`save_state`](Self::save_state).
+    pub fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> anyhow::Result<()> {
+        let total = r.get_u64()?;
+        let buf = r.get_f64_vec()?;
+        anyhow::ensure!(
+            buf.len() % self.m == 0,
+            "snapshot partial chunk holds {} value(s), not a multiple of m = {}",
+            buf.len(),
+            self.m
+        );
+        let rows = buf.len() / self.m;
+        anyhow::ensure!(
+            rows < self.chunk,
+            "snapshot partial chunk has {rows} row(s), but a full chunk is {}",
+            self.chunk
+        );
+        self.buf = buf;
+        self.rows = rows;
+        self.total = total;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

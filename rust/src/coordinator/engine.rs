@@ -70,6 +70,21 @@ pub trait Engine: Send {
     fn cohort_sync(&mut self, _b: &Mat64, _rows: u64) {
         unreachable!("cohort_sync on an engine that did not offer a cohort lane");
     }
+
+    /// Serialize the engine's full learning state for detach-to-disk.
+    /// Contract with [`load_state`](Self::load_state): a freshly built
+    /// engine (same config) that loads this state continues
+    /// **bit-identically**. Default: error — engines without a durability
+    /// story (PJRT holds device-side program state) refuse explicitly.
+    fn save_state(&self, _w: &mut crate::snapshot::SnapWriter) -> Result<()> {
+        bail!("engine '{}' does not support detach-to-disk", self.describe())
+    }
+
+    /// Rehydrate the state written by [`save_state`](Self::save_state)
+    /// into a freshly constructed engine of the same configuration.
+    fn load_state(&mut self, _r: &mut crate::snapshot::SnapReader<'_>) -> Result<()> {
+        bail!("engine '{}' does not support detach-to-disk", self.describe())
+    }
 }
 
 /// Chunk size for the native engines, shared across precisions: aligned
@@ -145,6 +160,14 @@ impl Engine for NativeEngine {
     fn cohort_sync(&mut self, b: &Mat64, rows: u64) {
         self.opt.b_mut().copy_from(b);
         self.opt.note_cohort_rows(rows);
+    }
+
+    fn save_state(&self, w: &mut crate::snapshot::SnapWriter) -> Result<()> {
+        self.opt.save_state(w)
+    }
+
+    fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> Result<()> {
+        self.opt.load_state(r)
     }
 }
 
@@ -239,6 +262,16 @@ impl<T: Scalar> Engine for CastNativeEngine<T> {
         // lane ran in `T`), so narrowing back is lossless.
         self.opt.b_mut().copy_from(&b.cast());
         self.opt.note_cohort_rows(rows);
+    }
+
+    fn save_state(&self, w: &mut crate::snapshot::SnapWriter) -> Result<()> {
+        // The optimizer widens its T state to f64 bits; T → f64 → T is
+        // exact, so an f32 tenant round-trips bit-identically too.
+        self.opt.save_state(w)
+    }
+
+    fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> Result<()> {
+        self.opt.load_state(r)
     }
 }
 

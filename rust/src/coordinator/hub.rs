@@ -48,17 +48,84 @@ use crate::config::{ExperimentConfig, PlacementKind};
 use crate::ica::Nonlinearity;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
+/// Queue-pressure-driven shard autoscaling knobs (elastic runtime only;
+/// the batch [`Hub`] always runs its configured shard count).
+///
+/// Pressure is a shard's queue depth divided by its channel capacity.
+/// When the mean pressure across live shards stays at or above `high`
+/// for `sustain` consecutive control ticks, the hub spawns a worker (up
+/// to `max_shards`); when it stays at or below `low`, the hub retires
+/// the least-loaded worker (down to `min_shards`), migrating its
+/// tenants through the park/extract seam so trajectories stay
+/// bit-identical.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleOptions {
+    /// Master switch; disabled hubs never change their shard count.
+    pub enabled: bool,
+    /// Never retire below this many live shards.
+    pub min_shards: usize,
+    /// Never spawn above this many live shards.
+    pub max_shards: usize,
+    /// Mean pressure (depth / capacity) at or above this spawns a shard.
+    pub high: f64,
+    /// Mean pressure at or below this retires a shard.
+    pub low: f64,
+    /// Consecutive ticks a threshold must hold before acting — keeps a
+    /// single bursty tick from thrashing the pool.
+    pub sustain: usize,
+}
+
+impl Default for AutoscaleOptions {
+    fn default() -> Self {
+        Self { enabled: false, min_shards: 1, max_shards: 8, high: 0.75, low: 0.10, sustain: 3 }
+    }
+}
+
+impl AutoscaleOptions {
+    /// Reject configurations that could never act sensibly. Only checked
+    /// when enabled — a disabled autoscaler is inert whatever its knobs.
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if self.min_shards == 0 {
+            bail!("autoscale min_shards must be >= 1 (a hub cannot run with zero workers)");
+        }
+        if self.min_shards > self.max_shards {
+            bail!(
+                "autoscale min_shards ({}) must not exceed max_shards ({})",
+                self.min_shards,
+                self.max_shards
+            );
+        }
+        if !(self.low >= 0.0 && self.high > self.low && self.high.is_finite()) {
+            bail!(
+                "autoscale thresholds need 0 <= low < high, got low = {} high = {}",
+                self.low,
+                self.high
+            );
+        }
+        if self.sustain == 0 {
+            bail!("autoscale sustain must be >= 1 control tick");
+        }
+        Ok(())
+    }
+}
+
 /// Hub tuning knobs (shared by the batch [`Hub`] and the elastic
 /// [`super::lifecycle::ElasticHub`]).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct HubOptions {
-    /// Worker shards (threads applying engine updates).
+    /// Worker shards (threads applying engine updates). With autoscaling
+    /// enabled this is the *initial* count; the live count floats in
+    /// `[autoscale.min_shards, autoscale.max_shards]`.
     pub shards: usize,
     /// Per-shard ingest channel capacity in samples — the backpressure
     /// depth each shard grants its tenants collectively.
@@ -70,6 +137,11 @@ pub struct HubOptions {
     /// [`crate::linalg::CohortState`] pools (bit-identical to per-session
     /// stepping; `false` forces the per-session path everywhere).
     pub cohort: bool,
+    /// Durability root for detach-to-disk snapshots (elastic runtime).
+    /// `None` leaves detach-to-disk callable only with an explicit path.
+    pub state_dir: Option<PathBuf>,
+    /// Queue-pressure shard autoscaling (elastic runtime only).
+    pub autoscale: AutoscaleOptions,
     /// Per-session server knobs (monitor cadence, AGC, divergence guard).
     pub server: ServerOptions,
 }
@@ -81,6 +153,8 @@ impl Default for HubOptions {
             channel_capacity: 4096,
             placement: PlacementKind::LeastLoaded,
             cohort: true,
+            state_dir: None,
+            autoscale: AutoscaleOptions::default(),
             server: ServerOptions::default(),
         }
     }
@@ -96,6 +170,15 @@ impl HubOptions {
             channel_capacity: sc.channel_capacity,
             placement: sc.placement,
             cohort: sc.cohort,
+            state_dir: sc.state_dir.as_ref().map(PathBuf::from),
+            autoscale: AutoscaleOptions {
+                enabled: sc.autoscale_enabled,
+                min_shards: sc.autoscale_min,
+                max_shards: sc.autoscale_max,
+                high: sc.autoscale_high,
+                low: sc.autoscale_low,
+                sustain: sc.autoscale_sustain,
+            },
             server: ServerOptions::default(),
         }
     }
@@ -111,6 +194,15 @@ impl HubOptions {
             bail!(
                 "hub channel_capacity must be >= 1 sample (got 0); a zero-capacity ingest \
                  channel would stall every producer's first send"
+            );
+        }
+        self.autoscale.validate()?;
+        if self.autoscale.enabled && self.shards > self.autoscale.max_shards {
+            bail!(
+                "hub shards ({}) exceeds autoscale max_shards ({}); the initial pool must \
+                 fit inside the autoscaler's envelope",
+                self.shards,
+                self.autoscale.max_shards
             );
         }
         Ok(())
@@ -499,13 +591,38 @@ mod tests {
         // block_capacity; the options now reject it up front with a
         // descriptive error instead of relying on downstream guards.
         let opts = HubOptions { channel_capacity: 0, ..Default::default() };
-        let err = Hub::new(vec![small_cfg(1)], Nonlinearity::Cube, opts)
+        let err = Hub::new(vec![small_cfg(1)], Nonlinearity::Cube, opts.clone())
             .err()
             .expect("zero channel capacity must be rejected at construction");
         assert!(format!("{err:#}").contains("channel_capacity"), "{err:#}");
         // The same validation guards the elastic runtime.
         assert!(opts.validate().is_err());
         assert!(HubOptions::default().validate().is_ok());
+    }
+
+    #[test]
+    fn autoscale_options_validated() {
+        // Disabled autoscaler is inert whatever its knobs.
+        let mut inert = HubOptions::default();
+        inert.autoscale.min_shards = 0;
+        assert!(inert.validate().is_ok());
+
+        let mut opts = HubOptions::default();
+        opts.autoscale.enabled = true;
+        assert!(opts.validate().is_ok());
+
+        opts.autoscale.min_shards = 0;
+        assert!(opts.validate().is_err(), "zero min_shards must be rejected");
+        opts.autoscale.min_shards = 9;
+        assert!(opts.validate().is_err(), "min > max must be rejected");
+        opts.autoscale = AutoscaleOptions { enabled: true, low: 0.9, ..Default::default() };
+        assert!(opts.validate().is_err(), "low >= high must be rejected");
+        opts.autoscale = AutoscaleOptions { enabled: true, sustain: 0, ..Default::default() };
+        assert!(opts.validate().is_err(), "zero sustain must be rejected");
+        // Initial pool must fit inside the autoscaler's envelope.
+        opts.autoscale = AutoscaleOptions { enabled: true, max_shards: 1, ..Default::default() };
+        opts.shards = 2;
+        assert!(opts.validate().is_err(), "shards > max_shards must be rejected");
     }
 
     #[test]

@@ -39,14 +39,21 @@ use super::cohort::CohortExecutor;
 use super::engine::make_engine;
 use super::hub::{HubMetrics, HubOptions, HubSummary, SessionReport};
 use super::server::{
-    block_capacity, build_stream, drive_stream, safe_rate, SessionRunner, StreamEvent,
+    block_capacity, build_stream, drive_stream, drive_stream_from, safe_rate, SessionRunner,
+    StreamEvent,
 };
 use super::state::{SessionPhase, SessionStatus, Snapshot, StateDirectory, StateStore, StatusCell};
-use crate::config::{ExperimentConfig, HubScenario, PlacementKind, SessionSpec};
+use crate::config::{
+    EngineKind, ExperimentConfig, HubScenario, OptimizerKind, PlacementKind, Precision,
+    SessionSpec,
+};
 use crate::ica::Nonlinearity;
 use crate::linalg::Mat64;
-use anyhow::{bail, Context, Result};
+use crate::snapshot::{SnapReader, SnapWriter};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
@@ -214,12 +221,20 @@ struct Route {
 
 impl Route {
     fn new(tx: SyncSender<DataMsg>, depth: Arc<AtomicUsize>) -> Self {
+        Self::with_seq(tx, depth, 0)
+    }
+
+    /// A route whose sequence counter starts mid-stream: a session
+    /// restored from disk resumes numbering at its snapshot's cut point,
+    /// so the worker's consumed-sequence bookkeeping lines up exactly as
+    /// it would after an in-process park.
+    fn with_seq(tx: SyncSender<DataMsg>, depth: Arc<AtomicUsize>, seq: u64) -> Self {
         Self {
             state: Mutex::new(RouteState {
                 phase: GatePhase::Streaming,
                 tx: Some(tx),
                 depth,
-                seq: 0,
+                seq,
                 in_flight: false,
             }),
             cv: Condvar::new(),
@@ -507,6 +522,11 @@ struct Entry {
     producer: Option<thread::JoinHandle<()>>,
     status: StatusCell,
     parked: Option<ParkedSession>,
+    /// The session's materialized config — what detach-to-disk persists
+    /// so a restoring process can rebuild the engine and stream.
+    cfg: ExperimentConfig,
+    /// Samples this session streams in total (departure-truncated).
+    total: usize,
 }
 
 /// What a shard worker thread returns: its session reports and the
@@ -520,9 +540,13 @@ pub struct ElasticHub {
     g: Nonlinearity,
     opts: HubOptions,
     placement: Box<dyn Placement>,
-    data_txs: Vec<SyncSender<DataMsg>>,
-    ctrl_txs: Vec<Sender<ControlMsg>>,
-    workers: Vec<WorkerHandle>,
+    /// Slotted shard plumbing: `None` marks a slot that is not (or no
+    /// longer) running a worker. Autoscaling spawns into free slots and
+    /// retires by clearing them; slot indices are stable for the life of
+    /// the hub, so session `shard` fields never dangle.
+    data_txs: Vec<Option<SyncSender<DataMsg>>>,
+    ctrl_txs: Vec<Option<Sender<ControlMsg>>>,
+    workers: Vec<Option<WorkerHandle>>,
     entries: BTreeMap<u64, Entry>,
     /// Per-shard active (installed or in-flight-attach) load in placement
     /// cost units (each session weighs ≈ `n × m × chunk_size`) — the load
@@ -532,6 +556,14 @@ pub struct ElasticHub {
     metrics: HubMetrics,
     next_id: u64,
     started: Instant,
+    /// Reports and max backlog from workers retired by the autoscaler,
+    /// merged into the final summary by [`ElasticHub::finish`].
+    retired_reports: Vec<SessionReport>,
+    retired_max_depth: usize,
+    /// Autoscaler sustain counters (consecutive over/under-threshold
+    /// control ticks).
+    scale_high_ticks: usize,
+    scale_low_ticks: usize,
 }
 
 impl ElasticHub {
@@ -539,46 +571,65 @@ impl ElasticHub {
     pub fn start(g: Nonlinearity, opts: HubOptions) -> Result<Self> {
         opts.validate()?;
         let shards = opts.shards;
-        let capacity = block_capacity(opts.channel_capacity);
-        let metrics = HubMetrics::new(shards);
+        // Slot count covers the autoscaler's whole envelope up front:
+        // depth gauges and load counters are shared into workers by Arc,
+        // so they cannot be grown after the fact.
+        let max_total =
+            if opts.autoscale.enabled { shards.max(opts.autoscale.max_shards) } else { shards };
+        let metrics = HubMetrics::new(max_total);
         let active: Arc<Vec<AtomicUsize>> =
-            Arc::new((0..shards).map(|_| AtomicUsize::new(0)).collect());
+            Arc::new((0..max_total).map(|_| AtomicUsize::new(0)).collect());
 
-        let mut data_txs = Vec::with_capacity(shards);
-        let mut ctrl_txs = Vec::with_capacity(shards);
-        let mut workers = Vec::with_capacity(shards);
-        for shard in 0..shards {
-            let (data_tx, data_rx) = sync_channel::<DataMsg>(capacity);
-            let (ctrl_tx, ctrl_rx) = channel::<ControlMsg>();
-            data_txs.push(data_tx);
-            ctrl_txs.push(ctrl_tx);
-            let state = ShardState {
-                shard,
-                runners: BTreeMap::new(),
-                consumed_seq: BTreeMap::new(),
-                pending_park: BTreeMap::new(),
-                reports: Vec::new(),
-                active: Arc::clone(&active),
-                consumed: Arc::clone(&metrics.consumed),
-                exec: CohortExecutor::new(opts.cohort),
-            };
-            let depth = Arc::clone(&metrics.depths[shard]);
-            workers.push(thread::spawn(move || shard_worker(state, data_rx, ctrl_rx, depth)));
-        }
-        Ok(Self {
+        let mut hub = Self {
             g,
             placement: build_placement(opts.placement),
             opts,
-            data_txs,
-            ctrl_txs,
-            workers,
+            data_txs: (0..max_total).map(|_| None).collect(),
+            ctrl_txs: (0..max_total).map(|_| None).collect(),
+            workers: (0..max_total).map(|_| None).collect(),
             entries: BTreeMap::new(),
             active,
             directory: StateDirectory::new(),
             metrics,
             next_id: 0,
             started: Instant::now(),
-        })
+            retired_reports: Vec::new(),
+            retired_max_depth: 0,
+            scale_high_ticks: 0,
+            scale_low_ticks: 0,
+        };
+        for shard in 0..shards {
+            hub.spawn_worker(shard)?;
+        }
+        Ok(hub)
+    }
+
+    /// Spawn a worker into a free slot (initial pool and autoscale
+    /// spawns go through here — the single place a shard is wired up).
+    fn spawn_worker(&mut self, shard: usize) -> Result<()> {
+        ensure!(
+            self.data_txs[shard].is_none(),
+            "internal: spawn into occupied shard slot {shard}"
+        );
+        let capacity = block_capacity(self.opts.channel_capacity);
+        let (data_tx, data_rx) = sync_channel::<DataMsg>(capacity);
+        let (ctrl_tx, ctrl_rx) = channel::<ControlMsg>();
+        let state = ShardState {
+            shard,
+            runners: BTreeMap::new(),
+            consumed_seq: BTreeMap::new(),
+            pending_park: BTreeMap::new(),
+            reports: Vec::new(),
+            active: Arc::clone(&self.active),
+            consumed: Arc::clone(&self.metrics.consumed),
+            exec: CohortExecutor::new(self.opts.cohort),
+        };
+        let depth = Arc::clone(&self.metrics.depths[shard]);
+        self.data_txs[shard] = Some(data_tx);
+        self.ctrl_txs[shard] = Some(ctrl_tx);
+        self.workers[shard] =
+            Some(thread::spawn(move || shard_worker(state, data_rx, ctrl_rx, depth)));
+        Ok(())
     }
 
     /// Replace the placement policy (custom policies, tests).
@@ -588,6 +639,42 @@ impl ElasticHub {
 
     pub fn shards(&self) -> usize {
         self.opts.shards
+    }
+
+    /// Slots currently running a worker, in index order.
+    fn live_shards(&self) -> Vec<usize> {
+        self.ctrl_txs
+            .iter()
+            .enumerate()
+            .filter_map(|(i, tx)| tx.as_ref().map(|_| i))
+            .collect()
+    }
+
+    /// Workers currently running (floats inside the autoscale envelope).
+    pub fn live_shard_count(&self) -> usize {
+        self.ctrl_txs.iter().filter(|tx| tx.is_some()).count()
+    }
+
+    /// Place a session on a live shard: the policy sees the live slots'
+    /// loads compacted (so retired holes are invisible to it) and its
+    /// pick maps back to a real slot index.
+    fn pick_shard(&mut self, id: u64) -> Result<usize> {
+        let live = self.live_shards();
+        if live.is_empty() {
+            bail!("hub has no live shards");
+        }
+        let loads: Vec<usize> =
+            live.iter().map(|&s| self.active[s].load(Ordering::Relaxed)).collect();
+        let pick = self.placement.place(id, &loads);
+        if pick >= live.len() {
+            bail!(
+                "placement '{}' returned index {pick} for session {id}, but only {} shard(s) \
+                 are live",
+                self.placement.name(),
+                live.len()
+            );
+        }
+        Ok(live[pick])
     }
 
     /// Sessions attached so far (including drained and parked ones).
@@ -618,16 +705,7 @@ impl ElasticHub {
         let cfg = &spec.cfg;
         cfg.validate().with_context(|| format!("attaching session '{}'", cfg.name))?;
         let id = self.next_id;
-        let loads: Vec<usize> = self.active.iter().map(|a| a.load(Ordering::Relaxed)).collect();
-        let shard = self.placement.place(id, &loads);
-        if shard >= self.opts.shards {
-            bail!(
-                "placement '{}' returned shard {shard} for session {id}, but the hub has {} \
-                 shard(s)",
-                self.placement.name(),
-                self.opts.shards
-            );
-        }
+        let shard = self.pick_shard(id)?;
 
         // Build everything fallible before touching shared state.
         let engine = make_engine(cfg, self.g)
@@ -648,7 +726,8 @@ impl ElasticHub {
         self.active[shard].fetch_add(cost, Ordering::Relaxed);
         let attach =
             ControlMsg::Attach { session: id, runner: Box::new(runner), consumed_upto: 0 };
-        if self.ctrl_txs[shard].send(attach).is_err() {
+        let ctrl = self.ctrl_txs[shard].as_ref().expect("picked shard is live");
+        if ctrl.send(attach).is_err() {
             self.active[shard].fetch_sub(cost, Ordering::Relaxed);
             bail!("shard {shard} worker is gone");
         }
@@ -657,7 +736,7 @@ impl ElasticHub {
         self.directory.register(id, state.clone(), status.clone());
 
         let route = Arc::new(Route::new(
-            self.data_txs[shard].clone(),
+            self.data_txs[shard].as_ref().expect("picked shard is live").clone(),
             Arc::clone(&self.metrics.depths[shard]),
         ));
         let total = spec.effective_samples();
@@ -675,6 +754,7 @@ impl ElasticHub {
         self.next_id += 1;
         let handle =
             SessionHandle { id, name: cfg.name.clone(), state, status: status.clone() };
+        let cfg = spec.cfg;
         self.entries.insert(
             id,
             Entry {
@@ -684,6 +764,8 @@ impl ElasticHub {
                 producer: Some(producer),
                 status,
                 parked: None,
+                cfg,
+                total,
             },
         );
         Ok(handle)
@@ -759,6 +841,8 @@ impl ElasticHub {
         let (reply_tx, reply_rx) = channel();
         let shard = entry.shard;
         self.ctrl_txs[shard]
+            .as_ref()
+            .with_context(|| format!("shard {shard} is retired"))?
             .send(ControlMsg::Park { session: id, upto_seq: upto, reply: reply_tx })
             .map_err(|_| anyhow::anyhow!("shard {shard} worker is gone"))?;
         match reply_rx.recv() {
@@ -780,8 +864,7 @@ impl ElasticHub {
     /// Re-attach a detached session on the shard placement chooses.
     /// Returns the shard.
     pub fn reattach(&mut self, id: u64) -> Result<usize> {
-        let loads: Vec<usize> = self.active.iter().map(|a| a.load(Ordering::Relaxed)).collect();
-        let shard = self.placement.place(id, &loads);
+        let shard = self.pick_shard(id)?;
         self.reattach_to(id, shard)?;
         Ok(shard)
     }
@@ -791,8 +874,11 @@ impl ElasticHub {
     /// partial, AGC, monitor, adaptive controller — moves wholesale, so
     /// the continued trajectory is bit-identical to an uninterrupted run.
     pub fn reattach_to(&mut self, id: u64, shard: usize) -> Result<()> {
-        if shard >= self.opts.shards {
-            bail!("shard {shard} out of range (hub has {})", self.opts.shards);
+        if shard >= self.data_txs.len() {
+            bail!("shard {shard} out of range (hub has {} slot(s))", self.data_txs.len());
+        }
+        if self.ctrl_txs[shard].is_none() {
+            bail!("shard {shard} is retired");
         }
         let parked = {
             let entry =
@@ -806,7 +892,8 @@ impl ElasticHub {
             runner: parked.runner,
             consumed_upto: parked.consumed_upto,
         };
-        if let Err(std::sync::mpsc::SendError(msg)) = self.ctrl_txs[shard].send(attach) {
+        let ctrl = self.ctrl_txs[shard].as_ref().expect("checked live above");
+        if let Err(std::sync::mpsc::SendError(msg)) = ctrl.send(attach) {
             // Worker gone: undo the load count and re-park the runner so
             // the session stays recoverable.
             self.active[shard].fetch_sub(cost, Ordering::Relaxed);
@@ -822,7 +909,7 @@ impl ElasticHub {
         let entry = self.entries.get_mut(&id).expect("entry checked above");
         {
             let mut st = entry.route.state.lock().expect("route lock poisoned");
-            st.tx = Some(self.data_txs[shard].clone());
+            st.tx = Some(self.data_txs[shard].as_ref().expect("checked live above").clone());
             st.depth = Arc::clone(&self.metrics.depths[shard]);
             st.phase = GatePhase::Streaming;
         }
@@ -846,6 +933,8 @@ impl ElasticHub {
         let shard = entry.shard;
         let (ack_tx, ack_rx) = channel();
         self.ctrl_txs[shard]
+            .as_ref()
+            .with_context(|| format!("shard {shard} is retired"))?
             .send(ControlMsg::Restore { session: id, b: snapshot.b.clone(), ack: ack_tx })
             .map_err(|_| anyhow::anyhow!("shard {shard} worker is gone"))?;
         match ack_rx.recv() {
@@ -853,6 +942,281 @@ impl ElasticHub {
             Ok(false) => bail!("session {id} already drained; cannot restore"),
             Err(_) => bail!("shard {shard} worker failed while restoring session {id}"),
         }
+    }
+
+    /// One autoscaler control tick: read per-shard queue pressure
+    /// (depth / channel capacity), and when the live-shard mean stays
+    /// beyond a threshold for `sustain` consecutive ticks, spawn a worker
+    /// into a free slot or retire the least-loaded one. No-op unless
+    /// `opts.autoscale.enabled`. Callers drive this from their wait loops
+    /// (`serve`, the TCP accept loop); the hub has no timer thread of its
+    /// own.
+    pub fn autoscale_tick(&mut self) {
+        if !self.opts.autoscale.enabled {
+            return;
+        }
+        let a = self.opts.autoscale;
+        let capacity = block_capacity(self.opts.channel_capacity) as f64;
+        // Per-slot pressure; retired/unspawned slots report NaN so the
+        // status table renders them as absent rather than as zero load.
+        let pressure: Vec<f64> = self
+            .data_txs
+            .iter()
+            .enumerate()
+            .map(|(s, tx)| {
+                if tx.is_some() {
+                    self.metrics.depths[s].load(Ordering::Relaxed) as f64 / capacity
+                } else {
+                    f64::NAN
+                }
+            })
+            .collect();
+        let live = self.live_shards();
+        let mean =
+            live.iter().map(|&s| pressure[s]).sum::<f64>() / live.len().max(1) as f64;
+        if mean >= a.high && live.len() < a.max_shards {
+            self.scale_high_ticks += 1;
+        } else {
+            self.scale_high_ticks = 0;
+        }
+        if mean <= a.low && live.len() > a.min_shards {
+            self.scale_low_ticks += 1;
+        } else {
+            self.scale_low_ticks = 0;
+        }
+        let log = self.directory.autoscale_log();
+        if self.scale_high_ticks >= a.sustain {
+            self.scale_high_ticks = 0;
+            if let Some(slot) = (0..self.data_txs.len()).find(|&s| self.data_txs[s].is_none())
+            {
+                if self.spawn_worker(slot).is_ok() {
+                    log.note_spawn();
+                }
+            }
+        } else if self.scale_low_ticks >= a.sustain {
+            self.scale_low_ticks = 0;
+            if self.retire_least_loaded().is_ok() {
+                log.note_retire();
+            }
+        }
+        log.publish(self.live_shard_count(), pressure);
+    }
+
+    /// Retire the live shard with the lowest placement-cost load,
+    /// migrating its tenants elsewhere through the park/extract seam
+    /// (their trajectories stay bit-identical). Fails without side
+    /// effects when the pool is already at the autoscaler's floor or only
+    /// one shard is live.
+    fn retire_least_loaded(&mut self) -> Result<()> {
+        let live = self.live_shards();
+        if live.len() <= self.opts.autoscale.min_shards.max(1) {
+            bail!("shard pool already at its floor");
+        }
+        let victim = live
+            .iter()
+            .copied()
+            .min_by_key(|&s| (self.active[s].load(Ordering::Relaxed), s))
+            .expect("live checked non-empty");
+        self.retire_shard(victim)
+    }
+
+    /// Retire one shard: detach every live tenant on it, re-place each on
+    /// a surviving shard (least-loaded, cost-weighted), re-pause the ones
+    /// the user had paused, then drop the victim's lanes and join its
+    /// worker. The park protocol guarantees each migrant's runner left
+    /// the victim only after consuming exactly its produced prefix, so
+    /// the migration is invisible to every tenant's trajectory.
+    fn retire_shard(&mut self, victim: usize) -> Result<()> {
+        if victim >= self.ctrl_txs.len() || self.ctrl_txs[victim].is_none() {
+            bail!("shard {victim} is not live");
+        }
+        if self.live_shard_count() <= 1 {
+            bail!("cannot retire the last live shard");
+        }
+        let tenants: Vec<(u64, bool)> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.shard == victim && e.parked.is_none())
+            .filter(|(_, e)| e.status.snapshot().phase != SessionPhase::Drained)
+            .map(|(&id, e)| (id, e.status.snapshot().phase == SessionPhase::Paused))
+            .collect();
+        for (id, was_paused) in tenants {
+            // A tenant that drains between the scan and the park resolves
+            // as Gone inside detach — skip it, nothing to migrate.
+            if self.detach(id).is_err() {
+                continue;
+            }
+            let dest = self
+                .live_shards()
+                .into_iter()
+                .filter(|&s| s != victim)
+                .min_by_key(|&s| (self.active[s].load(Ordering::Relaxed), s))
+                .expect("live_shard_count checked > 1");
+            self.reattach_to(id, dest)
+                .with_context(|| format!("migrating session {id} off retiring shard {victim}"))?;
+            if was_paused {
+                self.pause(id)?;
+            }
+        }
+        // Entries still pointing at the victim are drained or parked;
+        // their routes may hold stale clones of the victim's data sender,
+        // which would keep its lane connected forever. Clear them — a
+        // later reattach re-targets the route anyway.
+        for e in self.entries.values_mut() {
+            if e.shard == victim {
+                if let Ok(mut st) = e.route.state.lock() {
+                    st.tx = None;
+                }
+            }
+        }
+        self.data_txs[victim] = None;
+        self.ctrl_txs[victim] = None;
+        if let Some(w) = self.workers[victim].take() {
+            match w.join() {
+                Ok(Ok((reports, depth))) => {
+                    self.retired_reports.extend(reports);
+                    self.retired_max_depth = self.retired_max_depth.max(depth);
+                }
+                Ok(Err(e)) => return Err(e),
+                Err(_) => bail!("shard {victim} worker panicked during retirement"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Detach a session and serialize its full state — optimizer and
+    /// accumulator, chunker partial, AGC, monitor, adaptive controller,
+    /// published snapshot — to `<dir>/session-<id>.snap`, so the tenant
+    /// survives a process restart ([`ElasticHub::restore_from_disk`]
+    /// continues it bit-identically). `dir` falls back to the hub's
+    /// configured `state_dir`. The session leaves the control plane; its
+    /// directory registration stays so inference against its last
+    /// published B keeps serving until the process exits.
+    pub fn detach_to_disk(&mut self, id: u64, dir: Option<&Path>) -> Result<PathBuf> {
+        let dir: PathBuf = match dir {
+            Some(d) => d.to_path_buf(),
+            None => self.opts.state_dir.clone().context(
+                "no durability directory: configure hub.state_dir or pass one explicitly",
+            )?,
+        };
+        if self.entry(id)?.parked.is_none() {
+            self.detach(id)?;
+        }
+        // The snapshot names an exact cut point; the producer's stream
+        // position is reconstructed by replay at restore time. Abort and
+        // join the producer so the thread does not outlive the tenant.
+        let entry = self.entries.get_mut(&id).expect("entry checked above");
+        {
+            let mut st = entry.route.state.lock().expect("route lock poisoned");
+            st.phase = GatePhase::Aborted;
+            st.tx = None;
+        }
+        entry.route.cv.notify_all();
+        if let Some(p) = entry.producer.take() {
+            p.join().ok();
+        }
+        let parked = entry.parked.take().expect("parked by detach above");
+
+        let mut w = SnapWriter::new();
+        w.put_u64(id);
+        w.put_str(&entry.name);
+        write_config(&mut w, &entry.cfg);
+        w.put_u64(entry.total as u64);
+        w.put_u64(parked.consumed_upto);
+        parked.runner.save_state(&mut w).with_context(|| {
+            format!("session {id} ('{}') does not support detach-to-disk", entry.name)
+        })?;
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating durability directory {}", dir.display()))?;
+        let path = dir.join(format!("session-{id}.snap"));
+        fs::write(&path, w.finish())
+            .with_context(|| format!("writing session snapshot {}", path.display()))?;
+        entry.status.set_phase(SessionPhase::Detached);
+        self.entries.remove(&id);
+        Ok(path)
+    }
+
+    /// Rehydrate a session from a [`ElasticHub::detach_to_disk`] snapshot
+    /// file: rebuild its engine and stream from the persisted config,
+    /// load the runner state, place it on a live shard, and resume its
+    /// producer *from the snapshot's cut point* (the replayed prefix
+    /// advances the stream's RNG identically without re-emitting, so the
+    /// continued trajectory is bit-identical to a never-detached run).
+    /// The session keeps its original id; `next_id` advances past it.
+    pub fn restore_from_disk(&mut self, path: &Path) -> Result<SessionHandle> {
+        let bytes = fs::read(path)
+            .with_context(|| format!("reading session snapshot {}", path.display()))?;
+        let mut r = SnapReader::open(&bytes)
+            .with_context(|| format!("opening session snapshot {}", path.display()))?;
+        let id = r.get_u64()?;
+        if self.entries.contains_key(&id) {
+            bail!("session {id} is already attached; refusing to restore over it");
+        }
+        let name = r.get_str()?;
+        let cfg = read_config(&mut r)
+            .with_context(|| format!("decoding config from {}", path.display()))?;
+        cfg.validate()
+            .with_context(|| format!("validating restored config for session {id}"))?;
+        let total = r.get_u64()? as usize;
+        let consumed_upto = r.get_u64()?;
+
+        let engine = make_engine(&cfg, self.g)
+            .with_context(|| format!("rebuilding engine for restored session {id}"))?;
+        let mut stream = build_stream(&cfg)
+            .with_context(|| format!("rebuilding stream for restored session {id}"))?;
+        let state = StateStore::new(crate::ica::init_b(cfg.n, cfg.m));
+        let status = StatusCell::new(id, &name);
+        let mut runner = SessionRunner::new(&cfg, engine, &self.opts.server, state.clone());
+        runner.set_status_cell(status.clone());
+        runner
+            .load_state(&mut r)
+            .with_context(|| format!("restoring session {id} from {}", path.display()))?;
+        r.expect_end()?;
+
+        let shard = self.pick_shard(id)?;
+        status.set_shard(shard);
+        let cost = runner.placement_cost();
+        self.active[shard].fetch_add(cost, Ordering::Relaxed);
+        let attach = ControlMsg::Attach { session: id, runner: Box::new(runner), consumed_upto };
+        let ctrl = self.ctrl_txs[shard].as_ref().expect("picked shard is live");
+        if ctrl.send(attach).is_err() {
+            self.active[shard].fetch_sub(cost, Ordering::Relaxed);
+            bail!("shard {shard} worker is gone");
+        }
+        self.directory.register(id, state.clone(), status.clone());
+
+        let route = Arc::new(Route::with_seq(
+            self.data_txs[shard].as_ref().expect("picked shard is live").clone(),
+            Arc::clone(&self.metrics.depths[shard]),
+            consumed_upto,
+        ));
+        let monitor_every = self.opts.server.monitor_every.max(1);
+        let producer = {
+            let route = Arc::clone(&route);
+            let ingested = Arc::clone(&self.metrics.ingested);
+            thread::spawn(move || {
+                drive_stream_from(&mut stream, total, monitor_every, consumed_upto, &mut |ev| {
+                    emit_routed(&route, id, ev, &ingested)
+                });
+            })
+        };
+
+        self.next_id = self.next_id.max(id + 1);
+        let handle = SessionHandle { id, name: name.clone(), state, status: status.clone() };
+        self.entries.insert(
+            id,
+            Entry {
+                name,
+                shard,
+                route,
+                producer: Some(producer),
+                status,
+                parked: None,
+                cfg,
+                total,
+            },
+        );
+        Ok(handle)
     }
 
     fn entry(&self, id: u64) -> Result<&Entry> {
@@ -874,6 +1238,7 @@ impl ElasticHub {
             while self.metrics.samples_ingested() < spec.arrive_at
                 && self.any_producer_ingesting()
             {
+                self.autoscale_tick();
                 thread::sleep(Duration::from_millis(1));
             }
             self.attach_spec(spec)?;
@@ -922,10 +1287,10 @@ impl ElasticHub {
         }
         self.data_txs.clear();
 
-        let mut sessions: Vec<SessionReport> = Vec::new();
-        let mut max_queue_depth = 0usize;
+        let mut sessions: Vec<SessionReport> = std::mem::take(&mut self.retired_reports);
+        let mut max_queue_depth = self.retired_max_depth;
         let mut first_err = None;
-        for w in self.workers.drain(..) {
+        for w in self.workers.drain(..).flatten() {
             match w.join() {
                 Ok(Ok((reports, depth))) => {
                     sessions.extend(reports);
@@ -1031,6 +1396,84 @@ fn emit_routed(route: &Route, session: u64, event: StreamEvent, ingested: &Atomi
     drop(st);
     route.cv.notify_all();
     ok
+}
+
+/// Serialize an [`ExperimentConfig`] into a session snapshot. Enums go
+/// as their canonical name strings (`sgd`, `native`, `f64`, …) and are
+/// re-parsed on read, so an unknown variant fails with the same
+/// descriptive error the config layer gives — never a bogus reinterpret.
+pub(crate) fn write_config(w: &mut SnapWriter, cfg: &ExperimentConfig) {
+    w.put_str(&cfg.name);
+    w.put_usize(cfg.m);
+    w.put_usize(cfg.n);
+    w.put_u64(cfg.seed);
+    w.put_usize(cfg.samples);
+    w.put_f64(cfg.convergence_threshold);
+    w.put_str(cfg.optimizer.kind.name());
+    w.put_f64(cfg.optimizer.mu);
+    w.put_f64(cfg.optimizer.gamma);
+    w.put_f64(cfg.optimizer.beta);
+    w.put_usize(cfg.optimizer.p);
+    w.put_str(&cfg.signal.bank);
+    w.put_str(&cfg.signal.mixing);
+    w.put_f64(cfg.signal.omega);
+    w.put_u64(cfg.signal.period);
+    w.put_u64(cfg.signal.switch_at);
+    w.put_f64(cfg.signal.max_cond);
+    w.put_bool(cfg.adapt.enabled);
+    w.put_usize(cfg.adapt.stride);
+    w.put_f64(cfg.adapt.alpha);
+    w.put_f64(cfg.adapt.armed_level);
+    w.put_f64(cfg.adapt.abrupt_level);
+    w.put_f64(cfg.adapt.ph_delta);
+    w.put_f64(cfg.adapt.ph_lambda);
+    w.put_f64(cfg.adapt.boost);
+    w.put_f64(cfg.adapt.tau);
+    w.put_f64(cfg.adapt.floor_c);
+    w.put_f64(cfg.adapt.floor_min);
+    w.put_bool(cfg.adapt.rollback);
+    w.put_str(cfg.engine.name());
+    w.put_str(cfg.precision.name());
+    w.put_str(&cfg.artifacts_dir);
+}
+
+/// Mirror of [`write_config`]. The decoded config is still validated by
+/// the caller — this only rebuilds the fields.
+pub(crate) fn read_config(r: &mut SnapReader<'_>) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = r.get_str()?;
+    cfg.m = r.get_usize()?;
+    cfg.n = r.get_usize()?;
+    cfg.seed = r.get_u64()?;
+    cfg.samples = r.get_usize()?;
+    cfg.convergence_threshold = r.get_f64()?;
+    cfg.optimizer.kind = OptimizerKind::parse(&r.get_str()?)?;
+    cfg.optimizer.mu = r.get_f64()?;
+    cfg.optimizer.gamma = r.get_f64()?;
+    cfg.optimizer.beta = r.get_f64()?;
+    cfg.optimizer.p = r.get_usize()?;
+    cfg.signal.bank = r.get_str()?;
+    cfg.signal.mixing = r.get_str()?;
+    cfg.signal.omega = r.get_f64()?;
+    cfg.signal.period = r.get_u64()?;
+    cfg.signal.switch_at = r.get_u64()?;
+    cfg.signal.max_cond = r.get_f64()?;
+    cfg.adapt.enabled = r.get_bool()?;
+    cfg.adapt.stride = r.get_usize()?;
+    cfg.adapt.alpha = r.get_f64()?;
+    cfg.adapt.armed_level = r.get_f64()?;
+    cfg.adapt.abrupt_level = r.get_f64()?;
+    cfg.adapt.ph_delta = r.get_f64()?;
+    cfg.adapt.ph_lambda = r.get_f64()?;
+    cfg.adapt.boost = r.get_f64()?;
+    cfg.adapt.tau = r.get_f64()?;
+    cfg.adapt.floor_c = r.get_f64()?;
+    cfg.adapt.floor_min = r.get_f64()?;
+    cfg.adapt.rollback = r.get_bool()?;
+    cfg.engine = EngineKind::parse(&r.get_str()?)?;
+    cfg.precision = Precision::parse(&r.get_str()?)?;
+    cfg.artifacts_dir = r.get_str()?;
+    Ok(cfg)
 }
 
 /// Run a config-layer [`HubScenario`] through the elastic lifecycle
@@ -1276,5 +1719,203 @@ mod tests {
             assert_eq!(r.summary.samples + r.summary.tail_dropped, want, "session {}", r.id);
         }
         assert!(sum.total_samples > 0);
+    }
+
+    #[test]
+    fn config_codec_round_trips() {
+        let mut cfg = small_cfg(7);
+        cfg.precision = Precision::F32;
+        cfg.adapt.enabled = true;
+        cfg.signal.mixing = "switching".into();
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        let mut w = SnapWriter::new();
+        write_config(&mut w, &cfg);
+        let payload = w.into_payload();
+        let mut r = SnapReader::from_payload(&payload);
+        let got = read_config(&mut r).unwrap();
+        r.expect_end().unwrap();
+        // Field-exact round trip (f64 Debug formatting is lossless).
+        assert_eq!(format!("{cfg:?}"), format!("{got:?}"));
+    }
+
+    #[test]
+    fn detach_to_disk_restore_continues_bit_identically() {
+        let dir = std::env::temp_dir()
+            .join(format!("easi-durability-{}-{}", std::process::id(), line!()));
+        let mut cfg = small_cfg(9);
+        cfg.samples = 200_000;
+        cfg.adapt.enabled = true;
+
+        // Uninterrupted reference trajectory through the hub.
+        let opts = HubOptions { shards: 1, ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts.clone()).unwrap();
+        hub.attach(cfg.clone()).unwrap();
+        let want = hub.finish().unwrap();
+
+        // Interrupted: progress → detach-to-disk → hub torn down → a
+        // fresh hub (a stand-in for a restarted process) restores.
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts.clone()).unwrap();
+        let h = hub.attach(cfg).unwrap();
+        while h.checkpoint().samples == 0 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let path = hub.detach_to_disk(h.id(), Some(dir.as_path())).unwrap();
+        assert!(path.ends_with("session-0.snap"), "{}", path.display());
+        let empty = hub.finish().unwrap();
+        assert!(empty.sessions.is_empty(), "tenant left the process");
+
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let restored = hub.restore_from_disk(&path).unwrap();
+        assert_eq!(restored.id(), h.id());
+        let got = hub.finish().unwrap();
+        assert_eq!(got.sessions.len(), 1);
+
+        let (a, b) = (&want.sessions[0].summary, &got.sessions[0].summary);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(
+            a.b.as_slice(),
+            b.b.as_slice(),
+            "restored separator must be bit-identical to the uninterrupted run"
+        );
+        assert_eq!(a.amari_history, b.amari_history);
+        assert_eq!(a.resets, b.resets);
+        assert_eq!(a.drift_events, b.drift_events);
+        assert_eq!(a.converged_at, b.converged_at);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_refuses_duplicate_and_missing_snapshots() {
+        let dir = std::env::temp_dir()
+            .join(format!("easi-durability-{}-{}", std::process::id(), line!()));
+        let opts = HubOptions { shards: 1, ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let mut cfg = small_cfg(11);
+        cfg.samples = 200_000;
+        let h = hub.attach(cfg).unwrap();
+        while h.checkpoint().samples == 0 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let path = hub.detach_to_disk(h.id(), Some(dir.as_path())).unwrap();
+        let restored = hub.restore_from_disk(&path).unwrap();
+        // Same id live again: a second restore must refuse, not fork the
+        // tenant.
+        let err = hub.restore_from_disk(&path).err().expect("duplicate restore must fail");
+        assert!(format!("{err:#}").contains("already attached"), "{err:#}");
+        assert!(hub.restore_from_disk(Path::new("/nonexistent/x.snap")).is_err());
+        assert_eq!(restored.id(), h.id());
+        hub.finish().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn autoscale_retires_idle_shards_down_to_the_floor() {
+        use crate::coordinator::hub::AutoscaleOptions;
+        let mut opts = HubOptions { shards: 3, ..Default::default() };
+        opts.autoscale = AutoscaleOptions {
+            enabled: true,
+            min_shards: 1,
+            max_shards: 4,
+            high: 0.75,
+            low: 0.10,
+            sustain: 2,
+        };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        assert_eq!(hub.live_shard_count(), 3);
+        hub.autoscale_tick();
+        assert_eq!(hub.live_shard_count(), 3, "one quiet tick must not retire yet");
+        hub.autoscale_tick();
+        assert_eq!(hub.live_shard_count(), 2, "sustained idle retires a shard");
+        hub.autoscale_tick();
+        hub.autoscale_tick();
+        assert_eq!(hub.live_shard_count(), 1);
+        for _ in 0..4 {
+            hub.autoscale_tick();
+        }
+        assert_eq!(hub.live_shard_count(), 1, "floor holds");
+        let snap = hub.directory().autoscale_log().snapshot();
+        assert_eq!(snap.retires, 2);
+        assert_eq!(snap.active_shards, 1);
+        // The vacated slot is refused for explicit placement; admission
+        // still works on the survivor.
+        let h = hub.attach(small_cfg(21)).unwrap();
+        let err = hub.reattach_to(h.id(), 0).err().expect("slot 0 was retired");
+        assert!(format!("{err:#}").contains("retired"), "{err:#}");
+        hub.finish().unwrap();
+    }
+
+    #[test]
+    fn autoscale_spawns_under_sustained_pressure() {
+        use crate::coordinator::hub::AutoscaleOptions;
+        let mut opts = HubOptions { shards: 1, channel_capacity: 64, ..Default::default() };
+        opts.autoscale = AutoscaleOptions {
+            enabled: true,
+            min_shards: 1,
+            max_shards: 2,
+            high: 0.5,
+            low: 0.10,
+            sustain: 3,
+        };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        assert_eq!(hub.live_shard_count(), 1);
+        // Fake a deep backlog: the pressure signal reads the same gauge
+        // real producers increment before blocking sends.
+        let deep = 2 * block_capacity(64);
+        hub.metrics.depths[0].store(deep, Ordering::Relaxed);
+        hub.autoscale_tick();
+        hub.autoscale_tick();
+        assert_eq!(hub.live_shard_count(), 1, "below sustain: no spawn yet");
+        hub.autoscale_tick();
+        assert_eq!(hub.live_shard_count(), 2, "sustained pressure spawns a worker");
+        let snap = hub.directory().autoscale_log().snapshot();
+        assert_eq!(snap.spawns, 1);
+        assert_eq!(snap.active_shards, 2);
+        assert!(snap.pressure[0] > 1.5, "published pressure tracks the gauge");
+        // At max_shards: further pressure cannot overshoot the envelope.
+        for _ in 0..6 {
+            hub.autoscale_tick();
+        }
+        assert_eq!(hub.live_shard_count(), 2);
+        hub.metrics.depths[0].store(0, Ordering::Relaxed);
+        hub.finish().unwrap();
+    }
+
+    #[test]
+    fn retire_migrates_tenants_bit_identically() {
+        use crate::coordinator::hub::AutoscaleOptions;
+        // Reference: the same session run with no migration.
+        let mut cfg = small_cfg(31);
+        cfg.samples = 60_000;
+        let opts = HubOptions { shards: 1, ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        hub.attach(cfg.clone()).unwrap();
+        let want = hub.finish().unwrap();
+
+        // Victim run: tenant lands on shard 0, which is then retired
+        // mid-stream; the tenant migrates to shard 1 and finishes there.
+        let mut opts = HubOptions { shards: 2, ..Default::default() };
+        opts.autoscale = AutoscaleOptions {
+            enabled: true,
+            min_shards: 1,
+            max_shards: 2,
+            high: 0.75,
+            low: 0.10,
+            sustain: 2,
+        };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let h = hub.attach(cfg).unwrap();
+        assert_eq!(h.status().shard, 0);
+        while h.checkpoint().samples == 0 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        hub.retire_shard(0).unwrap();
+        assert_eq!(h.status().shard, 1, "migrant continues on the survivor");
+        assert_eq!(hub.live_shard_count(), 1);
+        let got = hub.finish().unwrap();
+        assert_eq!(got.sessions.len(), 1);
+        let (a, b) = (&want.sessions[0].summary, &got.sessions[0].summary);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.b.as_slice(), b.b.as_slice(), "migration must not perturb the math");
+        assert_eq!(a.amari_history, b.amari_history);
     }
 }

@@ -20,7 +20,11 @@
 //! control lane beside the data channels), and every tenant's live
 //! health — phase, last Amari, drift events, rollbacks, queue depth —
 //! is observable through the [`state::StateDirectory`] while shards
-//! stream.
+//! stream. The [`net`] module puts that command plane on a socket —
+//! length-prefixed frames over plain TCP (`serve-many --listen`) — and
+//! adds the durability path: tenants detach **to disk** and restore
+//! bit-identically after a process restart, while the autoscaler grows
+//! and shrinks the shard pool from queue-depth pressure.
 //!
 //! The request path is precision-generic: each session's engine runs the
 //! optimizer pipeline in the precision its config selects
@@ -41,17 +45,19 @@ pub mod engine;
 pub mod hub;
 pub mod lifecycle;
 pub mod monitor;
+pub mod net;
 pub mod server;
 pub mod state;
 
 pub use batcher::Chunker;
 pub use engine::{make_engine, CastNativeEngine, Engine, NativeEngine, PjrtEngine};
-pub use hub::{run_hub, Hub, HubMetrics, HubOptions, HubSummary, SessionReport};
+pub use hub::{run_hub, AutoscaleOptions, Hub, HubMetrics, HubOptions, HubSummary, SessionReport};
 pub use lifecycle::{
     build_placement, run_scenario, ElasticHub, LeastLoadedPlacement, ModuloPlacement, Placement,
     SessionHandle,
 };
 pub use monitor::{Monitor, MonitorPoint};
+pub use net::{serve_hub, NetClient, NetStats};
 pub use server::{
     build_stream, run_experiment, run_streaming, RunSummary, ServerOptions, SessionRunner,
 };

@@ -77,6 +77,35 @@ impl Monitor {
         self.history.last().copied()
     }
 
+    /// Serialize the trajectory and convergence-detection state
+    /// (detach-to-disk; the criterion is config-derived at rebuild time).
+    pub fn save_state(&self, w: &mut crate::snapshot::SnapWriter) {
+        w.put_u64(self.history.len() as u64);
+        for p in &self.history {
+            w.put_u64(p.samples);
+            w.put_f64(p.amari);
+        }
+        w.put_usize(self.streak);
+        w.put_opt_u64(self.converged_at);
+        w.put_u64(self.streak_start);
+    }
+
+    /// Rehydrate the state written by [`save_state`](Self::save_state).
+    pub fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> anyhow::Result<()> {
+        let len = r.get_u64()? as usize;
+        let mut history = Vec::with_capacity(len.min(1 << 20));
+        for _ in 0..len {
+            let samples = r.get_u64()?;
+            let amari = r.get_f64()?;
+            history.push(MonitorPoint { samples, amari });
+        }
+        self.history = history;
+        self.streak = r.get_usize()?;
+        self.converged_at = r.get_opt_u64()?;
+        self.streak_start = r.get_u64()?;
+        Ok(())
+    }
+
     /// Worst (max) Amari over the last `k` observations — used by the
     /// adaptive-tracking experiment to quantify re-convergence dips.
     pub fn recent_max(&self, k: usize) -> Option<f64> {

@@ -1,0 +1,602 @@
+//! Dependency-free framed-TCP front for the elastic hub.
+//!
+//! `serve-many --listen ADDR` turns the in-process [`ElasticHub`] into a
+//! network service: remote clients attach tenants, drive lifecycle
+//! commands (pause/resume/detach/checkpoint), read fleet health, run
+//! inference against the latest published separator, and — the durability
+//! path — detach a tenant **to disk** so it survives a process restart
+//! and restore it bit-identically on a fresh server (DESIGN.md §Network
+//! serving).
+//!
+//! # Wire format
+//!
+//! Both directions speak length-prefixed frames over plain TCP:
+//!
+//! ```text
+//! frame    := len:u32 (big-endian)  payload:[u8; len]
+//! request  := opcode:u8  fields…                (snapshot codec, §snapshot)
+//! response := status:u8  fields…                (0 = OK, 1 = ERR + str)
+//! ```
+//!
+//! Payload fields reuse the [`crate::snapshot`] codec (the same
+//! little-endian primitives detach-to-disk snapshots use), so the wire
+//! and the durability format share one encoder. Frames are capped at
+//! [`MAX_FRAME`] bytes; oversized frames poison the connection, never the
+//! hub.
+//!
+//! # Concurrency model
+//!
+//! One handler thread per connection. Mutating lifecycle ops serialize on
+//! a single hub mutex; read-side ops (STATUS, CHECKPOINT, INFER) go
+//! through the lock-free [`StateDirectory`] the shard workers publish
+//! into, so observation and inference never contend with admission. The
+//! accept loop doubles as the autoscaler clock: every idle poll tick it
+//! takes the hub lock briefly to run `autoscale_tick`.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::hub::HubSummary;
+use crate::coordinator::lifecycle::{read_config, write_config, ElasticHub};
+use crate::coordinator::state::{Snapshot, StateDirectory};
+use crate::linalg::Mat64;
+use crate::snapshot::{SnapReader, SnapWriter};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Upper bound on a single frame (requests and responses). Generous for
+/// config payloads and B matrices; small enough that a corrupt length
+/// prefix cannot balloon an allocation.
+pub const MAX_FRAME: u32 = 64 << 20;
+
+/// Command-plane opcodes (request payload byte 0).
+pub mod op {
+    /// config → session id.
+    pub const ATTACH: u8 = 0x01;
+    /// id → () — park in memory (tenant stays restorable via REATTACH).
+    pub const DETACH: u8 = 0x02;
+    /// id → snapshot path — park, serialize, forget (survives restart).
+    pub const DETACH_DISK: u8 = 0x03;
+    /// id → ().
+    pub const PAUSE: u8 = 0x04;
+    /// id → ().
+    pub const RESUME: u8 = 0x05;
+    /// id → (version, samples, B) from the session's state store.
+    pub const CHECKPOINT: u8 = 0x06;
+    /// snapshot path → session id (resumes exactly at the detach cut).
+    pub const RESTORE_DISK: u8 = 0x07;
+    /// () → rendered fleet-health table.
+    pub const STATUS: u8 = 0x08;
+    /// () → aggregate counters (tenants, shards, ingest, autoscale).
+    pub const STATS: u8 = 0x09;
+    /// (id, X rows×m) → Y rows×n through the latest published separator.
+    pub const INFER: u8 = 0x0A;
+    /// (id, optional shard) → hosting shard — resume a parked tenant.
+    pub const REATTACH: u8 = 0x0B;
+    /// () → () — drain the hub and stop the server.
+    pub const SHUTDOWN: u8 = 0x0C;
+}
+
+// ---------------------------------------------------------------------------
+// Framing.
+// ---------------------------------------------------------------------------
+
+fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    ensure!(
+        payload.len() <= MAX_FRAME as usize,
+        "frame of {} bytes exceeds the {} byte cap",
+        payload.len(),
+        MAX_FRAME
+    );
+    w.write_all(&(payload.len() as u32).to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` is a clean close (EOF on a frame
+/// boundary); EOF mid-frame is an error.
+fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut hdr = [0u8; 4];
+    let mut filled = 0;
+    while filled < hdr.len() {
+        match r.read(&mut hdr[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => bail!("connection closed mid-frame header"),
+            Ok(k) => filled += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_be_bytes(hdr);
+    ensure!(len <= MAX_FRAME, "peer announced a {len} byte frame (cap {MAX_FRAME})");
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("connection closed mid-frame body")?;
+    Ok(Some(payload))
+}
+
+fn ok_frame(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + body.len());
+    out.push(0);
+    out.extend_from_slice(body);
+    out
+}
+
+fn err_frame(e: &anyhow::Error) -> Vec<u8> {
+    let mut w = SnapWriter::new();
+    w.put_u8(1);
+    w.put_str(&format!("{e:#}"));
+    w.into_payload()
+}
+
+// ---------------------------------------------------------------------------
+// Server.
+// ---------------------------------------------------------------------------
+
+/// Shared server state. The hub lives behind `Option` so SHUTDOWN can
+/// move it out of the mutex and drain it while late requests get a clean
+/// "shutting down" error instead of a hang.
+struct Shared {
+    hub: Mutex<Option<ElasticHub>>,
+    directory: StateDirectory,
+    stop: AtomicBool,
+}
+
+fn with_hub<T>(st: &Shared, f: impl FnOnce(&mut ElasticHub) -> Result<T>) -> Result<T> {
+    let mut guard = st.hub.lock().map_err(|_| anyhow!("hub lock poisoned"))?;
+    let hub = guard.as_mut().context("hub is shutting down")?;
+    f(hub)
+}
+
+/// Serve the hub's command plane on `listener` until a client sends
+/// SHUTDOWN, then drain every remaining tenant and return the summary.
+///
+/// Prints `LISTENING <addr>` once the socket is ready — process
+/// supervisors (CI's serve-smoke, the load generator's restart phase)
+/// parse that line to learn the ephemeral port when binding `:0`.
+pub fn serve_hub(hub: ElasticHub, listener: TcpListener) -> Result<HubSummary> {
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let addr = listener.local_addr().context("listener local_addr")?;
+    println!("LISTENING {addr}");
+    io::stdout().flush().ok();
+
+    let shared = Arc::new(Shared {
+        directory: hub.directory(),
+        hub: Mutex::new(Some(hub)),
+        stop: AtomicBool::new(false),
+    });
+
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((conn, _peer)) => {
+                let st = Arc::clone(&shared);
+                thread::spawn(move || handle_conn(&st, conn));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                // Idle tick: drive the autoscaler, then back off briefly.
+                if let Ok(mut guard) = shared.hub.lock() {
+                    if let Some(h) = guard.as_mut() {
+                        h.autoscale_tick();
+                    }
+                }
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("accepting connection"),
+        }
+    }
+
+    let hub = shared
+        .hub
+        .lock()
+        .map_err(|_| anyhow!("hub lock poisoned"))?
+        .take()
+        .context("hub already taken at shutdown")?;
+    hub.finish()
+}
+
+fn handle_conn(st: &Shared, conn: TcpStream) {
+    conn.set_nodelay(true).ok();
+    let mut reader = match conn.try_clone() {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let mut writer = conn;
+    loop {
+        let payload = match read_frame(&mut reader) {
+            Ok(Some(p)) => p,
+            // Clean close, torn connection, or oversized frame: the
+            // connection dies; the hub is untouched.
+            Ok(None) | Err(_) => return,
+        };
+        let resp = match dispatch(st, &payload) {
+            Ok(body) => ok_frame(&body),
+            Err(e) => err_frame(&e),
+        };
+        if write_frame(&mut writer, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+fn dispatch(st: &Shared, payload: &[u8]) -> Result<Vec<u8>> {
+    let mut r = SnapReader::from_payload(payload);
+    let opcode = r.get_u8().context("request missing opcode")?;
+    let mut w = SnapWriter::new();
+    match opcode {
+        op::ATTACH => {
+            let cfg = read_config(&mut r).context("decoding attach config")?;
+            let handle = with_hub(st, |h| h.attach(cfg))?;
+            w.put_u64(handle.id());
+        }
+        op::DETACH => {
+            let id = r.get_u64()?;
+            with_hub(st, |h| h.detach(id))?;
+        }
+        op::DETACH_DISK => {
+            let id = r.get_u64()?;
+            let path = with_hub(st, |h| h.detach_to_disk(id, None))?;
+            w.put_str(&path.display().to_string());
+        }
+        op::PAUSE => {
+            let id = r.get_u64()?;
+            with_hub(st, |h| h.pause(id))?;
+        }
+        op::RESUME => {
+            let id = r.get_u64()?;
+            with_hub(st, |h| h.resume(id))?;
+        }
+        op::CHECKPOINT => {
+            let id = r.get_u64()?;
+            let store = st
+                .directory
+                .get(id)
+                .with_context(|| format!("unknown session {id}"))?;
+            let snap = store.snapshot();
+            w.put_u64(snap.version);
+            w.put_u64(snap.samples);
+            w.put_mat64(&snap.b);
+        }
+        op::RESTORE_DISK => {
+            let path = r.get_str()?;
+            let handle = with_hub(st, |h| h.restore_from_disk(path.as_ref()))?;
+            w.put_u64(handle.id());
+        }
+        op::STATUS => {
+            w.put_str(&st.directory.render_status_table());
+        }
+        op::STATS => {
+            let (tenants, live, metrics) = with_hub(st, |h| {
+                Ok((h.sessions_attached(), h.live_shard_count(), h.metrics()))
+            })?;
+            let scale = st.directory.autoscale_log().snapshot();
+            w.put_u64(tenants as u64);
+            w.put_u64(live as u64);
+            w.put_u64(metrics.samples_ingested());
+            w.put_u64(metrics.samples_consumed());
+            w.put_u64(scale.spawns);
+            w.put_u64(scale.retires);
+        }
+        op::INFER => {
+            let id = r.get_u64()?;
+            let x: Mat64 = r.get_mat()?;
+            let store = st
+                .directory
+                .get(id)
+                .with_context(|| format!("unknown session {id}"))?;
+            let b = store.snapshot().b;
+            ensure!(
+                x.cols() == b.cols(),
+                "inference input has {} channels, session {id} expects {}",
+                x.cols(),
+                b.cols()
+            );
+            let mut y = Mat64::zeros(x.rows(), b.rows());
+            for i in 0..x.rows() {
+                b.matvec_into(x.row(i), y.row_mut(i));
+            }
+            w.put_mat64(&y);
+        }
+        op::REATTACH => {
+            let id = r.get_u64()?;
+            let want = r.get_opt_u64()?;
+            let shard = with_hub(st, |h| match want {
+                Some(shard) => {
+                    h.reattach_to(id, shard as usize)?;
+                    Ok(shard as usize)
+                }
+                None => h.reattach(id),
+            })?;
+            w.put_u64(shard as u64);
+        }
+        op::SHUTDOWN => {
+            st.stop.store(true, Ordering::SeqCst);
+        }
+        other => bail!("unknown opcode 0x{other:02X}"),
+    }
+    r.expect_end().context("trailing bytes in request")?;
+    Ok(w.into_payload())
+}
+
+// ---------------------------------------------------------------------------
+// Client.
+// ---------------------------------------------------------------------------
+
+/// Aggregate server counters (`op::STATS`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NetStats {
+    /// Sessions admitted over the hub's lifetime (live + parked + drained).
+    pub tenants: u64,
+    /// Worker shards currently live.
+    pub live_shards: u64,
+    /// Samples accepted onto shard queues, fleet-wide.
+    pub samples_ingested: u64,
+    /// Samples applied by shard workers, fleet-wide.
+    pub samples_consumed: u64,
+    /// Autoscaler spawn decisions.
+    pub spawns: u64,
+    /// Autoscaler retire decisions.
+    pub retires: u64,
+}
+
+/// Blocking client for the hub's framed-TCP command plane. One request
+/// in flight per client; clone connections (`NetClient::connect`) for
+/// concurrency.
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to hub at {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Self { stream })
+    }
+
+    /// Send one request frame, await the response, unwrap the status
+    /// byte. Returns the response body (fields after the status byte).
+    fn call(&mut self, req: SnapWriter) -> Result<Vec<u8>> {
+        write_frame(&mut self.stream, &req.into_payload())?;
+        let payload = read_frame(&mut self.stream)?
+            .context("server closed the connection before replying")?;
+        let mut r = SnapReader::from_payload(&payload);
+        match r.get_u8().context("empty response frame")? {
+            0 => Ok(payload[1..].to_vec()),
+            1 => bail!("{}", r.get_str().unwrap_or_else(|_| "unspecified server error".into())),
+            s => bail!("malformed response status {s}"),
+        }
+    }
+
+    fn req(opcode: u8) -> SnapWriter {
+        let mut w = SnapWriter::new();
+        w.put_u8(opcode);
+        w
+    }
+
+    fn id_op(&mut self, opcode: u8, id: u64) -> Result<Vec<u8>> {
+        let mut w = Self::req(opcode);
+        w.put_u64(id);
+        self.call(w)
+    }
+
+    /// Admit a session; returns its server-assigned id.
+    pub fn attach(&mut self, cfg: &ExperimentConfig) -> Result<u64> {
+        let mut w = Self::req(op::ATTACH);
+        write_config(&mut w, cfg);
+        let body = self.call(w)?;
+        SnapReader::from_payload(&body).get_u64()
+    }
+
+    /// Park a session in server memory (resume with [`NetClient::reattach`]).
+    pub fn detach(&mut self, id: u64) -> Result<()> {
+        self.id_op(op::DETACH, id).map(|_| ())
+    }
+
+    /// Park a session and persist it under the server's state directory;
+    /// returns the snapshot path. The session survives a server restart.
+    pub fn detach_to_disk(&mut self, id: u64) -> Result<String> {
+        let body = self.id_op(op::DETACH_DISK, id)?;
+        SnapReader::from_payload(&body).get_str()
+    }
+
+    pub fn pause(&mut self, id: u64) -> Result<()> {
+        self.id_op(op::PAUSE, id).map(|_| ())
+    }
+
+    pub fn resume(&mut self, id: u64) -> Result<()> {
+        self.id_op(op::RESUME, id).map(|_| ())
+    }
+
+    /// The session's latest published checkpoint.
+    pub fn checkpoint(&mut self, id: u64) -> Result<Snapshot> {
+        let body = self.id_op(op::CHECKPOINT, id)?;
+        let mut r = SnapReader::from_payload(&body);
+        Ok(Snapshot { version: r.get_u64()?, samples: r.get_u64()?, b: r.get_mat64()? })
+    }
+
+    /// Restore a detached-to-disk session from a snapshot path *on the
+    /// server's filesystem*; returns its (original) id.
+    pub fn restore_from_disk(&mut self, path: &str) -> Result<u64> {
+        let mut w = Self::req(op::RESTORE_DISK);
+        w.put_str(path);
+        let body = self.call(w)?;
+        SnapReader::from_payload(&body).get_u64()
+    }
+
+    /// The rendered fleet-health table (same text as `--status-every`).
+    pub fn status_table(&mut self) -> Result<String> {
+        let body = self.call(Self::req(op::STATUS))?;
+        SnapReader::from_payload(&body).get_str()
+    }
+
+    pub fn stats(&mut self) -> Result<NetStats> {
+        let body = self.call(Self::req(op::STATS))?;
+        let mut r = SnapReader::from_payload(&body);
+        Ok(NetStats {
+            tenants: r.get_u64()?,
+            live_shards: r.get_u64()?,
+            samples_ingested: r.get_u64()?,
+            samples_consumed: r.get_u64()?,
+            spawns: r.get_u64()?,
+            retires: r.get_u64()?,
+        })
+    }
+
+    /// Separate `x` (rows × m) through the session's latest separator;
+    /// returns Y (rows × n).
+    pub fn infer(&mut self, id: u64, x: &Mat64) -> Result<Mat64> {
+        let mut w = Self::req(op::INFER);
+        w.put_u64(id);
+        w.put_mat64(x);
+        let body = self.call(w)?;
+        SnapReader::from_payload(&body).get_mat64()
+    }
+
+    /// Resume a parked session; `shard` pins placement, `None` lets the
+    /// hub's placement policy choose. Returns the hosting shard.
+    pub fn reattach(&mut self, id: u64, shard: Option<u64>) -> Result<u64> {
+        let mut w = Self::req(op::REATTACH);
+        w.put_u64(id);
+        w.put_opt_u64(shard);
+        let body = self.call(w)?;
+        SnapReader::from_payload(&body).get_u64()
+    }
+
+    /// Drain the hub and stop the server (`serve_hub` returns after this).
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.call(Self::req(op::SHUTDOWN)).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::ica::Nonlinearity;
+    use crate::coordinator::hub::HubOptions;
+
+    fn small_cfg(seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("net-{seed}");
+        cfg.seed = seed;
+        cfg.samples = 6_000;
+        cfg.optimizer.mu = 0.004;
+        cfg
+    }
+
+    fn start_server(opts: HubOptions) -> (String, thread::JoinHandle<Result<HubSummary>>) {
+        let hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = thread::spawn(move || serve_hub(hub, listener));
+        (addr, server)
+    }
+
+    #[test]
+    fn frame_round_trip_and_caps() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        assert_eq!(&buf[..4], &5u32.to_be_bytes());
+        let mut cur = io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), b"hello");
+        assert!(read_frame(&mut cur).unwrap().is_none(), "clean EOF");
+
+        // A poisoned length prefix must be refused before allocation.
+        let mut bad = io::Cursor::new((MAX_FRAME + 1).to_be_bytes().to_vec());
+        assert!(read_frame(&mut bad).is_err());
+
+        // EOF inside a frame is torn, not clean.
+        let mut torn = Vec::new();
+        write_frame(&mut torn, b"hello").unwrap();
+        torn.truncate(6);
+        assert!(read_frame(&mut io::Cursor::new(torn)).is_err());
+    }
+
+    #[test]
+    fn serve_attach_checkpoint_infer_shutdown() {
+        let (addr, server) = start_server(HubOptions { shards: 2, ..Default::default() });
+        let mut c = NetClient::connect(&addr).unwrap();
+
+        let id = c.attach(&small_cfg(3)).unwrap();
+        // Wait for the drain so B is final — otherwise the checkpoint
+        // fetched here and the separator INFER reads later could differ.
+        while !c.status_table().unwrap().contains("drained") {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let snap = c.checkpoint(id).unwrap();
+        assert!(snap.version > 0);
+        assert!(snap.samples > 0);
+
+        // Inference through the published separator matches local matvec.
+        let m = snap.b.cols();
+        let x = Mat64::from_fn(3, m, |i, j| (i * m + j) as f64 * 0.1 - 0.4);
+        let y = c.infer(id, &x).unwrap();
+        assert_eq!(y.shape(), (3, snap.b.rows()));
+        for i in 0..3 {
+            assert_eq!(y.row(i), &snap.b.matvec(x.row(i))[..]);
+        }
+
+        let table = c.status_table().unwrap();
+        assert!(table.contains("session"), "{table}");
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.tenants, 1);
+        assert_eq!(stats.live_shards, 2);
+        assert!(stats.samples_ingested > 0);
+
+        // Unknown session errors travel back as messages, not hangs.
+        let err = c.checkpoint(999).err().expect("unknown id");
+        assert!(format!("{err:#}").contains("unknown session 999"), "{err:#}");
+
+        c.shutdown().unwrap();
+        let sum = server.join().unwrap().unwrap();
+        assert_eq!(sum.sessions.len(), 1);
+    }
+
+    #[test]
+    fn serve_detach_to_disk_restore_round_trip() {
+        let dir = std::env::temp_dir()
+            .join(format!("easi-net-durability-{}", std::process::id()));
+        // Reference: the same tenant served uninterrupted.
+        let mut cfg = small_cfg(17);
+        cfg.samples = 60_000;
+        let opts =
+            HubOptions { shards: 1, state_dir: Some(dir.clone()), ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts.clone()).unwrap();
+        hub.attach(cfg.clone()).unwrap();
+        let want = hub.finish().unwrap();
+
+        // Server A: attach, make progress, detach to disk, shut down.
+        let (addr, server) = start_server(opts.clone());
+        let mut c = NetClient::connect(&addr).unwrap();
+        let id = c.attach(&cfg).unwrap();
+        while c.checkpoint(id).unwrap().samples == 0 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let path = c.detach_to_disk(id).unwrap();
+        c.shutdown().unwrap();
+        assert!(server.join().unwrap().unwrap().sessions.is_empty());
+
+        // Server B (fresh hub = restarted process): restore and drain.
+        let (addr, server) = start_server(opts);
+        let mut c = NetClient::connect(&addr).unwrap();
+        let restored = c.restore_from_disk(&path).unwrap();
+        assert_eq!(restored, id);
+        // Shutdown drains the restored tenant to completion before the
+        // summary is built, so no progress polling is needed here.
+        c.shutdown().unwrap();
+        let got = server.join().unwrap().unwrap();
+
+        let (a, b) = (&want.sessions[0].summary, &got.sessions[0].summary);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(
+            a.b.as_slice(),
+            b.b.as_slice(),
+            "restore over the wire must be bit-identical"
+        );
+        assert_eq!(a.amari_history, b.amari_history);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -14,7 +14,7 @@
 use super::batcher::Chunker;
 use super::engine::{CohortLane, Engine};
 use super::monitor::{Monitor, MonitorPoint};
-use super::state::{SessionPhase, StateStore, StatusCell};
+use super::state::{SessionPhase, Snapshot, StateStore, StatusCell};
 use crate::adapt::AdaptiveController;
 use crate::config::ExperimentConfig;
 use crate::ica::{ConvergenceCriterion, Nonlinearity};
@@ -76,29 +76,61 @@ pub(crate) fn drive_stream(
     monitor_every: usize,
     emit: &mut dyn FnMut(StreamEvent) -> bool,
 ) {
+    drive_stream_from(stream, total, monitor_every, 0, emit)
+}
+
+/// [`drive_stream`] with replay: the event schedule is a deterministic
+/// function of `(total, monitor_every)`, so a restored session's producer
+/// re-runs the identical schedule from the stream's seed and suppresses
+/// the first `skip_events` events — the ones the consumer already applied
+/// before it was detached to disk (its parked `consumed_upto` sequence
+/// number; routed events are numbered from 1). Suppressed batches still
+/// advance the stream sample-by-sample so the RNG state, mixing clock,
+/// and every later event are bit-identical to the uninterrupted run.
+/// `End` is always emitted.
+pub(crate) fn drive_stream_from(
+    stream: &mut MixedStream,
+    total: usize,
+    monitor_every: usize,
+    skip_events: u64,
+    emit: &mut dyn FnMut(StreamEvent) -> bool,
+) {
     let m = stream.m();
     let monitor_every = monitor_every.max(1);
     let mut x = vec![0.0; m];
+    let mut idx: u64 = 0;
     // Initial mixing snapshot so the monitor can evaluate early.
-    if !emit(StreamEvent::Mixing(stream.current_mixing())) {
+    idx += 1;
+    if idx > skip_events && !emit(StreamEvent::Mixing(stream.current_mixing())) {
         return;
     }
     let mut produced = 0usize;
     let mut next_monitor = monitor_every;
     while produced < total {
         let rows = PRODUCER_BLOCK.min(total - produced);
-        let mut block = Mat64::zeros(rows, m);
-        for r in 0..rows {
-            stream.next_into(&mut x, None);
-            block.row_mut(r).copy_from_slice(&x);
-        }
-        produced += rows;
-        if !emit(StreamEvent::Batch(block)) {
-            return;
+        idx += 1;
+        if idx > skip_events {
+            let mut block = Mat64::zeros(rows, m);
+            for r in 0..rows {
+                stream.next_into(&mut x, None);
+                block.row_mut(r).copy_from_slice(&x);
+            }
+            produced += rows;
+            if !emit(StreamEvent::Batch(block)) {
+                return;
+            }
+        } else {
+            // Replayed prefix: advance the stream without materializing
+            // or sending the block.
+            for _ in 0..rows {
+                stream.next_into(&mut x, None);
+            }
+            produced += rows;
         }
         if produced >= next_monitor {
             next_monitor += monitor_every;
-            if !emit(StreamEvent::Mixing(stream.current_mixing())) {
+            idx += 1;
+            if idx > skip_events && !emit(StreamEvent::Mixing(stream.current_mixing())) {
                 return;
             }
         }
@@ -174,6 +206,20 @@ impl Agc {
         let gain = 1.0 / self.ema_power.max(1e-12).sqrt();
         x.iter_mut().for_each(|v| *v *= gain);
         gain
+    }
+
+    /// Serialize the gain state (detach-to-disk; `alpha` is
+    /// config-derived at rebuild time).
+    pub(crate) fn save_state(&self, w: &mut crate::snapshot::SnapWriter) {
+        w.put_f64(self.ema_power);
+        w.put_bool(self.primed);
+    }
+
+    /// Rehydrate the state written by [`save_state`](Self::save_state).
+    pub(crate) fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> Result<()> {
+        self.ema_power = r.get_f64()?;
+        self.primed = r.get_bool()?;
+        Ok(())
     }
 }
 
@@ -553,6 +599,79 @@ impl SessionRunner {
         self.adapt.as_ref()
     }
 
+    /// Serialize everything a restarted process needs to continue this
+    /// session bit-identically: engine (optimizer clocks + accumulators),
+    /// chunker partial, monitor trajectory, AGC gain, ground-truth mixing
+    /// cache, warm start, guard counters, adaptive control plane, and the
+    /// published [`StateStore`] snapshot (so version numbering continues
+    /// where it left off). The service clock and transient queue-depth
+    /// observation restart fresh. Fails for engines without a state seam
+    /// (PJRT).
+    pub fn save_state(&self, w: &mut crate::snapshot::SnapWriter) -> Result<()> {
+        self.engine.save_state(w)?;
+        self.chunker.save_state(w);
+        self.monitor.save_state(w);
+        self.agc.save_state(w);
+        w.put_mat64(&self.current_a);
+        w.put_bool(self.have_a);
+        w.put_mat64(&self.warm_start);
+        w.put_u64(self.resets);
+        w.put_bool(self.adapt.is_some());
+        if let Some(ctrl) = &self.adapt {
+            ctrl.save_state(w);
+        }
+        let snap = self.state.snapshot();
+        w.put_u64(snap.version);
+        w.put_u64(snap.samples);
+        w.put_mat64(&snap.b);
+        Ok(())
+    }
+
+    /// Rehydrate the state written by [`save_state`](Self::save_state)
+    /// into a freshly constructed runner (same config, same options).
+    /// Deliberately not [`install_b`](Self::install_b): a restore
+    /// continues the old convergence story instead of re-arming it, and
+    /// installs the engine's full optimizer state, not just B.
+    pub fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> Result<()> {
+        self.engine.load_state(r)?;
+        self.chunker.load_state(r)?;
+        self.monitor.load_state(r)?;
+        self.agc.load_state(r)?;
+        let current_a = r.get_mat64()?;
+        anyhow::ensure!(
+            current_a.shape() == self.current_a.shape(),
+            "snapshot mixing cache is {:?}, session expects {:?}",
+            current_a.shape(),
+            self.current_a.shape()
+        );
+        self.current_a = current_a;
+        self.have_a = r.get_bool()?;
+        let warm_start = r.get_mat64()?;
+        anyhow::ensure!(
+            warm_start.shape() == self.warm_start.shape(),
+            "snapshot warm start is {:?}, session expects {:?}",
+            warm_start.shape(),
+            self.warm_start.shape()
+        );
+        self.warm_start = warm_start;
+        self.resets = r.get_u64()?;
+        let had_adapt = r.get_bool()?;
+        anyhow::ensure!(
+            had_adapt == self.adapt.is_some(),
+            "snapshot was taken with the adaptive control plane {}, but this session has it {}",
+            if had_adapt { "enabled" } else { "disabled" },
+            if self.adapt.is_some() { "enabled" } else { "disabled" }
+        );
+        if let Some(ctrl) = self.adapt.as_mut() {
+            ctrl.load_state(r)?;
+        }
+        let version = r.get_u64()?;
+        let samples = r.get_u64()?;
+        let b = r.get_mat64()?;
+        self.state.restore(Snapshot { version, samples, b });
+        Ok(())
+    }
+
     /// Finalize: drop the partial tail chunk and assemble the summary.
     pub fn finish(mut self) -> RunSummary {
         let tail = self.chunker.take_partial().map(|t| t.rows() as u64).unwrap_or(0);
@@ -866,6 +985,104 @@ mod tests {
             conv > 25_000,
             "converged_at {conv} should postdate the switch (monitor re-armed)"
         );
+    }
+
+    #[test]
+    fn drive_stream_from_replays_identical_suffix() {
+        let cfg = small_cfg();
+        let mut all = Vec::new();
+        let mut s1 = build_stream(&cfg).unwrap();
+        drive_stream(&mut s1, 2000, 256, &mut |ev| {
+            all.push(ev);
+            true
+        });
+        let skip = 3u64;
+        let mut tail = Vec::new();
+        let mut s2 = build_stream(&cfg).unwrap();
+        drive_stream_from(&mut s2, 2000, 256, skip, &mut |ev| {
+            tail.push(ev);
+            true
+        });
+        assert_eq!(all.len(), tail.len() + skip as usize);
+        for (a, b) in all.iter().skip(skip as usize).zip(&tail) {
+            match (a, b) {
+                (StreamEvent::Batch(x), StreamEvent::Batch(y)) => assert_eq!(x, y),
+                (StreamEvent::Mixing(x), StreamEvent::Mixing(y)) => assert_eq!(x, y),
+                (StreamEvent::End, StreamEvent::End) => {}
+                _ => panic!("replayed event kind diverged"),
+            }
+        }
+    }
+
+    #[test]
+    fn session_runner_snapshot_round_trip_is_bit_identical() {
+        // The detach-to-disk contract at the runner level: save mid-stream,
+        // rebuild a fresh runner from config, load, feed the remaining
+        // events — the final B, sample count, and counters must be bitwise
+        // those of the uninterrupted run.
+        let mut cfg = small_cfg();
+        cfg.samples = 8_000;
+        cfg.adapt.enabled = true;
+        let opts = ServerOptions::default();
+        let reference = {
+            let engine = super::super::engine::make_engine(&cfg, Nonlinearity::Cube).unwrap();
+            let state = StateStore::new(crate::ica::init_b(cfg.n, cfg.m));
+            run_streaming(&cfg, engine, opts, &state).unwrap()
+        };
+
+        let mut events = Vec::new();
+        let mut stream = build_stream(&cfg).unwrap();
+        drive_stream(&mut stream, cfg.samples, opts.monitor_every, &mut |ev| {
+            events.push(ev);
+            true
+        });
+        let cut = events.len() / 2;
+        let engine = super::super::engine::make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        let mut runner = SessionRunner::new(
+            &cfg,
+            engine,
+            &opts,
+            StateStore::new(crate::ica::init_b(cfg.n, cfg.m)),
+        );
+        let mut iter = events.into_iter();
+        for ev in iter.by_ref().take(cut) {
+            match ev {
+                StreamEvent::Batch(b) => runner.on_block(b).unwrap(),
+                StreamEvent::Mixing(a) => runner.on_mixing(a),
+                StreamEvent::End => {}
+            }
+        }
+        let mut w = crate::snapshot::SnapWriter::new();
+        runner.save_state(&mut w).unwrap();
+        let payload = w.into_payload();
+        let cut_version = runner.state().version();
+        drop(runner);
+
+        let engine = super::super::engine::make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        let mut restored = SessionRunner::new(
+            &cfg,
+            engine,
+            &opts,
+            StateStore::new(crate::ica::init_b(cfg.n, cfg.m)),
+        );
+        let mut r = crate::snapshot::SnapReader::from_payload(&payload);
+        restored.load_state(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(restored.state().version(), cut_version, "version continuity");
+        for ev in iter {
+            match ev {
+                StreamEvent::Batch(b) => restored.on_block(b).unwrap(),
+                StreamEvent::Mixing(a) => restored.on_mixing(a),
+                StreamEvent::End => {}
+            }
+        }
+        let sum = restored.finish();
+        assert_eq!(sum.b, reference.b, "restored trajectory diverged");
+        assert_eq!(sum.samples, reference.samples);
+        assert_eq!(sum.resets, reference.resets);
+        assert_eq!(sum.drift_events, reference.drift_events);
+        assert_eq!(sum.converged_at, reference.converged_at);
+        assert_eq!(sum.amari_history, reference.amari_history);
     }
 
     #[test]

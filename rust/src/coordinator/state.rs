@@ -56,6 +56,14 @@ impl StateStore {
         self.inner.read().expect("state lock poisoned").clone()
     }
 
+    /// Install a snapshot wholesale (detach-to-disk restore). Subsequent
+    /// publishes continue the version sequence from the restored point, so
+    /// a restored session's version trajectory matches an uninterrupted
+    /// run of the same stream.
+    pub fn restore(&self, snap: Snapshot) {
+        *self.inner.write().expect("state lock poisoned") = snap;
+    }
+
     /// Latest version number.
     pub fn version(&self) -> u64 {
         self.inner.read().expect("state lock poisoned").version
@@ -215,6 +223,57 @@ impl StatusCell {
     }
 }
 
+/// One coherent view of the shard autoscaler: lifetime spawn/retire
+/// counts, the live shard count, and the latest per-shard ingest pressure
+/// (queue depth over capacity, in [0, 1]).
+#[derive(Clone, Debug, Default)]
+pub struct AutoscaleSnapshot {
+    /// Workers spawned by the autoscaler over the hub's lifetime.
+    pub spawns: u64,
+    /// Workers retired by the autoscaler over the hub's lifetime.
+    pub retires: u64,
+    /// Shards currently live (0 until the autoscaler first publishes).
+    pub active_shards: usize,
+    /// Latest pressure reading per shard slot (NaN for retired slots).
+    pub pressure: Vec<f64>,
+}
+
+/// Shared, cloneable feed of autoscaler decisions — written by the hub's
+/// `autoscale_tick`, read by the `serve-many` observer and the status
+/// table so scaling activity is visible while the fleet runs.
+#[derive(Clone, Default)]
+pub struct AutoscaleLog {
+    inner: Arc<RwLock<AutoscaleSnapshot>>,
+}
+
+impl AutoscaleLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish the live shard count and per-slot pressure readings.
+    pub fn publish(&self, active_shards: usize, pressure: Vec<f64>) {
+        let mut g = self.inner.write().expect("autoscale lock poisoned");
+        g.active_shards = active_shards;
+        g.pressure = pressure;
+    }
+
+    /// Count a scale-up decision.
+    pub fn note_spawn(&self) {
+        self.inner.write().expect("autoscale lock poisoned").spawns += 1;
+    }
+
+    /// Count a scale-down decision.
+    pub fn note_retire(&self) {
+        self.inner.write().expect("autoscale lock poisoned").retires += 1;
+    }
+
+    /// Current view (cloned out; readers never hold the lock long).
+    pub fn snapshot(&self) -> AutoscaleSnapshot {
+        self.inner.read().expect("autoscale lock poisoned").clone()
+    }
+}
+
 /// One registered tenant: separation matrix plus health record.
 #[derive(Clone)]
 struct Tenant {
@@ -231,6 +290,7 @@ struct Tenant {
 #[derive(Clone, Default)]
 pub struct StateDirectory {
     inner: Arc<RwLock<BTreeMap<u64, Tenant>>>,
+    autoscale: AutoscaleLog,
 }
 
 impl StateDirectory {
@@ -281,15 +341,29 @@ impl StateDirectory {
             .collect()
     }
 
+    /// The autoscaler's shared decision feed (the hub writes, observers
+    /// read).
+    pub fn autoscale_log(&self) -> AutoscaleLog {
+        self.autoscale.clone()
+    }
+
     /// Render the live fleet-health table (`serve-many --status-every`).
+    /// The `press` column is the hosting shard's latest ingest pressure
+    /// as seen by the autoscaler (`-` until it publishes a reading), and
+    /// a footer summarizes scaling activity once any occurred.
     pub fn render_status_table(&self) -> String {
+        let scale = self.autoscale.snapshot();
         let mut out = String::new();
         out.push_str(
-            "session  phase      shard    samples    amari  resets  drifts  rollbk  depth\n",
+            "session  phase      shard    samples    amari  resets  drifts  rollbk  depth  press\n",
         );
         for s in self.statuses() {
+            let press = match scale.pressure.get(s.shard) {
+                Some(p) if p.is_finite() => format!("{p:>5.2}"),
+                _ => format!("{:>5}", "-"),
+            };
             out.push_str(&format!(
-                "{:>7}  {:<9}  {:>5}  {:>9}  {:>7.4}  {:>6}  {:>6}  {:>6}  {:>5}\n",
+                "{:>7}  {:<9}  {:>5}  {:>9}  {:>7.4}  {:>6}  {:>6}  {:>6}  {:>5}  {}\n",
                 s.id,
                 s.phase.name(),
                 s.shard,
@@ -298,7 +372,14 @@ impl StateDirectory {
                 s.resets,
                 s.drift_events,
                 s.rollbacks,
-                s.queue_depth
+                s.queue_depth,
+                press
+            ));
+        }
+        if scale.active_shards > 0 || scale.spawns > 0 || scale.retires > 0 {
+            out.push_str(&format!(
+                "autoscaler: shards={} spawns={} retires={}\n",
+                scale.active_shards, scale.spawns, scale.retires
             ));
         }
         out
@@ -433,6 +514,36 @@ mod tests {
         // `insert` still registers an (anonymous) health record.
         dir.insert(6, StateStore::new(Mat64::eye(2, 2)));
         assert_eq!(dir.status(6).unwrap().phase, SessionPhase::Admitted);
+    }
+
+    #[test]
+    fn restore_installs_snapshot_wholesale() {
+        let st = StateStore::new(Mat64::eye(2, 2));
+        st.publish(Mat64::zeros(2, 2), 10);
+        st.restore(Snapshot { version: 42, samples: 1000, b: Mat64::eye(2, 2) });
+        assert_eq!(st.version(), 42);
+        assert_eq!(st.snapshot().samples, 1000);
+        // Publishes continue the restored version sequence.
+        assert_eq!(st.publish(Mat64::zeros(2, 2), 1100), 43);
+    }
+
+    #[test]
+    fn autoscale_log_feeds_status_table() {
+        let dir = StateDirectory::new();
+        let cell = StatusCell::new(1, "t1");
+        dir.register(1, StateStore::new(Mat64::eye(2, 2)), cell.clone());
+        cell.set_shard(0);
+        let table = dir.render_status_table();
+        assert!(table.contains("press"), "{table}");
+        assert!(!table.contains("autoscaler:"), "no footer before activity: {table}");
+        let log = dir.autoscale_log();
+        log.note_spawn();
+        log.publish(2, vec![0.84, 0.12]);
+        let table = dir.render_status_table();
+        assert!(table.contains("0.84"), "{table}");
+        assert!(table.contains("autoscaler: shards=2 spawns=1 retires=0"), "{table}");
+        // The log handle is shared through directory clones.
+        assert_eq!(dir.clone().autoscale_log().snapshot().spawns, 1);
     }
 
     #[test]

@@ -191,6 +191,33 @@ impl<T: Scalar> Optimizer<T> for EasiSgd<T> {
     fn note_cohort_rows(&mut self, rows: u64) {
         self.samples += rows;
     }
+
+    fn save_state(&self, w: &mut crate::snapshot::SnapWriter) -> anyhow::Result<()> {
+        // g comes from config at reconstruction time; everything learned
+        // or clock-like is here. The matrix widens to f64 losslessly.
+        w.put_str(self.name());
+        w.put_mat(&self.b);
+        w.put_f64(self.mu);
+        w.put_bool(self.normalized);
+        w.put_u64(self.samples);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> anyhow::Result<()> {
+        crate::snapshot::expect_tag(r, self.name())?;
+        let b: Mat<T> = r.get_mat()?;
+        anyhow::ensure!(
+            b.shape() == self.b.shape(),
+            "snapshot B is {:?}, session expects {:?}",
+            b.shape(),
+            self.b.shape()
+        );
+        self.b = b;
+        self.mu = r.get_f64()?;
+        self.normalized = r.get_bool()?;
+        self.samples = r.get_u64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

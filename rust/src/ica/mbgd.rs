@@ -132,6 +132,41 @@ impl<T: Scalar> Optimizer<T> for Mbgd<T> {
         assert!(mu > 0.0);
         self.mu = mu;
     }
+
+    fn save_state(&self, w: &mut crate::snapshot::SnapWriter) -> anyhow::Result<()> {
+        w.put_str(self.name());
+        w.put_mat(&self.b);
+        w.put_f64(self.mu);
+        w.put_u64(self.samples);
+        w.put_usize(self.p_idx);
+        w.put_mat(&self.hsum);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> anyhow::Result<()> {
+        crate::snapshot::expect_tag(r, self.name())?;
+        let b: Mat<T> = r.get_mat()?;
+        anyhow::ensure!(
+            b.shape() == self.b.shape(),
+            "snapshot B is {:?}, session expects {:?}",
+            b.shape(),
+            self.b.shape()
+        );
+        self.b = b;
+        self.mu = r.get_f64()?;
+        self.samples = r.get_u64()?;
+        self.p_idx = r.get_usize()?;
+        anyhow::ensure!(
+            self.p_idx < self.p,
+            "snapshot batch position {} is outside P = {}",
+            self.p_idx,
+            self.p
+        );
+        let hsum: Mat<T> = r.get_mat()?;
+        anyhow::ensure!(hsum.shape() == self.hsum.shape(), "snapshot accumulator shape mismatch");
+        self.hsum = hsum;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -84,6 +84,23 @@ pub trait Optimizer<T: Scalar = f64>: Send {
     /// Only called on optimizers that returned `Some` from
     /// [`cohort_plain`](Self::cohort_plain); default is a no-op.
     fn note_cohort_rows(&mut self, _rows: u64) {}
+
+    /// Serialize the optimizer's full learning state (matrix, rate,
+    /// accumulators, sample clock) into a detach-to-disk snapshot. The
+    /// format is a contract with [`load_state`](Self::load_state): a
+    /// restored optimizer continues **bit-identically**. Default: error —
+    /// optimizers that never grew a snapshot story (schedules, quantized
+    /// wrappers) refuse instead of silently persisting half their state.
+    fn save_state(&self, _w: &mut crate::snapshot::SnapWriter) -> anyhow::Result<()> {
+        anyhow::bail!("optimizer '{}' does not support state snapshots", self.name())
+    }
+
+    /// Rehydrate the state written by [`save_state`](Self::save_state).
+    /// The optimizer must already be constructed with the same config
+    /// (kind, shape, nonlinearity); this installs the learned state.
+    fn load_state(&mut self, _r: &mut crate::snapshot::SnapReader<'_>) -> anyhow::Result<()> {
+        anyhow::bail!("optimizer '{}' does not support state snapshots", self.name())
+    }
 }
 
 /// Build an optimizer from an [`OptimizerConfig`] with an identity-like

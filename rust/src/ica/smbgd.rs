@@ -267,6 +267,52 @@ impl<T: Scalar> Optimizer<T> for Smbgd<T> {
         assert!(mu > 0.0);
         self.params.mu = mu;
     }
+
+    fn save_state(&self, w: &mut crate::snapshot::SnapWriter) -> anyhow::Result<()> {
+        // γ, β, P and g are config-time constants re-supplied at
+        // reconstruction; μ is governed at runtime so it persists. The
+        // accumulators are what make a mid-batch cut bit-exact.
+        w.put_str(self.name());
+        w.put_mat(&self.b);
+        w.put_f64(self.params.mu);
+        w.put_u64(self.samples);
+        w.put_usize(self.p_idx);
+        w.put_u64(self.batches);
+        w.put_mat(&self.hhat);
+        w.put_mat(&self.hhat_prev);
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> anyhow::Result<()> {
+        crate::snapshot::expect_tag(r, self.name())?;
+        let b: Mat<T> = r.get_mat()?;
+        anyhow::ensure!(
+            b.shape() == self.b.shape(),
+            "snapshot B is {:?}, session expects {:?}",
+            b.shape(),
+            self.b.shape()
+        );
+        self.b = b;
+        self.params.mu = r.get_f64()?;
+        self.samples = r.get_u64()?;
+        self.p_idx = r.get_usize()?;
+        anyhow::ensure!(
+            self.p_idx < self.params.p,
+            "snapshot mini-batch position {} is outside P = {}",
+            self.p_idx,
+            self.params.p
+        );
+        self.batches = r.get_u64()?;
+        let hhat: Mat<T> = r.get_mat()?;
+        let hhat_prev: Mat<T> = r.get_mat()?;
+        anyhow::ensure!(
+            hhat.shape() == self.hhat.shape() && hhat_prev.shape() == self.hhat_prev.shape(),
+            "snapshot accumulator shape mismatch"
+        );
+        self.hhat = hhat;
+        self.hhat_prev = hhat_prev;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

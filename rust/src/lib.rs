@@ -37,6 +37,7 @@ pub mod linalg;
 pub mod perf;
 pub mod runtime;
 pub mod signal;
+pub mod snapshot;
 pub mod testkit;
 
 /// Crate version (mirrors Cargo.toml).

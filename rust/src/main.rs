@@ -8,7 +8,9 @@ use easi_ica::cli::{usage, Args};
 use easi_ica::config::{
     EngineKind, ExperimentConfig, HubScenario, OptimizerKind, PlacementKind, Precision,
 };
-use easi_ica::coordinator::{run_experiment, ElasticHub, HubOptions, RunSummary};
+use easi_ica::coordinator::{
+    run_experiment, serve_hub, ElasticHub, HubOptions, RunSummary, SessionPhase,
+};
 use easi_ica::experiments::{
     a1_hyper_sweep, a2_nonlinearity, a3_adaptive_tracking, drift_study, e1_convergence,
     e3_depth_sweep, DriftStudyParams, E1Params, TrackingParams,
@@ -172,6 +174,7 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
         "config", "sessions", "shards", "samples", "capacity", "mixing", "precision", "mu",
         "gamma", "beta", "p", "optimizer", "engine", "seed", "seed-stride", "m", "n",
         "artifacts", "adapt", "switch-at", "placement", "churn", "status-every", "cohort",
+        "listen", "state-dir", "autoscale-max",
     ])?;
     let mut sc = if let Some(path) = args.get("config") {
         HubScenario::load(path)?
@@ -208,6 +211,19 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
     }
     if let Some(c) = args.get("cohort") {
         sc.cohort = parse_on_off("cohort", c)?;
+    }
+    if let Some(addr) = args.get("listen") {
+        sc.listen = Some(addr.to_string());
+    }
+    if let Some(dir) = args.get("state-dir") {
+        sc.state_dir = Some(dir.to_string());
+    }
+    // `--autoscale-max N` turns elasticity on with the scenario's (or
+    // default) thresholds; N caps the worker pool.
+    let autoscale_max = args.get_usize("autoscale-max", 0)?;
+    if autoscale_max > 0 {
+        sc.autoscale_enabled = true;
+        sc.autoscale_max = autoscale_max;
     }
     if let Some(churn) = args.get("churn") {
         // `--churn S` staggers arrivals by S aggregate-ingested samples;
@@ -257,13 +273,19 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
         },
     );
 
-    let hub = ElasticHub::start(Nonlinearity::Cube, HubOptions::from_scenario(&sc))?;
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, HubOptions::from_scenario(&sc))?;
     // Live health observer: print the StateDirectory status table on a
     // fixed cadence while the fleet trains (`--status-every` millis).
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
     let observer = (status_every > 0).then(|| {
         let directory = hub.directory();
         let stop = std::sync::Arc::clone(&stop);
+        // In batch mode the fleet is finite: once every admitted tenant
+        // has drained there is nothing left to watch, so the observer
+        // exits instead of re-rendering a frozen table until the hub's
+        // summary lands. A network server never quiesces this way — new
+        // tenants can attach over the socket at any time.
+        let exit_on_quiesce = sc.listen.is_none();
         std::thread::spawn(move || {
             // Sleep in short slices so the command exits promptly when the
             // run drains, instead of stalling up to a full interval.
@@ -275,11 +297,36 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
                 if slept >= status_every {
                     slept = 0;
                     println!("{}", directory.render_status_table());
+                    let statuses = directory.statuses();
+                    if exit_on_quiesce
+                        && !statuses.is_empty()
+                        && statuses.iter().all(|s| s.phase == SessionPhase::Drained)
+                    {
+                        break;
+                    }
                 }
             }
         })
     });
-    let result = hub.serve(sc.session_specs());
+    let result = if let Some(addr) = sc.listen.clone() {
+        // Network mode: scenario sessions (if any) are admitted up front,
+        // then the framed-TCP command plane owns the lifecycle until a
+        // client sends SHUTDOWN.
+        let listener = std::net::TcpListener::bind(&addr)
+            .with_context(|| format!("binding hub listener on {addr}"))?;
+        let specs = sc.session_specs();
+        if !specs.is_empty() {
+            println!("pre-attaching {} scenario session(s)", specs.len());
+        }
+        (|| {
+            for spec in specs {
+                hub.attach_spec(spec)?;
+            }
+            serve_hub(hub, listener)
+        })()
+    } else {
+        hub.serve(sc.session_specs())
+    };
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
     if let Some(o) = observer {
         o.join().ok();

@@ -1,0 +1,446 @@
+//! Binary snapshot codec for detach-to-disk durability and the framed
+//! network protocol.
+//!
+//! One small, dependency-free format serves both surfaces:
+//!
+//! - **Files** (`finish` / `SnapReader::open`): a parked session's full
+//!   state written under the hub's state directory. The file form adds a
+//!   self-describing header — magic, format version, payload length and
+//!   an FNV-1a checksum — so a truncated or bit-flipped snapshot is
+//!   rejected with a descriptive error instead of deserializing garbage
+//!   into an optimizer.
+//! - **Frames** (`into_payload` / `SnapReader::from_payload`): the raw
+//!   payload without the file header, used as the body of length-prefixed
+//!   TCP frames by [`crate::coordinator::net`] (the frame layer carries
+//!   its own length).
+//!
+//! Every number is little-endian. Floats are stored as IEEE-754 bit
+//! patterns (`f64::to_bits`), never as text, which is what makes a
+//! restore **bit-identical**: the f32 engines widen their state to f64 on
+//! save and narrow on load, and `f32 → f64 → f32` is exact for every
+//! finite value (pinned by the engine precision tests).
+
+use crate::linalg::{Mat, Mat64, Scalar};
+use anyhow::{bail, Context, Result};
+
+/// File magic: the first eight bytes of every snapshot file.
+pub const MAGIC: &[u8; 8] = b"EASISNAP";
+
+/// Current snapshot format version. Bump on any layout change; readers
+/// reject other versions rather than guessing.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Header size of the file form: magic + version + payload length +
+/// checksum.
+const HEADER_LEN: usize = 8 + 4 + 8 + 8;
+
+/// FNV-1a 64-bit hash — tiny, dependency-free, and plenty to catch the
+/// torn writes and bit rot a crash-durability file cares about (this is
+/// corruption *detection*, not tamper resistance).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Append-only snapshot builder.
+#[derive(Default)]
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    /// Bytes written so far (payload form).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.put_bool(true);
+                self.put_u64(x);
+            }
+            None => self.put_bool(false),
+        }
+    }
+
+    /// UTF-8 string, length-prefixed (u32).
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn put_f64_slice(&mut self, xs: &[f64]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.put_f64(x);
+        }
+    }
+
+    /// Dense matrix, shape-prefixed, elements widened to f64 bits.
+    /// Widening is lossless for every `Scalar` this crate ships (f32,
+    /// f64), so one codec path serves both engine precisions.
+    pub fn put_mat<T: Scalar>(&mut self, m: &Mat<T>) {
+        let (rows, cols) = m.shape();
+        self.put_u32(rows as u32);
+        self.put_u32(cols as u32);
+        for &v in m.as_slice() {
+            self.put_f64(v.scalar_to_f64());
+        }
+    }
+
+    pub fn put_mat64(&mut self, m: &Mat64) {
+        self.put_mat(m);
+    }
+
+    /// Raw payload (frame form) — no header, no checksum; the transport
+    /// carries its own length.
+    pub fn into_payload(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// File form: header (magic, version, length, checksum) + payload.
+    pub fn finish(self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + self.buf.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.buf.len() as u64).to_le_bytes());
+        out.extend_from_slice(&fnv1a(&self.buf).to_le_bytes());
+        out.extend_from_slice(&self.buf);
+        out
+    }
+}
+
+/// Cursor over a snapshot payload. Every read is length-checked and
+/// returns a descriptive error on truncation — a short or corrupt
+/// snapshot must never panic the serving plane.
+pub struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    /// Read a raw payload (frame form, no header).
+    pub fn from_payload(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Validate the file form (magic, version, length, checksum) and
+    /// return a cursor over its payload.
+    pub fn open(bytes: &'a [u8]) -> Result<Self> {
+        if bytes.len() < HEADER_LEN {
+            bail!(
+                "not a snapshot file: {} byte(s) is shorter than the {HEADER_LEN}-byte header",
+                bytes.len()
+            );
+        }
+        if &bytes[..8] != MAGIC {
+            bail!("not a snapshot file: bad magic (expected \"EASISNAP\")");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        if version != FORMAT_VERSION {
+            bail!(
+                "unsupported snapshot format version {version} (this build reads version \
+                 {FORMAT_VERSION})"
+            );
+        }
+        let payload_len = u64::from_le_bytes(bytes[12..20].try_into().expect("8 bytes")) as usize;
+        let checksum = u64::from_le_bytes(bytes[20..28].try_into().expect("8 bytes"));
+        let payload = &bytes[HEADER_LEN..];
+        if payload.len() != payload_len {
+            bail!(
+                "truncated snapshot: header promises {payload_len} payload byte(s), file has {}",
+                payload.len()
+            );
+        }
+        let got = fnv1a(payload);
+        if got != checksum {
+            bail!(
+                "snapshot checksum mismatch (stored {checksum:#018x}, computed {got:#018x}): \
+                 the file is corrupted"
+            );
+        }
+        Ok(Self { buf: payload, pos: 0 })
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Assert the payload was consumed exactly — trailing garbage means
+    /// the writer and reader disagree about the layout.
+    pub fn expect_end(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("snapshot has {} unexpected trailing byte(s)", self.remaining());
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated snapshot payload: needed {n} more byte(s), only {} left",
+                self.remaining()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        Ok(self.get_u64()? as usize)
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("snapshot bool field holds {b} (corrupted payload)"),
+        }
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_opt_u64(&mut self) -> Result<Option<u64>> {
+        Ok(if self.get_bool()? { Some(self.get_u64()?) } else { None })
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let len = self.get_u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).context("snapshot string field is not UTF-8")
+    }
+
+    pub fn get_f64_vec(&mut self) -> Result<Vec<f64>> {
+        let len = self.get_usize()?;
+        // Length sanity before allocating: a corrupt length must not OOM.
+        if len > self.remaining() / 8 {
+            bail!(
+                "truncated snapshot payload: slice of {len} f64(s) exceeds the {} byte(s) left",
+                self.remaining()
+            );
+        }
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.get_f64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_mat<T: Scalar>(&mut self) -> Result<Mat<T>> {
+        let rows = self.get_u32()? as usize;
+        let cols = self.get_u32()? as usize;
+        let n = rows.checked_mul(cols).context("snapshot matrix shape overflows")?;
+        if n > self.remaining() / 8 {
+            bail!(
+                "truncated snapshot payload: {rows}x{cols} matrix exceeds the {} byte(s) left",
+                self.remaining()
+            );
+        }
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(T::scalar_from_f64(self.get_f64()?));
+        }
+        Ok(Mat::from_slice(rows, cols, &data))
+    }
+
+    pub fn get_mat64(&mut self) -> Result<Mat64> {
+        self.get_mat()
+    }
+}
+
+/// Read a tag written by the peer module's `save_state` and check it
+/// names the component the loader expects — a mismatched tag means the
+/// snapshot belongs to a different optimizer/engine configuration.
+pub fn expect_tag(r: &mut SnapReader<'_>, want: &str) -> Result<()> {
+    let got = r.get_str()?;
+    if got != want {
+        bail!("snapshot holds state for '{got}', but this session is configured for '{want}'");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_payload() -> SnapWriter {
+        let mut w = SnapWriter::new();
+        w.put_u8(7);
+        w.put_u32(42);
+        w.put_u64(u64::MAX - 3);
+        w.put_bool(true);
+        w.put_f64(-0.125);
+        w.put_opt_u64(Some(99));
+        w.put_opt_u64(None);
+        w.put_str("easi");
+        w.put_f64_slice(&[1.0, 2.5, -3.25]);
+        w.put_mat64(&Mat64::from_fn(2, 3, |r, c| (r * 3 + c) as f64 * 0.5));
+        w
+    }
+
+    fn check_payload(r: &mut SnapReader<'_>) {
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 42);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_f64().unwrap(), -0.125);
+        assert_eq!(r.get_opt_u64().unwrap(), Some(99));
+        assert_eq!(r.get_opt_u64().unwrap(), None);
+        assert_eq!(r.get_str().unwrap(), "easi");
+        assert_eq!(r.get_f64_vec().unwrap(), vec![1.0, 2.5, -3.25]);
+        let m = r.get_mat64().unwrap();
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m.as_slice()[4], 2.0);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn payload_round_trip() {
+        let bytes = sample_payload().into_payload();
+        check_payload(&mut SnapReader::from_payload(&bytes));
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let bytes = sample_payload().finish();
+        check_payload(&mut SnapReader::open(&bytes).unwrap());
+    }
+
+    #[test]
+    fn f32_matrix_survives_widening() {
+        let m: Mat<f32> = Mat::from_fn(3, 2, |r, c| 0.1f32 * (r as f32) - 7.25 * c as f32);
+        let mut w = SnapWriter::new();
+        w.put_mat(&m);
+        let bytes = w.into_payload();
+        let back: Mat<f32> = SnapReader::from_payload(&bytes).get_mat().unwrap();
+        assert_eq!(back.as_slice(), m.as_slice());
+    }
+
+    #[test]
+    fn short_file_is_not_a_snapshot() {
+        let err = SnapReader::open(b"EASI").unwrap_err();
+        assert!(err.to_string().contains("not a snapshot file"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample_payload().finish();
+        bytes[0] = b'X';
+        let err = SnapReader::open(&bytes).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut bytes = sample_payload().finish();
+        bytes[8] = 0xFE;
+        let err = SnapReader::open(&bytes).unwrap_err();
+        assert!(err.to_string().contains("format version"), "{err}");
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let bytes = sample_payload().finish();
+        let cut = &bytes[..bytes.len() - 5];
+        let err = SnapReader::open(cut).unwrap_err();
+        assert!(err.to_string().contains("truncated snapshot"), "{err}");
+    }
+
+    #[test]
+    fn bit_flip_fails_checksum() {
+        let mut bytes = sample_payload().finish();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        let err = SnapReader::open(&bytes).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_reads_error_not_panic() {
+        let mut w = SnapWriter::new();
+        w.put_u32(5);
+        let bytes = w.into_payload();
+        let mut r = SnapReader::from_payload(&bytes);
+        assert_eq!(r.get_u32().unwrap(), 5);
+        let err = r.get_u64().unwrap_err();
+        assert!(err.to_string().contains("truncated snapshot payload"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_lengths_do_not_overallocate() {
+        // A huge slice length with no bytes behind it must error cleanly.
+        let mut w = SnapWriter::new();
+        w.put_u64(u64::MAX / 16);
+        let bytes = w.into_payload();
+        assert!(SnapReader::from_payload(&bytes).get_f64_vec().is_err());
+        // Same for a matrix whose shape overflows or overruns.
+        let mut w = SnapWriter::new();
+        w.put_u32(u32::MAX);
+        w.put_u32(u32::MAX);
+        let bytes = w.into_payload();
+        assert!(SnapReader::from_payload(&bytes).get_mat64().is_err());
+    }
+
+    #[test]
+    fn tag_mismatch_is_descriptive() {
+        let mut w = SnapWriter::new();
+        w.put_str("smbgd");
+        let bytes = w.into_payload();
+        let mut r = SnapReader::from_payload(&bytes);
+        let err = expect_tag(&mut r, "sgd").unwrap_err();
+        assert!(err.to_string().contains("configured for 'sgd'"), "{err}");
+    }
+}

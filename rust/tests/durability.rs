@@ -1,0 +1,206 @@
+//! Integration tests for the detach-to-disk durability path.
+//!
+//! Properties pinned here:
+//! - **Bit-identical restarts**: a tenant detached to disk mid-stream and
+//!   restored into a *fresh* hub (a simulated process restart) finishes
+//!   with exactly the trajectory an uninterrupted run produces — across
+//!   f32 and f64 engines and for cohort-pooled (same-shape EASI-SGD)
+//!   tenants.
+//! - **Corruption safety**: truncated, bit-flipped, mis-versioned or
+//!   missing snapshot files are rejected with descriptive errors — the
+//!   serving plane must never panic on a bad file.
+
+use easi_ica::config::{ExperimentConfig, OptimizerKind, Precision};
+use easi_ica::coordinator::{ElasticHub, HubOptions, SessionHandle};
+use easi_ica::ica::Nonlinearity;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+fn cfg(seed: u64, samples: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.samples = samples;
+    cfg.seed = seed;
+    cfg.optimizer.mu = 0.004;
+    cfg.name = format!("dur-{seed}");
+    cfg
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("easi-dur-{tag}-{}", std::process::id()));
+    fs::create_dir_all(&dir).expect("create temp dir");
+    dir
+}
+
+fn opts(dir: &Path) -> HubOptions {
+    HubOptions { shards: 1, state_dir: Some(dir.to_path_buf()), ..Default::default() }
+}
+
+/// Block until the shard has applied at least one chunk for the session,
+/// so detach-to-disk snapshots a *mid-stream* state, not the initial B.
+fn wait_for_progress(h: &SessionHandle) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while h.checkpoint().samples == 0 {
+        assert!(Instant::now() < deadline, "session {} ({}) made no progress", h.id(), h.name());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn detach_to_disk_round_trips_f32_f64_and_cohort_tenants() {
+    // Four tenants: one single-precision, one double-precision, and a
+    // same-shape EASI-SGD pair that the worker pools tenant-major on the
+    // single shard — the cohort path must survive the restart too.
+    // 200k samples keeps every tenant mid-stream long enough to park it;
+    // the count is divisible by the chunk size, so `samples` drains to
+    // the exact total and summaries compare field-for-field.
+    let mut cfgs = Vec::new();
+    let mut f32_cfg = cfg(41, 200_000);
+    f32_cfg.precision = Precision::F32;
+    cfgs.push(f32_cfg);
+    cfgs.push(cfg(42, 200_000)); // f64 default
+    for seed in [43, 44] {
+        let mut c = cfg(seed, 200_000);
+        c.optimizer.kind = OptimizerKind::Sgd; // cohort-eligible pair
+        cfgs.push(c);
+    }
+
+    // Reference: the same fleet, uninterrupted, on an identical hub.
+    let dir_ref = temp_dir("ref");
+    let mut reference = ElasticHub::start(Nonlinearity::Cube, opts(&dir_ref)).expect("ref hub");
+    for c in &cfgs {
+        reference.attach(c.clone()).expect("ref attach");
+    }
+    let want = reference.finish().expect("ref finish");
+    assert_eq!(want.sessions.len(), cfgs.len());
+
+    // Interrupted: attach, let every tenant make progress, park all of
+    // them to disk, and drop the hub — the "process" is gone.
+    let dir = temp_dir("trip");
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts(&dir)).expect("hub a");
+    let handles: Vec<_> =
+        cfgs.iter().map(|c| hub.attach(c.clone()).expect("attach")).collect();
+    for h in &handles {
+        wait_for_progress(h);
+    }
+    let mut paths = Vec::new();
+    for h in &handles {
+        // `None` exercises the hub-level state_dir default.
+        let path = hub.detach_to_disk(h.id(), None).expect("detach to disk");
+        assert!(
+            path.ends_with(format!("session-{}.snap", h.id())),
+            "unexpected snapshot path {}",
+            path.display()
+        );
+        paths.push(path);
+    }
+    let mid = hub.finish().expect("empty finish");
+    assert!(mid.sessions.is_empty(), "parked tenants must not drain in the old process");
+
+    // Restart: a brand-new hub on the same state directory restores each
+    // snapshot and drains it to completion.
+    let mut restarted = ElasticHub::start(Nonlinearity::Cube, opts(&dir)).expect("hub b");
+    for (h, path) in handles.iter().zip(&paths) {
+        let restored = restarted.restore_from_disk(path).expect("restore");
+        assert_eq!(restored.id(), h.id(), "restore must preserve the session id");
+        assert_eq!(restored.name(), h.name());
+    }
+    let got = restarted.finish().expect("restarted finish");
+    assert_eq!(got.sessions.len(), cfgs.len());
+
+    for (g, w) in got.sessions.iter().zip(want.sessions.iter()) {
+        assert_eq!(g.id, w.id);
+        let ctx = format!("session {} ({})", g.id, g.name);
+        assert_eq!(g.summary.b, w.summary.b, "{ctx}: separation matrix");
+        assert_eq!(g.summary.samples, w.summary.samples, "{ctx}: samples");
+        assert_eq!(g.summary.tail_dropped, w.summary.tail_dropped, "{ctx}: tail_dropped");
+        assert_eq!(
+            g.summary.final_amari.to_bits(),
+            w.summary.final_amari.to_bits(),
+            "{ctx}: final_amari"
+        );
+        assert_eq!(g.summary.converged_at, w.summary.converged_at, "{ctx}: converged_at");
+        assert_eq!(g.summary.resets, w.summary.resets, "{ctx}: resets");
+        assert_eq!(g.summary.drift_events, w.summary.drift_events, "{ctx}: drift_events");
+        assert_eq!(g.summary.rollbacks, w.summary.rollbacks, "{ctx}: rollbacks");
+        assert_eq!(g.summary.amari_history, w.summary.amari_history, "{ctx}: amari trajectory");
+    }
+
+    let _ = fs::remove_dir_all(&dir);
+    let _ = fs::remove_dir_all(&dir_ref);
+}
+
+#[test]
+fn corrupt_snapshot_files_are_rejected_with_descriptive_errors() {
+    // Produce one genuine snapshot to mangle.
+    let dir = temp_dir("corrupt");
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts(&dir)).expect("hub");
+    // 4096 is a multiple of the 64-sample engine chunk, so the drained
+    // total below is exact (no tail drop).
+    let h = hub.attach(cfg(7, 4_096)).expect("attach");
+    wait_for_progress(&h);
+    let good = hub.detach_to_disk(h.id(), None).expect("detach to disk");
+    hub.finish().expect("finish");
+    let bytes = fs::read(&good).expect("read snapshot");
+
+    // Each mangled variant must come back as an error whose chain names
+    // the specific defect — and must not panic.
+    let mut victim = ElasticHub::start(Nonlinearity::Cube, opts(&dir)).expect("victim hub");
+    let cases: Vec<(&str, Vec<u8>, &str)> = vec![
+        ("shorter than the header", bytes[..10].to_vec(), "not a snapshot file"),
+        (
+            "bad magic",
+            {
+                let mut b = bytes.clone();
+                b[0] ^= 0xFF;
+                b
+            },
+            "bad magic",
+        ),
+        (
+            "future format version",
+            {
+                let mut b = bytes.clone();
+                b[8] = b[8].wrapping_add(1);
+                b
+            },
+            "unsupported snapshot format version",
+        ),
+        ("truncated payload", bytes[..bytes.len() - 7].to_vec(), "truncated snapshot"),
+        (
+            "flipped payload byte",
+            {
+                let mut b = bytes.clone();
+                let last = b.len() - 1;
+                b[last] ^= 0x01;
+                b
+            },
+            "checksum mismatch",
+        ),
+    ];
+    for (what, mangled, needle) in cases {
+        let path = dir.join("mangled.snap");
+        fs::write(&path, &mangled).expect("write mangled snapshot");
+        let err = victim
+            .restore_from_disk(&path)
+            .expect_err(&format!("{what}: corrupt snapshot must be rejected"));
+        let chain = format!("{err:#}");
+        assert!(chain.contains(needle), "{what}: error {chain:?} lacks {needle:?}");
+    }
+
+    // A path that does not exist reports the read failure with the path.
+    let missing = dir.join("no-such.snap");
+    let err = victim.restore_from_disk(&missing).expect_err("missing file must error");
+    let chain = format!("{err:#}");
+    assert!(chain.contains("reading session snapshot"), "missing-file error: {chain:?}");
+
+    // The pristine file still restores — the rejections above were about
+    // the corruption, not the baseline snapshot.
+    let restored = victim.restore_from_disk(&good).expect("pristine restore");
+    assert_eq!(restored.id(), h.id());
+    let sum = victim.finish().expect("victim finish");
+    assert_eq!(sum.sessions.len(), 1);
+    assert_eq!(sum.sessions[0].summary.samples, 4_096);
+
+    let _ = fs::remove_dir_all(&dir);
+}
