@@ -30,10 +30,24 @@
 //!    directory restores them, and their final separators are compared
 //!    bit-for-bit against uninterrupted local runs. Nonzero exit on any
 //!    divergence — CI's serve-smoke job runs this phase scaled down.
+//! 4. **Chaos drill** — the full fault storm from one seeded
+//!    `testkit::FaultPlan`: NaN tenants that must quarantine, clients
+//!    dropped mid-conversation, worker panics injected over the wire
+//!    (CRASH opcode), a fabricated torn snapshot, then a SIGKILL of the
+//!    server while crash-consistent background snapshots
+//!    (`--snapshot-every`) are the only durability. A fresh server with
+//!    `--restore-latest` resumes the fleet; every unaffected tenant must
+//!    finish bit-identical to an uninterrupted local run and every
+//!    affected tenant must be accounted for (quarantine parks on disk,
+//!    torn file skipped, lost = 0). CI's chaos-smoke job runs this phase
+//!    scaled down.
 //!
-//! Environment knobs: `LOADGEN_PHASES` selects phases (default "123"),
+//! Environment knobs: `LOADGEN_PHASES` selects phases (default "1234"),
 //! `LOADGEN_TENANTS` the restart drill's churn count (default 10000),
-//! `LOADGEN_SURVIVORS` its survivor count (default 24), `EASI_SERVE_BIN`
+//! `LOADGEN_SURVIVORS` its survivor count (default 24),
+//! `LOADGEN_CHAOS_TENANTS` the chaos drill's healthy-tenant count
+//! (default 4), `LOADGEN_CHAOS_SAMPLES` their stream length (default
+//! 2000000), `LOADGEN_FAULT_SEED` the fault-plan seed, `EASI_SERVE_BIN`
 //! an `easi-ica` binary to serve with (default: this example re-execs
 //! itself as the server).
 
@@ -43,18 +57,35 @@ use easi_ica::coordinator::{
 };
 use easi_ica::ica::Nonlinearity;
 use easi_ica::signal::Pcg32;
+use easi_ica::testkit::{FaultPlan, FaultSpec};
+use std::process::{Child, Command, Stdio};
 use std::thread;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
-    // Server mode: phase 3 re-execs this example as the hub process when
-    // no EASI_SERVE_BIN is provided.
+    // Server mode: phases 3 and 4 re-exec this example as the hub
+    // process when no EASI_SERVE_BIN is provided.
     let mut argv = std::env::args().skip(1);
     if argv.next().as_deref() == Some("serve-child") {
         let dir = argv.next().expect("serve-child needs a state directory");
-        return serve_child(&dir);
+        let mut snapshot_every_ms = 0u64;
+        let mut restore_latest = false;
+        while let Some(tok) = argv.next() {
+            match tok.as_str() {
+                "--snapshot-every" => {
+                    snapshot_every_ms = argv
+                        .next()
+                        .expect("--snapshot-every needs MS")
+                        .parse()
+                        .expect("--snapshot-every must be an integer");
+                }
+                "--restore-latest" => restore_latest = true,
+                other => anyhow::bail!("unknown serve-child argument '{other}'"),
+            }
+        }
+        return serve_child(&dir, snapshot_every_ms, restore_latest);
     }
-    let phases = std::env::var("LOADGEN_PHASES").unwrap_or_else(|_| "123".to_string());
+    let phases = std::env::var("LOADGEN_PHASES").unwrap_or_else(|_| "1234".to_string());
     if phases.contains('1') {
         scenario_fleet()?;
     }
@@ -64,6 +95,9 @@ fn main() -> anyhow::Result<()> {
     if phases.contains('3') {
         restart_drill()?;
     }
+    if phases.contains('4') {
+        chaos_drill()?;
+    }
     Ok(())
 }
 
@@ -71,21 +105,104 @@ fn env_num(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-/// The hub server the restart drill talks to (in-process stand-in for
-/// `easi-ica serve-many --listen`): two shards, queue-pressure
-/// autoscaling up to four, durability under `dir`.
-fn serve_child(dir: &str) -> anyhow::Result<()> {
+/// The hub server the restart/chaos drills talk to (in-process stand-in
+/// for `easi-ica serve-many --listen`): two shards, queue-pressure
+/// autoscaling up to four, durability under `dir`, optional background
+/// snapshot cadence and startup recovery.
+fn serve_child(dir: &str, snapshot_every_ms: u64, restore_latest: bool) -> anyhow::Result<()> {
     let opts = HubOptions {
         shards: 2,
         state_dir: Some(std::path::PathBuf::from(dir)),
         autoscale: AutoscaleOptions { enabled: true, max_shards: 4, ..Default::default() },
+        snapshot_every_ms,
         ..Default::default()
     };
-    let hub = ElasticHub::start(Nonlinearity::Cube, opts)?;
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts)?;
+    if restore_latest {
+        let (restored, skipped) = hub.restore_latest(None)?;
+        println!(
+            "restore-latest: {} session(s) resumed, {} skipped",
+            restored.len(),
+            skipped.len()
+        );
+        for line in &skipped {
+            println!("restore-latest: skipped {line}");
+        }
+    }
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let summary = serve_hub(hub, listener)?;
     print!("{}", summary.render_table());
     Ok(())
+}
+
+/// Spawn a hub server process on `dir` and parse its `LISTENING <addr>`
+/// line. `EASI_SERVE_BIN` points at an `easi-ica` binary (CI passes the
+/// release build to exercise the real CLI); without it this example
+/// re-execs itself in `serve-child` mode.
+fn spawn_server(
+    dir: &std::path::Path,
+    snapshot_every_ms: u64,
+    restore_latest: bool,
+) -> anyhow::Result<(Child, String)> {
+    use std::io::BufRead;
+
+    let every = snapshot_every_ms.to_string();
+    let mut child = match std::env::var("EASI_SERVE_BIN") {
+        Ok(bin) => {
+            let mut cmd = Command::new(bin);
+            cmd.args([
+                "serve-many",
+                "--listen",
+                "127.0.0.1:0",
+                "--sessions",
+                "0",
+                "--shards",
+                "2",
+                "--autoscale-max",
+                "4",
+            ]);
+            if snapshot_every_ms > 0 {
+                cmd.args(["--snapshot-every", &every]);
+            }
+            if restore_latest {
+                cmd.arg("--restore-latest");
+            }
+            cmd.arg("--state-dir").arg(dir).stdout(Stdio::piped()).spawn()?
+        }
+        Err(_) => {
+            let mut cmd = Command::new(std::env::current_exe()?);
+            cmd.arg("serve-child").arg(dir);
+            if snapshot_every_ms > 0 {
+                cmd.args(["--snapshot-every", &every]);
+            }
+            if restore_latest {
+                cmd.arg("--restore-latest");
+            }
+            cmd.stdout(Stdio::piped()).spawn()?
+        }
+    };
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut lines = std::io::BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        if lines.read_line(&mut line)? == 0 {
+            anyhow::bail!("hub server exited before printing LISTENING");
+        }
+        let line = line.trim();
+        if let Some(a) = line.strip_prefix("LISTENING ") {
+            break a.to_string();
+        }
+        if line.starts_with("restore-latest:") {
+            println!("  [server] {line}");
+        }
+    };
+    // Keep draining the child's stdout so its shutdown summary can never
+    // fill the pipe and wedge the process.
+    let mut rest = lines.into_inner();
+    thread::spawn(move || {
+        std::io::copy(&mut rest, &mut std::io::sink()).ok();
+    });
+    Ok((child, addr))
 }
 
 /// Phase 1: the scenario-driven fleet (config-file surface).
@@ -313,9 +430,6 @@ fn poisson_churn() -> anyhow::Result<()> {
 
 /// Phase 3: the kill/restart durability drill over the framed-TCP front.
 fn restart_drill() -> anyhow::Result<()> {
-    use std::io::BufRead;
-    use std::process::{Child, Command, Stdio};
-
     let survivors = env_num("LOADGEN_SURVIVORS", 24);
     let tenants = env_num("LOADGEN_TENANTS", 10_000);
     println!(
@@ -326,55 +440,7 @@ fn restart_drill() -> anyhow::Result<()> {
     let state_dir = std::env::temp_dir().join(format!("easi-loadgen-{}", std::process::id()));
     std::fs::create_dir_all(&state_dir)?;
 
-    // Spawn a hub server process and parse its `LISTENING <addr>` line.
-    // `EASI_SERVE_BIN` points at an `easi-ica` binary (CI passes the
-    // release build to exercise the real CLI); without it this example
-    // re-execs itself in `serve-child` mode.
-    let spawn_server = |dir: &std::path::Path| -> anyhow::Result<(Child, String)> {
-        let mut child = match std::env::var("EASI_SERVE_BIN") {
-            Ok(bin) => Command::new(bin)
-                .args([
-                    "serve-many",
-                    "--listen",
-                    "127.0.0.1:0",
-                    "--sessions",
-                    "0",
-                    "--shards",
-                    "2",
-                    "--autoscale-max",
-                    "4",
-                    "--state-dir",
-                ])
-                .arg(dir)
-                .stdout(Stdio::piped())
-                .spawn()?,
-            Err(_) => Command::new(std::env::current_exe()?)
-                .arg("serve-child")
-                .arg(dir)
-                .stdout(Stdio::piped())
-                .spawn()?,
-        };
-        let stdout = child.stdout.take().expect("piped stdout");
-        let mut lines = std::io::BufReader::new(stdout);
-        let addr = loop {
-            let mut line = String::new();
-            if lines.read_line(&mut line)? == 0 {
-                anyhow::bail!("hub server exited before printing LISTENING");
-            }
-            if let Some(a) = line.trim().strip_prefix("LISTENING ") {
-                break a.to_string();
-            }
-        };
-        // Keep draining the child's stdout so its shutdown summary can
-        // never fill the pipe and wedge the process.
-        let mut rest = lines.into_inner();
-        thread::spawn(move || {
-            std::io::copy(&mut rest, &mut std::io::sink()).ok();
-        });
-        Ok((child, addr))
-    };
-
-    let (mut server_a, addr) = spawn_server(&state_dir)?;
+    let (mut server_a, addr) = spawn_server(&state_dir, 0, false)?;
     let mut c = NetClient::connect(&addr)?;
 
     // Long-lived survivors: the tenants that will cross the process
@@ -443,7 +509,7 @@ fn restart_drill() -> anyhow::Result<()> {
 
     // A fresh server on the same state directory restores the survivors
     // and drains them to completion.
-    let (mut server_b, addr) = spawn_server(&state_dir)?;
+    let (mut server_b, addr) = spawn_server(&state_dir, 0, false)?;
     let mut c = NetClient::connect(&addr)?;
     for (i, path) in paths.iter().enumerate() {
         let id = c.restore_from_disk(path)?;
@@ -488,6 +554,207 @@ fn restart_drill() -> anyhow::Result<()> {
     println!(
         "  all {survivors} survivors bit-identical across the kill/restart; \
          restart drill passed"
+    );
+    Ok(())
+}
+
+/// Phase 4: the seeded chaos drill — NaN tenants, dropped connections,
+/// injected worker panics, a torn snapshot and a SIGKILL, with
+/// crash-consistent background snapshots as the only durability.
+fn chaos_drill() -> anyhow::Result<()> {
+    use std::collections::BTreeSet;
+    use std::io::Write as _;
+    use std::time::Instant;
+
+    let healthy_n = env_num("LOADGEN_CHAOS_TENANTS", 4);
+    let samples = env_num("LOADGEN_CHAOS_SAMPLES", 2_000_000);
+    let seed = std::env::var("LOADGEN_FAULT_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xFA17_1CA0u64);
+    let spec = FaultSpec::drill(healthy_n + 2, 2);
+    let plan = FaultPlan::generate(seed, &spec);
+    println!("\n=== chaos drill: {} ===", plan.summary());
+
+    let state_dir = std::env::temp_dir().join(format!("easi-chaos-{}", std::process::id()));
+    std::fs::remove_dir_all(&state_dir).ok();
+    std::fs::create_dir_all(&state_dir)?;
+
+    // Server A snapshots every live tenant in the background; nobody is
+    // ever parked by hand in this drill.
+    let (mut server_a, addr) = spawn_server(&state_dir, 150, false)?;
+    let mut c = NetClient::connect(&addr)?;
+
+    let nan_slots: BTreeSet<usize> = plan.nan_slots().into_iter().collect();
+    let mut ids = vec![0u64; spec.tenants];
+
+    // NaN tenants first: their quarantine must latch without disturbing
+    // anyone, and attaching them before the long-runners keeps the
+    // background snapshotter from ever seeing them healthy for long.
+    for &slot in &nan_slots {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("nan-{slot}");
+        cfg.m = 4;
+        cfg.n = 2;
+        cfg.samples = 60_000;
+        cfg.seed = 7_000 + slot as u64;
+        cfg.optimizer.mu = 0.004;
+        cfg.signal.mixing = "nan_burst".to_string();
+        cfg.signal.switch_at = 0;
+        ids[slot] = c.attach(&cfg)?;
+    }
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let table = c.status_table()?;
+        let parked = table
+            .lines()
+            .filter(|l| !l.starts_with("supervisor") && l.contains("quarantined"))
+            .count();
+        if parked >= nan_slots.len() {
+            break;
+        }
+        anyhow::ensure!(Instant::now() < deadline, "NaN tenants never quarantined:\n{table}");
+        thread::sleep(Duration::from_millis(10));
+    }
+    println!("  {} NaN tenant(s) quarantined; fleet undisturbed", nan_slots.len());
+
+    // The long-runners that must survive everything below bit-identically.
+    let mut healthy = Vec::new();
+    for slot in 0..spec.tenants {
+        if nan_slots.contains(&slot) {
+            continue;
+        }
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("chaos-{slot}");
+        cfg.m = 4;
+        cfg.n = 2;
+        cfg.samples = samples;
+        cfg.seed = 8_000 + slot as u64;
+        cfg.optimizer.mu = 0.004;
+        cfg.optimizer.p = 8;
+        cfg.adapt.enabled = slot % 2 == 0;
+        ids[slot] = c.attach(&cfg)?;
+        healthy.push((slot, cfg));
+    }
+
+    // Dropped connections: clients that issue a request and vanish with
+    // no SHUTDOWN — plus one that dies mid-frame-header. The accept loop
+    // and its handler threads must shrug all of them off.
+    for _ in plan.drops() {
+        let mut doomed = NetClient::connect(&addr)?;
+        let _ = doomed.status_table()?;
+        drop(doomed);
+    }
+    if let Ok(mut raw) = std::net::TcpStream::connect(&addr) {
+        raw.write_all(&[0, 0]).ok(); // half a frame header, then gone
+    }
+    println!("  {} connection(s) dropped mid-conversation", plan.drops().len() + 1);
+
+    // Worker panics over the wire. A panic targeting a shard that is
+    // still restarting comes back as an error frame; retry until the
+    // supervisor has the slot live again.
+    for (shard, after_ms, reason) in plan.panics() {
+        thread::sleep(Duration::from_millis(after_ms));
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            match c.crash_shard(shard as u64, reason) {
+                Ok(()) => break,
+                Err(e) => {
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "crash injection never landed on shard {shard}: {e:#}"
+                    );
+                    thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+        // The service answers while the fault domain is down.
+        let _ = c.status_table()?;
+    }
+    println!("  {} worker panic(s) injected and supervised", plan.panics().len());
+
+    // Wait for a crash-consistent background snapshot of every healthy
+    // tenant, then SIGKILL the server — the snapshots are all that
+    // survives (a drained tenant's last snapshot also counts).
+    let deadline = Instant::now() + Duration::from_secs(120);
+    for (slot, _) in &healthy {
+        let snap = state_dir.join(format!("session-{}.snap", ids[*slot]));
+        while !snap.is_file() {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "no background snapshot for tenant {} appeared",
+                ids[*slot]
+            );
+            thread::sleep(Duration::from_millis(10));
+        }
+    }
+    drop(c);
+    server_a.kill().ok();
+    server_a.wait().ok();
+    println!("  server A killed mid-stream; background snapshots are the only survivors");
+
+    // A torn snapshot: the crash "interrupted" one more write.
+    for session in plan.torn_sessions() {
+        std::fs::write(
+            state_dir.join(format!("session-{session}.snap.tmp")),
+            b"half a snapshot",
+        )?;
+    }
+
+    // Server B resumes the fleet from disk on startup.
+    let (mut server_b, addr) = spawn_server(&state_dir, 0, true)?;
+    let mut c = NetClient::connect(&addr)?;
+    let deadline = Instant::now() + Duration::from_secs(600);
+    for (slot, cfg) in &healthy {
+        let id = ids[*slot];
+        while c.checkpoint(id)?.samples < cfg.samples as u64 {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "tenant {id} did not drain after restore-latest"
+            );
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    // The verdict: unaffected tenants bit-identical to fault-free local
+    // runs; every affected tenant accounted for; nothing lost.
+    let mut diverged = 0;
+    for (slot, cfg) in &healthy {
+        let over_the_wire = c.checkpoint(ids[*slot])?;
+        let mut local = ElasticHub::start(
+            Nonlinearity::Cube,
+            HubOptions { shards: 1, ..Default::default() },
+        )?;
+        local.attach(cfg.clone())?;
+        let want = local.finish()?;
+        if want.sessions[0].summary.b.as_slice() != over_the_wire.b.as_slice() {
+            eprintln!("  DIVERGED: {} (session {})", cfg.name, ids[*slot]);
+            diverged += 1;
+        }
+    }
+    c.shutdown()?;
+    server_b.wait().ok();
+
+    let mut lost = 0;
+    for &slot in &nan_slots {
+        let park = state_dir.join(format!("session-{}.quarantine.snap", ids[slot]));
+        if !park.is_file() {
+            eprintln!("  LOST: NaN tenant {} has no quarantine park", ids[slot]);
+            lost += 1;
+        }
+    }
+    for session in plan.torn_sessions() {
+        let tmp = state_dir.join(format!("session-{session}.snap.tmp"));
+        anyhow::ensure!(tmp.is_file(), "torn snapshot was consumed instead of skipped");
+    }
+    std::fs::remove_dir_all(&state_dir).ok();
+    anyhow::ensure!(diverged == 0, "{diverged} unaffected tenant(s) diverged");
+    anyhow::ensure!(lost == 0, "{lost} affected tenant(s) unaccounted for");
+    println!(
+        "  chaos drill passed: {} unaffected tenant(s) bit-identical, {} quarantined \
+         with parks on disk, torn snapshot skipped, 0 lost",
+        healthy.len(),
+        nan_slots.len()
     );
     Ok(())
 }

@@ -18,7 +18,7 @@ pub struct Args {
 /// Flags that take no value. ("normalized" used to sit here unconsumed —
 /// EasiSgd's normalized mode is a library-level knob no command exposes;
 /// listing it only made `--normalized` parse and then fail validation.)
-const SWITCHES: &[&str] = &["help", "verbose", "quick"];
+const SWITCHES: &[&str] = &["help", "verbose", "quick", "restore-latest"];
 
 impl Args {
     /// Parse from an iterator of raw arguments (without argv[0]).
@@ -141,7 +141,16 @@ pub fn usage() -> &'static str {
                        --autoscale-max N (enable queue-pressure shard\n\
                        autoscaling, growing/shrinking the worker pool\n\
                        within [min, N]; decisions appear in the status\n\
-                       table's press column and footer)]\n\
+                       table's press column and footer)\n\
+                       --snapshot-every MS (crash-consistent background\n\
+                       snapshots of every live tenant into --state-dir on\n\
+                       this cadence, without parking anyone; 0 = off)\n\
+                       --restore-latest (on startup, resume every snapshot\n\
+                       found in --state-dir — a SIGKILLed server comes\n\
+                       back with its fleet; torn *.tmp leftovers and\n\
+                       quarantine parks are reported and skipped)\n\
+                       --restart-budget N (supervisor respawns granted to\n\
+                       each shard slot before it is declared failed)]\n\
                       [--config FILE | --sessions N --shards N --samples N\n\
                        --mixing a,b,c --precision f32,f64 --adapt on,off\n\
                        (cycled per session) --capacity N --seed N\n\
@@ -182,7 +191,7 @@ pub fn usage() -> &'static str {
                       [--quick --out PATH --check BASELINE.json\n\
                        --tolerance F --min-fused-speedup F --min-f32-speedup F\n\
                        --min-cohort-speedup F --max-adapt-overhead F\n\
-                       --max-status-overhead F]\n\
+                       --max-status-overhead F --max-snapshot-overhead F]\n\
                       with --check, exits nonzero if any gated kernel's\n\
                       machine-normalized cost regressed past the tolerance\n\
        help           this text\n"
@@ -239,6 +248,13 @@ mod tests {
         // …while the global switches stay accepted everywhere.
         let a = parse("table1 --verbose").unwrap();
         assert!(a.expect_only(&["m", "n"]).is_ok());
+    }
+
+    #[test]
+    fn restore_latest_is_a_switch() {
+        let a = parse("serve-many --restore-latest --state-dir state").unwrap();
+        assert!(a.switch("restore-latest"));
+        assert_eq!(a.get("state-dir"), Some("state"));
     }
 
     #[test]

@@ -152,13 +152,13 @@ pub struct SignalConfig {
     /// Source bank: "sub_gaussian" | "eeg".
     pub bank: String,
     /// Mixing model: "static" | "rotating" | "switching" | "switch_once"
-    /// | "drift_onset".
+    /// | "drift_onset" | "nan_burst".
     pub mixing: String,
     /// Rotating/drift-onset angular velocity (rad/sample).
     pub omega: f64,
     /// Switching-model segment length (samples).
     pub period: u64,
-    /// Switch-once / drift-onset event sample index.
+    /// Switch-once / drift-onset / nan-burst event sample index.
     pub switch_at: u64,
     /// Condition-number cap for random mixing draws.
     pub max_cond: f64,
@@ -408,7 +408,8 @@ impl ExperimentConfig {
             other => bail!("unknown signal.bank '{other}'"),
         }
         match self.signal.mixing.as_str() {
-            "static" | "rotating" | "switching" | "switch_once" | "drift_onset" => {}
+            "static" | "rotating" | "switching" | "switch_once" | "drift_onset"
+            | "nan_burst" => {}
             other => bail!("unknown signal.mixing '{other}'"),
         }
         self.adapt.validate()?;
@@ -498,6 +499,12 @@ pub struct HubScenario {
     /// Consecutive ticks a threshold must hold before the autoscaler
     /// acts (`hub.autoscale.sustain`).
     pub autoscale_sustain: usize,
+    /// Crash-consistent background snapshot cadence in milliseconds
+    /// (`hub.snapshot_every_ms`; needs `hub.state_dir`; 0 disables).
+    pub snapshot_every_ms: u64,
+    /// Supervisor respawns granted to each shard slot before it is
+    /// declared failed (`hub.restart_budget`).
+    pub restart_budget: usize,
     /// Template every session config derives from.
     pub base: ExperimentConfig,
 }
@@ -524,6 +531,8 @@ impl Default for HubScenario {
             autoscale_high: 0.75,
             autoscale_low: 0.10,
             autoscale_sustain: 3,
+            snapshot_every_ms: 0,
+            restart_budget: 3,
             base: ExperimentConfig::default(),
         }
     }
@@ -601,6 +610,12 @@ impl HubScenario {
                 "hub.autoscale.sustain" => {
                     scenario.autoscale_sustain = want_usize(&key, &value)?
                 }
+                "hub.snapshot_every_ms" => {
+                    scenario.snapshot_every_ms = want_usize(&key, &value)? as u64
+                }
+                "hub.restart_budget" => {
+                    scenario.restart_budget = want_usize(&key, &value)?
+                }
                 k if k.starts_with("hub.") => bail!("unknown config key '{k}'"),
                 _ => {
                     base_map.insert(key, value);
@@ -632,7 +647,8 @@ impl HubScenario {
         }
         for m in &self.mixing {
             match m.as_str() {
-                "static" | "rotating" | "switching" | "switch_once" | "drift_onset" => {}
+                "static" | "rotating" | "switching" | "switch_once" | "drift_onset"
+                | "nan_burst" => {}
                 other => bail!("unknown hub.mixing kind '{other}'"),
             }
         }
@@ -651,6 +667,13 @@ impl HubScenario {
             if dir.is_empty() {
                 bail!("hub.state_dir must be a non-empty path");
             }
+        }
+        if self.snapshot_every_ms != 0 && self.state_dir.is_none() {
+            bail!(
+                "hub.snapshot_every_ms = {} needs hub.state_dir to write background \
+                 snapshots into",
+                self.snapshot_every_ms
+            );
         }
         if self.autoscale_enabled {
             if self.autoscale_min == 0 {
@@ -959,6 +982,30 @@ mod tests {
         let plain = HubScenario::default();
         assert!(plain.listen.is_none() && plain.state_dir.is_none());
         assert!(!plain.autoscale_enabled);
+    }
+
+    #[test]
+    fn hub_scenario_fault_keys() {
+        let sc = HubScenario::from_toml(
+            "[hub]\nstate_dir = \"state\"\nsnapshot_every_ms = 250\nrestart_budget = 5",
+        )
+        .unwrap();
+        assert_eq!(sc.snapshot_every_ms, 250);
+        assert_eq!(sc.restart_budget, 5);
+        // Defaults: snapshotter off, three respawns per shard slot.
+        let plain = HubScenario::default();
+        assert_eq!((plain.snapshot_every_ms, plain.restart_budget), (0, 3));
+        // A snapshot cadence without a durability root has nowhere to
+        // write: rejected at config time.
+        let err = HubScenario::from_toml("[hub]\nsnapshot_every_ms = 250")
+            .err()
+            .expect("cadence without state_dir must fail");
+        assert!(format!("{err:#}").contains("state_dir"), "{err:#}");
+        // NaN-burst mixing is a legal cycled kind (the chaos drill's
+        // poisoned-tenant knob).
+        let sc = HubScenario::from_toml("[hub]\nmixing = [\"static\", \"nan_burst\"]").unwrap();
+        assert_eq!(sc.session_config(1).signal.mixing, "nan_burst");
+        assert!(ExperimentConfig::from_toml("[signal]\nmixing = \"nan_burst\"").is_ok());
     }
 
     #[test]

@@ -39,6 +39,14 @@
 //!   the survivor's queue is drained too (it reverts to the direct path).
 //! - `flush_session` (checkpoint/restore) drains without removing, so a
 //!   `Restore`'s `install_b` lands on a fully caught-up runner.
+//! - A lane whose divergence guard **latches a fault** mid-pump (its
+//!   separator stayed non-finite through the rollback/reset retry
+//!   budget) is extracted from its pool without perturbing sibling
+//!   lanes: its queued items are dropped (the runner is quarantined by
+//!   the shard, not caught up) and the id is reported through
+//!   [`CohortExecutor::take_faulted`]. Lanes are mathematically
+//!   independent, so extraction cannot change a sibling's bitwise
+//!   trajectory — pinned by `surviving_lanes_are_bitwise_unperturbed_*`.
 //!
 //! ## Batching policy
 //!
@@ -144,6 +152,7 @@ fn drain_lane(q: &mut VecDeque<LaneItem>, runner: &mut SessionRunner) -> Result<
 fn pump<K: Ord + Copy>(
     pool: &mut Pool<K>,
     runners: &mut BTreeMap<K, SessionRunner>,
+    faulted: &mut Vec<K>,
 ) -> Result<()> {
     loop {
         // Front-of-queue mixing snapshots are ready to apply: everything
@@ -185,12 +194,40 @@ fn pump<K: Ord + Copy>(
         while pool.bs.len() < lanes {
             pool.bs.push(Mat64::zeros(pool.key.n, pool.key.m));
         }
+        let before = faulted.len();
         match &mut pool.state {
             PoolState::F64(st) => {
-                step_loaded(st, pool.key.g, &pool.ready, &pool.chunks, &mut pool.bs, runners)?;
+                step_loaded(
+                    st, pool.key.g, &pool.ready, &pool.chunks, &mut pool.bs, runners, faulted,
+                )?;
             }
             PoolState::F32(st) => {
-                step_loaded(st, pool.key.g, &pool.ready, &pool.chunks, &mut pool.bs, runners)?;
+                step_loaded(
+                    st, pool.key.g, &pool.ready, &pool.chunks, &mut pool.bs, runners, faulted,
+                )?;
+            }
+        }
+        // Lanes whose divergence guard latched a fault this step leave
+        // the pool now: drop their poisoned queues (the shard quarantines
+        // the runner; catching it up would only repeat the rollback) and
+        // keep pumping the survivors. Lane independence means removal
+        // cannot perturb a sibling's bits.
+        if faulted.len() > before {
+            for id in faulted[before..].iter() {
+                pool.pending.remove(id);
+            }
+            if pool.pending.len() == 1 {
+                // Pool of one reverts to the per-session path: catch the
+                // survivor up. If *its* drain latches a fault too, report
+                // it the same way instead of leaving it latent.
+                let (&sid, q) = pool.pending.iter_mut().next().expect("len checked");
+                if let Some(r) = runners.get_mut(&sid) {
+                    drain_lane(q, r)?;
+                    if r.fault().is_some() {
+                        pool.pending.remove(&sid);
+                        faulted.push(sid);
+                    }
+                }
             }
         }
     }
@@ -208,6 +245,7 @@ fn step_loaded<T: Scalar, K: Ord + Copy>(
     chunks: &[Mat64],
     bs: &mut [Mat64],
     runners: &mut BTreeMap<K, SessionRunner>,
+    faulted: &mut Vec<K>,
 ) -> Result<()> {
     st.begin(ready.len());
     for (l, id) in ready.iter().enumerate() {
@@ -221,6 +259,9 @@ fn step_loaded<T: Scalar, K: Ord + Copy>(
         let r = runners.get_mut(id).expect("cohort member has a runner");
         r.cohort_sync(&bs[l], chunks[l].rows() as u64);
         r.note_cohort_chunk(&chunks[l]);
+        if r.fault().is_some() {
+            faulted.push(*id);
+        }
     }
     Ok(())
 }
@@ -234,11 +275,14 @@ pub(crate) struct CohortExecutor<K: Ord + Copy = u64> {
     pools: Vec<Pool<K>>,
     /// Members only: session id → pool index.
     index: BTreeMap<K, usize>,
+    /// Lanes extracted mid-pump because their divergence guard latched a
+    /// fault, awaiting pickup via [`Self::take_faulted`].
+    faulted: Vec<K>,
 }
 
 impl<K: Ord + Copy> CohortExecutor<K> {
     pub(crate) fn new(enabled: bool) -> Self {
-        Self { enabled, pools: Vec::new(), index: BTreeMap::new() }
+        Self { enabled, pools: Vec::new(), index: BTreeMap::new(), faulted: Vec::new() }
     }
 
     /// Admit a session: eligible runners (cohort-capable engines) join
@@ -293,12 +337,27 @@ impl<K: Ord + Copy> CohortExecutor<K> {
                 for c in pool.ingested.drain(..) {
                     q.push_back(LaneItem::Chunk(c));
                 }
-                return pump(pool, runners);
+                let before = self.faulted.len();
+                pump(pool, runners, &mut self.faulted)?;
+                // Extracted lanes lose membership immediately, so a late
+                // block for one routes per-session (where the shard sees
+                // the latched fault) instead of re-entering a pool.
+                for fid in self.faulted[before..].to_vec() {
+                    self.index.remove(&fid);
+                }
+                return Ok(());
             }
             // Member without shape peers: per-session path, unchanged
             // (its queue is empty by the membership invariants).
         }
         runners.get_mut(&id).expect("session has a runner").on_block(block)
+    }
+
+    /// Session ids whose divergence guard latched a fault during cohort
+    /// stepping since the last call (already removed from their pools and
+    /// from membership). The shard worker quarantines these.
+    pub(crate) fn take_faulted(&mut self) -> Vec<K> {
+        std::mem::take(&mut self.faulted)
     }
 
     /// Route one mixing snapshot: queued behind any pending chunks so the
@@ -384,7 +443,7 @@ impl<K: Ord + Copy> CohortExecutor<K> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{ExperimentConfig, OptimizerKind};
+    use crate::config::{ExperimentConfig, OptimizerKind, Precision};
     use crate::coordinator::engine::make_engine;
     use crate::coordinator::server::{ServerOptions, SessionRunner};
     use crate::coordinator::state::StateStore;
@@ -516,6 +575,96 @@ mod tests {
         exec.finish_session(1, &mut runners).unwrap();
         assert_eq!(runners.get(&0).unwrap().samples_done(), 256);
         assert!(exec.is_member(0), "survivor keeps membership for future peers");
+    }
+
+    /// Quarantine one lane of a 4-lane pool and pin every surviving
+    /// lane's trajectory bitwise against an undisturbed 3-lane run: the
+    /// mid-pump extraction must not perturb siblings (holds per
+    /// precision and under the fma feature, where cohort == solo is
+    /// already pinned).
+    fn check_surviving_lanes(precision: Precision) {
+        let mut cfg = sgd_cfg();
+        cfg.precision = precision;
+        let nan_block = |m: usize| Mat64::from_fn(256, m, |_, _| f64::NAN);
+
+        // Disturbed run: four lanes, lane 3 fed non-finite data from the
+        // first block — its guard latches after the retry budget and the
+        // executor extracts it mid-pump.
+        let mut runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
+        let mut exec = CohortExecutor::<u64>::new(true);
+        for id in 0..4u64 {
+            let r = runner(&cfg);
+            exec.register(id, &r);
+            runners.insert(id, r);
+        }
+        for round in 0..4u64 {
+            for id in 0..4u64 {
+                if !runners.contains_key(&id) {
+                    continue;
+                }
+                let b = if id == 3 {
+                    nan_block(cfg.m)
+                } else {
+                    blocks(500 + id * 10 + round, 1, cfg.m).pop().unwrap()
+                };
+                exec.on_block(id, b, &mut runners).unwrap();
+                for fid in exec.take_faulted() {
+                    assert_eq!(fid, 3, "only the poisoned lane may fault");
+                    assert!(!exec.is_member(fid), "extraction drops membership");
+                    let r = runners.remove(&fid).unwrap();
+                    assert!(
+                        r.fault().unwrap().contains("rollback/reset attempts"),
+                        "fault reason names the exhausted retry budget"
+                    );
+                }
+            }
+        }
+        assert!(!runners.contains_key(&3), "poisoned lane was extracted");
+        let mut disturbed = Vec::new();
+        for id in 0..3u64 {
+            exec.finish_session(id, &mut runners).unwrap();
+            disturbed.push(runners.remove(&id).unwrap().finish());
+        }
+
+        // Undisturbed reference: the same three survivors, same data,
+        // never sharing a pool with the poisoned lane.
+        let mut ref_runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
+        let mut ref_exec = CohortExecutor::<u64>::new(true);
+        for id in 0..3u64 {
+            let r = runner(&cfg);
+            ref_exec.register(id, &r);
+            ref_runners.insert(id, r);
+        }
+        for round in 0..4u64 {
+            for id in 0..3u64 {
+                let b = blocks(500 + id * 10 + round, 1, cfg.m).pop().unwrap();
+                ref_exec.on_block(id, b, &mut ref_runners).unwrap();
+            }
+        }
+        assert!(ref_exec.take_faulted().is_empty(), "clean lanes never fault");
+        for (id, got) in disturbed.into_iter().enumerate() {
+            ref_exec.finish_session(id as u64, &mut ref_runners).unwrap();
+            let want = ref_runners.remove(&(id as u64)).unwrap().finish();
+            assert_eq!(want.samples, got.samples, "lane {id}");
+            assert!(
+                want.b
+                    .as_slice()
+                    .iter()
+                    .zip(got.b.as_slice())
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "lane {id}: quarantine extraction perturbed a survivor's B"
+            );
+        }
+    }
+
+    #[test]
+    fn surviving_lanes_are_bitwise_unperturbed_f64() {
+        check_surviving_lanes(Precision::F64);
+    }
+
+    #[test]
+    fn surviving_lanes_are_bitwise_unperturbed_f32() {
+        check_surviving_lanes(Precision::F32);
     }
 
     #[test]

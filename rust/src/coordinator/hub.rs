@@ -142,6 +142,14 @@ pub struct HubOptions {
     pub state_dir: Option<PathBuf>,
     /// Queue-pressure shard autoscaling (elastic runtime only).
     pub autoscale: AutoscaleOptions,
+    /// Crash-consistent background snapshot cadence in milliseconds
+    /// (elastic runtime; needs `state_dir`). `0` disables the
+    /// snapshotter; explicit `ElasticHub::snapshot_session` calls still
+    /// work.
+    pub snapshot_every_ms: u64,
+    /// Supervisor respawns granted to each shard slot before it is
+    /// declared failed and left retired (elastic runtime).
+    pub restart_budget: usize,
     /// Per-session server knobs (monitor cadence, AGC, divergence guard).
     pub server: ServerOptions,
 }
@@ -155,6 +163,8 @@ impl Default for HubOptions {
             cohort: true,
             state_dir: None,
             autoscale: AutoscaleOptions::default(),
+            snapshot_every_ms: 0,
+            restart_budget: 3,
             server: ServerOptions::default(),
         }
     }
@@ -179,6 +189,8 @@ impl HubOptions {
                 low: sc.autoscale_low,
                 sustain: sc.autoscale_sustain,
             },
+            snapshot_every_ms: sc.snapshot_every_ms,
+            restart_budget: sc.restart_budget,
             server: ServerOptions::default(),
         }
     }
@@ -194,6 +206,13 @@ impl HubOptions {
             bail!(
                 "hub channel_capacity must be >= 1 sample (got 0); a zero-capacity ingest \
                  channel would stall every producer's first send"
+            );
+        }
+        if self.snapshot_every_ms != 0 && self.state_dir.is_none() {
+            bail!(
+                "hub snapshot_every_ms = {} needs a state_dir to write background \
+                 snapshots into",
+                self.snapshot_every_ms
             );
         }
         self.autoscale.validate()?;

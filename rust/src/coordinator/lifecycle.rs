@@ -49,16 +49,17 @@ use crate::config::{
 };
 use crate::ica::Nonlinearity;
 use crate::linalg::Mat64;
-use crate::snapshot::{SnapReader, SnapWriter};
+use crate::snapshot::{write_atomic, SnapReader, SnapWriter};
 use anyhow::{bail, ensure, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fs;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
 };
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -177,6 +178,32 @@ enum ControlMsg {
         b: Mat64,
         ack: Sender<bool>,
     },
+    /// Serialize a live session's resumable state — its consumed-seq cut
+    /// point plus the full runner state — *without* removing it: the
+    /// background snapshotter's probe. The worker quiesces the session at
+    /// a chunk boundary (flushing cohort-queued work so the payload
+    /// matches the cut point exactly) and replies `None` when the session
+    /// is unknown or its runner cannot serialize.
+    Snapshot {
+        session: u64,
+        reply: Sender<Option<Vec<u8>>>,
+    },
+    /// Fault injection (chaos drills, tests): panic the worker thread
+    /// with `reason` as the payload, exercising the supervisor's
+    /// respawn-and-reattach path exactly as an organic defect would.
+    Crash { reason: String },
+}
+
+/// A shard worker's announcement that it removed a tenant whose
+/// divergence guard exhausted its rollback/reset retry budget. The hub's
+/// supervisor drains these: it stops the producer, parks the runner to
+/// disk for operator inspection, and keeps the tenant accounted for in
+/// the final summary.
+struct QuarantineNotice {
+    session: u64,
+    runner: Box<SessionRunner>,
+    consumed_upto: u64,
+    reason: String,
 }
 
 /// Reply to a park command.
@@ -242,6 +269,14 @@ impl Route {
     }
 }
 
+/// Poison-tolerant route lock: a thread that panicked mid-emit (fault
+/// injection, worker death) must not take the whole control plane down
+/// with it. The gate state is a handful of plain fields that are valid
+/// under any interleaving, so recovering the inner value is always safe.
+fn lock_route(route: &Route) -> MutexGuard<'_, RouteState> {
+    route.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 // ---------------------------------------------------------------------------
 // Shard worker.
 // ---------------------------------------------------------------------------
@@ -259,6 +294,13 @@ struct ShardState {
     consumed: Arc<AtomicU64>,
     /// Tenant-major batching of same-shape runners (see `super::cohort`).
     exec: CohortExecutor,
+    /// Sessions this worker quarantined. Their producers may still be
+    /// streaming into the lane until the hub reaps the notice and aborts
+    /// the route; messages for them are dropped here instead of being
+    /// treated as "unknown session" protocol errors.
+    quarantined: BTreeSet<u64>,
+    /// Announces quarantined runners to the hub's supervisor.
+    quarantine_tx: Sender<QuarantineNotice>,
 }
 
 impl ShardState {
@@ -301,8 +343,52 @@ impl ShardState {
                     }
                 }
             }
+            ControlMsg::Snapshot { session, reply } => {
+                // Quiesce at a chunk boundary: cohort-queued work must be
+                // applied before serialization so the payload is exactly
+                // the state at `consumed_seq` — the same consistency rule
+                // the Restore handler follows.
+                self.exec.flush_session(session, &mut self.runners)?;
+                let payload = self.runners.get(&session).and_then(|runner| {
+                    let mut w = SnapWriter::new();
+                    w.put_u64(self.consumed_seq.get(&session).copied().unwrap_or(0));
+                    runner.save_state(&mut w).ok().map(|()| w.into_payload())
+                });
+                let _ = reply.send(payload);
+            }
+            ControlMsg::Crash { reason } => panic!("{reason}"),
         }
         Ok(())
+    }
+
+    /// Remove a runner whose divergence guard exhausted its retry budget:
+    /// flip its health record to `Quarantined`, drop it from every shard
+    /// structure, resolve a racing park as `Gone`, and hand the runner to
+    /// the hub's supervisor. Sibling tenants are untouched.
+    fn quarantine_session(&mut self, session: u64) {
+        // Drop any residual cohort membership. A lane extracted mid-pump
+        // already lost it; a member-without-peers (direct path) still
+        // holds an empty lane queue, so this drains nothing and cannot
+        // fail — it just keeps the pool's width bookkeeping honest.
+        let _ = self.exec.finish_session(session, &mut self.runners);
+        let Some(runner) = self.runners.remove(&session) else { return };
+        let reason = runner
+            .fault()
+            .unwrap_or("non-finite separator (no fault detail recorded)")
+            .to_string();
+        let consumed_upto = self.consumed_seq.remove(&session).unwrap_or(0);
+        if let Some((_, reply)) = self.pending_park.remove(&session) {
+            let _ = reply.send(ParkOutcome::Gone);
+        }
+        self.active[self.shard].fetch_sub(runner.placement_cost(), Ordering::Relaxed);
+        runner.status_cell().quarantine(&reason);
+        self.quarantined.insert(session);
+        let _ = self.quarantine_tx.send(QuarantineNotice {
+            session,
+            runner: Box::new(runner),
+            consumed_upto,
+            reason,
+        });
     }
 
     fn park_now(&mut self, session: u64, reply: &Sender<ParkOutcome>) -> Result<()> {
@@ -310,7 +396,12 @@ impl ShardState {
         // work in order): the parked runner must be fully self-contained
         // so a re-attach on any shard continues bit-identically.
         self.exec.finish_session(session, &mut self.runners)?;
-        let runner = self.runners.remove(&session).expect("park of installed session");
+        // Defensive: a quarantine between the park request and its cut
+        // point removes the runner — resolve as Gone, don't panic.
+        let Some(runner) = self.runners.remove(&session) else {
+            let _ = reply.send(ParkOutcome::Gone);
+            return Ok(());
+        };
         runner.status_cell().set_phase(SessionPhase::Detached);
         self.consumed_seq.remove(&session);
         self.active[self.shard].fetch_sub(runner.placement_cost(), Ordering::Relaxed);
@@ -320,6 +411,15 @@ impl ShardState {
 
     fn handle_data(&mut self, msg: DataMsg, dequeue_depth: usize) -> Result<()> {
         let DataMsg { session, seq, event } = msg;
+        // A quarantined tenant's producer keeps streaming until the hub
+        // reaps the notice and aborts its route; its messages are dropped
+        // here, never treated as protocol errors.
+        if self.quarantined.contains(&session) {
+            if matches!(event, StreamEvent::End) {
+                self.quarantined.remove(&session);
+            }
+            return Ok(());
+        }
         match event {
             StreamEvent::Batch(block) => {
                 let rows = block.rows() as u64;
@@ -333,6 +433,18 @@ impl ShardState {
                     .on_block(session, block, &mut self.runners)
                     .with_context(|| format!("session {session}"))?;
                 self.consumed.fetch_add(rows, Ordering::Relaxed);
+                // Quarantine every lane the divergence guard gave up on:
+                // cohort lanes extracted mid-pump, plus this session
+                // itself if it faulted on the per-session path.
+                for id in self.exec.take_faulted() {
+                    self.quarantine_session(id);
+                }
+                if self.runners.get(&session).is_some_and(|r| r.fault().is_some()) {
+                    self.quarantine_session(session);
+                }
+                if self.quarantined.contains(&session) {
+                    return Ok(());
+                }
             }
             StreamEvent::Mixing(a) => {
                 if !self.runners.contains_key(&session) {
@@ -465,6 +577,42 @@ fn shard_worker(
     Ok((state.reports, max_depth))
 }
 
+/// Render a panic payload for supervisor logs: the common `&str`/`String`
+/// payloads verbatim, anything else by a placeholder.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard supervision.
+// ---------------------------------------------------------------------------
+
+/// Restart backoff parameters: first respawn waits `RESTART_BACKOFF`,
+/// each subsequent one doubles it up to `RESTART_BACKOFF_CAP`.
+const RESTART_BACKOFF: Duration = Duration::from_millis(50);
+const RESTART_BACKOFF_CAP: Duration = Duration::from_millis(800);
+
+/// Per-slot supervision record: how often this shard's worker has been
+/// respawned and how long to wait before the next attempt.
+struct ShardHealth {
+    restarts: usize,
+    backoff: Duration,
+    /// Slot exhausted its restart budget and is permanently failed.
+    failed: bool,
+}
+
+impl ShardHealth {
+    fn new() -> Self {
+        Self { restarts: 0, backoff: RESTART_BACKOFF, failed: false }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The elastic hub.
 // ---------------------------------------------------------------------------
@@ -564,6 +712,15 @@ pub struct ElasticHub {
     /// control ticks).
     scale_high_ticks: usize,
     scale_low_ticks: usize,
+    /// Per-slot supervision records (restart counts, backoff).
+    health: Vec<ShardHealth>,
+    /// Quarantine notices from shard workers, drained by
+    /// [`ElasticHub::supervise_tick`].
+    quarantine_rx: Receiver<QuarantineNotice>,
+    /// The senders' template, cloned into each spawned worker.
+    quarantine_tx: Sender<QuarantineNotice>,
+    /// When the background snapshotter last swept the live tenants.
+    last_snapshot: Instant,
 }
 
 impl ElasticHub {
@@ -579,6 +736,7 @@ impl ElasticHub {
         let metrics = HubMetrics::new(max_total);
         let active: Arc<Vec<AtomicUsize>> =
             Arc::new((0..max_total).map(|_| AtomicUsize::new(0)).collect());
+        let (quarantine_tx, quarantine_rx) = channel::<QuarantineNotice>();
 
         let mut hub = Self {
             g,
@@ -597,6 +755,10 @@ impl ElasticHub {
             retired_max_depth: 0,
             scale_high_ticks: 0,
             scale_low_ticks: 0,
+            health: (0..max_total).map(|_| ShardHealth::new()).collect(),
+            quarantine_rx,
+            quarantine_tx,
+            last_snapshot: Instant::now(),
         };
         for shard in 0..shards {
             hub.spawn_worker(shard)?;
@@ -623,12 +785,26 @@ impl ElasticHub {
             active: Arc::clone(&self.active),
             consumed: Arc::clone(&self.metrics.consumed),
             exec: CohortExecutor::new(self.opts.cohort),
+            quarantined: BTreeSet::new(),
+            quarantine_tx: self.quarantine_tx.clone(),
         };
         let depth = Arc::clone(&self.metrics.depths[shard]);
         self.data_txs[shard] = Some(data_tx);
         self.ctrl_txs[shard] = Some(ctrl_tx);
-        self.workers[shard] =
-            Some(thread::spawn(move || shard_worker(state, data_rx, ctrl_rx, depth)));
+        // The worker runs inside `catch_unwind`: a panic (organic defect
+        // or injected Crash) is contained to this fault domain and
+        // surfaces as an `Err` the supervisor turns into a respawn,
+        // instead of unwinding through the process.
+        self.workers[shard] = Some(thread::spawn(move || {
+            match catch_unwind(AssertUnwindSafe(|| shard_worker(state, data_rx, ctrl_rx, depth)))
+            {
+                Ok(res) => res,
+                Err(payload) => Err(anyhow::anyhow!(
+                    "shard {shard} worker panicked: {}",
+                    panic_message(payload.as_ref())
+                )),
+            }
+        }));
         Ok(())
     }
 
@@ -781,7 +957,7 @@ impl ElasticHub {
         if entry.status.snapshot().phase == SessionPhase::Drained {
             bail!("session {id} already drained; nothing to pause");
         }
-        let mut st = entry.route.state.lock().expect("route lock poisoned");
+        let mut st = lock_route(&entry.route);
         match st.phase {
             GatePhase::Aborted => bail!("session {id} is shutting down"),
             _ => st.phase = GatePhase::Paused,
@@ -800,7 +976,7 @@ impl ElasticHub {
         if entry.status.snapshot().phase == SessionPhase::Drained {
             bail!("session {id} already drained; nothing to resume");
         }
-        let mut st = entry.route.state.lock().expect("route lock poisoned");
+        let mut st = lock_route(&entry.route);
         match st.phase {
             GatePhase::Aborted => bail!("session {id} is shutting down"),
             _ => st.phase = GatePhase::Streaming,
@@ -827,13 +1003,13 @@ impl ElasticHub {
         // Quiesce the producer: gate it, wait out any in-flight send, and
         // read the cut point. After this no new data can enter the lane.
         let upto = {
-            let mut st = entry.route.state.lock().expect("route lock poisoned");
+            let mut st = lock_route(&entry.route);
             if st.phase == GatePhase::Aborted {
                 bail!("session {id} is shutting down");
             }
             st.phase = GatePhase::Paused;
             while st.in_flight {
-                st = entry.route.cv.wait(st).expect("route lock poisoned");
+                st = entry.route.cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
             st.seq
         };
@@ -908,7 +1084,7 @@ impl ElasticHub {
         // routed message cannot outrun it.
         let entry = self.entries.get_mut(&id).expect("entry checked above");
         {
-            let mut st = entry.route.state.lock().expect("route lock poisoned");
+            let mut st = lock_route(&entry.route);
             st.tx = Some(self.data_txs[shard].as_ref().expect("checked live above").clone());
             st.depth = Arc::clone(&self.metrics.depths[shard]);
             st.phase = GatePhase::Streaming;
@@ -987,7 +1163,8 @@ impl ElasticHub {
         let log = self.directory.autoscale_log();
         if self.scale_high_ticks >= a.sustain {
             self.scale_high_ticks = 0;
-            if let Some(slot) = (0..self.data_txs.len()).find(|&s| self.data_txs[s].is_none())
+            if let Some(slot) = (0..self.data_txs.len())
+                .find(|&s| self.data_txs[s].is_none() && !self.health[s].failed)
             {
                 if self.spawn_worker(slot).is_ok() {
                     log.note_spawn();
@@ -1000,6 +1177,365 @@ impl ElasticHub {
             }
         }
         log.publish(self.live_shard_count(), pressure);
+    }
+
+    /// One supervision control tick: reap quarantine notices from the
+    /// workers, then detect dead worker threads and recover their fault
+    /// domains — respawn within the per-slot restart budget (exponential
+    /// backoff between attempts) and reattach every affected tenant from
+    /// its last consistent state. Callers drive this from the same wait
+    /// loops as [`ElasticHub::autoscale_tick`]; the hub has no timer
+    /// thread of its own.
+    pub fn supervise_tick(&mut self) {
+        self.reap_quarantined();
+        for shard in 0..self.workers.len() {
+            let dead = self.ctrl_txs[shard].is_some()
+                && self.workers[shard].as_ref().is_some_and(|h| h.is_finished());
+            if dead {
+                self.recover_shard(shard);
+            }
+        }
+    }
+
+    /// Fault injection (chaos drills, tests): make shard `shard`'s worker
+    /// panic. The next [`ElasticHub::supervise_tick`] recovers it.
+    pub fn inject_worker_panic(&mut self, shard: usize, reason: &str) -> Result<()> {
+        self.ctrl_txs
+            .get(shard)
+            .and_then(|t| t.as_ref())
+            .with_context(|| format!("shard {shard} is not live"))?
+            .send(ControlMsg::Crash { reason: reason.to_string() })
+            .map_err(|_| anyhow::anyhow!("shard {shard} worker is gone"))?;
+        Ok(())
+    }
+
+    /// Drain quarantine notices: log each fault, stop the tenant's
+    /// producer, and park the offending runner — to disk as
+    /// `session-<id>.quarantine.snap` when a `state_dir` is configured
+    /// (operator inspection; skipped by `--restore-latest`), and always
+    /// in the entry table so the final summary accounts for the tenant.
+    fn reap_quarantined(&mut self) {
+        while let Ok(notice) = self.quarantine_rx.try_recv() {
+            let QuarantineNotice { session, runner, consumed_upto, reason } = notice;
+            self.directory
+                .supervisor_log()
+                .note_quarantine(&format!("tenant {session}: {reason}"));
+            let Some(entry) = self.entries.get_mut(&session) else { continue };
+            {
+                let mut st = lock_route(&entry.route);
+                st.phase = GatePhase::Aborted;
+                st.tx = None;
+            }
+            entry.route.cv.notify_all();
+            if let Some(p) = entry.producer.take() {
+                p.join().ok();
+            }
+            if let Some(dir) = self.opts.state_dir.clone() {
+                let mut w = SnapWriter::new();
+                w.put_u64(session);
+                w.put_str(&entry.name);
+                write_config(&mut w, &entry.cfg);
+                w.put_u64(entry.total as u64);
+                w.put_u64(consumed_upto);
+                if runner.save_state(&mut w).is_ok() && fs::create_dir_all(&dir).is_ok() {
+                    let path = dir.join(format!("session-{session}.quarantine.snap"));
+                    let _ = write_atomic(&path, &w.finish());
+                }
+            }
+            entry.parked = Some(ParkedSession { runner, consumed_upto });
+        }
+    }
+
+    /// Recover one dead fault domain: join the worker for its fault
+    /// reason, clear the slot, respawn it within the restart budget
+    /// (exponential backoff between attempts; past the budget the slot
+    /// is declared failed), and reattach every tenant that lived there
+    /// from its last consistent state.
+    fn recover_shard(&mut self, shard: usize) {
+        let reason = match self.workers[shard].take().map(|w| w.join()) {
+            Some(Ok(Ok((reports, depth)))) => {
+                // The worker drained cleanly while the hub still thought
+                // it was live — keep its reports, treat the early exit as
+                // a fault.
+                self.retired_reports.extend(reports);
+                self.retired_max_depth = self.retired_max_depth.max(depth);
+                "worker exited unexpectedly".to_string()
+            }
+            Some(Ok(Err(e))) => format!("{e:#}"),
+            Some(Err(payload)) => {
+                format!("worker panicked: {}", panic_message(payload.as_ref()))
+            }
+            None => "worker thread missing".to_string(),
+        };
+        self.data_txs[shard] = None;
+        self.ctrl_txs[shard] = None;
+        self.metrics.depths[shard].store(0, Ordering::Relaxed);
+        self.active[shard].store(0, Ordering::Relaxed);
+        self.directory.supervisor_log().note_shard_fault(shard, &reason);
+
+        // Tenants that died with the worker: live, non-parked entries
+        // pinned to this slot.
+        let affected: Vec<u64> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.shard == shard && e.parked.is_none())
+            .filter(|(_, e)| !e.status.snapshot().phase.is_terminal())
+            .map(|(&id, _)| id)
+            .collect();
+        for &id in &affected {
+            if let Some(e) = self.entries.get(&id) {
+                e.status.set_phase(SessionPhase::Restarting);
+            }
+        }
+
+        self.health[shard].restarts += 1;
+        if self.health[shard].restarts > self.opts.restart_budget {
+            self.health[shard].failed = true;
+        } else {
+            let backoff = self.health[shard].backoff;
+            thread::sleep(backoff);
+            self.health[shard].backoff = (backoff * 2).min(RESTART_BACKOFF_CAP);
+            if self.spawn_worker(shard).is_err() {
+                self.health[shard].failed = true;
+            }
+        }
+
+        for id in affected {
+            let dest = if self.ctrl_txs[shard].is_some() {
+                Some(shard)
+            } else {
+                self.live_shards()
+                    .into_iter()
+                    .min_by_key(|&s| (self.active[s].load(Ordering::Relaxed), s))
+            };
+            if let Err(e) = self.recover_tenant(id, dest) {
+                // Terminal: the fault reason lands on the tenant's health
+                // record instead of vanishing with the worker.
+                if let Some(entry) = self.entries.get(&id) {
+                    entry.status.quarantine(&format!("recovery failed: {e:#}"));
+                }
+            }
+        }
+    }
+
+    /// Rebuild one tenant of a dead shard from its last consistent state
+    /// and attach it to `dest`. Prefers the tenant's background snapshot
+    /// (`<state_dir>/session-<id>.snap`); falls back to a fresh runner
+    /// replaying the stream from sample 0. Replay of a deterministic
+    /// stream from a consistent cut point is bit-identical to a
+    /// fault-free run either way. With `dest` `None` (no live shard can
+    /// host it), the recovered runner is parked so the final summary
+    /// still accounts for the tenant.
+    fn recover_tenant(&mut self, id: u64, dest: Option<usize>) -> Result<()> {
+        let entry =
+            self.entries.get_mut(&id).with_context(|| format!("unknown session {id}"))?;
+        // Quiesce the old producer: its route targets the dead lane.
+        {
+            let mut st = lock_route(&entry.route);
+            st.phase = GatePhase::Aborted;
+            st.tx = None;
+        }
+        entry.route.cv.notify_all();
+        if let Some(p) = entry.producer.take() {
+            p.join().ok();
+        }
+        let cfg = entry.cfg.clone();
+        let total = entry.total;
+        let status = entry.status.clone();
+        let state = self
+            .directory
+            .get(id)
+            .with_context(|| format!("session {id} has no registered state store"))?;
+
+        let (mut runner, consumed_upto) = match self.load_background_snapshot(id, state.clone())
+        {
+            Some(loaded) => loaded,
+            None => {
+                let engine = make_engine(&cfg, self.g)
+                    .with_context(|| format!("rebuilding engine for session {id}"))?;
+                (SessionRunner::new(&cfg, engine, &self.opts.server, state), 0)
+            }
+        };
+        runner.set_status_cell(status.clone());
+        let mut stream = build_stream(&cfg)
+            .with_context(|| format!("rebuilding stream for session {id}"))?;
+
+        let Some(dest) = dest else {
+            status.set_phase(SessionPhase::Detached);
+            let entry = self.entries.get_mut(&id).expect("entry checked above");
+            entry.parked = Some(ParkedSession { runner: Box::new(runner), consumed_upto });
+            return Ok(());
+        };
+
+        status.set_shard(dest);
+        let cost = runner.placement_cost();
+        self.active[dest].fetch_add(cost, Ordering::Relaxed);
+        let attach = ControlMsg::Attach { session: id, runner: Box::new(runner), consumed_upto };
+        let ctrl = self
+            .ctrl_txs
+            .get(dest)
+            .and_then(|t| t.as_ref())
+            .with_context(|| format!("shard {dest} is not live"))?;
+        if ctrl.send(attach).is_err() {
+            self.active[dest].fetch_sub(cost, Ordering::Relaxed);
+            bail!("shard {dest} worker is gone");
+        }
+        let route = Arc::new(Route::with_seq(
+            self.data_txs[dest].as_ref().expect("dest is live").clone(),
+            Arc::clone(&self.metrics.depths[dest]),
+            consumed_upto,
+        ));
+        let monitor_every = self.opts.server.monitor_every.max(1);
+        let producer = {
+            let route = Arc::clone(&route);
+            let ingested = Arc::clone(&self.metrics.ingested);
+            thread::spawn(move || {
+                drive_stream_from(&mut stream, total, monitor_every, consumed_upto, &mut |ev| {
+                    emit_routed(&route, id, ev, &ingested)
+                });
+            })
+        };
+        let entry = self.entries.get_mut(&id).expect("entry checked above");
+        entry.route = route;
+        entry.producer = Some(producer);
+        entry.shard = dest;
+        Ok(())
+    }
+
+    /// Try to rebuild a runner from the tenant's crash-consistent
+    /// background snapshot. Any failure — no `state_dir`, missing file,
+    /// torn write, id mismatch, decode error — yields `None` and the
+    /// caller falls back to start-of-stream replay.
+    fn load_background_snapshot(
+        &self,
+        id: u64,
+        state: StateStore,
+    ) -> Option<(SessionRunner, u64)> {
+        let dir = self.opts.state_dir.as_ref()?;
+        let bytes = fs::read(dir.join(format!("session-{id}.snap"))).ok()?;
+        let mut r = SnapReader::open(&bytes).ok()?;
+        if r.get_u64().ok()? != id {
+            return None;
+        }
+        let _name = r.get_str().ok()?;
+        let cfg = read_config(&mut r).ok()?;
+        let _total = r.get_u64().ok()?;
+        let consumed_upto = r.get_u64().ok()?;
+        let engine = make_engine(&cfg, self.g).ok()?;
+        let mut runner = SessionRunner::new(&cfg, engine, &self.opts.server, state);
+        runner.load_state(&mut r).ok()?;
+        r.expect_end().ok()?;
+        Some((runner, consumed_upto))
+    }
+
+    /// Cadence-driven background snapshotter: with `hub.snapshot_every_ms`
+    /// and a `state_dir` configured, serialize every live tenant through
+    /// its worker's Snapshot probe into `<state_dir>/session-<id>.snap` —
+    /// atomic temp-file + rename, **without parking anyone**. A SIGKILLed
+    /// process restarted with `--restore-latest` resumes each tenant from
+    /// its last such copy.
+    pub fn snapshot_tick(&mut self) {
+        if self.opts.snapshot_every_ms == 0 || self.opts.state_dir.is_none() {
+            return;
+        }
+        if self.last_snapshot.elapsed() < Duration::from_millis(self.opts.snapshot_every_ms) {
+            return;
+        }
+        self.last_snapshot = Instant::now();
+        let ids: Vec<u64> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.parked.is_none() && e.producer.is_some())
+            .filter(|(_, e)| !e.status.snapshot().phase.is_terminal())
+            .map(|(&id, _)| id)
+            .collect();
+        for id in ids {
+            // Best effort per tenant: one unsnapshottable session (a
+            // drain race, a non-serializable engine) must not stop the
+            // sweep or the serving plane.
+            let _ = self.snapshot_session(id);
+        }
+    }
+
+    /// Snapshot one live session to `<state_dir>/session-<id>.snap`
+    /// without parking it; returns the path written.
+    pub fn snapshot_session(&mut self, id: u64) -> Result<PathBuf> {
+        let dir = self.opts.state_dir.clone().context(
+            "no durability directory: configure hub.state_dir for background snapshots",
+        )?;
+        let entry = self.entry(id)?;
+        let shard = entry.shard;
+        let (tx, rx) = channel();
+        self.ctrl_txs
+            .get(shard)
+            .and_then(|t| t.as_ref())
+            .with_context(|| format!("shard {shard} is not live"))?
+            .send(ControlMsg::Snapshot { session: id, reply: tx })
+            .map_err(|_| anyhow::anyhow!("shard {shard} worker is gone"))?;
+        let payload = match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(Some(p)) => p,
+            Ok(None) => bail!("session {id} cannot be snapshotted (drained or unserializable)"),
+            Err(_) => bail!("shard {shard} worker did not answer the snapshot probe"),
+        };
+        let entry = self.entry(id)?;
+        let mut w = SnapWriter::new();
+        w.put_u64(id);
+        w.put_str(&entry.name);
+        write_config(&mut w, &entry.cfg);
+        w.put_u64(entry.total as u64);
+        // The worker's payload is the consumed-seq cut point followed by
+        // the full runner state — exactly the tail of the detach-to-disk
+        // layout, so `restore_from_disk` reads both file flavours.
+        w.extend_from_payload(&payload);
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating durability directory {}", dir.display()))?;
+        let path = dir.join(format!("session-{id}.snap"));
+        write_atomic(&path, &w.finish())?;
+        Ok(path)
+    }
+
+    /// Startup recovery: scan `dir` (or the configured `state_dir`) for
+    /// session snapshots and restore every one — background copies and
+    /// detach-to-disk files alike. Torn `*.tmp` leftovers, quarantine
+    /// parks and corrupt files are skipped and reported, never fatal.
+    /// Returns the restored handles and one description per skipped file.
+    pub fn restore_latest(
+        &mut self,
+        dir: Option<&Path>,
+    ) -> Result<(Vec<SessionHandle>, Vec<String>)> {
+        let dir: PathBuf = match dir {
+            Some(d) => d.to_path_buf(),
+            None => self.opts.state_dir.clone().context(
+                "no durability directory: configure hub.state_dir or pass one explicitly",
+            )?,
+        };
+        let mut restored = Vec::new();
+        let mut skipped = Vec::new();
+        let Ok(listing) = fs::read_dir(&dir) else {
+            return Ok((restored, skipped)); // no directory yet: nothing to resume
+        };
+        let mut paths: Vec<PathBuf> = listing.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+        paths.sort();
+        for path in paths {
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            if name.ends_with(".tmp") {
+                skipped.push(format!("{name}: torn write (crash mid-snapshot); ignored"));
+                continue;
+            }
+            if !name.starts_with("session-") || !name.ends_with(".snap") {
+                continue;
+            }
+            if name.contains(".quarantine.") {
+                skipped
+                    .push(format!("{name}: quarantined tenant awaiting operator inspection"));
+                continue;
+            }
+            match self.restore_from_disk(&path) {
+                Ok(h) => restored.push(h),
+                Err(e) => skipped.push(format!("{name}: {e:#}")),
+            }
+        }
+        Ok((restored, skipped))
     }
 
     /// Retire the live shard with the lowest placement-cost load,
@@ -1107,7 +1643,7 @@ impl ElasticHub {
         // join the producer so the thread does not outlive the tenant.
         let entry = self.entries.get_mut(&id).expect("entry checked above");
         {
-            let mut st = entry.route.state.lock().expect("route lock poisoned");
+            let mut st = lock_route(&entry.route);
             st.phase = GatePhase::Aborted;
             st.tx = None;
         }
@@ -1129,7 +1665,7 @@ impl ElasticHub {
         fs::create_dir_all(&dir)
             .with_context(|| format!("creating durability directory {}", dir.display()))?;
         let path = dir.join(format!("session-{id}.snap"));
-        fs::write(&path, w.finish())
+        write_atomic(&path, &w.finish())
             .with_context(|| format!("writing session snapshot {}", path.display()))?;
         entry.status.set_phase(SessionPhase::Detached);
         self.entries.remove(&id);
@@ -1238,6 +1774,8 @@ impl ElasticHub {
             while self.metrics.samples_ingested() < spec.arrive_at
                 && self.any_producer_ingesting()
             {
+                self.supervise_tick();
+                self.snapshot_tick();
                 self.autoscale_tick();
                 thread::sleep(Duration::from_millis(1));
             }
@@ -1265,10 +1803,14 @@ impl ElasticHub {
     /// paused/parked producers, stop the shard workers, and assemble the
     /// aggregate summary (parked runners are drained into reports too).
     pub fn finish(mut self) -> Result<HubSummary> {
+        // Recover any fault domain that died just before the drain and
+        // reap outstanding quarantines, so the summary accounts for
+        // every admitted tenant.
+        self.supervise_tick();
         // Paused or parked producers would gate forever: abort them so
         // their threads exit. Streaming producers run to completion.
         for entry in self.entries.values_mut() {
-            let mut st = entry.route.state.lock().expect("route lock poisoned");
+            let mut st = lock_route(&entry.route);
             if st.phase == GatePhase::Paused {
                 st.phase = GatePhase::Aborted;
             }
@@ -1283,7 +1825,7 @@ impl ElasticHub {
         // Disconnect the data lanes: clear every route's sender, then
         // drop the hub's own. Workers exit once their lane disconnects.
         for entry in self.entries.values_mut() {
-            entry.route.state.lock().expect("route lock poisoned").tx = None;
+            lock_route(&entry.route).tx = None;
         }
         self.data_txs.clear();
 
@@ -1303,6 +1845,10 @@ impl ElasticHub {
                 }
             }
         }
+        // Quarantine notices sent during the drain arrive before the
+        // workers exit; reaping them here parks the offending runners so
+        // the loop below reports them (affected tenants: lost = 0).
+        self.reap_quarantined();
         // Parked runners never reached a worker's drain: finish them here.
         for (&id, entry) in self.entries.iter_mut() {
             if let Some(parked) = entry.parked.take() {
@@ -1363,11 +1909,11 @@ fn emit_routed(route: &Route, session: u64, event: StreamEvent, ingested: &Atomi
         StreamEvent::Batch(b) => b.rows() as u64,
         _ => 0,
     };
-    let mut st = route.state.lock().expect("route lock poisoned");
+    let mut st = lock_route(route);
     loop {
         match st.phase {
             GatePhase::Streaming => break,
-            GatePhase::Paused => st = route.cv.wait(st).expect("route lock poisoned"),
+            GatePhase::Paused => st = route.cv.wait(st).unwrap_or_else(|e| e.into_inner()),
             GatePhase::Aborted => return false,
         }
     }
@@ -1391,7 +1937,7 @@ fn emit_routed(route: &Route, session: u64, event: StreamEvent, ingested: &Atomi
         depth.fetch_sub(1, Ordering::Relaxed);
     }
 
-    let mut st = route.state.lock().expect("route lock poisoned");
+    let mut st = lock_route(route);
     st.in_flight = false;
     drop(st);
     route.cv.notify_all();
@@ -1668,6 +2214,8 @@ mod tests {
             active: Arc::new((0..1).map(|_| AtomicUsize::new(0)).collect()),
             consumed: Arc::new(AtomicU64::new(0)),
             exec: CohortExecutor::new(true),
+            quarantined: BTreeSet::new(),
+            quarantine_tx: channel().0,
         };
         let (data_tx, data_rx) = sync_channel::<DataMsg>(16);
         let (ctrl_tx, ctrl_rx) = channel::<ControlMsg>();
@@ -1917,5 +2465,182 @@ mod tests {
         assert_eq!(a.samples, b.samples);
         assert_eq!(a.b.as_slice(), b.b.as_slice(), "migration must not perturb the math");
         assert_eq!(a.amari_history, b.amari_history);
+    }
+
+    #[test]
+    fn nan_tenant_is_quarantined_and_siblings_are_unperturbed() {
+        let dir = std::env::temp_dir()
+            .join(format!("easi-quarantine-{}-{}", std::process::id(), line!()));
+        // Reference: the healthy tenant alone on one shard.
+        let opts = HubOptions { shards: 1, ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts.clone()).unwrap();
+        hub.attach(small_cfg(41)).unwrap();
+        let want = hub.finish().unwrap();
+
+        // Disturbed: the same tenant shares its shard with one whose
+        // mixing goes permanently non-finite at sample 0.
+        let mut opts = opts;
+        opts.state_dir = Some(dir.clone());
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let directory = hub.directory();
+        hub.attach(small_cfg(41)).unwrap();
+        let mut bad = small_cfg(42);
+        bad.signal.mixing = "nan_burst".into();
+        bad.signal.switch_at = 0;
+        let hb = hub.attach(bad).unwrap();
+        let sum = hub.finish().unwrap();
+
+        // Every admitted tenant is accounted for: the healthy one
+        // drained, the poisoned one quarantined — lost = 0.
+        assert_eq!(sum.sessions.len(), 2);
+        let st = directory.status(hb.id()).unwrap();
+        assert_eq!(st.phase, SessionPhase::Quarantined);
+        let fault = st.fault.expect("quarantine carries its reason");
+        assert!(fault.contains("rollback/reset attempts"), "{fault}");
+        assert_eq!(directory.quarantined(), vec![hb.id()]);
+        let sup = directory.supervisor_log().snapshot();
+        assert_eq!(sup.quarantines, 1);
+        assert!(sup.last_fault.unwrap().contains(&format!("tenant {}", hb.id())));
+        // The quarantined runner was parked to disk for operator
+        // inspection, under a name `restore_latest` will refuse to
+        // auto-resume.
+        assert!(
+            dir.join(format!("session-{}.quarantine.snap", hb.id())).is_file(),
+            "quarantine park file missing"
+        );
+        // The healthy sibling's trajectory is bit-identical to its solo
+        // run: the fault never crossed the tenant boundary.
+        let a = &want.sessions[0].summary;
+        let b = &sum.sessions.iter().find(|r| r.id == 0).unwrap().summary;
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(a.b.as_slice(), b.b.as_slice(), "sibling perturbed by quarantine");
+        assert_eq!(a.amari_history, b.amari_history);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injected_worker_panic_recovers_bit_identically() {
+        // Reference: the same tenant with no fault injected.
+        let mut cfg = small_cfg(43);
+        cfg.samples = 60_000;
+        let opts = HubOptions { shards: 1, ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts.clone()).unwrap();
+        hub.attach(cfg.clone()).unwrap();
+        let want = hub.finish().unwrap();
+
+        // Victim run: the shard worker panics mid-stream; the supervisor
+        // respawns the slot and replays the tenant from its last
+        // consistent state (here: sample 0 — no background snapshot).
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let directory = hub.directory();
+        let h = hub.attach(cfg).unwrap();
+        while h.checkpoint().samples == 0 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        hub.inject_worker_panic(0, "injected fault: chaos drill").unwrap();
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while directory.supervisor_log().snapshot().restarts == 0 {
+            hub.supervise_tick();
+            assert!(Instant::now() < deadline, "supervisor never noticed the dead shard");
+            thread::sleep(Duration::from_millis(1));
+        }
+        let got = hub.finish().unwrap();
+        assert_eq!(got.sessions.len(), 1);
+        let sup = directory.supervisor_log().snapshot();
+        assert_eq!(sup.restarts, 1);
+        assert_eq!(sup.per_shard, vec![1]);
+        assert!(sup.last_fault.unwrap().contains("injected fault"), "panic reason recorded");
+        let (a, b) = (&want.sessions[0].summary, &got.sessions[0].summary);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(
+            a.b.as_slice(),
+            b.b.as_slice(),
+            "post-restart replay must be bit-identical to the fault-free run"
+        );
+        assert_eq!(a.amari_history, b.amari_history);
+    }
+
+    #[test]
+    fn background_snapshot_survives_unclean_shutdown() {
+        let dir = std::env::temp_dir()
+            .join(format!("easi-bgsnap-{}-{}", std::process::id(), line!()));
+        let mut cfg = small_cfg(44);
+        cfg.samples = 200_000;
+        cfg.adapt.enabled = true;
+        let mut opts = HubOptions { shards: 1, ..Default::default() };
+        opts.state_dir = Some(dir.clone());
+
+        // Uninterrupted reference trajectory.
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts.clone()).unwrap();
+        hub.attach(cfg.clone()).unwrap();
+        let want = hub.finish().unwrap();
+
+        // Interrupted: a live (never parked) tenant is snapshotted in the
+        // background, then the hub is dropped without draining — the
+        // in-process stand-in for a SIGKILLed server.
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts.clone()).unwrap();
+        let h = hub.attach(cfg).unwrap();
+        while h.checkpoint().samples == 0 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        let path = hub.snapshot_session(h.id()).unwrap();
+        assert!(path.ends_with("session-0.snap"), "{}", path.display());
+        assert_eq!(h.status().phase, SessionPhase::Streaming, "snapshot never parked it");
+        drop(hub);
+
+        // Startup recovery resumes the snapshotted tenant and replays the
+        // remainder bit-identically.
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let (restored, skipped) = hub.restore_latest(None).unwrap();
+        assert!(skipped.is_empty(), "{skipped:?}");
+        assert_eq!(restored.len(), 1);
+        assert_eq!(restored[0].id(), h.id());
+        let got = hub.finish().unwrap();
+        assert_eq!(got.sessions.len(), 1);
+        let (a, b) = (&want.sessions[0].summary, &got.sessions[0].summary);
+        assert_eq!(a.samples, b.samples);
+        assert_eq!(
+            a.b.as_slice(),
+            b.b.as_slice(),
+            "resume from background snapshot must match the uninterrupted run"
+        );
+        assert_eq!(a.amari_history, b.amari_history);
+        assert_eq!(a.converged_at, b.converged_at);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_latest_skips_torn_and_quarantined_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("easi-restore-latest-{}-{}", std::process::id(), line!()));
+        let opts = HubOptions { shards: 1, ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts.clone()).unwrap();
+        let mut cfg = small_cfg(45);
+        cfg.samples = 60_000;
+        let h = hub.attach(cfg).unwrap();
+        while h.checkpoint().samples == 0 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        hub.detach_to_disk(h.id(), Some(dir.as_path())).unwrap();
+        hub.finish().unwrap();
+        // Debris a crash could leave behind: a torn half-written snapshot
+        // and a quarantine park awaiting operator inspection.
+        std::fs::write(dir.join("session-0.snap.tmp"), b"torn half-write").unwrap();
+        std::fs::write(dir.join("session-7.quarantine.snap"), b"parked fault").unwrap();
+        std::fs::write(dir.join("unrelated.txt"), b"not a snapshot").unwrap();
+
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).unwrap();
+        let (restored, skipped) = hub.restore_latest(Some(dir.as_path())).unwrap();
+        assert_eq!(restored.len(), 1, "only the intact snapshot resumes");
+        assert_eq!(restored[0].id(), 0);
+        assert_eq!(skipped.len(), 2, "{skipped:?}");
+        assert!(skipped.iter().any(|s| s.contains("torn write")), "{skipped:?}");
+        assert!(skipped.iter().any(|s| s.contains("operator inspection")), "{skipped:?}");
+        // A directory that does not exist yet is an empty resume, not an
+        // error.
+        let (r, s) = hub.restore_latest(Some(Path::new("/nonexistent/easi-x"))).unwrap();
+        assert!(r.is_empty() && s.is_empty());
+        hub.finish().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

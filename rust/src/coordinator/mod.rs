@@ -24,7 +24,13 @@
 //! length-prefixed frames over plain TCP (`serve-many --listen`) — and
 //! adds the durability path: tenants detach **to disk** and restore
 //! bit-identically after a process restart, while the autoscaler grows
-//! and shrinks the shard pool from queue-depth pressure.
+//! and shrinks the shard pool from queue-depth pressure. Shard workers
+//! are supervised fault domains: a panicked worker is respawned (budget
+//! + backoff) and its tenants reattached from their last consistent
+//! state, tenants whose separator goes non-finite are quarantined
+//! instead of crashing the shard, and a cadence-driven snapshotter
+//! keeps crash-consistent copies of live tenants on disk
+//! (DESIGN.md §Fault tolerance).
 //!
 //! The request path is precision-generic: each session's engine runs the
 //! optimizer pipeline in the precision its config selects
@@ -61,4 +67,7 @@ pub use net::{serve_hub, NetClient, NetStats};
 pub use server::{
     build_stream, run_experiment, run_streaming, RunSummary, ServerOptions, SessionRunner,
 };
-pub use state::{SessionPhase, SessionStatus, Snapshot, StateDirectory, StateStore, StatusCell};
+pub use state::{
+    SessionPhase, SessionStatus, Snapshot, StateDirectory, StateStore, StatusCell, SupervisorLog,
+    SupervisorSnapshot,
+};

@@ -30,22 +30,35 @@
 //! a single hub mutex; read-side ops (STATUS, CHECKPOINT, INFER) go
 //! through the lock-free [`StateDirectory`] the shard workers publish
 //! into, so observation and inference never contend with admission. The
-//! accept loop doubles as the autoscaler clock: every idle poll tick it
-//! takes the hub lock briefly to run `autoscale_tick`.
+//! accept loop doubles as the hub's control clock: every idle poll tick
+//! it takes the hub lock briefly to run the supervisor, snapshotter and
+//! autoscaler ticks.
+//!
+//! # Fault containment
+//!
+//! A connection can never take the service down: request dispatch runs
+//! under `catch_unwind` (a handler panic answers that one client with an
+//! error frame and closes only its connection), reads and writes carry
+//! timeouts (a stalled or half-dead peer times out instead of pinning a
+//! handler thread forever), and the client retries its initial connect
+//! with jittered exponential backoff so a server mid-restart is an
+//! inconvenience, not an outage.
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::hub::HubSummary;
-use crate::coordinator::lifecycle::{read_config, write_config, ElasticHub};
+use crate::coordinator::lifecycle::{panic_message, read_config, write_config, ElasticHub};
 use crate::coordinator::state::{Snapshot, StateDirectory};
 use crate::linalg::Mat64;
+use crate::signal::Pcg32;
 use crate::snapshot::{SnapReader, SnapWriter};
 use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Upper bound on a single frame (requests and responses). Generous for
 /// config payloads and B matrices; small enough that a corrupt length
@@ -78,7 +91,25 @@ pub mod op {
     pub const REATTACH: u8 = 0x0B;
     /// () → () — drain the hub and stop the server.
     pub const SHUTDOWN: u8 = 0x0C;
+    /// (shard, reason) → () — fault injection: panic the shard's worker
+    /// thread so the supervisor's respawn path can be drilled end to end.
+    pub const CRASH: u8 = 0x0D;
 }
+
+/// Server-side read timeout while parked between requests — short, so an
+/// idle handler notices a server shutdown promptly.
+const READ_IDLE_POLL: Duration = Duration::from_millis(500);
+/// Deadline for a peer to deliver the rest of a frame it started — a
+/// stalled or half-dead peer is cut off instead of pinning its handler
+/// thread forever.
+const READ_FRAME_DEADLINE: Duration = Duration::from_secs(120);
+/// Write timeout on both sides: a peer that stops draining its socket
+/// cannot wedge a handler (or client) in `write_all`.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Client connect retries (initial attempt included) with jittered
+/// exponential backoff, so clients ride through a server restart window.
+const CONNECT_ATTEMPTS: u32 = 5;
+const CONNECT_BACKOFF_BASE_MS: u64 = 50;
 
 // ---------------------------------------------------------------------------
 // Framing.
@@ -118,6 +149,64 @@ fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
     Ok(Some(payload))
 }
 
+/// One poll of the server-side frame reader.
+enum FrameIn {
+    /// A complete request frame.
+    Frame(Vec<u8>),
+    /// Clean close: EOF on a frame boundary.
+    Closed,
+    /// The read timeout elapsed with no frame started — the handler's
+    /// chance to notice a server shutdown and hang up.
+    Idle,
+}
+
+/// Server-side `read_frame`: the stream carries a short read timeout
+/// ([`READ_IDLE_POLL`]), so a quiet peer yields `Idle` ticks instead of
+/// blocking the handler forever. Once a frame has *started*, the peer
+/// gets [`READ_FRAME_DEADLINE`] to deliver the rest; a stall past that
+/// is an error (the connection dies, the hub is untouched).
+fn read_frame_net(r: &mut TcpStream) -> Result<FrameIn> {
+    let mut hdr = [0u8; 4];
+    let mut filled = 0;
+    let mut started_at: Option<Instant> = None;
+    let timed_out = |e: &io::Error| {
+        matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+    };
+    while filled < hdr.len() {
+        match r.read(&mut hdr[filled..]) {
+            Ok(0) if filled == 0 => return Ok(FrameIn::Closed),
+            Ok(0) => bail!("connection closed mid-frame header"),
+            Ok(k) => {
+                filled += k;
+                started_at.get_or_insert_with(Instant::now);
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if timed_out(&e) => match started_at {
+                None => return Ok(FrameIn::Idle),
+                Some(t0) if t0.elapsed() < READ_FRAME_DEADLINE => {}
+                Some(_) => bail!("peer stalled mid-frame header"),
+            },
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_be_bytes(hdr);
+    ensure!(len <= MAX_FRAME, "peer announced a {len} byte frame (cap {MAX_FRAME})");
+    let t0 = started_at.unwrap_or_else(Instant::now);
+    let mut payload = vec![0u8; len as usize];
+    let mut filled = 0;
+    while filled < payload.len() {
+        match r.read(&mut payload[filled..]) {
+            Ok(0) => bail!("connection closed mid-frame body"),
+            Ok(k) => filled += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if timed_out(&e) && t0.elapsed() < READ_FRAME_DEADLINE => {}
+            Err(e) if timed_out(&e) => bail!("peer stalled mid-frame body"),
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(FrameIn::Frame(payload))
+}
+
 fn ok_frame(body: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(1 + body.len());
     out.push(0);
@@ -146,7 +235,11 @@ struct Shared {
 }
 
 fn with_hub<T>(st: &Shared, f: impl FnOnce(&mut ElasticHub) -> Result<T>) -> Result<T> {
-    let mut guard = st.hub.lock().map_err(|_| anyhow!("hub lock poisoned"))?;
+    // A handler that panicked while holding the lock poisons it; the hub
+    // itself is still structurally sound (every mutation is applied
+    // through its own internal channels), so recover the guard instead
+    // of turning one bad request into a permanent outage.
+    let mut guard = st.hub.lock().unwrap_or_else(|e| e.into_inner());
     let hub = guard.as_mut().context("hub is shutting down")?;
     f(hub)
 }
@@ -176,9 +269,14 @@ pub fn serve_hub(hub: ElasticHub, listener: TcpListener) -> Result<HubSummary> {
                 thread::spawn(move || handle_conn(&st, conn));
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                // Idle tick: drive the autoscaler, then back off briefly.
-                if let Ok(mut guard) = shared.hub.lock() {
+                // Idle tick: drive the supervisor (respawn dead shard
+                // workers, reap quarantines), the background snapshotter
+                // and the autoscaler, then back off briefly.
+                {
+                    let mut guard = shared.hub.lock().unwrap_or_else(|e| e.into_inner());
                     if let Some(h) = guard.as_mut() {
+                        h.supervise_tick();
+                        h.snapshot_tick();
                         h.autoscale_tick();
                     }
                 }
@@ -191,7 +289,7 @@ pub fn serve_hub(hub: ElasticHub, listener: TcpListener) -> Result<HubSummary> {
     let hub = shared
         .hub
         .lock()
-        .map_err(|_| anyhow!("hub lock poisoned"))?
+        .unwrap_or_else(|e| e.into_inner())
         .take()
         .context("hub already taken at shutdown")?;
     hub.finish()
@@ -199,21 +297,38 @@ pub fn serve_hub(hub: ElasticHub, listener: TcpListener) -> Result<HubSummary> {
 
 fn handle_conn(st: &Shared, conn: TcpStream) {
     conn.set_nodelay(true).ok();
+    conn.set_read_timeout(Some(READ_IDLE_POLL)).ok();
+    conn.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
     let mut reader = match conn.try_clone() {
         Ok(c) => c,
         Err(_) => return,
     };
     let mut writer = conn;
     loop {
-        let payload = match read_frame(&mut reader) {
-            Ok(Some(p)) => p,
-            // Clean close, torn connection, or oversized frame: the
-            // connection dies; the hub is untouched.
-            Ok(None) | Err(_) => return,
+        let payload = match read_frame_net(&mut reader) {
+            Ok(FrameIn::Frame(p)) => p,
+            // Between requests: hang up once the server is stopping so
+            // idle keep-alive connections cannot outlive the hub.
+            Ok(FrameIn::Idle) => {
+                if st.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            // Clean close, torn connection, stalled peer, or oversized
+            // frame: the connection dies; the hub is untouched.
+            Ok(FrameIn::Closed) | Err(_) => return,
         };
-        let resp = match dispatch(st, &payload) {
-            Ok(body) => ok_frame(&body),
-            Err(e) => err_frame(&e),
+        // A panicking handler answers *this* client with an error frame
+        // and at worst loses this connection — the accept loop and every
+        // other tenant keep running.
+        let resp = match catch_unwind(AssertUnwindSafe(|| dispatch(st, &payload))) {
+            Ok(Ok(body)) => ok_frame(&body),
+            Ok(Err(e)) => err_frame(&e),
+            Err(panic) => err_frame(&anyhow!(
+                "request handler panicked: {}",
+                panic_message(panic.as_ref())
+            )),
         };
         if write_frame(&mut writer, &resp).is_err() {
             return;
@@ -314,6 +429,11 @@ fn dispatch(st: &Shared, payload: &[u8]) -> Result<Vec<u8>> {
         op::SHUTDOWN => {
             st.stop.store(true, Ordering::SeqCst);
         }
+        op::CRASH => {
+            let shard = r.get_u64()?;
+            let reason = r.get_str()?;
+            with_hub(st, |h| h.inject_worker_panic(shard as usize, &reason))?;
+        }
         other => bail!("unknown opcode 0x{other:02X}"),
     }
     r.expect_end().context("trailing bytes in request")?;
@@ -349,11 +469,36 @@ pub struct NetClient {
 }
 
 impl NetClient {
+    /// Connect with jittered exponential backoff: up to
+    /// [`CONNECT_ATTEMPTS`] tries, so a server mid-restart (the chaos
+    /// drill's kill/resume window) looks like latency, not an outage.
+    /// The established stream carries read/write timeouts — a dead
+    /// server fails a call instead of hanging it forever.
     pub fn connect(addr: &str) -> Result<Self> {
-        let stream =
-            TcpStream::connect(addr).with_context(|| format!("connecting to hub at {addr}"))?;
-        stream.set_nodelay(true).ok();
-        Ok(Self { stream })
+        let mut jitter = Pcg32::seed(
+            std::process::id() as u64 ^ (addr.len() as u64).wrapping_mul(0x9E37_79B9),
+        );
+        let mut backoff = CONNECT_BACKOFF_BASE_MS;
+        let mut last_err = None;
+        for attempt in 0..CONNECT_ATTEMPTS {
+            if attempt > 0 {
+                // Full jitter: sleep U(0, backoff] so a fleet of clients
+                // retrying a restarted server does not stampede it.
+                thread::sleep(Duration::from_millis(1 + jitter.next_u64() % backoff));
+                backoff = (backoff * 2).min(2_000);
+            }
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    stream.set_read_timeout(Some(READ_FRAME_DEADLINE)).ok();
+                    stream.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+                    return Ok(Self { stream });
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one connect attempt ran"))
+            .with_context(|| format!("connecting to hub at {addr} ({CONNECT_ATTEMPTS} attempts)"))
     }
 
     /// Send one request frame, await the response, unwrap the status
@@ -469,6 +614,15 @@ impl NetClient {
     pub fn shutdown(&mut self) -> Result<()> {
         self.call(Self::req(op::SHUTDOWN)).map(|_| ())
     }
+
+    /// Fault injection: panic `shard`'s worker thread on the server so
+    /// the supervisor's respawn/replay path can be drilled end to end.
+    pub fn crash_shard(&mut self, shard: u64, reason: &str) -> Result<()> {
+        let mut w = Self::req(op::CRASH);
+        w.put_u64(shard);
+        w.put_str(reason);
+        self.call(w).map(|_| ())
+    }
 }
 
 #[cfg(test)]
@@ -553,6 +707,29 @@ mod tests {
         c.shutdown().unwrap();
         let sum = server.join().unwrap().unwrap();
         assert_eq!(sum.sessions.len(), 1);
+    }
+
+    #[test]
+    fn crash_shard_recovers_and_the_service_survives() {
+        let mut cfg = small_cfg(23);
+        cfg.samples = 120_000;
+        let (addr, server) = start_server(HubOptions { shards: 1, ..Default::default() });
+        let mut c = NetClient::connect(&addr).unwrap();
+        let id = c.attach(&cfg).unwrap();
+        while c.checkpoint(id).unwrap().samples == 0 {
+            thread::sleep(Duration::from_millis(1));
+        }
+        c.crash_shard(0, "drill: injected worker panic").unwrap();
+        // The service keeps answering while the fault domain is down;
+        // the supervisor (accept-loop tick or the shutdown drain)
+        // respawns the shard and the tenant replays to completion.
+        assert!(c.status_table().unwrap().contains("session"));
+        assert!(c.crash_shard(9, "no such shard").is_err(), "bad shard travels as an error");
+        c.shutdown().unwrap();
+        let sum = server.join().unwrap().unwrap();
+        assert_eq!(sum.sessions.len(), 1);
+        let s = &sum.sessions[0].summary;
+        assert_eq!(s.samples + s.tail_dropped, 120_000);
     }
 
     #[test]

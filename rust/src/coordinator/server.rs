@@ -20,8 +20,8 @@ use crate::config::ExperimentConfig;
 use crate::ica::{ConvergenceCriterion, Nonlinearity};
 use crate::linalg::Mat64;
 use crate::signal::{
-    DriftOnsetMixing, MixedStream, Pcg32, RotatingMixing, SourceBank, StaticMixing,
-    SwitchOnceMixing, SwitchingMixing,
+    DriftOnsetMixing, MixedStream, NanBurstMixing, Pcg32, RotatingMixing, SourceBank,
+    StaticMixing, SwitchOnceMixing, SwitchingMixing,
 };
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -157,8 +157,13 @@ pub struct ServerOptions {
     /// Divergence guard: if any element of B exceeds this after a chunk,
     /// the separator is reset to the warm start and the monitor re-armed
     /// (the divergence-recovery behaviour of classical adaptive filters).
-    /// `f64::INFINITY` disables the guard.
+    /// `f64::INFINITY` disables the guard (the non-finite check stays on).
     pub divergence_bound: f64,
+    /// Numeric-fault retry budget: consecutive divergence-guard trips a
+    /// session may accumulate (each one is a rollback-from-checkpoint or
+    /// warm-start retry) before it latches a fault and is quarantined by
+    /// its hosting worker. A clean chunk refills the budget.
+    pub max_fault_retries: u64,
 }
 
 impl Default for ServerOptions {
@@ -169,6 +174,7 @@ impl Default for ServerOptions {
             criterion: ConvergenceCriterion::default(),
             agc_time_constant: 2048,
             divergence_bound: 1e4,
+            max_fault_retries: 3,
         }
     }
 }
@@ -196,6 +202,13 @@ impl Agc {
             return 1.0;
         }
         let p = x.iter().map(|v| v * v).sum::<f64>() / x.len() as f64;
+        if !p.is_finite() {
+            // A non-finite sample must not poison the gain tracker
+            // forever: keep the EMA at its last healthy value and let the
+            // divergence guard downstream deal with the poisoned chunk,
+            // so a tenant whose input glitches NaN can still recover.
+            return 1.0;
+        }
         if !self.primed {
             // Prime with the first sample so startup isn't a huge step.
             self.ema_power = p.max(1e-12);
@@ -288,6 +301,13 @@ pub fn build_stream(cfg: &ExperimentConfig) -> Result<MixedStream> {
             cfg.signal.omega,
             cfg.signal.switch_at,
         )),
+        "nan_burst" => Box::new(NanBurstMixing::random(
+            &mut rng,
+            cfg.m,
+            cfg.n,
+            cfg.signal.max_cond,
+            cfg.signal.switch_at,
+        )),
         other => bail!("unknown signal.mixing '{other}'"),
     };
     Ok(MixedStream::new(bank, mixing, rng))
@@ -332,6 +352,16 @@ pub struct SessionRunner {
     /// Latched at the first ingested event so a session's elapsed/sps
     /// measure its own service window, not hub setup time.
     started: Option<Instant>,
+    /// Consecutive divergence-guard trips (a clean chunk resets it).
+    /// Transient — deliberately not serialized: a restored session gets
+    /// a fresh retry budget.
+    fault_strikes: u64,
+    /// Strike budget before a fault latches (from [`ServerOptions`]).
+    max_fault_retries: u64,
+    /// Latched numeric-fault reason. Once set, the hosting worker pulls
+    /// this tenant off its shard (quarantine) instead of streaming
+    /// garbage. Transient — not serialized.
+    fault: Option<String>,
 }
 
 impl SessionRunner {
@@ -360,8 +390,18 @@ impl SessionRunner {
             status: StatusCell::new(0, &cfg.name),
             observed_depth: 0,
             started: None,
+            fault_strikes: 0,
+            max_fault_retries: options.max_fault_retries,
+            fault: None,
             engine,
         }
+    }
+
+    /// The latched numeric-fault reason, if this session's divergence
+    /// guard tripped more than `max_fault_retries` consecutive times —
+    /// the hosting worker's signal to quarantine the tenant.
+    pub fn fault(&self) -> Option<&str> {
+        self.fault.as_deref()
     }
 
     /// Publish health into `cell` instead of the private default (the
@@ -424,6 +464,9 @@ impl SessionRunner {
             adapt,
             status,
             observed_depth,
+            fault_strikes,
+            max_fault_retries,
+            fault,
             ..
         } = self;
         chunker
@@ -442,6 +485,9 @@ impl SessionRunner {
                     adapt,
                     status,
                     *observed_depth,
+                    fault_strikes,
+                    *max_fault_retries,
+                    fault,
                 );
                 Ok(())
             })
@@ -492,6 +538,9 @@ impl SessionRunner {
             adapt,
             status,
             observed_depth,
+            fault_strikes,
+            max_fault_retries,
+            fault,
             ..
         } = self;
         chunk_bookkeeping(
@@ -507,6 +556,9 @@ impl SessionRunner {
             adapt,
             status,
             *observed_depth,
+            fault_strikes,
+            *max_fault_retries,
+            fault,
         );
     }
 
@@ -528,6 +580,9 @@ impl SessionRunner {
             adapt,
             status,
             observed_depth,
+            fault_strikes,
+            max_fault_retries,
+            fault,
             ..
         } = self;
         engine.submit_chunk(chunk)?;
@@ -544,6 +599,9 @@ impl SessionRunner {
             adapt,
             status,
             *observed_depth,
+            fault_strikes,
+            *max_fault_retries,
+            fault,
         );
         Ok(())
     }
@@ -729,6 +787,9 @@ fn chunk_bookkeeping(
     adapt: &mut Option<AdaptiveController>,
     status: &mut StatusCell,
     observed_depth: usize,
+    fault_strikes: &mut u64,
+    max_fault_retries: u64,
+    fault: &mut Option<String>,
 ) {
     let b = engine.b();
     // Divergence guard: large-mu EASI under abrupt mixing
@@ -760,20 +821,40 @@ fn chunk_bookkeeping(
         }
         monitor.rearm();
         *resets += 1;
-    } else if let Some(ctrl) = adapt.as_mut() {
-        // Closed loop: observe the separated outputs of this
-        // chunk (strided), detect drift, govern μ, and keep the
-        // recovery checkpoint fresh while steady.
-        let done = engine.samples_done();
-        if ctrl.observe_chunk(&b, chunk, done).is_some() {
-            // Re-arm convergence detection so the monitor reports
-            // a post-drift `converged_at` instead of staying
-            // latched on the pre-drift one.
-            monitor.rearm();
-        } else {
-            ctrl.checkpoint_if_steady(&b);
+        // Numeric-fault quarantine: every trip above *is* one retry of
+        // the rollback/reset recovery. A separator that stays broken
+        // for more than `max_fault_retries` consecutive chunks is not
+        // recovering — its input stream is poisoned (NaN/Inf) or its
+        // dynamics are unstable — so latch a fault for the hosting
+        // worker to quarantine on, instead of resetting forever and
+        // silently streaming garbage.
+        *fault_strikes += 1;
+        if *fault_strikes > max_fault_retries && fault.is_none() {
+            *fault = Some(format!(
+                "non-finite or diverged separator persisted through {} consecutive \
+                 rollback/reset attempts",
+                *fault_strikes
+            ));
         }
-        engine.set_mu(ctrl.mu(done));
+    } else {
+        // A clean chunk refills the numeric-fault retry budget: the
+        // guard only quarantines *consecutive* failures.
+        *fault_strikes = 0;
+        if let Some(ctrl) = adapt.as_mut() {
+            // Closed loop: observe the separated outputs of this
+            // chunk (strided), detect drift, govern μ, and keep the
+            // recovery checkpoint fresh while steady.
+            let done = engine.samples_done();
+            if ctrl.observe_chunk(&b, chunk, done).is_some() {
+                // Re-arm convergence detection so the monitor reports
+                // a post-drift `converged_at` instead of staying
+                // latched on the pre-drift one.
+                monitor.rearm();
+            } else {
+                ctrl.checkpoint_if_steady(&b);
+            }
+            engine.set_mu(ctrl.mu(done));
+        }
     }
     state.publish(engine.b(), engine.samples_done());
     let amari = if have_a {
@@ -936,6 +1017,44 @@ mod tests {
         let mut cfg = small_cfg();
         cfg.signal.bank = "nope".into();
         assert!(build_stream(&cfg).is_err());
+    }
+
+    #[test]
+    fn repeated_divergence_latches_a_fault_and_clean_chunks_refill_the_budget() {
+        let mut cfg = small_cfg();
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        let engine = super::super::engine::make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        let state = StateStore::new(crate::ica::init_b(cfg.n, cfg.m));
+        let mut runner = SessionRunner::new(&cfg, engine, &ServerOptions::default(), state);
+        let chunk = runner.chunk_size();
+        let poison = |chunks: usize| Mat64::from_fn(chunks * chunk, cfg.m, |_, _| f64::NAN);
+        let mut rng = Pcg32::seed(7);
+        let mut clean = Mat64::zeros(chunk, cfg.m);
+        for r in 0..chunk {
+            for c in 0..cfg.m {
+                clean[(r, c)] = rng.normal();
+            }
+        }
+
+        // Two poisoned chunks: strikes accrue, but the default budget of
+        // 3 retries is not exhausted.
+        runner.on_block(poison(2)).unwrap();
+        assert!(runner.fault().is_none(), "2 strikes sit within the retry budget");
+        // A clean chunk refills the budget (and must not be poisoned by
+        // the NaN prefix: the AGC guard keeps the gain tracker finite).
+        runner.on_block(clean.clone()).unwrap();
+        assert!(runner.fault().is_none());
+        // Three more poisoned chunks: still within budget (counting
+        // restarted at zero after the clean chunk)...
+        runner.on_block(poison(3)).unwrap();
+        assert!(runner.fault().is_none(), "budget was refilled by the clean chunk");
+        // ...but the fourth consecutive failure latches the fault.
+        runner.on_block(poison(1)).unwrap();
+        let fault = runner.fault().expect("4 consecutive strikes exceed the budget");
+        assert!(fault.contains("rollback/reset attempts"), "{fault}");
+        // Latching is sticky and non-panicking: further blocks still flow.
+        runner.on_block(clean).unwrap();
+        assert!(runner.fault().is_some(), "a latched fault stays latched");
     }
 
     #[test]

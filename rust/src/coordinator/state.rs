@@ -18,7 +18,22 @@
 
 use crate::linalg::Mat64;
 use std::collections::BTreeMap;
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Poison-tolerant read lock. The records behind these locks are plain
+/// data (no invariants spanning multiple fields beyond what a single
+/// `write` installs), so after a writer panics mid-update the worst a
+/// reader sees is the panicking thread's last complete store — far
+/// better than the whole health plane double-panicking while the
+/// supervisor is trying to report the *first* fault.
+fn read_lock<T>(lock: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    lock.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant write lock (see [`read_lock`]).
+fn write_lock<T>(lock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    lock.write().unwrap_or_else(|e| e.into_inner())
+}
 
 /// An immutable published snapshot.
 #[derive(Clone, Debug)]
@@ -44,7 +59,7 @@ impl StateStore {
 
     /// Publish a new snapshot; returns the new version.
     pub fn publish(&self, b: Mat64, samples: u64) -> u64 {
-        let mut guard = self.inner.write().expect("state lock poisoned");
+        let mut guard = write_lock(&self.inner);
         guard.version += 1;
         guard.samples = samples;
         guard.b = b;
@@ -53,7 +68,7 @@ impl StateStore {
 
     /// Latest snapshot (cloned out; readers never hold the lock long).
     pub fn snapshot(&self) -> Snapshot {
-        self.inner.read().expect("state lock poisoned").clone()
+        read_lock(&self.inner).clone()
     }
 
     /// Install a snapshot wholesale (detach-to-disk restore). Subsequent
@@ -61,12 +76,12 @@ impl StateStore {
     /// a restored session's version trajectory matches an uninterrupted
     /// run of the same stream.
     pub fn restore(&self, snap: Snapshot) {
-        *self.inner.write().expect("state lock poisoned") = snap;
+        *write_lock(&self.inner) = snap;
     }
 
     /// Latest version number.
     pub fn version(&self) -> u64 {
-        self.inner.read().expect("state lock poisoned").version
+        read_lock(&self.inner).version
     }
 
     /// Apply the current separation matrix: `y = B x`.
@@ -90,6 +105,14 @@ pub enum SessionPhase {
     /// Parked: the runner was removed from its shard and is held by the
     /// control plane, ready to re-attach (on any shard) bit-identically.
     Detached,
+    /// The supervisor is rebuilding this tenant after its hosting shard
+    /// worker panicked; the shard worker's install promotes it back to
+    /// `Streaming` once the replacement runner is attached.
+    Restarting,
+    /// Terminal: the numeric-fault guard tripped repeatedly (non-finite
+    /// separator surviving the rollback/reset retry budget) and the
+    /// tenant was pulled off its shard for operator inspection.
+    Quarantined,
     /// Terminal: the session's stream ended (or the hub drained it).
     Drained,
 }
@@ -102,8 +125,16 @@ impl SessionPhase {
             Self::Streaming => "streaming",
             Self::Paused => "paused",
             Self::Detached => "detached",
+            Self::Restarting => "restarting",
+            Self::Quarantined => "quarantined",
             Self::Drained => "drained",
         }
+    }
+
+    /// Terminal phases never transition again (a racing control-plane
+    /// write cannot resurrect a finished or quarantined session).
+    pub fn is_terminal(self) -> bool {
+        matches!(self, Self::Drained | Self::Quarantined)
     }
 }
 
@@ -133,6 +164,8 @@ pub struct SessionStatus {
     /// Shard ingest backlog observed when this tenant's last block was
     /// dequeued (messages; see `HubMetrics::queue_depth` semantics).
     pub queue_depth: usize,
+    /// Why this tenant was quarantined (None while healthy).
+    pub fault: Option<String>,
 }
 
 impl SessionStatus {
@@ -148,6 +181,7 @@ impl SessionStatus {
             drift_events: 0,
             rollbacks: 0,
             queue_depth: 0,
+            fault: None,
         }
     }
 }
@@ -170,32 +204,47 @@ impl StatusCell {
 
     /// Current record (cloned out; readers never hold the lock long).
     pub fn snapshot(&self) -> SessionStatus {
-        self.inner.read().expect("status lock poisoned").clone()
+        read_lock(&self.inner).clone()
     }
 
-    /// Set the lifecycle phase (control-plane transitions). `Drained` is
-    /// terminal: once a session's stream ended, a racing pause/detach on
-    /// the control plane cannot flip the published phase back to a live
+    /// Set the lifecycle phase (control-plane transitions). `Drained`
+    /// and `Quarantined` are terminal: once a session's stream ended (or
+    /// its numeric fault was declared), a racing pause/detach on the
+    /// control plane cannot flip the published phase back to a live
     /// state.
     pub fn set_phase(&self, phase: SessionPhase) {
-        let mut s = self.inner.write().expect("status lock poisoned");
-        if s.phase != SessionPhase::Drained {
+        let mut s = write_lock(&self.inner);
+        if !s.phase.is_terminal() {
             s.phase = phase;
+        }
+    }
+
+    /// Move to the terminal `Quarantined` phase and record why — one
+    /// write lock, so a reader never sees the phase without its reason.
+    pub fn quarantine(&self, reason: &str) {
+        let mut s = write_lock(&self.inner);
+        if !s.phase.is_terminal() {
+            s.phase = SessionPhase::Quarantined;
+            s.fault = Some(reason.to_string());
         }
     }
 
     /// Record the shard currently hosting the runner.
     pub fn set_shard(&self, shard: usize) {
-        self.inner.write().expect("status lock poisoned").shard = shard;
+        write_lock(&self.inner).shard = shard;
     }
 
-    /// Promote to `Streaming` only from a fresh (`Admitted`) or parked
-    /// (`Detached`) phase — the shard worker's install-time transition.
-    /// Check-and-set under one write lock, so it can never clobber a
-    /// concurrent control-plane `Paused` (or a terminal `Drained`).
+    /// Promote to `Streaming` only from a fresh (`Admitted`), parked
+    /// (`Detached`) or supervisor-rebuilt (`Restarting`) phase — the
+    /// shard worker's install-time transition. Check-and-set under one
+    /// write lock, so it can never clobber a concurrent control-plane
+    /// `Paused` (or a terminal `Drained`/`Quarantined`).
     pub fn promote_to_streaming(&self) {
-        let mut s = self.inner.write().expect("status lock poisoned");
-        if matches!(s.phase, SessionPhase::Admitted | SessionPhase::Detached) {
+        let mut s = write_lock(&self.inner);
+        if matches!(
+            s.phase,
+            SessionPhase::Admitted | SessionPhase::Detached | SessionPhase::Restarting
+        ) {
             s.phase = SessionPhase::Streaming;
         }
     }
@@ -211,7 +260,7 @@ impl StatusCell {
         rollbacks: u64,
         queue_depth: usize,
     ) {
-        let mut s = self.inner.write().expect("status lock poisoned");
+        let mut s = write_lock(&self.inner);
         s.samples = samples;
         if last_amari.is_finite() {
             s.last_amari = last_amari;
@@ -253,24 +302,80 @@ impl AutoscaleLog {
 
     /// Publish the live shard count and per-slot pressure readings.
     pub fn publish(&self, active_shards: usize, pressure: Vec<f64>) {
-        let mut g = self.inner.write().expect("autoscale lock poisoned");
+        let mut g = write_lock(&self.inner);
         g.active_shards = active_shards;
         g.pressure = pressure;
     }
 
     /// Count a scale-up decision.
     pub fn note_spawn(&self) {
-        self.inner.write().expect("autoscale lock poisoned").spawns += 1;
+        write_lock(&self.inner).spawns += 1;
     }
 
     /// Count a scale-down decision.
     pub fn note_retire(&self) {
-        self.inner.write().expect("autoscale lock poisoned").retires += 1;
+        write_lock(&self.inner).retires += 1;
     }
 
     /// Current view (cloned out; readers never hold the lock long).
     pub fn snapshot(&self) -> AutoscaleSnapshot {
-        self.inner.read().expect("autoscale lock poisoned").clone()
+        read_lock(&self.inner).clone()
+    }
+}
+
+/// One coherent view of the fault-domain supervisor: lifetime shard
+/// fault/restart counts (total and per slot), tenant quarantines, and
+/// the most recent fault reason — the health plane's "what broke last"
+/// record.
+#[derive(Clone, Debug, Default)]
+pub struct SupervisorSnapshot {
+    /// Shard worker faults handled (each one triggers a respawn attempt
+    /// unless the slot's restart budget is exhausted).
+    pub restarts: u64,
+    /// Tenants moved to the terminal `Quarantined` phase.
+    pub quarantines: u64,
+    /// Fault/restart count per shard slot (index = slot).
+    pub per_shard: Vec<u64>,
+    /// Human-readable reason of the most recent fault (panic message or
+    /// quarantine cause).
+    pub last_fault: Option<String>,
+}
+
+/// Shared, cloneable feed of supervisor decisions — written by the hub's
+/// `supervise_tick` and quarantine path, read by the `serve-many`
+/// observer and the status table so operators see degradation, not just
+/// throughput.
+#[derive(Clone, Default)]
+pub struct SupervisorLog {
+    inner: Arc<RwLock<SupervisorSnapshot>>,
+}
+
+impl SupervisorLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a shard worker fault (and the respawn it triggers).
+    pub fn note_shard_fault(&self, shard: usize, reason: &str) {
+        let mut g = write_lock(&self.inner);
+        g.restarts += 1;
+        if g.per_shard.len() <= shard {
+            g.per_shard.resize(shard + 1, 0);
+        }
+        g.per_shard[shard] += 1;
+        g.last_fault = Some(reason.to_string());
+    }
+
+    /// Record a tenant quarantine.
+    pub fn note_quarantine(&self, reason: &str) {
+        let mut g = write_lock(&self.inner);
+        g.quarantines += 1;
+        g.last_fault = Some(reason.to_string());
+    }
+
+    /// Current view (cloned out; readers never hold the lock long).
+    pub fn snapshot(&self) -> SupervisorSnapshot {
+        read_lock(&self.inner).clone()
     }
 }
 
@@ -291,6 +396,7 @@ struct Tenant {
 pub struct StateDirectory {
     inner: Arc<RwLock<BTreeMap<u64, Tenant>>>,
     autoscale: AutoscaleLog,
+    supervisor: SupervisorLog,
 }
 
 impl StateDirectory {
@@ -307,38 +413,22 @@ impl StateDirectory {
 
     /// Register (or replace) a session's store and status cell.
     pub fn register(&self, session: u64, store: StateStore, status: StatusCell) {
-        self.inner
-            .write()
-            .expect("directory lock poisoned")
-            .insert(session, Tenant { store, status });
+        write_lock(&self.inner).insert(session, Tenant { store, status });
     }
 
     /// Look up a session's store (cheap clone; stores share state).
     pub fn get(&self, session: u64) -> Option<StateStore> {
-        self.inner
-            .read()
-            .expect("directory lock poisoned")
-            .get(&session)
-            .map(|t| t.store.clone())
+        read_lock(&self.inner).get(&session).map(|t| t.store.clone())
     }
 
     /// Look up a session's live health record.
     pub fn status(&self, session: u64) -> Option<SessionStatus> {
-        self.inner
-            .read()
-            .expect("directory lock poisoned")
-            .get(&session)
-            .map(|t| t.status.snapshot())
+        read_lock(&self.inner).get(&session).map(|t| t.status.snapshot())
     }
 
     /// Every tenant's current health record, ascending by id.
     pub fn statuses(&self) -> Vec<SessionStatus> {
-        self.inner
-            .read()
-            .expect("directory lock poisoned")
-            .values()
-            .map(|t| t.status.snapshot())
-            .collect()
+        read_lock(&self.inner).values().map(|t| t.status.snapshot()).collect()
     }
 
     /// The autoscaler's shared decision feed (the hub writes, observers
@@ -347,23 +437,37 @@ impl StateDirectory {
         self.autoscale.clone()
     }
 
+    /// The fault-domain supervisor's shared decision feed (the hub
+    /// writes, observers read).
+    pub fn supervisor_log(&self) -> SupervisorLog {
+        self.supervisor.clone()
+    }
+
     /// Render the live fleet-health table (`serve-many --status-every`).
     /// The `press` column is the hosting shard's latest ingest pressure
-    /// as seen by the autoscaler (`-` until it publishes a reading), and
-    /// a footer summarizes scaling activity once any occurred.
+    /// as seen by the autoscaler (`-` until it publishes a reading); the
+    /// `faults` column is the hosting shard's worker fault/restart count
+    /// (`-` while zero). Footers summarize scaling and supervision
+    /// activity once any occurred.
     pub fn render_status_table(&self) -> String {
         let scale = self.autoscale.snapshot();
+        let sup = self.supervisor.snapshot();
         let mut out = String::new();
         out.push_str(
-            "session  phase      shard    samples    amari  resets  drifts  rollbk  depth  press\n",
+            "session  phase        shard    samples    amari  resets  drifts  rollbk  depth  \
+             press  faults\n",
         );
         for s in self.statuses() {
             let press = match scale.pressure.get(s.shard) {
                 Some(p) if p.is_finite() => format!("{p:>5.2}"),
                 _ => format!("{:>5}", "-"),
             };
+            let faults = match sup.per_shard.get(s.shard) {
+                Some(&n) if n > 0 => format!("{n:>6}"),
+                _ => format!("{:>6}", "-"),
+            };
             out.push_str(&format!(
-                "{:>7}  {:<9}  {:>5}  {:>9}  {:>7.4}  {:>6}  {:>6}  {:>6}  {:>5}  {}\n",
+                "{:>7}  {:<11}  {:>5}  {:>9}  {:>7.4}  {:>6}  {:>6}  {:>6}  {:>5}  {}  {}\n",
                 s.id,
                 s.phase.name(),
                 s.shard,
@@ -373,7 +477,8 @@ impl StateDirectory {
                 s.drift_events,
                 s.rollbacks,
                 s.queue_depth,
-                press
+                press,
+                faults
             ));
         }
         if scale.active_shards > 0 || scale.spawns > 0 || scale.retires > 0 {
@@ -382,20 +487,38 @@ impl StateDirectory {
                 scale.active_shards, scale.spawns, scale.retires
             ));
         }
+        if sup.restarts > 0 || sup.quarantines > 0 {
+            out.push_str(&format!(
+                "supervisor: restarts={} quarantined={} last_fault={}\n",
+                sup.restarts,
+                sup.quarantines,
+                sup.last_fault.as_deref().unwrap_or("-")
+            ));
+        }
         out
     }
 
     /// Registered session ids, ascending.
     pub fn sessions(&self) -> Vec<u64> {
-        self.inner.read().expect("directory lock poisoned").keys().copied().collect()
+        read_lock(&self.inner).keys().copied().collect()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.read().expect("directory lock poisoned").len()
+        read_lock(&self.inner).len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Ids of every tenant currently in the terminal `Quarantined`
+    /// phase (fault accounting for drills and operators).
+    pub fn quarantined(&self) -> Vec<u64> {
+        self.statuses()
+            .into_iter()
+            .filter(|s| s.phase == SessionPhase::Quarantined)
+            .map(|s| s.id)
+            .collect()
     }
 
     /// Apply session `id`'s current separation matrix: `y = B x`.
@@ -494,6 +617,74 @@ mod tests {
         cell.set_phase(SessionPhase::Drained);
         cell.promote_to_streaming();
         assert_eq!(cell.snapshot().phase, SessionPhase::Drained, "Drained survives");
+    }
+
+    #[test]
+    fn quarantine_is_terminal_and_carries_its_reason() {
+        let cell = StatusCell::new(9, "bad");
+        cell.set_phase(SessionPhase::Streaming);
+        cell.quarantine("non-finite separator after 3 rollback attempts");
+        let s = cell.snapshot();
+        assert_eq!(s.phase, SessionPhase::Quarantined);
+        assert_eq!(s.fault.as_deref(), Some("non-finite separator after 3 rollback attempts"));
+        // Terminal: neither a control-plane transition, a worker install,
+        // nor a second quarantine can move or re-label it.
+        cell.set_phase(SessionPhase::Streaming);
+        cell.promote_to_streaming();
+        cell.quarantine("other");
+        let s = cell.snapshot();
+        assert_eq!(s.phase, SessionPhase::Quarantined);
+        assert_eq!(s.fault.as_deref(), Some("non-finite separator after 3 rollback attempts"));
+        // A drained session never becomes quarantined after the fact.
+        let done = StatusCell::new(1, "ok");
+        done.set_phase(SessionPhase::Drained);
+        done.quarantine("late");
+        assert_eq!(done.snapshot().phase, SessionPhase::Drained);
+        assert!(done.snapshot().fault.is_none());
+    }
+
+    #[test]
+    fn restarting_promotes_to_streaming() {
+        // The supervisor parks a tenant in Restarting while it rebuilds
+        // the runner; the replacement shard's install must promote it.
+        let cell = StatusCell::new(2, "t");
+        cell.set_phase(SessionPhase::Streaming);
+        cell.set_phase(SessionPhase::Restarting);
+        assert_eq!(cell.snapshot().phase, SessionPhase::Restarting);
+        cell.promote_to_streaming();
+        assert_eq!(cell.snapshot().phase, SessionPhase::Streaming);
+    }
+
+    #[test]
+    fn supervisor_log_feeds_status_table() {
+        let dir = StateDirectory::new();
+        let cell = StatusCell::new(1, "t1");
+        dir.register(1, StateStore::new(Mat64::eye(2, 2)), cell.clone());
+        cell.set_shard(0);
+        let table = dir.render_status_table();
+        assert!(table.contains("faults"), "{table}");
+        assert!(!table.contains("supervisor:"), "no footer before activity: {table}");
+        let log = dir.supervisor_log();
+        log.note_shard_fault(0, "shard worker panicked: injected");
+        log.note_quarantine("tenant 9: non-finite separator");
+        let snap = log.snapshot();
+        assert_eq!((snap.restarts, snap.quarantines), (1, 1));
+        assert_eq!(snap.per_shard, vec![1]);
+        let table = dir.render_status_table();
+        assert!(
+            table.contains(
+                "supervisor: restarts=1 quarantined=1 last_fault=tenant 9: non-finite separator"
+            ),
+            "{table}"
+        );
+        // Tenant 1 sits on shard 0, which has one recorded fault.
+        let row = table.lines().nth(1).expect("tenant row");
+        assert!(row.trim_end().ends_with('1'), "faults column: {row:?}");
+        // The log handle is shared through directory clones.
+        assert_eq!(dir.clone().supervisor_log().snapshot().restarts, 1);
+        assert_eq!(dir.quarantined(), Vec::<u64>::new());
+        cell.quarantine("non-finite");
+        assert_eq!(dir.quarantined(), vec![1]);
     }
 
     #[test]

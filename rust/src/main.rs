@@ -8,9 +8,7 @@ use easi_ica::cli::{usage, Args};
 use easi_ica::config::{
     EngineKind, ExperimentConfig, HubScenario, OptimizerKind, PlacementKind, Precision,
 };
-use easi_ica::coordinator::{
-    run_experiment, serve_hub, ElasticHub, HubOptions, RunSummary, SessionPhase,
-};
+use easi_ica::coordinator::{run_experiment, serve_hub, ElasticHub, HubOptions, RunSummary};
 use easi_ica::experiments::{
     a1_hyper_sweep, a2_nonlinearity, a3_adaptive_tracking, drift_study, e1_convergence,
     e3_depth_sweep, DriftStudyParams, E1Params, TrackingParams,
@@ -174,7 +172,8 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
         "config", "sessions", "shards", "samples", "capacity", "mixing", "precision", "mu",
         "gamma", "beta", "p", "optimizer", "engine", "seed", "seed-stride", "m", "n",
         "artifacts", "adapt", "switch-at", "placement", "churn", "status-every", "cohort",
-        "listen", "state-dir", "autoscale-max",
+        "listen", "state-dir", "autoscale-max", "snapshot-every", "restart-budget",
+        "restore-latest",
     ])?;
     let mut sc = if let Some(path) = args.get("config") {
         HubScenario::load(path)?
@@ -218,6 +217,9 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
     if let Some(dir) = args.get("state-dir") {
         sc.state_dir = Some(dir.to_string());
     }
+    sc.snapshot_every_ms = args.get_u64("snapshot-every", sc.snapshot_every_ms)?;
+    sc.restart_budget = args.get_usize("restart-budget", sc.restart_budget)?;
+    let restore_latest = args.switch("restore-latest");
     // `--autoscale-max N` turns elasticity on with the scenario's (or
     // default) thresholds; N caps the worker pool.
     let autoscale_max = args.get_usize("autoscale-max", 0)?;
@@ -274,6 +276,17 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
     );
 
     let mut hub = ElasticHub::start(Nonlinearity::Cube, HubOptions::from_scenario(&sc))?;
+    if restore_latest {
+        // Startup recovery: resume every crash-consistent snapshot in the
+        // state directory (background copies and detach-to-disk files
+        // alike). Torn tmp leftovers and quarantine parks are reported,
+        // never fatal — a SIGKILLed server comes back with its fleet.
+        let (restored, skipped) = hub.restore_latest(None)?;
+        println!("restore-latest: {} session(s) resumed, {} skipped", restored.len(), skipped.len());
+        for line in &skipped {
+            println!("restore-latest: skipped {line}");
+        }
+    }
     // Live health observer: print the StateDirectory status table on a
     // fixed cadence while the fleet trains (`--status-every` millis).
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -300,7 +313,7 @@ fn cmd_serve_many(args: &Args) -> Result<()> {
                     let statuses = directory.statuses();
                     if exit_on_quiesce
                         && !statuses.is_empty()
-                        && statuses.iter().all(|s| s.phase == SessionPhase::Drained)
+                        && statuses.iter().all(|s| s.phase.is_terminal())
                     {
                         break;
                     }
@@ -508,6 +521,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     args.expect_only(&[
         "quick", "out", "check", "tolerance", "min-fused-speedup", "min-f32-speedup",
         "min-cohort-speedup", "max-adapt-overhead", "max-status-overhead",
+        "max-snapshot-overhead",
     ])?;
     let quick = args.switch("quick");
     let report = easi_ica::perf::run_hotpath_suite(quick);
@@ -526,6 +540,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let cohort_floor = args.get_f64("min-cohort-speedup", 0.0)?;
         let adapt_ceiling = args.get_f64("max-adapt-overhead", 0.0)?;
         let status_ceiling = args.get_f64("max-status-overhead", 0.0)?;
+        let snapshot_ceiling = args.get_f64("max-snapshot-overhead", 0.0)?;
         let gate = easi_ica::perf::gate_against_file(
             &report,
             std::path::Path::new(baseline),
@@ -535,6 +550,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             cohort_floor,
             adapt_ceiling,
             status_ceiling,
+            snapshot_ceiling,
         )?;
         if gate.failures.is_empty() {
             println!(

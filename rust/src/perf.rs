@@ -30,6 +30,7 @@ use crate::coordinator::{
 use crate::ica::{self, EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
 use crate::linalg::{fused, CohortState, FusedScratch, Mat32, Mat64};
 use crate::signal::Pcg32;
+use crate::snapshot::SnapWriter;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -540,6 +541,8 @@ pub fn run_hotpath_suite(quick: bool) -> BenchReport {
 
     lifecycle_overhead(&mut rep, warmup, runs, rows);
 
+    snapshot_overhead(&mut rep, warmup, runs, rows);
+
     cohort_suite(&mut rep, warmup, runs);
 
     coordinator_e2e(&mut rep, quick);
@@ -869,6 +872,70 @@ fn lifecycle_overhead(rep: &mut BenchReport, warmup: usize, runs: usize, rows: u
     rep.derived.push(("status_overhead_fraction".to_string(), overhead));
 }
 
+/// Crash-consistent background snapshot cost at the gate shape (m=16,
+/// n=8): the fused step with a full runner-state serialization every 16
+/// chunks — the snapshotter's quiesce-at-chunk-boundary probe, cadence
+/// compressed so quick mode still exercises it — vs the bare fused step
+/// on the identical workload (same-section reference, like
+/// `adapt_overhead`). Disk I/O is excluded on purpose: the hub writes
+/// the payload from the control thread via `write_atomic`; the only cost
+/// a *tenant* pays is the serialization at its chunk boundary, and the
+/// derived `snapshot_overhead_fraction` is what CI's
+/// `--max-snapshot-overhead` flag gates (≤ 5%): durability must not tax
+/// tenants that never crash.
+fn snapshot_overhead(rep: &mut BenchReport, warmup: usize, runs: usize, rows: usize) {
+    let (m, n) = (16, 8);
+    let mut cfg = ExperimentConfig::default();
+    cfg.m = m;
+    cfg.n = n;
+    let opts = ServerOptions::default();
+    let engine = make_engine(&cfg, Nonlinearity::Cube).expect("native engine");
+    let runner = SessionRunner::new(&cfg, engine, &opts, StateStore::new(ica::init_b(n, m)));
+
+    let mut rng = Pcg32::seed(0x5AB5);
+    let xs = Mat64::from_fn(rows, m, |_, _| rng.normal());
+    let iters = rows as u64;
+    let mut s = FusedScratch::new(n, m);
+    let mut b_ref = ica::init_b(n, m);
+    let step = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            fused::relative_gradient_step_into(
+                &mut b_ref,
+                black_box(xs.row(t)),
+                |v| v * v * v,
+                BENCH_MU,
+                &mut s,
+            );
+        }
+        black_box(&b_ref);
+    });
+    push(rep, "fused step (snapshot reference)", "snapshot_bg_step_ref", m, n, runs, &step);
+
+    let mut b2 = ica::init_b(n, m);
+    let snapped = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            fused::relative_gradient_step_into(
+                &mut b2,
+                black_box(xs.row(t)),
+                |v| v * v * v,
+                BENCH_MU,
+                &mut s,
+            );
+            if t % 1024 == 1023 {
+                let mut w = SnapWriter::new();
+                runner.save_state(&mut w).expect("serialize runner state");
+                black_box(w.into_payload().len());
+            }
+        }
+        black_box(&b2);
+    });
+    push(rep, "fused step + bg snapshot", "snapshot_bg_step", m, n, runs, &snapped);
+
+    let overhead =
+        ((snapped.per_iter_ns() - step.per_iter_ns()) / step.per_iter_ns()).max(0.0);
+    rep.derived.push(("snapshot_overhead_fraction".to_string(), overhead));
+}
+
 /// Tenant-major cohort kernels at the serving fleet's canonical small
 /// shape (64 lanes of m=8, n=4, one 64-row chunk per lane per step —
 /// exactly one pool pump in the worker loop): the gather+gradient alone,
@@ -1023,7 +1090,9 @@ pub struct GateReport {
 /// (the control plane's cost on the fused step, machine-invariant like
 /// the speedup ratios) must stay at or below that ceiling; likewise
 /// `max_status_overhead > 0` caps `status_overhead_fraction` (the live
-/// health plane's cost on the fused step).
+/// health plane's cost on the fused step) and `max_snapshot_overhead > 0`
+/// caps `snapshot_overhead_fraction` (the background snapshotter's
+/// serialization cost on the fused step).
 pub fn check_against_baseline(
     current: &BenchReport,
     baseline: &Json,
@@ -1033,6 +1102,7 @@ pub fn check_against_baseline(
     min_cohort_speedup: f64,
     max_adapt_overhead: f64,
     max_status_overhead: f64,
+    max_snapshot_overhead: f64,
 ) -> Result<GateReport> {
     let base_calib = baseline
         .get("calibration_ns_per_iter")
@@ -1103,6 +1173,7 @@ pub fn check_against_baseline(
     };
     ceiling("adapt_overhead_fraction", max_adapt_overhead);
     ceiling("status_overhead_fraction", max_status_overhead);
+    ceiling("snapshot_overhead_fraction", max_snapshot_overhead);
     Ok(gate)
 }
 
@@ -1116,6 +1187,7 @@ pub fn gate_against_file(
     min_cohort_speedup: f64,
     max_adapt_overhead: f64,
     max_status_overhead: f64,
+    max_snapshot_overhead: f64,
 ) -> Result<GateReport> {
     let text = std::fs::read_to_string(baseline_path)
         .with_context(|| format!("reading baseline {}", baseline_path.display()))?;
@@ -1130,6 +1202,7 @@ pub fn gate_against_file(
         min_cohort_speedup,
         max_adapt_overhead,
         max_status_overhead,
+        max_snapshot_overhead,
     )
 }
 
@@ -1173,6 +1246,7 @@ mod tests {
                 ("cohort_over_solo_speedup".to_string(), 1.8),
                 ("adapt_overhead_fraction".to_string(), 0.05),
                 ("status_overhead_fraction".to_string(), 0.01),
+                ("snapshot_overhead_fraction".to_string(), 0.02),
             ],
         }
     }
@@ -1225,7 +1299,7 @@ mod tests {
     fn gate_passes_identical_report() {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 1.5, 1.5, 1.5, 0.10, 0.05).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 1.5, 1.5, 1.5, 0.10, 0.05, 0.05).unwrap();
         assert_eq!(gate.checked, 1, "only the gated record is compared");
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
@@ -1240,7 +1314,7 @@ mod tests {
         for r in &mut slower.records {
             r.ns_per_iter *= 3.0;
         }
-        let gate = check_against_baseline(&slower, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&slower, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 
@@ -1251,13 +1325,13 @@ mod tests {
 
         let mut regressed = rep.clone();
         regressed.records[0].ns_per_iter *= 1.5; // 50% > 30% tolerance
-        let gate = check_against_baseline(&regressed, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&regressed, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("regressed"));
 
         let mut missing = rep.clone();
         missing.records.remove(0);
-        let gate = check_against_baseline(&missing, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&missing, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1266,7 +1340,7 @@ mod tests {
     fn gate_enforces_fused_speedup_floor() {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 2.5, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 2.5, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("fused_step_speedup"));
     }
@@ -1278,16 +1352,16 @@ mod tests {
         // missing the derived value fails when the ceiling is requested.
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.10, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.10, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.01, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.01, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("adapt_overhead_fraction"));
         let mut bare = rep.clone();
         bare.derived.retain(|(k, _)| k != "adapt_overhead_fraction");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.10, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.10, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1299,17 +1373,38 @@ mod tests {
         // a report missing the derived value fails when requested.
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.05).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.05, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
         let gate =
-            check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.001).unwrap();
+            check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.001, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("status_overhead_fraction"));
         let mut bare = rep.clone();
         bare.derived.retain(|(k, _)| k != "status_overhead_fraction");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.05).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.05, 0.0).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("missing"));
+    }
+
+    #[test]
+    fn gate_enforces_snapshot_overhead_ceiling() {
+        // tiny_report carries snapshot_overhead_fraction = 0.02: a 5%
+        // ceiling passes, a 1% ceiling fails, 0 disables the check, and
+        // a report missing the derived value fails when requested.
+        let rep = tiny_report();
+        let baseline = Json::parse(&rep.to_json()).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.05).unwrap();
+        assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.01).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("snapshot_overhead_fraction"));
+        let mut bare = rep.clone();
+        bare.derived.retain(|(k, _)| k != "snapshot_overhead_fraction");
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.05).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1321,7 +1416,7 @@ mod tests {
         let baseline = Json::parse(&rep.to_json()).unwrap();
         let mut noisy = rep.clone();
         noisy.records[1].ns_per_iter *= 100.0;
-        let gate = check_against_baseline(&noisy, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&noisy, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty());
     }
 
@@ -1347,12 +1442,14 @@ mod tests {
                 ("cohort_over_solo_speedup".to_string(), 1.8),
                 ("adapt_overhead_fraction".to_string(), 0.05),
                 ("status_overhead_fraction".to_string(), 0.01),
+                ("snapshot_overhead_fraction".to_string(), 0.02),
             ],
         };
         let mut f32_gated = 0usize;
         let mut adapt_gated = 0usize;
         let mut lifecycle_gated = 0usize;
         let mut cohort_gated = 0usize;
+        let mut snapshot_gated = 0usize;
         for rec in baseline.get("records").and_then(Json::as_array).unwrap() {
             let gated = rec.get("gated").and_then(Json::as_bool).unwrap();
             let kernel = rec.get("kernel").and_then(Json::as_str).unwrap().to_string();
@@ -1382,6 +1479,9 @@ mod tests {
             if gated && kernel.starts_with("cohort_") {
                 cohort_gated += 1;
             }
+            if gated && kernel.starts_with("snapshot_") {
+                snapshot_gated += 1;
+            }
             current.records.push(BenchRecord {
                 name: rec.get("name").and_then(Json::as_str).unwrap().to_string(),
                 kernel,
@@ -1407,7 +1507,10 @@ mod tests {
         // …and the tenant-major cohort records (gradient, full step,
         // per-session solo reference).
         assert!(cohort_gated >= 3, "only {cohort_gated} gated cohort records");
-        let gate = check_against_baseline(&current, &baseline, 0.30, 1.5, 1.2, 1.2, 0.10, 0.05).unwrap();
+        // …and the background snapshotter's records (reference fused step
+        // + the step with in-band state serialization).
+        assert!(snapshot_gated >= 2, "only {snapshot_gated} gated snapshot records");
+        let gate = check_against_baseline(&current, &baseline, 0.30, 1.5, 1.2, 1.2, 0.10, 0.05, 0.05).unwrap();
         assert!(gate.checked > 0);
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
@@ -1417,10 +1520,10 @@ mod tests {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
         // tiny_report carries cohort_over_solo_speedup = 1.8.
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 2.5, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 2.5, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("cohort_over_solo_speedup"));
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 1.2, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 1.2, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 
@@ -1429,10 +1532,10 @@ mod tests {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
         // tiny_report carries f32_over_f64_step_speedup = 1.6.
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 2.5, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 2.5, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("f32_over_f64_step_speedup"));
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 1.2, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 1.2, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 }

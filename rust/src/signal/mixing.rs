@@ -18,6 +18,10 @@
 //!   measurements need (`experiments::drift_study`, `easi-ica track`).
 //! - [`DriftOnsetMixing`] — static until a known sample index, then
 //!   slow rotation: the controlled *gradual*-drift onset.
+//! - [`NanBurstMixing`] — healthy until a known sample index, then one
+//!   entry of `A(t)` goes NaN permanently: the fault-injection workload
+//!   for the coordinator's numeric-fault quarantine (a front-end or
+//!   sensor failure, not a drift to track).
 
 use super::rng::Pcg32;
 use crate::linalg::{jacobi_eig, Mat64};
@@ -245,6 +249,46 @@ impl MixingModel for DriftOnsetMixing {
     }
 }
 
+/// Numeric-fault injection: a healthy well-conditioned `A₀` until sample
+/// `at`, then entry `(0, 0)` of `A(t)` is NaN **permanently** — every
+/// subsequent observation `x = A(t)s` carries the NaN into all of the
+/// first mixture channel. This models a failed sensor / front-end, not a
+/// distribution drift: the right response is quarantine (after the
+/// divergence guard's retry budget), never tracking. The poisoned run is
+/// still deterministic, so fault drills replay exactly.
+pub struct NanBurstMixing {
+    before: Mat64,
+    /// First poisoned sample index.
+    pub at: u64,
+}
+
+impl NanBurstMixing {
+    pub fn new(before: Mat64, at: u64) -> Self {
+        assert!(before.rows() >= before.cols(), "ICA requires m >= n");
+        Self { before, at }
+    }
+
+    /// A well-conditioned healthy draw from `rng`, poisoned from `at` on.
+    pub fn random(rng: &mut Pcg32, m: usize, n: usize, max_cond: f64, at: u64) -> Self {
+        Self::new(well_conditioned_random(rng, m, n, max_cond), at)
+    }
+}
+
+impl MixingModel for NanBurstMixing {
+    fn m(&self) -> usize {
+        self.before.rows()
+    }
+    fn n(&self) -> usize {
+        self.before.cols()
+    }
+    fn matrix_at(&self, t: u64, out: &mut Mat64) {
+        out.copy_from(&self.before);
+        if t >= self.at {
+            out[(0, 0)] = f64::NAN;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,6 +390,27 @@ mod tests {
         assert_eq!(mx.at(0), mx.at(999));
         assert_eq!(mx.at(1000), mx.at(1_000_000));
         assert!(mx.at(999).max_abs_diff(&mx.at(1000)) > 0.05, "switch must move A");
+    }
+
+    #[test]
+    fn nan_burst_is_healthy_then_permanently_poisoned() {
+        let mut rng = Pcg32::seed(10);
+        let mx = NanBurstMixing::random(&mut rng, 4, 2, 10.0, 1000);
+        assert_eq!(mx.at(0), mx.at(999), "healthy and constant before onset");
+        assert!(mx.at(999).is_finite());
+        for &t in &[1000u64, 1001, 1_000_000] {
+            let a = mx.at(t);
+            assert!(a[(0, 0)].is_nan(), "entry (0,0) must be NaN at t={t}");
+            // Only the poisoned entry changes; the rest of A is intact.
+            let healthy = mx.at(0);
+            for r in 0..4 {
+                for c in 0..2 {
+                    if (r, c) != (0, 0) {
+                        assert_eq!(a[(r, c)], healthy[(r, c)]);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -14,8 +14,8 @@ pub mod sources;
 pub mod stream;
 
 pub use mixing::{
-    condition_number, well_conditioned_random, DriftOnsetMixing, MixingModel, RotatingMixing,
-    StaticMixing, SwitchOnceMixing, SwitchingMixing,
+    condition_number, well_conditioned_random, DriftOnsetMixing, MixingModel, NanBurstMixing,
+    RotatingMixing, StaticMixing, SwitchOnceMixing, SwitchingMixing,
 };
 pub use rng::Pcg32;
 pub use sources::{Source, SourceBank};

@@ -22,6 +22,8 @@
 
 use crate::linalg::{Mat, Mat64, Scalar};
 use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
 
 /// File magic: the first eight bytes of every snapshot file.
 pub const MAGIC: &[u8; 8] = b"EASISNAP";
@@ -129,6 +131,15 @@ impl SnapWriter {
         self.put_mat(m);
     }
 
+    /// Append an already-encoded payload verbatim. This is the seam that
+    /// lets the hub assemble a snapshot file from parts encoded on both
+    /// sides of a channel: a worker serializes `(consumed_upto, runner)`
+    /// into a payload at a chunk boundary, and the hub prepends the
+    /// session identity before writing the file form.
+    pub fn extend_from_payload(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
     /// Raw payload (frame form) — no header, no checksum; the transport
     /// carries its own length.
     pub fn into_payload(self) -> Vec<u8> {
@@ -145,6 +156,33 @@ impl SnapWriter {
         out.extend_from_slice(&self.buf);
         out
     }
+}
+
+/// Crash-safe file write: the bytes land in a `*.tmp` sibling first,
+/// are fsynced, and only then renamed over the destination. A crash at
+/// any point leaves either the old file intact or a stray `*.tmp` that
+/// restore paths skip — never a truncated `session-<id>.snap`
+/// masquerading as the only copy.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = match path.file_name().and_then(|n| n.to_str()) {
+        Some(name) => path.with_file_name(format!("{name}.tmp")),
+        None => bail!("snapshot path {} has no file name", path.display()),
+    };
+    let write = (|| -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        // Flush file contents to stable storage before the rename makes
+        // the snapshot visible; a rename of an unsynced file can expose
+        // a zero-length "snapshot" after power loss.
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+    })();
+    if let Err(e) = write {
+        // Best effort: don't leave the temp file behind on failure.
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("writing snapshot {} atomically", path.display()));
+    }
+    Ok(())
 }
 
 /// Cursor over a snapshot payload. Every read is length-checked and
@@ -432,6 +470,42 @@ mod tests {
         w.put_u32(u32::MAX);
         let bytes = w.into_payload();
         assert!(SnapReader::from_payload(&bytes).get_mat64().is_err());
+    }
+
+    #[test]
+    fn extend_from_payload_appends_verbatim() {
+        // Split encoding: the "worker half" of a payload appended to a
+        // "hub half" must read back exactly as if one writer produced it.
+        let mut tail = SnapWriter::new();
+        tail.put_u64(12345);
+        tail.put_str("tail");
+        let mut w = SnapWriter::new();
+        w.put_u32(7);
+        w.extend_from_payload(&tail.into_payload());
+        let bytes = w.into_payload();
+        let mut r = SnapReader::from_payload(&bytes);
+        assert_eq!(r.get_u32().unwrap(), 7);
+        assert_eq!(r.get_u64().unwrap(), 12345);
+        assert_eq!(r.get_str().unwrap(), "tail");
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn write_atomic_round_trips_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("easi-snap-atomic-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("session-0.snap");
+        let bytes = sample_payload().finish();
+        write_atomic(&path, &bytes).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), bytes);
+        assert!(!path.with_file_name("session-0.snap.tmp").exists(), "temp file left behind");
+        // Overwrite in place: the rename replaces the old copy whole.
+        let mut w = SnapWriter::new();
+        w.put_u8(1);
+        let second = w.finish();
+        write_atomic(&path, &second).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), second);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Minimal property-testing kit (stand-in for `proptest`, which is not
-//! available in this offline environment).
+//! available in this offline environment), plus the deterministic
+//! fault-injection planner behind the chaos drills.
 //!
 //! A property is a closure from a seeded [`Pcg32`] to `bool`; [`check`]
 //! runs it across many deterministic seeds and, on failure, reports the
@@ -8,6 +9,11 @@
 //! ```ignore
 //! check("A*A^-1=I", Config::default(), |rng| { ... });
 //! ```
+//!
+//! A [`FaultPlan`] expands one seed into a concrete schedule of faults
+//! (worker panics, NaN tenants, dropped connections, torn snapshots) so
+//! `tests/fault_injection.rs` and the load generator's chaos phase drill
+//! the exact same storm every run — a failure replays from the seed.
 
 use crate::signal::rng::Pcg32;
 
@@ -69,6 +75,173 @@ pub fn check_detailed(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Deterministic fault-injection planning (chaos drills).
+// ---------------------------------------------------------------------------
+
+/// How many of each fault kind a [`FaultPlan`] should schedule, and the
+/// fleet geometry the indices must stay within.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    /// Tenants in the drill fleet; NaN slots and torn-snapshot session
+    /// ids are drawn from `0..tenants`.
+    pub tenants: usize,
+    /// Worker shards; panic targets are drawn from `0..shards`.
+    pub shards: usize,
+    /// Worker panics to inject (supervisor must respawn each shard).
+    pub worker_panics: usize,
+    /// Tenants whose signal turns into a `nan_burst` mixing (quarantine
+    /// path). Capped at `tenants` — slots are distinct.
+    pub nan_tenants: usize,
+    /// Client connections to sever mid-conversation (retry path).
+    pub dropped_connections: usize,
+    /// Stray `*.snap.tmp` leftovers to fabricate in the state directory
+    /// (torn-write detection on `--restore-latest`).
+    pub torn_snapshots: usize,
+}
+
+impl FaultSpec {
+    /// The ISSUE-mandated drill: ≥2 worker panics, ≥2 NaN tenants,
+    /// ≥2 dropped connections, 1 torn snapshot.
+    pub fn drill(tenants: usize, shards: usize) -> Self {
+        Self {
+            tenants,
+            shards,
+            worker_panics: 2,
+            nan_tenants: 2,
+            dropped_connections: 2,
+            torn_snapshots: 1,
+        }
+    }
+}
+
+/// One scheduled fault. Delays are in milliseconds from the moment the
+/// drill's injection loop starts; the driver decides how literally to
+/// honor them (tests fire them as fast as the fleet makes progress).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Panic the worker thread of `shard` with `reason` (delivered via
+    /// the hub's crash control message / the net CRASH opcode).
+    WorkerPanic { shard: usize, after_ms: u64, reason: String },
+    /// Tenant in fleet slot `slot` streams `nan_burst` mixing: its lane
+    /// goes non-finite mid-run and must be quarantined.
+    NanTenant { slot: usize },
+    /// Sever a client connection after roughly `after_ms` of traffic;
+    /// the client must reconnect with jittered backoff.
+    DroppedConnection { after_ms: u64 },
+    /// Fabricate a torn background snapshot (`session-{session}.snap.tmp`)
+    /// that restore must skip and report, never load.
+    TornSnapshot { session: u64 },
+}
+
+/// A seeded, fully deterministic schedule of faults.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Seed the plan was expanded from (replay handle).
+    pub seed: u64,
+    /// Scheduled faults, in injection order (panics and drops carry
+    /// their own delays; NaN tenants are a property of the fleet config
+    /// and apply from sample 0).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Expand `seed` into a concrete schedule honoring `spec`. Same
+    /// seed + spec → identical plan, on every machine.
+    pub fn generate(seed: u64, spec: &FaultSpec) -> Self {
+        let mut rng = Pcg32::seed(seed);
+        let mut events = Vec::new();
+        // Distinct NaN slots via a partial Fisher-Yates over the fleet.
+        let mut slots: Vec<usize> = (0..spec.tenants).collect();
+        let picks = spec.nan_tenants.min(spec.tenants);
+        for i in 0..picks {
+            let j = i + rng.below((slots.len() - i) as u32) as usize;
+            slots.swap(i, j);
+        }
+        let mut nan_slots: Vec<usize> = slots[..picks].to_vec();
+        nan_slots.sort_unstable();
+        for slot in nan_slots {
+            events.push(FaultEvent::NanTenant { slot });
+        }
+        for k in 0..spec.worker_panics {
+            events.push(FaultEvent::WorkerPanic {
+                shard: rng.below(spec.shards.max(1) as u32) as usize,
+                after_ms: 50 + rng.below(250) as u64,
+                reason: format!("chaos drill: injected panic #{k} (seed {seed:#x})"),
+            });
+        }
+        for _ in 0..spec.dropped_connections {
+            events.push(FaultEvent::DroppedConnection { after_ms: 50 + rng.below(250) as u64 });
+        }
+        for _ in 0..spec.torn_snapshots {
+            events.push(FaultEvent::TornSnapshot {
+                session: rng.below(spec.tenants.max(1) as u32) as u64,
+            });
+        }
+        Self { seed, events }
+    }
+
+    /// Fleet slots whose tenants stream `nan_burst` (sorted, distinct).
+    pub fn nan_slots(&self) -> Vec<usize> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::NanTenant { slot } => Some(*slot),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// `(shard, after_ms, reason)` for every scheduled worker panic.
+    pub fn panics(&self) -> Vec<(usize, u64, &str)> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::WorkerPanic { shard, after_ms, reason } => {
+                    Some((*shard, *after_ms, reason.as_str()))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Delays for every scheduled connection drop.
+    pub fn drops(&self) -> Vec<u64> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::DroppedConnection { after_ms } => Some(*after_ms),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Session ids whose background snapshot is fabricated torn.
+    pub fn torn_sessions(&self) -> Vec<u64> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::TornSnapshot { session } => Some(*session),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// One-line human summary for drill logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "fault plan (seed {:#x}): {} worker panic(s), {} NaN tenant(s) {:?}, \
+             {} dropped connection(s), {} torn snapshot(s)",
+            self.seed,
+            self.panics().len(),
+            self.nan_slots().len(),
+            self.nan_slots(),
+            self.drops().len(),
+            self.torn_sessions().len(),
+        )
+    }
+}
+
 /// Assert two floats are within `tol` (absolute); used by tests across
 /// the crate for readable failure messages.
 #[track_caller]
@@ -116,5 +289,50 @@ mod tests {
         check_detailed("detailed", Config::quick(), |_| {
             Err("detailed reason".to_string())
         });
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_honors_spec() {
+        let spec = FaultSpec::drill(8, 3);
+        let a = FaultPlan::generate(0xC0FFEE, &spec);
+        let b = FaultPlan::generate(0xC0FFEE, &spec);
+        assert_eq!(a.events, b.events, "same seed must yield the same plan");
+
+        assert_eq!(a.panics().len(), 2);
+        assert_eq!(a.nan_slots().len(), 2);
+        assert_eq!(a.drops().len(), 2);
+        assert_eq!(a.torn_sessions().len(), 1);
+        for (shard, after_ms, reason) in a.panics() {
+            assert!(shard < 3, "panic shard {shard} out of range");
+            assert!((50..300).contains(&after_ms));
+            assert!(reason.contains("chaos drill"));
+        }
+        let slots = a.nan_slots();
+        assert!(slots.windows(2).all(|w| w[0] < w[1]), "NaN slots distinct+sorted");
+        assert!(slots.iter().all(|&s| s < 8), "NaN slot out of fleet");
+        assert!(a.torn_sessions().iter().all(|&s| s < 8));
+        assert!(a.summary().contains("2 worker panic(s)"));
+    }
+
+    #[test]
+    fn fault_plan_seeds_diverge() {
+        let spec = FaultSpec::drill(32, 4);
+        let a = FaultPlan::generate(1, &spec);
+        let b = FaultPlan::generate(2, &spec);
+        assert_ne!(a.events, b.events, "different seeds should disagree somewhere");
+    }
+
+    #[test]
+    fn fault_plan_caps_nan_slots_at_fleet_size() {
+        let spec = FaultSpec {
+            tenants: 2,
+            shards: 1,
+            worker_panics: 0,
+            nan_tenants: 5,
+            dropped_connections: 0,
+            torn_snapshots: 0,
+        };
+        let plan = FaultPlan::generate(7, &spec);
+        assert_eq!(plan.nan_slots(), vec![0, 1], "every slot once, never more");
     }
 }

@@ -1,0 +1,331 @@
+//! Chaos drill: deterministic fault injection against the fault-domain
+//! supervision stack.
+//!
+//! A seeded [`FaultPlan`] (testkit) expands into the ISSUE-mandated
+//! storm — ≥2 worker panics, ≥2 NaN tenants, ≥2 dropped connections,
+//! 1 torn snapshot — and the drill pins the recovery invariants:
+//!
+//! - **Unaffected tenants are bit-identical** to a fault-free run of the
+//!   same configs (separation matrix, sample count, Amari trajectory).
+//! - **Every affected tenant is accounted for**: panicked shards respawn
+//!   and their tenants replay to completion; NaN tenants land in the
+//!   terminal `Quarantined` phase with a park-to-disk snapshot for
+//!   operator inspection; nothing is silently lost.
+//! - **Torn snapshots never load**: a fabricated `*.snap.tmp` leftover
+//!   is reported and skipped by `restore_latest`, not parsed.
+//! - **The accept loop survives dropped connections**: clients that
+//!   vanish mid-conversation (no SHUTDOWN, no clean close) leave the
+//!   service answering.
+
+use easi_ica::config::ExperimentConfig;
+use easi_ica::coordinator::{
+    serve_hub, ElasticHub, HubOptions, NetClient, SessionHandle, SessionPhase,
+};
+use easi_ica::ica::Nonlinearity;
+use easi_ica::testkit::{FaultPlan, FaultSpec};
+use std::collections::BTreeSet;
+use std::fs;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// One drill seed for the whole file: the schedule below is identical on
+/// every machine and every run, so a failure replays exactly.
+const DRILL_SEED: u64 = 0xFA17_1CA0;
+
+fn cfg(seed: u64, samples: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.samples = samples;
+    cfg.seed = seed;
+    cfg.optimizer.mu = 0.004;
+    cfg.name = format!("chaos-{seed}");
+    cfg
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("easi-chaos-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).expect("create temp dir");
+    dir
+}
+
+fn wait_for_progress(h: &SessionHandle) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while h.checkpoint().samples == 0 {
+        assert!(Instant::now() < deadline, "session {} ({}) made no progress", h.id(), h.name());
+        thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn chaos_drill_worker_panics_nan_tenants_and_torn_snapshots() {
+    let spec = FaultSpec::drill(6, 2);
+    let plan = FaultPlan::generate(DRILL_SEED, &spec);
+    println!("{}", plan.summary());
+    assert!(plan.panics().len() >= 2 && plan.nan_slots().len() >= 2);
+    assert_eq!(plan.torn_sessions().len(), 1);
+
+    // Fleet: 6 tenants, the plan's slots streaming nan_burst from the
+    // first chunk. 60k samples is a multiple of the 64-sample chunk, so
+    // healthy tenants drain to the exact total.
+    let nan_slots: BTreeSet<usize> = plan.nan_slots().into_iter().collect();
+    let mut cfgs = Vec::new();
+    for slot in 0..spec.tenants {
+        let mut c = cfg(100 + slot as u64, 60_000);
+        if nan_slots.contains(&slot) {
+            c.signal.mixing = "nan_burst".into();
+            c.signal.switch_at = 0;
+        }
+        cfgs.push(c);
+    }
+
+    // Reference trajectories: each unaffected tenant run alone on a
+    // fault-free hub. Lanes are mathematically independent, so solo and
+    // fleet runs must agree bit-for-bit.
+    let mut want = Vec::new();
+    for (slot, c) in cfgs.iter().enumerate() {
+        if nan_slots.contains(&slot) {
+            continue;
+        }
+        let mut solo = ElasticHub::start(
+            Nonlinearity::Cube,
+            HubOptions { shards: 1, ..Default::default() },
+        )
+        .expect("solo hub");
+        solo.attach(c.clone()).expect("solo attach");
+        let sum = solo.finish().expect("solo finish");
+        want.push((slot, sum.sessions.into_iter().next().expect("solo session")));
+    }
+
+    // The drill fleet: two shards, a state directory for quarantine
+    // parks, and the full storm.
+    let dir = temp_dir("drill");
+    let mut hub = ElasticHub::start(
+        Nonlinearity::Cube,
+        HubOptions { shards: 2, state_dir: Some(dir.clone()), ..Default::default() },
+    )
+    .expect("drill hub");
+    let directory = hub.directory();
+    let handles: Vec<_> = cfgs.iter().map(|c| hub.attach(c.clone()).expect("attach")).collect();
+    for (slot, h) in handles.iter().enumerate() {
+        if !nan_slots.contains(&slot) {
+            wait_for_progress(h);
+        }
+    }
+
+    // Worker panics, sequentially: wait for the supervisor to handle
+    // fault k before injecting fault k+1 so the target slot is live.
+    for (k, (shard, _after_ms, reason)) in plan.panics().into_iter().enumerate() {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            hub.supervise_tick();
+            let snap = directory.supervisor_log().snapshot();
+            if snap.restarts as usize >= k {
+                break;
+            }
+            assert!(Instant::now() < deadline, "supervisor never handled fault {k}");
+            thread::sleep(Duration::from_millis(2));
+        }
+        hub.inject_worker_panic(shard, reason).expect("inject panic");
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while (directory.supervisor_log().snapshot().restarts as usize) < plan.panics().len() {
+        hub.supervise_tick();
+        assert!(Instant::now() < deadline, "supervisor never recovered the last fault");
+        thread::sleep(Duration::from_millis(2));
+    }
+
+    // The torn snapshot: a crash mid-write leaves `*.snap.tmp` behind.
+    for session in plan.torn_sessions() {
+        fs::write(dir.join(format!("session-{session}.snap.tmp")), b"half a snapshot")
+            .expect("fabricate torn snapshot");
+    }
+
+    let sum = hub.finish().expect("drill finish");
+
+    // Accounting: every attached tenant shows up in the summary — the
+    // healthy ones drained to the exact total, the NaN ones parked in
+    // Quarantined with an inspection snapshot. Lost tenants: zero.
+    let got_ids: BTreeSet<u64> = sum.sessions.iter().map(|s| s.id).collect();
+    let want_ids: BTreeSet<u64> = handles.iter().map(|h| h.id()).collect();
+    assert_eq!(got_ids, want_ids, "every tenant is accounted for");
+    let quarantined: BTreeSet<u64> = directory.quarantined().into_iter().collect();
+    let nan_ids: BTreeSet<u64> =
+        nan_slots.iter().map(|&slot| handles[slot].id()).collect();
+    assert_eq!(quarantined, nan_ids, "exactly the NaN tenants are quarantined");
+    for &id in &nan_ids {
+        let park = dir.join(format!("session-{id}.quarantine.snap"));
+        assert!(park.is_file(), "quarantine park missing for tenant {id}");
+    }
+    let sup = directory.supervisor_log().snapshot();
+    assert_eq!(sup.restarts as usize, plan.panics().len(), "every panic handled once");
+    assert_eq!(sup.quarantines as usize, nan_ids.len());
+    assert_eq!(
+        sup.per_shard.iter().sum::<u64>() as usize,
+        plan.panics().len(),
+        "per-shard restart counts add up"
+    );
+    assert!(sup.last_fault.is_some(), "last fault reason is recorded");
+
+    // Bit-identity: unaffected tenants match the fault-free reference
+    // exactly, despite two worker respawns and two mid-pump extractions.
+    for (slot, w) in &want {
+        let id = handles[*slot].id();
+        let g = sum.sessions.iter().find(|s| s.id == id).expect("session in summary");
+        let ctx = format!("tenant {id} (slot {slot})");
+        assert_eq!(g.summary.samples, w.summary.samples, "{ctx}: samples");
+        assert_eq!(g.summary.b, w.summary.b, "{ctx}: separation matrix");
+        assert_eq!(g.summary.amari_history, w.summary.amari_history, "{ctx}: trajectory");
+        assert_eq!(g.summary.converged_at, w.summary.converged_at, "{ctx}: converged_at");
+    }
+
+    // Restore pass over the scarred state directory: the torn tmp and
+    // the quarantine parks are reported and skipped, never loaded.
+    let mut after = ElasticHub::start(
+        Nonlinearity::Cube,
+        HubOptions { shards: 1, state_dir: Some(dir.clone()), ..Default::default() },
+    )
+    .expect("post-drill hub");
+    let (restored, skipped) = after.restore_latest(None).expect("restore_latest");
+    assert!(restored.is_empty(), "nothing restorable was left behind");
+    assert_eq!(
+        skipped.len(),
+        plan.torn_sessions().len() + nan_ids.len(),
+        "skipped: {skipped:?}"
+    );
+    assert!(
+        skipped.iter().any(|s| s.contains("torn write")),
+        "torn snapshot is called out: {skipped:?}"
+    );
+    assert!(
+        skipped.iter().any(|s| s.contains("operator inspection")),
+        "quarantine parks are called out: {skipped:?}"
+    );
+    assert!(after.finish().expect("empty finish").sessions.is_empty());
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dropped_connections_never_kill_the_accept_loop() {
+    let spec = FaultSpec::drill(2, 1);
+    let plan = FaultPlan::generate(DRILL_SEED, &spec);
+    assert!(plan.drops().len() >= 2);
+
+    let hub = ElasticHub::start(
+        Nonlinearity::Cube,
+        HubOptions { shards: 1, ..Default::default() },
+    )
+    .expect("hub");
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let server = thread::spawn(move || serve_hub(hub, listener));
+
+    let mut c = NetClient::connect(&addr).expect("connect");
+    let mut cfg_a = cfg(61, 30_000);
+    cfg_a.name = "survivor-a".into();
+    let mut cfg_b = cfg(62, 30_000);
+    cfg_b.name = "survivor-b".into();
+    let a = c.attach(&cfg_a).expect("attach a");
+    let b = c.attach(&cfg_b).expect("attach b");
+
+    // Sever clients mid-conversation, per the plan: each issues a
+    // request (so its handler is mid-loop) and then vanishes without a
+    // clean close. A raw half-frame connection dies too — the handler
+    // times the stalled peer out instead of wedging a thread forever.
+    for _ in plan.drops() {
+        let mut doomed = NetClient::connect(&addr).expect("doomed connect");
+        let _ = doomed.status_table().expect("doomed status");
+        drop(doomed); // no SHUTDOWN, no goodbye
+    }
+    {
+        use std::io::Write;
+        let mut raw = std::net::TcpStream::connect(&addr).expect("raw connect");
+        raw.write_all(&[0, 0]).expect("half a frame header");
+        drop(raw);
+    }
+
+    // The service still answers on the original connection and the
+    // tenants drain to their exact totals.
+    let table = c.status_table().expect("status after drops");
+    assert!(table.contains("session") && table.lines().count() >= 3, "{table}");
+    for id in [a, b] {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        while c.checkpoint(id).expect("checkpoint").samples == 0 {
+            assert!(Instant::now() < deadline, "tenant {id} made no progress");
+            thread::sleep(Duration::from_millis(2));
+        }
+    }
+    c.shutdown().expect("shutdown");
+    let sum = server.join().expect("join").expect("summary");
+    assert_eq!(sum.sessions.len(), 2);
+    for s in &sum.sessions {
+        assert_eq!(s.summary.samples + s.summary.tail_dropped, 30_000, "{}", s.name);
+    }
+}
+
+#[test]
+fn background_snapshot_cadence_survives_a_simulated_sigkill() {
+    // The cadence-driven snapshotter (snapshot_tick) writes crash-
+    // consistent snapshots without parking anyone; dropping the hub
+    // without finish() is the in-process stand-in for SIGKILL, and a
+    // fresh hub's restore_latest resumes the fleet bit-identically.
+    let mut c = cfg(71, 200_000);
+    c.adapt.enabled = true;
+
+    let mut reference = ElasticHub::start(
+        Nonlinearity::Cube,
+        HubOptions { shards: 1, ..Default::default() },
+    )
+    .expect("ref hub");
+    reference.attach(c.clone()).expect("ref attach");
+    let want = reference.finish().expect("ref finish");
+
+    let dir = temp_dir("sigkill");
+    let mut hub = ElasticHub::start(
+        Nonlinearity::Cube,
+        HubOptions {
+            shards: 1,
+            state_dir: Some(dir.clone()),
+            snapshot_every_ms: 1,
+            ..Default::default()
+        },
+    )
+    .expect("hub");
+    let h = hub.attach(c.clone()).expect("attach");
+    wait_for_progress(&h);
+    // Drive the cadence by hand (the serve loop does this from its
+    // accept loop) until a snapshot lands on disk.
+    let snap = dir.join(format!("session-{}.snap", h.id()));
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !snap.is_file() {
+        hub.snapshot_tick();
+        assert!(Instant::now() < deadline, "no background snapshot appeared");
+        thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(
+        hub.directory().status(h.id()).expect("status").phase,
+        SessionPhase::Streaming,
+        "background snapshots never park the tenant"
+    );
+    drop(hub); // SIGKILL stand-in: no finish, no drain
+
+    let mut revived = ElasticHub::start(
+        Nonlinearity::Cube,
+        HubOptions { shards: 1, state_dir: Some(dir.clone()), ..Default::default() },
+    )
+    .expect("revived hub");
+    let (restored, skipped) = revived.restore_latest(None).expect("restore_latest");
+    assert_eq!(restored.len(), 1, "skipped: {skipped:?}");
+    assert_eq!(restored[0].id(), h.id());
+    let got = revived.finish().expect("revived finish");
+    assert_eq!(got.sessions.len(), 1);
+    let (g, w) = (&got.sessions[0].summary, &want.sessions[0].summary);
+    assert_eq!(g.samples, w.samples);
+    assert_eq!(g.b, w.b, "resumed run diverged from the uninterrupted one");
+    assert_eq!(g.amari_history, w.amari_history);
+    assert_eq!(g.converged_at, w.converged_at);
+
+    let _ = fs::remove_dir_all(&dir);
+}
