@@ -121,7 +121,7 @@ pub fn usage() -> &'static str {
      COMMANDS\n\
        run            stream an experiment through the coordinator\n\
                       --config FILE | [--m N --n N --optimizer sgd|smbgd|mbgd\n\
-                      --engine native|pjrt --precision f32|f64 --samples N\n\
+                      --engine native|pjrt --precision f32|f64|q16|q32 --samples N\n\
                       --mu F --gamma F --beta F --p N --adapt on|off\n\
                       --mixing static|rotating|switching|switch_once|drift_onset\n\
                       --switch-at N --seed N]\n\
@@ -152,7 +152,11 @@ pub fn usage() -> &'static str {
                        --restart-budget N (supervisor respawns granted to\n\
                        each shard slot before it is declared failed)]\n\
                       [--config FILE | --sessions N --shards N --samples N\n\
-                       --mixing a,b,c --precision f32,f64 --adapt on,off\n\
+                       --mixing a,b,c --precision f32,f64,q16,q32 --adapt\n\
+                       on,off (both cycled per session; q16/q32 tenants\n\
+                       run the fixed-point Q-format datapath with\n\
+                       saturation-latch divergence guards — see the\n\
+                       status table's sat column)\n\
                        (cycled per session) --capacity N --seed N\n\
                        --seed-stride N --switch-at N\n\
                        --placement least_loaded|modulo\n\
@@ -184,6 +188,12 @@ pub fn usage() -> &'static str {
                        --mu F --tau F --threshold F]\n\
        dump-datapath  E4 (Figs. 1-2): print the datapath block structure\n\
                       [--m N --n N --arch sgd|smbgd]\n\
+       fpga-report    machine-readable resource/timing/accuracy artifact\n\
+                      (schema easi-ica-fpga-report/v1): Table-I model\n\
+                      numbers for float32/fixed16/fixed32, Q-format\n\
+                      calibration from an observed dynamic range, and\n\
+                      q16/q32 Amari accuracy vs the f64 reference\n\
+                      [--m N --n N --g cube|tanh|signed_square --out PATH]\n\
        separate       run FastICA on a synthetic dataset and report metrics\n\
                       [--m N --n N --samples N --seed N]\n\
        bench          §Perf hot-path suite (f64 + f32 + adapt + cohort\n\
@@ -191,7 +201,8 @@ pub fn usage() -> &'static str {
                       [--quick --out PATH --check BASELINE.json\n\
                        --tolerance F --min-fused-speedup F --min-f32-speedup F\n\
                        --min-cohort-speedup F --max-adapt-overhead F\n\
-                       --max-status-overhead F --max-snapshot-overhead F]\n\
+                       --max-status-overhead F --max-snapshot-overhead F\n\
+                       --max-qfx-overhead F]\n\
                       with --check, exits nonzero if any gated kernel's\n\
                       machine-normalized cost regressed past the tolerance\n\
        help           this text\n"

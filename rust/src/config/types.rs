@@ -66,13 +66,23 @@ impl EngineKind {
 /// `f32` is the paper's 32-bit hardware datapath run in software — the
 /// whole update pipeline (gradient, accumulator, B) stays in single
 /// precision, pinned to the f64 reference by tolerance/Amari-parity tests
-/// rather than bitwise. A hub can mix precisions across tenants.
+/// rather than bitwise. `q16`/`q32` are the predecessor hardware's
+/// fixed-point Q-formats (`qfx::Fixed`): deterministic round-to-nearest-
+/// even with saturating rails, parity-locked to the FPGA datapath model
+/// and guarded by the saturation latch instead of non-finite checks. A
+/// hub can mix precisions across tenants.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Precision {
     /// Single precision — the paper's FPGA datapath width.
     F32,
     /// Double precision — the bit-exact software reference (default).
     F64,
+    /// 16-bit fixed point (Q2.14) — the prior-work datapath width the
+    /// paper argues against; served via `qfx::Q16`.
+    Q16,
+    /// 32-bit fixed point (Q4.28) — the wide fixed-point ablation point;
+    /// served via `qfx::Q32`.
+    Q32,
 }
 
 impl Precision {
@@ -80,7 +90,9 @@ impl Precision {
         Ok(match s {
             "f32" => Self::F32,
             "f64" => Self::F64,
-            other => bail!("unknown precision '{other}' (expected f32|f64)"),
+            "q16" => Self::Q16,
+            "q32" => Self::Q32,
+            other => bail!("unknown precision '{other}' (expected f32|f64|q16|q32)"),
         })
     }
 
@@ -88,6 +100,8 @@ impl Precision {
         match self {
             Self::F32 => "f32",
             Self::F64 => "f64",
+            Self::Q16 => "q16",
+            Self::Q32 => "q32",
         }
     }
 }
@@ -413,9 +427,10 @@ impl ExperimentConfig {
             other => bail!("unknown signal.mixing '{other}'"),
         }
         self.adapt.validate()?;
-        if self.engine == EngineKind::Pjrt && self.precision == Precision::F32 {
+        if self.engine == EngineKind::Pjrt && self.precision != Precision::F64 {
             bail!(
-                "precision = \"f32\" requires the native engine (PJRT artifacts fix their dtype)"
+                "precision = \"{}\" requires the native engine (PJRT artifacts fix their dtype)",
+                self.precision.name()
             );
         }
         Ok(())
@@ -655,8 +670,13 @@ impl HubScenario {
         // Same early rejection `ExperimentConfig::validate` gives the
         // non-cycled form, so serve-many fails at config time rather than
         // inside session-0 engine construction.
-        if self.base.engine == EngineKind::Pjrt && self.precision.contains(&Precision::F32) {
-            bail!("hub.precision includes \"f32\" but the engine is pjrt (f32 needs native)");
+        if self.base.engine == EngineKind::Pjrt
+            && self.precision.iter().any(|p| *p != Precision::F64)
+        {
+            bail!(
+                "hub.precision includes a non-f64 entry but the engine is pjrt \
+                 (f32/q16/q32 need native)"
+            );
         }
         if let Some(listen) = &self.listen {
             if listen.is_empty() || !listen.contains(':') {
@@ -1050,16 +1070,19 @@ mod tests {
 
     #[test]
     fn precision_parse_round_trip() {
-        for p in [Precision::F32, Precision::F64] {
+        for p in [Precision::F32, Precision::F64, Precision::Q16, Precision::Q32] {
             assert_eq!(Precision::parse(p.name()).unwrap(), p);
         }
         assert!(Precision::parse("f16").is_err());
+        assert!(Precision::parse("q8").is_err());
     }
 
     #[test]
     fn precision_config_key() {
         let cfg = ExperimentConfig::from_toml("precision = \"f32\"").unwrap();
         assert_eq!(cfg.precision, Precision::F32);
+        let cfg = ExperimentConfig::from_toml("precision = \"q16\"").unwrap();
+        assert_eq!(cfg.precision, Precision::Q16);
         assert_eq!(ExperimentConfig::default().precision, Precision::F64);
         assert!(ExperimentConfig::from_toml("precision = \"f16\"").is_err());
     }
@@ -1069,6 +1092,11 @@ mod tests {
         let doc = "engine = \"pjrt\"\nprecision = \"f32\"";
         assert!(ExperimentConfig::from_toml(doc).is_err());
         let doc = "engine = \"native\"\nprecision = \"f32\"";
+        assert!(ExperimentConfig::from_toml(doc).is_ok());
+        // Fixed point is a native-only datapath too.
+        let doc = "engine = \"pjrt\"\nprecision = \"q16\"";
+        assert!(ExperimentConfig::from_toml(doc).is_err());
+        let doc = "engine = \"native\"\nprecision = \"q32\"";
         assert!(ExperimentConfig::from_toml(doc).is_ok());
     }
 
@@ -1201,6 +1229,15 @@ mod tests {
         assert_eq!(sc.session_config(0).precision, Precision::F32);
         assert_eq!(sc.session_config(1).precision, Precision::F64);
         assert_eq!(sc.session_config(4).precision, Precision::F32);
+        // Fixed-point tenants cycle beside floats in one hub.
+        let sc =
+            HubScenario::from_toml("[hub]\nprecision = [\"q16\", \"f32\", \"f64\"]").unwrap();
+        assert_eq!(sc.session_config(0).precision, Precision::Q16);
+        assert_eq!(sc.session_config(3).precision, Precision::Q16);
+        assert_eq!(sc.session_config(5).precision, Precision::F64);
+        // Cycled q16 with a pjrt base engine is rejected like f32.
+        let doc = "engine = \"pjrt\"\n[hub]\nprecision = [\"q16\"]";
+        assert!(HubScenario::from_toml(doc).is_err());
         // Single string form and inheritance.
         let sc = HubScenario::from_toml("[hub]\nprecision = \"f32\"").unwrap();
         assert_eq!(sc.session_config(3).precision, Precision::F32);

@@ -116,6 +116,12 @@ impl<K: Ord + Copy> Pool<K> {
         let state = match key.precision {
             Precision::F64 => PoolState::F64(CohortState::new(key.n, key.m)),
             Precision::F32 => PoolState::F32(CohortState::new(key.n, key.m)),
+            // Engines never offer a fixed-point cohort lane
+            // (`CastNativeEngine::cohort_lane` returns `None` for q16/q32
+            // so the saturation latch stays attributed per session).
+            Precision::Q16 | Precision::Q32 => {
+                unreachable!("fixed-point precisions do not offer cohort lanes")
+            }
         };
         Self {
             key,

@@ -53,6 +53,16 @@ pub trait Engine: Send {
     /// actuator; takes effect from the next submitted chunk).
     fn set_mu(&mut self, mu: f64);
 
+    /// Cumulative count of fixed-point saturation-latch events this
+    /// engine's kernels have recorded (rail clamps and non-finite
+    /// quantizations in `qfx` arithmetic). Always zero for floating-point
+    /// engines; the serving plane uses the per-chunk delta as the
+    /// fixed-point divergence guard (a Q-format value is never NaN, so
+    /// the non-finite check can't fire for these tenants).
+    fn saturation_events(&self) -> u64 {
+        0
+    }
+
     /// Cohort-execution probe: `Some` iff one `submit_chunk` on this
     /// engine is *exactly* the plain fused EASI-SGD per-sample loop at
     /// the reported precision, so a [`crate::linalg::CohortState`] lane
@@ -188,13 +198,17 @@ pub struct CastNativeEngine<T: Scalar> {
     /// Reusable narrowed-chunk buffer (chunk_size × m on the steady path;
     /// reshaped only if a caller submits an odd-sized chunk).
     xs_t: Mat<T>,
+    /// Cumulative `qfx` saturation-latch events attributed to this
+    /// engine's submits (always 0 for float `T`). Transient telemetry —
+    /// deliberately not part of the detach-to-disk state.
+    sat_events: u64,
 }
 
 impl<T: Scalar> CastNativeEngine<T> {
     pub fn new(opt: Box<dyn Optimizer<T>>, chunk: usize) -> Self {
         assert!(chunk >= 1);
         let (_, m) = opt.b().shape();
-        Self { xs_t: Mat::zeros(chunk, m), opt, chunk }
+        Self { xs_t: Mat::zeros(chunk, m), opt, chunk, sat_events: 0 }
     }
 
     /// Build from an experiment config with the standard warm start
@@ -221,8 +235,16 @@ impl<T: Scalar> Engine for CastNativeEngine<T> {
             // Odd-sized chunk (never on the Chunker's steady path).
             self.xs_t = Mat::zeros(xs.rows(), xs.cols());
         }
+        // Snapshot the thread-local saturation latch around the narrowing
+        // cast and the step so rail clamps (including NaN inputs
+        // quantizing to zero) attribute to this engine. Chunks step
+        // serially per shard thread, so nothing else writes the latch
+        // between the clear and the read; for float `T` no event is ever
+        // recorded and this is two thread-local accesses per chunk.
+        let _ = crate::qfx::take_saturation_events();
         xs.cast_into(&mut self.xs_t);
         self.opt.step_batch(&self.xs_t);
+        self.sat_events += crate::qfx::take_saturation_events();
         Ok(())
     }
 
@@ -249,10 +271,18 @@ impl<T: Scalar> Engine for CastNativeEngine<T> {
         self.opt.set_mu(mu);
     }
 
+    fn saturation_events(&self) -> u64 {
+        self.sat_events
+    }
+
     fn cohort_lane(&self) -> Option<CohortLane> {
+        // Fixed-point tenants stay on the per-session path: the cohort
+        // pool keys SoA blocks by float precision, and batching Q-format
+        // lanes would decouple the saturation latch from its engine.
         let precision = match T::type_name() {
             "f32" => Precision::F32,
-            _ => Precision::F64,
+            "f64" => Precision::F64,
+            _ => return None,
         };
         self.opt.cohort_plain().map(|(mu, g)| CohortLane { mu, g, precision })
     }
@@ -423,9 +453,15 @@ pub fn make_engine(cfg: &ExperimentConfig, g: Nonlinearity) -> Result<Box<dyn En
         (EngineKind::Native, Precision::F32) => {
             Box::new(CastNativeEngine::<f32>::from_config(cfg, g))
         }
+        (EngineKind::Native, Precision::Q16) => {
+            Box::new(CastNativeEngine::<crate::qfx::Q16>::from_config(cfg, g))
+        }
+        (EngineKind::Native, Precision::Q32) => {
+            Box::new(CastNativeEngine::<crate::qfx::Q32>::from_config(cfg, g))
+        }
         (EngineKind::Pjrt, Precision::F64) => Box::new(PjrtEngine::from_config(cfg)?),
-        (EngineKind::Pjrt, Precision::F32) => {
-            bail!("precision = \"f32\" requires the native engine")
+        (EngineKind::Pjrt, p) => {
+            bail!("precision = \"{}\" requires the native engine", p.name())
         }
     })
 }
@@ -486,8 +522,82 @@ mod tests {
         cfg.precision = Precision::F32;
         let e32 = make_engine(&cfg, Nonlinearity::Cube).unwrap();
         assert!(e32.describe().starts_with("native-f32/"));
+        cfg.precision = Precision::Q16;
+        let eq16 = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        assert!(eq16.describe().starts_with("native-q16/"), "{}", eq16.describe());
+        cfg.precision = Precision::Q32;
+        let eq32 = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        assert!(eq32.describe().starts_with("native-q32/"), "{}", eq32.describe());
         cfg.engine = EngineKind::Pjrt;
+        cfg.precision = Precision::F32;
         assert!(make_engine(&cfg, Nonlinearity::Cube).is_err(), "pjrt+f32 must be rejected");
+        cfg.precision = Precision::Q16;
+        assert!(make_engine(&cfg, Nonlinearity::Cube).is_err(), "pjrt+q16 must be rejected");
+    }
+
+    #[test]
+    fn q16_engine_steps_on_lattice_and_latches_saturation() {
+        use crate::qfx::Q16;
+        let mut cfg = ExperimentConfig::default();
+        cfg.precision = Precision::Q16;
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        let mut eng = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        // Bounded inputs in [-1, 1]: comfortably inside the Q2.14 rails
+        // (unbounded Gaussian tails would clip past ±2 by design).
+        let xs = Mat64::from_fn(eng.chunk_size(), cfg.m, |r, c| {
+            ((r * 7 + c * 13) % 21) as f64 / 10.0 - 1.0
+        });
+        let b0 = eng.b();
+        eng.submit_chunk(&xs).unwrap();
+        assert!(eng.b().max_abs_diff(&b0) > 0.0, "q16 step must move B");
+        // Every reported B entry sits exactly on the Q2.14 lattice.
+        for &v in eng.b().as_slice() {
+            assert_eq!(v, Q16::from_f64(v).to_f64(), "off-lattice value {v}");
+        }
+        // In-range inputs through the cube step: no saturation events on
+        // the healthy path.
+        assert_eq!(eng.saturation_events(), 0);
+        // A NaN burst quantizes to zero with latched events — the
+        // fixed-point analogue of the non-finite divergence signal.
+        let bad = Mat64::from_fn(eng.chunk_size(), cfg.m, |r, c| {
+            if (r + c) % 3 == 0 {
+                f64::NAN
+            } else {
+                0.1
+            }
+        });
+        eng.submit_chunk(&bad).unwrap();
+        assert!(eng.saturation_events() > 0, "NaN inputs must latch saturation events");
+        // Fixed-point values are always finite — the float guard is inert.
+        assert!(eng.b().is_finite());
+    }
+
+    #[test]
+    fn q16_engine_state_round_trips_bit_identically() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.precision = Precision::Q16;
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        let mut eng = make_engine(&cfg, Nonlinearity::Tanh).unwrap();
+        let mut rng = Pcg32::seed(11);
+        let xs = Mat64::from_fn(eng.chunk_size(), cfg.m, |_, _| rng.normal());
+        for _ in 0..4 {
+            eng.submit_chunk(&xs).unwrap();
+        }
+        // Detach: every Q-format value is a dyadic rational exact in the
+        // f64 snapshot wire, so restore must be bit-identical.
+        let mut w = crate::snapshot::SnapWriter::new();
+        eng.save_state(&mut w).unwrap();
+        let payload = w.into_payload();
+        let mut fresh = make_engine(&cfg, Nonlinearity::Tanh).unwrap();
+        let mut r = crate::snapshot::SnapReader::from_payload(&payload);
+        fresh.load_state(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(fresh.b(), eng.b());
+        assert_eq!(fresh.samples_done(), eng.samples_done());
+        // And both continue identically.
+        eng.submit_chunk(&xs).unwrap();
+        fresh.submit_chunk(&xs).unwrap();
+        assert_eq!(fresh.b(), eng.b());
     }
 
     #[test]
@@ -529,6 +639,11 @@ mod tests {
         cfg.precision = Precision::F32;
         let e32 = make_engine(&cfg, Nonlinearity::Cube).unwrap();
         assert_eq!(e32.cohort_lane().unwrap().precision, Precision::F32);
+
+        // Fixed-point tenants never join a cohort pool: per-session path.
+        cfg.precision = Precision::Q16;
+        let eq16 = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        assert!(eq16.cohort_lane().is_none(), "q16 stays per-session");
 
         cfg.precision = Precision::F64;
         cfg.optimizer.kind = OptimizerKind::Smbgd;

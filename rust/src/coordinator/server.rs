@@ -164,6 +164,15 @@ pub struct ServerOptions {
     /// warm-start retry) before it latches a fault and is quarantined by
     /// its hosting worker. A clean chunk refills the budget.
     pub max_fault_retries: u64,
+    /// Fixed-point divergence guard: saturation-latch events a q16/q32
+    /// tenant may record in a single chunk before the divergence-recovery
+    /// protocol trips (Q-format values are never NaN, so the non-finite
+    /// check cannot fire for them — rail clamps are their blow-up
+    /// signal). Healthy unit-power streams record none; a poisoned or
+    /// railing stream records hundreds per chunk. `u64::MAX` disables the
+    /// guard. Float tenants never record events, so this is inert for
+    /// them.
+    pub saturation_bound: u64,
 }
 
 impl Default for ServerOptions {
@@ -175,6 +184,7 @@ impl Default for ServerOptions {
             agc_time_constant: 2048,
             divergence_bound: 1e4,
             max_fault_retries: 3,
+            saturation_bound: 128,
         }
     }
 }
@@ -358,6 +368,12 @@ pub struct SessionRunner {
     fault_strikes: u64,
     /// Strike budget before a fault latches (from [`ServerOptions`]).
     max_fault_retries: u64,
+    /// Per-chunk saturation-event budget (from [`ServerOptions`]).
+    saturation_bound: u64,
+    /// Engine saturation count at the previous chunk boundary, for the
+    /// per-chunk delta. Transient telemetry — not serialized; a restored
+    /// session's latch starts fresh.
+    last_sat: u64,
     /// Latched numeric-fault reason. Once set, the hosting worker pulls
     /// this tenant off its shard (quarantine) instead of streaming
     /// garbage. Transient — not serialized.
@@ -392,6 +408,8 @@ impl SessionRunner {
             started: None,
             fault_strikes: 0,
             max_fault_retries: options.max_fault_retries,
+            saturation_bound: options.saturation_bound,
+            last_sat: 0,
             fault: None,
             engine,
         }
@@ -466,6 +484,8 @@ impl SessionRunner {
             observed_depth,
             fault_strikes,
             max_fault_retries,
+            saturation_bound,
+            last_sat,
             fault,
             ..
         } = self;
@@ -487,6 +507,8 @@ impl SessionRunner {
                     *observed_depth,
                     fault_strikes,
                     *max_fault_retries,
+                    *saturation_bound,
+                    last_sat,
                     fault,
                 );
                 Ok(())
@@ -540,6 +562,8 @@ impl SessionRunner {
             observed_depth,
             fault_strikes,
             max_fault_retries,
+            saturation_bound,
+            last_sat,
             fault,
             ..
         } = self;
@@ -558,6 +582,8 @@ impl SessionRunner {
             *observed_depth,
             fault_strikes,
             *max_fault_retries,
+            *saturation_bound,
+            last_sat,
             fault,
         );
     }
@@ -582,6 +608,8 @@ impl SessionRunner {
             observed_depth,
             fault_strikes,
             max_fault_retries,
+            saturation_bound,
+            last_sat,
             fault,
             ..
         } = self;
@@ -601,6 +629,8 @@ impl SessionRunner {
             *observed_depth,
             fault_strikes,
             *max_fault_retries,
+            *saturation_bound,
+            last_sat,
             fault,
         );
         Ok(())
@@ -747,6 +777,7 @@ impl SessionRunner {
             self.adapt.as_ref().map_or(0, |c| c.drift_events()),
             self.adapt.as_ref().map_or(0, |c| c.rollbacks()),
             self.observed_depth,
+            self.engine.saturation_events(),
         );
         self.status.set_phase(SessionPhase::Drained);
         RunSummary {
@@ -789,12 +820,23 @@ fn chunk_bookkeeping(
     observed_depth: usize,
     fault_strikes: &mut u64,
     max_fault_retries: u64,
+    saturation_bound: u64,
+    last_sat: &mut u64,
     fault: &mut Option<String>,
 ) {
     let b = engine.b();
+    // Fixed-point divergence surveillance: the per-chunk delta of the
+    // engine's saturation-latch counter. A Q-format separator can't go
+    // non-finite — it rails — so a burst of rail clamps is its blow-up
+    // signal, and it feeds the same recovery protocol below. Float
+    // engines report a constant 0 and never trip this arm.
+    let sat_total = engine.saturation_events();
+    let sat_delta = sat_total.saturating_sub(*last_sat);
+    *last_sat = sat_total;
+    let saturated = sat_delta > saturation_bound;
     // Divergence guard: large-mu EASI under abrupt mixing
     // switches can blow up; recover like an adaptive filter.
-    if !b.is_finite() || b.max_abs() > divergence_bound {
+    if !b.is_finite() || b.max_abs() > divergence_bound || saturated {
         // Rollback protocol: with the control plane active and a
         // steady-state checkpoint on hand, restore that (the last
         // known-good separator) instead of the cold warm start.
@@ -830,10 +872,14 @@ fn chunk_bookkeeping(
         // silently streaming garbage.
         *fault_strikes += 1;
         if *fault_strikes > max_fault_retries && fault.is_none() {
+            let what = if saturated {
+                "fixed-point saturation burst"
+            } else {
+                "non-finite or diverged separator"
+            };
             *fault = Some(format!(
-                "non-finite or diverged separator persisted through {} consecutive \
-                 rollback/reset attempts",
-                *fault_strikes
+                "{} persisted through {} consecutive rollback/reset attempts",
+                what, *fault_strikes
             ));
         }
     } else {
@@ -872,6 +918,7 @@ fn chunk_bookkeeping(
         adapt.as_ref().map_or(0, |c| c.drift_events()),
         adapt.as_ref().map_or(0, |c| c.rollbacks()),
         observed_depth,
+        sat_total,
     );
 }
 
@@ -1055,6 +1102,51 @@ mod tests {
         // Latching is sticky and non-panicking: further blocks still flow.
         runner.on_block(clean).unwrap();
         assert!(runner.fault().is_some(), "a latched fault stays latched");
+    }
+
+    #[test]
+    fn q16_saturation_burst_trips_the_guard_and_quarantines() {
+        // The fixed-point analogue of the NaN-poisoning drill above: a
+        // q16 separator can never go non-finite (NaN inputs quantize to
+        // zero on the rails' lattice), so the saturation latch is what
+        // feeds the divergence-recovery protocol and, persisted, the
+        // quarantine fault.
+        let mut cfg = small_cfg();
+        cfg.optimizer.kind = OptimizerKind::Sgd;
+        cfg.precision = crate::config::Precision::Q16;
+        let engine = super::super::engine::make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        let state = StateStore::new(crate::ica::init_b(cfg.n, cfg.m));
+        let mut runner = SessionRunner::new(&cfg, engine, &ServerOptions::default(), state);
+        let chunk = runner.chunk_size();
+        let poison = |chunks: usize| Mat64::from_fn(chunks * chunk, cfg.m, |_, _| f64::NAN);
+        let mut rng = Pcg32::seed(9);
+        let clean = Mat64::from_fn(chunk, cfg.m, |_, _| rng.normal());
+
+        // A healthy chunk stays far under the per-chunk bound (Gaussian
+        // tails may clip a handful of casts past ±2 — that is normal
+        // q16 operation, not a burst): no strike, no reset.
+        runner.on_block(clean.clone()).unwrap();
+        assert!(runner.fault().is_none());
+        let quiet = runner.status_cell().snapshot();
+        assert_eq!(quiet.resets, 0, "healthy chunk must not trip the guard");
+        assert!(quiet.saturations <= 64, "healthy stream is near-quiet: {}", quiet.saturations);
+        // Poisoned chunks latch events well past the per-chunk bound
+        // (one per NaN element at minimum), accruing strikes...
+        runner.on_block(poison(2)).unwrap();
+        assert!(runner.fault().is_none(), "2 strikes sit within the retry budget");
+        let sat = runner.status_cell().snapshot().saturations;
+        assert!(sat > 0, "saturation count must surface in the status record");
+        // ...a clean chunk refills the budget...
+        runner.on_block(clean.clone()).unwrap();
+        assert!(runner.fault().is_none());
+        // ...and four consecutive saturated chunks exceed it.
+        runner.on_block(poison(4)).unwrap();
+        let fault = runner.fault().expect("saturation burst must latch a fault");
+        assert!(fault.contains("saturation"), "{fault}");
+        // The cumulative count only grows; the fault is sticky.
+        assert!(runner.status_cell().snapshot().saturations >= sat);
+        runner.on_block(clean).unwrap();
+        assert!(runner.fault().is_some());
     }
 
     #[test]

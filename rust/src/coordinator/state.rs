@@ -164,6 +164,11 @@ pub struct SessionStatus {
     /// Shard ingest backlog observed when this tenant's last block was
     /// dequeued (messages; see `HubMetrics::queue_depth` semantics).
     pub queue_depth: usize,
+    /// Cumulative fixed-point saturation-latch events (`qfx` rail clamps
+    /// and non-finite quantizations) this tenant's engine has recorded.
+    /// Always 0 for floating-point tenants; for q16/q32 tenants this is
+    /// the divergence-surveillance signal (their values are never NaN).
+    pub saturations: u64,
     /// Why this tenant was quarantined (None while healthy).
     pub fault: Option<String>,
 }
@@ -181,6 +186,7 @@ impl SessionStatus {
             drift_events: 0,
             rollbacks: 0,
             queue_depth: 0,
+            saturations: 0,
             fault: None,
         }
     }
@@ -259,6 +265,7 @@ impl StatusCell {
         drift_events: u64,
         rollbacks: u64,
         queue_depth: usize,
+        saturations: u64,
     ) {
         let mut s = write_lock(&self.inner);
         s.samples = samples;
@@ -269,6 +276,7 @@ impl StatusCell {
         s.drift_events = drift_events;
         s.rollbacks = rollbacks;
         s.queue_depth = queue_depth;
+        s.saturations = saturations;
     }
 }
 
@@ -444,20 +452,26 @@ impl StateDirectory {
     }
 
     /// Render the live fleet-health table (`serve-many --status-every`).
-    /// The `press` column is the hosting shard's latest ingest pressure
-    /// as seen by the autoscaler (`-` until it publishes a reading); the
-    /// `faults` column is the hosting shard's worker fault/restart count
-    /// (`-` while zero). Footers summarize scaling and supervision
-    /// activity once any occurred.
+    /// The `sat` column is the tenant's cumulative fixed-point
+    /// saturation-latch count (`-` while zero — always, for float
+    /// tenants); the `press` column is the hosting shard's latest ingest
+    /// pressure as seen by the autoscaler (`-` until it publishes a
+    /// reading); the `faults` column is the hosting shard's worker
+    /// fault/restart count (`-` while zero). Footers summarize scaling
+    /// and supervision activity once any occurred.
     pub fn render_status_table(&self) -> String {
         let scale = self.autoscale.snapshot();
         let sup = self.supervisor.snapshot();
         let mut out = String::new();
         out.push_str(
             "session  phase        shard    samples    amari  resets  drifts  rollbk  depth  \
-             press  faults\n",
+             sat  press  faults\n",
         );
         for s in self.statuses() {
+            let sat = match s.saturations {
+                0 => format!("{:>3}", "-"),
+                n => format!("{n:>3}"),
+            };
             let press = match scale.pressure.get(s.shard) {
                 Some(p) if p.is_finite() => format!("{p:>5.2}"),
                 _ => format!("{:>5}", "-"),
@@ -467,7 +481,7 @@ impl StateDirectory {
                 _ => format!("{:>6}", "-"),
             };
             out.push_str(&format!(
-                "{:>7}  {:<11}  {:>5}  {:>9}  {:>7.4}  {:>6}  {:>6}  {:>6}  {:>5}  {}  {}\n",
+                "{:>7}  {:<11}  {:>5}  {:>9}  {:>7.4}  {:>6}  {:>6}  {:>6}  {:>5}  {}  {}  {}\n",
                 s.id,
                 s.phase.name(),
                 s.shard,
@@ -477,6 +491,7 @@ impl StateDirectory {
                 s.drift_events,
                 s.rollbacks,
                 s.queue_depth,
+                sat,
                 press,
                 faults
             ));
@@ -583,14 +598,15 @@ mod tests {
         assert!(s.last_amari.is_nan(), "no amari before the first record");
         cell.set_phase(SessionPhase::Streaming);
         cell.set_shard(1);
-        cell.publish_progress(512, 0.25, 1, 2, 1, 7);
+        cell.publish_progress(512, 0.25, 1, 2, 1, 7, 42);
         let s = cell.snapshot();
         assert_eq!(s.phase, SessionPhase::Streaming);
         assert_eq!((s.shard, s.samples, s.queue_depth), (1, 512, 7));
         assert_eq!((s.resets, s.drift_events, s.rollbacks), (1, 2, 1));
+        assert_eq!(s.saturations, 42);
         assert_eq!(s.last_amari, 0.25);
         // A NaN amari (no ground truth yet) keeps the previous value.
-        cell.publish_progress(1024, f64::NAN, 1, 2, 1, 0);
+        cell.publish_progress(1024, f64::NAN, 1, 2, 1, 0, 42);
         assert_eq!(cell.snapshot().last_amari, 0.25);
         assert_eq!(cell.snapshot().samples, 1024);
         // Drained is terminal: a racing control-plane transition can
@@ -694,7 +710,7 @@ mod tests {
         let cell = StatusCell::new(5, "t5");
         dir.register(5, store, cell.clone());
         cell.set_phase(SessionPhase::Streaming);
-        cell.publish_progress(100, 0.5, 0, 0, 0, 0);
+        cell.publish_progress(100, 0.5, 0, 0, 0, 0, 0);
         let s = dir.status(5).expect("registered");
         assert_eq!(s.name, "t5");
         assert_eq!(s.samples, 100);
@@ -705,6 +721,22 @@ mod tests {
         // `insert` still registers an (anonymous) health record.
         dir.insert(6, StateStore::new(Mat64::eye(2, 2)));
         assert_eq!(dir.status(6).unwrap().phase, SessionPhase::Admitted);
+    }
+
+    #[test]
+    fn saturation_column_renders_only_when_latched() {
+        let dir = StateDirectory::new();
+        let cell = StatusCell::new(1, "q16-tenant");
+        dir.register(1, StateStore::new(Mat64::eye(2, 2)), cell.clone());
+        let table = dir.render_status_table();
+        assert!(table.contains("sat"), "header carries the sat column: {table}");
+        let row = table.lines().nth(1).expect("tenant row");
+        // Zero events (every float tenant, healthy q16 tenants) shows '-'.
+        let dashes = row.matches('-').count();
+        cell.publish_progress(64, 0.5, 0, 0, 0, 0, 17);
+        let row = dir.render_status_table().lines().nth(1).unwrap().to_string();
+        assert!(row.contains(" 17 "), "latched count surfaces: {row:?}");
+        assert_eq!(row.matches('-').count(), dashes - 1, "sat dash replaced: {row:?}");
     }
 
     #[test]
@@ -766,7 +798,7 @@ mod tests {
                     for k in 1..=WRITES {
                         let b = Mat64::from_fn(2, 2, |_, _| k as f64);
                         store.publish(b, k);
-                        cell.publish_progress(k, 0.1, k, k, k, k as usize);
+                        cell.publish_progress(k, 0.1, k, k, k, k as usize, k);
                     }
                 })
             })
@@ -805,6 +837,7 @@ mod tests {
                             "torn SessionStatus record for tenant {id}"
                         );
                         assert_eq!(st.resets, st.samples);
+                        assert_eq!(st.saturations, st.samples, "torn saturation count");
                     }
                 })
             })

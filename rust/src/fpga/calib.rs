@@ -184,6 +184,107 @@ impl Calib {
     }
 }
 
+/// Observed per-stage dynamic range (max |value|) of a real EASI run —
+/// the calibration input for sizing Q-format integer bits.
+///
+/// Prior fixed-point implementations ([12]) hand-picked the binary point;
+/// the honest procedure is to *measure* how large each datapath stage
+/// actually gets on a representative trajectory and leave one headroom
+/// bit for deployment transients. [`DynamicRange::observe_easi`] runs the
+/// reference `f64` pipeline and records the stage maxima; the derived
+/// format feeds the `fpga-report` artifact so the chosen Q-format is
+/// auditable rather than asserted.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DynamicRange {
+    /// max |yᵢ| over the run (estimated components).
+    pub y: f64,
+    /// max |g(yᵢ)| (nonlinearity outputs).
+    pub gy: f64,
+    /// max |H[i][j]| (relative gradient).
+    pub h: f64,
+    /// max |(H·B)[i][j]| (update staging).
+    pub hb: f64,
+    /// max |B[i][j]| (the loop-carried state).
+    pub b: f64,
+}
+
+impl DynamicRange {
+    /// Run a seeded `f64` EASI SGD trajectory on the standard dataset
+    /// (normalized to unit average power, the canonical experiment
+    /// regime) and record the per-stage maxima.
+    pub fn observe_easi(
+        m: usize,
+        n: usize,
+        g: crate::ica::Nonlinearity,
+        mu: f64,
+        samples: usize,
+        seed: u64,
+    ) -> Self {
+        use crate::ica::EasiSgd;
+        use crate::linalg::Mat64;
+        let ds = crate::signal::Dataset::standard(seed, m, n, samples);
+        let std_x = {
+            let mut s = 0.0;
+            for v in ds.x.as_slice() {
+                s += v * v;
+            }
+            (s / ds.x.as_slice().len() as f64).sqrt()
+        };
+        let mut b = Mat64::eye(n, m);
+        b.scale(0.5);
+        let mut y = vec![0.0; n];
+        let mut gy = vec![0.0; n];
+        let mut h = Mat64::zeros(n, n);
+        let mut hb = Mat64::zeros(n, m);
+        let mut x = vec![0.0; m];
+        let mut dr = Self::default();
+        for t in 0..ds.len() {
+            for (i, v) in ds.sample(t).iter().enumerate() {
+                x[i] = v / std_x;
+            }
+            EasiSgd::<f64>::relative_gradient(&b, &x, g, false, mu, &mut y, &mut gy, &mut h);
+            h.matmul_into(&b, &mut hb);
+            b.axpy(-mu, &hb);
+            for &v in y.iter() {
+                dr.y = dr.y.max(v.abs());
+            }
+            for &v in gy.iter() {
+                dr.gy = dr.gy.max(v.abs());
+            }
+            dr.h = dr.h.max(h.max_abs());
+            dr.hb = dr.hb.max(hb.max_abs());
+            dr.b = dr.b.max(b.max_abs());
+        }
+        dr
+    }
+
+    /// The worst stage — the value the integer field must hold.
+    pub fn max_abs(&self) -> f64 {
+        self.y.max(self.gy).max(self.h).max(self.hb).max(self.b)
+    }
+
+    /// Integer bits (excluding sign) for the observed range plus one
+    /// headroom bit for deployment transients.
+    pub fn required_int_bits(&self) -> u32 {
+        let worst = self.max_abs();
+        let base = if worst <= 1.0 { 0 } else { worst.log2().ceil() as u32 };
+        base + 1
+    }
+
+    /// Fraction bits left in a `word_bits` word after sign + integer
+    /// field (at least 1 — a Q-format with no fraction is an integer).
+    pub fn frac_bits(&self, word_bits: u32) -> u32 {
+        word_bits.saturating_sub(1 + self.required_int_bits()).max(1)
+    }
+
+    /// The calibrated format label, integer bits counted inclusive of
+    /// sign (`"Q2.14"` for a ±2 range in a 16-bit word).
+    pub fn q_format(&self, word_bits: u32) -> String {
+        let frac = self.frac_bits(word_bits);
+        format!("Q{}.{}", word_bits - frac, frac)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,5 +316,48 @@ mod tests {
         assert!(c.delay_ns(&Op::Mul) > 0.0);
         assert_eq!(c.delay_ns(&Op::Input("x".into())), 0.0);
         assert!(c.addeq(&Op::Add) > c.addeq(&Op::Mul), "adder is ALM-heavy");
+    }
+
+    #[test]
+    fn observed_range_covers_every_stage() {
+        let dr = DynamicRange::observe_easi(4, 2, crate::ica::Nonlinearity::Cube, 0.01, 5_000, 7);
+        // The gradient's diagonal starts near y² − 1 ≈ −1, so H must have
+        // seen at least ~1; B starts at 0.5 and only grows toward unit
+        // output variance.
+        assert!(dr.h >= 0.5, "{dr:?}");
+        assert!(dr.b >= 0.5, "{dr:?}");
+        assert!(dr.y > 0.0 && dr.gy > 0.0 && dr.hb > 0.0, "{dr:?}");
+        let worst = dr.max_abs();
+        assert!(worst.is_finite() && worst < 64.0, "diverged calibration run: {dr:?}");
+        for v in [dr.y, dr.gy, dr.h, dr.hb, dr.b] {
+            assert!(v <= worst);
+        }
+    }
+
+    #[test]
+    fn int_bits_follow_the_observed_range() {
+        let small = DynamicRange { y: 0.9, gy: 0.7, h: 0.95, hb: 0.4, b: 0.8 };
+        // Everything under 1.0: one headroom bit → the serving Q2.14.
+        assert_eq!(small.required_int_bits(), 1);
+        assert_eq!(small.frac_bits(16), 14);
+        assert_eq!(small.q_format(16), "Q2.14");
+
+        let wide = DynamicRange { y: 1.2, gy: 1.8, h: 3.5, hb: 2.1, b: 1.3 };
+        // Worst 3.5 → 2 magnitude bits + 1 headroom.
+        assert_eq!(wide.required_int_bits(), 3);
+        assert_eq!(wide.q_format(16), "Q4.12");
+        assert_eq!(wide.q_format(32), "Q4.28");
+    }
+
+    #[test]
+    fn calibrated_format_is_monotone_in_range() {
+        // A wider observed range never yields more fraction bits.
+        let mut prev = u32::MAX;
+        for worst in [0.5, 1.5, 3.0, 6.0, 12.0, 24.0] {
+            let dr = DynamicRange { y: worst, ..Default::default() };
+            let f = dr.frac_bits(16);
+            assert!(f <= prev, "frac bits grew at {worst}");
+            prev = f;
+        }
     }
 }

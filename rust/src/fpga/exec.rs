@@ -1,0 +1,349 @@
+//! Bit-true fixed-point execution of [`Datapath`] graphs.
+//!
+//! `fpga::timing` and `fpga::pipeline_sim` answer "how fast does this
+//! graph clock?"; this module answers "what *numbers* does it compute?"
+//! — every node is evaluated in [`qfx::Fixed`](crate::qfx::Fixed)
+//! Q-format arithmetic with the same round-to-nearest-even and saturation
+//! rules the software kernels use.
+//!
+//! ## The parity contract
+//!
+//! For the Fig. 1 SGD graph this execution is **bit-identical** to the
+//! fused software step (`linalg::fused::relative_gradient_step_into`)
+//! instantiated at the same `Fixed` format, as long as no intermediate
+//! saturates:
+//!
+//! - fixed-point addition is exact integer addition, so the graph's
+//!   balanced adder trees agree with the software's sequential
+//!   accumulation regardless of summation order;
+//! - `Fixed` multiplication rounds the magnitude (symmetric in sign) and
+//!   is bitwise commutative, so `a·b == b·a` and `x + (−μ)·h == x − μ·h`;
+//! - the `tanh` scalar *is* the datapath's range-reduce + 4-iteration
+//!   polynomial segment, evaluated in the same operation order.
+//!
+//! Under `--features fma` the software kernels contract multiply-adds
+//! into a single rounding, which the per-node graph cannot represent, so
+//! the bitwise pin only holds (and is only tested) on the default build.
+//! Saturating intermediates break order-independence (clamping is not
+//! associative); the parity tests assert the saturation latch stayed
+//! clear to make that precondition explicit.
+
+use super::datapath::{build_easi_sgd, Datapath, Op, Sig};
+use crate::ica::Nonlinearity;
+use crate::linalg::Mat;
+use crate::qfx::{Fixed, TANH_C};
+use std::collections::BTreeMap;
+
+/// Evaluate every node of `dp` in Q-format arithmetic, in node order
+/// (builders only emit forward edges, so this is a topological order).
+///
+/// `inputs` binds [`Op::Input`] names; `coeffs` binds [`Op::ConstMul`]
+/// coefficient names (already quantized). Panics on an unbound name or an
+/// unknown [`Op::Special`] — the graphs built by `fpga::datapath` only
+/// use `abs` and `range_reduce`.
+pub fn eval_fixed<const FRAC: u32>(
+    dp: &Datapath,
+    inputs: &BTreeMap<String, Fixed<FRAC>>,
+    coeffs: &BTreeMap<String, Fixed<FRAC>>,
+) -> BTreeMap<String, Fixed<FRAC>> {
+    let mut v: Vec<Fixed<FRAC>> = Vec::with_capacity(dp.nodes.len());
+    for node in &dp.nodes {
+        let val = match &node.op {
+            Op::Input(name) => *inputs
+                .get(name)
+                .unwrap_or_else(|| panic!("unbound datapath input '{name}'")),
+            Op::Const(c) => Fixed::from_f64(*c),
+            Op::Add => v[node.preds[0]] + v[node.preds[1]],
+            Op::Sub => v[node.preds[0]] - v[node.preds[1]],
+            Op::Mul => v[node.preds[0]] * v[node.preds[1]],
+            Op::ConstMul(name) => {
+                *coeffs
+                    .get(name)
+                    .unwrap_or_else(|| panic!("unbound coefficient '{name}'"))
+                    * v[node.preds[0]]
+            }
+            Op::Special("abs") => v[node.preds[0]].abs(),
+            Op::Special("range_reduce") => v[node.preds[0]].tanh_range_reduce(),
+            Op::Special(other) => panic!("unknown special function '{other}'"),
+        };
+        v.push(val);
+    }
+    dp.outputs.iter().map(|o| (o.name.clone(), v[o.sig])).collect()
+}
+
+/// One resolved instruction of the evaluation plan: every name lookup
+/// (input binding, coefficient) is done once at build time so stepping is
+/// allocation- and hash-free.
+#[derive(Clone, Copy)]
+enum PlanOp<const FRAC: u32> {
+    /// Read `B[i][j]` from the loop-carried state register.
+    LoadB(usize, usize),
+    /// Read `x[i]` from the current sample.
+    LoadX(usize),
+    Const(Fixed<FRAC>),
+    Add(Sig, Sig),
+    Sub(Sig, Sig),
+    Mul(Sig, Sig),
+    CoeffMul(Fixed<FRAC>, Sig),
+    Abs(Sig),
+    RangeReduce(Sig),
+}
+
+/// Numeric stepper for the Fig. 1 SGD graph: holds the loop-carried `B`
+/// register and replays the datapath once per sample, exactly as the
+/// hardware would between two register writes.
+pub struct FixedSgdStepper<const FRAC: u32> {
+    plan: Vec<PlanOp<FRAC>>,
+    /// Node index of `B'[i][j]`, row-major.
+    b_out: Vec<Sig>,
+    /// Node index of `y[i]`.
+    y_out: Vec<Sig>,
+    values: Vec<Fixed<FRAC>>,
+    b: Mat<Fixed<FRAC>>,
+    samples: u64,
+}
+
+/// Parse the bracketed indices out of a port name (`"B[1][2]"` → `[1, 2]`).
+fn indices(name: &str) -> Vec<usize> {
+    name.split('[')
+        .skip(1)
+        .map(|part| {
+            part.trim_end_matches(']')
+                .parse()
+                .unwrap_or_else(|_| panic!("malformed port name '{name}'"))
+        })
+        .collect()
+}
+
+impl<const FRAC: u32> FixedSgdStepper<FRAC> {
+    /// Compile the `(m, n, g)` SGD graph into an evaluation plan with `μ`
+    /// and the tanh coefficient quantized once, starting from `b0`.
+    pub fn new(g: Nonlinearity, mu: f64, b0: Mat<Fixed<FRAC>>) -> Self {
+        let (n, m) = b0.shape();
+        let dp = build_easi_sgd(m, n, g);
+        let mu_q = Fixed::<FRAC>::from_f64(mu);
+        let tanh_c = Fixed::<FRAC>::from_f64(TANH_C);
+        let plan = dp
+            .nodes
+            .iter()
+            .map(|node| match &node.op {
+                Op::Input(name) => {
+                    let ix = indices(name);
+                    if name.starts_with("B[") {
+                        PlanOp::LoadB(ix[0], ix[1])
+                    } else if name.starts_with("x[") {
+                        PlanOp::LoadX(ix[0])
+                    } else {
+                        panic!("SGD graph has unexpected input '{name}'")
+                    }
+                }
+                Op::Const(c) => PlanOp::Const(Fixed::from_f64(*c)),
+                Op::Add => PlanOp::Add(node.preds[0], node.preds[1]),
+                Op::Sub => PlanOp::Sub(node.preds[0], node.preds[1]),
+                Op::Mul => PlanOp::Mul(node.preds[0], node.preds[1]),
+                Op::ConstMul(name) => PlanOp::CoeffMul(
+                    match name.as_str() {
+                        "mu" => mu_q,
+                        "tanh_c" => tanh_c,
+                        other => panic!("SGD graph has unexpected coefficient '{other}'"),
+                    },
+                    node.preds[0],
+                ),
+                Op::Special("abs") => PlanOp::Abs(node.preds[0]),
+                Op::Special("range_reduce") => PlanOp::RangeReduce(node.preds[0]),
+                Op::Special(other) => panic!("unknown special function '{other}'"),
+            })
+            .collect();
+        let mut b_out = Vec::with_capacity(n * m);
+        let mut y_out = Vec::with_capacity(n);
+        for o in &dp.outputs {
+            if o.name.starts_with("B'") {
+                b_out.push(o.sig);
+            } else if o.name.starts_with("y[") {
+                y_out.push(o.sig);
+            }
+        }
+        assert_eq!(b_out.len(), n * m);
+        assert_eq!(y_out.len(), n);
+        Self {
+            plan,
+            b_out,
+            y_out,
+            values: vec![Fixed::default(); dp.nodes.len()],
+            b: b0,
+            samples: 0,
+        }
+    }
+
+    /// One register-to-register pass: evaluate the whole graph at the
+    /// current `B` and the sample `x`, then latch `B'` back into `B`.
+    /// Returns nothing; read the estimated components via [`Self::y`].
+    pub fn step(&mut self, x: &[Fixed<FRAC>]) {
+        assert_eq!(x.len(), self.b.cols());
+        for i in 0..self.plan.len() {
+            self.values[i] = match self.plan[i] {
+                PlanOp::LoadB(r, c) => self.b[(r, c)],
+                PlanOp::LoadX(j) => x[j],
+                PlanOp::Const(c) => c,
+                PlanOp::Add(a, b) => self.values[a] + self.values[b],
+                PlanOp::Sub(a, b) => self.values[a] - self.values[b],
+                PlanOp::Mul(a, b) => self.values[a] * self.values[b],
+                PlanOp::CoeffMul(c, a) => c * self.values[a],
+                PlanOp::Abs(a) => self.values[a].abs(),
+                PlanOp::RangeReduce(a) => self.values[a].tanh_range_reduce(),
+            };
+        }
+        let m = self.b.cols();
+        for (k, &sig) in self.b_out.iter().enumerate() {
+            self.b[(k / m, k % m)] = self.values[sig];
+        }
+        self.samples += 1;
+    }
+
+    /// The loop-carried separation matrix.
+    pub fn b(&self) -> &Mat<Fixed<FRAC>> {
+        &self.b
+    }
+
+    /// Estimated components `y` from the most recent [`Self::step`].
+    pub fn y(&self, i: usize) -> Fixed<FRAC> {
+        self.values[self.y_out[i]]
+    }
+
+    pub fn samples_seen(&self) -> u64 {
+        self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qfx::{take_saturation_events, Q16};
+    use crate::signal::Pcg32;
+
+    #[test]
+    fn eval_fixed_runs_a_hand_built_graph() {
+        // (a + b) * c  and  0.25 * a  on exactly representable values.
+        let mut dp = Datapath::new("t");
+        let a = dp.input("a");
+        let b = dp.input("b");
+        let c = dp.input("c");
+        let s = dp.add(a, b);
+        let p = dp.mul(s, c);
+        let q = dp.const_mul("k", a);
+        dp.output("p", p);
+        dp.output("q", q);
+
+        let mut inputs = BTreeMap::new();
+        inputs.insert("a".to_string(), Q16::from_f64(0.5));
+        inputs.insert("b".to_string(), Q16::from_f64(0.25));
+        inputs.insert("c".to_string(), Q16::from_f64(-1.0));
+        let mut coeffs = BTreeMap::new();
+        coeffs.insert("k".to_string(), Q16::from_f64(0.25));
+        let out = eval_fixed(&dp, &inputs, &coeffs);
+        assert_eq!(out["p"].to_f64(), -0.75);
+        assert_eq!(out["q"].to_f64(), 0.125);
+    }
+
+    #[test]
+    fn tanh_segment_in_graph_matches_scalar_tanh_bitwise() {
+        // The graph's range_reduce + 4×(const_mul + add) block against the
+        // Fixed scalar's tanh — these must be the same computation.
+        let mut dp = Datapath::new("t");
+        let y = dp.input("y");
+        let seg = dp.nonlinearity(Nonlinearity::Tanh, &[y]);
+        dp.output("g", seg[0]);
+        let mut coeffs = BTreeMap::new();
+        coeffs.insert("tanh_c".to_string(), Q16::from_f64(crate::qfx::TANH_C));
+        for v in [-1.9, -1.0, -0.3, 0.0, 0.7, 1.2, 1.9] {
+            let yq = Q16::from_f64(v);
+            let mut inputs = BTreeMap::new();
+            inputs.insert("y".to_string(), yq);
+            let got = eval_fixed(&dp, &inputs, &coeffs)["g"];
+            assert_eq!(got.raw(), yq.tanh().raw(), "tanh parity at {v}");
+        }
+    }
+
+    /// The tentpole parity oracle: the Fig. 1 graph executed in Q2.14 is
+    /// bit-identical to `EasiSgd<Q16>`'s fused software step across ≥1k
+    /// samples for every nonlinearity. Default build only — `fma`
+    /// contracts roundings the per-node graph cannot express.
+    #[cfg(not(feature = "fma"))]
+    #[test]
+    fn sgd_graph_matches_fused_software_bit_for_bit() {
+        use crate::ica::{EasiSgd, Optimizer};
+        let (n, m) = (3, 4);
+        let mu = 0.001;
+        for g in [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare] {
+            let _ = take_saturation_events();
+            let mut b0 = Mat::<Q16>::eye(n, m);
+            b0.scale(Q16::from_f64(0.25));
+            let mut sw = EasiSgd::new(b0.clone(), mu, g);
+            let mut hw = FixedSgdStepper::<14>::new(g, mu, b0);
+            let mut rng = Pcg32::seed(0x51D);
+            let mut x = vec![Q16::default(); m];
+            for t in 0..1_000 {
+                for xi in x.iter_mut() {
+                    *xi = Q16::from_f64(rng.uniform_in(-0.5, 0.5));
+                }
+                sw.step(&x);
+                hw.step(&x);
+                assert_eq!(
+                    sw.b().as_slice(),
+                    hw.b().as_slice(),
+                    "divergence at step {t} for g={}",
+                    g.name()
+                );
+            }
+            assert_eq!(sw.samples_seen(), hw.samples_seen());
+            // The pin's precondition: a saturating intermediate would make
+            // summation order observable; this trajectory must have none.
+            assert_eq!(take_saturation_events(), 0, "g={} saturated", g.name());
+            // And the trajectory must be alive, not a fixed point of zeros.
+            assert!(hw.b().max_abs() > Q16::default(), "B collapsed");
+        }
+    }
+
+    /// Same pin at the 32-bit Q4.28 serving format (one nonlinearity is
+    /// enough; the format only changes FRAC, not the operation order).
+    #[cfg(not(feature = "fma"))]
+    #[test]
+    fn sgd_graph_parity_holds_at_q32() {
+        use crate::ica::{EasiSgd, Optimizer};
+        use crate::qfx::Q32;
+        let _ = take_saturation_events();
+        let (n, m) = (2, 4);
+        let mut b0 = Mat::<Q32>::eye(n, m);
+        b0.scale(Q32::from_f64(0.25));
+        let mut sw = EasiSgd::new(b0.clone(), 0.002, Nonlinearity::Cube);
+        let mut hw = FixedSgdStepper::<28>::new(Nonlinearity::Cube, 0.002, b0);
+        let mut rng = Pcg32::seed(0x51D32);
+        let mut x = vec![Q32::default(); m];
+        for _ in 0..1_000 {
+            for xi in x.iter_mut() {
+                *xi = Q32::from_f64(rng.uniform_in(-0.5, 0.5));
+            }
+            sw.step(&x);
+            hw.step(&x);
+        }
+        assert_eq!(sw.b().as_slice(), hw.b().as_slice());
+        assert_eq!(take_saturation_events(), 0);
+    }
+
+    #[test]
+    fn stepper_exposes_estimated_components() {
+        // y[i] ports carry B·x of the *pre-update* B, matching the
+        // deployment port semantics of the Fig. 1 graph.
+        let (n, m) = (2, 3);
+        let mut b0 = Mat::<Q16>::eye(n, m);
+        b0.scale(Q16::from_f64(0.5));
+        let expect = b0.clone();
+        let mut hw = FixedSgdStepper::<14>::new(Nonlinearity::Cube, 0.01, b0);
+        let x: Vec<Q16> = [0.5, -0.25, 0.125].iter().map(|&v| Q16::from_f64(v)).collect();
+        hw.step(&x);
+        for i in 0..n {
+            let want: Q16 = (0..m).map(|j| expect[(i, j)] * x[j]).sum();
+            assert_eq!(hw.y(i).raw(), want.raw());
+        }
+    }
+}

@@ -14,21 +14,25 @@
 //! - [`timing`]  — critical path, balanced re-timing, Fmax.
 //! - [`resources`] — ALM / DSP / register-bit estimation.
 //! - [`pipeline_sim`] — cycle-accurate issue simulation (stall vs II=1).
-//! - [`report`]  — renders Table I side-by-side paper-vs-model.
+//! - [`exec`]    — bit-true fixed-point execution of the datapath graphs
+//!   (the `qfx` parity oracle).
+//! - [`report`]  — renders Table I side-by-side paper-vs-model, plus the
+//!   machine-readable `fpga-report` artifact.
 
 pub mod calib;
 pub mod datapath;
+pub mod exec;
 pub mod pipeline_sim;
 pub mod report;
 pub mod resources;
 pub mod timing;
 
-pub use calib::Calib;
+pub use calib::{Calib, DynamicRange};
 pub use datapath::{
     build_easi_sgd, build_easi_smbgd, build_easi_smbgd_no_momentum, pipeline_depth, Datapath,
     Op, OpCounts,
 };
 pub use pipeline_sim::{simulate, PipelineConfig, SimResult};
-pub use report::{table1, ArchReport, Table1};
+pub use report::{amari_after_run, report_json, table1, ArchReport, Table1};
 pub use resources::{estimate, ResourceReport};
 pub use timing::{analyze_pipelined, analyze_unpipelined, TimingReport};

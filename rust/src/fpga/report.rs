@@ -186,6 +186,130 @@ impl Table1 {
     }
 }
 
+/// Seeded end-to-end convergence at precision `T`: run EASI SGD over the
+/// standard dataset (normalized to unit average power) and return the
+/// final Amari index. This is the accuracy row of the `fpga-report`
+/// artifact and the oracle behind the q16 Amari-gap acceptance tests.
+pub fn amari_after_run<T: crate::linalg::Scalar>(
+    m: usize,
+    n: usize,
+    g: Nonlinearity,
+    mu: f64,
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    use crate::ica::{EasiSgd, Optimizer};
+    let ds = crate::signal::Dataset::standard(seed, m, n, samples);
+    let std_x = {
+        let mut s = 0.0;
+        for v in ds.x.as_slice() {
+            s += v * v;
+        }
+        (s / ds.x.as_slice().len() as f64).sqrt()
+    };
+    let mut opt = EasiSgd::<T>::with_identity_init(n, m, mu, g);
+    let mut x = vec![T::zero(); m];
+    for t in 0..ds.len() {
+        for (i, v) in ds.sample(t).iter().enumerate() {
+            x[i] = T::scalar_from_f64(v / std_x);
+        }
+        opt.step(&x);
+    }
+    let c = opt.b().cast::<f64>().matmul(&ds.a);
+    crate::ica::amari_index(&c)
+}
+
+/// One architecture column as a JSON object (hand-rolled — the repo has
+/// no serde; `f64` `Display` never emits exponents or non-finite tokens
+/// for the finite values the model produces).
+fn arch_json(a: &ArchReport) -> String {
+    format!(
+        "{{\"fmax_mhz\":{},\"throughput_mips\":{},\"samples_per_sec\":{},\"alms\":{},\
+         \"dsps\":{},\"register_bits\":{},\"pipeline_utilization\":{}}}",
+        a.timing.fmax_mhz,
+        a.throughput_mips,
+        a.samples_per_sec,
+        a.resources.alms,
+        a.resources.dsps,
+        a.resources.register_bits,
+        a.pipeline_utilization,
+    )
+}
+
+fn columns_json(t: &Table1) -> String {
+    format!("{{\"sgd\":{},\"smbgd\":{}}}", arch_json(&t.sgd), arch_json(&t.smbgd))
+}
+
+/// The machine-readable `fpga-report` artifact (schema
+/// `easi-ica-fpga-report/v1`): Table-I model numbers for the float and
+/// fixed-point technologies, the paper's published values where they
+/// exist, the Q-format calibration from an observed dynamic range, and
+/// the fixed-point accuracy (Amari index) against the `f64` reference on
+/// a seeded convergence run. CI generates and schema-checks this in the
+/// lint job and uploads it as a build artifact.
+pub fn report_json(m: usize, n: usize, g: Nonlinearity) -> String {
+    let float = table1(m, n, g, &Calib::default());
+    let fixed16 = table1(m, n, g, &Calib::fixed_point(16));
+    let fixed32 = table1(m, n, g, &Calib::fixed_point(32));
+    let dr = super::calib::DynamicRange::observe_easi(m, n, g, 0.01, 20_000, 7);
+
+    let (acc_mu, acc_samples, acc_seed) = (0.003, 60_000, 3);
+    let amari_f64 = amari_after_run::<f64>(m, n, g, acc_mu, acc_samples, acc_seed);
+    let amari_q16 = amari_after_run::<crate::qfx::Q16>(m, n, g, acc_mu, acc_samples, acc_seed);
+    let amari_q32 = amari_after_run::<crate::qfx::Q32>(m, n, g, acc_mu, acc_samples, acc_seed);
+
+    let paper = if m == 4 && n == 2 {
+        format!(
+            "{{\"sgd\":{{\"fmax_mhz\":{},\"throughput_mips\":{},\"alms\":{},\"dsps\":{},\
+             \"register_bits\":{}}},\"smbgd\":{{\"fmax_mhz\":{},\"throughput_mips\":{},\
+             \"alms\":{},\"dsps\":{},\"register_bits\":{}}}}}",
+            PaperTable1::SGD_FMAX_MHZ,
+            PaperTable1::SGD_MIPS,
+            PaperTable1::SGD_ALMS,
+            PaperTable1::SGD_DSPS,
+            PaperTable1::SGD_REG_BITS,
+            PaperTable1::SMBGD_FMAX_MHZ,
+            PaperTable1::SMBGD_MIPS,
+            PaperTable1::SMBGD_ALMS,
+            PaperTable1::SMBGD_DSPS,
+            PaperTable1::SMBGD_REG_BITS,
+        )
+    } else {
+        "null".to_string()
+    };
+
+    format!(
+        "{{\n\
+         \"schema\":\"easi-ica-fpga-report/v1\",\n\
+         \"config\":{{\"m\":{m},\"n\":{n},\"g\":\"{}\",\"pipeline_depth\":{}}},\n\
+         \"model\":{{\"float32\":{},\"fixed16\":{},\"fixed32\":{}}},\n\
+         \"paper_table1\":{paper},\n\
+         \"calibration\":{{\
+         \"dynamic_range\":{{\"y\":{},\"gy\":{},\"h\":{},\"hb\":{},\"b\":{}}},\
+         \"required_int_bits\":{},\
+         \"calibrated_format_16\":\"{}\",\"calibrated_format_32\":\"{}\",\
+         \"serving_formats\":{{\"q16\":\"Q2.14\",\"q32\":\"Q4.28\"}}}},\n\
+         \"accuracy\":{{\"mu\":{acc_mu},\"samples\":{acc_samples},\"seed\":{acc_seed},\
+         \"amari_f64\":{amari_f64},\"amari_q16\":{amari_q16},\"amari_q32\":{amari_q32},\
+         \"q16_gap\":{}}}\n\
+         }}\n",
+        g.name(),
+        float.depth,
+        columns_json(&float),
+        columns_json(&fixed16),
+        columns_json(&fixed32),
+        dr.y,
+        dr.gy,
+        dr.h,
+        dr.hb,
+        dr.b,
+        dr.required_int_bits(),
+        dr.q_format(16),
+        dr.q_format(32),
+        amari_q16 - amari_f64,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,5 +349,47 @@ mod tests {
         let out = t.render();
         assert!(!out.contains("paper 4.81"));
         assert!(out.contains("SMBGD model"));
+    }
+
+    #[test]
+    fn report_json_is_well_formed_and_complete() {
+        let out = report_json(4, 2, Nonlinearity::Cube);
+        // Structural sanity a schema checker would also enforce.
+        assert!(out.trim_start().starts_with('{') && out.trim_end().ends_with('}'));
+        assert_eq!(out.matches('{').count(), out.matches('}').count());
+        for needle in [
+            "\"schema\":\"easi-ica-fpga-report/v1\"",
+            "\"model\":",
+            "\"float32\":",
+            "\"fixed16\":",
+            "\"fixed32\":",
+            "\"paper_table1\":",
+            "\"dynamic_range\":",
+            "\"serving_formats\":",
+            "\"amari_f64\":",
+            "\"amari_q16\":",
+            "\"q16_gap\":",
+        ] {
+            assert!(out.contains(needle), "missing {needle} in:\n{out}");
+        }
+        // The paper block is present (not null) at the paper's (4, 2).
+        assert!(!out.contains("\"paper_table1\":null"));
+        // No non-finite tokens may leak into the JSON.
+        for bad in ["NaN", "inf"] {
+            assert!(!out.contains(bad), "non-finite {bad} in:\n{out}");
+        }
+    }
+
+    #[test]
+    fn fixed_point_accuracy_tracks_the_reference() {
+        // The report's accuracy row is the acceptance oracle: q16 must
+        // land within 0.1 Amari of the f64 reference on the seeded run
+        // (the full pin lives in tests/precision_parity.rs; this guards
+        // the artifact's own numbers).
+        let f64_amari = amari_after_run::<f64>(4, 2, Nonlinearity::Cube, 0.003, 60_000, 3);
+        let q16_amari =
+            amari_after_run::<crate::qfx::Q16>(4, 2, Nonlinearity::Cube, 0.003, 60_000, 3);
+        assert!(f64_amari < 0.15, "reference did not converge: {f64_amari}");
+        assert!(q16_amari - f64_amari < 0.1, "q16 gap too wide: {q16_amari} vs {f64_amari}");
     }
 }

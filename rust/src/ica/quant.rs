@@ -10,10 +10,20 @@
 //! fixed-point datapath bit-growth behaviour. The A4 ablation
 //! (`cargo bench --bench ablation_quant`) sweeps word length and shows
 //! where separation quality falls off a cliff.
+//!
+//! Since the `qfx` datapath landed, this module is a thin veneer over it:
+//! [`QFormat::quantize`] delegates to [`quantize_rne`](crate::qfx::quantize_rne) (one rounding
+//! routine — RNE, two's-complement saturation — shared with the servable
+//! [`Fixed`](crate::qfx::Fixed) scalars), and [`QuantizedEasi`] routes exact-lattice
+//! formats (Q3.12, Q2.14, Q7.24, Q4.28) through the same fused
+//! fixed-point kernels the serving plane's `q16`/`q32` tenants run.
+//! Arbitrary word lengths (the A4 sweep's 8-bit cliff) fall back to the
+//! legacy requantize-every-stage f64 model.
 
-use super::nonlinearity::Nonlinearity;
+use super::nonlinearity::{with_g, Nonlinearity};
 use super::Optimizer;
-use crate::linalg::Mat64;
+use crate::linalg::{fused, FusedScratch, Mat, Mat64};
+use crate::qfx::{quantize_rne, Fixed};
 
 /// Signed fixed-point format Q`int_bits`.`frac_bits` (plus sign bit).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,10 +56,15 @@ impl QFormat {
         1 + self.int_bits + self.frac_bits
     }
 
-    /// Largest representable magnitude.
+    /// Largest representable value (`(2^(int+frac) − 1) · 2^-frac`).
     pub fn max_value(&self) -> f64 {
-        let scale = (1u64 << self.frac_bits) as f64;
-        (((1u64 << (self.int_bits + self.frac_bits)) - 1) as f64) / scale
+        self.max_raw() as f64 / (1u64 << self.frac_bits) as f64
+    }
+
+    /// Most negative representable value (`−2^(int+frac) · 2^-frac`): the
+    /// two's-complement rail, one LSB beyond `−max_value()`.
+    pub fn min_value(&self) -> f64 {
+        self.min_raw() as f64 / (1u64 << self.frac_bits) as f64
     }
 
     /// Resolution (value of one LSB).
@@ -57,15 +72,22 @@ impl QFormat {
         1.0 / (1u64 << self.frac_bits) as f64
     }
 
-    /// Quantize: round-to-nearest at `frac_bits`, saturate to the range.
-    /// (Saturation, not wraparound — the standard DSP datapath choice.)
+    fn max_raw(&self) -> i64 {
+        (1i64 << (self.int_bits + self.frac_bits)) - 1
+    }
+
+    fn min_raw(&self) -> i64 {
+        -(1i64 << (self.int_bits + self.frac_bits))
+    }
+
+    /// Quantize: round to nearest (ties to even) at `frac_bits`, saturate
+    /// to the two's-complement rails — never wraparound, the standard DSP
+    /// datapath choice. Delegates to [`quantize_rne`](crate::qfx::quantize_rne), so every
+    /// `QFormat` shares the exact rounding semantics of the servable
+    /// [`Fixed`](crate::qfx::Fixed) scalars; `QFormat::q16()` *is* the `Fixed::<12>`
+    /// lattice (pinned by this module's regression tests).
     pub fn quantize(&self, v: f64) -> f64 {
-        if v.is_nan() {
-            return 0.0;
-        }
-        let scale = (1u64 << self.frac_bits) as f64;
-        let max = self.max_value();
-        (v.clamp(-max, max) * scale).round() / scale
+        quantize_rne(v, self.frac_bits, self.min_raw(), self.max_raw())
     }
 
     /// Quantize a slice in place.
@@ -82,8 +104,22 @@ impl QFormat {
 /// EASI SGD with a fully-quantized datapath: inputs, `y`, `g(y)`, every
 /// `H` entry, the `μHB` product and the stored `B` all live in `fmt`.
 ///
-/// This mirrors what a fixed-point FPGA implementation computes: each
-/// operator output is rounded/saturated before feeding the next stage.
+/// Two execution paths, selected by the format:
+///
+/// - **Exact-lattice formats** (Q3.12, Q2.14, Q7.24, Q4.28 — the four
+///   word layouts [`Fixed`](crate::qfx::Fixed) can represent) run the
+///   fused fixed-point kernels the serving plane's `q16`/`q32` tenants
+///   run: every product individually RNE-rounded, adds exact integer
+///   adds, rails saturating. This is bit-for-bit the hardware model
+///   (`fpga::exec` pins it against the datapath graphs).
+/// - **Arbitrary word lengths** (the A4 sweep's 8-bit cliff, formats
+///   with no `Fixed` instantiation) fall back to the legacy model:
+///   compute each stage in f64, requantize its output. Looser than real
+///   hardware (accumulates never round), but defined for any width.
+///
+/// `B` is held as `Mat64` on the format's lattice; since every lattice
+/// value is a dyadic rational exactly representable in f64, the per-step
+/// casts on the exact-lattice path are lossless round trips.
 pub struct QuantizedEasi {
     b: Mat64,
     mu: f64,
@@ -131,10 +167,44 @@ impl QuantizedEasi {
     pub fn effective_mu(&self) -> f64 {
         self.mu
     }
-}
 
-impl Optimizer for QuantizedEasi {
-    fn step(&mut self, x: &[f64]) {
+    /// The [`Fixed`](crate::qfx::Fixed) fraction width whose lattice
+    /// (word length *and* rails) matches `fmt` exactly, if any.
+    fn fixed_frac(fmt: QFormat) -> Option<u32> {
+        match (fmt.int_bits, fmt.frac_bits) {
+            (3, 12) => Some(12),  // legacy QFormat::q16() (Q3.12)
+            (1, 14) => Some(14),  // serving q16 (Q2.14)
+            (7, 24) => Some(24),  // legacy QFormat::q32() (Q7.24)
+            (3, 28) => Some(28),  // serving q32 (Q4.28)
+            _ => None,
+        }
+    }
+
+    /// Whether steps run through the `qfx` fused fixed-point kernels
+    /// (exact-lattice formats) or the requantize-every-stage fallback.
+    pub fn uses_qfx_kernels(&self) -> bool {
+        Self::fixed_frac(self.fmt).is_some()
+    }
+
+    /// One sample through the fused fixed-point kernels — the identical
+    /// code path `q16`/`q32` tenants serve on. The casts in and out are
+    /// lossless (`B` lives on the lattice); the small per-step scratch
+    /// allocation is fine for this simulation/ablation path.
+    fn qfx_step<const F: u32>(&mut self, x: &[f64]) {
+        let (n, m) = self.b.shape();
+        let mut bq: Mat<Fixed<F>> = self.b.cast();
+        let xq: Vec<Fixed<F>> = x.iter().map(|&v| Fixed::<F>::from_f64(v)).collect();
+        let mut s = FusedScratch::<Fixed<F>>::new(n, m);
+        let mu = Fixed::<F>::from_f64(self.mu);
+        with_g!(Fixed<F>, self.g, gf => {
+            fused::relative_gradient_step_into(&mut bq, &xq, gf, mu, &mut s);
+        });
+        self.b = bq.cast();
+    }
+
+    /// One sample through the legacy model: every stage computed in f64,
+    /// its output requantized onto the format's lattice.
+    fn requantized_step(&mut self, x: &[f64]) {
         let fmt = self.fmt;
         // Input quantization (ADC).
         self.xq.copy_from_slice(x);
@@ -165,6 +235,18 @@ impl Optimizer for QuantizedEasi {
         self.h.matmul_into(&self.b, &mut self.hb);
         for (b, u) in self.b.as_mut_slice().iter_mut().zip(self.hb.as_slice()) {
             *b = fmt.quantize(*b - fmt.quantize(self.mu * *u));
+        }
+    }
+}
+
+impl Optimizer for QuantizedEasi {
+    fn step(&mut self, x: &[f64]) {
+        match Self::fixed_frac(self.fmt) {
+            Some(12) => self.qfx_step::<12>(x),
+            Some(14) => self.qfx_step::<14>(x),
+            Some(24) => self.qfx_step::<24>(x),
+            Some(28) => self.qfx_step::<28>(x),
+            _ => self.requantized_step(x),
         }
         self.samples += 1;
     }
@@ -202,9 +284,107 @@ mod tests {
 
     #[test]
     fn quantize_saturates() {
-        let fmt = QFormat::new(2, 4); // max ≈ 3.9375
+        // Two's-complement rails: the negative rail sits one LSB beyond
+        // the positive one (−4.0 vs 3.9375), exactly like `qfx::Fixed`.
+        let fmt = QFormat::new(2, 4);
+        assert_eq!(fmt.max_value(), 3.9375);
+        assert_eq!(fmt.min_value(), -4.0);
         assert_eq!(fmt.quantize(100.0), fmt.max_value());
-        assert_eq!(fmt.quantize(-100.0), -fmt.max_value());
+        assert_eq!(fmt.quantize(-100.0), fmt.min_value());
+    }
+
+    #[test]
+    fn quantize_rounds_ties_to_even() {
+        let fmt = QFormat::new(3, 4); // LSB = 1/16
+        // 1.5·lsb and 2.5·lsb both land on the even neighbour (2·lsb).
+        assert_eq!(fmt.quantize(0.09375), 0.125);
+        assert_eq!(fmt.quantize(0.15625), 0.125);
+        assert_eq!(fmt.quantize(-0.15625), -0.125);
+        // A 0.5·lsb tie goes down to zero (even), not away from it.
+        assert_eq!(fmt.quantize(0.03125), 0.0);
+        assert_eq!(fmt.quantize(-0.03125), 0.0);
+    }
+
+    #[test]
+    fn quantize_matches_fixed_lattice_exactly() {
+        // The satellite regression pin: QFormat::quantize is the same
+        // function as Fixed::from_f64 on every format Fixed instantiates.
+        // Dense sweep for the 16-bit lattices (steps of lsb/2 so every
+        // other sample is an exact tie; all dyadic, so the accumulation
+        // below is exact)…
+        fn sweep(fmt: QFormat, q: impl Fn(f64) -> f64) {
+            let lsb = fmt.lsb();
+            let mut v = fmt.min_value() - 3.0 * lsb;
+            let hi = fmt.max_value() + 3.0 * lsb;
+            while v <= hi {
+                assert_eq!(fmt.quantize(v), q(v), "fmt {fmt:?} v={v}");
+                v += lsb / 2.0;
+            }
+            assert_eq!(fmt.quantize(f64::NAN), q(f64::NAN));
+            assert_eq!(fmt.quantize(f64::INFINITY), q(f64::INFINITY));
+            assert_eq!(fmt.quantize(f64::NEG_INFINITY), q(f64::NEG_INFINITY));
+        }
+        sweep(QFormat::q16(), |v| Fixed::<12>::from_f64(v).to_f64());
+        sweep(QFormat::new(1, 14), |v| Fixed::<14>::from_f64(v).to_f64());
+        // …and targeted probes (ties, rails, interior) for the 32-bit
+        // lattices, where a dense sweep would take billions of steps.
+        fn probe(fmt: QFormat, q: impl Fn(f64) -> f64) {
+            let lsb = fmt.lsb();
+            for v in [
+                0.0,
+                1.5 * lsb,
+                2.5 * lsb,
+                -1.5 * lsb,
+                -2.5 * lsb,
+                0.3,
+                -1.7,
+                fmt.max_value(),
+                fmt.max_value() + lsb,
+                fmt.min_value(),
+                fmt.min_value() - lsb,
+                1e30,
+                -1e30,
+                f64::NAN,
+                f64::INFINITY,
+                f64::NEG_INFINITY,
+            ] {
+                assert_eq!(fmt.quantize(v), q(v), "fmt {fmt:?} v={v}");
+            }
+        }
+        probe(QFormat::q32(), |v| Fixed::<24>::from_f64(v).to_f64());
+        probe(QFormat::new(3, 28), |v| Fixed::<28>::from_f64(v).to_f64());
+        let _ = crate::qfx::take_saturation_events();
+    }
+
+    #[test]
+    fn exact_lattice_formats_run_the_qfx_kernels() {
+        // QFormat::q16() must route through the same fused fixed-point
+        // kernels the serving plane's q16 tenants run — pinned by stepping
+        // a manual Fixed<12> twin and requiring bit-identical B.
+        let ds = Dataset::standard(55, 4, 2, 500);
+        let mut q =
+            QuantizedEasi::with_identity_init(2, 4, 0.004, Nonlinearity::Cube, QFormat::q16());
+        assert!(q.uses_qfx_kernels());
+        assert!(!QuantizedEasi::with_identity_init(
+            2,
+            4,
+            0.004,
+            Nonlinearity::Cube,
+            QFormat::new(3, 4)
+        )
+        .uses_qfx_kernels());
+        let mut twin: Mat<Fixed<12>> = q.b().cast();
+        let mu = Fixed::<12>::from_f64(q.effective_mu());
+        let mut s = FusedScratch::<Fixed<12>>::new(2, 4);
+        for t in 0..ds.len() {
+            q.step(ds.sample(t));
+            let xq: Vec<Fixed<12>> =
+                ds.sample(t).iter().map(|&v| Fixed::<12>::from_f64(v)).collect();
+            fused::relative_gradient_step_into(&mut twin, &xq, |v| v * v * v, mu, &mut s);
+        }
+        let wide: Mat64 = twin.cast();
+        assert_eq!(q.b().as_slice(), wide.as_slice());
+        let _ = crate::qfx::take_saturation_events();
     }
 
     #[test]
@@ -309,6 +489,7 @@ mod tests {
             q.step(ds.sample(t));
         }
         let max = q.b().max_abs();
-        assert!(max <= fmt.max_value() + 1e-12, "saturation must bound B: {max}");
+        // The negative two's-complement rail has the larger magnitude.
+        assert!(max <= -fmt.min_value() + 1e-12, "saturation must bound B: {max}");
     }
 }

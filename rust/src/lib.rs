@@ -35,6 +35,7 @@ pub mod fpga;
 pub mod ica;
 pub mod linalg;
 pub mod perf;
+pub mod qfx;
 pub mod runtime;
 pub mod signal;
 pub mod snapshot;

@@ -42,6 +42,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "tracking" => cmd_tracking(args),
         "track" => cmd_track(args),
         "dump-datapath" => cmd_dump_datapath(args),
+        "fpga-report" => cmd_fpga_report(args),
         "separate" => cmd_separate(args),
         "bench" => cmd_bench(args),
         "help" | "" => {
@@ -514,6 +515,26 @@ fn cmd_dump_datapath(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fpga-report` — the machine-readable resource/timing/accuracy
+/// artifact: Table-I model numbers (float and fixed-point technologies),
+/// the Q-format calibration from an observed dynamic range, and the
+/// q16/q32 Amari accuracy against the f64 reference. CI schema-checks and
+/// uploads this file.
+fn cmd_fpga_report(args: &Args) -> Result<()> {
+    args.expect_only(&["m", "n", "g", "out"])?;
+    let m = args.get_usize("m", 4)?;
+    let n = args.get_usize("n", 2)?;
+    let g = Nonlinearity::parse(&args.get_str("g", "cube"))?;
+    let json = fpga::report_json(m, n, g);
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    } else {
+        print!("{json}");
+    }
+    Ok(())
+}
+
 /// `bench` — run the §Perf hot-path suite, write the machine-readable
 /// report, and optionally gate against a checked-in baseline (the CI
 /// `perf-smoke` job runs `bench --quick --check BENCH_baseline.json`).
@@ -521,7 +542,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     args.expect_only(&[
         "quick", "out", "check", "tolerance", "min-fused-speedup", "min-f32-speedup",
         "min-cohort-speedup", "max-adapt-overhead", "max-status-overhead",
-        "max-snapshot-overhead",
+        "max-snapshot-overhead", "max-qfx-overhead",
     ])?;
     let quick = args.switch("quick");
     let report = easi_ica::perf::run_hotpath_suite(quick);
@@ -541,6 +562,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         let adapt_ceiling = args.get_f64("max-adapt-overhead", 0.0)?;
         let status_ceiling = args.get_f64("max-status-overhead", 0.0)?;
         let snapshot_ceiling = args.get_f64("max-snapshot-overhead", 0.0)?;
+        let qfx_ceiling = args.get_f64("max-qfx-overhead", 0.0)?;
         let gate = easi_ica::perf::gate_against_file(
             &report,
             std::path::Path::new(baseline),
@@ -551,6 +573,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             adapt_ceiling,
             status_ceiling,
             snapshot_ceiling,
+            qfx_ceiling,
         )?;
         if gate.failures.is_empty() {
             println!(

@@ -545,6 +545,8 @@ pub fn run_hotpath_suite(quick: bool) -> BenchReport {
 
     cohort_suite(&mut rep, warmup, runs);
 
+    qfx_suite(&mut rep, warmup, runs, rows);
+
     coordinator_e2e(&mut rep, quick);
 
     println!();
@@ -820,7 +822,7 @@ fn lifecycle_overhead(rep: &mut BenchReport, warmup: usize, runs: usize, rows: u
     let cell = StatusCell::new(0, "bench");
     let publish = bench(warmup, runs, rows as u64, || {
         for t in 0..rows {
-            cell.publish_progress(t as u64, 0.1, 0, 0, 0, 3);
+            cell.publish_progress(t as u64, 0.1, 0, 0, 0, 3, 0);
         }
         black_box(cell.snapshot().samples);
     });
@@ -860,7 +862,7 @@ fn lifecycle_overhead(rep: &mut BenchReport, warmup: usize, runs: usize, rows: u
                 &mut s,
             );
             if t % 64 == 63 {
-                watched.publish_progress(t as u64, 0.1, 0, 0, 0, 2);
+                watched.publish_progress(t as u64, 0.1, 0, 0, 0, 2, 0);
             }
         }
         black_box(&b2);
@@ -1012,6 +1014,93 @@ fn cohort_suite(rep: &mut BenchReport, warmup: usize, runs: usize) {
     ));
 }
 
+/// The fixed-point Q-format datapath's software cost at the canonical
+/// gate shape (m=16, n=8): the fused gradient and fused step
+/// instantiated at `qfx::Q16` (Q2.14, the FPGA serving word) against an
+/// f64 reference on the identical workload. The derived
+/// `qfx_overhead_fraction` — (q16 step − f64 step) / f64 step — is what
+/// CI's `--max-qfx-overhead` flag gates: integer RNE/saturation
+/// emulation is expected to cost a small multiple of the native float
+/// step (it trades FMA hardware for shifts and branches), but it must
+/// stay bounded or q16 tenants would starve their f32/f64 shard
+/// neighbours. Like the speedup ratios, the fraction compares similar
+/// scalar loop code on one machine, so it is machine-stable.
+fn qfx_suite(rep: &mut BenchReport, warmup: usize, runs: usize, rows: usize) {
+    use crate::qfx::Q16;
+
+    let (m, n) = (16, 8);
+    let mut rng = Pcg32::seed(0x0F1);
+    // Bounded inputs (|x| ≤ 0.5) keep the trajectory's intermediates
+    // mostly inside the Q2.14 rails, so the measurement is dominated by
+    // the arithmetic itself rather than the saturation branch.
+    let xs = Mat64::from_fn(rows, m, |_, _| rng.uniform_in(-0.5, 0.5));
+    let iters = rows as u64;
+
+    // Reference: the bare f64 fused step on the identical workload
+    // (measured here rather than reusing the suite_shape record so the
+    // ratio is a same-section, same-inputs comparison).
+    let mut s = FusedScratch::new(n, m);
+    let mut b_ref = ica::init_b(n, m);
+    let step_ref = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            fused::relative_gradient_step_into(
+                &mut b_ref,
+                black_box(xs.row(t)),
+                |v| v * v * v,
+                BENCH_MU,
+                &mut s,
+            );
+        }
+        black_box(&b_ref);
+    });
+    push(rep, "fused step (qfx reference)", "qfx_step_ref", m, n, runs, &step_ref);
+
+    // The same fused kernels monomorphized at Q2.14 fixed point.
+    let xs_q = xs.cast::<Q16>();
+    let mu_q = Q16::from_f64(BENCH_MU);
+    let b_q = ica::init_b_t::<Q16>(n, m);
+    let mut s_q = FusedScratch::<Q16>::new(n, m);
+    let grad_q = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            fused::relative_gradient_into(
+                &b_q,
+                black_box(xs_q.row(t)),
+                |v: Q16| v * v * v,
+                &mut s_q.y,
+                &mut s_q.gy,
+                &mut s_q.h,
+            );
+        }
+        black_box(&s_q.h);
+    });
+    push(rep, "fused gradient q16", "qfx_grad", m, n, runs, &grad_q);
+
+    let mut b_q_step = ica::init_b_t::<Q16>(n, m);
+    let step_q = bench(warmup, runs, iters, || {
+        for t in 0..rows {
+            fused::relative_gradient_step_into(
+                &mut b_q_step,
+                black_box(xs_q.row(t)),
+                |v: Q16| v * v * v,
+                mu_q,
+                &mut s_q,
+            );
+        }
+        black_box(&b_q_step);
+    });
+    push(rep, "fused step q16", "qfx_step", m, n, runs, &step_q);
+
+    // Drain the thread-local saturation latch so a (harmless) clipped
+    // tail in the bench trajectory cannot leak into a later caller's
+    // divergence accounting.
+    let _ = crate::qfx::take_saturation_events();
+
+    rep.derived.push((
+        "qfx_overhead_fraction".to_string(),
+        ((step_q.per_iter_ns() - step_ref.per_iter_ns()) / step_ref.per_iter_ns()).max(0.0),
+    ));
+}
+
 fn push(
     rep: &mut BenchReport,
     what: &str,
@@ -1092,7 +1181,11 @@ pub struct GateReport {
 /// `max_status_overhead > 0` caps `status_overhead_fraction` (the live
 /// health plane's cost on the fused step) and `max_snapshot_overhead > 0`
 /// caps `snapshot_overhead_fraction` (the background snapshotter's
-/// serialization cost on the fused step).
+/// serialization cost on the fused step). `max_qfx_overhead > 0` caps
+/// `qfx_overhead_fraction` — the Q2.14 fixed-point fused step's cost
+/// over the f64 fused step; unlike the other ceilings this one is
+/// expected to sit well above zero (integer RNE/saturation emulation is
+/// a small multiple of native float), the gate only keeps it bounded.
 pub fn check_against_baseline(
     current: &BenchReport,
     baseline: &Json,
@@ -1103,6 +1196,7 @@ pub fn check_against_baseline(
     max_adapt_overhead: f64,
     max_status_overhead: f64,
     max_snapshot_overhead: f64,
+    max_qfx_overhead: f64,
 ) -> Result<GateReport> {
     let base_calib = baseline
         .get("calibration_ns_per_iter")
@@ -1174,6 +1268,7 @@ pub fn check_against_baseline(
     ceiling("adapt_overhead_fraction", max_adapt_overhead);
     ceiling("status_overhead_fraction", max_status_overhead);
     ceiling("snapshot_overhead_fraction", max_snapshot_overhead);
+    ceiling("qfx_overhead_fraction", max_qfx_overhead);
     Ok(gate)
 }
 
@@ -1188,6 +1283,7 @@ pub fn gate_against_file(
     max_adapt_overhead: f64,
     max_status_overhead: f64,
     max_snapshot_overhead: f64,
+    max_qfx_overhead: f64,
 ) -> Result<GateReport> {
     let text = std::fs::read_to_string(baseline_path)
         .with_context(|| format!("reading baseline {}", baseline_path.display()))?;
@@ -1203,6 +1299,7 @@ pub fn gate_against_file(
         max_adapt_overhead,
         max_status_overhead,
         max_snapshot_overhead,
+        max_qfx_overhead,
     )
 }
 
@@ -1247,6 +1344,7 @@ mod tests {
                 ("adapt_overhead_fraction".to_string(), 0.05),
                 ("status_overhead_fraction".to_string(), 0.01),
                 ("snapshot_overhead_fraction".to_string(), 0.02),
+                ("qfx_overhead_fraction".to_string(), 2.5),
             ],
         }
     }
@@ -1299,7 +1397,7 @@ mod tests {
     fn gate_passes_identical_report() {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 1.5, 1.5, 1.5, 0.10, 0.05, 0.05).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 1.5, 1.5, 1.5, 0.10, 0.05, 0.05, 0.0).unwrap();
         assert_eq!(gate.checked, 1, "only the gated record is compared");
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
@@ -1314,7 +1412,7 @@ mod tests {
         for r in &mut slower.records {
             r.ns_per_iter *= 3.0;
         }
-        let gate = check_against_baseline(&slower, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&slower, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 
@@ -1325,13 +1423,13 @@ mod tests {
 
         let mut regressed = rep.clone();
         regressed.records[0].ns_per_iter *= 1.5; // 50% > 30% tolerance
-        let gate = check_against_baseline(&regressed, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&regressed, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("regressed"));
 
         let mut missing = rep.clone();
         missing.records.remove(0);
-        let gate = check_against_baseline(&missing, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&missing, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1340,7 +1438,7 @@ mod tests {
     fn gate_enforces_fused_speedup_floor() {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 2.5, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 2.5, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("fused_step_speedup"));
     }
@@ -1352,16 +1450,16 @@ mod tests {
         // missing the derived value fails when the ceiling is requested.
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.10, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.10, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.01, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.01, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("adapt_overhead_fraction"));
         let mut bare = rep.clone();
         bare.derived.retain(|(k, _)| k != "adapt_overhead_fraction");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.10, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.10, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1373,17 +1471,17 @@ mod tests {
         // a report missing the derived value fails when requested.
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.05, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.05, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
         let gate =
-            check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.001, 0.0).unwrap();
+            check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.001, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("status_overhead_fraction"));
         let mut bare = rep.clone();
         bare.derived.retain(|(k, _)| k != "status_overhead_fraction");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.05, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.05, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1395,16 +1493,38 @@ mod tests {
         // a report missing the derived value fails when requested.
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.05).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.05, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.01).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.01, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("snapshot_overhead_fraction"));
         let mut bare = rep.clone();
         bare.derived.retain(|(k, _)| k != "snapshot_overhead_fraction");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
-        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.05).unwrap();
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.05, 0.0).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("missing"));
+    }
+
+    #[test]
+    fn gate_enforces_qfx_overhead_ceiling() {
+        // tiny_report carries qfx_overhead_fraction = 2.5 (the q16 step
+        // is expected to cost a small multiple of the f64 step): a 6x
+        // ceiling passes, a 1x ceiling fails, 0 disables the check, and
+        // a report missing the derived value fails when requested.
+        let rep = tiny_report();
+        let baseline = Json::parse(&rep.to_json()).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 6.0).unwrap();
+        assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0).unwrap();
+        assert_eq!(gate.failures.len(), 1);
+        assert!(gate.failures[0].contains("qfx_overhead_fraction"));
+        let mut bare = rep.clone();
+        bare.derived.retain(|(k, _)| k != "qfx_overhead_fraction");
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        assert!(gate.failures.is_empty(), "ceiling 0 disables the check");
+        let gate = check_against_baseline(&bare, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 6.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("missing"));
     }
@@ -1416,7 +1536,7 @@ mod tests {
         let baseline = Json::parse(&rep.to_json()).unwrap();
         let mut noisy = rep.clone();
         noisy.records[1].ns_per_iter *= 100.0;
-        let gate = check_against_baseline(&noisy, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&noisy, &baseline, 0.30, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty());
     }
 
@@ -1443,6 +1563,7 @@ mod tests {
                 ("adapt_overhead_fraction".to_string(), 0.05),
                 ("status_overhead_fraction".to_string(), 0.01),
                 ("snapshot_overhead_fraction".to_string(), 0.02),
+                ("qfx_overhead_fraction".to_string(), 2.5),
             ],
         };
         let mut f32_gated = 0usize;
@@ -1450,6 +1571,7 @@ mod tests {
         let mut lifecycle_gated = 0usize;
         let mut cohort_gated = 0usize;
         let mut snapshot_gated = 0usize;
+        let mut qfx_gated = 0usize;
         for rec in baseline.get("records").and_then(Json::as_array).unwrap() {
             let gated = rec.get("gated").and_then(Json::as_bool).unwrap();
             let kernel = rec.get("kernel").and_then(Json::as_str).unwrap().to_string();
@@ -1482,6 +1604,9 @@ mod tests {
             if gated && kernel.starts_with("snapshot_") {
                 snapshot_gated += 1;
             }
+            if gated && kernel.starts_with("qfx_") {
+                qfx_gated += 1;
+            }
             current.records.push(BenchRecord {
                 name: rec.get("name").and_then(Json::as_str).unwrap().to_string(),
                 kernel,
@@ -1510,7 +1635,10 @@ mod tests {
         // …and the background snapshotter's records (reference fused step
         // + the step with in-band state serialization).
         assert!(snapshot_gated >= 2, "only {snapshot_gated} gated snapshot records");
-        let gate = check_against_baseline(&current, &baseline, 0.30, 1.5, 1.2, 1.2, 0.10, 0.05, 0.05).unwrap();
+        // …and the fixed-point Q-format records (reference f64 step, q16
+        // gradient, q16 step).
+        assert!(qfx_gated >= 3, "only {qfx_gated} gated qfx records");
+        let gate = check_against_baseline(&current, &baseline, 0.30, 1.5, 1.2, 1.2, 0.10, 0.05, 0.05, 6.0).unwrap();
         assert!(gate.checked > 0);
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
@@ -1520,10 +1648,10 @@ mod tests {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
         // tiny_report carries cohort_over_solo_speedup = 1.8.
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 2.5, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 2.5, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("cohort_over_solo_speedup"));
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 1.2, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 0.0, 1.2, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 
@@ -1532,10 +1660,10 @@ mod tests {
         let rep = tiny_report();
         let baseline = Json::parse(&rep.to_json()).unwrap();
         // tiny_report carries f32_over_f64_step_speedup = 1.6.
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 2.5, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 2.5, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert_eq!(gate.failures.len(), 1);
         assert!(gate.failures[0].contains("f32_over_f64_step_speedup"));
-        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 1.2, 0.0, 0.0, 0.0, 0.0).unwrap();
+        let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 1.2, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
     }
 }

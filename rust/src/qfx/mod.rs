@@ -1,0 +1,614 @@
+//! Fixed-point Q-format datapath scalars (the paper's predecessor-work
+//! number format, servable as a first-class tenant precision).
+//!
+//! The paper argues for 32-bit floating point *against* the 16-bit fixed
+//! point of prior implementations ([12]); this module makes that trade
+//! runnable instead of merely modeled: [`Fixed<FRAC>`] is a signed
+//! Q-format scalar implementing [`linalg::Scalar`](crate::linalg::Scalar),
+//! so every precision-generic layer — the fused kernels
+//! (`linalg::fused`), the optimizers, the chunker, and the serving
+//! plane's `CastNativeEngine` — instantiates at fixed point unchanged.
+//! `precision = "q16"` tenants run beside `f32`/`f64` tenants in one hub.
+//!
+//! ## Format
+//!
+//! `Fixed<FRAC>` stores a two's-complement integer `raw` representing the
+//! value `raw / 2^FRAC`. The word length is derived from the fraction
+//! width — `FRAC ≤ 14` is a 16-bit word, otherwise 32-bit — which covers
+//! both the serving formats (Q2.14 for `q16`, Q4.28 for `q32`, integer
+//! bits counted inclusive of sign) and the legacy `ica::quant` formats
+//! (Q3.12 / Q7.24, sign counted separately): `Fixed<12>` *is* the old
+//! `QFormat::q16()` lattice, `Fixed<24>` the old `QFormat::q32()`.
+//!
+//! ## Rounding and saturation semantics (the hardware contract)
+//!
+//! - **Round to nearest, ties to even**, symmetric in sign: quantization
+//!   from `f64` and the product shift in `mul`/`mul_add` both use the
+//!   same RNE rule, so `(-a) * b == -(a * b)` bit-for-bit.
+//! - **Saturate, never wrap**: results clamp to the two's-complement
+//!   rails `[-2^(W-1), 2^(W-1)-1] · 2^-FRAC`. Non-finite inputs quantize
+//!   to the rail (±∞) or to zero (NaN).
+//! - **Addition is exact** while in range — integer addition — which is
+//!   what makes the software kernels bit-identical to the FPGA model's
+//!   adder trees regardless of summation order (`fpga::exec`).
+//! - Every saturation (and non-finite quantization) increments a
+//!   thread-local **saturation latch**; the serving plane reads it per
+//!   chunk ([`take_saturation_events`]) as the fixed-point replacement
+//!   for the non-finite divergence guard (a Q-format value is always
+//!   finite, so `is_finite()` can never trip).
+//!
+//! `tanh` deliberately implements the *datapath's* piecewise segment
+//! (`fpga::datapath::Datapath::nonlinearity`): a range-reduction clamp to
+//! `[-1, 1]` followed by four `acc ← c·acc² + y` iterations with
+//! `c =`[`TANH_C`]. That is the block the pipeline simulator executes, so
+//! software and hardware model agree bit-for-bit; it is an area-honest
+//! hardware approximation, not a libm-accurate tanh.
+
+use crate::linalg::Scalar;
+use std::cell::Cell;
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// The serving `q16` format: 16-bit word, Q2.14 (range `[-2, 2)`,
+/// lsb `2^-14`).
+pub type Q16 = Fixed<14>;
+/// The serving `q32` format: 32-bit word, Q4.28 (range `[-8, 8)`,
+/// lsb `2^-28`).
+pub type Q32 = Fixed<28>;
+
+/// The datapath tanh segment coefficient (`ConstMul("tanh_c")` in the
+/// `fpga::datapath` graphs). Exactly representable in every format here.
+pub const TANH_C: f64 = -0.25;
+
+thread_local! {
+    static SAT_EVENTS: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn note_sat() {
+    SAT_EVENTS.with(|c| c.set(c.get().saturating_add(1)));
+}
+
+/// Saturation events recorded on this thread since the last
+/// [`take_saturation_events`].
+pub fn saturation_events() -> u64 {
+    SAT_EVENTS.with(Cell::get)
+}
+
+/// Read **and reset** this thread's saturation-latch counter. The serving
+/// plane calls this around each chunk it steps, so events attribute to
+/// the tenant whose kernels produced them even when tenants share a
+/// worker thread.
+pub fn take_saturation_events() -> u64 {
+    SAT_EVENTS.with(|c| c.replace(0))
+}
+
+/// Round to nearest, ties to even. Exact for `|x| < 2^52` (always the
+/// case here: callers clamp to ≤ 32-bit rails right after). Callers
+/// guarantee `x` is finite, so `partial_cmp` never sees NaN.
+#[inline]
+fn rne(x: f64) -> f64 {
+    let f = x.floor();
+    let d = x - f; // exact for |x| < 2^52
+    match d.partial_cmp(&0.5) {
+        Some(std::cmp::Ordering::Less) => f,
+        Some(std::cmp::Ordering::Greater) => f + 1.0,
+        // Exact tie: keep the even integer neighbour.
+        _ => {
+            if f % 2.0 == 0.0 {
+                f
+            } else {
+                f + 1.0
+            }
+        }
+    }
+}
+
+/// Shift an `i128` fixed-point product right by `frac` bits, rounding to
+/// nearest ties-to-even **on the magnitude** (symmetric in sign, matching
+/// [`rne`] applied to the real quotient).
+#[inline]
+fn rne_shift(p: i128, frac: u32) -> i128 {
+    debug_assert!(frac >= 1);
+    let neg = p < 0;
+    let a = p.unsigned_abs();
+    let q = a >> frac;
+    let rem = a & ((1u128 << frac) - 1);
+    let half = 1u128 << (frac - 1);
+    let q = if rem > half || (rem == half && (q & 1) == 1) { q + 1 } else { q };
+    let v = q as i128;
+    if neg {
+        -v
+    } else {
+        v
+    }
+}
+
+/// Signed Q-format fixed-point scalar; value = `raw · 2^-FRAC`.
+///
+/// See the module docs for the word-length rule, rounding and saturation
+/// semantics. `Ord`/`PartialOrd` follow `raw`, which orders by value.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default, Hash)]
+pub struct Fixed<const FRAC: u32> {
+    raw: i64,
+}
+
+impl<const FRAC: u32> Fixed<FRAC> {
+    /// Word length in bits: 16 for `FRAC ≤ 14`, 32 otherwise.
+    pub const WORD_BITS: u32 = {
+        assert!(FRAC >= 1 && FRAC <= 30, "Fixed supports 1 <= FRAC <= 30");
+        if FRAC <= 14 {
+            16
+        } else {
+            32
+        }
+    };
+    /// Integer bits excluding sign (the legacy `QFormat` convention).
+    pub const INT_BITS: u32 = Self::WORD_BITS - 1 - FRAC;
+    /// Largest representable raw value (`2^(W-1) − 1`).
+    pub const MAX_RAW: i64 = (1i64 << (Self::WORD_BITS - 1)) - 1;
+    /// Smallest representable raw value (`−2^(W-1)`).
+    pub const MIN_RAW: i64 = -(1i64 << (Self::WORD_BITS - 1));
+
+    /// The positive saturation rail.
+    pub fn max_value() -> Self {
+        Self { raw: Self::MAX_RAW }
+    }
+
+    /// The negative saturation rail.
+    pub fn min_value() -> Self {
+        Self { raw: Self::MIN_RAW }
+    }
+
+    /// One least-significant bit, `2^-FRAC`.
+    pub fn lsb() -> Self {
+        Self { raw: 1 }
+    }
+
+    /// The raw two's-complement integer (value × `2^FRAC`).
+    pub fn raw(self) -> i64 {
+        self.raw
+    }
+
+    /// Build from a raw integer, saturating (and latching) out-of-range
+    /// values.
+    pub fn from_raw(raw: i64) -> Self {
+        Self { raw: Self::sat_raw(raw as i128) }
+    }
+
+    #[inline]
+    fn sat_raw(wide: i128) -> i64 {
+        if wide > Self::MAX_RAW as i128 {
+            note_sat();
+            Self::MAX_RAW
+        } else if wide < Self::MIN_RAW as i128 {
+            note_sat();
+            Self::MIN_RAW
+        } else {
+            wide as i64
+        }
+    }
+
+    /// Quantize an `f64`: round to nearest even, saturate at the rails.
+    /// NaN quantizes to zero; non-finite and out-of-range inputs latch a
+    /// saturation event (this is the fixed-point tenant's replacement for
+    /// the serving plane's non-finite divergence guard).
+    pub fn from_f64(v: f64) -> Self {
+        if v.is_nan() {
+            note_sat();
+            return Self { raw: 0 };
+        }
+        let scaled = v * (1u64 << FRAC) as f64;
+        if !scaled.is_finite() || scaled.abs() >= 9.0e15 {
+            // ±∞ or astronomically out of range: straight to the rail.
+            note_sat();
+            return if v > 0.0 { Self::max_value() } else { Self::min_value() };
+        }
+        let r = rne(scaled);
+        Self { raw: Self::sat_raw(r as i128) }
+    }
+
+    /// Exact widening to `f64` (every representable value is a dyadic
+    /// rational well inside `f64`'s 53-bit significand — this is what
+    /// makes EASISNAP round trips bit-identical).
+    pub fn to_f64(self) -> f64 {
+        self.raw as f64 / (1u64 << FRAC) as f64
+    }
+
+    /// The datapath tanh range-reduction (`Special("range_reduce")`):
+    /// clamp to `[-1, 1]`. A defined reduction, not an overflow — it does
+    /// not latch a saturation event.
+    pub fn tanh_range_reduce(self) -> Self {
+        let one = 1i64 << FRAC;
+        Self { raw: self.raw.clamp(-one, one) }
+    }
+}
+
+impl<const FRAC: u32> Add for Fixed<FRAC> {
+    type Output = Self;
+    #[inline]
+    fn add(self, rhs: Self) -> Self {
+        Self { raw: Self::sat_raw(self.raw as i128 + rhs.raw as i128) }
+    }
+}
+
+impl<const FRAC: u32> Sub for Fixed<FRAC> {
+    type Output = Self;
+    #[inline]
+    fn sub(self, rhs: Self) -> Self {
+        Self { raw: Self::sat_raw(self.raw as i128 - rhs.raw as i128) }
+    }
+}
+
+impl<const FRAC: u32> Mul for Fixed<FRAC> {
+    type Output = Self;
+    #[inline]
+    fn mul(self, rhs: Self) -> Self {
+        let p = self.raw as i128 * rhs.raw as i128;
+        Self { raw: Self::sat_raw(rne_shift(p, FRAC)) }
+    }
+}
+
+impl<const FRAC: u32> Div for Fixed<FRAC> {
+    type Output = Self;
+    #[inline]
+    fn div(self, rhs: Self) -> Self {
+        // Off the hot path (the fused kernels are division-free). The f64
+        // quotient of two exactly-representable operands is correctly
+        // rounded, then RNE-quantized — deterministic on every target.
+        Self::from_f64(self.to_f64() / rhs.to_f64())
+    }
+}
+
+impl<const FRAC: u32> Neg for Fixed<FRAC> {
+    type Output = Self;
+    #[inline]
+    fn neg(self) -> Self {
+        Self { raw: Self::sat_raw(-(self.raw as i128)) }
+    }
+}
+
+impl<const FRAC: u32> AddAssign for Fixed<FRAC> {
+    fn add_assign(&mut self, rhs: Self) {
+        *self = *self + rhs;
+    }
+}
+impl<const FRAC: u32> SubAssign for Fixed<FRAC> {
+    fn sub_assign(&mut self, rhs: Self) {
+        *self = *self - rhs;
+    }
+}
+impl<const FRAC: u32> MulAssign for Fixed<FRAC> {
+    fn mul_assign(&mut self, rhs: Self) {
+        *self = *self * rhs;
+    }
+}
+impl<const FRAC: u32> DivAssign for Fixed<FRAC> {
+    fn div_assign(&mut self, rhs: Self) {
+        *self = *self / rhs;
+    }
+}
+
+impl<const FRAC: u32> Sum for Fixed<FRAC> {
+    fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+        iter.fold(Self::zero(), |acc, v| acc + v)
+    }
+}
+
+impl<const FRAC: u32> fmt::Display for Fixed<FRAC> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_f64())
+    }
+}
+
+impl<const FRAC: u32> fmt::Debug for Fixed<FRAC> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Q{}.{}({})", Self::INT_BITS + 1, FRAC, self.to_f64())
+    }
+}
+
+impl<const FRAC: u32> Scalar for Fixed<FRAC> {
+    #[inline(always)]
+    fn zero() -> Self {
+        Self { raw: 0 }
+    }
+    #[inline(always)]
+    fn one() -> Self {
+        Self { raw: 1i64 << FRAC }
+    }
+    #[inline(always)]
+    fn abs(self) -> Self {
+        if self.raw < 0 {
+            -self
+        } else {
+            self
+        }
+    }
+    fn sqrt(self) -> Self {
+        // Off the hot path (metrics run in f64); sqrt of a negative is a
+        // NaN upstream, which quantizes to zero with a latched event.
+        Self::from_f64(self.to_f64().sqrt())
+    }
+    fn tanh(self) -> Self {
+        // The datapath's piecewise tanh segment, op-for-op the graph
+        // `fpga::datapath::Datapath::nonlinearity` builds:
+        //   acc = range_reduce(y); 4 × { acc = tanh_c·acc² + y }
+        // so `fpga::exec` reproduces this bit-for-bit.
+        let c = Self::from_f64(TANH_C);
+        let mut acc = self.tanh_range_reduce();
+        for _ in 0..4 {
+            acc = c * (acc * acc) + self;
+        }
+        acc
+    }
+    #[inline]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        // True fused multiply-add: the full-precision product and the
+        // shifted addend combine before the single RNE shift.
+        let p = self.raw as i128 * a.raw as i128 + ((b.raw as i128) << FRAC);
+        Self { raw: Self::sat_raw(rne_shift(p, FRAC)) }
+    }
+    #[inline(always)]
+    fn max(self, other: Self) -> Self {
+        if self.raw >= other.raw {
+            self
+        } else {
+            other
+        }
+    }
+    #[inline(always)]
+    fn is_finite(self) -> bool {
+        // Every Q-format value is finite; divergence surveillance for
+        // fixed-point tenants runs on the saturation latch instead.
+        true
+    }
+    #[inline(always)]
+    fn scalar_from_f64(v: f64) -> Self {
+        Self::from_f64(v)
+    }
+    #[inline(always)]
+    fn scalar_to_f64(self) -> f64 {
+        self.to_f64()
+    }
+    #[inline(always)]
+    fn type_name() -> &'static str {
+        if Self::WORD_BITS == 16 {
+            "q16"
+        } else {
+            "q32"
+        }
+    }
+}
+
+/// Quantize `v` onto an arbitrary runtime lattice (`frac_bits` fractional
+/// bits, raw range `[min_raw, max_raw]`) with exactly the [`Fixed`]
+/// semantics: RNE rounding, rail saturation, NaN → 0. This is the single
+/// rounding routine shared with `ica::quant::QFormat`, pinned equal to
+/// the const-generic path by `quant`'s regression tests.
+pub fn quantize_rne(v: f64, frac_bits: u32, min_raw: i64, max_raw: i64) -> f64 {
+    if v.is_nan() {
+        return 0.0;
+    }
+    let scale = (1u64 << frac_bits) as f64;
+    let scaled = v * scale;
+    let raw = if !scaled.is_finite() || scaled.abs() >= 9.0e15 {
+        if v > 0.0 {
+            max_raw
+        } else {
+            min_raw
+        }
+    } else {
+        let r = rne(scaled);
+        if r > max_raw as f64 {
+            max_raw
+        } else if r < min_raw as f64 {
+            min_raw
+        } else {
+            r as i64
+        }
+    };
+    raw as f64 / scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn format_constants() {
+        assert_eq!(Q16::WORD_BITS, 16);
+        assert_eq!(Q16::INT_BITS, 1); // Q2.14: sign + 1 int + 14 frac
+        assert_eq!(Q32::WORD_BITS, 32);
+        assert_eq!(Q32::INT_BITS, 3); // Q4.28
+        assert_eq!(Fixed::<12>::INT_BITS, 3); // legacy QFormat::q16()
+        assert_eq!(Fixed::<24>::INT_BITS, 7); // legacy QFormat::q32()
+        assert_eq!(Q16::max_value().to_f64(), (32767.0) / 16384.0);
+        assert_eq!(Q16::min_value().to_f64(), -2.0);
+        assert_eq!(Q16::lsb().to_f64(), 1.0 / 16384.0);
+    }
+
+    #[test]
+    fn round_trip_is_exact_on_lattice() {
+        // Every representable value survives f64 round trips bit-for-bit
+        // (the EASISNAP detach/restore contract).
+        for raw in [-32768i64, -32767, -1, 0, 1, 12345, 32767] {
+            let v = Q16::from_raw(raw);
+            assert_eq!(Q16::from_f64(v.to_f64()), v);
+        }
+        let _ = take_saturation_events();
+    }
+
+    #[test]
+    fn rne_rounds_ties_to_even() {
+        // Half-lsb ties go to the even raw neighbour, both signs.
+        let lsb = Q16::lsb().to_f64();
+        assert_eq!(Q16::from_f64(1.5 * lsb).raw(), 2);
+        assert_eq!(Q16::from_f64(2.5 * lsb).raw(), 2);
+        assert_eq!(Q16::from_f64(-1.5 * lsb).raw(), -2);
+        assert_eq!(Q16::from_f64(-2.5 * lsb).raw(), -2);
+        assert_eq!(Q16::from_f64(0.5 * lsb).raw(), 0);
+        assert_eq!(Q16::from_f64(-0.5 * lsb).raw(), 0);
+        // Non-ties round to nearest.
+        assert_eq!(Q16::from_f64(1.4 * lsb).raw(), 1);
+        assert_eq!(Q16::from_f64(1.6 * lsb).raw(), 2);
+    }
+
+    #[test]
+    fn negative_zero_normalizes() {
+        let z = Q16::from_f64(-0.0);
+        assert_eq!(z.raw(), 0);
+        assert_eq!(z, Q16::zero());
+        assert_eq!((-Q16::zero()).raw(), 0);
+        assert_eq!(z.to_f64().to_bits(), 0.0f64.to_bits(), "+0.0 comes back");
+    }
+
+    #[test]
+    fn saturation_at_both_rails_latches() {
+        let _ = take_saturation_events();
+        assert_eq!(Q16::from_f64(7.0), Q16::max_value());
+        assert_eq!(Q16::from_f64(-7.0), Q16::min_value());
+        assert_eq!(Q16::from_f64(f64::INFINITY), Q16::max_value());
+        assert_eq!(Q16::from_f64(f64::NEG_INFINITY), Q16::min_value());
+        assert_eq!(Q16::from_f64(f64::NAN), Q16::zero());
+        assert_eq!(take_saturation_events(), 5);
+        // Arithmetic saturates too, both rails.
+        let big = Q16::from_f64(1.9);
+        assert_eq!(big + big, Q16::max_value());
+        assert_eq!(-big - big, Q16::min_value());
+        assert_eq!(big * big, Q16::max_value());
+        assert_eq!((-big) * big, Q16::min_value());
+        assert_eq!(take_saturation_events(), 4);
+        // In-range arithmetic latches nothing.
+        let a = Q16::from_f64(0.5);
+        let _ = a + a - a * a;
+        assert_eq!(take_saturation_events(), 0);
+    }
+
+    #[test]
+    fn negation_of_min_saturates() {
+        let _ = take_saturation_events();
+        assert_eq!(-Q16::min_value(), Q16::max_value());
+        assert_eq!(Q16::min_value().abs(), Q16::max_value());
+        assert_eq!(take_saturation_events(), 2);
+    }
+
+    #[test]
+    fn mul_rounding_is_symmetric() {
+        // (-a)·b == -(a·b) bit-for-bit: the RNE shift acts on magnitude.
+        for (ar, br) in [(3, 5), (7, 9), (12345, 777), (1, 1), (16383, 3)] {
+            let a = Q16::from_raw(ar);
+            let b = Q16::from_raw(br);
+            assert_eq!(((-a) * b).raw(), -(a * b).raw(), "a={ar} b={br}");
+            assert_eq!((a * (-b)).raw(), -(a * b).raw(), "a={ar} b={br}");
+        }
+    }
+
+    #[test]
+    fn mul_shift_rounds_ties_to_even() {
+        // raw product with remainder exactly half: 1·(1<<13) over FRAC=14
+        // leaves q=0 rem=half → stays 0 (even); 3·(1<<13) → q=1 rem=half
+        // → rounds up to 2.
+        let a = Q16::from_raw(1);
+        let h = Q16::from_raw(1 << 13);
+        assert_eq!((a * h).raw(), 0);
+        let c = Q16::from_raw(3);
+        assert_eq!((c * h).raw(), 2);
+    }
+
+    #[test]
+    fn addition_is_exact_and_associative_in_range() {
+        // Integer addition: any summation order gives identical bits while
+        // in range — the property the adder-tree parity rests on.
+        let vals: Vec<Q16> =
+            [0.125, -0.5, 0.75, 0.0625, -0.25, 0.375].iter().map(|&v| Q16::from_f64(v)).collect();
+        let fwd: Q16 = vals.iter().copied().sum();
+        let rev: Q16 = vals.iter().rev().copied().sum();
+        let mut tree = vals.clone();
+        while tree.len() > 1 {
+            tree = tree.chunks(2).map(|c| if c.len() == 2 { c[0] + c[1] } else { c[0] }).collect();
+        }
+        assert_eq!(fwd, rev);
+        assert_eq!(fwd, tree[0]);
+    }
+
+    #[test]
+    fn mul_add_single_rounding_differs_from_two() {
+        // mul_add must round once: find a case where round(round(a·b)+c)
+        // differs, proving it is a genuine FMA (and the reason the
+        // bitwise datapath parity pins only the non-fma build).
+        let a = Q16::from_raw(129);
+        let b = Q16::from_raw(129);
+        let c = Q16::from_raw(1);
+        let fused = a.mul_add(b, c);
+        let unfused = a * b + c;
+        // 129² = 16641 = 1.0157·2^14: product rem 257/16384 rounds to 1;
+        // fused keeps the 257 and adds 2^14 before the single shift.
+        assert_eq!(unfused.raw(), 2);
+        assert_eq!(fused.raw(), 2); // same here…
+        // …but a genuine divergence case: rem exactly half after adding c.
+        let a = Q16::from_raw(1);
+        let b = Q16::from_raw(1 << 13); // a·b rem = half → RNE to 0
+        let c = Q16::lsb();
+        assert_eq!((a * b + c).raw(), 1);
+        assert_eq!(a.mul_add(b, c).raw(), 2); // half + 1 lsb → rounds up past
+    }
+
+    #[test]
+    fn sum_matches_sequential_fold() {
+        let vals: Vec<Q16> = (0..50).map(|i| Q16::from_raw(i * 37 - 600)).collect();
+        let s: Q16 = vals.iter().copied().sum();
+        let mut acc = Q16::zero();
+        for v in &vals {
+            acc += *v;
+        }
+        assert_eq!(s, acc);
+    }
+
+    #[test]
+    fn tanh_matches_datapath_recurrence() {
+        // The Scalar::tanh impl must be op-for-op the datapath segment.
+        for v in [-1.5, -0.8, -0.1, 0.0, 0.3, 0.9, 1.7] {
+            let y = Q16::from_f64(v);
+            let c = Q16::from_f64(TANH_C);
+            let mut acc = y.tanh_range_reduce();
+            for _ in 0..4 {
+                let sq = acc * acc;
+                let cm = c * sq;
+                acc = cm + y;
+            }
+            assert_eq!(Scalar::tanh(y), acc, "v={v}");
+        }
+    }
+
+    #[test]
+    fn ordering_follows_value() {
+        assert!(Q16::from_f64(-1.0) < Q16::from_f64(-0.5));
+        assert!(Q16::from_f64(0.25) < Q16::from_f64(0.5));
+        assert_eq!(Q16::from_f64(0.5).max(Q16::from_f64(-1.0)), Q16::from_f64(0.5));
+    }
+
+    #[test]
+    fn mat_cast_round_trips_through_f64() {
+        // Mat::cast goes through scalar_to_f64/scalar_from_f64 — the
+        // CastNativeEngine wire path — and must be lossless for Fixed.
+        let m = Mat::<Q16>::from_fn(3, 4, |i, j| Q16::from_raw((i * 7 + j * 131) as i64 - 200));
+        let wide: Mat<f64> = m.cast();
+        let back: Mat<Q16> = wide.cast();
+        assert_eq!(m.as_slice(), back.as_slice());
+        let _ = take_saturation_events();
+    }
+
+    #[test]
+    fn quantize_rne_matches_fixed_lattice() {
+        // The runtime quantizer and the const-generic type agree exactly.
+        let mut v = -2.5;
+        while v < 2.5 {
+            let got = quantize_rne(v, 14, Q16::MIN_RAW, Q16::MAX_RAW);
+            assert_eq!(got, Q16::from_f64(v).to_f64(), "v={v}");
+            v += 0.000030517578125; // 2^-15 = lsb/2: every other value an exact tie
+        }
+        let _ = take_saturation_events();
+    }
+}

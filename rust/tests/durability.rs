@@ -4,8 +4,8 @@
 //! - **Bit-identical restarts**: a tenant detached to disk mid-stream and
 //!   restored into a *fresh* hub (a simulated process restart) finishes
 //!   with exactly the trajectory an uninterrupted run produces — across
-//!   f32 and f64 engines and for cohort-pooled (same-shape EASI-SGD)
-//!   tenants.
+//!   f32, f64 and fixed-point q16 engines and for cohort-pooled
+//!   (same-shape EASI-SGD) tenants.
 //! - **Corruption safety**: truncated, bit-flipped, mis-versioned or
 //!   missing snapshot files are rejected with descriptive errors — the
 //!   serving plane must never panic on a bad file.
@@ -48,9 +48,11 @@ fn wait_for_progress(h: &SessionHandle) {
 
 #[test]
 fn detach_to_disk_round_trips_f32_f64_and_cohort_tenants() {
-    // Four tenants: one single-precision, one double-precision, and a
-    // same-shape EASI-SGD pair that the worker pools tenant-major on the
-    // single shard — the cohort path must survive the restart too.
+    // Five tenants: one single-precision, one double-precision, one
+    // fixed-point q16 (its EASISNAP payload carries Q2.14-lattice state
+    // that must survive the f64 wire format exactly), and a same-shape
+    // EASI-SGD pair that the worker pools tenant-major on the single
+    // shard — the cohort path must survive the restart too.
     // 200k samples keeps every tenant mid-stream long enough to park it;
     // the count is divisible by the chunk size, so `samples` drains to
     // the exact total and summaries compare field-for-field.
@@ -59,6 +61,9 @@ fn detach_to_disk_round_trips_f32_f64_and_cohort_tenants() {
     f32_cfg.precision = Precision::F32;
     cfgs.push(f32_cfg);
     cfgs.push(cfg(42, 200_000)); // f64 default
+    let mut q16_cfg = cfg(45, 200_000);
+    q16_cfg.precision = Precision::Q16;
+    cfgs.push(q16_cfg);
     for seed in [43, 44] {
         let mut c = cfg(seed, 200_000);
         c.optimizer.kind = OptimizerKind::Sgd; // cohort-eligible pair
@@ -124,6 +129,20 @@ fn detach_to_disk_round_trips_f32_f64_and_cohort_tenants() {
         assert_eq!(g.summary.drift_events, w.summary.drift_events, "{ctx}: drift_events");
         assert_eq!(g.summary.rollbacks, w.summary.rollbacks, "{ctx}: rollbacks");
         assert_eq!(g.summary.amari_history, w.summary.amari_history, "{ctx}: amari trajectory");
+        if cfgs[g.id].precision == Precision::Q16 {
+            assert!(
+                g.summary.engine.starts_with("native-q16/"),
+                "{ctx}: wrong engine {}",
+                g.summary.engine
+            );
+            // The restored separator is still resident on the Q2.14
+            // lattice — the snapshot round trip did not widen it.
+            assert_eq!(
+                g.summary.b,
+                g.summary.b.cast::<easi_ica::qfx::Q16>().cast::<f64>(),
+                "{ctx}: not q16-resident after restore"
+            );
+        }
     }
 
     let _ = fs::remove_dir_all(&dir);

@@ -149,6 +149,7 @@ fn hub_mixes_f32_and_f64_sessions_in_one_run() {
                 "session {i}: wrong engine {}",
                 s.engine
             ),
+            other => panic!("test only attaches f32/f64 tenants, got {}", other.name()),
         }
         assert_eq!(s.b, solo_b(&cfgs[i]), "session {i} diverged from its solo run");
         assert!(s.final_amari < 0.3, "session {i} amari {}", s.final_amari);
@@ -156,6 +157,50 @@ fn hub_mixes_f32_and_f64_sessions_in_one_run() {
         // f64 snapshot round-trips exactly through a narrow-and-widen.
         if cfgs[i].precision == Precision::F32 {
             assert_eq!(s.b, s.b.cast::<f32>().cast::<f64>(), "session {i} not f32-resident");
+        }
+    }
+}
+
+#[test]
+fn hub_serves_q16_tenants_beside_float_tenants() {
+    // The fixed-point acceptance topology: q16 tenants admitted into the
+    // same serve-many run as float tenants. Each q16 session must (a) run
+    // on the Q2.14 cast engine, (b) stay bit-identical to its own solo
+    // run — the hub's multiplexing, chunk boundaries, and saturation
+    // bookkeeping must not change the math — and (c) publish a separator
+    // that is genuinely resident on the Q2.14 lattice. Convergence
+    // quality for q16 is pinned separately (tests/precision_parity.rs)
+    // under controlled normalization; here the contract is determinism.
+    let mut cfgs = Vec::new();
+    for (i, precision) in
+        [Precision::Q16, Precision::F64, Precision::Q16, Precision::F32].iter().enumerate()
+    {
+        let mut c = cfg(90 + i as u64, "static");
+        c.precision = *precision;
+        c.name = format!("qmix-{i}-{}", precision.name());
+        cfgs.push(c);
+    }
+    let opts = HubOptions { shards: 2, ..Default::default() };
+    let sum = run_hub(cfgs.clone(), Nonlinearity::Cube, opts).expect("q16 hub run");
+    assert_eq!(sum.sessions.len(), 4);
+    for (i, report) in sum.sessions.iter().enumerate() {
+        let s = &report.summary;
+        assert_eq!(s.b, solo_b(&cfgs[i]), "session {i} diverged from its solo run");
+        assert!(s.b.is_finite(), "session {i} separator not finite");
+        if cfgs[i].precision == Precision::Q16 {
+            assert!(
+                s.engine.starts_with("native-q16/"),
+                "session {i}: wrong engine {}",
+                s.engine
+            );
+            // Q-format residency: every published coefficient survives a
+            // quantize round trip exactly — the hub is not smuggling f64
+            // state past the fixed-point engine.
+            assert_eq!(
+                s.b,
+                s.b.cast::<easi_ica::qfx::Q16>().cast::<f64>(),
+                "session {i} not q16-resident"
+            );
         }
     }
 }
@@ -174,16 +219,16 @@ fn hub_scenario_precision_cycling_end_to_end() {
         mu = 0.004
 
         [hub]
-        sessions = 4
+        sessions = 6
         shards = 2
-        precision = ["f32", "f64"]
+        precision = ["f32", "f64", "q16"]
     "#,
     )
     .expect("scenario parses");
     let sum = run_scenario(&sc, Nonlinearity::Cube).expect("scenario runs");
-    assert_eq!(sum.sessions.len(), 4);
+    assert_eq!(sum.sessions.len(), 6);
     for (i, report) in sum.sessions.iter().enumerate() {
-        let want = if i % 2 == 0 { "native-f32/" } else { "native/" };
+        let want = ["native-f32/", "native/", "native-q16/"][i % 3];
         assert!(
             report.summary.engine.starts_with(want),
             "session {i}: engine {} should start with {want}",

@@ -15,9 +15,18 @@
 //!    converge like the f64 run, with a bounded steady-state gap; reduced
 //!    precision is a deployment knob, not an accuracy cliff (cf. the
 //!    hardware-friendly dimensionality-reduction literature).
+//!
+//! The fixed-point datapath (`qfx`, the paper's actual hardware number
+//! format) gets the same Amari acceptance at the bottom of this file:
+//! seeded q16/q32 runs vs the f64 reference, gap-bounded. Its *bit-exact*
+//! oracle lives in `fpga::exec` (software kernels vs the stepped datapath
+//! graph); here we pin that the quantization noise those bits carry does
+//! not cost separation quality.
 
+use easi_ica::fpga::amari_after_run;
 use easi_ica::ica::{amari_index, EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
 use easi_ica::linalg::{fused, FusedScratch, Mat32, Mat64};
+use easi_ica::qfx::{take_saturation_events, Q16, Q32};
 use easi_ica::signal::{Dataset, Pcg32};
 
 /// Max acceptable ulp distance between an f32 kernel result and the f64
@@ -233,6 +242,42 @@ fn f32_vs_f64_sgd_amari_parity_on_seeded_convergence() {
     assert!(
         (a64 - a32).abs() < 0.05,
         "precision gap too large: f64 {a64:.4} vs f32 {a32:.4}"
+    );
+}
+
+#[test]
+fn q16_vs_f64_sgd_amari_gap_on_seeded_convergence() {
+    // The fixed-point acceptance: the Q2.14 datapath — 14 fractional
+    // bits, RNE, saturating rails at ±2 — separates the seeded benchmark
+    // mixture to within 0.1 Amari of the f64 reference. Same seed, same
+    // normalization, same trajectory shape as `fpga::report`'s accuracy
+    // block, so the CLI artifact and this pin can never drift apart.
+    let a64 = amari_after_run::<f64>(4, 2, Nonlinearity::Cube, 0.003, 60_000, 3);
+    let a16 = amari_after_run::<Q16>(4, 2, Nonlinearity::Cube, 0.003, 60_000, 3);
+    // Input samples clip at the ±2 rails occasionally (Gaussian-ish
+    // tails); drain the thread-local latch so it cannot leak into any
+    // other fixed-point assertion on this test thread.
+    let sat = take_saturation_events();
+    assert!(a64 < 0.15, "f64 reference failed to converge: amari {a64}");
+    assert!(a16 < 0.25, "q16 run failed to separate: amari {a16}");
+    assert!(
+        (a16 - a64).abs() < 0.1,
+        "q16 Amari gap too large: f64 {a64:.4} vs q16 {a16:.4} (sat events {sat})"
+    );
+}
+
+#[test]
+fn q32_vs_f64_sgd_amari_gap_on_seeded_convergence() {
+    // Q4.28 has 28 fractional bits and ±8 headroom: quantization noise
+    // sits far below the stochastic-gradient noise floor, so the gap
+    // bound is tighter than q16's.
+    let a64 = amari_after_run::<f64>(4, 2, Nonlinearity::Cube, 0.003, 60_000, 3);
+    let a32 = amari_after_run::<Q32>(4, 2, Nonlinearity::Cube, 0.003, 60_000, 3);
+    let _ = take_saturation_events();
+    assert!(a32 < 0.15, "q32 run failed to converge: amari {a32}");
+    assert!(
+        (a32 - a64).abs() < 0.05,
+        "q32 Amari gap too large: f64 {a64:.4} vs q32 {a32:.4}"
     );
 }
 
