@@ -126,8 +126,9 @@ pub fn usage() -> &'static str {
                       --mixing static|rotating|switching|switch_once|drift_onset\n\
                       --switch-at N --seed N]\n\
        serve-many     elastic serving plane: N concurrent sessions admitted\n\
-                      onto a worker-shard pool (least-loaded or modulo\n\
-                      placement), with per-shard backpressure, optional\n\
+                      onto a worker-shard pool (least-loaded, modulo or\n\
+                      cohort-affinity placement), with per-shard\n\
+                      backpressure, optional\n\
                       session churn, a live per-tenant health table, and an\n\
                       aggregate throughput table\n\
                       [--listen HOST:PORT (serve the hub command plane over\n\
@@ -159,7 +160,7 @@ pub fn usage() -> &'static str {
                        status table's sat column)\n\
                        (cycled per session) --capacity N --seed N\n\
                        --seed-stride N --switch-at N\n\
-                       --placement least_loaded|modulo\n\
+                       --placement least_loaded|modulo|cohort_affinity\n\
                        --cohort on|off (tenant-major cohort stepping of\n\
                        same-shape sessions; on by default, bit-identical\n\
                        to the per-session path)\n\
@@ -202,9 +203,13 @@ pub fn usage() -> &'static str {
                        --tolerance F --min-fused-speedup F --min-f32-speedup F\n\
                        --min-cohort-speedup F --max-adapt-overhead F\n\
                        --max-status-overhead F --max-snapshot-overhead F\n\
-                       --max-qfx-overhead F]\n\
+                       --max-qfx-overhead F | --promote ARTIFACT.json]\n\
                       with --check, exits nonzero if any gated kernel's\n\
-                      machine-normalized cost regressed past the tolerance\n\
+                      machine-normalized cost regressed past the tolerance;\n\
+                      --promote installs a measured artifact as the\n\
+                      committed BENCH_baseline.json (validates kernel-family\n\
+                      coverage, drops build-specific *_simd records, flips\n\
+                      mode to \"measured\")\n\
        help           this text\n"
 }
 

@@ -115,12 +115,18 @@ impl Precision {
 /// changes a session's *math* (every runner is self-contained), but
 /// modulo keeps shard assignments byte-for-byte reproducible, which is
 /// what the bit-exactness pins against the batch hub run under.
+/// `CohortAffinity` steers cohort-eligible tenants toward shards already
+/// hosting tenants with the same pool key, so compatible lanes actually
+/// share fused tenant-major kernels (raising pool occupancy); everything
+/// else falls back to the least-loaded rule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlacementKind {
     /// Fewest active sessions wins; ties go to the lowest shard index.
     LeastLoaded,
     /// Deterministic `session_id % shards` (the batch hub's rule).
     Modulo,
+    /// Shape-aware: co-locate tenants sharing a cohort pool key.
+    CohortAffinity,
 }
 
 impl PlacementKind {
@@ -128,7 +134,10 @@ impl PlacementKind {
         Ok(match s {
             "least_loaded" => Self::LeastLoaded,
             "modulo" => Self::Modulo,
-            other => bail!("unknown placement '{other}' (expected least_loaded|modulo)"),
+            "cohort_affinity" => Self::CohortAffinity,
+            other => bail!(
+                "unknown placement '{other}' (expected least_loaded|modulo|cohort_affinity)"
+            ),
         })
     }
 
@@ -136,6 +145,7 @@ impl PlacementKind {
         match self {
             Self::LeastLoaded => "least_loaded",
             Self::Modulo => "modulo",
+            Self::CohortAffinity => "cohort_affinity",
         }
     }
 }
@@ -1217,7 +1227,9 @@ mod tests {
 
     #[test]
     fn placement_parse_round_trip() {
-        for p in [PlacementKind::LeastLoaded, PlacementKind::Modulo] {
+        for p in
+            [PlacementKind::LeastLoaded, PlacementKind::Modulo, PlacementKind::CohortAffinity]
+        {
             assert_eq!(PlacementKind::parse(p.name()).unwrap(), p);
         }
         assert!(PlacementKind::parse("random").is_err());

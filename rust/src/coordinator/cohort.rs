@@ -5,9 +5,15 @@
 //! loop setup and dispatch instead of flops. The [`CohortExecutor`] sits
 //! between a shard's event loop and its [`SessionRunner`]s and regroups
 //! the work *tenant-major*: sessions with the same shape key
-//! (`n`, `m`, chunk size, nonlinearity, precision) form a *pool*, and one
-//! pool step advances every ready member through a single
-//! [`CohortState`] kernel whose inner loops run across the tenants.
+//! (`n`, `m`, chunk size, nonlinearity, precision, optimizer form) form a
+//! *pool*, and one pool step advances every ready member through a single
+//! tenant-major kernel whose inner loops run across the tenants —
+//! [`CohortState`] for plain fused EASI-SGD lanes, [`CohortSmbgdState`]
+//! for plain SMBGD lanes (the mini-batch accumulator `Ĥ_prev` rides the
+//! same load/store wire as `B`). The optimizer form is a key dimension:
+//! SGD and SMBGD tenants never share a pool, and SMBGD pools additionally
+//! key on the mini-batch size `P` (the kernel steps whole mini-batches in
+//! lockstep; `μ`, `γ`, `β` stay per-lane data and may differ freely).
 //!
 //! ## Ordering and bit-identity
 //!
@@ -20,15 +26,20 @@
 //! identical with the executor on or off, under every build. Pinned by
 //! `tests/integration_cohort.rs`.
 //!
-//! Each pool step reloads every lane's `(B, μ)` from its engine, so
+//! Each pool step reloads every lane's state from its engine — `(B, μ)`
+//! for SGD lanes, `(B, Ĥ_prev, μ, γ, β)` for SMBGD lanes — so
 //! divergence-guard resets and the adaptive governor's μ retunes feed
 //! back into the very next step, exactly as on the per-session path.
+//! SMBGD chunks hold whole mini-batches by construction (the native
+//! chunk size is `8·P`), so every pool step runs boundary-to-boundary
+//! and the engine's latched mini-batch counter advances exactly as solo.
 //!
 //! ## Membership lifecycle
 //!
-//! - `register` at admission: eligible sessions (plain fused EASI-SGD
-//!   native engines — [`SessionRunner::cohort_lane`]) join the pool for
-//!   their shape key; everything else stays on the per-session path.
+//! - `register` at admission: eligible sessions (plain fused EASI-SGD or
+//!   plain SMBGD native engines — [`SessionRunner::cohort_lane`]) join
+//!   the pool for their shape key; everything else stays on the
+//!   per-session path.
 //! - A member without peers (pool of one) is routed straight through
 //!   `SessionRunner::on_block` — the fall-back the issue requires — and
 //!   its queue is kept empty so there is nothing to extract.
@@ -37,6 +48,10 @@
 //!   the runner is self-contained again, so the PR-5 park/reattach
 //!   bit-identity pins hold unchanged. If the pool drops to one member,
 //!   the survivor's queue is drained too (it reverts to the direct path).
+//!   When the *last* member departs the pool itself is dropped — a
+//!   zero-lane pool would otherwise park its grown kernel state and
+//!   scratch forever (the shape key readmits with fresh, right-sized
+//!   buffers if tenants of that shape ever return).
 //! - `flush_session` (checkpoint/restore) drains without removing, so a
 //!   `Restore`'s `install_b` lands on a fully caught-up runner.
 //! - A lane whose divergence guard **latches a fault** mid-pump (its
@@ -55,10 +70,12 @@
 //! [`MAX_LAG`] items (then the ready subset steps, bounding latency and
 //! memory when producers run at different speeds or a member idles).
 
+use super::engine::{native_chunk_size, CohortLaneForm};
 use super::server::SessionRunner;
-use crate::config::Precision;
+use super::state::StatusCell;
+use crate::config::{EngineKind, ExperimentConfig, OptimizerKind, Precision};
 use crate::ica::nonlinearity::{with_g, Nonlinearity};
-use crate::linalg::{CohortState, Mat64, Scalar};
+use crate::linalg::{CohortSmbgdState, CohortState, Mat64, Scalar};
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
 
@@ -67,17 +84,60 @@ use std::collections::{BTreeMap, VecDeque};
 /// 8 keeps at most two blocks buffered per lane.
 const MAX_LAG: usize = 8;
 
+/// The optimizer-form dimension of the pool key. SGD and SMBGD lanes run
+/// different kernels, so they never pool together; SMBGD pools further
+/// key on the mini-batch size `P` because the kernel steps whole
+/// mini-batches in lockstep. Per-lane hyperparameters (`μ`, `γ`, `β`)
+/// deliberately stay out of the key — they are lane data, reloaded fresh
+/// every step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum OptimizerForm {
+    Sgd,
+    Smbgd { p: usize },
+}
+
 /// Shape key pooling compatible tenants: lanes must agree on the matrix
 /// shape (one SoA block), the chunk size (lockstep rows), the
-/// nonlinearity (one monomorphized kernel) and the precision (one scalar
-/// type).
+/// nonlinearity (one monomorphized kernel), the precision (one scalar
+/// type) and the optimizer form (one kernel family).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-struct CohortKey {
+pub(crate) struct CohortKey {
     n: usize,
     m: usize,
     chunk: usize,
     g: Nonlinearity,
     precision: Precision,
+    form: OptimizerForm,
+}
+
+/// Hub-side mirror of the admission rule: the pool key a session built
+/// from `cfg` *would* join, or `None` when it will stay per-session.
+/// This feeds shape-aware placement before a runner exists, so it
+/// re-derives eligibility from the config alone: native engine family,
+/// f64/f32 precision, and a pooled optimizer form (plain SGD or SMBGD).
+/// It is a placement *hint* only — [`CohortExecutor::register`], driven
+/// by the live engine's [`SessionRunner::cohort_lane`] probe, remains
+/// the source of truth; a mismatch costs locality, never correctness.
+pub(crate) fn affinity_key(cfg: &ExperimentConfig, g: Nonlinearity) -> Option<CohortKey> {
+    if cfg.engine != EngineKind::Native {
+        return None;
+    }
+    if !matches!(cfg.precision, Precision::F64 | Precision::F32) {
+        return None;
+    }
+    let form = match cfg.optimizer.kind {
+        OptimizerKind::Sgd => OptimizerForm::Sgd,
+        OptimizerKind::Smbgd => OptimizerForm::Smbgd { p: cfg.optimizer.p },
+        OptimizerKind::Mbgd => return None,
+    };
+    Some(CohortKey {
+        n: cfg.n,
+        m: cfg.m,
+        chunk: native_chunk_size(cfg),
+        g,
+        precision: cfg.precision,
+        form,
+    })
 }
 
 /// One queued per-lane event, preserving the session's event order: a
@@ -88,10 +148,13 @@ enum LaneItem {
     Mixing(Mat64),
 }
 
-/// The pool's kernel state, monomorphized per precision.
+/// The pool's kernel state, monomorphized per precision and optimizer
+/// form.
 enum PoolState {
     F64(CohortState<f64>),
     F32(CohortState<f32>),
+    F64Smbgd(CohortSmbgdState<f64>),
+    F32Smbgd(CohortSmbgdState<f32>),
 }
 
 /// One shape-key pool: member queues plus reusable step scratch.
@@ -109,17 +172,29 @@ struct Pool<K: Ord + Copy> {
     ingested: Vec<Mat64>,
     /// Scratch: per-lane B staging for store/sync (grown once).
     bs: Vec<Mat64>,
+    /// Scratch: per-lane `Ĥ_prev` staging (SMBGD pools only; grown once).
+    hs: Vec<Mat64>,
 }
 
 impl<K: Ord + Copy> Pool<K> {
     fn new(key: CohortKey) -> Self {
-        let state = match key.precision {
-            Precision::F64 => PoolState::F64(CohortState::new(key.n, key.m)),
-            Precision::F32 => PoolState::F32(CohortState::new(key.n, key.m)),
+        let state = match (key.precision, key.form) {
+            (Precision::F64, OptimizerForm::Sgd) => {
+                PoolState::F64(CohortState::new(key.n, key.m))
+            }
+            (Precision::F32, OptimizerForm::Sgd) => {
+                PoolState::F32(CohortState::new(key.n, key.m))
+            }
+            (Precision::F64, OptimizerForm::Smbgd { p }) => {
+                PoolState::F64Smbgd(CohortSmbgdState::new(key.n, key.m, p))
+            }
+            (Precision::F32, OptimizerForm::Smbgd { p }) => {
+                PoolState::F32Smbgd(CohortSmbgdState::new(key.n, key.m, p))
+            }
             // Engines never offer a fixed-point cohort lane
             // (`CastNativeEngine::cohort_lane` returns `None` for q16/q32
             // so the saturation latch stays attributed per session).
-            Precision::Q16 | Precision::Q32 => {
+            (Precision::Q16 | Precision::Q32, _) => {
                 unreachable!("fixed-point precisions do not offer cohort lanes")
             }
         };
@@ -131,6 +206,7 @@ impl<K: Ord + Copy> Pool<K> {
             chunks: Vec::new(),
             ingested: Vec::new(),
             bs: Vec::new(),
+            hs: Vec::new(),
         }
     }
 }
@@ -200,6 +276,11 @@ fn pump<K: Ord + Copy>(
         while pool.bs.len() < lanes {
             pool.bs.push(Mat64::zeros(pool.key.n, pool.key.m));
         }
+        if matches!(pool.state, PoolState::F64Smbgd(_) | PoolState::F32Smbgd(_)) {
+            while pool.hs.len() < lanes {
+                pool.hs.push(Mat64::zeros(pool.key.n, pool.key.n));
+            }
+        }
         let before = faulted.len();
         match &mut pool.state {
             PoolState::F64(st) => {
@@ -210,6 +291,30 @@ fn pump<K: Ord + Copy>(
             PoolState::F32(st) => {
                 step_loaded(
                     st, pool.key.g, &pool.ready, &pool.chunks, &mut pool.bs, runners, faulted,
+                )?;
+            }
+            PoolState::F64Smbgd(st) => {
+                step_loaded_smbgd(
+                    st,
+                    pool.key.g,
+                    &pool.ready,
+                    &pool.chunks,
+                    &mut pool.bs,
+                    &mut pool.hs,
+                    runners,
+                    faulted,
+                )?;
+            }
+            PoolState::F32Smbgd(st) => {
+                step_loaded_smbgd(
+                    st,
+                    pool.key.g,
+                    &pool.ready,
+                    &pool.chunks,
+                    &mut pool.bs,
+                    &mut pool.hs,
+                    runners,
+                    faulted,
                 )?;
             }
         }
@@ -272,6 +377,44 @@ fn step_loaded<T: Scalar, K: Ord + Copy>(
     Ok(())
 }
 
+/// One SMBGD pool step: like [`step_loaded`], but each lane's load/store
+/// wire additionally carries the cross-batch accumulator `Ĥ_prev` and
+/// the `(γ, β)` hyperparameters from the lane's freshly probed form.
+/// Eligibility (`cohort_smbgd`) holds exactly at batch boundaries, and
+/// cohort chunks are whole mini-batches, so the probe stays `Some` for
+/// the life of the membership.
+fn step_loaded_smbgd<T: Scalar, K: Ord + Copy>(
+    st: &mut CohortSmbgdState<T>,
+    g: Nonlinearity,
+    ready: &[K],
+    chunks: &[Mat64],
+    bs: &mut [Mat64],
+    hs: &mut [Mat64],
+    runners: &mut BTreeMap<K, SessionRunner>,
+    faulted: &mut Vec<K>,
+) -> Result<()> {
+    st.begin(ready.len());
+    for (l, id) in ready.iter().enumerate() {
+        let r = runners.get(id).expect("cohort member has a runner");
+        let lane = r.cohort_lane().expect("cohort member kept its lane");
+        let CohortLaneForm::Smbgd { gamma, beta, .. } = lane.form else {
+            unreachable!("SMBGD pool admitted a non-SMBGD lane")
+        };
+        st.load_lane(l, &r.cohort_b(), &r.cohort_hhat_prev(), lane.mu, gamma, beta);
+    }
+    with_g!(T, g, gf => st.step_chunks(gf, chunks));
+    for (l, id) in ready.iter().enumerate() {
+        st.store_lane(l, &mut bs[l], &mut hs[l]);
+        let r = runners.get_mut(id).expect("cohort member has a runner");
+        r.cohort_sync_smbgd(&bs[l], &hs[l], chunks[l].rows() as u64);
+        r.note_cohort_chunk(&chunks[l]);
+        if r.fault().is_some() {
+            faulted.push(*id);
+        }
+    }
+    Ok(())
+}
+
 /// Per-shard cohort scheduler: owns the pools and routes each session
 /// event either through a cohort pool or straight to the session's
 /// runner. Generic over the shard's session-id key (`usize` in the batch
@@ -284,11 +427,20 @@ pub(crate) struct CohortExecutor<K: Ord + Copy = u64> {
     /// Lanes extracted mid-pump because their divergence guard latched a
     /// fault, awaiting pickup via [`Self::take_faulted`].
     faulted: Vec<K>,
+    /// Members' health records, for publishing pool widths to the status
+    /// plane (the `pool` column and the hub's `pool_occupancy`).
+    cells: BTreeMap<K, StatusCell>,
 }
 
 impl<K: Ord + Copy> CohortExecutor<K> {
     pub(crate) fn new(enabled: bool) -> Self {
-        Self { enabled, pools: Vec::new(), index: BTreeMap::new(), faulted: Vec::new() }
+        Self {
+            enabled,
+            pools: Vec::new(),
+            index: BTreeMap::new(),
+            faulted: Vec::new(),
+            cells: BTreeMap::new(),
+        }
     }
 
     /// Admit a session: eligible runners (cohort-capable engines) join
@@ -300,12 +452,19 @@ impl<K: Ord + Copy> CohortExecutor<K> {
         }
         let Some(lane) = runner.cohort_lane() else { return };
         let (n, m) = runner.shape();
+        let form = match lane.form {
+            CohortLaneForm::Sgd => OptimizerForm::Sgd,
+            // γ and β are per-lane data (reloaded every step); only the
+            // lockstep mini-batch size P shapes the pool.
+            CohortLaneForm::Smbgd { p, .. } => OptimizerForm::Smbgd { p },
+        };
         let key = CohortKey {
             n,
             m,
             chunk: runner.chunk_size(),
             g: lane.g,
             precision: lane.precision,
+            form,
         };
         let pi = match self.pools.iter().position(|p| p.key == key) {
             Some(pi) => pi,
@@ -316,6 +475,15 @@ impl<K: Ord + Copy> CohortExecutor<K> {
         };
         self.pools[pi].pending.insert(id, VecDeque::new());
         self.index.insert(id, pi);
+        self.cells.insert(id, runner.status_cell());
+        // Publish the new width to every member of the affected pool —
+        // the cells record the *peak* width, so no publish on shrink.
+        let width = self.pools[pi].pending.len();
+        for mid in self.pools[pi].pending.keys() {
+            if let Some(cell) = self.cells.get(mid) {
+                cell.set_pool_width(width);
+            }
+        }
     }
 
     /// Whether a session currently runs as a cohort lane (tests).
@@ -350,7 +518,9 @@ impl<K: Ord + Copy> CohortExecutor<K> {
                 // the latched fault) instead of re-entering a pool.
                 for fid in self.faulted[before..].to_vec() {
                     self.index.remove(&fid);
+                    self.cells.remove(&fid);
                 }
+                self.drop_pool_if_empty(pi);
                 return Ok(());
             }
             // Member without shape peers: per-session path, unchanged
@@ -421,6 +591,7 @@ impl<K: Ord + Copy> CohortExecutor<K> {
         let Some(&pi) = self.index.get(&id) else { return Ok(()) };
         self.flush_session(id, runners)?;
         self.index.remove(&id);
+        self.cells.remove(&id);
         let pool = &mut self.pools[pi];
         pool.pending.remove(&id);
         if pool.pending.len() == 1 {
@@ -429,7 +600,57 @@ impl<K: Ord + Copy> CohortExecutor<K> {
                 drain_lane(q, r)?;
             }
         }
+        self.drop_pool_if_empty(pi);
         Ok(())
+    }
+
+    /// Drop a pool whose last lane departed. A zero-lane pool would park
+    /// its grown kernel state and step scratch indefinitely (nothing ever
+    /// shrinks a live pool's buffers, by design), so the pool itself must
+    /// go; readmission under the same key rebuilds one sized to the new
+    /// tenants. `swap_remove` keeps this O(1); the pool that swapped into
+    /// the hole gets its members' index entries remapped.
+    fn drop_pool_if_empty(&mut self, pi: usize) {
+        if !self.pools[pi].pending.is_empty() {
+            return;
+        }
+        self.pools.swap_remove(pi);
+        let moved = self.pools.len();
+        if pi < moved {
+            for v in self.index.values_mut() {
+                if *v == moved {
+                    *v = pi;
+                }
+            }
+        }
+    }
+
+    /// Number of live pools. Pools exist only while they have members —
+    /// pinned by the empty-pool regression tests.
+    pub(crate) fn pool_count(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Width (member count) of the pool `id` belongs to; `None` for
+    /// non-members. Feeds the status table's `pool` column.
+    pub(crate) fn pool_width(&self, id: K) -> Option<usize> {
+        self.index.get(&id).map(|&pi| self.pools[pi].pending.len())
+    }
+
+    /// Cohort occupancy as `(sharing, members)`: how many members
+    /// currently share a pool with at least one peer (and so actually
+    /// step tenant-major), over all members. The hub turns this into the
+    /// `pool_occupancy` fraction.
+    pub(crate) fn occupancy(&self) -> (usize, usize) {
+        let mut sharing = 0;
+        let mut members = 0;
+        for p in self.pools.iter() {
+            members += p.pending.len();
+            if p.pending.len() >= 2 {
+                sharing += p.pending.len();
+            }
+        }
+        (sharing, members)
     }
 
     /// Drain every queue (shutdown / producer-disconnect path) so the
@@ -462,10 +683,21 @@ mod tests {
         cfg
     }
 
-    fn runner(cfg: &ExperimentConfig) -> SessionRunner {
-        let engine = make_engine(cfg, Nonlinearity::Cube).unwrap();
+    fn smbgd_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.optimizer.kind = OptimizerKind::Smbgd;
+        cfg.optimizer.mu = 0.004;
+        cfg
+    }
+
+    fn runner_with_g(cfg: &ExperimentConfig, g: Nonlinearity) -> SessionRunner {
+        let engine = make_engine(cfg, g).unwrap();
         let state = StateStore::new(crate::ica::init_b(cfg.n, cfg.m));
         SessionRunner::new(cfg, engine, &ServerOptions::default(), state)
+    }
+
+    fn runner(cfg: &ExperimentConfig) -> SessionRunner {
+        runner_with_g(cfg, Nonlinearity::Cube)
     }
 
     fn blocks(seed: u64, count: usize, m: usize) -> Vec<Mat64> {
@@ -473,9 +705,11 @@ mod tests {
         (0..count).map(|_| Mat64::from_fn(256, m, |_, _| rng.normal())).collect()
     }
 
-    #[test]
-    fn cohort_routing_matches_solo_runners_bitwise() {
-        let cfg = sgd_cfg();
+    /// Three same-shape sessions through the executor must finish with
+    /// exactly the bits (and bookkeeping) of the same sessions run solo —
+    /// the executor's core contract, checked for both kernel families.
+    fn check_routing_matches_solo(cfg: &ExperimentConfig) {
+        let cfg = cfg.clone();
         let a = Mat64::eye(cfg.m, cfg.n);
         // Three same-shape sessions through the executor…
         let mut runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
@@ -526,23 +760,39 @@ mod tests {
     }
 
     #[test]
+    fn cohort_routing_matches_solo_runners_bitwise() {
+        check_routing_matches_solo(&sgd_cfg());
+    }
+
+    #[test]
+    fn smbgd_cohort_routing_matches_solo_runners_bitwise() {
+        check_routing_matches_solo(&smbgd_cfg());
+    }
+
+    #[test]
     fn lone_member_and_ineligible_sessions_take_the_solo_path() {
         let cfg = sgd_cfg();
-        let mut smbgd_cfg = cfg.clone();
-        smbgd_cfg.optimizer.kind = OptimizerKind::Smbgd;
+        let smbgd = smbgd_cfg();
+        let mut mbgd_cfg = cfg.clone();
+        mbgd_cfg.optimizer.kind = OptimizerKind::Mbgd;
 
         let mut runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
         let mut exec = CohortExecutor::<u64>::new(true);
         let r0 = runner(&cfg);
-        let r1 = runner(&smbgd_cfg);
+        let r1 = runner(&mbgd_cfg);
+        let r2 = runner(&smbgd);
         exec.register(0, &r0);
         exec.register(1, &r1);
+        exec.register(2, &r2);
         runners.insert(0, r0);
         runners.insert(1, r1);
+        runners.insert(2, r2);
         assert!(exec.is_member(0), "plain SGD is cohort-capable");
-        assert!(!exec.is_member(1), "SMBGD must stay per-session");
+        assert!(!exec.is_member(1), "MBGD has no cohort kernel; it stays per-session");
+        assert!(exec.is_member(2), "plain SMBGD is cohort-capable");
+        assert_eq!(exec.pool_count(), 2, "SGD and SMBGD lanes must not share a pool");
 
-        // A member without shape peers routes straight through; its
+        // Members without shape peers route straight through; their
         // samples land immediately (nothing queued).
         let b = blocks(7, 1, cfg.m).pop().unwrap();
         exec.on_block(0, b, &mut runners).unwrap();
@@ -550,6 +800,57 @@ mod tests {
         let b = blocks(8, 1, cfg.m).pop().unwrap();
         exec.on_block(1, b, &mut runners).unwrap();
         assert!(runners.get(&1).unwrap().samples_done() > 0);
+        let b = blocks(9, 1, cfg.m).pop().unwrap();
+        exec.on_block(2, b, &mut runners).unwrap();
+        assert_eq!(runners.get(&2).unwrap().samples_done(), 256);
+    }
+
+    /// μ/γ/β are lane data, not key dimensions: SMBGD tenants with
+    /// different hyperparameters share one pool and still reproduce their
+    /// solo trajectories bitwise.
+    #[test]
+    fn smbgd_pool_mixes_hyperparameters_bitwise() {
+        let cfg_a = smbgd_cfg();
+        let mut cfg_b = smbgd_cfg();
+        cfg_b.optimizer.mu = 0.002;
+        cfg_b.optimizer.gamma = 0.3;
+        cfg_b.optimizer.beta = 0.95;
+        let cfgs = [cfg_a, cfg_b];
+
+        let mut runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
+        let mut exec = CohortExecutor::<u64>::new(true);
+        for (id, c) in cfgs.iter().enumerate() {
+            let r = runner(c);
+            exec.register(id as u64, &r);
+            runners.insert(id as u64, r);
+        }
+        assert_eq!(exec.pool_count(), 1, "hyperparameters must not split the pool");
+        assert_eq!(exec.pool_width(0), Some(2));
+        for round in 0..4u64 {
+            for id in 0..2u64 {
+                let b = blocks(300 + id * 10 + round, 1, cfgs[0].m).pop().unwrap();
+                exec.on_block(id, b, &mut runners).unwrap();
+            }
+        }
+        for (id, c) in cfgs.iter().enumerate() {
+            exec.finish_session(id as u64, &mut runners).unwrap();
+            let got = runners.remove(&(id as u64)).unwrap().finish();
+            let mut solo = runner(c);
+            for round in 0..4u64 {
+                let b = blocks(300 + id as u64 * 10 + round, 1, c.m).pop().unwrap();
+                solo.on_block(b).unwrap();
+            }
+            let want = solo.finish();
+            assert_eq!(want.samples, got.samples, "session {id}");
+            assert!(
+                want.b
+                    .as_slice()
+                    .iter()
+                    .zip(got.b.as_slice())
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "session {id}: mixed-hyperparameter cohort diverged from solo"
+            );
+        }
     }
 
     #[test]
@@ -559,6 +860,95 @@ mod tests {
         let r = runner(&cfg);
         exec.register(0, &r);
         assert!(!exec.is_member(0));
+    }
+
+    /// Property sweep over every key axis: no pool ever mixes shapes,
+    /// precisions, nonlinearities or optimizer forms, and the hub-side
+    /// placement hint ([`affinity_key`]) derives *exactly* the key the
+    /// executor builds from the live engine probe — so shape-aware
+    /// placement can never steer a session toward a pool it would then
+    /// be refused from (or admitted to incorrectly).
+    #[test]
+    fn pools_never_mix_shape_precision_nonlinearity_or_form() {
+        let shapes = [(2usize, 4usize), (3, 6)];
+        let precisions = [Precision::F64, Precision::F32];
+        // (kind, P): SGD ignores P; SMBGD pools are additionally split
+        // by the lockstep mini-batch size.
+        let forms =
+            [(OptimizerKind::Sgd, 8usize), (OptimizerKind::Smbgd, 4), (OptimizerKind::Smbgd, 8)];
+        let gs = [Nonlinearity::Cube, Nonlinearity::Tanh];
+
+        let mut exec = CohortExecutor::<u64>::new(true);
+        let mut hints: BTreeMap<u64, Option<CohortKey>> = BTreeMap::new();
+        let mut id = 0u64;
+        // Two copies of every eligible axis combination, so each pool
+        // should come out exactly two lanes wide.
+        for &(n, m) in &shapes {
+            for &precision in &precisions {
+                for &(kind, p) in &forms {
+                    for &g in &gs {
+                        for _copy in 0..2 {
+                            let mut cfg = ExperimentConfig::default();
+                            cfg.n = n;
+                            cfg.m = m;
+                            cfg.precision = precision;
+                            cfg.optimizer.kind = kind;
+                            cfg.optimizer.p = p;
+                            cfg.optimizer.mu = 0.004;
+                            let r = runner_with_g(&cfg, g);
+                            exec.register(id, &r);
+                            hints.insert(id, affinity_key(&cfg, g));
+                            id += 1;
+                        }
+                    }
+                }
+            }
+        }
+        // Ineligible axes: fixed-point precision and the MBGD form have
+        // no cohort kernel; both the hint and the live probe must agree
+        // they stay per-session.
+        let mut q16 = smbgd_cfg();
+        q16.precision = Precision::Q16;
+        let mut mbgd = sgd_cfg();
+        mbgd.optimizer.kind = OptimizerKind::Mbgd;
+        for cfg in [q16, mbgd] {
+            let r = runner_with_g(&cfg, Nonlinearity::Cube);
+            exec.register(id, &r);
+            hints.insert(id, affinity_key(&cfg, Nonlinearity::Cube));
+            id += 1;
+        }
+
+        let mut distinct: Vec<CohortKey> = Vec::new();
+        for (&sid, hint) in &hints {
+            match hint {
+                None => assert!(!exec.is_member(sid), "ineligible session {sid} joined a pool"),
+                Some(k) => {
+                    let pi = *exec
+                        .index
+                        .get(&sid)
+                        .unwrap_or_else(|| panic!("eligible session {sid} missing from a pool"));
+                    assert_eq!(
+                        exec.pools[pi].key, *k,
+                        "session {sid}: live-probe pool key diverges from the placement hint"
+                    );
+                    if !distinct.contains(k) {
+                        distinct.push(*k);
+                    }
+                }
+            }
+        }
+        assert_eq!(exec.pool_count(), distinct.len(), "pools must partition exactly by key");
+        for pool in &exec.pools {
+            assert_eq!(pool.pending.len(), 2, "every axis combination was registered twice");
+            for mid in pool.pending.keys() {
+                assert_eq!(
+                    hints[mid],
+                    Some(pool.key),
+                    "pool {:?} holds a session registered under different axes",
+                    pool.key
+                );
+            }
+        }
     }
 
     #[test]
@@ -694,5 +1084,145 @@ mod tests {
             "MAX_LAG must bound a starved pool's latency"
         );
         assert_eq!(runners.get(&1).unwrap().samples_done(), 0);
+    }
+
+    #[test]
+    fn last_lane_departure_drops_the_pool() {
+        let cfg = sgd_cfg();
+        let mut runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
+        let mut exec = CohortExecutor::<u64>::new(true);
+        for id in 0..2u64 {
+            let r = runner(&cfg);
+            exec.register(id, &r);
+            runners.insert(id, r);
+        }
+        assert_eq!(exec.pool_count(), 1);
+        // Feed a block so the pool has grown kernel state and scratch.
+        let b = blocks(11, 1, cfg.m).pop().unwrap();
+        exec.on_block(0, b, &mut runners).unwrap();
+        exec.finish_session(0, &mut runners).unwrap();
+        assert_eq!(exec.pool_count(), 1, "pool survives while a member remains");
+        exec.finish_session(1, &mut runners).unwrap();
+        assert_eq!(exec.pool_count(), 0, "zero-lane pool must be dropped, not parked");
+        // The shape key readmits cleanly after the drop.
+        let r = runner(&cfg);
+        exec.register(5, &r);
+        runners.insert(5, r);
+        assert!(exec.is_member(5));
+        assert_eq!(exec.pool_count(), 1);
+    }
+
+    /// Dropping a pool `swap_remove`s it, which renumbers the pool that
+    /// filled the hole: the survivors' index entries must follow, and
+    /// routing through the remapped pool must keep working.
+    #[test]
+    fn pool_drop_remaps_sibling_pool_index() {
+        let sgd = sgd_cfg();
+        let smbgd = smbgd_cfg();
+        let mut runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
+        let mut exec = CohortExecutor::<u64>::new(true);
+        // ids 0,1 → SGD pool (index 0); ids 2,3 → SMBGD pool (index 1).
+        for id in 0..4u64 {
+            let r = runner(if id < 2 { &sgd } else { &smbgd });
+            exec.register(id, &r);
+            runners.insert(id, r);
+        }
+        assert_eq!(exec.pool_count(), 2);
+        exec.finish_session(0, &mut runners).unwrap();
+        exec.finish_session(1, &mut runners).unwrap();
+        assert_eq!(exec.pool_count(), 1, "emptied SGD pool dropped");
+        assert_eq!(exec.pool_width(2), Some(2), "survivor pool remapped, width intact");
+        // Routing still lands in the remapped pool: a full-width round
+        // steps both SMBGD lanes.
+        for id in 2..4u64 {
+            let b = blocks(60 + id, 1, sgd.m).pop().unwrap();
+            exec.on_block(id, b, &mut runners).unwrap();
+        }
+        assert_eq!(runners.get(&2).unwrap().samples_done(), 256);
+        assert_eq!(runners.get(&3).unwrap().samples_done(), 256);
+    }
+
+    mod alloc_track {
+        use std::alloc::{GlobalAlloc, Layout, System};
+        use std::cell::Cell;
+
+        thread_local! {
+            static LIVE: Cell<i64> = const { Cell::new(0) };
+        }
+
+        /// Passthrough allocator tracking *net* live bytes per thread
+        /// (must not itself allocate: const-initialized TLS, `try_with`
+        /// for teardown).
+        struct NetAllocator;
+
+        unsafe impl GlobalAlloc for NetAllocator {
+            unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+                let _ = LIVE.try_with(|c| c.set(c.get() + layout.size() as i64));
+                System.alloc(layout)
+            }
+            unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+                let _ = LIVE.try_with(|c| c.set(c.get() + layout.size() as i64));
+                System.alloc_zeroed(layout)
+            }
+            unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+                let _ =
+                    LIVE.try_with(|c| c.set(c.get() + new_size as i64 - layout.size() as i64));
+                System.realloc(ptr, layout, new_size)
+            }
+            unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+                let _ = LIVE.try_with(|c| c.set(c.get() - layout.size() as i64));
+                System.dealloc(ptr, layout)
+            }
+        }
+
+        #[global_allocator]
+        static ALLOCATOR: NetAllocator = NetAllocator;
+
+        /// Net heap bytes retained by `f` on this thread.
+        pub(super) fn net_bytes_in(f: impl FnOnce()) -> i64 {
+            let before = LIVE.with(|c| c.get());
+            f();
+            LIVE.with(|c| c.get()) - before
+        }
+    }
+
+    /// The regression the empty-pool drop fixes: before it, every
+    /// admit-run-finish cycle under a fresh shape key parked another
+    /// zero-lane pool (kernel state + scratch) forever. With the fix,
+    /// steady-state churn retains not a single net heap byte.
+    #[test]
+    fn empty_pool_drop_keeps_churn_net_allocation_free() {
+        let sgd = sgd_cfg();
+        let smbgd = smbgd_cfg();
+        let mut exec = CohortExecutor::<u64>::new(true);
+
+        let cycle = |exec: &mut CohortExecutor<u64>, seed: u64| {
+            let mut runners: BTreeMap<u64, SessionRunner> = BTreeMap::new();
+            for id in 0..4u64 {
+                let r = runner(if id < 2 { &sgd } else { &smbgd });
+                exec.register(id, &r);
+                runners.insert(id, r);
+            }
+            assert_eq!(exec.pool_count(), 2);
+            for id in 0..4u64 {
+                let b = blocks(seed + id, 1, sgd.m).pop().unwrap();
+                exec.on_block(id, b, &mut runners).unwrap();
+            }
+            for id in 0..4u64 {
+                exec.finish_session(id, &mut runners).unwrap();
+                runners.remove(&id).unwrap().finish();
+            }
+            assert_eq!(exec.pool_count(), 0, "churned-out pools must be dropped");
+        };
+
+        // Warm: the first cycle grows the executor's reusable vectors and
+        // any lazily initialized process state.
+        cycle(&mut exec, 1000);
+        let net = alloc_track::net_bytes_in(|| {
+            for k in 0..8u64 {
+                cycle(&mut exec, 2000 + 10 * k);
+            }
+        });
+        assert_eq!(net, 0, "admission churn retained pool memory (stale zero-lane pools?)");
     }
 }

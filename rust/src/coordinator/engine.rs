@@ -30,6 +30,28 @@ pub struct CohortLane {
     /// Arithmetic precision of the lane (part of the cohort shape key —
     /// mixing precisions in one SoA block is impossible).
     pub precision: Precision,
+    /// Which kernel family the lane runs (part of the pool key: SGD and
+    /// SMBGD lanes cannot share an SoA block).
+    pub form: CohortLaneForm,
+}
+
+/// The kernel family of a cohort lane. The pool key folds in only the
+/// *structural* parameters (the mini-batch size P, which fixes the shared
+/// loop shape); per-lane coefficients (μ, γ, β) ride as lane data so
+/// tenants with different hyperparameters still pool together.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CohortLaneForm {
+    /// Plain fused EASI-SGD per-sample loop.
+    Sgd,
+    /// Plain SMBGD fused block path at a batch boundary.
+    Smbgd {
+        /// Mini-batch size P (structural — keys the pool).
+        p: usize,
+        /// Cross-batch momentum γ (per-lane data).
+        gamma: f64,
+        /// Intra-batch decay β (per-lane data).
+        beta: f64,
+    },
 }
 
 /// A chunk-oriented executor of EASI updates.
@@ -81,6 +103,23 @@ pub trait Engine: Send {
         unreachable!("cohort_sync on an engine that did not offer a cohort lane");
     }
 
+    /// The SMBGD cross-batch accumulator `Ĥ_prev` (f64 wire format) for
+    /// loading into a cohort lane. Only ever called on engines whose
+    /// [`cohort_lane`](Self::cohort_lane) reported
+    /// [`CohortLaneForm::Smbgd`].
+    fn cohort_hhat_prev(&self) -> Mat64 {
+        unreachable!("cohort_hhat_prev on an engine that did not offer an SMBGD lane");
+    }
+
+    /// Install the SMBGD cohort step's output — `B`, the latched
+    /// `Ĥ_prev`, and the `rows` samples (whole mini-batches) consumed.
+    /// Only ever called on engines whose
+    /// [`cohort_lane`](Self::cohort_lane) reported
+    /// [`CohortLaneForm::Smbgd`].
+    fn cohort_sync_smbgd(&mut self, _b: &Mat64, _hhat_prev: &Mat64, _rows: u64) {
+        unreachable!("cohort_sync_smbgd on an engine that did not offer an SMBGD lane");
+    }
+
     /// Serialize the engine's full learning state for detach-to-disk.
     /// Contract with [`load_state`](Self::load_state): a freshly built
     /// engine (same config) that loads this state continues
@@ -99,8 +138,10 @@ pub trait Engine: Send {
 
 /// Chunk size for the native engines, shared across precisions: aligned
 /// with the optimizer's mini-batch so state snapshots land on batch
-/// boundaries.
-fn native_chunk_size(cfg: &ExperimentConfig) -> usize {
+/// boundaries. `pub(crate)` so the hub's shape-aware placement can
+/// mirror the pool key a config would produce without building an
+/// engine.
+pub(crate) fn native_chunk_size(cfg: &ExperimentConfig) -> usize {
     match cfg.optimizer.kind {
         OptimizerKind::Sgd => 64,
         _ => cfg.optimizer.p.max(1) * 8,
@@ -162,14 +203,20 @@ impl Engine for NativeEngine {
     }
 
     fn cohort_lane(&self) -> Option<CohortLane> {
-        self.opt
-            .cohort_plain()
-            .map(|(mu, g)| CohortLane { mu, g, precision: Precision::F64 })
+        cohort_lane_for(self.opt.as_ref(), Precision::F64)
     }
 
     fn cohort_sync(&mut self, b: &Mat64, rows: u64) {
         self.opt.b_mut().copy_from(b);
         self.opt.note_cohort_rows(rows);
+    }
+
+    fn cohort_hhat_prev(&self) -> Mat64 {
+        self.opt.cohort_hhat_prev()
+    }
+
+    fn cohort_sync_smbgd(&mut self, b: &Mat64, hhat_prev: &Mat64, rows: u64) {
+        self.opt.cohort_sync_smbgd(b, hhat_prev, rows);
     }
 
     fn save_state(&self, w: &mut crate::snapshot::SnapWriter) -> Result<()> {
@@ -179,6 +226,21 @@ impl Engine for NativeEngine {
     fn load_state(&mut self, r: &mut crate::snapshot::SnapReader<'_>) -> Result<()> {
         self.opt.load_state(r)
     }
+}
+
+/// Shared cohort-lane probe for the native engines: plain SGD first (the
+/// phase-1 form), then plain SMBGD at a batch boundary (phase 2). Every
+/// other optimizer state keeps the per-session path.
+fn cohort_lane_for<T: Scalar>(opt: &dyn Optimizer<T>, precision: Precision) -> Option<CohortLane> {
+    if let Some((mu, g)) = opt.cohort_plain() {
+        return Some(CohortLane { mu, g, precision, form: CohortLaneForm::Sgd });
+    }
+    opt.cohort_smbgd().map(|(prm, g)| CohortLane {
+        mu: prm.mu,
+        g,
+        precision,
+        form: CohortLaneForm::Smbgd { p: prm.p, gamma: prm.gamma, beta: prm.beta },
+    })
 }
 
 /// Precision-generic native engine: the whole optimizer state machine —
@@ -284,7 +346,7 @@ impl<T: Scalar> Engine for CastNativeEngine<T> {
             "f64" => Precision::F64,
             _ => return None,
         };
-        self.opt.cohort_plain().map(|(mu, g)| CohortLane { mu, g, precision })
+        cohort_lane_for(self.opt.as_ref(), precision)
     }
 
     fn cohort_sync(&mut self, b: &Mat64, rows: u64) {
@@ -292,6 +354,14 @@ impl<T: Scalar> Engine for CastNativeEngine<T> {
         // lane ran in `T`), so narrowing back is lossless.
         self.opt.b_mut().copy_from(&b.cast());
         self.opt.note_cohort_rows(rows);
+    }
+
+    fn cohort_hhat_prev(&self) -> Mat64 {
+        self.opt.cohort_hhat_prev()
+    }
+
+    fn cohort_sync_smbgd(&mut self, b: &Mat64, hhat_prev: &Mat64, rows: u64) {
+        self.opt.cohort_sync_smbgd(b, hhat_prev, rows);
     }
 
     fn save_state(&self, w: &mut crate::snapshot::SnapWriter) -> Result<()> {
@@ -627,7 +697,7 @@ mod tests {
     }
 
     #[test]
-    fn cohort_lane_offered_only_by_plain_sgd_natives() {
+    fn cohort_lane_offered_by_plain_sgd_and_smbgd_natives() {
         let mut cfg = ExperimentConfig::default();
         cfg.optimizer.kind = OptimizerKind::Sgd;
         let e64 = make_engine(&cfg, Nonlinearity::Tanh).unwrap();
@@ -635,6 +705,7 @@ mod tests {
         assert_eq!(lane.g, Nonlinearity::Tanh);
         assert_eq!(lane.precision, Precision::F64);
         assert_eq!(lane.mu, cfg.optimizer.mu);
+        assert_eq!(lane.form, CohortLaneForm::Sgd);
 
         cfg.precision = Precision::F32;
         let e32 = make_engine(&cfg, Nonlinearity::Cube).unwrap();
@@ -645,10 +716,49 @@ mod tests {
         let eq16 = make_engine(&cfg, Nonlinearity::Cube).unwrap();
         assert!(eq16.cohort_lane().is_none(), "q16 stays per-session");
 
+        // Phase 2: plain SMBGD at a batch boundary offers a lane whose
+        // form carries P structurally and (γ, β) as per-lane data.
         cfg.precision = Precision::F64;
         cfg.optimizer.kind = OptimizerKind::Smbgd;
-        let smbgd = make_engine(&cfg, Nonlinearity::Cube).unwrap();
-        assert!(smbgd.cohort_lane().is_none(), "mini-batch optimizers stay per-session");
+        let mut smbgd = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        let lane = smbgd.cohort_lane().expect("plain SMBGD native is cohort-capable");
+        assert_eq!(
+            lane.form,
+            CohortLaneForm::Smbgd {
+                p: cfg.optimizer.p,
+                gamma: cfg.optimizer.gamma,
+                beta: cfg.optimizer.beta,
+            }
+        );
+        // Mid-batch state (a partial chunk left the stream unaligned)
+        // withdraws the offer until the tenant realigns.
+        let odd = Mat64::from_fn(1, cfg.m, |_, c| 0.1 + c as f64 * 0.05);
+        smbgd.submit_chunk(&odd).unwrap();
+        assert!(smbgd.cohort_lane().is_none(), "mid-batch SMBGD stays per-session");
+
+        // Mbgd (the plain-average mini-batch form) has no cohort kernel.
+        cfg.optimizer.kind = OptimizerKind::Mbgd;
+        let mbgd = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+        assert!(mbgd.cohort_lane().is_none(), "mbgd stays per-session");
+    }
+
+    #[test]
+    fn smbgd_cohort_sync_round_trips_accumulator() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.optimizer.kind = OptimizerKind::Smbgd;
+        for precision in [Precision::F64, Precision::F32] {
+            cfg.precision = precision;
+            let mut eng = make_engine(&cfg, Nonlinearity::Cube).unwrap();
+            assert_eq!(eng.cohort_hhat_prev(), Mat64::zeros(cfg.n, cfg.n));
+            let mut b = eng.b();
+            b.scale(0.25); // exactly representable in both precisions
+            let h = Mat64::from_fn(cfg.n, cfg.n, |i, j| (i as f64 - j as f64) * 0.125);
+            let rows = (cfg.optimizer.p * 16) as u64;
+            eng.cohort_sync_smbgd(&b, &h, rows);
+            assert_eq!(eng.b(), b, "{precision:?}: installed B must round-trip");
+            assert_eq!(eng.cohort_hhat_prev(), h, "{precision:?}: Ĥ_prev must round-trip");
+            assert_eq!(eng.samples_done(), rows);
+        }
     }
 
     #[test]

@@ -306,6 +306,12 @@ pub struct HubSummary {
     /// events plus producers blocked on the full channel, so it can
     /// exceed the configured capacity (see [`HubMetrics::queue_depth`]).
     pub max_queue_depth: usize,
+    /// Fraction of cohort-eligible sessions that actually shared a fused
+    /// kernel with at least one peer at some point (peak pool width ≥ 2
+    /// over peak width ≥ 1; see `StateDirectory::pool_occupancy`). 0.0
+    /// when no session was cohort-eligible. Shape-aware placement exists
+    /// to raise this number.
+    pub pool_occupancy: f64,
 }
 
 impl HubSummary {
@@ -338,13 +344,14 @@ impl HubSummary {
         }
         out.push_str(&format!(
             "total: {} samples over {} sessions on {} shard(s) in {:.3} s — {:.0} samples/s \
-             (max queue depth {})\n",
+             (max queue depth {}, pool occupancy {:.2})\n",
             self.total_samples,
             self.sessions.len(),
             self.shards,
             self.elapsed_secs,
             self.aggregate_sps,
-            self.max_queue_depth
+            self.max_queue_depth,
+            self.pool_occupancy
         ));
         out
     }
@@ -562,6 +569,7 @@ impl Hub {
             total_samples,
             aggregate_sps: safe_rate(total_samples, elapsed),
             max_queue_depth,
+            pool_occupancy: directory.pool_occupancy(),
             sessions,
         })
     }
@@ -730,6 +738,7 @@ mod tests {
             total_samples: 128,
             aggregate_sps: safe_rate(128, 0.0),
             max_queue_depth: 0,
+            pool_occupancy: 0.0,
         };
         assert_eq!(summary.aggregate_sps, 0.0);
         let table = summary.render_table();

@@ -35,7 +35,7 @@
 //!   queue depth are observable while the hub runs (ROADMAP item from the
 //!   adaptive-control PR).
 
-use super::cohort::CohortExecutor;
+use super::cohort::{affinity_key, CohortExecutor, CohortKey};
 use super::engine::make_engine;
 use super::hub::{HubMetrics, HubOptions, HubSummary, SessionReport};
 use super::server::{
@@ -98,6 +98,50 @@ pub trait Placement: Send {
     /// fleet reduces to session counts times a constant, reproducing the
     /// pre-cost behaviour exactly.
     fn place(&mut self, session: u64, loads: &[usize]) -> usize;
+    /// Context-aware variant: the hub passes observed service pressure
+    /// and cohort-shape affinity alongside the static loads. Default
+    /// delegates to [`place`](Self::place), so context-blind policies
+    /// (e.g. [`ModuloPlacement`]) are byte-identical with or without it.
+    fn place_with(&mut self, session: u64, loads: &[usize], _ctx: &PlacementCtx<'_>) -> usize {
+        self.place(session, loads)
+    }
+}
+
+/// Observed-state context the elastic hub hands to
+/// [`Placement::place_with`], indexed like `loads` (one entry per live
+/// shard slot, in the same compacted order).
+pub struct PlacementCtx<'a> {
+    /// Rate-weighted pressure per slot: Σ over live tenants of
+    /// `cost × observed samples/s`. All zeros until tenants have streamed
+    /// (admission storms see a neutral context and stay deterministic).
+    pub rate_loads: &'a [f64],
+    /// Live tenants per slot whose derived cohort pool key matches the
+    /// incoming session's (0 everywhere when the session is ineligible).
+    pub affinity: &'a [usize],
+}
+
+/// Lowest-pressure slot among `cands`: observed rate-weighted pressure
+/// when any slot has a measurement, static cost otherwise; ties break by
+/// static load, then lowest index (preserving the deterministic cold
+/// -start behaviour of [`LeastLoadedPlacement`]).
+fn lowest_pressure_slot(
+    cands: impl Iterator<Item = usize>,
+    loads: &[usize],
+    rate_loads: &[f64],
+) -> usize {
+    let measured = rate_loads.iter().any(|&r| r > 0.0);
+    cands
+        .min_by(|&a, &b| {
+            if measured {
+                rate_loads[a]
+                    .total_cmp(&rate_loads[b])
+                    .then(loads[a].cmp(&loads[b]))
+                    .then(a.cmp(&b))
+            } else {
+                loads[a].cmp(&loads[b]).then(a.cmp(&b))
+            }
+        })
+        .unwrap_or(0)
 }
 
 /// The batch hub's deterministic rule: `session_id % shards`.
@@ -131,6 +175,62 @@ impl Placement for LeastLoadedPlacement {
             .map(|(i, _)| i)
             .unwrap_or(0)
     }
+
+    /// Rate-weighted refinement: once tenants have streamed, the static
+    /// cost model is replaced by observed pressure (`cost × samples/s`),
+    /// so a shard whose tenants run hot (e.g. hosting wide cohort pools)
+    /// absorbs fewer newcomers than its static load suggests. With no
+    /// measurements yet the static rule applies unchanged.
+    fn place_with(&mut self, _session: u64, loads: &[usize], ctx: &PlacementCtx<'_>) -> usize {
+        if ctx.rate_loads.len() != loads.len() {
+            return self.place(_session, loads);
+        }
+        lowest_pressure_slot(0..loads.len(), loads, ctx.rate_loads)
+    }
+}
+
+/// Shape-aware policy: steer a cohort-eligible session toward the shard
+/// already hosting the most tenants with its pool key, so compatible
+/// tenants actually land in the same [`super::cohort::CohortExecutor`]
+/// pool and step tenant-major. Ineligible sessions (and cold starts with
+/// no match anywhere) fall back to the rate-aware least-loaded rule.
+/// Like every policy, this only picks the *host* — pooled and solo
+/// execution are bit-identical, so affinity can never change results.
+pub struct CohortAffinityPlacement;
+
+impl Placement for CohortAffinityPlacement {
+    fn name(&self) -> &'static str {
+        "cohort_affinity"
+    }
+
+    /// Context-free fallback (no affinity signal): least-loaded.
+    fn place(&mut self, _session: u64, loads: &[usize]) -> usize {
+        loads
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &load)| (load, i))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    fn place_with(&mut self, _session: u64, loads: &[usize], ctx: &PlacementCtx<'_>) -> usize {
+        if ctx.affinity.len() != loads.len() || ctx.rate_loads.len() != loads.len() {
+            return self.place(_session, loads);
+        }
+        let best = ctx.affinity.iter().copied().max().unwrap_or(0);
+        if best == 0 {
+            // No shard hosts a matching pool (or the session is not
+            // cohort-eligible): place for balance.
+            return lowest_pressure_slot(0..loads.len(), loads, ctx.rate_loads);
+        }
+        // Most matching lanes wins; equal-affinity ties go to the
+        // lowest-pressure slot among them.
+        lowest_pressure_slot(
+            (0..loads.len()).filter(|&i| ctx.affinity[i] == best),
+            loads,
+            ctx.rate_loads,
+        )
+    }
 }
 
 /// Build the policy named by a config-layer [`PlacementKind`].
@@ -138,6 +238,7 @@ pub fn build_placement(kind: PlacementKind) -> Box<dyn Placement> {
     match kind {
         PlacementKind::LeastLoaded => Box::new(LeastLoadedPlacement),
         PlacementKind::Modulo => Box::new(ModuloPlacement),
+        PlacementKind::CohortAffinity => Box::new(CohortAffinityPlacement),
     }
 }
 
@@ -675,6 +776,12 @@ struct Entry {
     cfg: ExperimentConfig,
     /// Samples this session streams in total (departure-truncated).
     total: usize,
+    /// The runner's placement cost (`n × m × chunk`), kept for the
+    /// rate-weighted pressure signal placement reads.
+    cost: usize,
+    /// When this session was (first) admitted — the denominator of its
+    /// observed samples/s.
+    attached_at: Instant,
 }
 
 /// What a shard worker thread returns: its session reports and the
@@ -833,15 +940,39 @@ impl ElasticHub {
 
     /// Place a session on a live shard: the policy sees the live slots'
     /// loads compacted (so retired holes are invisible to it) and its
-    /// pick maps back to a real slot index.
-    fn pick_shard(&mut self, id: u64) -> Result<usize> {
+    /// pick maps back to a real slot index. Alongside the static loads,
+    /// the policy gets observed context: rate-weighted pressure (each
+    /// live tenant's cost × measured samples/s) and, when `pool_key` is
+    /// `Some`, how many live tenants per slot would share that session's
+    /// cohort pool.
+    fn pick_shard(&mut self, id: u64, pool_key: Option<CohortKey>) -> Result<usize> {
         let live = self.live_shards();
         if live.is_empty() {
             bail!("hub has no live shards");
         }
         let loads: Vec<usize> =
             live.iter().map(|&s| self.active[s].load(Ordering::Relaxed)).collect();
-        let pick = self.placement.place(id, &loads);
+        let mut rate_loads = vec![0.0_f64; live.len()];
+        let mut affinity = vec![0_usize; live.len()];
+        for entry in self.entries.values() {
+            if entry.parked.is_some() {
+                continue;
+            }
+            let st = entry.status.snapshot();
+            if st.phase.is_terminal() || st.phase == SessionPhase::Detached {
+                continue;
+            }
+            let Some(slot) = live.iter().position(|&s| s == entry.shard) else { continue };
+            let elapsed = entry.attached_at.elapsed().as_secs_f64();
+            if elapsed > 0.0 && st.samples > 0 {
+                rate_loads[slot] += entry.cost as f64 * (st.samples as f64 / elapsed);
+            }
+            if pool_key.is_some() && affinity_key(&entry.cfg, self.g) == pool_key {
+                affinity[slot] += 1;
+            }
+        }
+        let ctx = PlacementCtx { rate_loads: &rate_loads, affinity: &affinity };
+        let pick = self.placement.place_with(id, &loads, &ctx);
         if pick >= live.len() {
             bail!(
                 "placement '{}' returned index {pick} for session {id}, but only {} shard(s) \
@@ -881,7 +1012,7 @@ impl ElasticHub {
         let cfg = &spec.cfg;
         cfg.validate().with_context(|| format!("attaching session '{}'", cfg.name))?;
         let id = self.next_id;
-        let shard = self.pick_shard(id)?;
+        let shard = self.pick_shard(id, affinity_key(cfg, self.g))?;
 
         // Build everything fallible before touching shared state.
         let engine = make_engine(cfg, self.g)
@@ -942,6 +1073,8 @@ impl ElasticHub {
                 parked: None,
                 cfg,
                 total,
+                cost,
+                attached_at: Instant::now(),
             },
         );
         Ok(handle)
@@ -1040,7 +1173,11 @@ impl ElasticHub {
     /// Re-attach a detached session on the shard placement chooses.
     /// Returns the shard.
     pub fn reattach(&mut self, id: u64) -> Result<usize> {
-        let shard = self.pick_shard(id)?;
+        let key = self
+            .entries
+            .get(&id)
+            .and_then(|e| affinity_key(&e.cfg, self.g));
+        let shard = self.pick_shard(id, key)?;
         self.reattach_to(id, shard)?;
         Ok(shard)
     }
@@ -1709,7 +1846,7 @@ impl ElasticHub {
             .with_context(|| format!("restoring session {id} from {}", path.display()))?;
         r.expect_end()?;
 
-        let shard = self.pick_shard(id)?;
+        let shard = self.pick_shard(id, affinity_key(&cfg, self.g))?;
         status.set_shard(shard);
         let cost = runner.placement_cost();
         self.active[shard].fetch_add(cost, Ordering::Relaxed);
@@ -1750,6 +1887,8 @@ impl ElasticHub {
                 parked: None,
                 cfg,
                 total,
+                cost,
+                attached_at: Instant::now(),
             },
         );
         Ok(handle)
@@ -1877,6 +2016,7 @@ impl ElasticHub {
             total_samples,
             aggregate_sps: safe_rate(total_samples, elapsed),
             max_queue_depth,
+            pool_occupancy: self.directory.pool_occupancy(),
             sessions,
         })
     }
@@ -2067,6 +2207,41 @@ mod tests {
         // A departure freed shard 0: the next arrival reuses it even
         // though modulo would have pinned session 3 to shard 1.
         assert_eq!(p.place(3, &[0, 2]), 0);
+    }
+
+    #[test]
+    fn least_loaded_uses_observed_rates_only_once_measured() {
+        let mut p = LeastLoadedPlacement;
+        // No measurements yet (admission storm): static loads decide, so
+        // context-aware placement is exactly the static rule.
+        let cold = PlacementCtx { rate_loads: &[0.0, 0.0], affinity: &[0, 0] };
+        assert_eq!(p.place_with(0, &[3, 5], &cold), 0);
+        // Shard 0 carries less static load but its tenants run much
+        // hotter: observed pressure sends the newcomer to shard 1.
+        let hot = PlacementCtx { rate_loads: &[9e6, 1e6], affinity: &[0, 0] };
+        assert_eq!(p.place_with(1, &[3, 5], &hot), 1);
+        // Equal pressure ties break by static load, then index.
+        let tie = PlacementCtx { rate_loads: &[2e6, 2e6], affinity: &[0, 0] };
+        assert_eq!(p.place_with(2, &[5, 3], &tie), 1);
+        // Modulo ignores context entirely (byte-identical behaviour).
+        let mut m = ModuloPlacement;
+        assert_eq!(m.place_with(5, &[9, 0, 0], &hot), 2);
+    }
+
+    #[test]
+    fn cohort_affinity_steers_toward_matching_pools() {
+        let mut p = CohortAffinityPlacement;
+        assert_eq!(p.name(), "cohort_affinity");
+        // Shard 2 hosts the most pool-key matches: affinity wins even
+        // though shard 0 is emptier.
+        let ctx = PlacementCtx { rate_loads: &[0.0, 0.0, 0.0], affinity: &[0, 1, 2] };
+        assert_eq!(p.place_with(0, &[0, 4, 4], &ctx), 2);
+        // Affinity ties go to the lowest-pressure matching slot.
+        let ctx = PlacementCtx { rate_loads: &[0.0, 0.0, 0.0], affinity: &[0, 2, 2] };
+        assert_eq!(p.place_with(1, &[0, 9, 4], &ctx), 2);
+        // No match anywhere (or an ineligible session): least-loaded.
+        let ctx = PlacementCtx { rate_loads: &[0.0, 0.0, 0.0], affinity: &[0, 0, 0] };
+        assert_eq!(p.place_with(2, &[7, 2, 4], &ctx), 1);
     }
 
     #[test]

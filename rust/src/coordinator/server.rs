@@ -653,6 +653,19 @@ impl SessionRunner {
         self.engine.cohort_sync(b, rows);
     }
 
+    /// Wire-format snapshot of the SMBGD cross-batch accumulator (only
+    /// meaningful on lanes whose [`cohort_lane`](Self::cohort_lane)
+    /// reported the SMBGD form).
+    pub(crate) fn cohort_hhat_prev(&self) -> Mat64 {
+        self.engine.cohort_hhat_prev()
+    }
+
+    /// Install the SMBGD cohort step's `(B, Ĥ_prev)` and account its
+    /// consumed rows / completed mini-batches.
+    pub(crate) fn cohort_sync_smbgd(&mut self, b: &Mat64, hhat_prev: &Mat64, rows: u64) {
+        self.engine.cohort_sync_smbgd(b, hhat_prev, rows);
+    }
+
     /// Engine chunk size (part of the cohort shape key: lanes must cut
     /// chunks on identical boundaries to step in lockstep).
     pub(crate) fn chunk_size(&self) -> usize {

@@ -169,6 +169,12 @@ pub struct SessionStatus {
     /// Always 0 for floating-point tenants; for q16/q32 tenants this is
     /// the divergence-surveillance signal (their values are never NaN).
     pub saturations: u64,
+    /// Peak cohort pool width this tenant has shared a fused kernel with
+    /// (lanes, including itself). 0 = never cohort-eligible (per-session
+    /// path throughout); 1 = eligible but so far alone in its pool; ≥ 2 =
+    /// actually shared lane-level SIMD work. Monotone — it survives pool
+    /// churn so finish-time occupancy accounting still sees it.
+    pub pool: usize,
     /// Why this tenant was quarantined (None while healthy).
     pub fault: Option<String>,
 }
@@ -187,6 +193,7 @@ impl SessionStatus {
             rollbacks: 0,
             queue_depth: 0,
             saturations: 0,
+            pool: 0,
             fault: None,
         }
     }
@@ -277,6 +284,15 @@ impl StatusCell {
         s.rollbacks = rollbacks;
         s.queue_depth = queue_depth;
         s.saturations = saturations;
+    }
+
+    /// Record the width of the cohort pool this tenant currently shares
+    /// (the executor publishes on every admission). Monotone max: the
+    /// record keeps the *peak* width, so occupancy accounting at finish
+    /// time still sees sessions whose pool-mates already drained.
+    pub fn set_pool_width(&self, width: usize) {
+        let mut s = write_lock(&self.inner);
+        s.pool = s.pool.max(width);
     }
 }
 
@@ -454,7 +470,9 @@ impl StateDirectory {
     /// Render the live fleet-health table (`serve-many --status-every`).
     /// The `sat` column is the tenant's cumulative fixed-point
     /// saturation-latch count (`-` while zero — always, for float
-    /// tenants); the `press` column is the hosting shard's latest ingest
+    /// tenants); the `pool` column is the tenant's peak cohort pool
+    /// width (`-` for tenants that never took the cohort path); the
+    /// `press` column is the hosting shard's latest ingest
     /// pressure as seen by the autoscaler (`-` until it publishes a
     /// reading); the `faults` column is the hosting shard's worker
     /// fault/restart count (`-` while zero). Footers summarize scaling
@@ -465,12 +483,16 @@ impl StateDirectory {
         let mut out = String::new();
         out.push_str(
             "session  phase        shard    samples    amari  resets  drifts  rollbk  depth  \
-             sat  press  faults\n",
+             sat  pool  press  faults\n",
         );
         for s in self.statuses() {
             let sat = match s.saturations {
                 0 => format!("{:>3}", "-"),
                 n => format!("{n:>3}"),
+            };
+            let pool = match s.pool {
+                0 => format!("{:>4}", "-"),
+                w => format!("{w:>4}"),
             };
             let press = match scale.pressure.get(s.shard) {
                 Some(p) if p.is_finite() => format!("{p:>5.2}"),
@@ -481,7 +503,8 @@ impl StateDirectory {
                 _ => format!("{:>6}", "-"),
             };
             out.push_str(&format!(
-                "{:>7}  {:<11}  {:>5}  {:>9}  {:>7.4}  {:>6}  {:>6}  {:>6}  {:>5}  {}  {}  {}\n",
+                "{:>7}  {:<11}  {:>5}  {:>9}  {:>7.4}  {:>6}  {:>6}  {:>6}  {:>5}  {}  {}  {}  \
+                 {}\n",
                 s.id,
                 s.phase.name(),
                 s.shard,
@@ -492,6 +515,7 @@ impl StateDirectory {
                 s.rollbacks,
                 s.queue_depth,
                 sat,
+                pool,
                 press,
                 faults
             ));
@@ -524,6 +548,21 @@ impl StateDirectory {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Fraction of cohort-eligible tenants that actually shared a fused
+    /// kernel with at least one other lane (peak pool width ≥ 2), over
+    /// tenants that ever took the cohort path (peak width ≥ 1). 0.0 when
+    /// no tenant was cohort-eligible. This is the fleet's *pool
+    /// occupancy* — the signal shape-aware placement tries to raise.
+    pub fn pool_occupancy(&self) -> f64 {
+        let statuses = self.statuses();
+        let eligible = statuses.iter().filter(|s| s.pool >= 1).count();
+        if eligible == 0 {
+            return 0.0;
+        }
+        let sharing = statuses.iter().filter(|s| s.pool >= 2).count();
+        sharing as f64 / eligible as f64
     }
 
     /// Ids of every tenant currently in the terminal `Quarantined`
@@ -737,6 +776,34 @@ mod tests {
         let row = dir.render_status_table().lines().nth(1).unwrap().to_string();
         assert!(row.contains(" 17 "), "latched count surfaces: {row:?}");
         assert_eq!(row.matches('-').count(), dashes - 1, "sat dash replaced: {row:?}");
+    }
+
+    #[test]
+    fn pool_column_and_occupancy_track_peak_widths() {
+        let dir = StateDirectory::new();
+        let a = StatusCell::new(1, "cohort-a");
+        let b = StatusCell::new(2, "cohort-b");
+        let c = StatusCell::new(3, "solo");
+        for (id, cell) in [(1, &a), (2, &b), (3, &c)] {
+            dir.register(id, StateStore::new(Mat64::eye(2, 2)), cell.clone());
+        }
+        // Nobody took the cohort path yet: all dashes, occupancy 0.
+        assert_eq!(dir.pool_occupancy(), 0.0);
+        // a and b share a 2-lane pool; c stays per-session (pool = 0).
+        a.set_pool_width(1);
+        a.set_pool_width(2);
+        b.set_pool_width(2);
+        let table = dir.render_status_table();
+        assert!(table.contains("pool"), "header carries the pool column: {table}");
+        let row_a = table.lines().nth(1).expect("tenant row");
+        assert!(row_a.contains("  2  "), "peak width surfaces: {row_a:?}");
+        assert_eq!(dir.pool_occupancy(), 1.0, "both eligible tenants share");
+        // Peak is monotone: a shrink back to a lone lane is not recorded.
+        a.set_pool_width(1);
+        assert_eq!(dir.status(1).unwrap().pool, 2);
+        // An eligible-but-alone tenant halves occupancy.
+        c.set_pool_width(1);
+        assert!((dir.pool_occupancy() - 2.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

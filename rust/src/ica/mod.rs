@@ -85,6 +85,34 @@ pub trait Optimizer<T: Scalar = f64>: Send {
     /// [`cohort_plain`](Self::cohort_plain); default is a no-op.
     fn note_cohort_rows(&mut self, _rows: u64) {}
 
+    /// Cohort-execution probe for the mini-batch family: `Some((params,
+    /// g))` iff this optimizer is *exactly* the plain SMBGD form at a
+    /// batch boundary, so a [`crate::linalg::CohortSmbgdState`] lane
+    /// loaded with `(b(), Ĥ_prev, μ, γ, β)` reproduces its fused block
+    /// path bit-for-bit. Mid-batch state (`p_idx != 0`) must return
+    /// `None` — the cohort kernel only steps whole mini-batches. Default:
+    /// `None` (everything that isn't plain SMBGD keeps the solo path).
+    fn cohort_smbgd(&self) -> Option<(SmbgdParams, Nonlinearity)> {
+        None
+    }
+
+    /// The cross-batch accumulator `Ĥ_prev` in the f64 wire format, for
+    /// loading into an SMBGD cohort lane. Only called on optimizers that
+    /// returned `Some` from [`cohort_smbgd`](Self::cohort_smbgd).
+    fn cohort_hhat_prev(&self) -> Mat64 {
+        unreachable!("cohort_hhat_prev on '{}' (not SMBGD-cohort-eligible)", self.name())
+    }
+
+    /// Install the state an SMBGD cohort step produced for this lane:
+    /// `B`, the latched `Ĥ_prev` (which is also the post-latch `Ĥ` — the
+    /// solo invariant at every batch boundary), and account `rows`
+    /// samples / `rows / P` completed mini-batches. Only called on
+    /// optimizers that returned `Some` from
+    /// [`cohort_smbgd`](Self::cohort_smbgd).
+    fn cohort_sync_smbgd(&mut self, _b: &Mat64, _hhat_prev: &Mat64, _rows: u64) {
+        unreachable!("cohort_sync_smbgd on '{}' (not SMBGD-cohort-eligible)", self.name())
+    }
+
     /// Serialize the optimizer's full learning state (matrix, rate,
     /// accumulators, sample clock) into a detach-to-disk snapshot. The
     /// format is a contract with [`load_state`](Self::load_state): a

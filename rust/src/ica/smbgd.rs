@@ -21,7 +21,7 @@
 
 use super::nonlinearity::{with_g, Nonlinearity};
 use super::Optimizer;
-use crate::linalg::{fused, FusedScratch, Mat, Scalar};
+use crate::linalg::{fused, FusedScratch, Mat, Mat64, Scalar};
 
 /// SMBGD hyperparameters (paper §IV notation).
 #[derive(Clone, Copy, Debug)]
@@ -266,6 +266,42 @@ impl<T: Scalar> Optimizer<T> for Smbgd<T> {
     fn set_mu(&mut self, mu: f64) {
         assert!(mu > 0.0);
         self.params.mu = mu;
+    }
+
+    /// SMBGD is cohort-eligible at batch boundaries: the stale-`B`
+    /// mini-batch pipeline is *more* regular than SGD (lanes share the
+    /// structure, differ only in `(Ĥ_prev, μ, γ, β)` accumulator state),
+    /// and [`crate::linalg::CohortSmbgdState`] replays the fused block
+    /// path per lane bit-for-bit. Mid-batch (`p_idx != 0` — a partial
+    /// chunk left the stream unaligned) the tenant stays on the solo path
+    /// until it realigns; the coordinator's native chunk size is a
+    /// multiple of P, so this is the steady state, not the exception.
+    fn cohort_smbgd(&self) -> Option<(SmbgdParams, Nonlinearity)> {
+        if self.p_idx == 0 {
+            Some((self.params, self.g))
+        } else {
+            None
+        }
+    }
+
+    fn cohort_hhat_prev(&self) -> Mat64 {
+        // Widening T → f64 is lossless; the cohort lane narrows back
+        // per element, so the round trip is bit-exact.
+        self.hhat_prev.cast()
+    }
+
+    fn cohort_sync_smbgd(&mut self, b: &Mat64, hhat_prev: &Mat64, rows: u64) {
+        debug_assert_eq!(self.p_idx, 0, "cohort sync mid-batch");
+        debug_assert_eq!(rows % self.params.p as u64, 0, "cohort sync partial batch");
+        b.cast_into(&mut self.b);
+        // At every batch boundary the solo invariant is Ĥ == Ĥ_prev
+        // (the latch just ran), so install the latched accumulator as
+        // both — a detach-to-disk snapshot cut here is bit-identical to
+        // the solo run's.
+        hhat_prev.cast_into(&mut self.hhat);
+        hhat_prev.cast_into(&mut self.hhat_prev);
+        self.samples += rows;
+        self.batches += rows / self.params.p as u64;
     }
 
     fn save_state(&self, w: &mut crate::snapshot::SnapWriter) -> anyhow::Result<()> {

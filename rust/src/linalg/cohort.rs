@@ -37,6 +37,22 @@
 //! per-sample gather narrow through `Scalar::scalar_from_f64`, exactly
 //! like the per-session `CastNativeEngine` narrows its chunks, so an
 //! `f32` cohort lane sees bit-for-bit the inputs its solo engine would.
+//!
+//! **Explicit SIMD (`--features simd`).** Every lane-minor inner loop
+//! goes through the [`lane_ops`] primitives. On the default build those
+//! are the plain scalar loops; with the `simd` feature on x86_64 they
+//! contract through SSE2 (`__m128d`/`__m128`) — and FMA3 when the build
+//! also enables `fma` *and* `-C target-feature=+fma`. Because lanes are
+//! mathematically independent and the vector ops are element-wise IEEE
+//! single-rounding operations, vectorizing across lanes replays each
+//! lane's exact scalar op sequence: simd == scalar bitwise by
+//! construction, pinned by the same oracles that pin cohort == solo.
+//!
+//! [`CohortSmbgdState`] extends the same SoA layout to SMBGD tenants
+//! (the paper's Fig. 2 datapath): lanes share the stale-`B` mini-batch
+//! pipeline structure and differ only in their `(Ĥ, Ĥ_prev, μ, γ, β)`
+//! accumulator state, stepped per lane bit-identically to
+//! [`crate::ica::Smbgd`]'s fused block path.
 
 use super::{Mat64, Scalar};
 
@@ -234,16 +250,18 @@ impl<T: Scalar> CohortState<T> {
             }
         } else {
             // Sequential accumulation in ascending j per lane — identical
-            // order to fused::dot, lane-minor so the l-loop vectorizes.
+            // order to fused::dot, lane-minor so the l-loop contracts
+            // through `lane_ops` (SIMD under the `simd` feature).
+            let (b, x, y) = (&self.b, &self.x, &mut self.y);
             for i in 0..n {
-                let yrow = &mut self.y[i * lanes..(i + 1) * lanes];
+                let yrow = &mut y[i * lanes..(i + 1) * lanes];
                 yrow.fill(T::zero());
                 for j in 0..m {
-                    let bbase = (i * m + j) * lanes;
-                    let xbase = j * lanes;
-                    for l in 0..lanes {
-                        yrow[l] += self.b[bbase + l] * self.x[xbase + l];
-                    }
+                    lane_ops::mul_acc(
+                        yrow,
+                        &b[(i * m + j) * lanes..][..lanes],
+                        &x[j * lanes..][..lanes],
+                    );
                 }
             }
         }
@@ -254,34 +272,25 @@ impl<T: Scalar> CohortState<T> {
         // Triangular H pass: diagonal y_i² − 1, off-diagonal sym ± skew —
         // the same expressions per lane as the per-session kernel on both
         // builds.
+        let (y, gy, h) = (&self.y, &self.gy, &mut self.h);
         for i in 0..n {
             let ybase = i * lanes;
-            let dbase = (i * self.n + i) * lanes;
-            for l in 0..lanes {
-                let yi = self.y[ybase + l];
-                self.h[dbase + l] = if cfg!(feature = "fma") {
-                    yi.mul_add(yi, -T::one())
-                } else {
-                    yi * yi - T::one()
-                };
-            }
+            let dbase = (i * n + i) * lanes;
+            lane_ops::diag_h(&mut h[dbase..][..lanes], &y[ybase..][..lanes]);
             for j in (i + 1)..n {
                 let jbase = j * lanes;
-                let ij = (i * self.n + j) * lanes;
-                let ji = (j * self.n + i) * lanes;
-                for l in 0..lanes {
-                    let yi = self.y[ybase + l];
-                    let gi = self.gy[ybase + l];
-                    let yj = self.y[jbase + l];
-                    let gj = self.gy[jbase + l];
-                    let (sym, skew) = if cfg!(feature = "fma") {
-                        (yi * yj, gi.mul_add(yj, -(yi * gj)))
-                    } else {
-                        (yi * yj, gi * yj - yi * gj)
-                    };
-                    self.h[ij + l] = sym + skew;
-                    self.h[ji + l] = sym - skew;
-                }
+                let ij = (i * n + j) * lanes;
+                let ji = (j * n + i) * lanes;
+                // i < j ⇒ ij < ji, so one split yields both H halves.
+                let (left, right) = h.split_at_mut(ji);
+                lane_ops::sym_skew(
+                    &mut left[ij..ij + lanes],
+                    &mut right[..lanes],
+                    &y[ybase..][..lanes],
+                    &gy[ybase..][..lanes],
+                    &y[jbase..][..lanes],
+                    &gy[jbase..][..lanes],
+                );
             }
         }
     }
@@ -293,36 +302,235 @@ impl<T: Scalar> CohortState<T> {
     fn apply_update(&mut self) {
         let (n, m, lanes) = (self.n, self.m, self.lanes);
         self.hb[..n * m * lanes].fill(T::zero());
-        for i in 0..n {
-            for k in 0..n {
-                let hbase = (i * n + k) * lanes;
-                for j in 0..m {
-                    let obase = (i * m + j) * lanes;
-                    let bbase = (k * m + j) * lanes;
-                    for l in 0..lanes {
-                        let hik = self.h[hbase + l];
-                        let bkj = self.b[bbase + l];
-                        self.hb[obase + l] = if cfg!(feature = "fma") {
-                            hik.mul_add(bkj, self.hb[obase + l])
-                        } else {
-                            self.hb[obase + l] + hik * bkj
-                        };
+        {
+            let (h, b, hb) = (&self.h, &self.b, &mut self.hb);
+            for i in 0..n {
+                for k in 0..n {
+                    let hbase = (i * n + k) * lanes;
+                    for j in 0..m {
+                        lane_ops::mul_acc(
+                            &mut hb[(i * m + j) * lanes..][..lanes],
+                            &h[hbase..][..lanes],
+                            &b[(k * m + j) * lanes..][..lanes],
+                        );
                     }
                 }
             }
         }
+        let (b, hb, neg_mu) = (&mut self.b, &self.hb, &self.neg_mu);
+        for e in 0..n * m {
+            lane_ops::axpy_lanes(
+                &mut b[e * lanes..][..lanes],
+                &neg_mu[..lanes],
+                &hb[e * lanes..][..lanes],
+            );
+        }
+    }
+}
+
+/// Struct-of-arrays workspace stepping `L` same-shape **SMBGD** tenants
+/// (the paper's Fig. 2 mini-batch datapath) through one fused kernel per
+/// sample. Lanes share the pipeline structure — stale-`B` gradient per
+/// sample, one `B` update per mini-batch of `P` — and differ only in
+/// their accumulator state `(Ĥ_prev, μ, γ, β)`, which stays per-lane
+/// data rather than part of the pool key.
+///
+/// **Bit-identity contract.** Per lane this replays exactly
+/// [`crate::ica::Smbgd`]'s fused block path
+/// (`fused::accumulate_gradient_block` + `apply_accumulated_update` at
+/// `α = −1`): the same `γ`-latch multiply, the same β-decay fold order,
+/// the same `μ·H` AXPY contraction and the same ascending-`k` `Ĥ·B`
+/// accumulation, on the default build and under `fma`/`simd`. The β
+/// scale is applied unconditionally per lane (scale by an exact `1.0`
+/// is a bitwise identity), so the per-session `decay != 1` skip needs
+/// no per-lane branch and lanes with different β coexist in one pool.
+///
+/// Chunks must hold whole mini-batches (`rows % P == 0`) — the
+/// coordinator's native chunk size for SMBGD tenants is `8·P`, so every
+/// pool step starts and ends on a batch boundary and `Ĥ` is dead at the
+/// wire: only `(B, Ĥ_prev)` round-trip through
+/// [`load_lane`](Self::load_lane)/[`store_lane`](Self::store_lane)
+/// (after the latch `Ĥ == Ĥ_prev`, exactly as in the per-session
+/// optimizer).
+pub struct CohortSmbgdState<T: Scalar = f64> {
+    core: CohortState<T>,
+    /// Mini-batch size P shared by every lane (part of the pool key).
+    p: usize,
+    /// Per-lane μ, narrowed from f64 hyperparameter space per load —
+    /// the same `scalar_from_f64` the per-session block step performs.
+    mu: Vec<T>,
+    /// Per-lane cross-batch momentum γ.
+    gamma: Vec<T>,
+    /// Per-lane intra-batch decay β.
+    beta: Vec<T>,
+    /// Running accumulator Ĥ, `hhat[(i*n + j)*lanes + l]`.
+    hhat: Vec<T>,
+    /// Latched Ĥ_prev, same layout.
+    hhat_prev: Vec<T>,
+}
+
+impl<T: Scalar> CohortSmbgdState<T> {
+    /// Workspace for cohorts of `n × m` SMBGD tenants at mini-batch size
+    /// `p` (no lanes yet — buffers grow on first [`begin`](Self::begin)).
+    pub fn new(n: usize, m: usize, p: usize) -> Self {
+        assert!(p >= 1, "CohortSmbgdState: P >= 1");
+        Self {
+            core: CohortState::new(n, m),
+            p,
+            mu: Vec::new(),
+            gamma: Vec::new(),
+            beta: Vec::new(),
+            hhat: Vec::new(),
+            hhat_prev: Vec::new(),
+        }
+    }
+
+    /// Output dimensionality n.
+    pub fn n(&self) -> usize {
+        self.core.n
+    }
+
+    /// Mixture dimensionality m.
+    pub fn m(&self) -> usize {
+        self.core.m
+    }
+
+    /// Mini-batch size P shared by the pool.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Lane count of the step in progress (0 before the first `begin`).
+    pub fn lanes(&self) -> usize {
+        self.core.lanes
+    }
+
+    /// Start a step over `lanes` tenants (grow-only, like
+    /// [`CohortState::begin`]; zero allocations at steady state).
+    pub fn begin(&mut self, lanes: usize) {
+        self.core.begin(lanes);
+        let n = self.core.n;
+        grow(&mut self.mu, lanes);
+        grow(&mut self.gamma, lanes);
+        grow(&mut self.beta, lanes);
+        grow(&mut self.hhat, n * n * lanes);
+        grow(&mut self.hhat_prev, n * n * lanes);
+    }
+
+    /// Scatter one tenant's `(B, Ĥ_prev)` state and `(μ, γ, β)`
+    /// hyperparameters into lane `lane`. All narrowing goes through
+    /// `scalar_from_f64`, exactly like the per-session block step (which
+    /// narrows its params per call) and the snapshot wire (which widens
+    /// `T` state to f64 losslessly), so the round trip is bit-exact.
+    pub fn load_lane(
+        &mut self,
+        lane: usize,
+        b: &Mat64,
+        hhat_prev: &Mat64,
+        mu: f64,
+        gamma: f64,
+        beta: f64,
+    ) {
+        self.core.load_lane(lane, b, mu);
+        let (n, lanes) = (self.core.n, self.core.lanes);
+        assert_eq!(hhat_prev.shape(), (n, n), "load_lane: hhat_prev shape");
         for i in 0..n {
-            for j in 0..m {
-                let base = (i * m + j) * lanes;
-                for l in 0..lanes {
-                    let alpha = self.neg_mu[l];
-                    self.b[base + l] = if cfg!(feature = "fma") {
-                        alpha.mul_add(self.hb[base + l], self.b[base + l])
-                    } else {
-                        self.b[base + l] + alpha * self.hb[base + l]
-                    };
+            let row = hhat_prev.row(i);
+            for j in 0..n {
+                self.hhat_prev[(i * n + j) * lanes + lane] = T::scalar_from_f64(row[j]);
+            }
+        }
+        self.mu[lane] = T::scalar_from_f64(mu);
+        self.gamma[lane] = T::scalar_from_f64(gamma);
+        self.beta[lane] = T::scalar_from_f64(beta);
+    }
+
+    /// Gather lane `lane`'s `(B, Ĥ_prev)` back out to the f64 wire
+    /// format (lossless widening). `Ĥ` needs no wire trip: after the
+    /// end-of-batch latch it equals `Ĥ_prev`.
+    pub fn store_lane(&self, lane: usize, b_out: &mut Mat64, hhat_prev_out: &mut Mat64) {
+        self.core.store_lane(lane, b_out);
+        let (n, lanes) = (self.core.n, self.core.lanes);
+        assert_eq!(hhat_prev_out.shape(), (n, n), "store_lane: hhat_prev shape");
+        for i in 0..n {
+            let row = hhat_prev_out.row_mut(i);
+            for j in 0..n {
+                row[j] = self.hhat_prev[(i * n + j) * lanes + lane].scalar_to_f64();
+            }
+        }
+    }
+
+    /// Step every lane through its chunk of whole mini-batches
+    /// (`rows % P == 0`): per batch, `Ĥ ← γ Ĥ_prev`, then `P` stale-`B`
+    /// gradient folds (`Ĥ ← β Ĥ + μ H` for `p > 0`, `Ĥ ← Ĥ + μ H` at
+    /// `p = 0`), then `B ← B − Ĥ B` and the `Ĥ_prev` latch — per lane
+    /// bit-identical to [`crate::ica::Smbgd::step_batch`] from a batch
+    /// boundary.
+    pub fn step_chunks<G: Fn(T) -> T>(&mut self, g: G, chunks: &[Mat64]) {
+        let rows = self.core.check_chunks(chunks);
+        assert_eq!(rows % self.p, 0, "SMBGD cohort chunks must hold whole mini-batches");
+        let p = self.p;
+        let (n, m, lanes) = (self.core.n, self.core.m, self.core.lanes);
+        for batch in 0..rows / p {
+            // Ĥ ← γ Ĥ_prev — the per-session copy_from + scale collapses
+            // to one exact multiply per element (the copy is exact).
+            for e in 0..n * n {
+                lane_ops::copy_scale(
+                    &mut self.hhat[e * lanes..][..lanes],
+                    &self.hhat_prev[e * lanes..][..lanes],
+                    &self.gamma[..lanes],
+                );
+            }
+            for off in 0..p {
+                // H(B, x_p) at the stale B (unchanged within the batch).
+                self.core.gather(chunks, batch * p + off);
+                self.core.gradient(&g);
+                if off > 0 {
+                    // Ĥ ← β Ĥ (Eq. 1, 0 < p < P).
+                    for e in 0..n * n {
+                        lane_ops::scale_lanes(
+                            &mut self.hhat[e * lanes..][..lanes],
+                            &self.beta[..lanes],
+                        );
+                    }
+                }
+                // Ĥ ← Ĥ + μ H — the same axpy_fold contraction per lane.
+                for e in 0..n * n {
+                    lane_ops::axpy_lanes(
+                        &mut self.hhat[e * lanes..][..lanes],
+                        &self.mu[..lanes],
+                        &self.core.h[e * lanes..][..lanes],
+                    );
                 }
             }
+            // B ← B − Ĥ B: ascending-k Ĥ·B accumulation, then the α = −1
+            // fold (μ is already folded into Ĥ) — exactly
+            // `apply_accumulated_update(b, hhat, -1, hb)` per lane.
+            self.core.hb[..n * m * lanes].fill(T::zero());
+            {
+                let (hhat, b, hb) = (&self.hhat, &self.core.b, &mut self.core.hb);
+                for i in 0..n {
+                    for k in 0..n {
+                        let hbase = (i * n + k) * lanes;
+                        for j in 0..m {
+                            lane_ops::mul_acc(
+                                &mut hb[(i * m + j) * lanes..][..lanes],
+                                &hhat[hbase..][..lanes],
+                                &b[(k * m + j) * lanes..][..lanes],
+                            );
+                        }
+                    }
+                }
+            }
+            for e in 0..n * m {
+                lane_ops::fold_neg(
+                    &mut self.core.b[e * lanes..][..lanes],
+                    &self.core.hb[e * lanes..][..lanes],
+                );
+            }
+            // Latch Ĥ_prev ← Ĥ for the cross-batch momentum.
+            let len = n * n * lanes;
+            self.hhat_prev[..len].copy_from_slice(&self.hhat[..len]);
         }
     }
 }
@@ -335,9 +543,769 @@ fn grow<T: Scalar>(v: &mut Vec<T>, len: usize) {
     }
 }
 
+/// Lane-minor inner-loop primitives shared by [`CohortState`] and
+/// [`CohortSmbgdState`]. Each operates on length-`lanes` slices and
+/// applies one element-wise op per lane with the **active build's
+/// contraction** (plain ops on the default build, `mul_add` under
+/// `fma`) — the same per-element expression the hand-written loops used,
+/// so routing through these helpers is bitwise-neutral.
+///
+/// With `--features simd` on x86_64 each primitive first tries the
+/// [`simd`] kernels: element-wise IEEE single-rounding vector ops
+/// (SSE2 mul/add/sub, FMA3 `fmadd` when the build contracts), which
+/// produce the identical bits lane-for-lane. The scalar loops remain the
+/// fallback for remainder lanes, non-x86_64 targets, and scalar types
+/// without a vector kernel (the fixed-point `Scalar`s).
+mod lane_ops {
+    use super::simd;
+    use super::Scalar;
+
+    /// `dst[l] += a[l] * b[l]` (contracted to `a.mul_add(b, dst)` under
+    /// `fma`) — the `y = Bx` accumulation and the ascending-`k` `H·B`
+    /// accumulation.
+    #[inline(always)]
+    pub fn mul_acc<T: Scalar>(dst: &mut [T], a: &[T], b: &[T]) {
+        if simd::mul_acc(dst, a, b) {
+            return;
+        }
+        if cfg!(feature = "fma") {
+            for (d, (&a, &b)) in dst.iter_mut().zip(a.iter().zip(b)) {
+                *d = a.mul_add(b, *d);
+            }
+        } else {
+            for (d, (&a, &b)) in dst.iter_mut().zip(a.iter().zip(b)) {
+                *d += a * b;
+            }
+        }
+    }
+
+    /// `dst[l] = y[l]·y[l] − 1` — the diagonal of the triangular `H`.
+    #[inline(always)]
+    pub fn diag_h<T: Scalar>(dst: &mut [T], y: &[T]) {
+        if simd::diag_h(dst, y) {
+            return;
+        }
+        for (d, &yi) in dst.iter_mut().zip(y) {
+            *d = if cfg!(feature = "fma") {
+                yi.mul_add(yi, -T::one())
+            } else {
+                yi * yi - T::one()
+            };
+        }
+    }
+
+    /// Off-diagonal `H` pair: `sym = y_i·y_j`,
+    /// `skew = g_i·y_j − y_i·g_j`, `h[ij] = sym + skew`,
+    /// `h[ji] = sym − skew` (skew contracted under `fma`).
+    #[inline(always)]
+    pub fn sym_skew<T: Scalar>(
+        hij: &mut [T],
+        hji: &mut [T],
+        yi: &[T],
+        gi: &[T],
+        yj: &[T],
+        gj: &[T],
+    ) {
+        if simd::sym_skew(hij, hji, yi, gi, yj, gj) {
+            return;
+        }
+        for l in 0..hij.len() {
+            let (sym, skew) = if cfg!(feature = "fma") {
+                (yi[l] * yj[l], gi[l].mul_add(yj[l], -(yi[l] * gj[l])))
+            } else {
+                (yi[l] * yj[l], gi[l] * yj[l] - yi[l] * gj[l])
+            };
+            hij[l] = sym + skew;
+            hji[l] = sym - skew;
+        }
+    }
+
+    /// `dst[l] += alpha[l] * src[l]` with a **per-lane** coefficient —
+    /// the `B ← B − μ·HB` fold (`alpha = −μ`) and the `Ĥ += μ·H` fold,
+    /// contracted exactly like `fused::axpy_fold`.
+    #[inline(always)]
+    pub fn axpy_lanes<T: Scalar>(dst: &mut [T], alpha: &[T], src: &[T]) {
+        if simd::axpy_lanes(dst, alpha, src) {
+            return;
+        }
+        if cfg!(feature = "fma") {
+            for (d, (&a, &s)) in dst.iter_mut().zip(alpha.iter().zip(src)) {
+                *d = a.mul_add(s, *d);
+            }
+        } else {
+            for (d, (&a, &s)) in dst.iter_mut().zip(alpha.iter().zip(src)) {
+                *d += a * s;
+            }
+        }
+    }
+
+    /// `dst[l] = src[l] * alpha[l]` — the `Ĥ ← γ Ĥ_prev` latch (one
+    /// exact copy + one multiply, same bits as copy-then-scale).
+    #[inline(always)]
+    pub fn copy_scale<T: Scalar>(dst: &mut [T], src: &[T], alpha: &[T]) {
+        if simd::copy_scale(dst, src, alpha) {
+            return;
+        }
+        for (d, (&s, &a)) in dst.iter_mut().zip(src.iter().zip(alpha)) {
+            *d = s * a;
+        }
+    }
+
+    /// `dst[l] *= alpha[l]` — the per-lane β decay.
+    #[inline(always)]
+    pub fn scale_lanes<T: Scalar>(dst: &mut [T], alpha: &[T]) {
+        if simd::scale_lanes(dst, alpha) {
+            return;
+        }
+        for (d, &a) in dst.iter_mut().zip(alpha) {
+            *d = *d * a;
+        }
+    }
+
+    /// `dst[l] += (−1) · src[l]` — the SMBGD `B ← B − ĤB` fold. On both
+    /// builds this is bit-identical to plain subtraction (`−1·s` is an
+    /// exact negation, and `fma(−1, s, d)` rounds `d − s` once, the same
+    /// as the default path's `d + (−1·s)`), which is what the SIMD
+    /// kernel computes.
+    #[inline(always)]
+    pub fn fold_neg<T: Scalar>(dst: &mut [T], src: &[T]) {
+        if simd::fold_neg(dst, src) {
+            return;
+        }
+        if cfg!(feature = "fma") {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = (-T::one()).mul_add(s, *d);
+            }
+        } else {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += -T::one() * s;
+            }
+        }
+    }
+}
+
+/// Explicit SIMD kernels for the [`lane_ops`] primitives (x86_64 only;
+/// SSE2 is baseline so no runtime detection is needed). Each front
+/// function returns `true` iff it handled the slices — `false` hands
+/// back to the scalar loop (non-float `Scalar`s, or a contracted build
+/// without hardware FMA, where `_mm_fmadd_*` cannot be emitted and the
+/// scalar `mul_add` fallback keeps the bits right).
+///
+/// Bit-identity argument: lanes are independent, every vector op here is
+/// an element-wise IEEE-754 single-rounding operation (`mulpd`, `addpd`,
+/// `subpd`, `vfmaddpd`) identical to its scalar counterpart, and
+/// remainder lanes run the very same scalar expressions — so these
+/// kernels replay each lane's exact scalar op sequence.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    use super::Scalar;
+    use core::any::TypeId;
+
+    /// Reinterpret a `&[T]` whose `T` was TypeId-checked as `&[U]`.
+    ///
+    /// SAFETY: callers only invoke this after `TypeId::of::<T>() ==
+    /// TypeId::of::<U>()`, so the layouts are identical.
+    #[inline(always)]
+    unsafe fn cast<T, U>(s: &[T]) -> &[U] {
+        core::slice::from_raw_parts(s.as_ptr() as *const U, s.len())
+    }
+
+    /// Mutable variant of [`cast`]; same safety contract.
+    #[inline(always)]
+    unsafe fn cast_mut<T, U>(s: &mut [T]) -> &mut [U] {
+        core::slice::from_raw_parts_mut(s.as_mut_ptr() as *mut U, s.len())
+    }
+
+    // The contracting primitives (`mul_acc`/`diag_h`/`sym_skew`/
+    // `axpy_lanes`) may vectorize only when the vector op matches the
+    // scalar build's contraction: either the build doesn't contract
+    // (SSE2 mul+add == scalar mul+add) or it does and the target has
+    // FMA3 (`_mm_fmadd_*` == `mul_add`). On an `fma` build *without*
+    // hardware FMA the vector forms can't exist, so those fronts are
+    // compiled as declining stubs and the scalar `mul_add` fallback
+    // (libm-lowered) keeps the bits right.
+
+    #[cfg(all(feature = "fma", not(target_feature = "fma")))]
+    #[inline(always)]
+    pub fn mul_acc<T: Scalar>(_dst: &mut [T], _a: &[T], _b: &[T]) -> bool {
+        false
+    }
+
+    #[cfg(any(not(feature = "fma"), target_feature = "fma"))]
+    #[inline(always)]
+    pub fn mul_acc<T: Scalar>(dst: &mut [T], a: &[T], b: &[T]) -> bool {
+        if TypeId::of::<T>() == TypeId::of::<f64>() {
+            unsafe { kernels::mul_acc_f64(cast_mut(dst), cast(a), cast(b)) };
+            true
+        } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+            unsafe { kernels::mul_acc_f32(cast_mut(dst), cast(a), cast(b)) };
+            true
+        } else {
+            false
+        }
+    }
+
+    #[cfg(all(feature = "fma", not(target_feature = "fma")))]
+    #[inline(always)]
+    pub fn diag_h<T: Scalar>(_dst: &mut [T], _y: &[T]) -> bool {
+        false
+    }
+
+    #[cfg(any(not(feature = "fma"), target_feature = "fma"))]
+    #[inline(always)]
+    pub fn diag_h<T: Scalar>(dst: &mut [T], y: &[T]) -> bool {
+        if TypeId::of::<T>() == TypeId::of::<f64>() {
+            unsafe { kernels::diag_h_f64(cast_mut(dst), cast(y)) };
+            true
+        } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+            unsafe { kernels::diag_h_f32(cast_mut(dst), cast(y)) };
+            true
+        } else {
+            false
+        }
+    }
+
+    #[cfg(all(feature = "fma", not(target_feature = "fma")))]
+    #[inline(always)]
+    pub fn sym_skew<T: Scalar>(
+        _hij: &mut [T],
+        _hji: &mut [T],
+        _yi: &[T],
+        _gi: &[T],
+        _yj: &[T],
+        _gj: &[T],
+    ) -> bool {
+        false
+    }
+
+    #[cfg(any(not(feature = "fma"), target_feature = "fma"))]
+    #[inline(always)]
+    pub fn sym_skew<T: Scalar>(
+        hij: &mut [T],
+        hji: &mut [T],
+        yi: &[T],
+        gi: &[T],
+        yj: &[T],
+        gj: &[T],
+    ) -> bool {
+        if TypeId::of::<T>() == TypeId::of::<f64>() {
+            unsafe {
+                kernels::sym_skew_f64(
+                    cast_mut(hij),
+                    cast_mut(hji),
+                    cast(yi),
+                    cast(gi),
+                    cast(yj),
+                    cast(gj),
+                )
+            };
+            true
+        } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+            unsafe {
+                kernels::sym_skew_f32(
+                    cast_mut(hij),
+                    cast_mut(hji),
+                    cast(yi),
+                    cast(gi),
+                    cast(yj),
+                    cast(gj),
+                )
+            };
+            true
+        } else {
+            false
+        }
+    }
+
+    #[cfg(all(feature = "fma", not(target_feature = "fma")))]
+    #[inline(always)]
+    pub fn axpy_lanes<T: Scalar>(_dst: &mut [T], _alpha: &[T], _src: &[T]) -> bool {
+        false
+    }
+
+    #[cfg(any(not(feature = "fma"), target_feature = "fma"))]
+    #[inline(always)]
+    pub fn axpy_lanes<T: Scalar>(dst: &mut [T], alpha: &[T], src: &[T]) -> bool {
+        if TypeId::of::<T>() == TypeId::of::<f64>() {
+            unsafe { kernels::mul_acc_f64(cast_mut(dst), cast(alpha), cast(src)) };
+            true
+        } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+            unsafe { kernels::mul_acc_f32(cast_mut(dst), cast(alpha), cast(src)) };
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline(always)]
+    pub fn copy_scale<T: Scalar>(dst: &mut [T], src: &[T], alpha: &[T]) -> bool {
+        if TypeId::of::<T>() == TypeId::of::<f64>() {
+            unsafe { kernels::copy_scale_f64(cast_mut(dst), cast(src), cast(alpha)) };
+            true
+        } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+            unsafe { kernels::copy_scale_f32(cast_mut(dst), cast(src), cast(alpha)) };
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline(always)]
+    pub fn scale_lanes<T: Scalar>(dst: &mut [T], alpha: &[T]) -> bool {
+        if TypeId::of::<T>() == TypeId::of::<f64>() {
+            unsafe { kernels::scale_f64(cast_mut(dst), cast(alpha)) };
+            true
+        } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+            unsafe { kernels::scale_f32(cast_mut(dst), cast(alpha)) };
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline(always)]
+    pub fn fold_neg<T: Scalar>(dst: &mut [T], src: &[T]) -> bool {
+        if TypeId::of::<T>() == TypeId::of::<f64>() {
+            unsafe { kernels::fold_neg_f64(cast_mut(dst), cast(src)) };
+            true
+        } else if TypeId::of::<T>() == TypeId::of::<f32>() {
+            unsafe { kernels::fold_neg_f32(cast_mut(dst), cast(src)) };
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The per-type vector loops. `mul_acc`/`diag_h`/`sym_skew` exist in
+    /// two contraction variants selected at compile time to match the
+    /// scalar build exactly; the contract-free kernels are shared.
+    mod kernels {
+        #[allow(unused_imports)]
+        use core::arch::x86_64::*;
+
+        // ---- contracting kernels, default build (mul then add) -------
+
+        #[cfg(not(feature = "fma"))]
+        pub unsafe fn mul_acc_f64(dst: &mut [f64], a: &[f64], b: &[f64]) {
+            let n = dst.len();
+            let mut l = 0;
+            while l + 2 <= n {
+                let va = _mm_loadu_pd(a.as_ptr().add(l));
+                let vb = _mm_loadu_pd(b.as_ptr().add(l));
+                let vd = _mm_loadu_pd(dst.as_ptr().add(l));
+                _mm_storeu_pd(dst.as_mut_ptr().add(l), _mm_add_pd(vd, _mm_mul_pd(va, vb)));
+                l += 2;
+            }
+            while l < n {
+                dst[l] += a[l] * b[l];
+                l += 1;
+            }
+        }
+
+        #[cfg(not(feature = "fma"))]
+        pub unsafe fn mul_acc_f32(dst: &mut [f32], a: &[f32], b: &[f32]) {
+            let n = dst.len();
+            let mut l = 0;
+            while l + 4 <= n {
+                let va = _mm_loadu_ps(a.as_ptr().add(l));
+                let vb = _mm_loadu_ps(b.as_ptr().add(l));
+                let vd = _mm_loadu_ps(dst.as_ptr().add(l));
+                _mm_storeu_ps(dst.as_mut_ptr().add(l), _mm_add_ps(vd, _mm_mul_ps(va, vb)));
+                l += 4;
+            }
+            while l < n {
+                dst[l] += a[l] * b[l];
+                l += 1;
+            }
+        }
+
+        #[cfg(not(feature = "fma"))]
+        pub unsafe fn diag_h_f64(dst: &mut [f64], y: &[f64]) {
+            let n = dst.len();
+            let ones = _mm_set1_pd(1.0);
+            let mut l = 0;
+            while l + 2 <= n {
+                let vy = _mm_loadu_pd(y.as_ptr().add(l));
+                _mm_storeu_pd(dst.as_mut_ptr().add(l), _mm_sub_pd(_mm_mul_pd(vy, vy), ones));
+                l += 2;
+            }
+            while l < n {
+                dst[l] = y[l] * y[l] - 1.0;
+                l += 1;
+            }
+        }
+
+        #[cfg(not(feature = "fma"))]
+        pub unsafe fn diag_h_f32(dst: &mut [f32], y: &[f32]) {
+            let n = dst.len();
+            let ones = _mm_set1_ps(1.0);
+            let mut l = 0;
+            while l + 4 <= n {
+                let vy = _mm_loadu_ps(y.as_ptr().add(l));
+                _mm_storeu_ps(dst.as_mut_ptr().add(l), _mm_sub_ps(_mm_mul_ps(vy, vy), ones));
+                l += 4;
+            }
+            while l < n {
+                dst[l] = y[l] * y[l] - 1.0;
+                l += 1;
+            }
+        }
+
+        #[cfg(not(feature = "fma"))]
+        #[allow(clippy::too_many_arguments)]
+        pub unsafe fn sym_skew_f64(
+            hij: &mut [f64],
+            hji: &mut [f64],
+            yi: &[f64],
+            gi: &[f64],
+            yj: &[f64],
+            gj: &[f64],
+        ) {
+            let n = hij.len();
+            let mut l = 0;
+            while l + 2 <= n {
+                let vyi = _mm_loadu_pd(yi.as_ptr().add(l));
+                let vgi = _mm_loadu_pd(gi.as_ptr().add(l));
+                let vyj = _mm_loadu_pd(yj.as_ptr().add(l));
+                let vgj = _mm_loadu_pd(gj.as_ptr().add(l));
+                let sym = _mm_mul_pd(vyi, vyj);
+                let skew = _mm_sub_pd(_mm_mul_pd(vgi, vyj), _mm_mul_pd(vyi, vgj));
+                _mm_storeu_pd(hij.as_mut_ptr().add(l), _mm_add_pd(sym, skew));
+                _mm_storeu_pd(hji.as_mut_ptr().add(l), _mm_sub_pd(sym, skew));
+                l += 2;
+            }
+            while l < n {
+                let sym = yi[l] * yj[l];
+                let skew = gi[l] * yj[l] - yi[l] * gj[l];
+                hij[l] = sym + skew;
+                hji[l] = sym - skew;
+                l += 1;
+            }
+        }
+
+        #[cfg(not(feature = "fma"))]
+        #[allow(clippy::too_many_arguments)]
+        pub unsafe fn sym_skew_f32(
+            hij: &mut [f32],
+            hji: &mut [f32],
+            yi: &[f32],
+            gi: &[f32],
+            yj: &[f32],
+            gj: &[f32],
+        ) {
+            let n = hij.len();
+            let mut l = 0;
+            while l + 4 <= n {
+                let vyi = _mm_loadu_ps(yi.as_ptr().add(l));
+                let vgi = _mm_loadu_ps(gi.as_ptr().add(l));
+                let vyj = _mm_loadu_ps(yj.as_ptr().add(l));
+                let vgj = _mm_loadu_ps(gj.as_ptr().add(l));
+                let sym = _mm_mul_ps(vyi, vyj);
+                let skew = _mm_sub_ps(_mm_mul_ps(vgi, vyj), _mm_mul_ps(vyi, vgj));
+                _mm_storeu_ps(hij.as_mut_ptr().add(l), _mm_add_ps(sym, skew));
+                _mm_storeu_ps(hji.as_mut_ptr().add(l), _mm_sub_ps(sym, skew));
+                l += 4;
+            }
+            while l < n {
+                let sym = yi[l] * yj[l];
+                let skew = gi[l] * yj[l] - yi[l] * gj[l];
+                hij[l] = sym + skew;
+                hji[l] = sym - skew;
+                l += 1;
+            }
+        }
+
+        // ---- contracting kernels, fma build with hardware FMA3 -------
+        // (Without `target_feature = "fma"` these are never compiled;
+        // the front functions return `false` via CONTRACT_OK and the
+        // scalar `mul_add` fallback runs instead.)
+
+        #[cfg(all(feature = "fma", target_feature = "fma"))]
+        pub unsafe fn mul_acc_f64(dst: &mut [f64], a: &[f64], b: &[f64]) {
+            let n = dst.len();
+            let mut l = 0;
+            while l + 2 <= n {
+                let va = _mm_loadu_pd(a.as_ptr().add(l));
+                let vb = _mm_loadu_pd(b.as_ptr().add(l));
+                let vd = _mm_loadu_pd(dst.as_ptr().add(l));
+                _mm_storeu_pd(dst.as_mut_ptr().add(l), _mm_fmadd_pd(va, vb, vd));
+                l += 2;
+            }
+            while l < n {
+                dst[l] = a[l].mul_add(b[l], dst[l]);
+                l += 1;
+            }
+        }
+
+        #[cfg(all(feature = "fma", target_feature = "fma"))]
+        pub unsafe fn mul_acc_f32(dst: &mut [f32], a: &[f32], b: &[f32]) {
+            let n = dst.len();
+            let mut l = 0;
+            while l + 4 <= n {
+                let va = _mm_loadu_ps(a.as_ptr().add(l));
+                let vb = _mm_loadu_ps(b.as_ptr().add(l));
+                let vd = _mm_loadu_ps(dst.as_ptr().add(l));
+                _mm_storeu_ps(dst.as_mut_ptr().add(l), _mm_fmadd_ps(va, vb, vd));
+                l += 4;
+            }
+            while l < n {
+                dst[l] = a[l].mul_add(b[l], dst[l]);
+                l += 1;
+            }
+        }
+
+        #[cfg(all(feature = "fma", target_feature = "fma"))]
+        pub unsafe fn diag_h_f64(dst: &mut [f64], y: &[f64]) {
+            let n = dst.len();
+            let neg_ones = _mm_set1_pd(-1.0);
+            let mut l = 0;
+            while l + 2 <= n {
+                let vy = _mm_loadu_pd(y.as_ptr().add(l));
+                _mm_storeu_pd(dst.as_mut_ptr().add(l), _mm_fmadd_pd(vy, vy, neg_ones));
+                l += 2;
+            }
+            while l < n {
+                dst[l] = y[l].mul_add(y[l], -1.0);
+                l += 1;
+            }
+        }
+
+        #[cfg(all(feature = "fma", target_feature = "fma"))]
+        pub unsafe fn diag_h_f32(dst: &mut [f32], y: &[f32]) {
+            let n = dst.len();
+            let neg_ones = _mm_set1_ps(-1.0);
+            let mut l = 0;
+            while l + 4 <= n {
+                let vy = _mm_loadu_ps(y.as_ptr().add(l));
+                _mm_storeu_ps(dst.as_mut_ptr().add(l), _mm_fmadd_ps(vy, vy, neg_ones));
+                l += 4;
+            }
+            while l < n {
+                dst[l] = y[l].mul_add(y[l], -1.0);
+                l += 1;
+            }
+        }
+
+        #[cfg(all(feature = "fma", target_feature = "fma"))]
+        #[allow(clippy::too_many_arguments)]
+        pub unsafe fn sym_skew_f64(
+            hij: &mut [f64],
+            hji: &mut [f64],
+            yi: &[f64],
+            gi: &[f64],
+            yj: &[f64],
+            gj: &[f64],
+        ) {
+            let n = hij.len();
+            // Exact sign flip (matches the scalar `-(yi*gj)`): xor with
+            // the sign-bit mask, never `0 − x` (which maps +0 to +0).
+            let sign = _mm_set1_pd(-0.0);
+            let mut l = 0;
+            while l + 2 <= n {
+                let vyi = _mm_loadu_pd(yi.as_ptr().add(l));
+                let vgi = _mm_loadu_pd(gi.as_ptr().add(l));
+                let vyj = _mm_loadu_pd(yj.as_ptr().add(l));
+                let vgj = _mm_loadu_pd(gj.as_ptr().add(l));
+                let sym = _mm_mul_pd(vyi, vyj);
+                let neg = _mm_xor_pd(_mm_mul_pd(vyi, vgj), sign);
+                let skew = _mm_fmadd_pd(vgi, vyj, neg);
+                _mm_storeu_pd(hij.as_mut_ptr().add(l), _mm_add_pd(sym, skew));
+                _mm_storeu_pd(hji.as_mut_ptr().add(l), _mm_sub_pd(sym, skew));
+                l += 2;
+            }
+            while l < n {
+                let sym = yi[l] * yj[l];
+                let skew = gi[l].mul_add(yj[l], -(yi[l] * gj[l]));
+                hij[l] = sym + skew;
+                hji[l] = sym - skew;
+                l += 1;
+            }
+        }
+
+        #[cfg(all(feature = "fma", target_feature = "fma"))]
+        #[allow(clippy::too_many_arguments)]
+        pub unsafe fn sym_skew_f32(
+            hij: &mut [f32],
+            hji: &mut [f32],
+            yi: &[f32],
+            gi: &[f32],
+            yj: &[f32],
+            gj: &[f32],
+        ) {
+            let n = hij.len();
+            let sign = _mm_set1_ps(-0.0);
+            let mut l = 0;
+            while l + 4 <= n {
+                let vyi = _mm_loadu_ps(yi.as_ptr().add(l));
+                let vgi = _mm_loadu_ps(gi.as_ptr().add(l));
+                let vyj = _mm_loadu_ps(yj.as_ptr().add(l));
+                let vgj = _mm_loadu_ps(gj.as_ptr().add(l));
+                let sym = _mm_mul_ps(vyi, vyj);
+                let neg = _mm_xor_ps(_mm_mul_ps(vyi, vgj), sign);
+                let skew = _mm_fmadd_ps(vgi, vyj, neg);
+                _mm_storeu_ps(hij.as_mut_ptr().add(l), _mm_add_ps(sym, skew));
+                _mm_storeu_ps(hji.as_mut_ptr().add(l), _mm_sub_ps(sym, skew));
+                l += 4;
+            }
+            while l < n {
+                let sym = yi[l] * yj[l];
+                let skew = gi[l].mul_add(yj[l], -(yi[l] * gj[l]));
+                hij[l] = sym + skew;
+                hji[l] = sym - skew;
+                l += 1;
+            }
+        }
+
+        // ---- contract-free kernels (shared by both builds) -----------
+
+        pub unsafe fn copy_scale_f64(dst: &mut [f64], src: &[f64], alpha: &[f64]) {
+            let n = dst.len();
+            let mut l = 0;
+            while l + 2 <= n {
+                let vs = _mm_loadu_pd(src.as_ptr().add(l));
+                let va = _mm_loadu_pd(alpha.as_ptr().add(l));
+                _mm_storeu_pd(dst.as_mut_ptr().add(l), _mm_mul_pd(vs, va));
+                l += 2;
+            }
+            while l < n {
+                dst[l] = src[l] * alpha[l];
+                l += 1;
+            }
+        }
+
+        pub unsafe fn copy_scale_f32(dst: &mut [f32], src: &[f32], alpha: &[f32]) {
+            let n = dst.len();
+            let mut l = 0;
+            while l + 4 <= n {
+                let vs = _mm_loadu_ps(src.as_ptr().add(l));
+                let va = _mm_loadu_ps(alpha.as_ptr().add(l));
+                _mm_storeu_ps(dst.as_mut_ptr().add(l), _mm_mul_ps(vs, va));
+                l += 4;
+            }
+            while l < n {
+                dst[l] = src[l] * alpha[l];
+                l += 1;
+            }
+        }
+
+        pub unsafe fn scale_f64(dst: &mut [f64], alpha: &[f64]) {
+            let n = dst.len();
+            let mut l = 0;
+            while l + 2 <= n {
+                let vd = _mm_loadu_pd(dst.as_ptr().add(l));
+                let va = _mm_loadu_pd(alpha.as_ptr().add(l));
+                _mm_storeu_pd(dst.as_mut_ptr().add(l), _mm_mul_pd(vd, va));
+                l += 2;
+            }
+            while l < n {
+                dst[l] *= alpha[l];
+                l += 1;
+            }
+        }
+
+        pub unsafe fn scale_f32(dst: &mut [f32], alpha: &[f32]) {
+            let n = dst.len();
+            let mut l = 0;
+            while l + 4 <= n {
+                let vd = _mm_loadu_ps(dst.as_ptr().add(l));
+                let va = _mm_loadu_ps(alpha.as_ptr().add(l));
+                _mm_storeu_ps(dst.as_mut_ptr().add(l), _mm_mul_ps(vd, va));
+                l += 4;
+            }
+            while l < n {
+                dst[l] *= alpha[l];
+                l += 1;
+            }
+        }
+
+        /// `d − s` — bit-identical to the scalar fold on both builds
+        /// (`d + (−1·s)` and `fma(−1, s, d)` both round `d − s` once).
+        pub unsafe fn fold_neg_f64(dst: &mut [f64], src: &[f64]) {
+            let n = dst.len();
+            let mut l = 0;
+            while l + 2 <= n {
+                let vd = _mm_loadu_pd(dst.as_ptr().add(l));
+                let vs = _mm_loadu_pd(src.as_ptr().add(l));
+                _mm_storeu_pd(dst.as_mut_ptr().add(l), _mm_sub_pd(vd, vs));
+                l += 2;
+            }
+            while l < n {
+                dst[l] -= src[l];
+                l += 1;
+            }
+        }
+
+        pub unsafe fn fold_neg_f32(dst: &mut [f32], src: &[f32]) {
+            let n = dst.len();
+            let mut l = 0;
+            while l + 4 <= n {
+                let vd = _mm_loadu_ps(dst.as_ptr().add(l));
+                let vs = _mm_loadu_ps(src.as_ptr().add(l));
+                _mm_storeu_ps(dst.as_mut_ptr().add(l), _mm_sub_ps(vd, vs));
+                l += 4;
+            }
+            while l < n {
+                dst[l] -= src[l];
+                l += 1;
+            }
+        }
+    }
+}
+
+/// Scalar-only stand-in when the `simd` feature is off or the target is
+/// not x86_64: every probe declines and the [`lane_ops`] scalar loops
+/// (the bit-identity reference) run.
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+mod simd {
+    use super::Scalar;
+
+    #[inline(always)]
+    pub fn mul_acc<T: Scalar>(_dst: &mut [T], _a: &[T], _b: &[T]) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn diag_h<T: Scalar>(_dst: &mut [T], _y: &[T]) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn sym_skew<T: Scalar>(
+        _hij: &mut [T],
+        _hji: &mut [T],
+        _yi: &[T],
+        _gi: &[T],
+        _yj: &[T],
+        _gj: &[T],
+    ) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn axpy_lanes<T: Scalar>(_dst: &mut [T], _alpha: &[T], _src: &[T]) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn copy_scale<T: Scalar>(_dst: &mut [T], _src: &[T], _alpha: &[T]) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn scale_lanes<T: Scalar>(_dst: &mut [T], _alpha: &[T]) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn fold_neg<T: Scalar>(_dst: &mut [T], _src: &[T]) -> bool {
+        false
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ica::{Nonlinearity, Optimizer, Smbgd, SmbgdParams};
     use crate::linalg::{fused, FusedScratch, Mat32};
     use crate::signal::rng::Pcg32;
     use crate::testkit::{check, Config};
@@ -556,6 +1524,162 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Solo SMBGD reference for one lane: the per-session optimizer fed
+    /// the same chunk sequence. Chunks hold whole mini-batches, so
+    /// `step_batch` takes the fused block path — the exact code the
+    /// cohort form must replay.
+    fn solo_smbgd(
+        b0: &Mat64,
+        prm: SmbgdParams,
+        g: Nonlinearity,
+        chunks: &[Mat64],
+    ) -> (Mat64, Mat64) {
+        let mut opt = Smbgd::<f64>::new(b0.clone(), prm, g);
+        for c in chunks {
+            opt.step_batch(c);
+        }
+        (opt.b().clone(), opt.hhat_prev().clone())
+    }
+
+    /// Distinct per-lane SMBGD hyperparameters sharing one P, including
+    /// the γ = 0 and β = 1 boundary lanes (β = 1 exercises the
+    /// "unconditional per-lane scale == conditional solo skip" identity).
+    fn smbgd_params(lanes: usize, p: usize) -> Vec<SmbgdParams> {
+        (0..lanes)
+            .map(|l| SmbgdParams {
+                mu: 0.002 + 0.001 * l as f64,
+                gamma: if l == 0 { 0.0 } else { 0.1 + 0.12 * l as f64 },
+                beta: if l == 1 { 1.0 } else { 0.8 + 0.02 * l as f64 },
+                p,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn smbgd_cohort_matches_solo_block_path_bitwise() {
+        // Every nonlinearity, multiple pump rounds with a full
+        // store/load wire round trip between rounds (the park/reattach
+        // shape), per-lane (μ, γ, β) — B and Ĥ_prev must match the
+        // per-session SMBGD to the bit on every build.
+        for g in [Nonlinearity::Cube, Nonlinearity::Tanh, Nonlinearity::SignedSquare] {
+            let mut rng = Pcg32::seed(0x5B6D + g.name().len() as u64);
+            let (n, m, lanes, p, rounds) = (3, 4, 5, 4, 3);
+            let bs: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, n, m)).collect();
+            let prms = smbgd_params(lanes, p);
+            // rounds × lanes chunk schedule, 2 whole mini-batches each.
+            let schedule: Vec<Vec<Mat64>> = (0..rounds)
+                .map(|_| (0..lanes).map(|_| rand_mat(&mut rng, 2 * p, m)).collect())
+                .collect();
+
+            let mut c = CohortSmbgdState::<f64>::new(n, m, p);
+            let mut cur_b = bs.clone();
+            let mut cur_h: Vec<Mat64> = (0..lanes).map(|_| Mat64::zeros(n, n)).collect();
+            for round in &schedule {
+                c.begin(lanes);
+                for l in 0..lanes {
+                    let prm = &prms[l];
+                    c.load_lane(l, &cur_b[l], &cur_h[l], prm.mu, prm.gamma, prm.beta);
+                }
+                c.step_chunks(|v| g.apply(v), round);
+                for l in 0..lanes {
+                    c.store_lane(l, &mut cur_b[l], &mut cur_h[l]);
+                }
+            }
+
+            for l in 0..lanes {
+                let lane_chunks: Vec<Mat64> =
+                    schedule.iter().map(|r| r[l].clone()).collect();
+                let (want_b, want_h) = solo_smbgd(&bs[l], prms[l], g, &lane_chunks);
+                assert!(
+                    bits_equal_any(&want_b, &cur_b[l]) && bits_equal_any(&want_h, &cur_h[l]),
+                    "SMBGD lane {l} diverged from solo ({})",
+                    g.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn smbgd_cohort_p1_single_batch_rows() {
+        // P = 1 degenerates to γ-momentum SGD (every sample is its own
+        // mini-batch; β never applies). Still must match solo bitwise.
+        let mut rng = Pcg32::seed(0x5B6D1);
+        let (n, m, lanes) = (2, 3, 3);
+        let bs: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, n, m)).collect();
+        let prms = smbgd_params(lanes, 1);
+        let chunks: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, 7, m)).collect();
+
+        let mut c = CohortSmbgdState::<f64>::new(n, m, 1);
+        c.begin(lanes);
+        for l in 0..lanes {
+            c.load_lane(l, &bs[l], &Mat64::zeros(n, n), prms[l].mu, prms[l].gamma, prms[l].beta);
+        }
+        c.step_chunks(|v| v * v * v, &chunks);
+        for l in 0..lanes {
+            let (want_b, want_h) =
+                solo_smbgd(&bs[l], prms[l], Nonlinearity::Cube, &chunks[l..l + 1]);
+            let mut got_b = Mat64::zeros(n, m);
+            let mut got_h = Mat64::zeros(n, n);
+            c.store_lane(l, &mut got_b, &mut got_h);
+            assert!(
+                bits_equal_any(&want_b, &got_b) && bits_equal_any(&want_h, &got_h),
+                "P=1 lane {l} diverged from solo"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_smbgd_cohort_matches_f32_solo_bitwise() {
+        // The f32 instantiation against Smbgd::<f32> on the same
+        // narrowed inputs (the cast-engine shape): B and Ĥ_prev round
+        // through the f64 wire format losslessly.
+        let mut rng = Pcg32::seed(0x5BF32);
+        let (n, m, lanes, p) = (2, 4, 4, 3);
+        let bs: Vec<Mat64> = (0..lanes)
+            .map(|_| rand_mat(&mut rng, n, m).cast::<f32>().cast::<f64>())
+            .collect();
+        let prms = smbgd_params(lanes, p);
+        let chunks: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, 2 * p, m)).collect();
+
+        let mut c = CohortSmbgdState::<f32>::new(n, m, p);
+        c.begin(lanes);
+        for l in 0..lanes {
+            c.load_lane(l, &bs[l], &Mat64::zeros(n, n), prms[l].mu, prms[l].gamma, prms[l].beta);
+        }
+        c.step_chunks(|v: f32| v * v * v, &chunks);
+
+        for l in 0..lanes {
+            let mut opt = Smbgd::<f32>::new(bs[l].cast(), prms[l], Nonlinearity::Cube);
+            opt.step_batch(&chunks[l].cast::<f32>());
+            let mut got_b64 = Mat64::zeros(n, m);
+            let mut got_h64 = Mat64::zeros(n, n);
+            c.store_lane(l, &mut got_b64, &mut got_h64);
+            let (got_b, got_h): (Mat32, Mat32) = (got_b64.cast(), got_h64.cast());
+            let ok = |w: &Mat32, g: &Mat32| {
+                w.as_slice()
+                    .iter()
+                    .zip(g.as_slice())
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+            };
+            assert!(
+                ok(opt.b(), &got_b) && ok(opt.hhat_prev(), &got_h),
+                "f32 SMBGD lane {l} diverged from solo f32 path"
+            );
+        }
+    }
+
+    /// Bitwise Mat64 comparison that runs on every build (the SMBGD
+    /// cohort replicates the active build's contraction, so the pin is
+    /// unconditional — unlike the SGD `bits_equal` twin which is scoped
+    /// to the non-fma build next to a tolerance fallback).
+    fn bits_equal_any(a: &Mat64, b: &Mat64) -> bool {
+        a.shape() == b.shape()
+            && a.as_slice()
+                .iter()
+                .zip(b.as_slice())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
     }
 
     #[test]

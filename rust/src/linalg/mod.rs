@@ -24,7 +24,7 @@ pub mod fused;
 mod mat;
 mod scalar;
 
-pub use cohort::CohortState;
+pub use cohort::{CohortSmbgdState, CohortState};
 pub use decomp::{inverse, jacobi_eig, solve, JacobiEig};
 pub use fused::FusedScratch;
 pub use mat::Mat;

@@ -542,8 +542,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
     args.expect_only(&[
         "quick", "out", "check", "tolerance", "min-fused-speedup", "min-f32-speedup",
         "min-cohort-speedup", "max-adapt-overhead", "max-status-overhead",
-        "max-snapshot-overhead", "max-qfx-overhead",
+        "max-snapshot-overhead", "max-qfx-overhead", "promote",
     ])?;
+    // `--promote ARTIFACT.json` installs a previously measured artifact
+    // as the committed baseline — no suite run, no other flags.
+    if let Some(artifact) = args.get("promote") {
+        if args.get("check").is_some() || args.get("out").is_some() || args.switch("quick") {
+            bail!("--promote takes only an artifact path (no --check/--out/--quick)");
+        }
+        let baseline = easi_ica::perf::default_baseline_json_path();
+        easi_ica::perf::promote_artifact(std::path::Path::new(artifact), &baseline)?;
+        println!("promoted {} -> {} (mode \"measured\")", artifact, baseline.display());
+        return Ok(());
+    }
     let quick = args.switch("quick");
     let report = easi_ica::perf::run_hotpath_suite(quick);
 

@@ -28,7 +28,7 @@ use crate::coordinator::{
     StatusCell,
 };
 use crate::ica::{self, EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
-use crate::linalg::{fused, CohortState, FusedScratch, Mat32, Mat64};
+use crate::linalg::{fused, CohortSmbgdState, CohortState, FusedScratch, Mat32, Mat64};
 use crate::signal::Pcg32;
 use crate::snapshot::SnapWriter;
 use anyhow::{bail, Context, Result};
@@ -1012,6 +1012,76 @@ fn cohort_suite(rep: &mut BenchReport, warmup: usize, runs: usize) {
         "cohort_over_solo_speedup".to_string(),
         solo.per_iter_ns() / step.per_iter_ns(),
     ));
+
+    // On a `--features simd` build the cohort step above already runs
+    // the explicit-SIMD lane kernels; this extra record re-measures it
+    // under a build-specific name so a simd artifact is distinguishable
+    // at a glance. Deliberately absent from BENCH_baseline.json (the
+    // default build never produces it) — `promote_artifact` drops it on
+    // promotion for the same reason.
+    #[cfg(feature = "simd")]
+    {
+        let step_simd = bench(warmup, runs, iters, || {
+            st.begin(lanes);
+            for l in 0..lanes {
+                st.load_lane(l, &bs[l], mus[l]);
+            }
+            st.step_chunks(|v| v * v * v, black_box(&chunks));
+            for l in 0..lanes {
+                st.store_lane(l, &mut out);
+            }
+            black_box(&out);
+        });
+        push(rep, "cohort step simd", "cohort_step_simd", m, n, runs, &step_simd);
+    }
+
+    // SMBGD cohort kernel at the same fleet shape: 64 lanes each
+    // stepping one 64-row chunk (8 whole P=8 mini-batches) per pump,
+    // including the per-step load/store wire round trip, vs the same
+    // tenants stepped through the per-session fused block path (what
+    // `--cohort off` runs for SMBGD tenants).
+    let p = 8usize;
+    let prm = SmbgdParams { mu: BENCH_MU, gamma: 0.5, beta: 0.9, p };
+    let hs: Vec<Mat64> = (0..lanes).map(|_| Mat64::zeros(n, n)).collect();
+    let mut h_out = Mat64::zeros(n, n);
+    let mut smb_st = CohortSmbgdState::<f64>::new(n, m, p);
+    let smb_step = bench(warmup, runs, iters, || {
+        smb_st.begin(lanes);
+        for l in 0..lanes {
+            smb_st.load_lane(l, &bs[l], &hs[l], mus[l], prm.gamma, prm.beta);
+        }
+        smb_st.step_chunks(|v| v * v * v, black_box(&chunks));
+        for l in 0..lanes {
+            smb_st.store_lane(l, &mut out, &mut h_out);
+        }
+        black_box(&out);
+    });
+    push(rep, "cohort smbgd step", "cohort_smbgd", m, n, runs, &smb_step);
+
+    // Solo reference: independent per-session SMBGD optimizers on the
+    // identical chunks, reset to the same (B, Ĥ) start each run via the
+    // cohort sync hook (rows = 0 installs state without advancing the
+    // sample clock).
+    let mut solos: Vec<Smbgd> = (0..lanes)
+        .map(|l| {
+            let prm_l = SmbgdParams { mu: mus[l], ..prm };
+            Smbgd::with_identity_init(n, m, prm_l, Nonlinearity::Cube)
+        })
+        .collect();
+    let zero_h = Mat64::zeros(n, n);
+    let smb_solo = bench(warmup, runs, iters, || {
+        for l in 0..lanes {
+            solos[l].cohort_sync_smbgd(&bs[l], &zero_h, 0);
+            solos[l].step_batch(black_box(&chunks[l]));
+        }
+        black_box(solos[0].b());
+    });
+    push(rep, "cohort smbgd solo", "cohort_smbgd_solo", m, n, runs, &smb_solo);
+
+    rep.derived.push((
+        "cohort_smbgd_over_solo_speedup".to_string(),
+        smb_solo.per_iter_ns() / smb_step.per_iter_ns(),
+    ));
 }
 
 /// The fixed-point Q-format datapath's software cost at the canonical
@@ -1303,6 +1373,156 @@ pub fn gate_against_file(
     )
 }
 
+// ---------------------------------------------------------------------------
+// Baseline promotion (`easi-ica bench --promote`).
+// ---------------------------------------------------------------------------
+
+/// Gated kernel-family coverage a promotable artifact must carry, as
+/// `(predicate id, min count)`. Mirrors the committed-baseline test so a
+/// promoted baseline can never be *weaker* than the estimated seed it
+/// replaces: a partial run (e.g. `--quick` aborted half-way, or a suite
+/// built with a kernel family compiled out) is rejected instead of
+/// silently narrowing the CI gate.
+const PROMOTE_FAMILIES: &[(&str, usize)] = &[
+    ("fused_step", 1),
+    ("_f32", 3),
+    ("adapt_", 3),
+    ("hub_", 4),
+    ("cohort_", 3),
+    ("cohort_smbgd", 2),
+    ("snapshot_", 2),
+    ("qfx_", 3),
+];
+
+/// Derived ratios the gate floors/caps; a promoted baseline's producing
+/// run must have computed all of them.
+const PROMOTE_DERIVED: &[&str] = &[
+    "fused_step_speedup_m8_n8",
+    "f32_over_f64_step_speedup",
+    "cohort_over_solo_speedup",
+    "cohort_smbgd_over_solo_speedup",
+    "adapt_overhead_fraction",
+    "status_overhead_fraction",
+    "snapshot_overhead_fraction",
+    "qfx_overhead_fraction",
+];
+
+fn rec_num(rec: &Json, name: &str, key: &str) -> Result<f64> {
+    rec.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("record '{name}' missing numeric '{key}'"))
+}
+
+/// Parse a measured `easi-ica-bench/v1` artifact back into a
+/// [`BenchReport`], validating it is complete enough to serve as the
+/// committed baseline. Build-specific records (kernel suffix `_simd`,
+/// only produced by `--features simd` builds) are dropped: the gate
+/// fails on baseline records missing from the current suite, and a
+/// default build never produces them. The returned report's `mode` is
+/// forced to `"measured"` regardless of how the artifact was produced.
+pub fn promotable_report(artifact: &Json) -> Result<BenchReport> {
+    if artifact.get("schema").and_then(Json::as_str) != Some("easi-ica-bench/v1") {
+        bail!("artifact is not an easi-ica-bench/v1 report");
+    }
+    let calib = artifact
+        .get("calibration_ns_per_iter")
+        .and_then(Json::as_f64)
+        .context("artifact missing calibration_ns_per_iter")?;
+    if !(calib.is_finite() && calib > 0.0) {
+        bail!("artifact has a non-positive calibration_ns_per_iter");
+    }
+    let records =
+        artifact.get("records").and_then(Json::as_array).context("artifact missing records[]")?;
+
+    let mut report = BenchReport {
+        mode: "measured".to_string(),
+        calibration_ns_per_iter: calib,
+        records: Vec::new(),
+        derived: Vec::new(),
+    };
+    let mut family_counts = vec![0usize; PROMOTE_FAMILIES.len()];
+    for rec in records {
+        let name = rec
+            .get("name")
+            .and_then(Json::as_str)
+            .context("artifact record missing name")?
+            .to_string();
+        let kernel = rec
+            .get("kernel")
+            .and_then(Json::as_str)
+            .with_context(|| format!("record '{name}' missing kernel"))?
+            .to_string();
+        if kernel.ends_with("_simd") {
+            continue;
+        }
+        let gated = rec.get("gated").and_then(Json::as_bool).unwrap_or(false);
+        let runs = rec_num(rec, &name, "runs")? as usize;
+        let iters_per_run = rec_num(rec, &name, "iters_per_run")? as u64;
+        if gated && (runs == 0 || iters_per_run == 0) {
+            bail!("gated record '{name}' carries no sampling metadata (runs/iters_per_run)");
+        }
+        if gated {
+            for (i, (family, _)) in PROMOTE_FAMILIES.iter().enumerate() {
+                let hit = if *family == "_f32" {
+                    kernel.ends_with("_f32")
+                } else {
+                    kernel.starts_with(*family)
+                };
+                if hit {
+                    family_counts[i] += 1;
+                }
+            }
+        }
+        report.records.push(BenchRecord {
+            name: name.clone(),
+            kernel,
+            m: rec_num(rec, &name, "m")? as usize,
+            n: rec_num(rec, &name, "n")? as usize,
+            ns_per_iter: rec_num(rec, &name, "ns_per_iter")?,
+            min_ns_per_iter: rec_num(rec, &name, "min_ns_per_iter")?,
+            iters_per_sec: rec_num(rec, &name, "iters_per_sec")?,
+            runs,
+            iters_per_run,
+            gated,
+        });
+    }
+    for (i, (family, min)) in PROMOTE_FAMILIES.iter().enumerate() {
+        if family_counts[i] < *min {
+            bail!(
+                "artifact covers only {} gated '{family}' records (need ≥ {min}) — \
+                 refusing to promote a partial suite",
+                family_counts[i]
+            );
+        }
+    }
+    if let Some(Json::Obj(pairs)) = artifact.get("derived") {
+        for (k, v) in pairs {
+            if let Some(v) = v.as_f64() {
+                report.derived.push((k.clone(), v));
+            }
+        }
+    }
+    for key in PROMOTE_DERIVED {
+        if report.derived_value(key).is_none() {
+            bail!("artifact missing derived '{key}' — refusing to promote a partial suite");
+        }
+    }
+    Ok(report)
+}
+
+/// `easi-ica bench --promote`: install a measured artifact as the
+/// committed baseline at `baseline_path`, flipping its `mode` to
+/// `"measured"`. The estimated seed baseline is retired the first time
+/// a real artifact lands.
+pub fn promote_artifact(artifact_path: &Path, baseline_path: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(artifact_path)
+        .with_context(|| format!("reading bench artifact {}", artifact_path.display()))?;
+    let artifact = Json::parse(&text)
+        .with_context(|| format!("parsing bench artifact {}", artifact_path.display()))?;
+    let report = promotable_report(&artifact)?;
+    report.write_json(baseline_path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1560,6 +1780,7 @@ mod tests {
                 ("fused_step_speedup_m8_n8".to_string(), 2.0),
                 ("f32_over_f64_step_speedup".to_string(), 1.6),
                 ("cohort_over_solo_speedup".to_string(), 1.8),
+                ("cohort_smbgd_over_solo_speedup".to_string(), 1.5),
                 ("adapt_overhead_fraction".to_string(), 0.05),
                 ("status_overhead_fraction".to_string(), 0.01),
                 ("snapshot_overhead_fraction".to_string(), 0.02),
@@ -1570,6 +1791,7 @@ mod tests {
         let mut adapt_gated = 0usize;
         let mut lifecycle_gated = 0usize;
         let mut cohort_gated = 0usize;
+        let mut cohort_smbgd_gated = 0usize;
         let mut snapshot_gated = 0usize;
         let mut qfx_gated = 0usize;
         for rec in baseline.get("records").and_then(Json::as_array).unwrap() {
@@ -1600,6 +1822,9 @@ mod tests {
             }
             if gated && kernel.starts_with("cohort_") {
                 cohort_gated += 1;
+            }
+            if gated && kernel.starts_with("cohort_smbgd") {
+                cohort_smbgd_gated += 1;
             }
             if gated && kernel.starts_with("snapshot_") {
                 snapshot_gated += 1;
@@ -1632,6 +1857,16 @@ mod tests {
         // …and the tenant-major cohort records (gradient, full step,
         // per-session solo reference).
         assert!(cohort_gated >= 3, "only {cohort_gated} gated cohort records");
+        // …including the SMBGD cohort kernel and its per-session solo
+        // reference (phase-2 cohort eligibility).
+        assert!(cohort_smbgd_gated >= 2, "only {cohort_smbgd_gated} gated cohort_smbgd records");
+        // The build-specific simd record must NOT be committed: a default
+        // build never produces it, and the gate fails on baseline records
+        // missing from the current suite.
+        for rec in baseline.get("records").and_then(Json::as_array).unwrap() {
+            let kernel = rec.get("kernel").and_then(Json::as_str).unwrap();
+            assert!(!kernel.ends_with("_simd"), "build-specific record '{kernel}' in baseline");
+        }
         // …and the background snapshotter's records (reference fused step
         // + the step with in-band state serialization).
         assert!(snapshot_gated >= 2, "only {snapshot_gated} gated snapshot records");
@@ -1665,5 +1900,146 @@ mod tests {
         assert!(gate.failures[0].contains("f32_over_f64_step_speedup"));
         let gate = check_against_baseline(&rep, &baseline, 0.30, 0.0, 1.2, 0.0, 0.0, 0.0, 0.0, 0.0).unwrap();
         assert!(gate.failures.is_empty(), "{:?}", gate.failures);
+    }
+
+    /// A synthetic artifact carrying the minimum gated family coverage
+    /// `promotable_report` demands.
+    fn promotable_artifact() -> BenchReport {
+        let mut rep = BenchReport {
+            mode: "full".to_string(),
+            calibration_ns_per_iter: 100.0,
+            records: Vec::new(),
+            derived: vec![
+                ("fused_step_speedup_m8_n8".to_string(), 2.0),
+                ("f32_over_f64_step_speedup".to_string(), 1.6),
+                ("cohort_over_solo_speedup".to_string(), 1.8),
+                ("cohort_smbgd_over_solo_speedup".to_string(), 1.5),
+                ("adapt_overhead_fraction".to_string(), 0.05),
+                ("status_overhead_fraction".to_string(), 0.01),
+                ("snapshot_overhead_fraction".to_string(), 0.02),
+                ("qfx_overhead_fraction".to_string(), 2.5),
+            ],
+        };
+        let kernels = [
+            "fused_step",
+            "fused_grad_f32",
+            "fused_step_f32",
+            "smbgd_block_f32",
+            "adapt_ref",
+            "adapt_observe",
+            "adapt_step",
+            "hub_admit",
+            "hub_status",
+            "hub_ref",
+            "hub_step",
+            "cohort_grad",
+            "cohort_step",
+            "cohort_step_solo",
+            "cohort_smbgd",
+            "cohort_smbgd_solo",
+            "snapshot_ref",
+            "snapshot_step",
+            "qfx_ref",
+            "qfx_grad",
+            "qfx_step",
+        ];
+        for kernel in kernels {
+            rep.records.push(BenchRecord {
+                name: format!("{kernel} (m=8, n=4)"),
+                kernel: kernel.to_string(),
+                m: 8,
+                n: 4,
+                ns_per_iter: 100.0,
+                min_ns_per_iter: 90.0,
+                iters_per_sec: 1e7,
+                runs: 5,
+                iters_per_run: 4096,
+                gated: true,
+            });
+        }
+        rep
+    }
+
+    #[test]
+    fn promote_flips_mode_and_drops_build_specific_records() {
+        let mut art = promotable_artifact();
+        // A simd-build artifact also carries the build-specific record…
+        art.records.push(BenchRecord {
+            name: "cohort step simd (m=8, n=4)".to_string(),
+            kernel: "cohort_step_simd".to_string(),
+            m: 8,
+            n: 4,
+            ns_per_iter: 50.0,
+            min_ns_per_iter: 45.0,
+            iters_per_sec: 2e7,
+            runs: 5,
+            iters_per_run: 4096,
+            gated: true,
+        });
+        let parsed = Json::parse(&art.to_json()).unwrap();
+        let promoted = promotable_report(&parsed).unwrap();
+        // …which must not survive into the committed baseline, while
+        // everything portable does and the mode flips to "measured".
+        assert_eq!(promoted.mode, "measured");
+        assert!(promoted.records.iter().all(|r| !r.kernel.ends_with("_simd")));
+        assert_eq!(promoted.records.len(), art.records.len() - 1);
+        assert!(promoted.records.iter().any(|r| r.kernel == "cohort_smbgd"));
+        assert_eq!(promoted.derived_value("cohort_smbgd_over_solo_speedup"), Some(1.5));
+    }
+
+    #[test]
+    fn promote_rejects_partial_or_malformed_artifacts() {
+        // Missing kernel family (all qfx records dropped).
+        let mut art = promotable_artifact();
+        art.records.retain(|r| !r.kernel.starts_with("qfx_"));
+        let err = promotable_report(&Json::parse(&art.to_json()).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("qfx_"), "{err}");
+
+        // Missing derived ratio.
+        let mut art = promotable_artifact();
+        art.derived.retain(|(k, _)| k != "cohort_smbgd_over_solo_speedup");
+        let err = promotable_report(&Json::parse(&art.to_json()).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("cohort_smbgd_over_solo_speedup"), "{err}");
+
+        // Gated record without sampling metadata.
+        let mut art = promotable_artifact();
+        art.records[0].runs = 0;
+        let err = promotable_report(&Json::parse(&art.to_json()).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("sampling metadata"), "{err}");
+
+        // Wrong schema.
+        let err = promotable_report(&Json::parse("{\"schema\": \"other/v1\"}").unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("easi-ica-bench/v1"), "{err}");
+    }
+
+    #[test]
+    fn promote_artifact_round_trips_through_disk() {
+        let dir = std::env::temp_dir().join(format!("easi-promote-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let art_path = dir.join("artifact.json");
+        let base_path = dir.join("baseline.json");
+        promotable_artifact().write_json(&art_path).unwrap();
+        promote_artifact(&art_path, &base_path).unwrap();
+        let text = std::fs::read_to_string(&base_path).unwrap();
+        let promoted = Json::parse(&text).unwrap();
+        assert_eq!(promoted.get("mode").and_then(Json::as_str), Some("measured"));
+        assert_eq!(
+            promoted.get("records").and_then(Json::as_array).unwrap().len(),
+            promotable_artifact().records.len()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The committed baseline itself must stay promotable: if a kernel
+    /// family or derived ratio is ever dropped from it, `--promote`
+    /// would refuse real artifacts with the same shape.
+    #[test]
+    fn checked_in_baseline_is_promotable() {
+        let text = std::fs::read_to_string(default_baseline_json_path()).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        let promoted = promotable_report(&parsed).expect("committed baseline passes promote");
+        assert_eq!(promoted.mode, "measured");
+        assert!(!promoted.records.is_empty());
     }
 }

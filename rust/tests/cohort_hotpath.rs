@@ -16,8 +16,8 @@
 //! Together these make cohort execution a pure scheduling change: which
 //! tenant's chunk runs when, never any tenant's trajectory.
 
-use easi_ica::ica::{EasiSgd, Nonlinearity, Optimizer};
-use easi_ica::linalg::{CohortState, Mat32, Mat64};
+use easi_ica::ica::{EasiSgd, Nonlinearity, Optimizer, Smbgd, SmbgdParams};
+use easi_ica::linalg::{CohortSmbgdState, CohortState, Mat32, Mat64};
 use easi_ica::signal::Pcg32;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -80,6 +80,15 @@ fn rand_mat(rng: &mut Pcg32, r: usize, c: usize) -> Mat64 {
 /// the nonlinearity must be the same *function*, not just the same math,
 /// for the bitwise pins to mean anything.
 fn step_chunks_with(c: &mut CohortState<f64>, g: Nonlinearity, chunks: &[Mat64]) {
+    match g {
+        Nonlinearity::Cube => c.step_chunks(|v: f64| v * v * v, chunks),
+        Nonlinearity::Tanh => c.step_chunks(|v: f64| v.tanh(), chunks),
+        Nonlinearity::SignedSquare => c.step_chunks(|v: f64| v * v.abs(), chunks),
+    }
+}
+
+/// SMBGD flavor of [`step_chunks_with`] — same closure-identity rule.
+fn smbgd_step_chunks_with(c: &mut CohortSmbgdState<f64>, g: Nonlinearity, chunks: &[Mat64]) {
     match g {
         Nonlinearity::Cube => c.step_chunks(|v: f64| v * v * v, chunks),
         Nonlinearity::Tanh => c.step_chunks(|v: f64| v.tanh(), chunks),
@@ -205,6 +214,142 @@ fn f32_cohort_bit_identical_to_independent_f32_sgd() {
 }
 
 // ---------------------------------------------------------------------------
+// SMBGD: 1k-step bit-identity vs independent per-session optimizers.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn smbgd_cohort_bit_identical_to_independent_smbgd_1k_steps_every_nonlinearity() {
+    // Phase-2 eligibility: SMBGD lanes carry (B, Ĥ_prev, μ, γ, β) through
+    // the f64 wire every pump — the executor's reload — and must land on
+    // the same bits as independent `Smbgd` optimizers running their fused
+    // block path, for every nonlinearity, over 1000 steps (250 whole
+    // P=4 mini-batches) per lane. The Ĥ invariant is checked too: at
+    // every batch boundary the solo's latched Ĥ equals Ĥ_prev, and the
+    // cohort's stored accumulator equals both.
+    for g in ALL_G {
+        let mut rng = Pcg32::seed(0x53B6 + g as u64);
+        let (n, m, lanes, p) = (2usize, 4usize, 5usize, 4usize);
+        let b0s: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, n, m)).collect();
+        // Distinct per-lane hyperparameters: the pool key excludes
+        // (μ, γ, β) by design, so the kernel must keep them per-lane.
+        let prms: Vec<SmbgdParams> = (0..lanes)
+            .map(|l| SmbgdParams {
+                mu: 0.001 + 0.0005 * l as f64,
+                gamma: 0.3 + 0.1 * l as f64,
+                beta: 0.95 - 0.04 * l as f64,
+                p,
+            })
+            .collect();
+
+        let mut solos: Vec<Smbgd> =
+            b0s.iter().zip(&prms).map(|(b0, &prm)| Smbgd::new(b0.clone(), prm, g)).collect();
+        let mut bs = b0s;
+        let mut hs: Vec<Mat64> = (0..lanes).map(|_| Mat64::zeros(n, n)).collect();
+        let mut cohort = CohortSmbgdState::<f64>::new(n, m, p);
+        let mut b_out = Mat64::zeros(n, m);
+        let mut h_out = Mat64::zeros(n, n);
+
+        // 125 pumps × 8 rows (2 whole mini-batches) = 1000 steps/lane.
+        for pump in 0..125 {
+            let chunks: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, 8, m)).collect();
+            cohort.begin(lanes);
+            for l in 0..lanes {
+                cohort.load_lane(l, &bs[l], &hs[l], prms[l].mu, prms[l].gamma, prms[l].beta);
+            }
+            smbgd_step_chunks_with(&mut cohort, g, &chunks);
+            for l in 0..lanes {
+                cohort.store_lane(l, &mut b_out, &mut h_out);
+                bs[l].copy_from(&b_out);
+                hs[l].copy_from(&h_out);
+            }
+            for (l, solo) in solos.iter_mut().enumerate() {
+                solo.step_batch(&chunks[l]);
+                let ctx = format!("{g:?} lane {l} pump {pump}");
+                assert_bits_equal(solo.b(), &bs[l], &format!("{ctx}: B"));
+                assert_bits_equal(solo.hhat_prev(), &hs[l], &format!("{ctx}: hhat_prev"));
+                assert_bits_equal(solo.hhat(), solo.hhat_prev(), &format!("{ctx}: latch"));
+                assert_eq!(
+                    solo.minibatches_done(),
+                    2 * (pump as u64 + 1),
+                    "{ctx}: mini-batch clock"
+                );
+            }
+        }
+        for (l, solo) in solos.iter().enumerate() {
+            assert!(solo.b().is_finite(), "{g:?} lane {l}: trajectory must stay finite");
+        }
+    }
+}
+
+#[test]
+fn f32_smbgd_cohort_bit_identical_to_independent_f32_smbgd() {
+    // Single-precision SMBGD lanes against `Smbgd::<f32>` solos: the wire
+    // format stays f64, lanes narrow per element exactly like the
+    // per-session cast path, and widening back out is lossless — so B
+    // and Ĥ_prev must agree bitwise after every pump, for 1000 steps.
+    let mut rng = Pcg32::seed(0xF32_53B6);
+    let (n, m, lanes, p) = (3usize, 5usize, 4usize, 4usize);
+    // f32-representable starting points so the wire round trip is exact.
+    let b0s: Vec<Mat64> =
+        (0..lanes).map(|_| rand_mat(&mut rng, n, m).cast::<f32>().cast::<f64>()).collect();
+    let prms: Vec<SmbgdParams> = (0..lanes)
+        .map(|l| SmbgdParams {
+            mu: 0.002 + 0.001 * l as f64,
+            gamma: 0.25 * l as f64,
+            beta: 1.0 - 0.0625 * l as f64,
+            p,
+        })
+        .collect();
+
+    let mut solos: Vec<Smbgd<f32>> = b0s
+        .iter()
+        .zip(&prms)
+        .map(|(b0, &prm)| Smbgd::<f32>::new(b0.cast(), prm, Nonlinearity::Cube))
+        .collect();
+    let mut bs = b0s;
+    let mut hs: Vec<Mat64> = (0..lanes).map(|_| Mat64::zeros(n, n)).collect();
+    let mut cohort = CohortSmbgdState::<f32>::new(n, m, p);
+    let mut b_out = Mat64::zeros(n, m);
+    let mut h_out = Mat64::zeros(n, n);
+
+    for pump in 0..125 {
+        let chunks: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, 8, m)).collect();
+        cohort.begin(lanes);
+        for l in 0..lanes {
+            cohort.load_lane(l, &bs[l], &hs[l], prms[l].mu, prms[l].gamma, prms[l].beta);
+        }
+        cohort.step_chunks(|v: f32| v * v * v, &chunks);
+        for l in 0..lanes {
+            cohort.store_lane(l, &mut b_out, &mut h_out);
+            bs[l].copy_from(&b_out);
+            hs[l].copy_from(&h_out);
+        }
+        for (l, solo) in solos.iter_mut().enumerate() {
+            let c32: Mat32 = chunks[l].cast();
+            solo.step_batch(&c32);
+            let got_b: Mat32 = bs[l].cast();
+            let got_h: Mat32 = hs[l].cast();
+            for (i, (a, b)) in solo.b().as_slice().iter().zip(got_b.as_slice()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "f32 smbgd lane {l} pump {pump} B element {i}: {a:e} vs {b:e}"
+                );
+            }
+            for (i, (a, b)) in
+                solo.hhat_prev().as_slice().iter().zip(got_h.as_slice()).enumerate()
+            {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "f32 smbgd lane {l} pump {pump} hhat element {i}: {a:e} vs {b:e}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Zero-allocation steady state.
 // ---------------------------------------------------------------------------
 
@@ -242,4 +387,42 @@ fn cohort_steady_state_pump_does_not_allocate() {
         std::hint::black_box(&out);
     });
     assert_eq!(allocs, 0, "cohort steady-state pump allocated on the hot path");
+}
+
+#[test]
+fn smbgd_cohort_steady_state_pump_does_not_allocate() {
+    // Same zero-allocation contract for the SMBGD workspace: the extra
+    // accumulator planes (Ĥ, Ĥ_prev, per-lane γ/β) grow on first use and
+    // are reused from then on, across shrink and regrowth.
+    let mut rng = Pcg32::seed(0xA110C2);
+    let (n, m, lanes, p) = (4usize, 8usize, 16usize, 8usize);
+    let bs: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, n, m)).collect();
+    let hs: Vec<Mat64> = (0..lanes).map(|_| Mat64::zeros(n, n)).collect();
+    let mus: Vec<f64> = (0..lanes).map(|l| 0.001 + 0.0001 * l as f64).collect();
+    let chunks: Vec<Mat64> = (0..lanes).map(|_| rand_mat(&mut rng, 64, m)).collect();
+    let mut b_out = Mat64::zeros(n, m);
+    let mut h_out = Mat64::zeros(n, n);
+
+    let mut cohort = CohortSmbgdState::<f64>::new(n, m, p);
+    // Warm: one pump at the full width grows every buffer.
+    cohort.begin(lanes);
+    for l in 0..lanes {
+        cohort.load_lane(l, &bs[l], &hs[l], mus[l], 0.5, 0.9);
+    }
+    cohort.step_chunks(|v: f64| v * v * v, &chunks);
+
+    let allocs = allocations_in(|| {
+        for width in [lanes, lanes, lanes - 3, lanes, lanes] {
+            cohort.begin(width);
+            for l in 0..width {
+                cohort.load_lane(l, &bs[l], &hs[l], mus[l], 0.5, 0.9);
+            }
+            cohort.step_chunks(|v: f64| v * v * v, &chunks[..width]);
+            for l in 0..width {
+                cohort.store_lane(l, &mut b_out, &mut h_out);
+            }
+        }
+        std::hint::black_box(&b_out);
+    });
+    assert_eq!(allocs, 0, "smbgd cohort steady-state pump allocated on the hot path");
 }

@@ -5,7 +5,7 @@
 //!   restored into a *fresh* hub (a simulated process restart) finishes
 //!   with exactly the trajectory an uninterrupted run produces — across
 //!   f32, f64 and fixed-point q16 engines and for cohort-pooled
-//!   (same-shape EASI-SGD) tenants.
+//!   tenants of both eligible forms (same-shape EASI-SGD and SMBGD).
 //! - **Corruption safety**: truncated, bit-flipped, mis-versioned or
 //!   missing snapshot files are rejected with descriptive errors — the
 //!   serving plane must never panic on a bad file.
@@ -48,11 +48,14 @@ fn wait_for_progress(h: &SessionHandle) {
 
 #[test]
 fn detach_to_disk_round_trips_f32_f64_and_cohort_tenants() {
-    // Five tenants: one single-precision, one double-precision, one
+    // Six tenants: one single-precision, one double-precision, one
     // fixed-point q16 (its EASISNAP payload carries Q2.14-lattice state
-    // that must survive the f64 wire format exactly), and a same-shape
+    // that must survive the f64 wire format exactly), a same-shape
     // EASI-SGD pair that the worker pools tenant-major on the single
-    // shard — the cohort path must survive the restart too.
+    // shard — the cohort path must survive the restart too — and a
+    // second default-kind (SMBGD) tenant so the f64 SMBGD pair
+    // exercises the phase-2 SMBGD cohort pool across the restart, its
+    // latched (Ĥ_prev, mini-batch clock) state riding the snapshot.
     // 200k samples keeps every tenant mid-stream long enough to park it;
     // the count is divisible by the chunk size, so `samples` drains to
     // the exact total and summaries compare field-for-field.
@@ -60,7 +63,7 @@ fn detach_to_disk_round_trips_f32_f64_and_cohort_tenants() {
     let mut f32_cfg = cfg(41, 200_000);
     f32_cfg.precision = Precision::F32;
     cfgs.push(f32_cfg);
-    cfgs.push(cfg(42, 200_000)); // f64 default
+    cfgs.push(cfg(42, 200_000)); // f64 default (SMBGD)
     let mut q16_cfg = cfg(45, 200_000);
     q16_cfg.precision = Precision::Q16;
     cfgs.push(q16_cfg);
@@ -69,6 +72,7 @@ fn detach_to_disk_round_trips_f32_f64_and_cohort_tenants() {
         c.optimizer.kind = OptimizerKind::Sgd; // cohort-eligible pair
         cfgs.push(c);
     }
+    cfgs.push(cfg(46, 200_000)); // pairs with 42 in the SMBGD pool
 
     // Reference: the same fleet, uninterrupted, on an identical hub.
     let dir_ref = temp_dir("ref");

@@ -17,7 +17,7 @@
 //!   counted as `tail_dropped`, so `samples + tail_dropped` equals the
 //!   departure point exactly.
 
-use easi_ica::config::{ExperimentConfig, HubScenario, OptimizerKind};
+use easi_ica::config::{ExperimentConfig, HubScenario, OptimizerKind, PlacementKind};
 use easi_ica::coordinator::{
     make_engine, run_hub, run_scenario, run_streaming, ElasticHub, HubOptions, RunSummary,
     ServerOptions, StateStore,
@@ -25,9 +25,10 @@ use easi_ica::coordinator::{
 use easi_ica::ica::Nonlinearity;
 use std::time::{Duration, Instant};
 
-/// A cohort-eligible session config: plain (non-normalized) EASI-SGD is
-/// the form the tenant-major kernel implements, so the optimizer kind is
-/// pinned to `Sgd` here (SMBGD tenants fall back to the per-session path).
+/// A cohort-eligible EASI-SGD session config. Since phase 2, plain SMBGD
+/// is cohort-eligible too (see [`smbgd_cfg`]); the two optimizer forms
+/// pool separately — the pool key includes the form, and for SMBGD the
+/// mini-batch size P.
 fn cfg(seed: u64, mixing: &str) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
     cfg.samples = 12_000;
@@ -36,6 +37,21 @@ fn cfg(seed: u64, mixing: &str) -> ExperimentConfig {
     cfg.optimizer.mu = 0.004;
     cfg.signal.mixing = mixing.into();
     cfg.name = format!("co{seed}-{mixing}");
+    cfg
+}
+
+/// A cohort-eligible SMBGD session config (the crate default kind):
+/// distinct per-tenant (μ, γ, β) on a shared (shape, P) pool key.
+fn smbgd_cfg(seed: u64, mixing: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.samples = 12_000;
+    cfg.seed = seed;
+    cfg.optimizer.kind = OptimizerKind::Smbgd;
+    cfg.optimizer.mu = 0.003 + 0.0002 * (seed % 7) as f64;
+    cfg.optimizer.gamma = 0.4 + 0.05 * (seed % 5) as f64;
+    cfg.optimizer.beta = 0.92 - 0.01 * (seed % 4) as f64;
+    cfg.signal.mixing = mixing.into();
+    cfg.name = format!("smb{seed}-{mixing}");
     cfg
 }
 
@@ -184,6 +200,192 @@ fn parking_out_of_a_cohort_and_reattaching_elsewhere_stays_bit_identical() {
     assert!(
         sum.sessions[2].summary.samples > parked_at,
         "migrant must have continued past the park point"
+    );
+}
+
+#[test]
+fn smbgd_cohort_on_and_off_are_identical_for_a_static_fleet() {
+    // Phase 2: plain SMBGD tenants are cohort-eligible. Six tenants on
+    // two shards — four f64 SMBGD with distinct (μ, γ, β), two f32 SMBGD
+    // forming their own pool (precision is part of the key) — must agree
+    // with the per-session path and the solo server on every
+    // deterministic field, including the latched mini-batch clock that
+    // `minibatches_done` feeds into snapshots.
+    let mut cfgs = vec![
+        smbgd_cfg(60, "static"),
+        smbgd_cfg(61, "rotating"),
+        smbgd_cfg(62, "switching"),
+        smbgd_cfg(63, "static"),
+        smbgd_cfg(64, "rotating"),
+        smbgd_cfg(65, "static"),
+    ];
+    cfgs[4].precision = easi_ica::config::Precision::F32;
+    cfgs[5].precision = easi_ica::config::Precision::F32;
+
+    let on = run_hub(
+        cfgs.clone(),
+        Nonlinearity::Cube,
+        HubOptions { shards: 2, cohort: true, ..Default::default() },
+    )
+    .expect("smbgd cohort hub run");
+    let off = run_hub(
+        cfgs.clone(),
+        Nonlinearity::Cube,
+        HubOptions { shards: 2, cohort: false, ..Default::default() },
+    )
+    .expect("smbgd per-session hub run");
+
+    assert_eq!(on.sessions.len(), cfgs.len());
+    for (i, (a, b)) in on.sessions.iter().zip(&off.sessions).enumerate() {
+        assert_eq!(a.shard, b.shard, "session {i}: cohort must not change placement");
+        assert_summaries_identical(&a.summary, &b.summary, &format!("smbgd {i} on-vs-off"));
+        assert_summaries_identical(
+            &a.summary,
+            &solo_summary(&cfgs[i]),
+            &format!("smbgd {i} vs solo"),
+        );
+    }
+    // The SMBGD pools actually formed: the summary's occupancy metric
+    // sees shared pools, not six solo lanes.
+    assert!(
+        on.pool_occupancy > 0.0,
+        "smbgd fleet formed no shared pools (occupancy {})",
+        on.pool_occupancy
+    );
+}
+
+#[test]
+fn parking_an_smbgd_tenant_out_of_its_cohort_stays_bit_identical() {
+    // The SMBGD variant of the park/reattach drill: four same-shape SMBGD
+    // tenants across two shards, the long-running one parked mid-stream
+    // (mid-mini-batch state and all) and re-attached on the other shard.
+    // Everyone must still match their solo runs bit-for-bit.
+    let mut cfgs = [
+        smbgd_cfg(70, "static"),
+        smbgd_cfg(71, "rotating"),
+        smbgd_cfg(72, "switching"),
+        smbgd_cfg(73, "static"),
+    ];
+    cfgs[2].samples = 30_000; // the migrant: long enough to park mid-stream
+
+    let opts = HubOptions { shards: 2, ..Default::default() };
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).expect("hub starts");
+    let handles: Vec<_> =
+        cfgs.iter().map(|c| hub.attach(c.clone()).expect("attach")).collect();
+
+    let migrant = &handles[2];
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while migrant.checkpoint().samples < 3_000 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let from = migrant.status().shard;
+    hub.detach(migrant.id()).expect("park out of the smbgd cohort");
+    let parked_at = migrant.checkpoint().samples;
+    assert!(parked_at > 0, "parked before any progress");
+    hub.reattach_to(migrant.id(), 1 - from).expect("reattach on the other shard");
+
+    let sum = hub.finish().expect("drain");
+    assert_eq!(sum.sessions.len(), 4);
+    for (i, c) in cfgs.iter().enumerate() {
+        assert_summaries_identical(
+            &sum.sessions[i].summary,
+            &solo_summary(c),
+            &format!("smbgd session {i}"),
+        );
+    }
+}
+
+#[test]
+fn cohort_affinity_placement_is_trajectory_invisible_under_churn() {
+    // Shape-aware placement is a *hint*: under the cohort_affinity
+    // policy, a churny mixed fleet (SGD + SMBGD + a second shape, with a
+    // mid-stream park and auto-placed reattach) must still finish every
+    // tenant bit-identical to its solo run — the policy decides where a
+    // tenant runs, never what it computes.
+    let mut cfgs = vec![
+        cfg(80, "static"),
+        smbgd_cfg(81, "rotating"),
+        cfg(82, "switching"),
+        smbgd_cfg(83, "static"),
+    ];
+    cfgs[2].m = 6;
+    cfgs[2].n = 3;
+    cfgs[3].samples = 30_000; // the migrant
+
+    let opts = HubOptions {
+        shards: 2,
+        placement: PlacementKind::CohortAffinity,
+        ..Default::default()
+    };
+    let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).expect("hub starts");
+    let handles: Vec<_> =
+        cfgs.iter().map(|c| hub.attach(c.clone()).expect("attach")).collect();
+
+    let migrant = &handles[3];
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while migrant.checkpoint().samples < 3_000 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    hub.detach(migrant.id()).expect("park");
+    // Auto-placed reattach: runs the affinity pick against the live fleet.
+    hub.reattach(migrant.id()).expect("affinity reattach");
+
+    let sum = hub.finish().expect("drain");
+    assert_eq!(sum.sessions.len(), 4);
+    for (i, c) in cfgs.iter().enumerate() {
+        assert_summaries_identical(
+            &sum.sessions[i].summary,
+            &solo_summary(c),
+            &format!("affinity-placed session {i}"),
+        );
+    }
+}
+
+#[test]
+fn cohort_affinity_beats_least_loaded_on_pool_occupancy() {
+    // The adversarial attach order A, A, B, B (two pool keys, two
+    // shards): least-loaded spreads each pair across both shards — every
+    // tenant runs in a width-1 pool, occupancy 0 — while cohort_affinity
+    // steers the second member of each pair onto its peer's shard, so
+    // every tenant shares a pool and occupancy is 1.
+    let fleet = || {
+        let mut cfgs = vec![
+            cfg(90, "static"),
+            cfg(91, "rotating"),
+            cfg(92, "static"),
+            cfg(93, "rotating"),
+        ];
+        for c in &mut cfgs[2..] {
+            c.m = 6; // the second pool key: a different shape
+            c.n = 3;
+        }
+        // Long enough that everyone is still live while the rest attach.
+        for c in &mut cfgs {
+            c.samples = 50_000;
+        }
+        cfgs
+    };
+
+    let run = |placement: PlacementKind| {
+        let opts = HubOptions { shards: 2, placement, ..Default::default() };
+        let mut hub = ElasticHub::start(Nonlinearity::Cube, opts).expect("hub starts");
+        for c in fleet() {
+            hub.attach(c).expect("attach");
+        }
+        hub.finish().expect("drain")
+    };
+
+    let affine = run(PlacementKind::CohortAffinity);
+    let spread = run(PlacementKind::LeastLoaded);
+    assert_eq!(
+        affine.pool_occupancy, 1.0,
+        "affinity placement must co-locate both pairs"
+    );
+    assert!(
+        affine.pool_occupancy > spread.pool_occupancy,
+        "affinity occupancy {} must beat least-loaded occupancy {}",
+        affine.pool_occupancy,
+        spread.pool_occupancy
     );
 }
 
